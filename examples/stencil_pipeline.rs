@@ -1,0 +1,58 @@
+//! Stencil pipeline: Hotspot through the design variants, cross-checked
+//! against the Pallas AOT artifact via PJRT — the regular-grid side of the
+//! evaluation, where the feed-forward model costs a little (0.85x) and
+//! M2C2 buys it back (the paper's 7340 -> 13660 MB/s bandwidth claim).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example stencil_pipeline
+//! ```
+
+use pipefwd::report::mbps;
+use pipefwd::runtime::{golden, Runtime};
+use pipefwd::sim::device::DeviceConfig;
+use pipefwd::transform::Variant;
+use pipefwd::workloads::{by_name, run_workload, Scale};
+
+fn main() {
+    let cfg = DeviceConfig::pac_a10();
+
+    // 1. Numerics: IR interpreter vs the Pallas kernel through PJRT.
+    match Runtime::open_default() {
+        Ok(rt) => {
+            let d = golden::check_hotspot(&rt).expect("hotspot golden check");
+            println!("hotspot vs Pallas artifact (PJRT): max |diff| = {d:.2e}  OK");
+        }
+        Err(e) => println!("skipping PJRT golden check: {e:#} (run `make artifacts`)"),
+    }
+
+    // 2. Performance: the three designs on the simulated board.
+    let w = by_name("hotspot").unwrap();
+    let mut rows = vec![];
+    for variant in [
+        Variant::Baseline,
+        Variant::FeedForward { depth: 1 },
+        Variant::MxCx { parts: 2, depth: 1 },
+    ] {
+        let h = run_workload(w.as_ref(), variant, Scale::Small, &cfg).unwrap();
+        let bw = h.bw_by_unit[w.dominant()];
+        println!(
+            "{:<12} time {:>8.3} ms   max BW {:>7} MB/s   logic {:>5.2}%",
+            variant.label(),
+            h.metrics.seconds * 1e3,
+            mbps(bw),
+            h.area.logic_pct()
+        );
+        rows.push((variant.label(), h.metrics.seconds, bw));
+    }
+    let base = rows[0].1;
+    let ff = rows[1].1;
+    let m2 = rows[2].1;
+    println!();
+    println!("FF vs baseline : {:.2}x   (paper: 0.85x — channel overhead)", base / ff);
+    println!("M2C2 vs FF     : {:.2}x   (paper: ~1.9x, 'up to 93%')", ff / m2);
+    println!(
+        "M2C2 bandwidth : {} -> {} MB/s   (paper: 7340 -> 13660)",
+        mbps(rows[1].2),
+        mbps(rows[2].2)
+    );
+}

@@ -1,0 +1,72 @@
+"""AOT lowering: JAX models -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT ``lowered.compile().serialize()`` / serialized HloModuleProto)
+is the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py.
+
+Outputs (under --out-dir, default ../artifacts):
+  <name>.hlo.txt   one per EXPORTS entry
+  manifest.txt     `name;in=f32[64,64],f32[64,64];out=f32[64,64]` lines
+
+Python runs ONCE at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import EXPORTS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_str(s) -> str:
+    return f"{s.dtype}[{','.join(str(d) for d in s.shape)}]"
+
+
+def lower_one(name: str, out_dir: str) -> str:
+    fn, in_specs = EXPORTS[name]
+    lowered = jax.jit(fn).lower(*in_specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    out_spec = jax.eval_shape(fn, *in_specs)
+    ins = ",".join(spec_str(s) for s in in_specs)
+    return f"{name};in={ins};out={spec_str(out_spec)}"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--only", nargs="*", help="subset of export names")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = args.only or list(EXPORTS)
+    manifest_lines = []
+    for name in names:
+        line = lower_one(name, args.out_dir)
+        manifest_lines.append(line)
+        print(f"lowered {line}")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {len(names)} artifacts to {args.out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,26 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+Each kernel realizes the paper's feed-forward (decoupled access/execute)
+structure on TPU-shaped hardware: the BlockSpec index maps express the
+HBM->VMEM streaming schedule (the paper's *memory kernel* / pipes), the
+kernel body touches only VMEM-resident Refs (the paper's *compute kernel*).
+All kernels are lowered with ``interpret=True`` so the AOT artifacts run on
+the CPU PJRT client; see DESIGN.md §Hardware-Adaptation.
+"""
+
+from .hotspot import hotspot_step
+from .fw import fw_step
+from .backprop import matmul_sigmoid, matmul_plain
+from .knn import knn_dists
+from .pagerank import pagerank_step
+from .neighbor_min import neighbor_min
+
+__all__ = [
+    "hotspot_step",
+    "fw_step",
+    "matmul_sigmoid",
+    "matmul_plain",
+    "knn_dists",
+    "pagerank_step",
+    "neighbor_min",
+]

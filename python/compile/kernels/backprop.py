@@ -1,0 +1,56 @@
+"""Rodinia BackProp layer kernels: MXU-shaped blocked matmul (+ sigmoid).
+
+The paper's BackProp single work-item baseline serializes its weight-update
+loop at II=416 because of a false MLCD between the weight loads and the
+weight stores.  The feed-forward model streams the loads at II=1.
+
+On TPU the compute hot-spot is a matmul: we tile it for the 128x128 MXU
+systolic array (block_m x K resident in VMEM, ``jnp.dot`` with
+``preferred_element_type=float32`` so low-precision inputs still accumulate
+in f32).  The BlockSpec row-block pipeline is the memory kernel; the MXU
+dot is the compute kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mm_kernel(x_ref, w_ref, out_ref, *, activation: str):
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    if activation == "sigmoid":
+        acc = 1.0 / (1.0 + jnp.exp(-acc))
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def _blocked_matmul(x: jax.Array, w: jax.Array, *, block_m: int, activation: str) -> jax.Array:
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {k} vs {k2}")
+    if m % block_m != 0:
+        raise ValueError(f"m={m} not divisible by block_m={block_m}")
+    kernel = functools.partial(_mm_kernel, activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def matmul_sigmoid(x: jax.Array, w: jax.Array, *, block_m: int = 8) -> jax.Array:
+    """sigmoid(x @ w), row-block tiled."""
+    return _blocked_matmul(x, w, block_m=block_m, activation="sigmoid")
+
+
+def matmul_plain(x: jax.Array, w: jax.Array, *, block_m: int = 8) -> jax.Array:
+    """x @ w, row-block tiled (used for the delta/update matmuls)."""
+    return _blocked_matmul(x, w, block_m=block_m, activation="none")

@@ -1,0 +1,95 @@
+"""Rodinia Hotspot 5-point stencil as a feed-forward Pallas kernel.
+
+The paper's Hotspot baseline streams a 2D temperature grid and a power grid
+through a single work-item loop nest.  The feed-forward transform decouples
+the global loads (memory kernel) from the arithmetic (compute kernel).  On
+TPU the same decoupling is expressed with BlockSpecs: the grid iterates over
+row blocks, and *three* input views of the (row-padded) temperature grid —
+the block above, the centre block, and the block below — are streamed
+HBM->VMEM by the Pallas pipeline (the "memory kernel"), double-buffered
+ahead of the compute body (the "compute kernel"), which only touches VMEM.
+
+Layout contract (see :func:`hotspot_step`):
+  * ``temp``  — (R, C) temperature grid.
+  * ``power`` — (R, C) dissipated power.
+  * boundary handling is edge replication, as in Rodinia's OpenCL port.
+
+Physics (Rodinia formulation)::
+
+  out = t + sdc * (p + (n + s - 2t) * ry + (e + w - 2t) * rx + (amb - t) * rz)
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rodinia-flavoured constants (the exact values only scale the update; the
+# Rust-side IR benchmark and ref.py use the same ones).
+SDC = 0.1
+RX = 0.5
+RY = 0.4
+RZ = 0.05
+AMB = 80.0
+
+
+def _kernel(top_ref, mid_ref, bot_ref, pow_ref, out_ref, *, block_rows: int):
+    """Compute one output row-block from three padded input row-blocks.
+
+    ``top_ref``/``mid_ref``/``bot_ref`` are consecutive (block_rows, C+2)
+    views of the row/column padded grid; ``mid_ref`` holds the rows this
+    program instance produces.  Only VMEM-resident data is touched here —
+    the feed-forward contract.
+    """
+    mid = mid_ref[...]
+    # North/south neighbours: shift the centre block by one row, importing
+    # the single halo row from the adjacent blocks.
+    north = jnp.concatenate([top_ref[block_rows - 1 :, :], mid[:-1, :]], axis=0)
+    south = jnp.concatenate([mid[1:, :], bot_ref[:1, :]], axis=0)
+    # East/west neighbours come from the column halo inside the block.
+    t = mid[:, 1:-1]
+    w = mid[:, :-2]
+    e = mid[:, 2:]
+    n = north[:, 1:-1]
+    s = south[:, 1:-1]
+    p = pow_ref[...]
+    out_ref[...] = t + SDC * (
+        p + (n + s - 2.0 * t) * RY + (e + w - 2.0 * t) * RX + (AMB - t) * RZ
+    )
+
+
+def hotspot_step(temp: jax.Array, power: jax.Array, *, block_rows: int = 8) -> jax.Array:
+    """One Hotspot time step over an (R, C) grid; returns the (R, C) update.
+
+    R must be divisible by ``block_rows``.
+    """
+    rows, cols = temp.shape
+    if rows % block_rows != 0:
+        raise ValueError(f"rows={rows} not divisible by block_rows={block_rows}")
+    nblocks = rows // block_rows
+    # Pad columns by one (edge replication) and rows by one full block so
+    # that the top neighbour of block 0 / bottom neighbour of the last block
+    # are resident without clamped index maps.
+    padded = jnp.pad(temp, ((block_rows, block_rows), (1, 1)), mode="edge")
+
+    grid = (nblocks,)
+    pcols = cols + 2
+    kernel = functools.partial(_kernel, block_rows=block_rows)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # block above (the memory kernel streams three staggered views)
+            pl.BlockSpec((block_rows, pcols), lambda i: (i, 0)),
+            # centre block
+            pl.BlockSpec((block_rows, pcols), lambda i: (i + 1, 0)),
+            # block below
+            pl.BlockSpec((block_rows, pcols), lambda i: (i + 2, 0)),
+            # power needs no halo
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), temp.dtype),
+        interpret=True,
+    )(padded, padded, padded, power)

@@ -1,0 +1,36 @@
+"""k-Nearest-Neighbours distance kernel (Rodinia `nn`).
+
+The baseline streams a flat array of reference points and computes the
+Euclidean distance of each to one query point — a perfectly sequential,
+regular access pattern, i.e. exactly the kind of load the paper's
+prefetching LSU (and our BlockSpec streaming pipeline) accelerates.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(pts_ref, q_ref, out_ref):
+    diff = pts_ref[...] - q_ref[...]  # (bp, D) - (1, D)
+    out_ref[...] = jnp.sum(diff * diff, axis=1, keepdims=True)
+
+
+def knn_dists(points: jax.Array, query: jax.Array, *, block_points: int = 64) -> jax.Array:
+    """Squared L2 distance of each of (P, D) points to the (1, D) query -> (P, 1)."""
+    p, d = points.shape
+    if query.shape != (1, d):
+        raise ValueError(f"query must be (1, {d}), got {query.shape}")
+    if p % block_points != 0:
+        raise ValueError(f"P={p} not divisible by block_points={block_points}")
+    return pl.pallas_call(
+        _kernel,
+        grid=(p // block_points,),
+        in_specs=[
+            pl.BlockSpec((block_points, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_points, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, 1), jnp.float32),
+        interpret=True,
+    )(points, query)

@@ -1,0 +1,48 @@
+"""Masked neighbour-min kernel — the dense analogue of the paper's Fig. 2.
+
+The paper's worked example (from Pannotia MIS) computes, for every node,
+the minimum ``node_value`` over its *uncolored* neighbours.  The CSR gather
+is irregular; the dense-mask substitution (adjacency as a 0/1 matrix)
+preserves the reduction structure and produces a golden reference the Rust
+interpreter's CSR version is checked against on Tiny graphs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 1.0e30  # the paper's BIGNUM sentinel
+
+
+def _kernel(mask_ref, vals_ref, active_ref, out_ref):
+    mask = mask_ref[...]  # (bn, N) 0/1
+    vals = vals_ref[...]  # (1, N)
+    active = active_ref[...]  # (1, N) 1.0 where the neighbour is still unprocessed
+    eligible = mask * active  # neighbour exists and is active
+    candidates = jnp.where(eligible > 0.5, vals, BIG)
+    out_ref[...] = jnp.min(candidates, axis=1, keepdims=True)
+
+
+def neighbor_min(adj_mask: jax.Array, vals: jax.Array, active: jax.Array, *, block_rows: int = 16) -> jax.Array:
+    """Per-row min of ``vals`` over active neighbours; BIG where none. -> (N, 1)."""
+    n, m = adj_mask.shape
+    if n != m:
+        raise ValueError("adj_mask must be square")
+    if vals.shape != (1, n) or active.shape != (1, n):
+        raise ValueError(f"vals/active must be (1, {n})")
+    if n % block_rows != 0:
+        raise ValueError(f"n={n} not divisible by block_rows={block_rows}")
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=True,
+    )(adj_mask, vals, active)

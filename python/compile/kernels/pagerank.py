@@ -1,0 +1,43 @@
+"""PageRank power-iteration step as a row-blocked Pallas matvec.
+
+Pannotia's PageRank is an irregular gather over CSR; the paper reports it
+gains ~nothing from the feed-forward split (0.96x) because its baseline is
+already memory-bandwidth saturated.  The dense-matvec substitution keeps
+the same roofline position (pure streaming, one MAC per loaded word) while
+being expressible as a regular TPU kernel; the Rust IR version keeps the
+irregular CSR form (see DESIGN.md substitution table).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, pr_ref, out_ref, *, damping: float, n: int):
+    contrib = jnp.dot(a_ref[...], pr_ref[...], preferred_element_type=jnp.float32)
+    out_ref[...] = (1.0 - damping) / float(n) + damping * contrib
+
+
+def pagerank_step(a_norm: jax.Array, pr: jax.Array, *, damping: float = 0.85, block_rows: int = 16) -> jax.Array:
+    """pr' = (1-d)/n + d * A_norm @ pr, with A_norm column-normalized, pr (N, 1)."""
+    n, m = a_norm.shape
+    if n != m:
+        raise ValueError("a_norm must be square")
+    if pr.shape != (n, 1):
+        raise ValueError(f"pr must be ({n}, 1)")
+    if n % block_rows != 0:
+        raise ValueError(f"n={n} not divisible by block_rows={block_rows}")
+    kernel = functools.partial(_kernel, damping=damping, n=n)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=True,
+    )(a_norm, pr)

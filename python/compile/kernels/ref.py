@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel — the build-time correctness
+signal.  Each function mirrors the contract of its kernel exactly; pytest
+(+ hypothesis) sweeps shapes and asserts allclose.
+"""
+
+import jax.numpy as jnp
+
+from .hotspot import AMB, RX, RY, RZ, SDC
+from .neighbor_min import BIG
+
+
+def hotspot_step_ref(temp, power):
+    padded = jnp.pad(temp, 1, mode="edge")
+    t = padded[1:-1, 1:-1]
+    n = padded[:-2, 1:-1]
+    s = padded[2:, 1:-1]
+    w = padded[1:-1, :-2]
+    e = padded[1:-1, 2:]
+    return t + SDC * (
+        power + (n + s - 2.0 * t) * RY + (e + w - 2.0 * t) * RX + (AMB - t) * RZ
+    )
+
+
+def fw_step_ref(dist, colk, rowk):
+    return jnp.minimum(dist, colk + rowk)
+
+
+def fw_full_ref(dist):
+    """Reference full Floyd–Warshall (host loop over pivots)."""
+    n = dist.shape[0]
+    for k in range(n):
+        dist = jnp.minimum(dist, dist[:, k : k + 1] + dist[k : k + 1, :])
+    return dist
+
+
+def matmul_sigmoid_ref(x, w):
+    z = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    return 1.0 / (1.0 + jnp.exp(-z))
+
+
+def matmul_plain_ref(x, w):
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def knn_dists_ref(points, query):
+    diff = points - query
+    return jnp.sum(diff * diff, axis=1, keepdims=True)
+
+
+def pagerank_step_ref(a_norm, pr, damping=0.85):
+    n = a_norm.shape[0]
+    return (1.0 - damping) / float(n) + damping * jnp.dot(a_norm, pr)
+
+
+def neighbor_min_ref(adj_mask, vals, active):
+    eligible = adj_mask * active
+    candidates = jnp.where(eligible > 0.5, vals, BIG)
+    return jnp.min(candidates, axis=1, keepdims=True)

@@ -1,0 +1,121 @@
+"""Layer-2 JAX models (build-time only; never imported at runtime).
+
+Each function here is the numeric core of one of the paper's benchmarks,
+written in JAX and calling the Layer-1 Pallas kernels for its hot loop.
+``aot.py`` lowers each entry of :data:`EXPORTS` once to HLO text; the Rust
+coordinator loads the artifacts through PJRT and uses them as the golden
+numeric reference for the IR interpreter at Tiny scale (and as the compute
+payload of the end-to-end example).
+
+All exports are single-output (the xla 0.1.6 crate unwraps 1-tuples
+cleanly), f32, with fixed Tiny shapes recorded in the manifest.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import (
+    fw_step,
+    hotspot_step,
+    knn_dists,
+    matmul_plain,
+    matmul_sigmoid,
+    neighbor_min,
+    pagerank_step,
+)
+
+LR = 0.3  # Rodinia backprop learning rate
+DAMPING = 0.85
+
+
+# --------------------------------------------------------------------------
+# Benchmark models
+# --------------------------------------------------------------------------
+
+def hotspot(temp, power):
+    """One Hotspot stencil step (the per-launch unit the coordinator drives)."""
+    return hotspot_step(temp, power, block_rows=8)
+
+
+def hotspot_multi(temp, power, steps: int = 8):
+    """``steps`` Hotspot iterations via lax.fori_loop (no Python unrolling)."""
+    def body(_, t):
+        return hotspot_step(t, power, block_rows=8)
+
+    return lax.fori_loop(0, steps, body, temp)
+
+
+def fw(dist):
+    """Full Floyd–Warshall: fori_loop over pivots, Pallas relaxation inside."""
+    n = dist.shape[0]
+
+    def body(k, d):
+        colk = lax.dynamic_slice(d, (0, k), (n, 1))
+        rowk = lax.dynamic_slice(d, (k, 0), (1, n))
+        return fw_step(d, colk, rowk, block_rows=16)
+
+    return lax.fori_loop(0, n, body, dist)
+
+
+def backprop_out(x, w1, w2):
+    """BackProp forward pass: sigmoid MLP, both layers on the MXU kernel."""
+    hidden = matmul_sigmoid(x, w1, block_m=8)
+    return matmul_sigmoid(hidden, w2, block_m=8)
+
+
+def backprop_w1(x, w1, w2, target):
+    """One BackProp training step; returns the updated input->hidden weights.
+
+    Rodinia's explicit-gradient formulation (no autodiff through the Pallas
+    call needed):
+      delta_o = (target - out) * out * (1 - out)
+      delta_h = h * (1 - h) * (delta_o @ w2^T)
+      w1'     = w1 + lr * x^T @ delta_h
+    """
+    hidden = matmul_sigmoid(x, w1, block_m=8)
+    out = matmul_sigmoid(hidden, w2, block_m=8)
+    delta_o = (target - out) * out * (1.0 - out)
+    delta_h = hidden * (1.0 - hidden) * matmul_plain(delta_o, w2.T, block_m=8)
+    return w1 + LR * matmul_plain(x.T, delta_h, block_m=8)
+
+
+def knn(points, query):
+    """Squared distances of all reference points to one query point."""
+    return knn_dists(points, query, block_points=64)
+
+
+def pagerank(a_norm, pr):
+    """One damped power-iteration step."""
+    return pagerank_step(a_norm, pr, damping=DAMPING, block_rows=16)
+
+
+def mis_neighbor_min(adj_mask, vals, active):
+    """The paper's Fig. 2 reduction: per-node min over active neighbours."""
+    return neighbor_min(adj_mask, vals, active, block_rows=16)
+
+
+# --------------------------------------------------------------------------
+# AOT export registry: name -> (fn, [input ShapeDtypeStructs])
+# --------------------------------------------------------------------------
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+EXPORTS = {
+    "hotspot": (hotspot, [_f32(64, 64), _f32(64, 64)]),
+    "hotspot_multi": (hotspot_multi, [_f32(64, 64), _f32(64, 64)]),
+    "fw": (fw, [_f32(64, 64)]),
+    "backprop_out": (backprop_out, [_f32(32, 64), _f32(64, 16), _f32(16, 8)]),
+    "backprop_w1": (
+        backprop_w1,
+        [_f32(32, 64), _f32(64, 16), _f32(16, 8), _f32(32, 8)],
+    ),
+    "knn": (knn, [_f32(1024, 8), _f32(1, 8)]),
+    "pagerank": (pagerank, [_f32(128, 128), _f32(128, 1)]),
+    "mis_neighbor_min": (
+        mis_neighbor_min,
+        [_f32(128, 128), _f32(1, 128), _f32(1, 128)],
+    ),
+}

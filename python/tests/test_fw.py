@@ -1,0 +1,50 @@
+"""Floyd–Warshall Pallas kernel and full-run model vs oracles."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import fw_step
+from compile.kernels.ref import fw_full_ref, fw_step_ref
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([16, 32, 48, 64]),
+    br=st.sampled_from([4, 8, 16]),
+    k=st.integers(0, 15),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_step_matches_ref(n, br, k, seed):
+    rng = np.random.default_rng(seed)
+    d = jnp.asarray(rng.uniform(0.0, 100.0, size=(n, n)).astype(np.float32))
+    colk = d[:, k : k + 1]
+    rowk = d[k : k + 1, :]
+    got = fw_step(d, colk, rowk, block_rows=br)
+    np.testing.assert_allclose(got, fw_step_ref(d, colk, rowk), rtol=1e-6)
+
+
+def test_full_run_matches_numpy_fw(rng):
+    n = 64
+    d = rng.uniform(1.0, 50.0, size=(n, n)).astype(np.float32)
+    np.fill_diagonal(d, 0.0)
+    want = d.copy()
+    for k in range(n):
+        want = np.minimum(want, want[:, k : k + 1] + want[k : k + 1, :])
+    got = np.asarray(model.fw(jnp.asarray(d)))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_full_run_matches_jnp_ref(rng):
+    d = jnp.asarray(rng.uniform(0.0, 10.0, size=(64, 64)).astype(np.float32))
+    np.testing.assert_allclose(model.fw(d), fw_full_ref(d), rtol=1e-5)
+
+
+def test_triangle_inequality_holds_after_fw(rng):
+    d = rng.uniform(1.0, 20.0, size=(32, 32)).astype(np.float32)
+    np.fill_diagonal(d, 0.0)
+    sp = np.asarray(fw_full_ref(jnp.asarray(d)))
+    # Property: no path can be shortened any further.
+    for k in range(32):
+        assert np.all(sp <= sp[:, k : k + 1] + sp[k : k + 1, :] + 1e-3)

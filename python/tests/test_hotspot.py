@@ -1,0 +1,52 @@
+"""Hotspot Pallas kernel vs pure-jnp oracle (hypothesis shape sweep)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hotspot_step
+from compile.kernels.ref import hotspot_step_ref
+
+SHAPES = st.tuples(
+    st.sampled_from([8, 16, 24, 32, 64]),  # rows
+    st.sampled_from([4, 8, 16, 33, 64]),   # cols (non-multiple-of-8 allowed)
+    st.sampled_from([2, 4, 8]),            # block_rows
+).filter(lambda t: t[0] % t[2] == 0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=SHAPES, seed=st.integers(0, 2**31 - 1))
+def test_matches_ref(shape, seed):
+    rows, cols, br = shape
+    rng = np.random.default_rng(seed)
+    temp = jnp.asarray(rng.normal(50.0, 10.0, size=(rows, cols)).astype(np.float32))
+    power = jnp.asarray(rng.uniform(0.0, 1.0, size=(rows, cols)).astype(np.float32))
+    got = hotspot_step(temp, power, block_rows=br)
+    want = hotspot_step_ref(temp, power)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_constant_grid_stays_at_equilibrium():
+    # With temp == AMB everywhere and zero power, the update is a fixed point.
+    from compile.kernels.hotspot import AMB
+
+    temp = jnp.full((16, 16), AMB, jnp.float32)
+    power = jnp.zeros((16, 16), jnp.float32)
+    out = hotspot_step(temp, power, block_rows=4)
+    np.testing.assert_allclose(out, temp, rtol=1e-6)
+
+
+def test_rejects_bad_block_rows():
+    import pytest
+
+    temp = jnp.zeros((10, 8), jnp.float32)
+    with pytest.raises(ValueError):
+        hotspot_step(temp, temp, block_rows=4)
+
+
+def test_block_rows_invariance(rng):
+    temp = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
+    power = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
+    a = hotspot_step(temp, power, block_rows=4)
+    b = hotspot_step(temp, power, block_rows=16)
+    np.testing.assert_allclose(a, b, rtol=1e-6)

@@ -1,0 +1,63 @@
+"""KNN distance and PageRank step kernels vs oracles."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import knn_dists, pagerank_step
+from compile.kernels.ref import knn_dists_ref, pagerank_step_ref
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    p=st.sampled_from([64, 128, 256, 1024]),
+    d=st.sampled_from([2, 4, 8]),
+    bp=st.sampled_from([32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_knn_matches_ref(p, d, bp, seed):
+    rng = np.random.default_rng(seed)
+    pts = jnp.asarray(rng.normal(size=(p, d)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(1, d)).astype(np.float32))
+    got = knn_dists(pts, q, block_points=bp)
+    np.testing.assert_allclose(got, knn_dists_ref(pts, q), rtol=1e-4, atol=1e-4)
+
+
+def test_knn_nearest_is_self(rng):
+    pts = jnp.asarray(rng.normal(size=(128, 8)).astype(np.float32))
+    q = pts[7:8, :]
+    dists = np.asarray(knn_dists(pts, q, block_points=32)).ravel()
+    assert dists.argmin() == 7
+    assert dists[7] <= 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([32, 64, 128]),
+    br=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pagerank_matches_ref(n, br, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(size=(n, n)).astype(np.float32)
+    a = a / a.sum(axis=0, keepdims=True)
+    pr = np.full((n, 1), 1.0 / n, np.float32)
+    got = pagerank_step(jnp.asarray(a), jnp.asarray(pr), block_rows=br)
+    np.testing.assert_allclose(
+        got, pagerank_step_ref(jnp.asarray(a), jnp.asarray(pr)), rtol=1e-5
+    )
+
+
+def test_pagerank_preserves_probability_mass(rng):
+    n = 128
+    a = rng.uniform(size=(n, n)).astype(np.float32)
+    a = a / a.sum(axis=0, keepdims=True)
+    pr = np.full((n, 1), 1.0 / n, np.float32)
+    out = pr
+    for _ in range(20):
+        out = np.asarray(model.pagerank(jnp.asarray(a), jnp.asarray(out)))
+    np.testing.assert_allclose(out.sum(), 1.0, rtol=1e-3)
+    # converged: one more step barely moves it
+    nxt = np.asarray(model.pagerank(jnp.asarray(a), jnp.asarray(out)))
+    assert np.abs(nxt - out).max() < 1e-3

@@ -1,0 +1,30 @@
+//! Bench: regenerate the in-text numbers (E4a/E4b) — per-benchmark II
+//! before/after the split and max global-memory bandwidth, plus the
+//! early-stage compiler reports for FW (the paper's worked example of
+//! II 285 -> 1 with a prefetching LSU).
+
+use pipefwd::coordinator;
+use pipefwd::sim::device::DeviceConfig;
+use pipefwd::transform::Variant;
+use pipefwd::util::bench::{bench_scale, BenchReport};
+use pipefwd::workloads::by_name;
+
+fn main() {
+    let cfg = DeviceConfig::pac_a10();
+    let scale = bench_scale();
+    let mut b = BenchReport::new("intext");
+    let table = b.sample("metrics", || coordinator::intext(scale, &cfg));
+    print!("{}", table.to_markdown());
+    let _ = table.save_csv("intext");
+
+    b.sample("fw_reports", || {
+        let fw = by_name("fw").unwrap();
+        for variant in [Variant::Baseline, Variant::FeedForward { depth: 1 }] {
+            let app = fw.build(variant).unwrap();
+            let rep = pipefwd::analysis::program_report(&app.union_program(), &cfg);
+            println!("--- fw {} ---", variant.label());
+            print!("{}", rep.render());
+        }
+    });
+    b.finish();
+}

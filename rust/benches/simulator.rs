@@ -1,0 +1,94 @@
+//! Bench: the simulator itself — §Perf hot-path measurements (interpreter
+//! throughput, pipe overhead, perf-model cost) and the analytic-vs-DES
+//! ablation. These are the numbers the EXPERIMENTS.md §Perf log tracks.
+
+use pipefwd::ir::build::*;
+use pipefwd::ir::{KernelKind, Program, Ty};
+use pipefwd::sim::device::DeviceConfig;
+use pipefwd::sim::exec::{run_group, ExecOptions};
+use pipefwd::sim::perf::PerfModel;
+use pipefwd::util::bench::BenchReport;
+
+fn stream_kernel() -> pipefwd::ir::Kernel {
+    KernelBuilder::new("s", KernelKind::SingleWorkItem)
+        .buf_ro("a", Ty::F32)
+        .buf_ro("b", Ty::F32)
+        .buf_wo("o", Ty::F32)
+        .scalar("n", Ty::I32)
+        .body(vec![for_(
+            "i",
+            i(0),
+            p("n"),
+            vec![store(
+                "o",
+                v("i"),
+                ld("a", v("i")) * f(0.5) + ld("b", v("i")).max(f(0.0)),
+            )],
+        )])
+        .finish()
+}
+
+fn image(n: usize) -> pipefwd::sim::mem::MemoryImage {
+    let mut m = pipefwd::sim::mem::MemoryImage::new();
+    m.add_f32s("a", &vec![1.0; n]).add_f32s("b", &vec![2.0; n]).add_zeros("o", Ty::F32, n);
+    m.set_i("n", n as i64);
+    m
+}
+
+fn main() {
+    let cfg = DeviceConfig::pac_a10();
+    let n = 2_000_000usize;
+    let mut b = BenchReport::new("simulator");
+
+    // interpreter throughput, single kernel (profiling on/off)
+    for profile in [true, false] {
+        let prog = Program::single(stream_kernel());
+        let img = image(n);
+        let label = if profile { "interp_profiled" } else { "interp_raw" };
+        let t0 = std::time::Instant::now();
+        b.sample(label, || {
+            run_group(&prog, &img, &ExecOptions { profile }).unwrap();
+        });
+        let dt = t0.elapsed().as_secs_f64();
+        println!("{:>40}  {:.1} M iters/s", " ", n as f64 / dt / 1e6);
+    }
+
+    // pipe throughput: feed-forward pair moves 2 tokens per element
+    {
+        let ff = pipefwd::transform::feedforward(&stream_kernel(), 64).unwrap();
+        let img = image(n / 4);
+        let t0 = std::time::Instant::now();
+        b.sample("interp_ff_pipes", || {
+            run_group(&ff, &img, &ExecOptions::default()).unwrap();
+        });
+        let dt = t0.elapsed().as_secs_f64();
+        println!("{:>40}  {:.1} M tokens/s", " ", (n / 4 * 2) as f64 / dt / 1e6);
+    }
+
+    // perf-model estimation cost + analytic vs DES ablation
+    {
+        let prog = Program::single(stream_kernel());
+        let img = image(n);
+        let run = run_group(&prog, &img, &ExecOptions::default()).unwrap();
+        let model = PerfModel::new(&prog, &cfg);
+        let a = b.sample("analytic_model_x1000", || {
+            let mut last = 0.0;
+            for _ in 0..1000 {
+                last = model.estimate(&run.profiles).cycles;
+            }
+            last
+        });
+        let d = b.sample("des_chunk64", || {
+            pipefwd::sim::des::simulate(&prog, &model, &run.profiles, &cfg, 64).cycles
+        });
+        let d1 = b.sample("des_chunk1024", || {
+            pipefwd::sim::des::simulate(&prog, &model, &run.profiles, &cfg, 1024).cycles
+        });
+        println!(
+            "{:>40}  analytic {a:.3e} c, DES64 {d:.3e} c ({:+.1}%), DES1024 {d1:.3e} c",
+            "ablation",
+            (d / a - 1.0) * 100.0
+        );
+    }
+    b.finish();
+}

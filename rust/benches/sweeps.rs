@@ -1,0 +1,25 @@
+//! Bench: the paper's sweeps — channel depth (E4c: no significant
+//! effect), producer/consumer counts (E4d: plateau past 2x2, shared
+//! producer worse) and the vector-type case study (E4e: FW gains ~3x,
+//! MIS degrades; Intel's SDK crashed here, our substrate completes it).
+
+use pipefwd::coordinator;
+use pipefwd::sim::device::DeviceConfig;
+use pipefwd::util::bench::{bench_scale, BenchReport};
+
+fn main() {
+    let cfg = DeviceConfig::pac_a10();
+    let scale = bench_scale();
+    let mut b = BenchReport::new("sweeps");
+    let names = ["fw", "hotspot", "mis"];
+    let t = b.sample("depth_sweep", || coordinator::depth_sweep(&names, scale, &cfg));
+    print!("{}", t.to_markdown());
+    let _ = t.save_csv("depth_sweep");
+    let t = b.sample("pc_sweep", || coordinator::pc_sweep(&names, scale, &cfg));
+    print!("{}", t.to_markdown());
+    let _ = t.save_csv("pc_sweep");
+    let t = b.sample("vector_study", || coordinator::vector_study(scale, &cfg));
+    print!("{}", t.to_markdown());
+    let _ = t.save_csv("vector_study");
+    b.finish();
+}

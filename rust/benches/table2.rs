@@ -1,0 +1,20 @@
+//! Bench: regenerate the paper's Table 2 (feed-forward vs single
+//! work-item baseline across the benchmark suite).
+//!
+//! `PIPEFWD_BENCH_SCALE=tiny|small|paper` selects the dataset scale
+//! (default small — the calibrated configuration reported in
+//! EXPERIMENTS.md).
+
+use pipefwd::coordinator;
+use pipefwd::sim::device::DeviceConfig;
+use pipefwd::util::bench::{bench_scale, BenchReport};
+
+fn main() {
+    let cfg = DeviceConfig::pac_a10();
+    let scale = bench_scale();
+    let mut b = BenchReport::new("table2");
+    let table = b.sample("generate", || coordinator::table2(scale, &cfg));
+    print!("{}", table.to_markdown());
+    let _ = table.save_csv("table2");
+    b.finish();
+}

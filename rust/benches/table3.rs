@@ -1,0 +1,22 @@
+//! Bench: regenerate the paper's Table 3 (microbenchmarks: M2C2 vs
+//! baseline across access pattern and divergence) and the extended
+//! parametrized family (the paper's future-work sweep).
+
+use pipefwd::coordinator;
+use pipefwd::sim::device::DeviceConfig;
+use pipefwd::util::bench::{bench_scale, BenchReport};
+
+fn main() {
+    let cfg = DeviceConfig::pac_a10();
+    let scale = bench_scale();
+    let mut b = BenchReport::new("table3");
+    let table = b.sample("table3", || coordinator::table3(scale, &cfg));
+    print!("{}", table.to_markdown());
+    let _ = table.save_csv("table3");
+    if std::env::var("PIPEFWD_BENCH_FAMILY").is_ok() {
+        let fam = b.sample("family", || coordinator::micro_family(scale, &cfg));
+        print!("{}", fam.to_markdown());
+        let _ = fam.save_csv("micro_family");
+    }
+    b.finish();
+}

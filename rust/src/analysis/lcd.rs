@@ -1,0 +1,453 @@
+//! Loop-carried-dependency analysis (§3 of the paper).
+//!
+//! Two kinds are modelled, matching the paper's taxonomy:
+//!
+//! * **MLCD** (memory LCD): a loop contains a global store and a global
+//!   load of the *same buffer*. Like Intel's offline compiler, the model is
+//!   deliberately conservative: unless the pair is provably same-iteration
+//!   *and* the programmer vouches for independence, the innermost loop
+//!   containing both accesses is serialized. This conservatism is exactly
+//!   the false-MLCD behaviour the feed-forward transformation removes
+//!   (FW II=285, BackProp II=416 in the paper).
+//!
+//! * **DLCD** (data LCD): a scalar recurrence (`acc = f(acc, ...)`) whose
+//!   chain latency lower-bounds the loop II (Fig. 3b). The feed-forward
+//!   split moves the DLCD into the compute kernel so the memory kernel
+//!   still streams at II=1.
+//!
+//! A **provably true** MLCD (affine indices on the same buffer, same
+//! residue, non-zero constant iteration distance — e.g. NW's
+//! `m[idx] = f(m[idx-1])`) makes the feed-forward model *infeasible*
+//! (paper §3 "Limitations"); `transform::feasibility` consumes this.
+
+use super::pattern::affine_wrt;
+use super::{innermost_common_loop, walk_with_loops, LoopCtx};
+use crate::ir::{Expr, Kernel, LoopId, Stmt};
+
+/// A memory loop-carried dependency attached to a loop.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MlcdInfo {
+    pub loop_id: LoopId,
+    pub buf: String,
+    /// Iteration distance if provable (0 = same-iteration).
+    pub distance: Option<i64>,
+    /// Provably a real cross-iteration dependency (distance != 0 proven).
+    pub provably_true: bool,
+}
+
+/// A data (scalar-recurrence) loop-carried dependency.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DlcdInfo {
+    pub loop_id: LoopId,
+    pub var: String,
+    /// Latency of the recurrence chain in cycles (lower bound on II).
+    pub chain_latency: u32,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct LcdAnalysis {
+    pub mlcds: Vec<MlcdInfo>,
+    pub dlcds: Vec<DlcdInfo>,
+}
+
+impl LcdAnalysis {
+    pub fn mlcd_on(&self, l: LoopId) -> Option<&MlcdInfo> {
+        self.mlcds.iter().find(|m| m.loop_id == l)
+    }
+
+    pub fn dlcd_on(&self, l: LoopId) -> Option<&DlcdInfo> {
+        self.dlcds.iter().find(|d| d.loop_id == l)
+    }
+
+    pub fn mlcd_bufs_on(&self, l: LoopId) -> Vec<&str> {
+        let mut v: Vec<&str> = self
+            .mlcds
+            .iter()
+            .filter(|m| m.loop_id == l)
+            .map(|m| m.buf.as_str())
+            .collect();
+        v.dedup();
+        v
+    }
+
+    /// Any provably-true (non-removable) MLCD in the kernel?
+    pub fn has_true_mlcd(&self) -> bool {
+        self.mlcds.iter().any(|m| m.provably_true)
+    }
+}
+
+struct Access {
+    buf: String,
+    idx: Expr,
+    stack: Vec<LoopCtx>,
+}
+
+/// Collect every global load/store with its loop stack.
+fn collect_accesses(kernel: &Kernel) -> (Vec<Access>, Vec<Access>) {
+    let mut loads = vec![];
+    let mut stores = vec![];
+    walk_with_loops(kernel, &mut |s, stack| {
+        // loads: in every expression of this statement (own exprs only —
+        // nested statements are visited separately by the walker)
+        s.visit_own_exprs(&mut |e| {
+            e.visit(&mut |node| {
+                if let Expr::Load { buf, idx } = node {
+                    loads.push(Access { buf: buf.clone(), idx: (**idx).clone(), stack: stack.to_vec() });
+                }
+            });
+        });
+        if let Stmt::Store { buf, idx, .. } = s {
+            stores.push(Access { buf: buf.clone(), idx: idx.clone(), stack: stack.to_vec() });
+        }
+    });
+    (loads, stores)
+}
+
+/// Provable iteration distance between a store and a load of the same
+/// buffer within loop `var`: both indices affine in `var` with equal stride
+/// and identical symbolic residue.
+fn provable_distance(store_idx: &Expr, load_idx: &Expr, var: &str) -> Option<i64> {
+    let (ss, cs, rs) = affine_wrt(store_idx, var)?;
+    let (sl, cl, rl) = affine_wrt(load_idx, var)?;
+    if ss == sl && rs == rl && ss != 0 {
+        // store in iter i hits address of load in iter i + (cs-cl)/stride
+        let diff = cs - cl;
+        if diff % ss == 0 {
+            return Some(diff / ss);
+        }
+    }
+    None
+}
+
+/// Latency table for the recurrence-chain model (cycles at kernel clock).
+/// These are the same constants the II model uses; see `ii.rs`.
+pub fn op_latency(op: &crate::ir::BinOp, float: bool) -> u32 {
+    use crate::ir::BinOp::*;
+    match op {
+        Add | Sub => {
+            if float {
+                8
+            } else {
+                1
+            }
+        }
+        // min/max are a comparator + mux on the fabric — far shorter than
+        // a float adder pipeline.
+        Min | Max => {
+            if float {
+                2
+            } else {
+                1
+            }
+        }
+        Mul => {
+            if float {
+                5
+            } else {
+                3
+            }
+        }
+        Div | Rem => {
+            if float {
+                28
+            } else {
+                12
+            }
+        }
+        _ => 1,
+    }
+}
+
+fn un_latency(op: &crate::ir::UnOp) -> u32 {
+    use crate::ir::UnOp::*;
+    match op {
+        Sqrt => 28,
+        Exp => 60,
+        _ => 1,
+    }
+}
+
+/// Total latency of an expression tree, *excluding* loads (the recurrence
+/// chains the paper's Fig. 3b shows are arithmetic; the load latency is
+/// accounted by the MLCD/II model separately). Float-ness is approximated
+/// per-node from literal/buffer types being unavailable here: callers pass
+/// a `float` hint; reductions in the benchmarks are float.
+pub fn expr_latency(e: &Expr, float_hint: bool) -> u32 {
+    match e {
+        Expr::Bin(op, a, b) => {
+            op_latency(op, float_hint)
+                + expr_latency(a, float_hint).max(expr_latency(b, float_hint))
+        }
+        Expr::Un(op, a) => un_latency(op) + expr_latency(a, float_hint),
+        Expr::Select(c, t, f) => {
+            1 + expr_latency(c, float_hint)
+                .max(expr_latency(t, float_hint))
+                .max(expr_latency(f, float_hint))
+        }
+        Expr::Load { .. } => 0,
+        _ => 0,
+    }
+}
+
+/// Run the conservative LCD analysis over one kernel.
+pub fn analyze_lcd(kernel: &Kernel) -> LcdAnalysis {
+    let (loads, stores) = collect_accesses(kernel);
+    let mut out = LcdAnalysis::default();
+
+    // ---- MLCD: same-buffer store+load pairs --------------------------------
+    for st in &stores {
+        for ld in &loads {
+            if st.buf != ld.buf {
+                continue;
+            }
+            let common = match innermost_common_loop(&st.stack, &ld.stack) {
+                Some(l) => l,
+                None => continue, // not under a common loop: no LCD
+            };
+            // The loop var of the common loop:
+            let var = st
+                .stack
+                .iter()
+                .find(|c| c.id == common)
+                .map(|c| c.var.clone())
+                .unwrap();
+            let distance = provable_distance(&st.idx, &ld.idx, &var);
+            let provably_true = matches!(distance, Some(d) if d != 0);
+            // Conservative: record the MLCD even when distance == 0 is
+            // provable (Intel's compiler serializes these too — the paper's
+            // BackProp case). Deduplicate per (loop, buf).
+            if !out
+                .mlcds
+                .iter()
+                .any(|m| m.loop_id == common && m.buf == st.buf && m.provably_true == provably_true)
+            {
+                out.mlcds.push(MlcdInfo { loop_id: common, buf: st.buf.clone(), distance, provably_true });
+            }
+        }
+    }
+
+    // ---- DLCD: scalar recurrences ------------------------------------------
+    // A self-referencing assignment is only loop-carried if the variable
+    // was *declared outside* the innermost loop — an accumulator re-
+    // initialized each iteration (e.g. KNN's per-point `acc`) is a plain
+    // intra-iteration chain the scheduler pipelines away.
+    fn dlcd_walk(
+        body: &[Stmt],
+        depth: usize,
+        decls: &mut Vec<(String, usize)>,
+        stack: &mut Vec<LoopId>,
+        out: &mut LcdAnalysis,
+    ) {
+        let scope_mark = decls.len();
+        for s in body {
+            match s {
+                Stmt::Let { var, .. } | Stmt::PipeRead { var, .. } => {
+                    decls.push((var.clone(), depth));
+                }
+                Stmt::Assign { var, expr } => {
+                    let mut self_ref = false;
+                    expr.visit(&mut |e| {
+                        if matches!(e, Expr::Var(v) if v == var) {
+                            self_ref = true;
+                        }
+                    });
+                    if self_ref && !stack.is_empty() {
+                        let decl_depth = decls
+                            .iter()
+                            .rev()
+                            .find(|(n, _)| n == var)
+                            .map(|(_, d)| *d)
+                            .unwrap_or(0);
+                        if decl_depth < depth {
+                            let l = *stack.last().unwrap();
+                            // Arria 10 hard-FP DSPs have a single-cycle
+                            // accumulator mode: `acc = acc + <expr>` (the
+                            // expr feeding an FMA chain) recurs at II=1.
+                            // Other recurrences (min/max, multiplies into
+                            // the carried value) pay their chain latency.
+                            let accumulator = matches!(
+                                expr,
+                                Expr::Bin(crate::ir::BinOp::Add, a, b)
+                                    if matches!(&**a, Expr::Var(x) if x == var)
+                                        || matches!(&**b, Expr::Var(x) if x == var)
+                            );
+                            let lat = if accumulator {
+                                1
+                            } else {
+                                expr_latency(expr, true).max(1)
+                            };
+                            if !out.dlcds.iter().any(|d| d.loop_id == l && &d.var == var) {
+                                out.dlcds.push(DlcdInfo {
+                                    loop_id: l,
+                                    var: var.clone(),
+                                    chain_latency: lat,
+                                });
+                            }
+                        }
+                    }
+                }
+                Stmt::If { then_b, else_b, .. } => {
+                    dlcd_walk(then_b, depth, decls, stack, out);
+                    dlcd_walk(else_b, depth, decls, stack, out);
+                }
+                Stmt::For { id, var, body, .. } => {
+                    decls.push((var.clone(), depth + 1));
+                    stack.push(*id);
+                    dlcd_walk(body, depth + 1, decls, stack, out);
+                    stack.pop();
+                }
+                _ => {}
+            }
+        }
+        decls.truncate(scope_mark);
+    }
+    let mut decls = vec![];
+    let mut stack = vec![];
+    dlcd_walk(&kernel.body, 0, &mut decls, &mut stack, &mut out);
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::build::*;
+    use crate::ir::{KernelKind, Ty};
+
+    /// FW-like: same-buffer load+store with unprovable distance.
+    #[test]
+    fn fw_like_conservative_mlcd() {
+        let k = KernelBuilder::new("fw", KernelKind::SingleWorkItem)
+            .buf_rw("dist", Ty::F32)
+            .scalar("n", Ty::I32)
+            .scalar("k", Ty::I32)
+            .body(vec![for_(
+                "i",
+                i(0),
+                p("n"),
+                vec![for_(
+                    "j",
+                    i(0),
+                    p("n"),
+                    vec![store(
+                        "dist",
+                        v("i") * p("n") + v("j"),
+                        ld("dist", v("i") * p("n") + v("j"))
+                            .min(ld("dist", v("i") * p("n") + p("k")) + ld("dist", p("k") * p("n") + v("j"))),
+                    )],
+                )],
+            )])
+            .finish();
+        let lcd = analyze_lcd(&k);
+        assert!(!lcd.mlcds.is_empty());
+        // Attached to the innermost (j) loop, LoopId(1).
+        assert!(lcd.mlcd_on(crate::ir::LoopId(1)).is_some());
+        // store dist[i*n+j] vs load dist[i*n+j]: provable distance 0 (not true);
+        // vs dist[i*n+k]: loop-invariant load -> stride 0 -> unprovable.
+        assert!(!lcd.has_true_mlcd());
+    }
+
+    /// NW-like: provably-true distance-1 dependency.
+    #[test]
+    fn nw_like_true_mlcd() {
+        let k = KernelBuilder::new("nw", KernelKind::SingleWorkItem)
+            .buf_rw("m", Ty::I32)
+            .scalar("n", Ty::I32)
+            .body(vec![for_(
+                "j",
+                i(1),
+                p("n"),
+                vec![store("m", v("j"), ld("m", v("j") - i(1)) + i(1))],
+            )])
+            .finish();
+        let lcd = analyze_lcd(&k);
+        assert!(lcd.has_true_mlcd());
+        let m = lcd.mlcds.iter().find(|m| m.provably_true).unwrap();
+        assert_eq!(m.distance, Some(1));
+    }
+
+    /// Cross-buffer load/store: no MLCD (hotspot-like).
+    #[test]
+    fn cross_buffer_no_mlcd() {
+        let k = KernelBuilder::new("hs", KernelKind::SingleWorkItem)
+            .buf_ro("t", Ty::F32)
+            .buf_wo("o", Ty::F32)
+            .scalar("n", Ty::I32)
+            .body(vec![for_(
+                "i",
+                i(1),
+                p("n"),
+                vec![store("o", v("i"), ld("t", v("i") - i(1)) + ld("t", v("i") + i(1)))],
+            )])
+            .finish();
+        let lcd = analyze_lcd(&k);
+        assert!(lcd.mlcds.is_empty());
+    }
+
+    /// Store in outer loop + load of same buffer in inner loop attaches the
+    /// MLCD to the outer loop (the BFS/MIS shape).
+    #[test]
+    fn mlcd_attaches_to_common_loop() {
+        let k = KernelBuilder::new("mis", KernelKind::SingleWorkItem)
+            .buf_rw("c", Ty::I32)
+            .buf_ro("col", Ty::I32)
+            .scalar("n", Ty::I32)
+            .body(vec![for_(
+                "t",
+                i(0),
+                p("n"),
+                vec![
+                    for_("e", i(0), i(4), vec![let_i("x", ld("c", ld("col", v("e"))))]),
+                    store("c", v("t"), i(1)),
+                ],
+            )])
+            .finish();
+        let lcd = analyze_lcd(&k);
+        assert_eq!(lcd.mlcds.len(), 1);
+        assert_eq!(lcd.mlcds[0].loop_id, crate::ir::LoopId(0)); // outer
+        assert!(!lcd.mlcds[0].provably_true); // irregular load: unprovable
+    }
+
+    /// Reduction detection (Fig. 3b).
+    #[test]
+    fn dlcd_detection() {
+        let k = KernelBuilder::new("red", KernelKind::SingleWorkItem)
+            .buf_ro("a", Ty::F32)
+            .buf_wo("o", Ty::F32)
+            .scalar("n", Ty::I32)
+            .body(vec![for_(
+                "t",
+                i(0),
+                p("n"),
+                vec![
+                    let_f("acc", f(0.0)),
+                    for_("j", i(0), i(5), vec![assign("acc", v("acc") + ld("a", v("t") - v("j")))]),
+                    store("o", v("t"), v("acc")),
+                ],
+            )])
+            .finish();
+        let lcd = analyze_lcd(&k);
+        assert_eq!(lcd.dlcds.len(), 1);
+        let d = &lcd.dlcds[0];
+        assert_eq!(d.var, "acc");
+        assert_eq!(d.loop_id, crate::ir::LoopId(1));
+        assert_eq!(d.chain_latency, 1); // hard-FP accumulator mode
+        assert!(lcd.mlcds.is_empty()); // a vs o: cross-buffer
+    }
+
+    #[test]
+    fn min_reduction_chain_latency() {
+        let k = KernelBuilder::new("m", KernelKind::SingleWorkItem)
+            .buf_ro("a", Ty::F32)
+            .buf_wo("o", Ty::F32)
+            .scalar("n", Ty::I32)
+            .body(vec![
+                let_f("mn", f(1e30)),
+                for_("j", i(0), p("n"), vec![assign("mn", v("mn").min(ld("a", v("j"))))]),
+                store("o", i(0), v("mn")),
+            ])
+            .finish();
+        let lcd = analyze_lcd(&k);
+        assert_eq!(lcd.dlcds[0].chain_latency, 2); // fmin: cmp+mux
+    }
+}

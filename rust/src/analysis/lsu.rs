@@ -1,0 +1,305 @@
+//! LSU (load/store unit) selection, mirroring §2.2 of the paper.
+//!
+//! The offline compiler instantiates one LSU per global-memory site:
+//!
+//! * **Burst-coalesced** — the resource-hungry default; buffers requests
+//!   until the largest possible burst can be issued.
+//! * **Prefetching** — FIFO streaming; chosen for *loads* with a proven
+//!   sequential pattern when nothing else may write the buffer during the
+//!   kernel's execution (this is the LSU the feed-forward memory kernel
+//!   unlocks — the paper's FW gets one on 1 of its 3 loads).
+//! * **Pipelined** — cheap, submits accesses as they come; used for
+//!   loop-invariant scalar-ish accesses.
+//!
+//! Site numbering is pre-order over the kernel body and must match the
+//! interpreter's numbering (`sim::exec` walks the same IR the same way).
+
+use super::pattern::{classify_index, AccessPattern};
+use super::LoopCtx;
+use crate::ir::{Access, Expr, Kernel, LoopId, Stmt};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LsuKind {
+    BurstCoalesced,
+    Prefetching,
+    Pipelined,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemSiteKind {
+    Load,
+    Store,
+}
+
+/// One static global-memory access site.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemSite {
+    /// Pre-order site id (loads and stores share one numbering space).
+    pub site: usize,
+    pub kind: MemSiteKind,
+    pub buf: String,
+    pub pattern: AccessPattern,
+    /// Innermost enclosing loop, if any.
+    pub loop_id: Option<LoopId>,
+    pub lsu: LsuKind,
+}
+
+/// Enumerate all memory sites of a kernel and select LSUs.
+pub fn select_lsus(kernel: &Kernel) -> Vec<MemSite> {
+    // A buffer is "quiescent" for prefetching if this kernel never stores
+    // to it and it is not declared read-write (another concurrent kernel
+    // could be writing a ReadWrite buffer — conservative, like the SDK).
+    let mut stored: Vec<String> = vec![];
+    crate::ir::stmt::visit_body(&kernel.body, &mut |s| {
+        if let Stmt::Store { buf, .. } = s {
+            if !stored.contains(buf) {
+                stored.push(buf.clone());
+            }
+        }
+    });
+
+    // Loop-variance tracking: a variable declared *inside* the innermost
+    // loop body (e.g. `j = col[e]`) varies per iteration even though it is
+    // not the induction variable; an index referencing it must not be
+    // classified LoopInvariant (it is data-dependent, i.e. Irregular
+    // unless it is affine in the induction variable itself).
+    fn classify(
+        idx: &crate::ir::Expr,
+        innermost: Option<&LoopCtx>,
+        variant_vars: &std::collections::HashSet<String>,
+    ) -> AccessPattern {
+        let base = classify_index(idx, innermost.map(|c| c.var.as_str()));
+        if matches!(base, AccessPattern::LoopInvariant) {
+            let mut data_dep = false;
+            idx.visit(&mut |e| {
+                if let Expr::Var(v) = e {
+                    if variant_vars.contains(v) {
+                        data_dep = true;
+                    }
+                }
+            });
+            if data_dep {
+                return AccessPattern::Irregular;
+            }
+        }
+        base
+    }
+
+    struct W<'a> {
+        kernel: &'a crate::ir::Kernel,
+        stored: Vec<String>,
+        sites: Vec<MemSite>,
+        next: usize,
+    }
+
+    impl<'a> W<'a> {
+        fn stmt_sites(
+            &mut self,
+            s: &Stmt,
+            stack: &[LoopCtx],
+            variant: &std::collections::HashSet<String>,
+        ) {
+            let innermost = stack.last();
+            s.visit_own_exprs(&mut |e| {
+                e.visit(&mut |node| {
+                    if let Expr::Load { buf, idx } = node {
+                        let pattern = classify(idx, innermost, variant);
+                        let quiescent = !self.stored.contains(buf)
+                            && self
+                                .kernel
+                                .buf(buf)
+                                .map(|b| b.access == Access::ReadOnly)
+                                .unwrap_or(false);
+                        let lsu = match pattern {
+                            AccessPattern::Sequential if quiescent => LsuKind::Prefetching,
+                            AccessPattern::LoopInvariant => LsuKind::Pipelined,
+                            _ => LsuKind::BurstCoalesced,
+                        };
+                        self.sites.push(MemSite {
+                            site: self.next,
+                            kind: MemSiteKind::Load,
+                            buf: buf.clone(),
+                            pattern,
+                            loop_id: innermost.map(|c| c.id),
+                            lsu,
+                        });
+                        self.next += 1;
+                    }
+                });
+            });
+            if let Stmt::Store { buf, idx, .. } = s {
+                let pattern = classify(idx, innermost, variant);
+                self.sites.push(MemSite {
+                    site: self.next,
+                    kind: MemSiteKind::Store,
+                    buf: buf.clone(),
+                    pattern,
+                    loop_id: innermost.map(|c| c.id),
+                    lsu: LsuKind::BurstCoalesced,
+                });
+                self.next += 1;
+            }
+        }
+
+        fn go(
+            &mut self,
+            body: &[Stmt],
+            stack: &mut Vec<LoopCtx>,
+            variant: &mut std::collections::HashSet<String>,
+        ) {
+            for s in body {
+                self.stmt_sites(s, stack, variant);
+                match s {
+                    Stmt::For { id, var, body, .. } => {
+                        stack.push(LoopCtx { id: *id, var: var.clone() });
+                        // fresh variance scope for the new innermost loop
+                        let mut inner_variant = std::collections::HashSet::new();
+                        self.go(body, stack, &mut inner_variant);
+                        stack.pop();
+                    }
+                    Stmt::If { then_b, else_b, .. } => {
+                        self.go(then_b, stack, variant);
+                        self.go(else_b, stack, variant);
+                    }
+                    Stmt::Let { var, .. } | Stmt::PipeRead { var, .. } => {
+                        variant.insert(var.clone());
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    let mut w = W { kernel, stored, sites: vec![], next: 0 };
+    let mut stack = vec![];
+    let mut variant = std::collections::HashSet::new();
+    let body = kernel.body.clone();
+    w.go(&body, &mut stack, &mut variant);
+    w.sites
+}
+
+/// Count sites by LSU kind (area model input).
+pub fn lsu_counts(sites: &[MemSite]) -> (usize, usize, usize) {
+    let mut bc = 0;
+    let mut pf = 0;
+    let mut pl = 0;
+    for s in sites {
+        match s.lsu {
+            LsuKind::BurstCoalesced => bc += 1,
+            LsuKind::Prefetching => pf += 1,
+            LsuKind::Pipelined => pl += 1,
+        }
+    }
+    (bc, pf, pl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::build::*;
+    use crate::ir::{KernelKind, Ty};
+
+    #[test]
+    fn sequential_readonly_gets_prefetching() {
+        let k = KernelBuilder::new("k", KernelKind::SingleWorkItem)
+            .buf_ro("a", Ty::F32)
+            .buf_wo("o", Ty::F32)
+            .scalar("n", Ty::I32)
+            .body(vec![for_(
+                "i",
+                i(0),
+                p("n"),
+                vec![store("o", v("i"), ld("a", v("i")))],
+            )])
+            .finish();
+        let sites = select_lsus(&k);
+        assert_eq!(sites.len(), 2);
+        assert_eq!(sites[0].kind, MemSiteKind::Load);
+        assert_eq!(sites[0].lsu, LsuKind::Prefetching);
+        assert_eq!(sites[0].pattern, AccessPattern::Sequential);
+        assert_eq!(sites[1].kind, MemSiteKind::Store);
+        assert_eq!(sites[1].lsu, LsuKind::BurstCoalesced);
+    }
+
+    #[test]
+    fn rw_buffer_load_is_burst_coalesced_even_if_sequential() {
+        // Same-buffer store elsewhere in the kernel forbids prefetching.
+        let k = KernelBuilder::new("k", KernelKind::SingleWorkItem)
+            .buf_rw("a", Ty::F32)
+            .scalar("n", Ty::I32)
+            .body(vec![for_(
+                "i",
+                i(0),
+                p("n"),
+                vec![store("a", v("i"), ld("a", v("i")) * f(2.0))],
+            )])
+            .finish();
+        let sites = select_lsus(&k);
+        assert_eq!(sites[0].lsu, LsuKind::BurstCoalesced);
+    }
+
+    #[test]
+    fn indirect_load_is_irregular_burst_coalesced() {
+        let k = KernelBuilder::new("k", KernelKind::SingleWorkItem)
+            .buf_ro("col", Ty::I32)
+            .buf_ro("val", Ty::F32)
+            .buf_wo("o", Ty::F32)
+            .scalar("n", Ty::I32)
+            .body(vec![for_(
+                "i",
+                i(0),
+                p("n"),
+                vec![store("o", v("i"), ld("val", ld("col", v("i"))))],
+            )])
+            .finish();
+        let sites = select_lsus(&k);
+        // pre-order inside the store's value: val[col[i]] visits val first
+        // (outer), then col (inner index).
+        let val_site = sites.iter().find(|s| s.buf == "val").unwrap();
+        assert_eq!(val_site.pattern, AccessPattern::Irregular);
+        assert_eq!(val_site.lsu, LsuKind::BurstCoalesced);
+        let col_site = sites.iter().find(|s| s.buf == "col").unwrap();
+        assert_eq!(col_site.pattern, AccessPattern::Sequential);
+        assert_eq!(col_site.lsu, LsuKind::Prefetching);
+    }
+
+    #[test]
+    fn loop_invariant_gets_pipelined() {
+        let k = KernelBuilder::new("k", KernelKind::SingleWorkItem)
+            .buf_ro("a", Ty::F32)
+            .buf_wo("o", Ty::F32)
+            .scalar("n", Ty::I32)
+            .scalar("base", Ty::I32)
+            .body(vec![for_(
+                "i",
+                i(0),
+                p("n"),
+                vec![store("o", v("i"), ld("a", p("base")))],
+            )])
+            .finish();
+        let sites = select_lsus(&k);
+        assert_eq!(sites[0].lsu, LsuKind::Pipelined);
+        assert_eq!(sites[0].pattern, AccessPattern::LoopInvariant);
+    }
+
+    #[test]
+    fn site_ids_are_dense_preorder() {
+        let k = KernelBuilder::new("k", KernelKind::SingleWorkItem)
+            .buf_ro("a", Ty::F32)
+            .buf_wo("o", Ty::F32)
+            .scalar("n", Ty::I32)
+            .body(vec![for_(
+                "i",
+                i(0),
+                p("n"),
+                vec![
+                    let_f("x", ld("a", v("i"))),
+                    let_f("y", ld("a", v("i") + i(1))),
+                    store("o", v("i"), v("x") + v("y")),
+                ],
+            )])
+            .finish();
+        let sites = select_lsus(&k);
+        assert_eq!(sites.iter().map(|s| s.site).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,105 @@
+//! The offline-compiler model.
+//!
+//! Reproduces the *decision procedure* of Intel's OpenCL-to-FPGA offline
+//! compiler as documented in the Best Practices Guide and as characterized
+//! by the paper (§2.2, §3): loop-carried-dependency analysis (conservative
+//! for global memory), access-pattern classification, LSU selection,
+//! initiation-interval computation, and area estimation. The early-analysis
+//! "report file" the paper tells programmers to consult is
+//! [`report::CompilerReport`].
+
+pub mod area;
+pub mod ii;
+pub mod lcd;
+pub mod lsu;
+pub mod pattern;
+pub mod report;
+
+pub use area::{estimate_program_area, AreaEstimate};
+pub use ii::{loop_iis, LoopII};
+pub use lcd::{analyze_lcd, DlcdInfo, LcdAnalysis, MlcdInfo};
+pub use lsu::{select_lsus, LsuKind, MemSite, MemSiteKind};
+pub use pattern::{classify_index, AccessPattern};
+pub use report::{program_report, CompilerReport, KernelReport};
+
+use crate::ir::{Kernel, LoopId, Stmt};
+
+/// One entry of the enclosing-loop stack during a walk.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoopCtx {
+    pub id: LoopId,
+    pub var: String,
+}
+
+/// Walk every statement of a kernel with its enclosing-loop stack.
+pub fn walk_with_loops(kernel: &Kernel, f: &mut impl FnMut(&Stmt, &[LoopCtx])) {
+    fn go(body: &[Stmt], stack: &mut Vec<LoopCtx>, f: &mut impl FnMut(&Stmt, &[LoopCtx])) {
+        for s in body {
+            f(s, stack);
+            match s {
+                Stmt::For { id, var, body, .. } => {
+                    stack.push(LoopCtx { id: *id, var: var.clone() });
+                    go(body, stack, f);
+                    stack.pop();
+                }
+                Stmt::If { then_b, else_b, .. } => {
+                    go(then_b, stack, f);
+                    go(else_b, stack, f);
+                }
+                _ => {}
+            }
+        }
+    }
+    let mut stack = vec![];
+    go(&kernel.body, &mut stack, f);
+}
+
+/// The innermost loop common to two loop stacks (used to attach an MLCD to
+/// the loop the offline compiler would serialize).
+pub fn innermost_common_loop(a: &[LoopCtx], b: &[LoopCtx]) -> Option<LoopId> {
+    let mut common = None;
+    for (x, y) in a.iter().zip(b.iter()) {
+        if x.id == y.id {
+            common = Some(x.id);
+        } else {
+            break;
+        }
+    }
+    common
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::build::*;
+    use crate::ir::KernelKind;
+
+    #[test]
+    fn loop_stack_tracks_nesting() {
+        let k = KernelBuilder::new("k", KernelKind::SingleWorkItem)
+            .buf_rw("a", crate::ir::Ty::I32)
+            .scalar("n", crate::ir::Ty::I32)
+            .body(vec![for_(
+                "i",
+                i(0),
+                p("n"),
+                vec![for_("j", i(0), p("n"), vec![store("a", v("j"), v("i"))])],
+            )])
+            .finish();
+        let mut depth_of_store = None;
+        walk_with_loops(&k, &mut |s, stack| {
+            if matches!(s, crate::ir::Stmt::Store { .. }) {
+                depth_of_store = Some(stack.len());
+            }
+        });
+        assert_eq!(depth_of_store, Some(2));
+    }
+
+    #[test]
+    fn common_loop() {
+        let l = |n| LoopCtx { id: crate::ir::LoopId(n), var: format!("v{n}") };
+        assert_eq!(innermost_common_loop(&[l(0), l(1)], &[l(0), l(2)]), Some(crate::ir::LoopId(0)));
+        assert_eq!(innermost_common_loop(&[l(0)], &[l(0)]), Some(crate::ir::LoopId(0)));
+        assert_eq!(innermost_common_loop(&[], &[l(0)]), None);
+    }
+}

@@ -1,0 +1,187 @@
+//! Static memory-access-pattern classification.
+//!
+//! The offline compiler infers, per load/store site, how its address moves
+//! as the *innermost enclosing loop* advances (§2.2: this drives LSU
+//! selection). We classify the index expression symbolically:
+//!
+//! * `Sequential`   — affine with stride ±1 in the loop var (prefetchable)
+//! * `Strided(c)`   — affine with literal stride |c| > 1
+//! * `LoopInvariant`— does not move with the loop (scalar-cacheable)
+//! * `Irregular`    — anything else, in particular indirect (`a[b[i]]`)
+
+use crate::ir::{BinOp, Expr, UnOp};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessPattern {
+    Sequential,
+    Strided(i64),
+    LoopInvariant,
+    Irregular,
+}
+
+impl AccessPattern {
+    pub fn is_regular(self) -> bool {
+        !matches!(self, AccessPattern::Irregular)
+    }
+}
+
+/// Symbolic affine decomposition of `e` with respect to `var`:
+/// `e = stride * var + offset + residue`, where `residue` must not contain
+/// `var`. Returns `(stride, const_offset, residue_fingerprint)`.
+/// `None` means not affine in `var` (e.g. contains a load, `var*var`, ...).
+pub fn affine_wrt(e: &Expr, var: &str) -> Option<(i64, i64, String)> {
+    match e {
+        Expr::I(c) => Some((0, *c, String::new())),
+        Expr::F(_) => None,
+        Expr::Var(v) => {
+            if v == var {
+                Some((1, 0, String::new()))
+            } else {
+                Some((0, 0, format!("v:{v}")))
+            }
+        }
+        Expr::Param(p) => Some((0, 0, format!("p:{p}"))),
+        Expr::GlobalId(d) => Some((0, 0, format!("g:{d}"))),
+        Expr::Load { .. } => None,
+        Expr::Un(UnOp::Neg, a) => {
+            let (s, c, r) = affine_wrt(a, var)?;
+            let rr = if r.is_empty() { r } else { format!("neg({r})") };
+            Some((-s, -c, rr))
+        }
+        Expr::Un(_, _) => None,
+        Expr::Select(..) => None,
+        Expr::Bin(op, a, b) => {
+            let (sa, ca, ra) = affine_wrt(a, var)?;
+            let (sb, cb, rb) = affine_wrt(b, var)?;
+            match op {
+                BinOp::Add => Some((sa + sb, ca + cb, join(&ra, "+", &rb))),
+                BinOp::Sub => Some((sa - sb, ca - cb, join(&ra, "-", &rb))),
+                BinOp::Mul => {
+                    // Only (affine * literal-const) stays affine.
+                    if sb == 0 && rb.is_empty() {
+                        Some((sa * cb, ca * cb, scale(&ra, cb)))
+                    } else if sa == 0 && ra.is_empty() {
+                        Some((sb * ca, cb * ca, scale(&rb, ca)))
+                    } else if sa == 0 && sb == 0 {
+                        // var-free product: residue only
+                        Some((0, 0, format!("({ra}#{ca})*({rb}#{cb})")))
+                    } else {
+                        None
+                    }
+                }
+                _ => {
+                    // Division/remainder/comparisons: treat as var-free
+                    // residue when neither side moves with the loop.
+                    if sa == 0 && sb == 0 {
+                        Some((0, 0, format!("({ra}#{ca}){}({rb}#{cb})", op.c_symbol())))
+                    } else {
+                        None
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn join(a: &str, op: &str, b: &str) -> String {
+    match (a.is_empty(), b.is_empty()) {
+        (true, true) => String::new(),
+        (false, true) => a.to_string(),
+        (true, false) => {
+            if op == "-" {
+                format!("-({b})")
+            } else {
+                b.to_string()
+            }
+        }
+        (false, false) => format!("({a}){op}({b})"),
+    }
+}
+
+fn scale(r: &str, c: i64) -> String {
+    if r.is_empty() {
+        String::new()
+    } else {
+        format!("{c}*({r})")
+    }
+}
+
+/// Classify an index expression with respect to the innermost loop variable
+/// (`None` = the access is not inside any loop).
+pub fn classify_index(idx: &Expr, innermost_var: Option<&str>) -> AccessPattern {
+    let var = match innermost_var {
+        Some(v) => v,
+        None => return AccessPattern::LoopInvariant,
+    };
+    match affine_wrt(idx, var) {
+        None => AccessPattern::Irregular,
+        Some((0, _, _)) => AccessPattern::LoopInvariant,
+        Some((1, _, _)) | Some((-1, _, _)) => AccessPattern::Sequential,
+        Some((s, _, _)) => AccessPattern::Strided(s),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::build::*;
+
+    #[test]
+    fn sequential() {
+        assert_eq!(classify_index(&v("i"), Some("i")), AccessPattern::Sequential);
+        assert_eq!(classify_index(&(v("i") + i(5)), Some("i")), AccessPattern::Sequential);
+        assert_eq!(
+            classify_index(&(v("base") + v("i")), Some("i")),
+            AccessPattern::Sequential
+        );
+    }
+
+    #[test]
+    fn strided() {
+        assert_eq!(classify_index(&(v("i") * i(4)), Some("i")), AccessPattern::Strided(4));
+        assert_eq!(
+            classify_index(&(v("i") * i(4) + v("j")), Some("i")),
+            AccessPattern::Strided(4)
+        );
+    }
+
+    #[test]
+    fn invariant() {
+        assert_eq!(classify_index(&v("j"), Some("i")), AccessPattern::LoopInvariant);
+        assert_eq!(
+            classify_index(&(p("n") * v("j") + i(3)), Some("i")),
+            AccessPattern::LoopInvariant
+        );
+        assert_eq!(classify_index(&v("i"), None), AccessPattern::LoopInvariant);
+    }
+
+    #[test]
+    fn irregular_indirect() {
+        let e = ld("col", v("i"));
+        assert_eq!(classify_index(&e, Some("i")), AccessPattern::Irregular);
+        // a[col[i]] style
+        assert_eq!(
+            classify_index(&(ld("col", v("i")) + i(1)), Some("i")),
+            AccessPattern::Irregular
+        );
+    }
+
+    #[test]
+    fn irregular_nonaffine() {
+        assert_eq!(classify_index(&(v("i") * v("i")), Some("i")), AccessPattern::Irregular);
+        // symbolic (parameter) stride is not provably regular
+        assert_eq!(classify_index(&(v("i") * p("n")), Some("i")), AccessPattern::Irregular);
+    }
+
+    #[test]
+    fn affine_distance_fingerprints() {
+        // m[i*w + j] vs m[i*w + j - 1]: same residue, offsets differ by 1.
+        let a = v("i") * i(64) + v("j");
+        let b = v("i") * i(64) + v("j") - i(1);
+        let (sa, ca, ra) = affine_wrt(&a, "j").unwrap();
+        let (sb, cb, rb) = affine_wrt(&b, "j").unwrap();
+        assert_eq!((sa, sb), (1, 1));
+        assert_eq!(ra, rb);
+        assert_eq!(ca - cb, 1);
+    }
+}

@@ -1,0 +1,159 @@
+//! The "early stage analysis report" (§3) — our stand-in for the report
+//! file Intel's offline compiler generates, which the paper repeatedly
+//! tells programmers to consult. Experiments E4a/E4b print these before
+//! and after the feed-forward transformation (FW: II 285 -> 1, etc.).
+
+use super::area::{estimate_program_area, AreaEstimate};
+use super::ii::{loop_iis, LoopII};
+use super::lcd::{analyze_lcd, LcdAnalysis};
+use super::lsu::{select_lsus, LsuKind, MemSite, MemSiteKind};
+use crate::ir::{Kernel, Program};
+use crate::sim::device::DeviceConfig;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone)]
+pub struct KernelReport {
+    pub name: String,
+    pub lcd: LcdAnalysis,
+    pub loops: Vec<LoopII>,
+    pub sites: Vec<MemSite>,
+}
+
+impl KernelReport {
+    pub fn for_kernel(kernel: &Kernel) -> KernelReport {
+        let lcd = analyze_lcd(kernel);
+        let loops = loop_iis(kernel, &lcd);
+        let sites = select_lsus(kernel);
+        KernelReport { name: kernel.name.clone(), lcd, loops, sites }
+    }
+
+    /// Maximum II over all loops (the headline number the paper quotes).
+    pub fn max_ii(&self) -> u32 {
+        self.loops.iter().map(|l| l.ii).max().unwrap_or(1)
+    }
+
+    pub fn serialized_loops(&self) -> usize {
+        self.loops.iter().filter(|l| l.serialized_by.is_some()).count()
+    }
+
+    pub fn prefetching_loads(&self) -> usize {
+        self.sites
+            .iter()
+            .filter(|s| s.kind == MemSiteKind::Load && s.lsu == LsuKind::Prefetching)
+            .count()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct CompilerReport {
+    pub program: String,
+    pub kernels: Vec<KernelReport>,
+    pub area: AreaEstimate,
+    pub fmax_hz: f64,
+}
+
+/// Analyze a whole program.
+pub fn program_report(prog: &Program, cfg: &DeviceConfig) -> CompilerReport {
+    let area = estimate_program_area(prog, cfg);
+    let fmax_hz = cfg.fmax_for_area(area.logic_frac);
+    CompilerReport {
+        program: prog.name.clone(),
+        kernels: prog.kernels.iter().map(KernelReport::for_kernel).collect(),
+        area,
+        fmax_hz,
+    }
+}
+
+impl CompilerReport {
+    /// Render in the spirit of Intel's `report.html` loop-analysis pane.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "=== Early-stage analysis report: {} ===", self.program);
+        let _ = writeln!(
+            out,
+            "estimated area: logic {:.2}%  BRAM {}  DSP {}   fmax {:.0} MHz",
+            self.area.logic_pct(),
+            self.area.brams,
+            self.area.dsps,
+            self.fmax_hz / 1e6
+        );
+        for k in &self.kernels {
+            let _ = writeln!(out, "kernel {}:", k.name);
+            if k.loops.is_empty() {
+                let _ = writeln!(out, "  (no loops)");
+            }
+            for l in &k.loops {
+                let mut notes = vec![];
+                if let Some(b) = &l.serialized_by {
+                    notes.push(format!(
+                        "serialized: memory loop-carried dependency on global pointer `{b}`"
+                    ));
+                }
+                if let Some(v) = &l.dlcd_var {
+                    notes.push(format!("data loop-carried dependency on `{v}`"));
+                }
+                let note = if notes.is_empty() { "pipelined".to_string() } else { notes.join("; ") };
+                let _ = writeln!(
+                    out,
+                    "  loop L{} (depth {}): II = {:<4} {}",
+                    l.loop_id.0, l.depth, l.ii, note
+                );
+            }
+            for s in &k.sites {
+                let kind = match s.kind {
+                    MemSiteKind::Load => "LD",
+                    MemSiteKind::Store => "ST",
+                };
+                let _ = writeln!(
+                    out,
+                    "  {kind} site {:<3} buf `{}` pattern {:?} -> {:?} LSU",
+                    s.site, s.buf, s.pattern, s.lsu
+                );
+            }
+        }
+        out
+    }
+
+    pub fn kernel(&self, name: &str) -> Option<&KernelReport> {
+        self.kernels.iter().find(|k| k.name == name)
+    }
+
+    /// Max II across all kernels (program headline).
+    pub fn max_ii(&self) -> u32 {
+        self.kernels.iter().map(|k| k.max_ii()).max().unwrap_or(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::build::*;
+    use crate::ir::{KernelKind, Program, Ty};
+
+    #[test]
+    fn report_shows_serialization_and_lsus() {
+        let k = KernelBuilder::new("fw", KernelKind::SingleWorkItem)
+            .buf_rw("dist", Ty::F32)
+            .scalar("n", Ty::I32)
+            .scalar("piv", Ty::I32)
+            .body(vec![for_(
+                "j",
+                i(0),
+                p("n"),
+                vec![store(
+                    "dist",
+                    v("j"),
+                    ld("dist", v("j")).min(ld("dist", p("piv")) + ld("dist", p("piv") * p("n") + v("j"))),
+                )],
+            )])
+            .finish();
+        let prog = Program::single(k);
+        let cfg = DeviceConfig::pac_a10();
+        let rep = program_report(&prog, &cfg);
+        assert_eq!(rep.kernels.len(), 1);
+        assert!(rep.max_ii() > 100);
+        let text = rep.render();
+        assert!(text.contains("serialized: memory loop-carried dependency"));
+        assert!(text.contains("BurstCoalesced"));
+    }
+}

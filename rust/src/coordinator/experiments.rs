@@ -1,0 +1,375 @@
+//! Experiment definitions E1-E7 (see DESIGN.md experiment index): each
+//! regenerates one table/figure of the paper from the live system.
+
+use crate::report::{fx, mbps, ms, Table};
+use crate::sim::device::DeviceConfig;
+use crate::transform::Variant;
+use crate::workloads::{by_name, run_workload, suite, Harness, Scale, Workload};
+
+/// The paper's channel-depth candidates (§4.2: best of 1/100/1000).
+pub const DEPTHS: [usize; 3] = [1, 100, 1000];
+
+/// Result of one (workload, variant) measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub workload: String,
+    pub variant: String,
+    pub seconds: f64,
+    pub cycles: f64,
+    pub logic_pct: f64,
+    pub brams: u32,
+    pub max_ii: u32,
+    pub max_bw: f64,
+    pub launches: u64,
+}
+
+impl Measurement {
+    fn from_harness(w: &dyn Workload, variant: Variant, h: &Harness) -> Measurement {
+        // max BW of the *dominant* kernel's launch unit (what the paper's
+        // profiler screenshots show), not the app-wide max
+        let max_bw = h
+            .bw_by_unit
+            .get(w.dominant())
+            .copied()
+            .unwrap_or(h.metrics.bw_bytes_per_s);
+        Measurement {
+            workload: w.name().to_string(),
+            variant: variant.label(),
+            seconds: h.metrics.seconds,
+            cycles: h.metrics.cycles,
+            logic_pct: h.area.logic_pct(),
+            brams: h.area.brams,
+            max_ii: h.max_ii,
+            max_bw,
+            launches: h.launches,
+        }
+    }
+}
+
+/// Run one (workload, variant, scale) and collect the measurement.
+pub fn measure(
+    w: &dyn Workload,
+    variant: Variant,
+    scale: Scale,
+    cfg: &DeviceConfig,
+) -> Result<Measurement, String> {
+    let h = run_workload(w, variant, scale, cfg)?;
+    Ok(Measurement::from_harness(w, variant, &h))
+}
+
+/// Best feed-forward measurement across the paper's depth sweep.
+pub fn best_ff(w: &dyn Workload, scale: Scale, cfg: &DeviceConfig) -> Result<Measurement, String> {
+    let mut best: Option<Measurement> = None;
+    for d in DEPTHS {
+        // NW is only safe below the row width (see workloads::nw docs);
+        // the harness surfaces that as a validation error which we skip,
+        // exactly as a paper author would drop an invalid configuration.
+        match measure(w, Variant::FeedForward { depth: d }, scale, cfg) {
+            Ok(m) => {
+                if best.as_ref().map(|b| m.seconds < b.seconds).unwrap_or(true) {
+                    best = Some(m);
+                }
+            }
+            Err(e) => {
+                if d == 1 {
+                    return Err(e); // depth-1 must always work
+                }
+            }
+        }
+    }
+    Ok(best.unwrap())
+}
+
+// ---------------------------------------------------------------------------
+// E6 / Table 1 — benchmark characterisation
+// ---------------------------------------------------------------------------
+
+pub fn table1(scale: Scale) -> Table {
+    let mut t = Table::new(
+        "Table 1: benchmark characteristics",
+        &["Suite", "Benchmark", "Dwarf", "Access Pattern", "Dataset"],
+    );
+    for w in suite() {
+        t.row(vec![
+            w.suite().into(),
+            w.name().into(),
+            w.dwarf().into(),
+            w.pattern().into(),
+            w.dataset_desc(scale),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// E1 / Table 2 — feed-forward vs single work-item baseline
+// ---------------------------------------------------------------------------
+
+pub struct Table2Row {
+    pub base: Measurement,
+    pub ff: Measurement,
+}
+
+pub fn table2_rows(scale: Scale, cfg: &DeviceConfig) -> Vec<Table2Row> {
+    let mut rows = vec![];
+    for w in suite() {
+        let base = measure(w.as_ref(), Variant::Baseline, scale, cfg).expect("baseline runs");
+        let ff = best_ff(w.as_ref(), scale, cfg).expect("feed-forward runs");
+        rows.push(Table2Row { base, ff });
+    }
+    rows
+}
+
+pub fn table2(scale: Scale, cfg: &DeviceConfig) -> Table {
+    let mut t = Table::new(
+        "Table 2: feed-forward design vs single work-item baseline",
+        &[
+            "Benchmark",
+            "Baseline time (ms)",
+            "FF speedup",
+            "Baseline logic (%)",
+            "FF logic (%)",
+            "Baseline BRAM",
+            "FF BRAM",
+        ],
+    );
+    for r in table2_rows(scale, cfg) {
+        t.row(vec![
+            r.base.workload.clone(),
+            ms(r.base.seconds),
+            fx(r.base.seconds / r.ff.seconds),
+            format!("{:.2}", r.base.logic_pct),
+            format!("{:.2}", r.ff.logic_pct),
+            r.base.brams.to_string(),
+            r.ff.brams.to_string(),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// E2 / Figure 4 — M2C2 vs the feed-forward baseline
+// ---------------------------------------------------------------------------
+
+pub fn figure4(scale: Scale, cfg: &DeviceConfig) -> Table {
+    let mut t = Table::new(
+        "Figure 4: M2C2 speedup and resource overhead vs feed-forward baseline",
+        &["Benchmark", "M2C2 speedup", "Logic overhead (%)", "BRAM overhead (%)"],
+    );
+    let mut speedups = vec![];
+    for w in suite() {
+        let ff = match measure(w.as_ref(), Variant::FeedForward { depth: 1 }, scale, cfg) {
+            Ok(m) => m,
+            Err(_) => continue,
+        };
+        let m2 = match measure(w.as_ref(), Variant::MxCx { parts: 2, depth: 1 }, scale, cfg) {
+            Ok(m) => m,
+            Err(e) => {
+                t.row(vec![w.name().into(), format!("n/a ({e})"), "-".into(), "-".into()]);
+                continue;
+            }
+        };
+        let s = ff.seconds / m2.seconds;
+        speedups.push(s);
+        t.row(vec![
+            w.name().into(),
+            fx(s),
+            format!("{:+.1}", (m2.logic_pct / ff.logic_pct - 1.0) * 100.0),
+            format!("{:+.1}", (m2.brams as f64 / ff.brams as f64 - 1.0) * 100.0),
+        ]);
+    }
+    let avg = speedups.iter().sum::<f64>() / speedups.len().max(1) as f64;
+    t.row(vec!["(average)".into(), fx(avg), "-".into(), "-".into()]);
+    t
+}
+
+// ---------------------------------------------------------------------------
+// E3 / Table 3 — microbenchmarks, M2C2 vs baseline
+// ---------------------------------------------------------------------------
+
+pub fn table3(scale: Scale, cfg: &DeviceConfig) -> Table {
+    use crate::workloads::micro::{Micro, MicroSpec};
+    let mut t = Table::new(
+        "Table 3: microbenchmark speedup (M2C2 over baseline) and area",
+        &[
+            "Benchmark",
+            "Baseline time (ms)",
+            "Speedup",
+            "Logic base (%)",
+            "Logic M2C2 (%)",
+            "BRAM base",
+            "BRAM M2C2",
+        ],
+    );
+    for spec in MicroSpec::table3() {
+        let w = Micro::new(spec);
+        let base = measure(&w, Variant::Baseline, scale, cfg).expect("micro baseline");
+        let m2 = measure(&w, Variant::MxCx { parts: 2, depth: 1 }, scale, cfg).expect("micro m2c2");
+        t.row(vec![
+            spec.label(),
+            ms(base.seconds),
+            format!("{}x", fx(base.seconds / m2.seconds)),
+            format!("{:.2}", base.logic_pct),
+            format!("{:.2}", m2.logic_pct),
+            base.brams.to_string(),
+            m2.brams.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Extended microbenchmark family (the paper's future-work sweep).
+pub fn micro_family(scale: Scale, cfg: &DeviceConfig) -> Table {
+    use crate::workloads::micro::{Micro, MicroSpec};
+    let mut t = Table::new(
+        "Microbenchmark family: AI x pattern x divergence",
+        &["Benchmark", "FF speedup", "M2C2 speedup (over FF)"],
+    );
+    for spec in MicroSpec::family() {
+        let w = Micro::new(spec);
+        let base = measure(&w, Variant::Baseline, scale, cfg).expect("family baseline");
+        let ff = measure(&w, Variant::FeedForward { depth: 1 }, scale, cfg).expect("family ff");
+        let m2 = measure(&w, Variant::MxCx { parts: 2, depth: 1 }, scale, cfg).expect("family m2c2");
+        t.row(vec![
+            spec.label(),
+            fx(base.seconds / ff.seconds),
+            fx(ff.seconds / m2.seconds),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// E4a/E4b — in-text compiler-report numbers (II, bandwidth)
+// ---------------------------------------------------------------------------
+
+pub fn intext(scale: Scale, cfg: &DeviceConfig) -> Table {
+    let mut t = Table::new(
+        "In-text metrics: II and max bandwidth, baseline vs feed-forward",
+        &["Benchmark", "Baseline II", "FF II", "Baseline max BW (MB/s)", "FF max BW (MB/s)"],
+    );
+    for name in ["fw", "backprop", "mis", "bfs", "nw", "hotspot"] {
+        let w = by_name(name).unwrap();
+        let base = measure(w.as_ref(), Variant::Baseline, scale, cfg).expect("baseline");
+        let ff = measure(w.as_ref(), Variant::FeedForward { depth: 1 }, scale, cfg).expect("ff");
+        t.row(vec![
+            name.into(),
+            base.max_ii.to_string(),
+            ff.max_ii.to_string(),
+            mbps(base.max_bw),
+            mbps(ff.max_bw),
+        ]);
+    }
+    t
+}
+
+/// Hotspot M2C2 bandwidth claim (§3: 7340 -> 13660 MB/s).
+pub fn hotspot_m2c2_bw(scale: Scale, cfg: &DeviceConfig) -> (f64, f64) {
+    let w = by_name("hotspot").unwrap();
+    let ff = measure(w.as_ref(), Variant::FeedForward { depth: 1 }, scale, cfg).unwrap();
+    let m2 = measure(w.as_ref(), Variant::MxCx { parts: 2, depth: 1 }, scale, cfg).unwrap();
+    (ff.max_bw, m2.max_bw)
+}
+
+// ---------------------------------------------------------------------------
+// E4c/E4d/E4e — sweeps
+// ---------------------------------------------------------------------------
+
+/// Channel-depth sweep (paper: no significant effect).
+pub fn depth_sweep(names: &[&str], scale: Scale, cfg: &DeviceConfig) -> Table {
+    let mut t = Table::new(
+        "Channel-depth sweep (feed-forward, seconds)",
+        &["Benchmark", "depth 1", "depth 100", "depth 1000"],
+    );
+    for name in names {
+        let w = by_name(name).unwrap();
+        let mut cells = vec![name.to_string()];
+        for d in DEPTHS {
+            match measure(w.as_ref(), Variant::FeedForward { depth: d }, scale, cfg) {
+                Ok(m) => cells.push(format!("{:.4}", m.seconds)),
+                Err(_) => cells.push("invalid".into()),
+            }
+        }
+        t.row(cells);
+    }
+    t
+}
+
+/// Producer/consumer count sweep incl. the 1-producer shape (paper: plateau
+/// at 2x2; M1CN worse than MNCN).
+pub fn pc_sweep(names: &[&str], scale: Scale, cfg: &DeviceConfig) -> Table {
+    let mut t = Table::new(
+        "Producer/consumer sweep (speedup over feed-forward baseline)",
+        &["Benchmark", "m1c1", "m2c2", "m3c3", "m4c4", "m1c2"],
+    );
+    for name in names {
+        let w = by_name(name).unwrap();
+        let ff = measure(w.as_ref(), Variant::FeedForward { depth: 1 }, scale, cfg).unwrap();
+        let mut cells = vec![name.to_string(), "1.00".into()];
+        for parts in [2usize, 3, 4] {
+            match measure(w.as_ref(), Variant::MxCx { parts, depth: 1 }, scale, cfg) {
+                Ok(m) => cells.push(fx(ff.seconds / m.seconds)),
+                Err(_) => cells.push("n/a".into()),
+            }
+        }
+        match measure(w.as_ref(), Variant::M1Cx { consumers: 2, depth: 1 }, scale, cfg) {
+            Ok(m) => cells.push(fx(ff.seconds / m.seconds)),
+            Err(_) => cells.push("n/a".into()),
+        }
+        t.row(cells);
+    }
+    t
+}
+
+/// Vector-type case study (paper: FW ~3x further, MIS degrades; their SDK
+/// crashed on pipes+vectors — our substrate completes the experiment).
+pub fn vector_study(scale: Scale, cfg: &DeviceConfig) -> Table {
+    let mut t = Table::new(
+        "Vector-type case study (speedup of vec4 feed-forward over feed-forward)",
+        &["Benchmark", "ff_v4 vs ff"],
+    );
+    for name in ["fw", "mis"] {
+        let w = by_name(name).unwrap();
+        let ff = measure(w.as_ref(), Variant::FeedForward { depth: 1 }, scale, cfg).unwrap();
+        match measure(w.as_ref(), Variant::Vectorized { width: 4, depth: 1 }, scale, cfg) {
+            Ok(m) => t.row(vec![name.into(), fx(ff.seconds / m.seconds)]),
+            Err(e) => t.row(vec![name.into(), format!("n/a ({e})")]),
+        };
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// E7 — headline numbers
+// ---------------------------------------------------------------------------
+
+pub struct Headline {
+    pub max_ff_speedup: f64,
+    pub avg_ff_speedup_gainers: f64,
+    pub max_total_speedup: f64,
+}
+
+/// "up to 65x, ~20x average across gainers, up to 86x with M2C2".
+pub fn headline(scale: Scale, cfg: &DeviceConfig) -> Headline {
+    let rows = table2_rows(scale, cfg);
+    let speedups: Vec<(String, f64)> = rows
+        .iter()
+        .map(|r| (r.base.workload.clone(), r.base.seconds / r.ff.seconds))
+        .collect();
+    let max_ff = speedups.iter().map(|(_, s)| *s).fold(0.0, f64::max);
+    let gainers: Vec<f64> = speedups.iter().map(|(_, s)| *s).filter(|s| *s > 2.0).collect();
+    let avg = gainers.iter().sum::<f64>() / gainers.len().max(1) as f64;
+    // best total = FF x M2C2 on the biggest gainer
+    let best = speedups
+        .iter()
+        .max_by(|a, b| a.1.total_cmp(&b.1))
+        .map(|(n, _)| n.clone())
+        .unwrap();
+    let w = by_name(&best).unwrap();
+    let base = measure(w.as_ref(), Variant::Baseline, scale, cfg).unwrap();
+    let total = match measure(w.as_ref(), Variant::MxCx { parts: 2, depth: 1 }, scale, cfg) {
+        Ok(m2) => base.seconds / m2.seconds,
+        Err(_) => max_ff,
+    };
+    Headline { max_ff_speedup: max_ff, avg_ff_speedup_gainers: avg, max_total_speedup: total }
+}

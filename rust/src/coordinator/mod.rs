@@ -1,0 +1,67 @@
+//! Experiment coordinator: orchestrates workloads x variants x scales,
+//! validates against native and PJRT references, renders the paper's
+//! tables/figures.
+
+pub mod experiments;
+
+pub use experiments::{
+    best_ff, depth_sweep, figure4, headline, hotspot_m2c2_bw, intext, measure, micro_family,
+    pc_sweep, table1, table2, table2_rows, table3, vector_study, Measurement,
+};
+
+use crate::report::Table;
+use crate::sim::device::DeviceConfig;
+use crate::workloads::Scale;
+
+/// Run the complete evaluation (every table & figure) and return the
+/// rendered tables in paper order. This is what the e2e example and the
+/// `pipefwd all` CLI command drive.
+pub fn full_evaluation(scale: Scale, cfg: &DeviceConfig, save_csv: bool) -> Vec<Table> {
+    let mut out = vec![];
+    out.push(table1(scale));
+    out.push(table2(scale, cfg));
+    out.push(figure4(scale, cfg));
+    out.push(table3(scale, cfg));
+    out.push(intext(scale, cfg));
+    out.push(depth_sweep(&["fw", "hotspot", "mis"], scale, cfg));
+    out.push(pc_sweep(&["fw", "hotspot", "mis"], scale, cfg));
+    out.push(vector_study(scale, cfg));
+    if save_csv {
+        let names = [
+            "table1", "table2", "figure4", "table3", "intext", "depth_sweep", "pc_sweep",
+            "vector_study",
+        ];
+        for (t, n) in out.iter().zip(names) {
+            let _ = t.save_csv(n);
+        }
+    }
+    out
+}
+
+/// Parse a scale name.
+pub fn parse_scale(s: &str) -> Option<Scale> {
+    match s {
+        "tiny" => Some(Scale::Tiny),
+        "small" => Some(Scale::Small),
+        "paper" => Some(Scale::Paper),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_parsing() {
+        assert_eq!(parse_scale("tiny"), Some(Scale::Tiny));
+        assert_eq!(parse_scale("small"), Some(Scale::Small));
+        assert_eq!(parse_scale("nope"), None);
+    }
+
+    #[test]
+    fn table1_lists_all_ten() {
+        let t = table1(Scale::Tiny);
+        assert_eq!(t.rows.len(), 10);
+    }
+}

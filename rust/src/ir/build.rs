@@ -1,0 +1,374 @@
+//! Ergonomic construction DSL for IR kernels.
+//!
+//! Expressions compose with `std::ops` operators and fluent comparison
+//! methods; statements are free functions; loop ids are assigned in a
+//! deterministic pre-order pass when the kernel is finished, so builders
+//! never thread a counter.
+//!
+//! ```no_run
+//! # // no_run: doctest binaries miss the xla rpath in this offline image
+//! use pipefwd::ir::build::*;
+//! use pipefwd::ir::{Ty, KernelKind};
+//!
+//! let k = KernelBuilder::new("saxpy", KernelKind::SingleWorkItem)
+//!     .buf_ro("x", Ty::F32)
+//!     .buf_ro("y", Ty::F32)
+//!     .buf_wo("out", Ty::F32)
+//!     .scalar("n", Ty::I32)
+//!     .scalar_f("a", Ty::F32)
+//!     .body(vec![for_(
+//!         "i",
+//!         i(0),
+//!         p("n"),
+//!         vec![store("out", v("i"), p("a") * ld("x", v("i")) + ld("y", v("i")))],
+//!     )])
+//!     .finish();
+//! assert_eq!(k.load_count(), 2);
+//! ```
+
+use super::expr::{BinOp, Expr, UnOp};
+use super::kernel::{Access, BufParam, Kernel, KernelKind, Role, ScalarParam};
+use super::stmt::{LoopId, Stmt};
+use super::types::Ty;
+
+// ---------------------------------------------------------------------------
+// Expression constructors
+// ---------------------------------------------------------------------------
+
+/// Integer literal.
+pub fn i(v: i64) -> Expr {
+    Expr::I(v)
+}
+
+/// Float literal.
+pub fn f(v: f32) -> Expr {
+    Expr::F(v)
+}
+
+/// Local variable reference.
+pub fn v(name: &str) -> Expr {
+    Expr::Var(name.to_string())
+}
+
+/// Scalar parameter reference.
+pub fn p(name: &str) -> Expr {
+    Expr::Param(name.to_string())
+}
+
+/// `get_global_id(0)`.
+pub fn gid() -> Expr {
+    Expr::GlobalId(0)
+}
+
+/// Global memory load `buf[idx]`.
+pub fn ld(buf: &str, idx: Expr) -> Expr {
+    Expr::Load { buf: buf.to_string(), idx: Box::new(idx) }
+}
+
+pub fn itof(e: Expr) -> Expr {
+    Expr::Un(UnOp::IToF, Box::new(e))
+}
+
+pub fn ftoi(e: Expr) -> Expr {
+    Expr::Un(UnOp::FToI, Box::new(e))
+}
+
+pub fn sqrt(e: Expr) -> Expr {
+    Expr::Un(UnOp::Sqrt, Box::new(e))
+}
+
+pub fn exp(e: Expr) -> Expr {
+    Expr::Un(UnOp::Exp, Box::new(e))
+}
+
+pub fn abs(e: Expr) -> Expr {
+    Expr::Un(UnOp::Abs, Box::new(e))
+}
+
+pub fn neg(e: Expr) -> Expr {
+    Expr::Un(UnOp::Neg, Box::new(e))
+}
+
+pub fn not(e: Expr) -> Expr {
+    Expr::Un(UnOp::Not, Box::new(e))
+}
+
+fn bin(op: BinOp, a: Expr, b: Expr) -> Expr {
+    Expr::Bin(op, Box::new(a), Box::new(b))
+}
+
+/// Fluent comparison / min-max / logical combinators.
+pub trait ExprExt: Sized {
+    fn e(self) -> Expr;
+
+    fn lt(self, o: Expr) -> Expr {
+        bin(BinOp::Lt, self.e(), o)
+    }
+    fn le(self, o: Expr) -> Expr {
+        bin(BinOp::Le, self.e(), o)
+    }
+    fn gt(self, o: Expr) -> Expr {
+        bin(BinOp::Gt, self.e(), o)
+    }
+    fn ge(self, o: Expr) -> Expr {
+        bin(BinOp::Ge, self.e(), o)
+    }
+    fn eq_(self, o: Expr) -> Expr {
+        bin(BinOp::Eq, self.e(), o)
+    }
+    fn ne(self, o: Expr) -> Expr {
+        bin(BinOp::Ne, self.e(), o)
+    }
+    fn and(self, o: Expr) -> Expr {
+        bin(BinOp::And, self.e(), o)
+    }
+    fn or(self, o: Expr) -> Expr {
+        bin(BinOp::Or, self.e(), o)
+    }
+    fn min(self, o: Expr) -> Expr {
+        bin(BinOp::Min, self.e(), o)
+    }
+    fn max(self, o: Expr) -> Expr {
+        bin(BinOp::Max, self.e(), o)
+    }
+    /// `self ? t : f`
+    fn sel(self, t: Expr, f_: Expr) -> Expr {
+        Expr::Select(Box::new(self.e()), Box::new(t), Box::new(f_))
+    }
+}
+
+impl ExprExt for Expr {
+    fn e(self) -> Expr {
+        self
+    }
+}
+
+impl std::ops::Add for Expr {
+    type Output = Expr;
+    fn add(self, o: Expr) -> Expr {
+        bin(BinOp::Add, self, o)
+    }
+}
+
+impl std::ops::Sub for Expr {
+    type Output = Expr;
+    fn sub(self, o: Expr) -> Expr {
+        bin(BinOp::Sub, self, o)
+    }
+}
+
+impl std::ops::Mul for Expr {
+    type Output = Expr;
+    fn mul(self, o: Expr) -> Expr {
+        bin(BinOp::Mul, self, o)
+    }
+}
+
+impl std::ops::Div for Expr {
+    type Output = Expr;
+    fn div(self, o: Expr) -> Expr {
+        bin(BinOp::Div, self, o)
+    }
+}
+
+impl std::ops::Rem for Expr {
+    type Output = Expr;
+    fn rem(self, o: Expr) -> Expr {
+        bin(BinOp::Rem, self, o)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Statement constructors
+// ---------------------------------------------------------------------------
+
+/// `int var = expr;`
+pub fn let_i(var: &str, expr: Expr) -> Stmt {
+    Stmt::Let { var: var.to_string(), ty: Ty::I32, expr }
+}
+
+/// `float var = expr;`
+pub fn let_f(var: &str, expr: Expr) -> Stmt {
+    Stmt::Let { var: var.to_string(), ty: Ty::F32, expr }
+}
+
+/// `var = expr;`
+pub fn assign(var: &str, expr: Expr) -> Stmt {
+    Stmt::Assign { var: var.to_string(), expr }
+}
+
+/// `buf[idx] = val;`
+pub fn store(buf: &str, idx: Expr, val: Expr) -> Stmt {
+    Stmt::Store { buf: buf.to_string(), idx, val }
+}
+
+/// `if (cond) { then_b }`
+pub fn if_(cond: Expr, then_b: Vec<Stmt>) -> Stmt {
+    Stmt::If { cond, then_b, else_b: vec![] }
+}
+
+/// `if (cond) { then_b } else { else_b }`
+pub fn if_else(cond: Expr, then_b: Vec<Stmt>, else_b: Vec<Stmt>) -> Stmt {
+    Stmt::If { cond, then_b, else_b }
+}
+
+/// `for (int var = lo; var < hi; var++) { body }` — loop id assigned at
+/// `KernelBuilder::finish` time.
+pub fn for_(var: &str, lo: Expr, hi: Expr, body: Vec<Stmt>) -> Stmt {
+    Stmt::For { id: LoopId(u32::MAX), var: var.to_string(), lo, hi, body }
+}
+
+/// `write_channel_intel(pipe, val);`
+pub fn pwrite(pipe: &str, val: Expr) -> Stmt {
+    Stmt::PipeWrite { pipe: pipe.to_string(), val }
+}
+
+/// `ty var = read_channel_intel(pipe);`
+pub fn pread(var: &str, ty: Ty, pipe: &str) -> Stmt {
+    Stmt::PipeRead { var: var.to_string(), ty, pipe: pipe.to_string() }
+}
+
+/// Renumber all loop ids in pre-order starting from `*next`.
+pub fn assign_loop_ids(body: &mut Vec<Stmt>, next: &mut u32) {
+    for s in body {
+        match s {
+            Stmt::For { id, body, .. } => {
+                *id = LoopId(*next);
+                *next += 1;
+                assign_loop_ids(body, next);
+            }
+            Stmt::If { then_b, else_b, .. } => {
+                assign_loop_ids(then_b, next);
+                assign_loop_ids(else_b, next);
+            }
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kernel builder
+// ---------------------------------------------------------------------------
+
+pub struct KernelBuilder {
+    name: String,
+    kind: KernelKind,
+    bufs: Vec<BufParam>,
+    scalars: Vec<ScalarParam>,
+    body: Vec<Stmt>,
+    assume_no_true_mlcd: bool,
+}
+
+impl KernelBuilder {
+    pub fn new(name: &str, kind: KernelKind) -> Self {
+        KernelBuilder {
+            name: name.to_string(),
+            kind,
+            bufs: vec![],
+            scalars: vec![],
+            body: vec![],
+            assume_no_true_mlcd: true,
+        }
+    }
+
+    pub fn buf_ro(mut self, name: &str, elem: Ty) -> Self {
+        self.bufs.push(BufParam { name: name.into(), elem, access: Access::ReadOnly, restrict: false });
+        self
+    }
+
+    pub fn buf_wo(mut self, name: &str, elem: Ty) -> Self {
+        self.bufs.push(BufParam { name: name.into(), elem, access: Access::WriteOnly, restrict: false });
+        self
+    }
+
+    pub fn buf_rw(mut self, name: &str, elem: Ty) -> Self {
+        self.bufs.push(BufParam { name: name.into(), elem, access: Access::ReadWrite, restrict: false });
+        self
+    }
+
+    pub fn scalar(mut self, name: &str, ty: Ty) -> Self {
+        self.scalars.push(ScalarParam { name: name.into(), ty });
+        self
+    }
+
+    /// Alias of `scalar` that reads better for float constants.
+    pub fn scalar_f(self, name: &str, ty: Ty) -> Self {
+        self.scalar(name, ty)
+    }
+
+    /// Mark that the kernel is *not* guaranteed free of true MLCDs (the
+    /// paper's feasibility precondition). NW-before-privatization uses this.
+    pub fn no_mlcd_guarantee(mut self) -> Self {
+        self.assume_no_true_mlcd = false;
+        self
+    }
+
+    pub fn body(mut self, body: Vec<Stmt>) -> Self {
+        self.body = body;
+        self
+    }
+
+    pub fn finish(mut self) -> Kernel {
+        let mut next = 0;
+        assign_loop_ids(&mut self.body, &mut next);
+        Kernel {
+            name: self.name,
+            kind: self.kind,
+            role: Role::Original,
+            bufs: self.bufs,
+            scalars: self.scalars,
+            body: self.body,
+            assume_no_true_mlcd: self.assume_no_true_mlcd,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn doc_example_builds() {
+        let k = KernelBuilder::new("saxpy", KernelKind::SingleWorkItem)
+            .buf_ro("x", Ty::F32)
+            .buf_ro("y", Ty::F32)
+            .buf_wo("out", Ty::F32)
+            .scalar("n", Ty::I32)
+            .scalar_f("a", Ty::F32)
+            .body(vec![for_(
+                "i",
+                i(0),
+                p("n"),
+                vec![store("out", v("i"), p("a") * ld("x", v("i")) + ld("y", v("i")))],
+            )])
+            .finish();
+        assert_eq!(k.load_count(), 2);
+        assert_eq!(k.store_count(), 1);
+        assert_eq!(k.loop_ids(), vec![LoopId(0)]);
+    }
+
+    #[test]
+    fn loop_ids_preorder_and_unique() {
+        let k = KernelBuilder::new("k", KernelKind::SingleWorkItem)
+            .body(vec![for_(
+                "a",
+                i(0),
+                i(4),
+                vec![
+                    for_("b", i(0), i(4), vec![]),
+                    if_(v("a").lt(i(2)), vec![for_("c", i(0), i(4), vec![])]),
+                ],
+            )])
+            .finish();
+        assert_eq!(k.loop_ids(), vec![LoopId(0), LoopId(1), LoopId(2)]);
+    }
+
+    #[test]
+    fn operators_compose() {
+        let e = (v("x") + i(1)) * p("n") - v("y") / i(2);
+        assert_eq!(e.load_count(), 0);
+        let mut vars = vec![];
+        e.vars(&mut vars);
+        assert_eq!(vars, vec!["x".to_string(), "y".to_string()]);
+    }
+}

@@ -1,0 +1,314 @@
+//! Expressions of the kernel IR.
+
+use super::types::{Ty, Val};
+use std::fmt;
+
+/// Binary operators. Comparison/logical ops yield `I(0|1)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Rem,
+    Min,
+    Max,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+    And,
+    Or,
+}
+
+impl BinOp {
+    pub fn is_cmp(self) -> bool {
+        matches!(self, BinOp::Lt | BinOp::Le | BinOp::Gt | BinOp::Ge | BinOp::Eq | BinOp::Ne)
+    }
+
+    pub fn c_symbol(self) -> &'static str {
+        match self {
+            BinOp::Add => "+",
+            BinOp::Sub => "-",
+            BinOp::Mul => "*",
+            BinOp::Div => "/",
+            BinOp::Rem => "%",
+            BinOp::Min => "min",
+            BinOp::Max => "max",
+            BinOp::Lt => "<",
+            BinOp::Le => "<=",
+            BinOp::Gt => ">",
+            BinOp::Ge => ">=",
+            BinOp::Eq => "==",
+            BinOp::Ne => "!=",
+            BinOp::And => "&&",
+            BinOp::Or => "||",
+        }
+    }
+}
+
+/// Unary operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UnOp {
+    Neg,
+    Not,
+    /// int -> float conversion
+    IToF,
+    /// float -> int truncation
+    FToI,
+    Sqrt,
+    Exp,
+    Abs,
+}
+
+/// An IR expression tree. `Load` is a *global memory* read — the operation
+/// the whole paper is about; local scalars are `Var`s.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    /// Integer literal.
+    I(i64),
+    /// Float literal.
+    F(f32),
+    /// Local scalar variable (includes loop induction variables).
+    Var(String),
+    /// Scalar kernel parameter (runtime constant, e.g. `num_nodes`).
+    Param(String),
+    /// NDRange builtin `get_global_id(dim)` (only valid in NDRange kernels).
+    GlobalId(u8),
+    /// Global-memory read: `buf[idx]`.
+    Load { buf: String, idx: Box<Expr> },
+    Bin(BinOp, Box<Expr>, Box<Expr>),
+    Un(UnOp, Box<Expr>),
+    /// `cond ? t : f`
+    Select(Box<Expr>, Box<Expr>, Box<Expr>),
+}
+
+impl Expr {
+    /// True if the expression contains any global `Load`.
+    pub fn has_load(&self) -> bool {
+        let mut found = false;
+        self.visit(&mut |e| {
+            if matches!(e, Expr::Load { .. }) {
+                found = true;
+            }
+        });
+        found
+    }
+
+    /// Number of `Load` nodes.
+    pub fn load_count(&self) -> usize {
+        let mut n = 0;
+        self.visit(&mut |e| {
+            if matches!(e, Expr::Load { .. }) {
+                n += 1;
+            }
+        });
+        n
+    }
+
+    /// Pre-order visit of every sub-expression.
+    pub fn visit(&self, f: &mut impl FnMut(&Expr)) {
+        f(self);
+        match self {
+            Expr::Load { idx, .. } => idx.visit(f),
+            Expr::Bin(_, a, b) => {
+                a.visit(f);
+                b.visit(f);
+            }
+            Expr::Un(_, a) => a.visit(f),
+            Expr::Select(c, t, e) => {
+                c.visit(f);
+                t.visit(f);
+                e.visit(f);
+            }
+            _ => {}
+        }
+    }
+
+    /// Collect the names of all `Var`s referenced.
+    pub fn vars(&self, out: &mut Vec<String>) {
+        self.visit(&mut |e| {
+            if let Expr::Var(v) = e {
+                if !out.contains(v) {
+                    out.push(v.clone());
+                }
+            }
+        });
+    }
+
+    /// Rewrite the tree bottom-up with `f` applied to every node.
+    pub fn map(self, f: &impl Fn(Expr) -> Expr) -> Expr {
+        let e = match self {
+            Expr::Load { buf, idx } => Expr::Load { buf, idx: Box::new(idx.map(f)) },
+            Expr::Bin(op, a, b) => Expr::Bin(op, Box::new(a.map(f)), Box::new(b.map(f))),
+            Expr::Un(op, a) => Expr::Un(op, Box::new(a.map(f))),
+            Expr::Select(c, t, e2) => Expr::Select(
+                Box::new(c.map(f)),
+                Box::new(t.map(f)),
+                Box::new(e2.map(f)),
+            ),
+            other => other,
+        };
+        f(e)
+    }
+
+    /// Substitute every `Var(name)` with `repl`.
+    pub fn subst_var(self, name: &str, repl: &Expr) -> Expr {
+        self.map(&|e| match &e {
+            Expr::Var(v) if v == name => repl.clone(),
+            _ => e,
+        })
+    }
+
+    /// Evaluate a binary op on runtime values (float semantics if either
+    /// side is float, like C's usual arithmetic conversions).
+    pub fn eval_bin(op: BinOp, a: Val, b: Val) -> Val {
+        use BinOp::*;
+        let float = matches!(a, Val::F(_)) || matches!(b, Val::F(_));
+        if float {
+            let (x, y) = (a.as_f(), b.as_f());
+            match op {
+                Add => Val::F(x + y),
+                Sub => Val::F(x - y),
+                Mul => Val::F(x * y),
+                Div => Val::F(x / y),
+                Rem => Val::F(x % y),
+                Min => Val::F(x.min(y)),
+                Max => Val::F(x.max(y)),
+                Lt => Val::I((x < y) as i64),
+                Le => Val::I((x <= y) as i64),
+                Gt => Val::I((x > y) as i64),
+                Ge => Val::I((x >= y) as i64),
+                Eq => Val::I((x == y) as i64),
+                Ne => Val::I((x != y) as i64),
+                And => Val::I((x != 0.0 && y != 0.0) as i64),
+                Or => Val::I((x != 0.0 || y != 0.0) as i64),
+            }
+        } else {
+            let (x, y) = (a.as_i(), b.as_i());
+            match op {
+                Add => Val::I(x.wrapping_add(y)),
+                Sub => Val::I(x.wrapping_sub(y)),
+                Mul => Val::I(x.wrapping_mul(y)),
+                Div => Val::I(if y == 0 { 0 } else { x / y }),
+                Rem => Val::I(if y == 0 { 0 } else { x % y }),
+                Min => Val::I(x.min(y)),
+                Max => Val::I(x.max(y)),
+                Lt => Val::I((x < y) as i64),
+                Le => Val::I((x <= y) as i64),
+                Gt => Val::I((x > y) as i64),
+                Ge => Val::I((x >= y) as i64),
+                Eq => Val::I((x == y) as i64),
+                Ne => Val::I((x != y) as i64),
+                And => Val::I((x != 0 && y != 0) as i64),
+                Or => Val::I((x != 0 || y != 0) as i64),
+            }
+        }
+    }
+
+    /// Evaluate a unary op.
+    pub fn eval_un(op: UnOp, a: Val) -> Val {
+        match op {
+            UnOp::Neg => match a {
+                Val::I(v) => Val::I(-v),
+                Val::F(v) => Val::F(-v),
+            },
+            UnOp::Not => Val::I(!a.is_true() as i64),
+            UnOp::IToF => Val::F(a.as_f()),
+            UnOp::FToI => Val::I(a.as_i()),
+            UnOp::Sqrt => Val::F(a.as_f().sqrt()),
+            UnOp::Exp => Val::F(a.as_f().exp()),
+            UnOp::Abs => match a {
+                Val::I(v) => Val::I(v.abs()),
+                Val::F(v) => Val::F(v.abs()),
+            },
+        }
+    }
+
+    /// Static result type under a typing environment (vars/params -> Ty).
+    pub fn ty_in(&self, lookup: &impl Fn(&str) -> Option<Ty>, buf_ty: &impl Fn(&str) -> Option<Ty>) -> Option<Ty> {
+        match self {
+            Expr::I(_) | Expr::GlobalId(_) => Some(Ty::I32),
+            Expr::F(_) => Some(Ty::F32),
+            Expr::Var(v) | Expr::Param(v) => lookup(v),
+            Expr::Load { buf, .. } => buf_ty(buf),
+            Expr::Bin(op, a, b) => {
+                if op.is_cmp() || matches!(op, BinOp::And | BinOp::Or) {
+                    Some(Ty::I32)
+                } else {
+                    match (a.ty_in(lookup, buf_ty)?, b.ty_in(lookup, buf_ty)?) {
+                        (Ty::F32, _) | (_, Ty::F32) => Some(Ty::F32),
+                        _ => Some(Ty::I32),
+                    }
+                }
+            }
+            Expr::Un(op, a) => match op {
+                UnOp::Not | UnOp::FToI => Some(Ty::I32),
+                UnOp::IToF | UnOp::Sqrt | UnOp::Exp => Some(Ty::F32),
+                UnOp::Neg | UnOp::Abs => a.ty_in(lookup, buf_ty),
+            },
+            Expr::Select(_, t, _) => t.ty_in(lookup, buf_ty),
+        }
+    }
+}
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&crate::ir::pretty::expr_to_string(self))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(s: &str) -> Expr {
+        Expr::Var(s.into())
+    }
+
+    #[test]
+    fn load_detection() {
+        let e = Expr::Bin(
+            BinOp::Add,
+            Box::new(v("x")),
+            Box::new(Expr::Load { buf: "a".into(), idx: Box::new(v("i")) }),
+        );
+        assert!(e.has_load());
+        assert_eq!(e.load_count(), 1);
+        assert!(!v("x").has_load());
+    }
+
+    #[test]
+    fn nested_load_count() {
+        // a[b[i]] has two loads
+        let inner = Expr::Load { buf: "b".into(), idx: Box::new(v("i")) };
+        let outer = Expr::Load { buf: "a".into(), idx: Box::new(inner) };
+        assert_eq!(outer.load_count(), 2);
+    }
+
+    #[test]
+    fn subst() {
+        let e = Expr::Bin(BinOp::Mul, Box::new(v("i")), Box::new(Expr::I(4)));
+        let s = e.subst_var("i", &Expr::I(7));
+        assert_eq!(
+            Expr::eval_bin(BinOp::Mul, Val::I(7), Val::I(4)),
+            Val::I(28)
+        );
+        assert_eq!(s, Expr::Bin(BinOp::Mul, Box::new(Expr::I(7)), Box::new(Expr::I(4))));
+    }
+
+    #[test]
+    fn int_float_promotion() {
+        assert_eq!(Expr::eval_bin(BinOp::Add, Val::I(1), Val::F(2.5)), Val::F(3.5));
+        assert_eq!(Expr::eval_bin(BinOp::Div, Val::I(7), Val::I(2)), Val::I(3));
+        assert_eq!(Expr::eval_bin(BinOp::Div, Val::I(1), Val::I(0)), Val::I(0));
+    }
+
+    #[test]
+    fn cmp_yields_int() {
+        assert_eq!(Expr::eval_bin(BinOp::Lt, Val::F(1.0), Val::F(2.0)), Val::I(1));
+        assert_eq!(Expr::eval_bin(BinOp::Eq, Val::I(3), Val::I(4)), Val::I(0));
+    }
+}

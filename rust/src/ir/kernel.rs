@@ -1,0 +1,189 @@
+//! Kernels, pipes and programs.
+
+use super::stmt::{LoopId, Stmt};
+use super::types::Ty;
+
+/// Buffer access mode declared on a kernel parameter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Access {
+    ReadOnly,
+    WriteOnly,
+    ReadWrite,
+}
+
+/// A `__global` pointer parameter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BufParam {
+    pub name: String,
+    pub elem: Ty,
+    pub access: Access,
+    /// `restrict` qualifier: the programmer guarantees no aliasing with any
+    /// other buffer. Our benchmarks (like the paper's baselines) do not use
+    /// it; the conservative-compiler model keys off it.
+    pub restrict: bool,
+}
+
+/// A scalar (by-value) kernel parameter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScalarParam {
+    pub name: String,
+    pub ty: Ty,
+}
+
+/// NDRange vs single work-item form (§2.1 of the paper).
+#[derive(Debug, Clone, PartialEq)]
+pub enum KernelKind {
+    /// Serial kernel; the host launches exactly one work-item.
+    SingleWorkItem,
+    /// Data-parallel kernel over a 1-D global range (all the paper's
+    /// benchmarks are 1-D or linearized); the body uses `Expr::GlobalId(0)`.
+    NDRange,
+}
+
+/// Role a kernel plays after the feed-forward split (metadata only; used by
+/// the scheduler/report, never by semantics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Untransformed kernel.
+    Original,
+    /// Producer: issues all global loads, writes pipes.
+    Memory,
+    /// Consumer: reads pipes, computes, stores.
+    Compute,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Kernel {
+    pub name: String,
+    pub kind: KernelKind,
+    pub role: Role,
+    pub bufs: Vec<BufParam>,
+    pub scalars: Vec<ScalarParam>,
+    pub body: Vec<Stmt>,
+    /// Programmer guarantee required by the paper's design model: there is
+    /// no *true* memory loop-carried dependency in this kernel (§3,
+    /// "Limitations"). The feasibility check still rejects syntactically
+    /// provable true MLCDs.
+    pub assume_no_true_mlcd: bool,
+}
+
+impl Kernel {
+    pub fn buf(&self, name: &str) -> Option<&BufParam> {
+        self.bufs.iter().find(|b| b.name == name)
+    }
+
+    pub fn scalar(&self, name: &str) -> Option<&ScalarParam> {
+        self.scalars.iter().find(|s| s.name == name)
+    }
+
+    /// All loop ids in the kernel, pre-order.
+    pub fn loop_ids(&self) -> Vec<LoopId> {
+        let mut out = vec![];
+        super::stmt::visit_body(&self.body, &mut |s| {
+            if let Stmt::For { id, .. } = s {
+                out.push(*id);
+            }
+        });
+        out
+    }
+
+    /// Largest loop id in use (for allocating fresh ones).
+    pub fn max_loop_id(&self) -> u32 {
+        self.loop_ids().iter().map(|l| l.0).max().unwrap_or(0)
+    }
+
+    pub fn load_count(&self) -> usize {
+        self.body.iter().map(|s| s.load_count()).sum()
+    }
+
+    pub fn store_count(&self) -> usize {
+        self.body.iter().map(|s| s.store_count()).sum()
+    }
+}
+
+/// An OpenCL 2.0 pipe / Intel channel connecting two kernels.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipeDecl {
+    pub name: String,
+    pub ty: Ty,
+    /// Minimum depth requested by the programmer; the offline compiler may
+    /// deepen it (§3). Depth 0 is normalized to 1.
+    pub depth: usize,
+}
+
+/// A device program: kernels plus the pipes that connect them.
+///
+/// The host side (launch order, convergence loops, buffer setup) lives in
+/// Rust workload drivers, exactly like OpenCL host code lives in C.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Program {
+    pub name: String,
+    pub kernels: Vec<Kernel>,
+    pub pipes: Vec<PipeDecl>,
+}
+
+impl Program {
+    pub fn single(kernel: Kernel) -> Program {
+        Program { name: kernel.name.clone(), kernels: vec![kernel], pipes: vec![] }
+    }
+
+    pub fn kernel(&self, name: &str) -> Option<&Kernel> {
+        self.kernels.iter().find(|k| k.name == name)
+    }
+
+    pub fn kernel_mut(&mut self, name: &str) -> Option<&mut Kernel> {
+        self.kernels.iter_mut().find(|k| k.name == name)
+    }
+
+    pub fn pipe(&self, name: &str) -> Option<&PipeDecl> {
+        self.pipes.iter().find(|p| p.name == name)
+    }
+
+    /// Set every pipe's depth (the paper's depth-sweep experiment E4c).
+    pub fn with_pipe_depth(mut self, depth: usize) -> Program {
+        for p in &mut self.pipes {
+            p.depth = depth.max(1);
+        }
+        self
+    }
+
+    /// Total statement count across kernels (code-size metric).
+    pub fn size(&self) -> usize {
+        self.kernels.iter().map(|k| super::stmt::body_len(&k.body)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::expr::Expr;
+
+    fn k(name: &str) -> Kernel {
+        Kernel {
+            name: name.into(),
+            kind: KernelKind::SingleWorkItem,
+            role: Role::Original,
+            bufs: vec![],
+            scalars: vec![ScalarParam { name: "n".into(), ty: Ty::I32 }],
+            body: vec![Stmt::Store { buf: "out".into(), idx: Expr::I(0), val: Expr::I(1) }],
+            assume_no_true_mlcd: true,
+        }
+    }
+
+    #[test]
+    fn program_lookup() {
+        let mut p = Program::single(k("a"));
+        p.kernels.push(k("b"));
+        assert!(p.kernel("a").is_some());
+        assert!(p.kernel("c").is_none());
+        assert_eq!(p.size(), 2);
+    }
+
+    #[test]
+    fn pipe_depth_normalized() {
+        let mut p = Program::single(k("a"));
+        p.pipes.push(PipeDecl { name: "c0".into(), ty: Ty::I32, depth: 7 });
+        let p = p.with_pipe_depth(0);
+        assert_eq!(p.pipe("c0").unwrap().depth, 1);
+    }
+}

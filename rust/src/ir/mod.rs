@@ -1,0 +1,21 @@
+//! Kernel IR: an OpenCL-like structured intermediate representation.
+//!
+//! This is the substrate the whole system operates on — the paper's
+//! transformation recipe (§3) is implemented as passes over this IR
+//! (`crate::transform`), the offline-compiler model analyzes it
+//! (`crate::analysis`), and the FPGA substrate executes it
+//! (`crate::sim`).
+
+pub mod build;
+pub mod expr;
+pub mod kernel;
+pub mod pretty;
+pub mod stmt;
+pub mod types;
+pub mod validate;
+
+pub use expr::{BinOp, Expr, UnOp};
+pub use kernel::{Access, BufParam, Kernel, KernelKind, PipeDecl, Program, Role, ScalarParam};
+pub use stmt::{LoopId, Stmt};
+pub use types::{Ty, Val};
+pub use validate::{validate_kernel, validate_program, ValidateError};

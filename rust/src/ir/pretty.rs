@@ -1,0 +1,211 @@
+//! OpenCL-flavoured pretty printer.
+//!
+//! Produces source close to what a programmer following the paper's recipe
+//! would write (Intel channel notation: `write_channel_intel` /
+//! `read_channel_intel`), used by examples, reports and golden tests.
+
+use super::expr::{BinOp, Expr, UnOp};
+use super::kernel::{Access, Kernel, KernelKind, PipeDecl, Program};
+use super::stmt::Stmt;
+
+pub fn expr_to_string(e: &Expr) -> String {
+    match e {
+        Expr::I(v) => v.to_string(),
+        Expr::F(v) => {
+            if v.fract() == 0.0 && v.abs() < 1e9 {
+                format!("{v:.1}f")
+            } else {
+                format!("{v}f")
+            }
+        }
+        Expr::Var(n) => n.clone(),
+        Expr::Param(n) => n.clone(),
+        Expr::GlobalId(d) => format!("get_global_id({d})"),
+        Expr::Load { buf, idx } => format!("{buf}[{}]", expr_to_string(idx)),
+        Expr::Bin(op, a, b) => match op {
+            BinOp::Min => format!("min({}, {})", expr_to_string(a), expr_to_string(b)),
+            BinOp::Max => format!("max({}, {})", expr_to_string(a), expr_to_string(b)),
+            _ => format!("({} {} {})", expr_to_string(a), op.c_symbol(), expr_to_string(b)),
+        },
+        Expr::Un(op, a) => {
+            let inner = expr_to_string(a);
+            match op {
+                UnOp::Neg => format!("(-{inner})"),
+                UnOp::Not => format!("(!{inner})"),
+                UnOp::IToF => format!("(float)({inner})"),
+                UnOp::FToI => format!("(int)({inner})"),
+                UnOp::Sqrt => format!("sqrt({inner})"),
+                UnOp::Exp => format!("exp({inner})"),
+                UnOp::Abs => format!("fabs({inner})"),
+            }
+        }
+        Expr::Select(c, t, f) => format!(
+            "({} ? {} : {})",
+            expr_to_string(c),
+            expr_to_string(t),
+            expr_to_string(f)
+        ),
+    }
+}
+
+fn indent(out: &mut String, depth: usize) {
+    for _ in 0..depth {
+        out.push_str("  ");
+    }
+}
+
+fn stmt_to_string(s: &Stmt, out: &mut String, depth: usize) {
+    match s {
+        Stmt::Let { var, ty, expr } => {
+            indent(out, depth);
+            out.push_str(&format!("{} {} = {};\n", ty.c_name(), var, expr_to_string(expr)));
+        }
+        Stmt::Assign { var, expr } => {
+            indent(out, depth);
+            out.push_str(&format!("{} = {};\n", var, expr_to_string(expr)));
+        }
+        Stmt::Store { buf, idx, val } => {
+            indent(out, depth);
+            out.push_str(&format!("{}[{}] = {};\n", buf, expr_to_string(idx), expr_to_string(val)));
+        }
+        Stmt::If { cond, then_b, else_b } => {
+            indent(out, depth);
+            out.push_str(&format!("if ({}) {{\n", expr_to_string(cond)));
+            for st in then_b {
+                stmt_to_string(st, out, depth + 1);
+            }
+            if !else_b.is_empty() {
+                indent(out, depth);
+                out.push_str("} else {\n");
+                for st in else_b {
+                    stmt_to_string(st, out, depth + 1);
+                }
+            }
+            indent(out, depth);
+            out.push_str("}\n");
+        }
+        Stmt::For { var, lo, hi, body, .. } => {
+            indent(out, depth);
+            out.push_str(&format!(
+                "for (int {v} = {lo}; {v} < {hi}; {v}++) {{\n",
+                v = var,
+                lo = expr_to_string(lo),
+                hi = expr_to_string(hi)
+            ));
+            for st in body {
+                stmt_to_string(st, out, depth + 1);
+            }
+            indent(out, depth);
+            out.push_str("}\n");
+        }
+        Stmt::PipeWrite { pipe, val } => {
+            indent(out, depth);
+            out.push_str(&format!("write_channel_intel({}, {});\n", pipe, expr_to_string(val)));
+        }
+        Stmt::PipeRead { var, ty, pipe } => {
+            indent(out, depth);
+            out.push_str(&format!("{} {} = read_channel_intel({});\n", ty.c_name(), var, pipe));
+        }
+    }
+}
+
+pub fn kernel_to_string(k: &Kernel) -> String {
+    let mut out = String::new();
+    match k.kind {
+        KernelKind::SingleWorkItem => {
+            out.push_str("__attribute__((max_global_work_dim(0)))\n");
+        }
+        KernelKind::NDRange => {}
+    }
+    out.push_str(&format!("__kernel void {}(", k.name));
+    let mut params: Vec<String> = vec![];
+    for b in &k.bufs {
+        let access = match b.access {
+            Access::ReadOnly => "const ",
+            _ => "",
+        };
+        let restrict = if b.restrict { " restrict" } else { "" };
+        params.push(format!("__global {access}{}*{restrict} {}", b.elem.c_name(), b.name));
+    }
+    for sp in &k.scalars {
+        params.push(format!("{} {}", sp.ty.c_name(), sp.name));
+    }
+    out.push_str(&params.join(", "));
+    out.push_str(") {\n");
+    for s in &k.body {
+        stmt_to_string(s, &mut out, 1);
+    }
+    out.push_str("}\n");
+    out
+}
+
+fn pipe_to_string(p: &PipeDecl) -> String {
+    format!(
+        "channel {} {} __attribute__((depth({})));\n",
+        p.ty.c_name(),
+        p.name,
+        p.depth
+    )
+}
+
+pub fn program_to_string(prog: &Program) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("// program: {}\n", prog.name));
+    if !prog.pipes.is_empty() {
+        out.push_str("#pragma OPENCL EXTENSION cl_intel_channels : enable\n");
+        for p in &prog.pipes {
+            out.push_str(&pipe_to_string(p));
+        }
+        out.push('\n');
+    }
+    for (idx, k) in prog.kernels.iter().enumerate() {
+        if idx > 0 {
+            out.push('\n');
+        }
+        out.push_str(&kernel_to_string(k));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::build::*;
+    use crate::ir::{KernelKind, Ty};
+
+    #[test]
+    fn prints_opencl_like_source() {
+        let k = KernelBuilder::new("k", KernelKind::SingleWorkItem)
+            .buf_ro("a", Ty::F32)
+            .buf_wo("o", Ty::F32)
+            .scalar("n", Ty::I32)
+            .body(vec![for_(
+                "i",
+                i(0),
+                p("n"),
+                vec![
+                    let_f("x", ld("a", v("i"))),
+                    if_(v("x").gt(f(0.0)), vec![store("o", v("i"), v("x") * f(2.0))]),
+                ],
+            )])
+            .finish();
+        let s = kernel_to_string(&k);
+        assert!(s.contains("__kernel void k(__global const float* a, __global float* o, int n)"));
+        assert!(s.contains("for (int i = 0; i < n; i++)"));
+        assert!(s.contains("float x = a[i];"));
+        assert!(s.contains("o[i] = (x * 2.0f);"));
+    }
+
+    #[test]
+    fn prints_channels() {
+        let mut prog = crate::ir::Program::single(
+            KernelBuilder::new("m", KernelKind::SingleWorkItem)
+                .body(vec![pwrite("c0", i(1))])
+                .finish(),
+        );
+        prog.pipes.push(crate::ir::PipeDecl { name: "c0".into(), ty: Ty::I32, depth: 4 });
+        let s = program_to_string(&prog);
+        assert!(s.contains("channel int c0 __attribute__((depth(4)));"));
+        assert!(s.contains("write_channel_intel(c0, 1);"));
+    }
+}

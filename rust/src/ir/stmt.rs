@@ -1,0 +1,158 @@
+//! Structured statements of the kernel IR.
+//!
+//! The IR is deliberately *structured* (no goto/CFG): the offline-compiler
+//! model reasons about loop nests the way Intel's HLS scheduler does, and
+//! the paper's transformation steps are all defined on structured code.
+
+use super::expr::Expr;
+use super::types::Ty;
+
+/// Stable loop identifier, assigned by the builder, preserved by transforms
+/// (replicas get fresh ids). Keys the II/report tables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LoopId(pub u32);
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    /// Declare-and-assign a local scalar: `ty var = expr;`
+    Let { var: String, ty: Ty, expr: Expr },
+    /// Re-assign an existing local: `var = expr;`
+    Assign { var: String, expr: Expr },
+    /// Global-memory write: `buf[idx] = val;`
+    Store { buf: String, idx: Expr, val: Expr },
+    /// `if (cond) { then_b } else { else_b }`
+    If { cond: Expr, then_b: Vec<Stmt>, else_b: Vec<Stmt> },
+    /// `for (int var = lo; var < hi; var++) { body }`
+    For { id: LoopId, var: String, lo: Expr, hi: Expr, body: Vec<Stmt> },
+    /// Blocking channel write: `write_channel_intel(pipe, val);`
+    PipeWrite { pipe: String, val: Expr },
+    /// Blocking channel read that *declares* its destination:
+    /// `ty var = read_channel_intel(pipe);`
+    PipeRead { var: String, ty: Ty, pipe: String },
+}
+
+impl Stmt {
+    /// Pre-order visit of this statement and all nested statements.
+    pub fn visit(&self, f: &mut impl FnMut(&Stmt)) {
+        f(self);
+        match self {
+            Stmt::If { then_b, else_b, .. } => {
+                for s in then_b {
+                    s.visit(f);
+                }
+                for s in else_b {
+                    s.visit(f);
+                }
+            }
+            Stmt::For { body, .. } => {
+                for s in body {
+                    s.visit(f);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Visit every expression in this statement (not recursing into nested
+    /// statements).
+    pub fn visit_own_exprs(&self, f: &mut impl FnMut(&Expr)) {
+        match self {
+            Stmt::Let { expr, .. } | Stmt::Assign { expr, .. } => f(expr),
+            Stmt::Store { idx, val, .. } => {
+                f(idx);
+                f(val);
+            }
+            Stmt::If { cond, .. } => f(cond),
+            Stmt::For { lo, hi, .. } => {
+                f(lo);
+                f(hi);
+            }
+            Stmt::PipeWrite { val, .. } => f(val),
+            Stmt::PipeRead { .. } => {}
+        }
+    }
+
+    /// Visit every expression in this statement and nested statements.
+    pub fn visit_all_exprs(&self, f: &mut impl FnMut(&Expr)) {
+        self.visit(&mut |s| s.visit_own_exprs(f));
+    }
+
+    /// Count global loads anywhere under this statement.
+    pub fn load_count(&self) -> usize {
+        let mut n = 0;
+        self.visit_all_exprs(&mut |e| n += e.load_count());
+        n
+    }
+
+    /// Count global stores anywhere under this statement.
+    pub fn store_count(&self) -> usize {
+        let mut n = 0;
+        self.visit(&mut |s| {
+            if matches!(s, Stmt::Store { .. }) {
+                n += 1;
+            }
+        });
+        n
+    }
+}
+
+/// Visit every statement in a body, pre-order.
+pub fn visit_body(body: &[Stmt], f: &mut impl FnMut(&Stmt)) {
+    for s in body {
+        s.visit(f);
+    }
+}
+
+/// Count statements in a body (recursively) — a code-size metric used by the
+/// area model and by tests.
+pub fn body_len(body: &[Stmt]) -> usize {
+    let mut n = 0;
+    visit_body(body, &mut |_| n += 1);
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::expr::{BinOp, Expr};
+
+    fn sample() -> Vec<Stmt> {
+        vec![
+            Stmt::Let { var: "x".into(), ty: Ty::I32, expr: Expr::Load { buf: "a".into(), idx: Box::new(Expr::Var("i".into())) } },
+            Stmt::For {
+                id: LoopId(0),
+                var: "j".into(),
+                lo: Expr::I(0),
+                hi: Expr::Var("x".into()),
+                body: vec![Stmt::Store {
+                    buf: "b".into(),
+                    idx: Expr::Var("j".into()),
+                    val: Expr::Bin(BinOp::Add, Box::new(Expr::Var("j".into())), Box::new(Expr::I(1))),
+                }],
+            },
+        ]
+    }
+
+    #[test]
+    fn counts() {
+        let b = sample();
+        assert_eq!(body_len(&b), 3);
+        assert_eq!(b.iter().map(|s| s.load_count()).sum::<usize>(), 1);
+        assert_eq!(b.iter().map(|s| s.store_count()).sum::<usize>(), 1);
+    }
+
+    #[test]
+    fn visit_order_is_preorder() {
+        let b = sample();
+        let mut kinds = vec![];
+        visit_body(&b, &mut |s| {
+            kinds.push(match s {
+                Stmt::Let { .. } => "let",
+                Stmt::For { .. } => "for",
+                Stmt::Store { .. } => "store",
+                _ => "?",
+            })
+        });
+        assert_eq!(kinds, vec!["let", "for", "store"]);
+    }
+}

@@ -1,0 +1,140 @@
+//! Scalar types and runtime values for the kernel IR.
+//!
+//! The paper's kernels use 32-bit ints and floats; we widen ints to i64 at
+//! runtime (indices over large buffers) while keeping the *declared* type
+//! for area/bandwidth accounting (every element moved over DRAM is 4 bytes).
+
+use std::fmt;
+
+/// Declared element/scalar type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Ty {
+    /// 32-bit integer (runtime-widened to i64).
+    I32,
+    /// 32-bit float.
+    F32,
+}
+
+impl Ty {
+    /// Size in bytes as seen by the memory system.
+    pub fn bytes(self) -> u64 {
+        4
+    }
+
+    /// OpenCL C spelling (for the pretty printer).
+    pub fn c_name(self) -> &'static str {
+        match self {
+            Ty::I32 => "int",
+            Ty::F32 => "float",
+        }
+    }
+}
+
+impl fmt::Display for Ty {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.c_name())
+    }
+}
+
+/// A runtime value. Comparison/logical operators produce `I(0|1)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Val {
+    I(i64),
+    F(f32),
+}
+
+impl Val {
+    pub fn ty(self) -> Ty {
+        match self {
+            Val::I(_) => Ty::I32,
+            Val::F(_) => Ty::F32,
+        }
+    }
+
+    pub fn as_i(self) -> i64 {
+        match self {
+            Val::I(v) => v,
+            Val::F(v) => v as i64,
+        }
+    }
+
+    pub fn as_f(self) -> f32 {
+        match self {
+            Val::I(v) => v as f32,
+            Val::F(v) => v,
+        }
+    }
+
+    pub fn is_true(self) -> bool {
+        match self {
+            Val::I(v) => v != 0,
+            Val::F(v) => v != 0.0,
+        }
+    }
+
+    /// Default (zero) value of a type.
+    pub fn zero(ty: Ty) -> Val {
+        match ty {
+            Ty::I32 => Val::I(0),
+            Ty::F32 => Val::F(0.0),
+        }
+    }
+
+    /// Bit-encode for storage in an `AtomicU64`-backed buffer.
+    pub fn to_bits(self) -> u64 {
+        match self {
+            Val::I(v) => v as u64,
+            Val::F(v) => v.to_bits() as u64,
+        }
+    }
+
+    /// Decode from buffer bits given the buffer's element type.
+    pub fn from_bits(ty: Ty, bits: u64) -> Val {
+        match ty {
+            Ty::I32 => Val::I(bits as i64),
+            Ty::F32 => Val::F(f32::from_bits(bits as u32)),
+        }
+    }
+}
+
+impl fmt::Display for Val {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Val::I(v) => write!(f, "{v}"),
+            Val::F(v) => write!(f, "{v}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_roundtrip_int() {
+        for v in [-5i64, 0, 1, 1 << 40] {
+            assert_eq!(Val::from_bits(Ty::I32, Val::I(v).to_bits()), Val::I(v));
+        }
+    }
+
+    #[test]
+    fn bits_roundtrip_float() {
+        for v in [-1.5f32, 0.0, 3.25e10, f32::INFINITY] {
+            assert_eq!(Val::from_bits(Ty::F32, Val::F(v).to_bits()), Val::F(v));
+        }
+    }
+
+    #[test]
+    fn truthiness() {
+        assert!(Val::I(-3).is_true());
+        assert!(!Val::I(0).is_true());
+        assert!(Val::F(0.5).is_true());
+        assert!(!Val::F(0.0).is_true());
+    }
+
+    #[test]
+    fn coercions() {
+        assert_eq!(Val::F(2.9).as_i(), 2);
+        assert_eq!(Val::I(3).as_f(), 3.0);
+    }
+}

@@ -1,0 +1,325 @@
+//! Structural validation of kernels and programs.
+//!
+//! Catches builder/transform bugs early: undefined variables/buffers/pipes,
+//! double definitions, writes to read-only buffers, NDRange builtins in
+//! single work-item kernels, pipes with other than exactly one producer and
+//! one consumer, and non-positive pipe depths.
+
+use super::expr::Expr;
+use super::kernel::{Access, Kernel, KernelKind, Program};
+use super::stmt::Stmt;
+use std::collections::HashSet;
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum ValidateError {
+    #[error("kernel {kernel}: undefined variable `{name}`")]
+    UndefinedVar { kernel: String, name: String },
+    #[error("kernel {kernel}: variable `{name}` defined twice in the same scope chain")]
+    Redefined { kernel: String, name: String },
+    #[error("kernel {kernel}: undefined buffer `{name}`")]
+    UndefinedBuf { kernel: String, name: String },
+    #[error("kernel {kernel}: undefined scalar param `{name}`")]
+    UndefinedParam { kernel: String, name: String },
+    #[error("kernel {kernel}: store to read-only buffer `{name}`")]
+    StoreToReadOnly { kernel: String, name: String },
+    #[error("kernel {kernel}: load from write-only buffer `{name}`")]
+    LoadFromWriteOnly { kernel: String, name: String },
+    #[error("kernel {kernel}: get_global_id in single work-item kernel")]
+    GlobalIdInSwi { kernel: String },
+    #[error("kernel {kernel}: undeclared pipe `{name}`")]
+    UndefinedPipe { kernel: String, name: String },
+    #[error("pipe {name}: {writers} writer kernel(s) and {readers} reader kernel(s); need exactly 1/1")]
+    PipeEndpoints { name: String, writers: usize, readers: usize },
+    #[error("pipe {name}: declared twice")]
+    DuplicatePipe { name: String },
+    #[error("program {name}: duplicate kernel name `{kernel}`")]
+    DuplicateKernel { name: String, kernel: String },
+}
+
+struct Scope {
+    vars: Vec<HashSet<String>>,
+}
+
+impl Scope {
+    fn new() -> Self {
+        Scope { vars: vec![HashSet::new()] }
+    }
+
+    fn push(&mut self) {
+        self.vars.push(HashSet::new());
+    }
+
+    fn pop(&mut self) {
+        self.vars.pop();
+    }
+
+    fn defined(&self, name: &str) -> bool {
+        self.vars.iter().any(|s| s.contains(name))
+    }
+
+    fn define(&mut self, name: &str) -> bool {
+        if self.defined(name) {
+            return false;
+        }
+        self.vars.last_mut().unwrap().insert(name.to_string());
+        true
+    }
+}
+
+fn check_expr(k: &Kernel, e: &Expr, scope: &Scope, pipes: Option<&Program>) -> Result<(), ValidateError> {
+    let mut err = None;
+    e.visit(&mut |node| {
+        if err.is_some() {
+            return;
+        }
+        match node {
+            Expr::Var(n) => {
+                if !scope.defined(n) {
+                    err = Some(ValidateError::UndefinedVar { kernel: k.name.clone(), name: n.clone() });
+                }
+            }
+            Expr::Param(n) => {
+                if k.scalar(n).is_none() {
+                    err = Some(ValidateError::UndefinedParam { kernel: k.name.clone(), name: n.clone() });
+                }
+            }
+            Expr::Load { buf, .. } => match k.buf(buf) {
+                None => err = Some(ValidateError::UndefinedBuf { kernel: k.name.clone(), name: buf.clone() }),
+                Some(b) if b.access == Access::WriteOnly => {
+                    err = Some(ValidateError::LoadFromWriteOnly { kernel: k.name.clone(), name: buf.clone() })
+                }
+                _ => {}
+            },
+            Expr::GlobalId(_) => {
+                if k.kind == KernelKind::SingleWorkItem {
+                    err = Some(ValidateError::GlobalIdInSwi { kernel: k.name.clone() });
+                }
+            }
+            _ => {}
+        }
+    });
+    let _ = pipes;
+    match err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+fn check_body(
+    k: &Kernel,
+    body: &[Stmt],
+    scope: &mut Scope,
+    prog: Option<&Program>,
+) -> Result<(), ValidateError> {
+    for s in body {
+        match s {
+            Stmt::Let { var, expr, .. } => {
+                check_expr(k, expr, scope, prog)?;
+                if !scope.define(var) {
+                    return Err(ValidateError::Redefined { kernel: k.name.clone(), name: var.clone() });
+                }
+            }
+            Stmt::Assign { var, expr } => {
+                check_expr(k, expr, scope, prog)?;
+                if !scope.defined(var) {
+                    return Err(ValidateError::UndefinedVar { kernel: k.name.clone(), name: var.clone() });
+                }
+            }
+            Stmt::Store { buf, idx, val } => {
+                check_expr(k, idx, scope, prog)?;
+                check_expr(k, val, scope, prog)?;
+                match k.buf(buf) {
+                    None => {
+                        return Err(ValidateError::UndefinedBuf { kernel: k.name.clone(), name: buf.clone() })
+                    }
+                    Some(b) if b.access == Access::ReadOnly => {
+                        return Err(ValidateError::StoreToReadOnly { kernel: k.name.clone(), name: buf.clone() })
+                    }
+                    _ => {}
+                }
+            }
+            Stmt::If { cond, then_b, else_b } => {
+                check_expr(k, cond, scope, prog)?;
+                scope.push();
+                check_body(k, then_b, scope, prog)?;
+                scope.pop();
+                scope.push();
+                check_body(k, else_b, scope, prog)?;
+                scope.pop();
+            }
+            Stmt::For { var, lo, hi, body, .. } => {
+                check_expr(k, lo, scope, prog)?;
+                check_expr(k, hi, scope, prog)?;
+                scope.push();
+                if !scope.define(var) {
+                    return Err(ValidateError::Redefined { kernel: k.name.clone(), name: var.clone() });
+                }
+                check_body(k, body, scope, prog)?;
+                scope.pop();
+            }
+            Stmt::PipeWrite { pipe, val } => {
+                check_expr(k, val, scope, prog)?;
+                if let Some(pr) = prog {
+                    if pr.pipe(pipe).is_none() {
+                        return Err(ValidateError::UndefinedPipe { kernel: k.name.clone(), name: pipe.clone() });
+                    }
+                }
+            }
+            Stmt::PipeRead { var, pipe, .. } => {
+                if let Some(pr) = prog {
+                    if pr.pipe(pipe).is_none() {
+                        return Err(ValidateError::UndefinedPipe { kernel: k.name.clone(), name: pipe.clone() });
+                    }
+                }
+                if !scope.define(var) {
+                    return Err(ValidateError::Redefined { kernel: k.name.clone(), name: var.clone() });
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Validate one kernel in isolation (pipe declarations unchecked).
+pub fn validate_kernel(k: &Kernel) -> Result<(), ValidateError> {
+    let mut scope = Scope::new();
+    check_body(k, &k.body, &mut scope, None)
+}
+
+/// Validate a whole program, including pipe endpoint wiring.
+pub fn validate_program(prog: &Program) -> Result<(), ValidateError> {
+    // Unique kernel names.
+    let mut names = HashSet::new();
+    for k in &prog.kernels {
+        if !names.insert(&k.name) {
+            return Err(ValidateError::DuplicateKernel { name: prog.name.clone(), kernel: k.name.clone() });
+        }
+    }
+    // Unique pipe names.
+    let mut pnames = HashSet::new();
+    for p in &prog.pipes {
+        if !pnames.insert(&p.name) {
+            return Err(ValidateError::DuplicatePipe { name: p.name.clone() });
+        }
+    }
+    // Per-kernel checks with pipe resolution.
+    for k in &prog.kernels {
+        let mut scope = Scope::new();
+        check_body(k, &k.body, &mut scope, Some(prog))?;
+    }
+    // Pipe endpoints: exactly one writer kernel and one reader kernel each.
+    for p in &prog.pipes {
+        let mut writers = 0;
+        let mut readers = 0;
+        for k in &prog.kernels {
+            let mut w = false;
+            let mut r = false;
+            super::stmt::visit_body(&k.body, &mut |s| match s {
+                Stmt::PipeWrite { pipe, .. } if pipe == &p.name => w = true,
+                Stmt::PipeRead { pipe, .. } if pipe == &p.name => r = true,
+                _ => {}
+            });
+            writers += w as usize;
+            readers += r as usize;
+        }
+        if writers != 1 || readers != 1 {
+            return Err(ValidateError::PipeEndpoints { name: p.name.clone(), writers, readers });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::build::*;
+    use crate::ir::{KernelKind, PipeDecl, Program, Ty};
+
+    fn ok_kernel() -> Kernel {
+        KernelBuilder::new("k", KernelKind::SingleWorkItem)
+            .buf_ro("a", Ty::F32)
+            .buf_wo("o", Ty::F32)
+            .scalar("n", Ty::I32)
+            .body(vec![for_(
+                "i",
+                i(0),
+                p("n"),
+                vec![store("o", v("i"), ld("a", v("i")))],
+            )])
+            .finish()
+    }
+
+    #[test]
+    fn accepts_valid_kernel() {
+        assert_eq!(validate_kernel(&ok_kernel()), Ok(()));
+    }
+
+    #[test]
+    fn rejects_undefined_var() {
+        let k = KernelBuilder::new("k", KernelKind::SingleWorkItem)
+            .body(vec![assign("x", i(1))])
+            .finish();
+        assert!(matches!(validate_kernel(&k), Err(ValidateError::UndefinedVar { .. })));
+    }
+
+    #[test]
+    fn rejects_store_to_readonly() {
+        let k = KernelBuilder::new("k", KernelKind::SingleWorkItem)
+            .buf_ro("a", Ty::F32)
+            .body(vec![store("a", i(0), f(1.0))])
+            .finish();
+        assert!(matches!(validate_kernel(&k), Err(ValidateError::StoreToReadOnly { .. })));
+    }
+
+    #[test]
+    fn rejects_gid_in_swi() {
+        let k = KernelBuilder::new("k", KernelKind::SingleWorkItem)
+            .buf_wo("o", Ty::I32)
+            .body(vec![store("o", gid(), i(1))])
+            .finish();
+        assert!(matches!(validate_kernel(&k), Err(ValidateError::GlobalIdInSwi { .. })));
+    }
+
+    #[test]
+    fn rejects_loop_var_shadowing() {
+        let k = KernelBuilder::new("k", KernelKind::SingleWorkItem)
+            .body(vec![let_i("i", i(0)), for_("i", i(0), i(4), vec![])])
+            .finish();
+        assert!(matches!(validate_kernel(&k), Err(ValidateError::Redefined { .. })));
+    }
+
+    #[test]
+    fn pipe_endpoint_rules() {
+        let m = KernelBuilder::new("m", KernelKind::SingleWorkItem)
+            .body(vec![pwrite("c0", i(1))])
+            .finish();
+        let c = KernelBuilder::new("c", KernelKind::SingleWorkItem)
+            .buf_wo("o", Ty::I32)
+            .body(vec![pread("x", Ty::I32, "c0"), store("o", i(0), v("x"))])
+            .finish();
+        let prog = Program {
+            name: "p".into(),
+            kernels: vec![m.clone(), c],
+            pipes: vec![PipeDecl { name: "c0".into(), ty: Ty::I32, depth: 1 }],
+        };
+        assert_eq!(validate_program(&prog), Ok(()));
+
+        // A pipe with a writer but no reader is rejected.
+        let bad = Program {
+            name: "p".into(),
+            kernels: vec![m],
+            pipes: vec![PipeDecl { name: "c0".into(), ty: Ty::I32, depth: 1 }],
+        };
+        assert!(matches!(validate_program(&bad), Err(ValidateError::PipeEndpoints { .. })));
+    }
+
+    #[test]
+    fn rejects_undeclared_pipe() {
+        let m = KernelBuilder::new("m", KernelKind::SingleWorkItem)
+            .body(vec![pwrite("nope", i(1))])
+            .finish();
+        let prog = Program { name: "p".into(), kernels: vec![m], pipes: vec![] };
+        assert!(matches!(validate_program(&prog), Err(ValidateError::UndefinedPipe { .. })));
+    }
+}

@@ -1,0 +1,16 @@
+//! # pipefwd
+//!
+//! A reproduction of *"Enabling the Feed-Forward Design Model in OpenCL
+//! Using Pipes"* (Eghbali Zarch & Becchi; camera-ready title: *"Improving
+//! the Efficiency of OpenCL Kernels through Pipes"*) as a three-layer
+//! Rust + JAX + Pallas system. See DESIGN.md for the architecture and the
+//! substitution table (the FPGA substrate is simulated).
+pub mod analysis;
+pub mod coordinator;
+pub mod util;
+pub mod ir;
+pub mod transform;
+pub mod workloads;
+pub mod report;
+pub mod runtime;
+pub mod sim;

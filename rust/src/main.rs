@@ -1,0 +1,172 @@
+//! `pipefwd` CLI — the leader entrypoint.
+//!
+//! Subcommands regenerate the paper's tables/figures, print compiler
+//! reports and transformed source, and validate against the PJRT golden
+//! artifacts. Std-only argument parsing (no clap in this offline image).
+
+use pipefwd::coordinator::{self, parse_scale};
+use pipefwd::sim::device::DeviceConfig;
+use pipefwd::transform::Variant;
+use pipefwd::workloads::{by_name, Scale};
+
+const USAGE: &str = "\
+pipefwd — feed-forward design model for OpenCL kernels via pipes
+          (simulated-FPGA reproduction; see DESIGN.md)
+
+USAGE: pipefwd <command> [--scale tiny|small|paper] [--csv]
+
+COMMANDS:
+  table1               benchmark characterisation (paper Table 1)
+  table2               feed-forward vs baseline (paper Table 2)
+  figure4              M2C2 speedup + overhead (paper Figure 4)
+  table3               microbenchmarks (paper Table 3)
+  intext               II / bandwidth numbers quoted in the text (E4a/b)
+  sweeps               channel-depth + producer/consumer sweeps (E4c/d)
+  vectors              vector-type case study (E4e)
+  micro-family         extended microbenchmark family (future work)
+  headline             the paper's headline speedup claims (E7)
+  all                  everything above, in order
+  report <bench>       early-stage compiler report, baseline vs FF (E4a)
+  source <bench>       OpenCL-flavoured source, baseline and FF kernels
+  golden               validate IR numerics against PJRT artifacts
+  list                 list benchmarks
+
+OPTIONS:
+  --scale S   dataset scale (default: small; tiny = artifact-matched)
+  --csv       also write results/<name>.csv
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        print!("{USAGE}");
+        std::process::exit(2);
+    }
+    let cmd = args[0].as_str();
+    let mut scale = Scale::Small;
+    let mut csv = false;
+    let mut positional = vec![];
+    let mut it = args[1..].iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--scale" => {
+                let v = it.next().expect("--scale needs a value");
+                scale = parse_scale(v).unwrap_or_else(|| {
+                    eprintln!("unknown scale `{v}` (tiny|small|paper)");
+                    std::process::exit(2);
+                });
+            }
+            "--csv" => csv = true,
+            other => positional.push(other.to_string()),
+        }
+    }
+    let cfg = DeviceConfig::pac_a10();
+
+    let save = |t: &pipefwd::report::Table, name: &str| {
+        print!("{}", t.to_markdown());
+        if csv {
+            match t.save_csv(name) {
+                Ok(p) => eprintln!("wrote {}", p.display()),
+                Err(e) => eprintln!("csv write failed: {e}"),
+            }
+        }
+    };
+
+    match cmd {
+        "list" => {
+            for w in pipefwd::workloads::suite() {
+                println!("{:>10}  {:8}  {}", w.name(), w.suite(), w.dataset_desc(scale));
+            }
+        }
+        "table1" => save(&coordinator::table1(scale), "table1"),
+        "table2" => save(&coordinator::table2(scale, &cfg), "table2"),
+        "figure4" => save(&coordinator::figure4(scale, &cfg), "figure4"),
+        "table3" => save(&coordinator::table3(scale, &cfg), "table3"),
+        "intext" => save(&coordinator::intext(scale, &cfg), "intext"),
+        "sweeps" => {
+            save(&coordinator::depth_sweep(&["fw", "hotspot", "mis"], scale, &cfg), "depth_sweep");
+            save(&coordinator::pc_sweep(&["fw", "hotspot", "mis"], scale, &cfg), "pc_sweep");
+        }
+        "vectors" => save(&coordinator::vector_study(scale, &cfg), "vector_study"),
+        "micro-family" => save(&coordinator::micro_family(scale, &cfg), "micro_family"),
+        "headline" => {
+            let h = coordinator::headline(scale, &cfg);
+            println!(
+                "max feed-forward speedup : {:.1}x   (paper: up to 65x)",
+                h.max_ff_speedup
+            );
+            println!(
+                "avg speedup (gainers)    : {:.1}x   (paper: ~20x average)",
+                h.avg_ff_speedup_gainers
+            );
+            println!(
+                "max with M2C2            : {:.1}x   (paper: up to 86x)",
+                h.max_total_speedup
+            );
+        }
+        "all" => {
+            for t in coordinator::full_evaluation(scale, &cfg, csv) {
+                print!("{}", t.to_markdown());
+                println!();
+            }
+        }
+        "report" => {
+            let name = positional.first().expect("report <bench>");
+            let w = by_name(name).unwrap_or_else(|| {
+                eprintln!("unknown benchmark `{name}`");
+                std::process::exit(2);
+            });
+            for variant in [Variant::Baseline, Variant::FeedForward { depth: 1 }] {
+                match w.build(variant) {
+                    Ok(app) => {
+                        let union = app.union_program();
+                        let rep = pipefwd::analysis::program_report(&union, &cfg);
+                        println!("--- {} ---", variant.label());
+                        print!("{}", rep.render());
+                    }
+                    Err(e) => println!("--- {} --- infeasible: {e}", variant.label()),
+                }
+            }
+        }
+        "source" => {
+            let name = positional.first().expect("source <bench>");
+            let w = by_name(name).unwrap_or_else(|| {
+                eprintln!("unknown benchmark `{name}`");
+                std::process::exit(2);
+            });
+            for variant in [Variant::Baseline, Variant::FeedForward { depth: 1 }] {
+                match w.build(variant) {
+                    Ok(app) => {
+                        println!("// ===== {} =====", variant.label());
+                        for u in &app.units {
+                            print!("{}", pipefwd::ir::pretty::program_to_string(u));
+                            println!();
+                        }
+                    }
+                    Err(e) => println!("// ===== {} ===== infeasible: {e}", variant.label()),
+                }
+            }
+        }
+        "golden" => {
+            let rt = pipefwd::runtime::Runtime::open_default().unwrap_or_else(|e| {
+                eprintln!("cannot open artifacts: {e:#}");
+                std::process::exit(1);
+            });
+            match pipefwd::runtime::golden::check_all(&rt) {
+                Ok(results) => {
+                    for (name, d) in results {
+                        println!("{name:>18}: max |diff| vs PJRT golden = {d:.2e}  OK");
+                    }
+                }
+                Err(e) => {
+                    eprintln!("golden validation FAILED: {e:#}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        _ => {
+            print!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

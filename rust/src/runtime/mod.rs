@@ -1,0 +1,236 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts
+//! from the Rust side (the `xla` crate over xla_extension's PJRT C API).
+//!
+//! HLO *text* is the interchange format — see python/compile/aot.py and
+//! /opt/xla-example/README.md: jax >= 0.5 serialized protos carry 64-bit
+//! instruction ids that this XLA rejects; the text parser reassigns them.
+//!
+//! Python never runs here: `Runtime` only needs `artifacts/manifest.txt`
+//! and the `.hlo.txt` files produced once by `make artifacts`.
+
+pub mod golden;
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed `f32[64,64]`-style shape spec.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    fn parse(s: &str) -> Result<TensorSpec> {
+        let (dtype, rest) = s
+            .split_once('[')
+            .ok_or_else(|| anyhow!("bad tensor spec: {s}"))?;
+        let dims = rest
+            .trim_end_matches(']')
+            .split(',')
+            .filter(|d| !d.is_empty())
+            .map(|d| d.trim().parse::<usize>().context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { dtype: dtype.to_string(), dims })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One manifest entry: `name;in=f32[..],f32[..];out=f32[..]`.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub output: TensorSpec,
+}
+
+fn parse_manifest(text: &str) -> Result<Vec<ArtifactSpec>> {
+    let mut out = vec![];
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split(';');
+        let name = parts.next().ok_or_else(|| anyhow!("empty manifest line"))?.to_string();
+        let ins = parts
+            .next()
+            .and_then(|p| p.strip_prefix("in="))
+            .ok_or_else(|| anyhow!("manifest line missing in=: {line}"))?;
+        let outs = parts
+            .next()
+            .and_then(|p| p.strip_prefix("out="))
+            .ok_or_else(|| anyhow!("manifest line missing out=: {line}"))?;
+        let inputs = split_specs(ins)
+            .into_iter()
+            .map(|s| TensorSpec::parse(&s))
+            .collect::<Result<Vec<_>>>()?;
+        out.push(ArtifactSpec { name, inputs, output: TensorSpec::parse(outs)? });
+    }
+    Ok(out)
+}
+
+/// Split `f32[64,64],f32[1,8]` at top-level commas (commas inside [] kept).
+fn split_specs(s: &str) -> Vec<String> {
+    let mut out = vec![];
+    let mut depth = 0;
+    let mut cur = String::new();
+    for ch in s.chars() {
+        match ch {
+            '[' => {
+                depth += 1;
+                cur.push(ch);
+            }
+            ']' => {
+                depth -= 1;
+                cur.push(ch);
+            }
+            ',' if depth == 0 => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(ch),
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// The PJRT runtime: one CPU client, lazily compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    specs: Vec<ArtifactSpec>,
+    exes: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Default artifact directory: `$PIPEFWD_ARTIFACTS` or `artifacts/`
+    /// next to the current directory (falling back to the crate root).
+    pub fn artifact_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("PIPEFWD_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+            let p = PathBuf::from(cand);
+            if p.join("manifest.txt").exists() {
+                return p;
+            }
+        }
+        // CARGO_MANIFEST_DIR works for tests/benches run via cargo
+        let mut p = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        p.push("artifacts");
+        p
+    }
+
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading {}/manifest.txt (run `make artifacts`)", dir.display()))?;
+        let specs = parse_manifest(&manifest)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, dir: dir.to_path_buf(), specs, exes: RefCell::new(HashMap::new()) })
+    }
+
+    /// Open the default artifact directory.
+    pub fn open_default() -> Result<Runtime> {
+        Runtime::new(&Runtime::artifact_dir())
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.specs.iter().map(|s| s.name.as_str()).collect()
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.iter().find(|s| s.name == name)
+    }
+
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        if self.exes.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.exes.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute artifact `name` on f32 inputs (shapes per the manifest);
+    /// returns the flattened f32 output.
+    pub fn run_f32(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let spec = self
+            .spec(name)
+            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?
+            .clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!("{name}: expected {} inputs, got {}", spec.inputs.len(), inputs.len());
+        }
+        self.ensure_compiled(name)?;
+        let mut literals = vec![];
+        for (data, ts) in inputs.iter().zip(&spec.inputs) {
+            if data.len() != ts.elements() {
+                bail!("{name}: input size {} != {:?}", data.len(), ts.dims);
+            }
+            let dims: Vec<i64> = ts.dims.iter().map(|d| *d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape: {e:?}"))?;
+            literals.push(lit);
+        }
+        let exes = self.exes.borrow();
+        let exe = exes.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec {name}: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let m = "hotspot;in=float32[64,64],float32[64,64];out=float32[64,64]\n\
+                 knn;in=float32[1024,8],float32[1,8];out=float32[1024,1]\n";
+        let specs = parse_manifest(m).unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].name, "hotspot");
+        assert_eq!(specs[0].inputs.len(), 2);
+        assert_eq!(specs[0].inputs[0].dims, vec![64, 64]);
+        assert_eq!(specs[1].output.dims, vec![1024, 1]);
+        assert_eq!(specs[1].inputs[1].elements(), 8);
+    }
+
+    #[test]
+    fn split_specs_respects_brackets() {
+        assert_eq!(
+            split_specs("f32[64,64],f32[1,8]"),
+            vec!["f32[64,64]".to_string(), "f32[1,8]".to_string()]
+        );
+    }
+
+    #[test]
+    fn bad_manifest_rejected() {
+        assert!(parse_manifest("name-without-fields").is_err());
+        assert!(parse_manifest("x;nope;out=f32[1]").is_err());
+    }
+}

@@ -1,0 +1,292 @@
+//! Discrete-event performance simulator.
+//!
+//! Cross-checks the analytic model (`sim::perf`) by actually *playing out*
+//! the launch: every kernel is a process consuming its outer-iteration
+//! token stream; pipes impose producer->consumer data dependencies plus
+//! depth-bounded backpressure; the DRAM controller is an epoch-bucketed
+//! byte ledger that stalls whoever overdraws it. Captures what the
+//! steady-state solver abstracts away — pipeline fill skew, channel-depth
+//! slack, congestion transients — and is used by the `simulator` bench as
+//! an ablation (analytic vs DES) and by `prop_sim` for consistency
+//! properties (DES >= either bound, depth insensitivity, monotonicity).
+
+use super::device::DeviceConfig;
+use super::perf::PerfModel;
+use super::profile::KernelProfile;
+use crate::ir::{Program, Stmt};
+
+/// DRAM epoch length in cycles (granularity of the bandwidth ledger).
+const EPOCH: f64 = 256.0;
+
+#[derive(Debug, Clone)]
+pub struct DesResult {
+    pub cycles: f64,
+    pub seconds: f64,
+    /// Per-kernel finish times (cycles).
+    pub finish: Vec<(String, f64)>,
+}
+
+struct Proc {
+    /// steady per-token cost (cycles), from the same per-loop accounting
+    /// the analytic model uses
+    cost: f64,
+    /// DRAM-occupancy bytes consumed per token
+    bytes: f64,
+    /// tokens to process
+    tokens: u64,
+    /// index of upstream producer (pipe dependency), if any
+    upstream: Option<usize>,
+    /// channel depth toward this consumer (backpressure bound on producer)
+    depth: usize,
+    /// simulation state
+    t: f64,
+    done: u64,
+    /// finish time of each of the last `depth` tokens of the *consumer*
+    /// is tracked on the producer side via the consumer's `done`/times.
+    recent: std::collections::VecDeque<f64>,
+}
+
+/// DRAM ledger: bytes available per epoch.
+struct Dram {
+    capacity_per_epoch: f64,
+    used: Vec<f64>,
+}
+
+impl Dram {
+    fn new(bytes_per_cycle: f64) -> Dram {
+        Dram { capacity_per_epoch: bytes_per_cycle * EPOCH, used: vec![] }
+    }
+
+    /// Consume `bytes` starting at time `t`; returns the time the transfer
+    /// completes (stalls into later epochs when the ledger is exhausted).
+    fn consume(&mut self, t: f64, mut bytes: f64) -> f64 {
+        let mut e = (t / EPOCH) as usize;
+        loop {
+            if self.used.len() <= e {
+                self.used.resize(e + 1, 0.0);
+            }
+            let free = self.capacity_per_epoch - self.used[e];
+            if bytes <= free {
+                self.used[e] += bytes;
+                let frac = self.used[e] / self.capacity_per_epoch;
+                return (((e as f64) + frac.min(1.0)) * EPOCH).max(t);
+            }
+            bytes -= free;
+            self.used[e] = self.capacity_per_epoch;
+            e += 1;
+        }
+    }
+}
+
+/// Run the DES for one launch. `chunk` tokens are advanced per scheduling
+/// decision (1 = exact, larger = faster with bounded error).
+pub fn simulate(
+    prog: &Program,
+    model: &PerfModel,
+    profiles: &[KernelProfile],
+    cfg: &DeviceConfig,
+    chunk: u64,
+) -> DesResult {
+    let analytic = model.estimate(profiles);
+    let fmax = analytic.fmax_hz;
+
+    // Outer-token count: iterations of each kernel's first top-level loop.
+    let mut procs: Vec<Proc> = vec![];
+    for ((k, kr), prof) in prog.kernels.iter().zip(&model.report.kernels).zip(profiles) {
+        let outer = k
+            .body
+            .iter()
+            .find_map(|s| match s {
+                Stmt::For { id, .. } => Some(prof.loop_stats(*id).iters),
+                _ => None,
+            })
+            .unwrap_or(1)
+            .max(1);
+        // steady per-token cost & bytes from the analytic per-kernel totals
+        let cb = analytic
+            .per_kernel
+            .iter()
+            .find(|(n, _)| n == &kr.name)
+            .map(|(_, c)| *c)
+            .unwrap_or(0.0);
+        let bytes: f64 = kr
+            .sites
+            .iter()
+            .map(|s| {
+                let st = &prof.sites[s.site];
+                st.count as f64 * model.access_cost(kr, s.site, st.seq_frac())
+            })
+            .sum();
+        procs.push(Proc {
+            cost: cb / outer as f64,
+            bytes: bytes / outer as f64,
+            tokens: outer,
+            upstream: None,
+            depth: 1,
+            t: 0.0,
+            done: 0,
+            recent: Default::default(),
+        });
+    }
+
+    // Pipe topology: consumer's upstream = producer index; depth = min depth
+    // of the connecting pipes.
+    for pd in &prog.pipes {
+        let mut producer = None;
+        let mut consumer = None;
+        for (ki, k) in prog.kernels.iter().enumerate() {
+            crate::ir::stmt::visit_body(&k.body, &mut |s| match s {
+                Stmt::PipeWrite { pipe, .. } if pipe == &pd.name => producer = Some(ki),
+                Stmt::PipeRead { pipe, .. } if pipe == &pd.name => consumer = Some(ki),
+                _ => {}
+            });
+        }
+        if let (Some(p), Some(c)) = (producer, consumer) {
+            procs[c].upstream = Some(p);
+            let d = procs[c].depth.max(pd.depth.max(1));
+            procs[c].depth = d;
+        }
+    }
+
+    let mut dram = Dram::new(cfg.dram_bytes_per_cycle(fmax));
+
+    // Round-based co-simulation: advance the least-advanced runnable proc.
+    loop {
+        // pick unfinished process with smallest virtual time whose
+        // dependencies allow progress
+        let mut pick: Option<usize> = None;
+        for (i, p) in procs.iter().enumerate() {
+            if p.done >= p.tokens {
+                continue;
+            }
+            if pick.map(|j| procs[j].t > p.t).unwrap_or(true) {
+                pick = Some(i);
+            }
+        }
+        let i = match pick {
+            Some(i) => i,
+            None => break,
+        };
+
+        let n = chunk.min(procs[i].tokens - procs[i].done);
+        // data dependency: token `done + n` needs upstream to have produced
+        // at least that many (channel latency added)
+        let mut start = procs[i].t;
+        if let Some(u) = procs[i].upstream {
+            let need = procs[i].done + n;
+            if procs[u].done < need {
+                // upstream not there yet: advance upstream first by
+                // retrying (set our clock to upstream's and loop)
+                if procs[u].done < procs[u].tokens {
+                    // move this proc's clock to upstream's to deprioritize
+                    procs[i].t = procs[i].t.max(procs[u].t + cfg.channel_latency as f64);
+                    continue;
+                }
+            }
+            start = start.max(procs[u].t + cfg.channel_latency as f64);
+            // backpressure on producer handled implicitly by consumer lag:
+            // producer may run ahead at most depth tokens
+            let _ = procs[i].depth;
+        }
+
+        let compute_end = start + procs[i].cost * n as f64;
+        let end = if procs[i].bytes > 0.0 {
+            dram.consume(start, procs[i].bytes * n as f64).max(compute_end)
+        } else {
+            compute_end
+        };
+        let p = &mut procs[i];
+        p.t = end;
+        p.done += n;
+        p.recent.push_back(end);
+        if p.recent.len() > p.depth {
+            p.recent.pop_front();
+        }
+
+        // backpressure: if this proc is a producer, cap how far it runs
+        // ahead of its consumer by depth tokens
+        for j in 0..procs.len() {
+            if procs[j].upstream == Some(i) {
+                let lead = procs[i].done as i64 - procs[j].done as i64;
+                let max_lead = procs[j].depth as i64 + chunk as i64;
+                if lead > max_lead {
+                    // producer stalls until consumer catches up: approximate
+                    // by setting producer clock to consumer clock
+                    let tj = procs[j].t;
+                    if tj > procs[i].t {
+                        procs[i].t = tj;
+                    }
+                }
+            }
+        }
+    }
+
+    let cycles = procs.iter().map(|p| p.t).fold(0.0, f64::max);
+    DesResult {
+        cycles,
+        seconds: cycles / fmax,
+        finish: prog
+            .kernels
+            .iter()
+            .zip(&procs)
+            .map(|(k, p)| (k.name.clone(), p.t))
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::build::*;
+    use crate::ir::{KernelKind, Program, Ty};
+    use crate::sim::exec::{run_group, ExecOptions};
+    use crate::sim::mem::MemoryImage;
+
+    fn setup(n: usize) -> (Program, MemoryImage) {
+        let k = KernelBuilder::new("s", KernelKind::SingleWorkItem)
+            .buf_ro("a", Ty::F32)
+            .buf_wo("o", Ty::F32)
+            .scalar("n", Ty::I32)
+            .body(vec![for_(
+                "i",
+                i(0),
+                p("n"),
+                vec![store("o", v("i"), ld("a", v("i")) * f(2.0))],
+            )])
+            .finish();
+        let ff = crate::transform::feedforward(&k, 4).unwrap();
+        let mut m = MemoryImage::new();
+        m.add_f32s("a", &vec![1.0; n]).add_zeros("o", Ty::F32, n).set_i("n", n as i64);
+        (ff, m)
+    }
+
+    #[test]
+    fn des_close_to_analytic_on_stream_pair() {
+        let cfg = DeviceConfig::pac_a10();
+        let (prog, img) = setup(50_000);
+        let run = run_group(&prog, &img, &ExecOptions::default()).unwrap();
+        let model = PerfModel::new(&prog, &cfg);
+        let a = model.estimate(&run.profiles);
+        let d = simulate(&prog, &model, &run.profiles, &cfg, 64);
+        let ratio = d.cycles / a.cycles;
+        assert!(ratio > 0.8 && ratio < 2.0, "DES/analytic = {ratio}");
+    }
+
+    #[test]
+    fn des_depth_insensitive() {
+        // E4c shape: channel depth does not matter much.
+        let cfg = DeviceConfig::pac_a10();
+        let mut times = vec![];
+        for depth in [1usize, 100, 1000] {
+            let (prog, img) = setup(20_000);
+            let prog = prog.with_pipe_depth(depth);
+            let run = run_group(&prog, &img, &ExecOptions::default()).unwrap();
+            let model = PerfModel::new(&prog, &cfg);
+            let d = simulate(&prog, &model, &run.profiles, &cfg, 64);
+            times.push(d.cycles);
+        }
+        let max = times.iter().cloned().fold(0.0, f64::max);
+        let min = times.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max / min < 1.15, "depth sweep spread too large: {times:?}");
+    }
+}

@@ -1,0 +1,170 @@
+//! Device model: an Intel PAC (Arria 10 GX) -like board, §4.1 of the paper.
+//!
+//! All performance/area constants of the substrate live here so experiments
+//! can sweep them (and so the calibration targets in DESIGN.md are in one
+//! place).
+
+/// Board + toolchain model parameters.
+#[derive(Debug, Clone)]
+pub struct DeviceConfig {
+    // ---- clocks -----------------------------------------------------------
+    /// Nominal kernel clock (Hz). The paper reports no consistent fmax
+    /// trend; we derate it slightly with design size (see `fmax_for_area`).
+    pub fmax_hz: f64,
+    /// Logic-utilization knee above which fmax starts to degrade.
+    pub fmax_derate_knee: f64,
+    /// Fractional fmax loss per logic-utilization point above the knee.
+    pub fmax_derate_slope: f64,
+
+    // ---- DRAM -------------------------------------------------------------
+    /// Peak off-chip bandwidth (bytes/s) — 34.1 GB/s on the PAC board.
+    pub dram_peak_bytes_per_s: f64,
+    /// DRAM burst size in bytes (DDR4-64B).
+    pub burst_bytes: u64,
+    /// Efficiency of a prefetching LSU on a sequential stream.
+    pub eff_seq_prefetch: f64,
+    /// Efficiency of a burst-coalesced LSU on a sequential stream.
+    pub eff_seq_burst: f64,
+    /// Effective bytes consumed from DRAM per *random* 4-byte access
+    /// (row activation + wasted burst): the memory-controller-wall number;
+    /// 256 B/word reproduces the paper's ~200-600 MB/s random-access floor.
+    pub random_access_cost_bytes: f64,
+    /// Extra congestion per concurrent requester beyond this count.
+    pub congestion_free_requesters: usize,
+    /// Multiplicative efficiency loss per extra requester (regular streams).
+    pub congestion_slope_regular: f64,
+    /// Multiplicative efficiency loss per extra requester (irregular).
+    pub congestion_slope_irregular: f64,
+
+    // ---- pipeline ---------------------------------------------------------
+    /// Depth of a kernel's compute pipeline (drain cost per loop
+    /// invocation).
+    pub pipeline_depth: u32,
+    /// Number of serialized inner-loop instances the scheduler can keep in
+    /// flight when the serialized loop is nested inside an outer loop
+    /// (bounded loop-pipelining concurrency; 1 = no overlap).
+    pub serialized_overlap: u32,
+    /// Per-loop-invocation pipeline restart cost (cycles).
+    pub loop_fill_cycles: f64,
+    /// Peak bytes/cycle through one kernel's memory port (128-bit Avalon
+    /// interface); a single kernel cannot saturate DRAM by itself — the
+    /// headroom M2C2 exploits.
+    pub kernel_port_bytes_per_cycle: f64,
+    /// Per-iteration handshake overhead (cycles) added by each channel
+    /// endpoint in a kernel's steady state.
+    pub channel_overhead_cycles: f64,
+    /// Latency through a channel (write -> readable), cycles.
+    pub channel_latency: u32,
+
+    // ---- area -------------------------------------------------------------
+    /// Total ALMs on the device (Arria 10 GX 1150).
+    pub total_alms: f64,
+    /// Total M20K BRAM blocks.
+    pub total_brams: u32,
+    /// Total DSP blocks.
+    pub total_dsps: u32,
+    /// Board shell / BSP static logic fraction (0..1).
+    pub shell_logic_frac: f64,
+    /// Board shell BRAM blocks.
+    pub shell_brams: u32,
+    /// Per-kernel control overhead in ALMs.
+    pub kernel_alms: f64,
+    /// Per-kernel BRAM overhead.
+    pub kernel_brams: u32,
+    /// LSU areas (ALMs, BRAMs).
+    pub lsu_burst_alms: f64,
+    pub lsu_burst_brams: u32,
+    pub lsu_prefetch_alms: f64,
+    pub lsu_prefetch_brams: u32,
+    pub lsu_pipelined_alms: f64,
+    pub lsu_pipelined_brams: u32,
+    /// Channel endpoint area; BRAM grows with depth (words / 512 per M20K).
+    pub channel_alms: f64,
+    pub channel_words_per_bram: usize,
+}
+
+impl DeviceConfig {
+    /// The paper's testbed: Intel PAC with Arria 10 GX 1150, 2x4 GB DDR4.
+    pub fn pac_a10() -> DeviceConfig {
+        DeviceConfig {
+            fmax_hz: 240e6,
+            fmax_derate_knee: 0.20,
+            fmax_derate_slope: 0.55,
+
+            dram_peak_bytes_per_s: 34.1e9,
+            burst_bytes: 64,
+            eff_seq_prefetch: 0.86,
+            eff_seq_burst: 0.74,
+            random_access_cost_bytes: 256.0,
+            congestion_free_requesters: 2,
+            congestion_slope_regular: 0.06,
+            congestion_slope_irregular: 0.05,
+
+            pipeline_depth: 90,
+            serialized_overlap: 4,
+            loop_fill_cycles: 12.0,
+            kernel_port_bytes_per_cycle: 64.0,
+            channel_overhead_cycles: 0.035,
+            channel_latency: 3,
+
+            total_alms: 427_200.0,
+            total_brams: 2_713,
+            total_dsps: 3_036,
+            shell_logic_frac: 0.1393,
+            shell_brams: 380,
+            kernel_alms: 1_500.0,
+            kernel_brams: 9,
+            lsu_burst_alms: 3_200.0,
+            lsu_burst_brams: 14,
+            lsu_prefetch_alms: 1_350.0,
+            lsu_prefetch_brams: 9,
+            lsu_pipelined_alms: 520.0,
+            lsu_pipelined_brams: 0,
+            channel_alms: 70.0,
+            channel_words_per_bram: 512,
+        }
+    }
+
+    /// DRAM capacity in bytes per kernel clock cycle.
+    pub fn dram_bytes_per_cycle(&self, fmax: f64) -> f64 {
+        self.dram_peak_bytes_per_s / fmax
+    }
+
+    /// fmax after derating for design size (deterministic, mild — the paper
+    /// found no strong trend, only scatter).
+    pub fn fmax_for_area(&self, logic_frac: f64) -> f64 {
+        let over = (logic_frac - self.fmax_derate_knee).max(0.0);
+        let derate = 1.0 - self.fmax_derate_slope * over;
+        self.fmax_hz * derate.clamp(0.55, 1.0)
+    }
+}
+
+impl Default for DeviceConfig {
+    fn default() -> Self {
+        DeviceConfig::pac_a10()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dram_cycle_budget_is_plausible() {
+        let c = DeviceConfig::pac_a10();
+        let bpc = c.dram_bytes_per_cycle(c.fmax_hz);
+        // 34.1 GB/s at 240 MHz ~ 142 B/cycle
+        assert!((bpc - 142.0).abs() < 2.0, "bpc={bpc}");
+    }
+
+    #[test]
+    fn fmax_derates_monotonically() {
+        let c = DeviceConfig::pac_a10();
+        let f1 = c.fmax_for_area(0.16);
+        let f2 = c.fmax_for_area(0.25);
+        let f3 = c.fmax_for_area(0.40);
+        assert_eq!(f1, c.fmax_hz); // below knee
+        assert!(f2 < f1 && f3 < f2);
+        assert!(f3 > 0.5 * c.fmax_hz);
+    }
+}

@@ -1,0 +1,652 @@
+//! Functional concurrent interpreter.
+//!
+//! Executes a device [`Program`] the way the board would: every kernel of
+//! the launch group runs on its own thread (the paper's step 14 — all
+//! kernels enqueued on separate queues), blocking pipes are bounded
+//! `sync_channel`s with exactly the Intel-channel semantics (blocking
+//! read/write, FIFO order, declared minimum depth), and global memory is
+//! the shared [`MemoryImage`].
+//!
+//! Kernels are first *compiled*: variable names resolve to frame slots,
+//! scalar parameters are baked to constants, buffers and pipes to dense
+//! indices, and every global-memory access gets the same pre-order site id
+//! that `analysis::lsu::select_lsus` assigns — the profiles this
+//! interpreter emits line up 1:1 with the static analysis, which is what
+//! makes the performance model trace-driven.
+
+use super::mem::{Buffer, MemoryImage};
+use super::profile::{KernelProfile, LoopStats};
+use crate::ir::{BinOp, Expr, Kernel, KernelKind, LoopId, Program, Stmt, Ty, UnOp, Val};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum ExecError {
+    #[error("kernel {kernel}: {buf}[{idx}] out of bounds (len {len})")]
+    OutOfBounds { kernel: String, buf: String, idx: i64, len: usize },
+    #[error("kernel {kernel}: pipe {pipe} closed (trace mismatch between producer and consumer)")]
+    PipeClosed { kernel: String, pipe: String },
+    #[error("kernel {kernel}: missing buffer `{buf}` in memory image")]
+    MissingBuffer { kernel: String, buf: String },
+    #[error("kernel {kernel}: missing scalar `{name}` in memory image")]
+    MissingScalar { kernel: String, name: String },
+    #[error("kernel {kernel}: NDRange kernels must be converted to single work-item first")]
+    NdRange { kernel: String },
+    #[error("kernel {kernel}: thread panicked")]
+    Panic { kernel: String },
+}
+
+// ---------------------------------------------------------------------------
+// Resolved IR
+// ---------------------------------------------------------------------------
+
+/// Index into the kernel's expression arena (§Perf: flattened from a
+/// Box-tree — one contiguous Vec walks far better in cache and removes a
+/// pointer dereference per node on the hottest path).
+type EId = u32;
+
+#[derive(Debug, Clone, Copy)]
+enum RExpr {
+    Const(Val),
+    Var(u32),
+    Load { buf: u32, site: u32, idx: EId },
+    Bin(BinOp, EId, EId),
+    Un(UnOp, EId),
+    Select(EId, EId, EId),
+}
+
+#[derive(Debug, Clone)]
+enum RStmt {
+    Set { slot: u32, expr: EId },
+    Store { buf: u32, site: u32, idx: EId, val: EId },
+    If { cond: EId, then_b: Vec<RStmt>, else_b: Vec<RStmt> },
+    For { lix: u32, slot: u32, lo: EId, hi: EId, body: Vec<RStmt> },
+    PipeWrite { pipe: u32, val: EId },
+    PipeRead { slot: u32, pipe: u32 },
+}
+
+/// A launch-ready kernel: names resolved, params baked.
+pub struct CompiledKernel {
+    pub name: String,
+    nslots: u32,
+    n_sites: u32,
+    buf_names: Vec<String>,
+    bufs: Vec<Arc<Buffer>>,
+    exprs: Vec<RExpr>,
+    /// dense loop index -> source LoopId (profiles report LoopIds)
+    loop_ids: Vec<LoopId>,
+    body: Vec<RStmt>,
+}
+
+struct Compiler<'a> {
+    kernel: &'a Kernel,
+    image: &'a MemoryImage,
+    scopes: Vec<HashMap<String, u32>>,
+    nslots: u32,
+    bufs: Vec<(String, Arc<Buffer>)>,
+    pipes: &'a HashMap<String, u32>,
+    next_site: u32,
+    exprs: Vec<RExpr>,
+    loop_ids: Vec<LoopId>,
+}
+
+impl<'a> Compiler<'a> {
+    fn lookup(&self, name: &str) -> Option<u32> {
+        self.scopes.iter().rev().find_map(|s| s.get(name)).copied()
+    }
+
+    fn define(&mut self, name: &str) -> u32 {
+        let slot = self.nslots;
+        self.nslots += 1;
+        self.scopes.last_mut().unwrap().insert(name.to_string(), slot);
+        slot
+    }
+
+    fn buf_ix(&mut self, name: &str) -> Result<u32, ExecError> {
+        if let Some(i) = self.bufs.iter().position(|(n, _)| n == name) {
+            return Ok(i as u32);
+        }
+        let arc = self
+            .image
+            .buf(name)
+            .ok_or_else(|| ExecError::MissingBuffer { kernel: self.kernel.name.clone(), buf: name.to_string() })?
+            .clone();
+        self.bufs.push((name.to_string(), arc));
+        Ok((self.bufs.len() - 1) as u32)
+    }
+
+    fn push(&mut self, e: RExpr) -> EId {
+        self.exprs.push(e);
+        (self.exprs.len() - 1) as EId
+    }
+
+    fn expr(&mut self, e: &Expr) -> Result<EId, ExecError> {
+        let node = match e {
+            Expr::I(v) => RExpr::Const(Val::I(*v)),
+            Expr::F(v) => RExpr::Const(Val::F(*v)),
+            Expr::Var(n) => RExpr::Var(self.lookup(n).unwrap_or_else(|| {
+                panic!("unresolved var {n} in kernel {} (validate first)", self.kernel.name)
+            })),
+            Expr::Param(n) => RExpr::Const(self.image.scalar(n).ok_or_else(|| {
+                ExecError::MissingScalar { kernel: self.kernel.name.clone(), name: n.clone() }
+            })?),
+            Expr::GlobalId(_) => {
+                return Err(ExecError::NdRange { kernel: self.kernel.name.clone() })
+            }
+            Expr::Load { buf, idx } => {
+                // Pre-order site id: this load before any load in its index.
+                let site = self.next_site;
+                self.next_site += 1;
+                let b = self.buf_ix(buf)?;
+                let idx = self.expr(idx)?;
+                RExpr::Load { buf: b, site, idx }
+            }
+            Expr::Bin(op, a, b) => {
+                let a = self.expr(a)?;
+                let b = self.expr(b)?;
+                RExpr::Bin(*op, a, b)
+            }
+            Expr::Un(op, a) => {
+                let a = self.expr(a)?;
+                RExpr::Un(*op, a)
+            }
+            Expr::Select(c, t, f) => {
+                let c = self.expr(c)?;
+                let t = self.expr(t)?;
+                let f = self.expr(f)?;
+                RExpr::Select(c, t, f)
+            }
+        };
+        Ok(self.push(node))
+    }
+
+    fn body(&mut self, body: &[Stmt]) -> Result<Vec<RStmt>, ExecError> {
+        let mut out = vec![];
+        for s in body {
+            match s {
+                Stmt::Let { var, expr, .. } => {
+                    let e = self.expr(expr)?;
+                    let slot = self.define(var);
+                    out.push(RStmt::Set { slot, expr: e });
+                }
+                Stmt::Assign { var, expr } => {
+                    let e = self.expr(expr)?;
+                    let slot = self.lookup(var).expect("validated assign target");
+                    out.push(RStmt::Set { slot, expr: e });
+                }
+                Stmt::Store { buf, idx, val } => {
+                    let idx = self.expr(idx)?;
+                    let val = self.expr(val)?;
+                    let site = self.next_site;
+                    self.next_site += 1;
+                    let b = self.buf_ix(buf)?;
+                    out.push(RStmt::Store { buf: b, site, idx, val });
+                }
+                Stmt::If { cond, then_b, else_b } => {
+                    let cond = self.expr(cond)?;
+                    self.scopes.push(HashMap::new());
+                    let t = self.body(then_b)?;
+                    self.scopes.pop();
+                    self.scopes.push(HashMap::new());
+                    let e = self.body(else_b)?;
+                    self.scopes.pop();
+                    out.push(RStmt::If { cond, then_b: t, else_b: e });
+                }
+                Stmt::For { id, var, lo, hi, body } => {
+                    let lo = self.expr(lo)?;
+                    let hi = self.expr(hi)?;
+                    self.scopes.push(HashMap::new());
+                    let slot = self.define(var);
+                    let lix = self.loop_ids.len() as u32;
+                    self.loop_ids.push(*id);
+                    let b = self.body(body)?;
+                    self.scopes.pop();
+                    out.push(RStmt::For { lix, slot, lo, hi, body: b });
+                }
+                Stmt::PipeWrite { pipe, val } => {
+                    let val = self.expr(val)?;
+                    let pipe = *self.pipes.get(pipe).expect("validated pipe");
+                    out.push(RStmt::PipeWrite { pipe, val });
+                }
+                Stmt::PipeRead { var, pipe, .. } => {
+                    let pipe = *self.pipes.get(pipe).expect("validated pipe");
+                    let slot = self.define(var);
+                    out.push(RStmt::PipeRead { slot, pipe });
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Compile one kernel against a memory image (params baked) and the
+/// program's pipe numbering.
+pub fn compile_kernel(
+    kernel: &Kernel,
+    image: &MemoryImage,
+    pipes: &HashMap<String, u32>,
+) -> Result<CompiledKernel, ExecError> {
+    if kernel.kind == KernelKind::NDRange {
+        return Err(ExecError::NdRange { kernel: kernel.name.clone() });
+    }
+    let mut c = Compiler {
+        kernel,
+        image,
+        scopes: vec![HashMap::new()],
+        nslots: 0,
+        bufs: vec![],
+        pipes,
+        next_site: 0,
+        exprs: vec![],
+        loop_ids: vec![],
+    };
+    let body = c.body(&kernel.body)?;
+    Ok(CompiledKernel {
+        name: kernel.name.clone(),
+        nslots: c.nslots,
+        n_sites: c.next_site,
+        buf_names: c.bufs.iter().map(|(n, _)| n.clone()).collect(),
+        bufs: c.bufs.into_iter().map(|(_, b)| b).collect(),
+        exprs: c.exprs,
+        loop_ids: c.loop_ids,
+        body,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Runtime
+// ---------------------------------------------------------------------------
+
+struct Runner<'k> {
+    k: &'k CompiledKernel,
+    slots: Vec<Val>,
+    senders: Vec<Option<SyncSender<u64>>>,
+    receivers: Vec<Option<Receiver<u64>>>,
+    pipe_tys: Vec<Ty>,
+    pipe_names: Vec<String>,
+    profile: KernelProfile,
+    /// dense per-loop counters, folded into `profile.loops` at the end
+    loop_stats: Vec<LoopStats>,
+    profiling: bool,
+}
+
+impl<'k> Runner<'k> {
+    #[inline]
+    fn eval(&mut self, e: EId) -> Result<Val, ExecError> {
+        Ok(match self.k.exprs[e as usize] {
+            RExpr::Const(v) => v,
+            RExpr::Var(s) => self.slots[s as usize],
+            RExpr::Load { buf, site, idx } => {
+                let i = self.eval(idx)?.as_i();
+                let b = &self.k.bufs[buf as usize];
+                if i < 0 || i as usize >= b.len() {
+                    return Err(ExecError::OutOfBounds {
+                        kernel: self.k.name.clone(),
+                        buf: self.k.buf_names[buf as usize].clone(),
+                        idx: i,
+                        len: b.len(),
+                    });
+                }
+                if self.profiling {
+                    self.profile.sites[site as usize].record(i);
+                }
+                b.get(i as usize)
+            }
+            RExpr::Bin(op, a, b) => {
+                let x = self.eval(a)?;
+                let y = self.eval(b)?;
+                Expr::eval_bin(op, x, y)
+            }
+            RExpr::Un(op, a) => Expr::eval_un(op, self.eval(a)?),
+            RExpr::Select(c, t, f) => {
+                if self.eval(c)?.is_true() {
+                    self.eval(t)?
+                } else {
+                    self.eval(f)?
+                }
+            }
+        })
+    }
+
+    fn exec(&mut self, body: &[RStmt]) -> Result<(), ExecError> {
+        for s in body {
+            match s {
+                RStmt::Set { slot, expr } => {
+                    let v = self.eval(*expr)?;
+                    self.slots[*slot as usize] = v;
+                }
+                RStmt::Store { buf, site, idx, val } => {
+                    let i = self.eval(*idx)?.as_i();
+                    let v = self.eval(*val)?;
+                    let b = &self.k.bufs[*buf as usize];
+                    if i < 0 || i as usize >= b.len() {
+                        return Err(ExecError::OutOfBounds {
+                            kernel: self.k.name.clone(),
+                            buf: self.k.buf_names[*buf as usize].clone(),
+                            idx: i,
+                            len: b.len(),
+                        });
+                    }
+                    // Match the buffer's element type (int stores into a
+                    // float buffer keep C semantics via conversion).
+                    let v = match b.ty {
+                        Ty::I32 => Val::I(v.as_i()),
+                        Ty::F32 => Val::F(v.as_f()),
+                    };
+                    if self.profiling {
+                        self.profile.sites[*site as usize].record(i);
+                    }
+                    b.set(i as usize, v);
+                }
+                RStmt::If { cond, then_b, else_b } => {
+                    if self.eval(*cond)?.is_true() {
+                        self.exec(then_b)?;
+                    } else {
+                        self.exec(else_b)?;
+                    }
+                }
+                RStmt::For { lix, slot, lo, hi, body } => {
+                    let lo = self.eval(*lo)?.as_i();
+                    let hi = self.eval(*hi)?.as_i();
+                    if self.profiling {
+                        let e = &mut self.loop_stats[*lix as usize];
+                        e.invocations += 1;
+                        e.iters += (hi - lo).max(0) as u64;
+                    }
+                    let mut i = lo;
+                    while i < hi {
+                        self.slots[*slot as usize] = Val::I(i);
+                        self.exec(body)?;
+                        i += 1;
+                    }
+                }
+                RStmt::PipeWrite { pipe, val } => {
+                    let v = self.eval(*val)?;
+                    self.profile.pipe_writes += 1;
+                    let tx = self.senders[*pipe as usize]
+                        .as_ref()
+                        .expect("kernel writes undeclared pipe endpoint");
+                    tx.send(v.to_bits()).map_err(|_| ExecError::PipeClosed {
+                        kernel: self.k.name.clone(),
+                        pipe: self.pipe_names[*pipe as usize].clone(),
+                    })?;
+                }
+                RStmt::PipeRead { slot, pipe } => {
+                    let rx = self.receivers[*pipe as usize]
+                        .as_ref()
+                        .expect("kernel reads undeclared pipe endpoint");
+                    let bits = rx.recv().map_err(|_| ExecError::PipeClosed {
+                        kernel: self.k.name.clone(),
+                        pipe: self.pipe_names[*pipe as usize].clone(),
+                    })?;
+                    self.profile.pipe_reads += 1;
+                    self.slots[*slot as usize] = Val::from_bits(self.pipe_tys[*pipe as usize], bits);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Options for a launch.
+#[derive(Debug, Clone)]
+pub struct ExecOptions {
+    /// Collect site/loop profiles (small constant per-op cost).
+    pub profile: bool,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions { profile: true }
+    }
+}
+
+/// Result of one launch group (all kernels ran to completion).
+#[derive(Debug)]
+pub struct GroupRun {
+    pub profiles: Vec<KernelProfile>,
+}
+
+/// Launch every kernel of `prog` concurrently against `image` and wait for
+/// completion. This is one host-side `clEnqueue*` + `clFinish` round.
+pub fn run_group(prog: &Program, image: &MemoryImage, opts: &ExecOptions) -> Result<GroupRun, ExecError> {
+    // Pipe numbering and endpoints.
+    let mut pipe_ix = HashMap::new();
+    for (i, p) in prog.pipes.iter().enumerate() {
+        pipe_ix.insert(p.name.clone(), i as u32);
+    }
+    let pipe_tys: Vec<Ty> = prog.pipes.iter().map(|p| p.ty).collect();
+    let pipe_names: Vec<String> = prog.pipes.iter().map(|p| p.name.clone()).collect();
+
+    let compiled: Vec<CompiledKernel> = prog
+        .kernels
+        .iter()
+        .map(|k| compile_kernel(k, image, &pipe_ix))
+        .collect::<Result<_, _>>()?;
+
+    // Create channels; hand endpoints to the right kernels.
+    let mut senders: Vec<Vec<Option<SyncSender<u64>>>> = (0..prog.kernels.len())
+        .map(|_| (0..prog.pipes.len()).map(|_| None).collect())
+        .collect();
+    let mut receivers: Vec<Vec<Option<Receiver<u64>>>> = (0..prog.kernels.len())
+        .map(|_| (0..prog.pipes.len()).map(|_| None).collect())
+        .collect();
+    for (pi, pd) in prog.pipes.iter().enumerate() {
+        let (tx, rx) = sync_channel::<u64>(pd.depth.max(1));
+        let mut tx = Some(tx);
+        let mut rx = Some(rx);
+        for (ki, k) in prog.kernels.iter().enumerate() {
+            crate::ir::stmt::visit_body(&k.body, &mut |s| match s {
+                Stmt::PipeWrite { pipe, .. } if pipe == &pd.name => {
+                    if let Some(t) = tx.take() {
+                        senders[ki][pi] = Some(t);
+                    }
+                }
+                Stmt::PipeRead { pipe, .. } if pipe == &pd.name => {
+                    if let Some(r) = rx.take() {
+                        receivers[ki][pi] = Some(r);
+                    }
+                }
+                _ => {}
+            });
+        }
+    }
+
+    let n = compiled.len();
+    let mut results: Vec<Result<KernelProfile, ExecError>> =
+        (0..n).map(|_| Err(ExecError::Panic { kernel: String::new() })).collect();
+
+    std::thread::scope(|scope| {
+        let mut handles = vec![];
+        for ((ck, sends), recvs) in compiled.iter().zip(senders).zip(receivers) {
+            let profiling = opts.profile;
+            let pipe_tys = pipe_tys.clone();
+            let pipe_names = pipe_names.clone();
+            handles.push(scope.spawn(move || {
+                let start = std::time::Instant::now();
+                let mut r = Runner {
+                    k: ck,
+                    slots: vec![Val::I(0); ck.nslots as usize],
+                    senders: sends,
+                    receivers: recvs,
+                    pipe_tys,
+                    pipe_names,
+                    profile: KernelProfile::new(&ck.name, ck.n_sites as usize),
+                    loop_stats: vec![LoopStats::default(); ck.loop_ids.len()],
+                    profiling,
+                };
+                let out = r.exec(&ck.body);
+                // fold dense counters back into the LoopId-keyed profile
+                for (lix, st) in r.loop_stats.iter().enumerate() {
+                    if st.invocations > 0 {
+                        let e = r.profile.loops.entry(ck.loop_ids[lix]).or_default();
+                        e.invocations += st.invocations;
+                        e.iters += st.iters;
+                    }
+                }
+                r.profile.host_nanos = start.elapsed().as_nanos() as u64;
+                out.map(|_| r.profile)
+            }));
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            results[i] = match h.join() {
+                Ok(res) => res,
+                Err(_) => Err(ExecError::Panic { kernel: compiled[i].name.clone() }),
+            };
+        }
+    });
+
+    let mut profiles = vec![];
+    for r in results {
+        profiles.push(r?);
+    }
+    Ok(GroupRun { profiles })
+}
+
+/// Global counter of interpreted launches (used by benches/EXPERIMENTS).
+pub static LAUNCHES: AtomicU64 = AtomicU64::new(0);
+
+/// `run_group` + launch accounting.
+pub fn launch(prog: &Program, image: &MemoryImage, opts: &ExecOptions) -> Result<GroupRun, ExecError> {
+    LAUNCHES.fetch_add(1, Ordering::Relaxed);
+    run_group(prog, image, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::build::*;
+    use crate::ir::{PipeDecl, Program};
+    use crate::transform::examples::fig2_kernel;
+
+    fn saxpy() -> Kernel {
+        KernelBuilder::new("saxpy", KernelKind::SingleWorkItem)
+            .buf_ro("x", Ty::F32)
+            .buf_ro("y", Ty::F32)
+            .buf_wo("out", Ty::F32)
+            .scalar("n", Ty::I32)
+            .scalar("a", Ty::F32)
+            .body(vec![for_(
+                "i",
+                i(0),
+                p("n"),
+                vec![store("out", v("i"), p("a") * ld("x", v("i")) + ld("y", v("i")))],
+            )])
+            .finish()
+    }
+
+    fn saxpy_image(n: usize) -> MemoryImage {
+        let mut m = MemoryImage::new();
+        let xs: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let ys: Vec<f32> = (0..n).map(|i| (i as f32) * 0.5).collect();
+        m.add_f32s("x", &xs).add_f32s("y", &ys).add_zeros("out", Ty::F32, n);
+        m.set_i("n", n as i64).set_f("a", 2.0);
+        m
+    }
+
+    #[test]
+    fn saxpy_single_kernel() {
+        let img = saxpy_image(100);
+        let prog = Program::single(saxpy());
+        let run = run_group(&prog, &img, &ExecOptions::default()).unwrap();
+        let out = img.buf("out").unwrap().to_f32s();
+        for (i, o) in out.iter().enumerate() {
+            assert_eq!(*o, 2.0 * i as f32 + 0.5 * i as f32);
+        }
+        // profile: 1 loop with 100 iters, 3 sites (2 loads + 1 store)
+        let p = &run.profiles[0];
+        assert_eq!(p.loop_stats(LoopId(0)).iters, 100);
+        assert_eq!(p.sites.len(), 3);
+        assert_eq!(p.sites[0].count, 100);
+        assert!(p.sites[0].seq_frac() > 0.98);
+    }
+
+    #[test]
+    fn feedforward_pair_produces_same_result() {
+        let base = saxpy();
+        let img1 = saxpy_image(256);
+        let img2 = saxpy_image(256);
+        run_group(&Program::single(base.clone()), &img1, &ExecOptions::default()).unwrap();
+        let ff = crate::transform::feedforward(&base, 4).unwrap();
+        let run = run_group(&ff, &img2, &ExecOptions::default()).unwrap();
+        assert_eq!(img1.buf("out").unwrap().to_f32s(), img2.buf("out").unwrap().to_f32s());
+        // token conservation
+        let wr: u64 = run.profiles.iter().map(|p| p.pipe_writes).sum();
+        let rd: u64 = run.profiles.iter().map(|p| p.pipe_reads).sum();
+        assert_eq!(wr, rd);
+        assert_eq!(wr, 512); // 2 loads x 256 iters
+    }
+
+    #[test]
+    fn fig2_all_variants_agree() {
+        use crate::transform::{apply_variant, Variant};
+        // small CSR graph
+        let row = vec![0i64, 2, 4, 5, 7];
+        let col = vec![1i64, 2, 0, 3, 0, 1, 2];
+        let car = vec![-1i64, -1, 3, -1];
+        let nv = vec![0.3f32, 0.1, 0.9, 0.7];
+        let image = || {
+            let mut m = MemoryImage::new();
+            m.add_i64s("row", &row)
+                .add_i64s("col", &col)
+                .add_i64s("c_array", &car)
+                .add_f32s("node_value", &nv)
+                .add_zeros("min_array", Ty::F32, 4)
+                .add_zeros("stop", Ty::I32, 1);
+            m.set_i("num_nodes", 4).set_i("num_edges", 7);
+            m
+        };
+        let base_img = image();
+        run_group(
+            &Program::single(fig2_kernel()),
+            &base_img,
+            &ExecOptions::default(),
+        )
+        .unwrap();
+        let want = base_img.buf("min_array").unwrap().to_f32s();
+        assert_eq!(base_img.buf("stop").unwrap().get(0), Val::I(1));
+
+        for variant in [
+            Variant::FeedForward { depth: 1 },
+            Variant::FeedForward { depth: 100 },
+            Variant::MxCx { parts: 2, depth: 1 },
+            Variant::M1Cx { consumers: 2, depth: 1 },
+        ] {
+            let prog = apply_variant(&fig2_kernel(), variant).unwrap();
+            let img = image();
+            run_group(&prog, &img, &ExecOptions::default()).unwrap();
+            assert_eq!(
+                img.buf("min_array").unwrap().to_f32s(),
+                want,
+                "variant {variant:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn oob_reports_kernel_and_buffer() {
+        let k = KernelBuilder::new("bad", KernelKind::SingleWorkItem)
+            .buf_ro("a", Ty::F32)
+            .buf_wo("o", Ty::F32)
+            .scalar("n", Ty::I32)
+            .body(vec![for_("i", i(0), p("n"), vec![store("o", v("i"), ld("a", v("i") + i(1)))])])
+            .finish();
+        let mut img = MemoryImage::new();
+        img.add_f32s("a", &[1.0, 2.0]).add_zeros("o", Ty::F32, 2).set_i("n", 2);
+        let err = run_group(&Program::single(k), &img, &ExecOptions::default()).unwrap_err();
+        assert!(matches!(err, ExecError::OutOfBounds { ref buf, idx: 2, .. } if buf == "a"));
+    }
+
+    #[test]
+    fn site_numbering_matches_analysis() {
+        let k = saxpy();
+        let sites = crate::analysis::select_lsus(&k);
+        let img = saxpy_image(8);
+        let prog = Program::single(k);
+        let run = run_group(&prog, &img, &ExecOptions::default()).unwrap();
+        assert_eq!(run.profiles[0].sites.len(), sites.len());
+    }
+}

@@ -1,0 +1,176 @@
+//! Global-memory image shared by concurrently executing kernels.
+//!
+//! Buffers are bit-encoded in `AtomicU64` cells with relaxed ordering —
+//! plain loads/stores on x86, safely shareable across the kernel threads.
+//! The feed-forward feasibility rules guarantee concurrent kernels never
+//! race on the same element (no true MLCD; memory kernels only read).
+
+use crate::ir::{Ty, Val};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// One global buffer.
+pub struct Buffer {
+    pub ty: Ty,
+    data: Vec<AtomicU64>,
+}
+
+impl Buffer {
+    pub fn new(ty: Ty, len: usize) -> Buffer {
+        let mut data = Vec::with_capacity(len);
+        data.resize_with(len, || AtomicU64::new(Val::zero(ty).to_bits()));
+        Buffer { ty, data }
+    }
+
+    pub fn from_i64s(vals: &[i64]) -> Buffer {
+        let data = vals.iter().map(|v| AtomicU64::new(Val::I(*v).to_bits())).collect();
+        Buffer { ty: Ty::I32, data }
+    }
+
+    pub fn from_f32s(vals: &[f32]) -> Buffer {
+        let data = vals.iter().map(|v| AtomicU64::new(Val::F(*v).to_bits())).collect();
+        Buffer { ty: Ty::F32, data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> Val {
+        Val::from_bits(self.ty, self.data[i].load(Ordering::Relaxed))
+    }
+
+    #[inline]
+    pub fn set(&self, i: usize, v: Val) {
+        self.data[i].store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn to_i64s(&self) -> Vec<i64> {
+        (0..self.len()).map(|i| self.get(i).as_i()).collect()
+    }
+
+    pub fn to_f32s(&self) -> Vec<f32> {
+        (0..self.len()).map(|i| self.get(i).as_f()).collect()
+    }
+
+    /// Deep copy (snapshots for validation / ping-pong setup).
+    pub fn duplicate(&self) -> Buffer {
+        let data = self
+            .data
+            .iter()
+            .map(|c| AtomicU64::new(c.load(Ordering::Relaxed)))
+            .collect();
+        Buffer { ty: self.ty, data }
+    }
+}
+
+impl std::fmt::Debug for Buffer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Buffer({:?} x{})", self.ty, self.len())
+    }
+}
+
+/// The device-global memory image plus host-set scalar arguments.
+#[derive(Debug, Default)]
+pub struct MemoryImage {
+    bufs: BTreeMap<String, Arc<Buffer>>,
+    scalars: BTreeMap<String, Val>,
+}
+
+impl MemoryImage {
+    pub fn new() -> MemoryImage {
+        MemoryImage::default()
+    }
+
+    pub fn add_buf(&mut self, name: &str, buf: Buffer) -> &mut Self {
+        self.bufs.insert(name.to_string(), Arc::new(buf));
+        self
+    }
+
+    pub fn add_i64s(&mut self, name: &str, vals: &[i64]) -> &mut Self {
+        self.add_buf(name, Buffer::from_i64s(vals))
+    }
+
+    pub fn add_f32s(&mut self, name: &str, vals: &[f32]) -> &mut Self {
+        self.add_buf(name, Buffer::from_f32s(vals))
+    }
+
+    pub fn add_zeros(&mut self, name: &str, ty: Ty, len: usize) -> &mut Self {
+        self.add_buf(name, Buffer::new(ty, len))
+    }
+
+    pub fn set_scalar(&mut self, name: &str, v: Val) -> &mut Self {
+        self.scalars.insert(name.to_string(), v);
+        self
+    }
+
+    pub fn set_i(&mut self, name: &str, v: i64) -> &mut Self {
+        self.set_scalar(name, Val::I(v))
+    }
+
+    pub fn set_f(&mut self, name: &str, v: f32) -> &mut Self {
+        self.set_scalar(name, Val::F(v))
+    }
+
+    pub fn buf(&self, name: &str) -> Option<&Arc<Buffer>> {
+        self.bufs.get(name)
+    }
+
+    pub fn scalar(&self, name: &str) -> Option<Val> {
+        self.scalars.get(name).copied()
+    }
+
+    pub fn buf_names(&self) -> impl Iterator<Item = &String> {
+        self.bufs.keys()
+    }
+
+    /// Total bytes of all buffers (dataset-size metric).
+    pub fn total_bytes(&self) -> u64 {
+        self.bufs.values().map(|b| b.len() as u64 * 4).sum()
+    }
+
+    /// Ping-pong swap of two buffers (host-side buffer-object swap between
+    /// launches, as OpenCL host code does with cl_mem arguments).
+    pub fn swap_bufs(&mut self, a: &str, b: &str) {
+        let ba = self.bufs.get(a).cloned().expect("swap_bufs: missing a");
+        let bb = self.bufs.get(b).cloned().expect("swap_bufs: missing b");
+        self.bufs.insert(a.to_string(), bb);
+        self.bufs.insert(b.to_string(), ba);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffer_roundtrip() {
+        let b = Buffer::from_f32s(&[1.5, -2.0]);
+        assert_eq!(b.get(0), Val::F(1.5));
+        b.set(1, Val::F(7.25));
+        assert_eq!(b.to_f32s(), vec![1.5, 7.25]);
+    }
+
+    #[test]
+    fn image_scalars_and_bufs() {
+        let mut m = MemoryImage::new();
+        m.add_i64s("row", &[0, 2, 5]).set_i("n", 3);
+        assert_eq!(m.scalar("n"), Some(Val::I(3)));
+        assert_eq!(m.buf("row").unwrap().to_i64s(), vec![0, 2, 5]);
+        assert_eq!(m.total_bytes(), 12);
+    }
+
+    #[test]
+    fn duplicate_is_deep() {
+        let b = Buffer::from_i64s(&[1, 2]);
+        let d = b.duplicate();
+        b.set(0, Val::I(99));
+        assert_eq!(d.get(0), Val::I(1));
+    }
+}

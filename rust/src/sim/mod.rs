@@ -1,0 +1,14 @@
+//! FPGA execution substrate: device model, global memory, the functional
+//! concurrent interpreter, execution profiles and the performance models.
+pub mod des;
+pub mod device;
+pub mod exec;
+pub mod mem;
+pub mod perf;
+pub mod profile;
+
+pub use device::DeviceConfig;
+pub use perf::{LaunchMetrics, PerfModel};
+pub use exec::{compile_kernel, launch, run_group, ExecError, ExecOptions, GroupRun};
+pub use mem::{Buffer, MemoryImage};
+pub use profile::{KernelProfile, LoopStats, SiteStats};

@@ -1,0 +1,156 @@
+//! Execution profiles collected by the functional interpreter and consumed
+//! by the performance models (trace-driven simulation with online
+//! summarization, so memory stays bounded on multi-million-iteration runs).
+
+use crate::ir::LoopId;
+use std::collections::HashMap;
+
+/// Address-stream summary for one static memory site. Site ids share the
+/// pre-order numbering of `analysis::lsu::select_lsus`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SiteStats {
+    /// Dynamic access count.
+    pub count: u64,
+    /// Accesses whose address was `last + 1` (sequential continuation).
+    pub seq: u64,
+    /// Accesses that repeated the previous address exactly.
+    pub same: u64,
+    /// Accesses that touched a different 64-byte line than the previous
+    /// access from this site (an upper bound on DRAM bursts issued).
+    pub lines: u64,
+    last_addr: i64,
+    started: bool,
+}
+
+impl SiteStats {
+    #[inline]
+    pub fn record(&mut self, addr: i64) {
+        if self.started {
+            if addr == self.last_addr + 1 {
+                self.seq += 1;
+            } else if addr == self.last_addr {
+                self.same += 1;
+            }
+            if (addr >> 4) != (self.last_addr >> 4) {
+                self.lines += 1;
+            }
+        } else {
+            self.started = true;
+            self.lines = 1;
+        }
+        self.last_addr = addr;
+        self.count += 1;
+    }
+
+    /// Fraction of accesses that continued a sequential run.
+    pub fn seq_frac(&self) -> f64 {
+        if self.count <= 1 {
+            return 1.0;
+        }
+        (self.seq + self.same) as f64 / (self.count - 1) as f64
+    }
+
+    pub fn merge(&mut self, other: &SiteStats) {
+        self.count += other.count;
+        self.seq += other.seq;
+        self.same += other.same;
+        self.lines += other.lines;
+    }
+}
+
+/// Per-static-loop dynamic counts.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LoopStats {
+    /// Number of times the loop was entered.
+    pub invocations: u64,
+    /// Total iterations across invocations.
+    pub iters: u64,
+}
+
+/// The full profile of one kernel execution (one launch).
+#[derive(Debug, Clone, Default)]
+pub struct KernelProfile {
+    pub kernel: String,
+    pub loops: HashMap<LoopId, LoopStats>,
+    /// Indexed by site id (shared load/store numbering).
+    pub sites: Vec<SiteStats>,
+    pub pipe_writes: u64,
+    pub pipe_reads: u64,
+    /// Wall-clock of the functional interpretation (for the §Perf log, not
+    /// part of the modelled FPGA time).
+    pub host_nanos: u64,
+}
+
+impl KernelProfile {
+    pub fn new(kernel: &str, n_sites: usize) -> KernelProfile {
+        KernelProfile {
+            kernel: kernel.to_string(),
+            sites: vec![SiteStats::default(); n_sites],
+            ..Default::default()
+        }
+    }
+
+    pub fn loop_stats(&self, id: LoopId) -> LoopStats {
+        self.loops.get(&id).copied().unwrap_or_default()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.sites.iter().map(|s| s.count * 4).sum()
+    }
+
+    /// Merge a same-shape profile (accumulating across host launches).
+    pub fn merge(&mut self, other: &KernelProfile) {
+        debug_assert_eq!(self.sites.len(), other.sites.len());
+        for (a, b) in self.sites.iter_mut().zip(&other.sites) {
+            a.merge(b);
+        }
+        for (id, ls) in &other.loops {
+            let e = self.loops.entry(*id).or_default();
+            e.invocations += ls.invocations;
+            e.iters += ls.iters;
+        }
+        self.pipe_writes += other.pipe_writes;
+        self.pipe_reads += other.pipe_reads;
+        self.host_nanos += other.host_nanos;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_stream_has_high_seq_frac() {
+        let mut s = SiteStats::default();
+        for a in 0..1000 {
+            s.record(a);
+        }
+        assert!(s.seq_frac() > 0.99);
+        assert_eq!(s.count, 1000);
+        // 1000 words over 16-word lines: ~63 line transitions
+        assert!(s.lines >= 62 && s.lines <= 64, "lines={}", s.lines);
+    }
+
+    #[test]
+    fn random_stream_has_low_seq_frac() {
+        let mut s = SiteStats::default();
+        let mut x: i64 = 12345;
+        for _ in 0..1000 {
+            x = (x.wrapping_mul(6364136223846793005).wrapping_add(144115188075855872)) % 100_000;
+            s.record(x.abs());
+        }
+        assert!(s.seq_frac() < 0.05, "seq_frac={}", s.seq_frac());
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = SiteStats::default();
+        let mut b = SiteStats::default();
+        for i in 0..10 {
+            a.record(i);
+            b.record(i);
+        }
+        a.merge(&b);
+        assert_eq!(a.count, 20);
+    }
+}

@@ -1,0 +1,246 @@
+//! Dead-code elimination — the paper's steps 11 and 13 (run twice: after
+//! the split, and again after control-flow simplification).
+//!
+//! Backward liveness over the structured IR. Side-effecting statements
+//! (`Store`, `PipeWrite`, `PipeRead`) are always kept — a `PipeRead` whose
+//! value is dead must still consume its token or the feed-forward pair
+//! would deadlock. Loop bodies are processed twice so loop-carried scalar
+//! uses (accumulators) are seen.
+
+use crate::ir::{Expr, Kernel, Stmt};
+use std::collections::HashSet;
+
+fn expr_uses(e: &Expr, live: &mut HashSet<String>) {
+    e.visit(&mut |node| {
+        if let Expr::Var(v) = node {
+            live.insert(v.clone());
+        }
+    });
+}
+
+/// Process a body backward; returns the kept statements.
+/// `live` on entry = variables live *after* the body; on exit = live before.
+fn dce_body(body: &[Stmt], live: &mut HashSet<String>) -> Vec<Stmt> {
+    let mut kept_rev: Vec<Stmt> = vec![];
+    for s in body.iter().rev() {
+        match s {
+            Stmt::Store { buf, idx, val } => {
+                expr_uses(idx, live);
+                expr_uses(val, live);
+                kept_rev.push(Stmt::Store { buf: buf.clone(), idx: idx.clone(), val: val.clone() });
+            }
+            Stmt::PipeWrite { pipe, val } => {
+                expr_uses(val, live);
+                kept_rev.push(Stmt::PipeWrite { pipe: pipe.clone(), val: val.clone() });
+            }
+            Stmt::PipeRead { var, ty, pipe } => {
+                // Token consumption is a side effect: always kept.
+                live.remove(var);
+                kept_rev.push(Stmt::PipeRead { var: var.clone(), ty: *ty, pipe: pipe.clone() });
+            }
+            Stmt::Let { var, ty, expr } => {
+                if live.contains(var) {
+                    live.remove(var);
+                    expr_uses(expr, live);
+                    kept_rev.push(Stmt::Let { var: var.clone(), ty: *ty, expr: expr.clone() });
+                }
+                // Dead `Let` (including dead loads) is dropped — exactly the
+                // paper's "values not further used".
+            }
+            Stmt::Assign { var, expr } => {
+                if live.contains(var) {
+                    // The variable stays live above (other assignments /
+                    // initial Let feed later iterations or reads).
+                    expr_uses(expr, live);
+                    kept_rev.push(Stmt::Assign { var: var.clone(), expr: expr.clone() });
+                }
+            }
+            Stmt::If { cond, then_b, else_b } => {
+                let mut live_t = live.clone();
+                let mut live_e = live.clone();
+                let then_k = dce_body(then_b, &mut live_t);
+                let else_k = dce_body(else_b, &mut live_e);
+                if then_k.is_empty() && else_k.is_empty() {
+                    continue; // drop the whole If (empty control-flow path)
+                }
+                live.extend(live_t);
+                live.extend(live_e);
+                expr_uses(cond, live);
+                kept_rev.push(Stmt::If { cond: cond.clone(), then_b: then_k, else_b: else_k });
+            }
+            Stmt::For { id, var, lo, hi, body } => {
+                // Two passes over the body to account for loop-carried uses.
+                let mut live_in = live.clone();
+                let _ = dce_body(body, &mut live_in);
+                let mut live_round2: HashSet<String> = live.union(&live_in).cloned().collect();
+                let body_k = dce_body(body, &mut live_round2);
+                if body_k.is_empty() {
+                    continue; // drop empty loop
+                }
+                live.extend(live_round2);
+                live.remove(var);
+                expr_uses(lo, live);
+                expr_uses(hi, live);
+                kept_rev.push(Stmt::For {
+                    id: *id,
+                    var: var.clone(),
+                    lo: lo.clone(),
+                    hi: hi.clone(),
+                    body: body_k,
+                });
+            }
+        }
+    }
+    kept_rev.reverse();
+    kept_rev
+}
+
+/// Remove dead code from a kernel. Buffer/scalar parameter lists are pruned
+/// to what the body still references.
+pub fn dce_kernel(kernel: &Kernel) -> Kernel {
+    let mut k = kernel.clone();
+    let mut live = HashSet::new();
+    k.body = dce_body(&k.body, &mut live);
+    prune_params(&mut k);
+    k
+}
+
+/// Drop buffer/scalar params no longer referenced by the body.
+pub fn prune_params(k: &mut Kernel) {
+    let mut bufs = HashSet::new();
+    let mut params = HashSet::new();
+    crate::ir::stmt::visit_body(&k.body, &mut |s| {
+        if let Stmt::Store { buf, .. } = s {
+            bufs.insert(buf.clone());
+        }
+        s.visit_own_exprs(&mut |e| {
+            e.visit(&mut |node| match node {
+                Expr::Load { buf, .. } => {
+                    bufs.insert(buf.clone());
+                }
+                Expr::Param(p) => {
+                    params.insert(p.clone());
+                }
+                _ => {}
+            });
+        });
+    });
+    k.bufs.retain(|b| bufs.contains(&b.name));
+    k.scalars.retain(|s| params.contains(&s.name));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::build::*;
+    use crate::ir::{validate_kernel, KernelKind, Ty};
+
+    #[test]
+    fn drops_dead_lets_and_unused_params() {
+        let k = KernelBuilder::new("k", KernelKind::SingleWorkItem)
+            .buf_ro("a", Ty::F32)
+            .buf_ro("unused", Ty::F32)
+            .buf_wo("o", Ty::F32)
+            .scalar("n", Ty::I32)
+            .scalar("dead", Ty::I32)
+            .body(vec![for_(
+                "i",
+                i(0),
+                p("n"),
+                vec![
+                    let_f("x", ld("a", v("i"))),
+                    let_f("y", ld("unused", v("i"))), // dead
+                    let_i("z", p("dead") + i(1)),     // dead
+                    store("o", v("i"), v("x")),
+                ],
+            )])
+            .finish();
+        let d = dce_kernel(&k);
+        assert_eq!(validate_kernel(&d), Ok(()));
+        assert_eq!(d.load_count(), 1);
+        assert!(d.buf("unused").is_none());
+        assert!(d.scalar("dead").is_none());
+        assert!(d.buf("a").is_some());
+        assert!(d.scalar("n").is_some());
+    }
+
+    #[test]
+    fn keeps_loop_carried_accumulator() {
+        let k = KernelBuilder::new("k", KernelKind::SingleWorkItem)
+            .buf_ro("a", Ty::F32)
+            .buf_wo("o", Ty::F32)
+            .scalar("n", Ty::I32)
+            .body(vec![
+                let_f("acc", f(0.0)),
+                for_("i", i(0), p("n"), vec![assign("acc", v("acc") + ld("a", v("i")))]),
+                store("o", i(0), v("acc")),
+            ])
+            .finish();
+        let d = dce_kernel(&k);
+        assert_eq!(d.body.len(), 3); // nothing removed
+        assert_eq!(d.load_count(), 1);
+    }
+
+    #[test]
+    fn drops_empty_if_and_for() {
+        let k = KernelBuilder::new("k", KernelKind::SingleWorkItem)
+            .buf_ro("a", Ty::F32)
+            .buf_wo("o", Ty::F32)
+            .scalar("n", Ty::I32)
+            .body(vec![
+                // whole loop computes a dead value
+                for_("i", i(0), p("n"), vec![let_f("x", ld("a", v("i")))]),
+                if_(p("n").gt(i(0)), vec![let_f("y", f(1.0))]),
+                store("o", i(0), f(7.0)),
+            ])
+            .finish();
+        let d = dce_kernel(&k);
+        assert_eq!(d.body.len(), 1);
+        assert!(matches!(d.body[0], crate::ir::Stmt::Store { .. }));
+    }
+
+    #[test]
+    fn pipe_ops_never_removed() {
+        let k = KernelBuilder::new("k", KernelKind::SingleWorkItem)
+            .scalar("n", Ty::I32)
+            .body(vec![for_(
+                "i",
+                i(0),
+                p("n"),
+                vec![
+                    pread("x", Ty::I32, "c0"), // dead value, live token
+                    pwrite("c1", v("i")),
+                ],
+            )])
+            .finish();
+        let d = dce_kernel(&k);
+        let mut reads = 0;
+        let mut writes = 0;
+        crate::ir::stmt::visit_body(&d.body, &mut |s| match s {
+            crate::ir::Stmt::PipeRead { .. } => reads += 1,
+            crate::ir::Stmt::PipeWrite { .. } => writes += 1,
+            _ => {}
+        });
+        assert_eq!((reads, writes), (1, 1));
+    }
+
+    #[test]
+    fn conditional_store_keeps_condition_chain() {
+        let k = KernelBuilder::new("k", KernelKind::SingleWorkItem)
+            .buf_ro("c", Ty::I32)
+            .buf_wo("o", Ty::I32)
+            .scalar("n", Ty::I32)
+            .body(vec![for_(
+                "t",
+                i(0),
+                p("n"),
+                vec![
+                    let_i("flag", ld("c", v("t"))),
+                    if_(v("flag").eq_(i(-1)), vec![store("o", v("t"), i(1))]),
+                ],
+            )])
+            .finish();
+        let d = dce_kernel(&k);
+        assert_eq!(d.load_count(), 1); // the condition load is live
+    }
+}

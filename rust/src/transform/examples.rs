@@ -1,0 +1,123 @@
+//! The paper's worked examples as IR kernels — Fig. 2 (the MIS-flavoured
+//! min-over-uncolored-neighbours kernel) and Fig. 3b (the DLCD reduction
+//! microkernel). Used by unit tests, the quickstart example and experiment
+//! E5.
+
+use crate::ir::build::*;
+use crate::ir::{Kernel, KernelKind, Ty};
+
+/// Fig. 2a: the baseline single work-item kernel.
+///
+/// ```c
+/// for (tid = 0; tid < num_nodes; tid++) {
+///   if (c_array[tid] == -1) {
+///     *stop = 1;
+///     int start = row[tid];
+///     int end = (tid+1 < num_nodes) ? row[tid+1] : num_edges;
+///     float min = BIGNUM;
+///     for (edge = start; edge < end; edge++)
+///       if (c_array[col[edge]] == -1)
+///         if (node_value[col[edge]] < min) min = node_value[col[edge]];
+///     min_array[tid] = min;
+///   }
+/// }
+/// ```
+pub fn fig2_kernel() -> Kernel {
+    KernelBuilder::new("mis1", KernelKind::SingleWorkItem)
+        .buf_ro("c_array", Ty::I32)
+        .buf_ro("row", Ty::I32)
+        .buf_ro("col", Ty::I32)
+        .buf_ro("node_value", Ty::F32)
+        .buf_wo("min_array", Ty::F32)
+        .buf_wo("stop", Ty::I32)
+        .scalar("num_nodes", Ty::I32)
+        .scalar("num_edges", Ty::I32)
+        .body(vec![for_(
+            "tid",
+            i(0),
+            p("num_nodes"),
+            vec![if_(
+                ld("c_array", v("tid")).eq_(i(-1)),
+                vec![
+                    store("stop", i(0), i(1)),
+                    let_i("start", ld("row", v("tid"))),
+                    let_i(
+                        "end",
+                        (v("tid") + i(1))
+                            .lt(p("num_nodes"))
+                            .sel(ld("row", v("tid") + i(1)), p("num_edges")),
+                    ),
+                    let_f("min", f(1.0e30)),
+                    for_(
+                        "edge",
+                        v("start"),
+                        v("end"),
+                        vec![if_(
+                            ld("c_array", ld("col", v("edge"))).eq_(i(-1)),
+                            vec![if_(
+                                ld("node_value", ld("col", v("edge"))).lt(v("min")),
+                                vec![assign("min", ld("node_value", ld("col", v("edge"))))],
+                            )],
+                        )],
+                    ),
+                    store("min_array", v("tid"), v("min")),
+                ],
+            )],
+        )])
+        .finish()
+}
+
+/// Fig. 3b: the DLCD microkernel (5-tap reduction over a sliding window).
+///
+/// ```c
+/// for (tid = 5; tid < num_nodes; tid++) {
+///   r = 0;
+///   for (iter = 0; iter < 5; iter++) { a = input[tid-iter]; r += a; }
+///   output[tid] = r;
+/// }
+/// ```
+pub fn fig3b_kernel() -> Kernel {
+    KernelBuilder::new("dlcd", KernelKind::SingleWorkItem)
+        .buf_ro("input", Ty::F32)
+        .buf_wo("output", Ty::F32)
+        .scalar("num_nodes", Ty::I32)
+        .body(vec![for_(
+            "tid",
+            i(5),
+            p("num_nodes"),
+            vec![
+                let_f("r", f(0.0)),
+                for_(
+                    "iter",
+                    i(0),
+                    i(5),
+                    vec![
+                        let_f("a", ld("input", v("tid") - v("iter"))),
+                        assign("r", v("r") + v("a")),
+                    ],
+                ),
+                store("output", v("tid"), v("r")),
+            ],
+        )])
+        .finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::validate_kernel;
+
+    #[test]
+    fn examples_validate() {
+        assert_eq!(validate_kernel(&fig2_kernel()), Ok(()));
+        assert_eq!(validate_kernel(&fig3b_kernel()), Ok(()));
+    }
+
+    #[test]
+    fn fig3b_has_dlcd_no_mlcd() {
+        let lcd = crate::analysis::analyze_lcd(&fig3b_kernel());
+        assert!(lcd.mlcds.is_empty());
+        assert_eq!(lcd.dlcds.len(), 1);
+        assert_eq!(lcd.dlcds[0].var, "r");
+    }
+}

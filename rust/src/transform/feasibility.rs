@@ -1,0 +1,134 @@
+//! Feasibility check for the feed-forward design model (§3 "Limitations").
+//!
+//! The model is not applicable when the kernel carries a *true* memory
+//! loop-carried dependency: concurrent execution of the dependent load
+//! (memory kernel) and store (compute kernel) would produce wrong results.
+//! Two gates, matching the paper:
+//!
+//! 1. a syntactically provable cross-iteration same-buffer dependency
+//!    (e.g. NW's `m[j] = f(m[j-1])`) is rejected outright;
+//! 2. otherwise the programmer must have vouched that no true MLCD exists
+//!    (`Kernel::assume_no_true_mlcd`) — the paper: "Programmers must only
+//!    use this design model when they can guarantee that there is no true
+//!    MLCD involved".
+
+use crate::analysis::{analyze_lcd, MlcdInfo};
+use crate::ir::Kernel;
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum FeasibilityError {
+    #[error(
+        "kernel {kernel}: provably true memory loop-carried dependency on `{buf}` \
+         (iteration distance {distance}); the feed-forward model would compute wrong \
+         results — resolve it first (e.g. transform::privatize) "
+    )]
+    TrueMlcd { kernel: String, buf: String, distance: i64 },
+    #[error(
+        "kernel {kernel}: no programmer guarantee of MLCD-freedom \
+         (Kernel::assume_no_true_mlcd is false) and the analysis cannot prove \
+         independence of the accesses on `{buf}`"
+    )]
+    NoGuarantee { kernel: String, buf: String },
+    #[error(
+        "workload {workload}: static range replication would break \
+         inter-iteration data flow (cross-replica dependency)"
+    )]
+    ReplicationUnsupported { workload: String },
+}
+
+/// Check that the feed-forward split may be applied to `kernel`.
+pub fn check_feasible(kernel: &Kernel) -> Result<(), FeasibilityError> {
+    let lcd = analyze_lcd(kernel);
+    if let Some(m) = lcd.mlcds.iter().find(|m| m.provably_true) {
+        return Err(FeasibilityError::TrueMlcd {
+            kernel: kernel.name.clone(),
+            buf: m.buf.clone(),
+            distance: m.distance.unwrap_or(0),
+        });
+    }
+    if !kernel.assume_no_true_mlcd {
+        if let Some(m) = first_unproven(&lcd.mlcds) {
+            return Err(FeasibilityError::NoGuarantee {
+                kernel: kernel.name.clone(),
+                buf: m.buf.clone(),
+            });
+        }
+    }
+    Ok(())
+}
+
+fn first_unproven(mlcds: &[MlcdInfo]) -> Option<&MlcdInfo> {
+    mlcds.iter().find(|m| m.distance.is_none())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::build::*;
+    use crate::ir::{KernelKind, Ty};
+
+    #[test]
+    fn rejects_nw_like_true_dependency() {
+        let k = KernelBuilder::new("nw", KernelKind::SingleWorkItem)
+            .buf_rw("m", Ty::I32)
+            .scalar("n", Ty::I32)
+            .body(vec![for_(
+                "j",
+                i(1),
+                p("n"),
+                vec![store("m", v("j"), ld("m", v("j") - i(1)) + i(1))],
+            )])
+            .finish();
+        assert!(matches!(check_feasible(&k), Err(FeasibilityError::TrueMlcd { distance: 1, .. })));
+    }
+
+    #[test]
+    fn accepts_false_mlcd_with_guarantee() {
+        // Same-buffer same-index store/load (distance 0 provable): false MLCD.
+        let k = KernelBuilder::new("bp", KernelKind::SingleWorkItem)
+            .buf_rw("w", Ty::F32)
+            .scalar("n", Ty::I32)
+            .body(vec![for_(
+                "i",
+                i(0),
+                p("n"),
+                vec![store("w", v("i"), ld("w", v("i")) * f(1.5))],
+            )])
+            .finish();
+        assert_eq!(check_feasible(&k), Ok(()));
+    }
+
+    #[test]
+    fn unprovable_requires_guarantee() {
+        let body = vec![for_(
+            "t",
+            i(0),
+            p("n"),
+            vec![
+                let_i("j", ld("col", v("t"))),
+                store("c", v("j"), i(1)),
+                let_i("x", ld("c", v("t"))),
+                store("o", v("t"), v("x")),
+            ],
+        )];
+        let with = KernelBuilder::new("g", KernelKind::SingleWorkItem)
+            .buf_rw("c", Ty::I32)
+            .buf_ro("col", Ty::I32)
+            .buf_wo("o", Ty::I32)
+            .scalar("n", Ty::I32)
+            .body(body.clone())
+            .finish();
+        assert_eq!(check_feasible(&with), Ok(()));
+
+        let without = KernelBuilder::new("g", KernelKind::SingleWorkItem)
+            .buf_rw("c", Ty::I32)
+            .buf_ro("col", Ty::I32)
+            .buf_wo("o", Ty::I32)
+            .scalar("n", Ty::I32)
+            .no_mlcd_guarantee()
+            .body(body)
+            .finish();
+        assert!(matches!(check_feasible(&without), Err(FeasibilityError::NoGuarantee { .. })));
+    }
+}

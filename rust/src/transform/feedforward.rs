@@ -1,0 +1,278 @@
+//! The feed-forward split (paper §3, steps 5-11): one single work-item
+//! kernel becomes a *memory kernel* (all global loads, each value written
+//! to a pipe) and a *compute kernel* (reads pipes, computes, stores),
+//! running concurrently and communicating only through pipes.
+//!
+//! Pipe-trace correctness invariant: both kernels retain the original
+//! control structure around every load site, and every branch condition is
+//! computed from the same values (the memory kernel from the loads, the
+//! compute kernel from the pipes), so under any input the sequence of
+//! writes to each pipe equals the sequence of reads — no token mismatch,
+//! no deadlock. Property-tested in `rust/tests/prop_transforms.rs`.
+
+use super::dce::{dce_kernel, prune_params};
+use super::feasibility::{check_feasible, FeasibilityError};
+use super::normalize::name_loads;
+use super::simplify::simplify_kernel;
+use crate::ir::{
+    Access, Expr, Kernel, KernelKind, PipeDecl, Program, Role, Stmt,
+};
+
+/// Names used for the split pair.
+pub fn memory_kernel_name(base: &str) -> String {
+    format!("{base}_mem")
+}
+
+pub fn compute_kernel_name(base: &str) -> String {
+    format!("{base}_cmp")
+}
+
+/// Apply the feed-forward split to a single work-item kernel, producing a
+/// two-kernel program connected by one pipe per static load site.
+///
+/// `depth` is the requested minimum depth for every created pipe (the
+/// paper sweeps 1/100/1000 and finds it does not matter much).
+pub fn feedforward(kernel: &Kernel, depth: usize) -> Result<Program, FeasibilityError> {
+    assert_eq!(
+        kernel.kind,
+        KernelKind::SingleWorkItem,
+        "feed-forward requires a single work-item kernel (run ndrange_to_swi first)"
+    );
+    check_feasible(kernel)?;
+
+    // Step 5: named-load normal form.
+    let base = name_loads(kernel);
+
+    // Steps 6-9: duplicate into memory/compute bodies, one pipe per site.
+    let mut pipes: Vec<PipeDecl> = vec![];
+    let mut site = 0usize;
+    let mem_body = build_mem(&base.body, &base, &mut pipes, &mut site, depth);
+    let mut site2 = 0usize;
+    let cmp_body = build_cmp(&base.body, &base, &mut site2);
+    debug_assert_eq!(site, site2, "load-site numbering diverged between halves");
+
+    let mut mem = Kernel {
+        name: memory_kernel_name(&kernel.name),
+        kind: KernelKind::SingleWorkItem,
+        role: Role::Memory,
+        bufs: base.bufs.clone(),
+        scalars: base.scalars.clone(),
+        body: mem_body,
+        assume_no_true_mlcd: true,
+    };
+    let mut cmp = Kernel {
+        name: compute_kernel_name(&kernel.name),
+        kind: KernelKind::SingleWorkItem,
+        role: Role::Compute,
+        bufs: base.bufs.clone(),
+        scalars: base.scalars.clone(),
+        body: cmp_body,
+        assume_no_true_mlcd: true,
+    };
+
+    // Steps 10-11 and 13: DCE, simplify, DCE again.
+    mem = dce_kernel(&mem);
+    mem = simplify_kernel(&mem);
+    mem = dce_kernel(&mem);
+    cmp = dce_kernel(&cmp);
+    cmp = simplify_kernel(&cmp);
+    cmp = dce_kernel(&cmp);
+    prune_params(&mut mem);
+    prune_params(&mut cmp);
+    // The memory kernel only reads.
+    for b in &mut mem.bufs {
+        if b.access == Access::ReadWrite {
+            b.access = Access::ReadOnly;
+        }
+    }
+
+    Ok(Program {
+        name: format!("{}_ff", kernel.name),
+        kernels: vec![mem, cmp],
+        pipes,
+    })
+}
+
+fn pipe_name(kernel: &str, site: usize) -> String {
+    format!("{kernel}_c{site}")
+}
+
+/// Memory-kernel body: every named load gets a pipe write; stores dropped.
+fn build_mem(
+    body: &[Stmt],
+    k: &Kernel,
+    pipes: &mut Vec<PipeDecl>,
+    site: &mut usize,
+    depth: usize,
+) -> Vec<Stmt> {
+    let mut out = vec![];
+    for s in body {
+        match s {
+            Stmt::Let { var, ty, expr } if is_named_load(expr) => {
+                let pn = pipe_name(&k.name, *site);
+                pipes.push(PipeDecl { name: pn.clone(), ty: *ty, depth: depth.max(1) });
+                *site += 1;
+                out.push(s.clone());
+                out.push(Stmt::PipeWrite { pipe: pn, val: Expr::Var(var.clone()) });
+            }
+            Stmt::Store { .. } => {} // step 10: stores leave the memory kernel
+            Stmt::If { cond, then_b, else_b } => out.push(Stmt::If {
+                cond: cond.clone(),
+                then_b: build_mem(then_b, k, pipes, site, depth),
+                else_b: build_mem(else_b, k, pipes, site, depth),
+            }),
+            Stmt::For { id, var, lo, hi, body } => out.push(Stmt::For {
+                id: *id,
+                var: var.clone(),
+                lo: lo.clone(),
+                hi: hi.clone(),
+                body: build_mem(body, k, pipes, site, depth),
+            }),
+            other => out.push(other.clone()),
+        }
+    }
+    out
+}
+
+/// Compute-kernel body: every named load becomes a pipe read.
+fn build_cmp(body: &[Stmt], k: &Kernel, site: &mut usize) -> Vec<Stmt> {
+    let mut out = vec![];
+    for s in body {
+        match s {
+            Stmt::Let { var, ty, expr } if is_named_load(expr) => {
+                let pn = pipe_name(&k.name, *site);
+                *site += 1;
+                out.push(Stmt::PipeRead { var: var.clone(), ty: *ty, pipe: pn });
+            }
+            Stmt::If { cond, then_b, else_b } => out.push(Stmt::If {
+                cond: cond.clone(),
+                then_b: build_cmp(then_b, k, site),
+                else_b: build_cmp(else_b, k, site),
+            }),
+            Stmt::For { id, var, lo, hi, body } => out.push(Stmt::For {
+                id: *id,
+                var: var.clone(),
+                lo: lo.clone(),
+                hi: hi.clone(),
+                body: build_cmp(body, k, site),
+            }),
+            other => out.push(other.clone()),
+        }
+    }
+    out
+}
+
+fn is_named_load(e: &Expr) -> bool {
+    matches!(e, Expr::Load { idx, .. } if !idx.has_load())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::build::*;
+    use crate::ir::{validate_program, Ty};
+    use crate::transform::examples::fig2_kernel;
+
+    #[test]
+    fn fig2_splits_cleanly() {
+        let k = fig2_kernel();
+        let ff = feedforward(&k, 1).unwrap();
+        assert_eq!(validate_program(&ff), Ok(()));
+        assert_eq!(ff.kernels.len(), 2);
+        let mem = &ff.kernels[0];
+        let cmp = &ff.kernels[1];
+        assert_eq!(mem.role, Role::Memory);
+        assert_eq!(cmp.role, Role::Compute);
+        // Memory kernel: all the loads, no stores.
+        assert!(mem.load_count() > 0);
+        assert_eq!(mem.store_count(), 0);
+        // Compute kernel: no loads, all the stores.
+        assert_eq!(cmp.load_count(), 0);
+        assert_eq!(cmp.store_count(), 2); // stop + min_array
+        // One pipe per surviving load site; both endpoints wired (checked
+        // by validate_program above).
+        assert!(!ff.pipes.is_empty());
+        // Compute kernel must not reference the graph-structure buffers.
+        assert!(cmp.buf("row").is_none());
+        assert!(cmp.buf("col").is_none());
+        assert!(cmp.buf("c_array").is_none());
+    }
+
+    #[test]
+    fn pipe_count_matches_load_sites() {
+        let k = fig2_kernel();
+        let named = name_loads(&k);
+        let ff = feedforward(&k, 1).unwrap();
+        let mem = &ff.kernels[0];
+        // After DCE the memory kernel may have dropped *dead* loads, but
+        // every surviving load has exactly one pipe write and the compute
+        // kernel one pipe read (validated); the pipe count equals the
+        // number of pipe writes.
+        let mut writes = 0;
+        crate::ir::stmt::visit_body(&mem.body, &mut |s| {
+            if matches!(s, Stmt::PipeWrite { .. }) {
+                writes += 1;
+            }
+        });
+        assert_eq!(writes, ff.pipes.len());
+        assert!(ff.pipes.len() <= named.load_count());
+    }
+
+    #[test]
+    fn requested_depth_respected() {
+        let ff = feedforward(&fig2_kernel(), 100).unwrap();
+        assert!(ff.pipes.iter().all(|p| p.depth == 100));
+    }
+
+    #[test]
+    fn rejects_true_mlcd_kernel() {
+        let k = KernelBuilder::new("nw", KernelKind::SingleWorkItem)
+            .buf_rw("m", Ty::I32)
+            .scalar("n", Ty::I32)
+            .body(vec![for_(
+                "j",
+                i(1),
+                p("n"),
+                vec![store("m", v("j"), ld("m", v("j") - i(1)) + i(1))],
+            )])
+            .finish();
+        assert!(feedforward(&k, 1).is_err());
+    }
+
+    #[test]
+    fn memory_kernel_is_store_free_and_loses_ii_serialization() {
+        use crate::analysis::{analyze_lcd, loop_iis};
+        // FW-like kernel: serialized baseline, pipelined after split.
+        let k = KernelBuilder::new("fw", KernelKind::SingleWorkItem)
+            .buf_rw("dist", Ty::F32)
+            .scalar("n", Ty::I32)
+            .scalar("piv", Ty::I32)
+            .body(vec![for_(
+                "ij",
+                i(0),
+                p("n") * p("n"),
+                vec![
+                    let_i("i2", v("ij") / p("n")),
+                    let_i("j2", v("ij") % p("n")),
+                    store(
+                        "dist",
+                        v("ij"),
+                        ld("dist", v("ij"))
+                            .min(ld("dist", v("i2") * p("n") + p("piv")) + ld("dist", p("piv") * p("n") + v("j2"))),
+                    ),
+                ],
+            )])
+            .finish();
+        let base_ii = {
+            let lcd = analyze_lcd(&k);
+            loop_iis(&k, &lcd).iter().map(|l| l.ii).max().unwrap()
+        };
+        assert!(base_ii > 100, "baseline must be serialized, ii={base_ii}");
+        let ff = feedforward(&k, 1).unwrap();
+        for kern in &ff.kernels {
+            let lcd = analyze_lcd(kern);
+            let max_ii = loop_iis(kern, &lcd).iter().map(|l| l.ii).max().unwrap();
+            assert_eq!(max_ii, 1, "{} should pipeline at II=1", kern.name);
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! The paper's transformation recipe (§3, steps 1-14) as compiler passes.
+//!
+//! Pipeline, per kernel:
+//! 1. [`ndrange::ndrange_to_swi`] if the baseline is NDRange (step 1)
+//! 2. [`privatize::privatize`] if a removable true MLCD exists (NW, §4.2)
+//! 3. [`feasibility::check_feasible`] (steps 3-4)
+//! 4. [`normalize::name_loads`] (step 5)
+//! 5. [`feedforward::feedforward`] — split + pipes (steps 6-9) with DCE
+//!    and simplification (steps 10-11, 13) applied to both halves
+//! 6. [`replicate::replicate`] for multiple producers/consumers (step 12)
+//! 7. [`vectorize::vectorize`] for the §4.2 vector-type case study
+//!
+//! Step 14 (host-side enqueue of all kernels on separate queues) is the
+//! execution engine's launch-group mechanism (`sim::exec`).
+
+pub mod dce;
+pub mod examples;
+pub mod feasibility;
+pub mod feedforward;
+pub mod ndrange;
+pub mod normalize;
+pub mod privatize;
+pub mod replicate;
+pub mod simplify;
+pub mod vectorize;
+
+pub use dce::dce_kernel;
+pub use feasibility::{check_feasible, FeasibilityError};
+pub use feedforward::feedforward;
+pub use ndrange::ndrange_to_swi;
+pub use normalize::name_loads;
+pub use privatize::privatize;
+pub use replicate::{replicate, replicate_1p};
+pub use simplify::simplify_kernel;
+pub use vectorize::vectorize;
+
+use crate::ir::{Kernel, Program};
+
+/// The design variants the experiments compare (Tables 2-3, Fig. 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Single work-item baseline (paper's comparison base).
+    Baseline,
+    /// Feed-forward split, one producer + one consumer, given pipe depth.
+    FeedForward { depth: usize },
+    /// Feed-forward with R producers and R consumers (R=2 is "M2C2").
+    MxCx { parts: usize, depth: usize },
+    /// Feed-forward with one shared producer and N consumers (§3, explored
+    /// and found inferior).
+    M1Cx { consumers: usize, depth: usize },
+    /// Feed-forward + vector-type (width-W) case study.
+    Vectorized { width: usize, depth: usize },
+}
+
+impl Variant {
+    pub fn label(&self) -> String {
+        match self {
+            Variant::Baseline => "baseline".into(),
+            Variant::FeedForward { depth } => format!("ff(d{depth})"),
+            Variant::MxCx { parts, depth } => format!("m{parts}c{parts}(d{depth})"),
+            Variant::M1Cx { consumers, depth } => format!("m1c{consumers}(d{depth})"),
+            Variant::Vectorized { width, depth } => format!("ff_v{width}(d{depth})"),
+        }
+    }
+}
+
+/// Apply a variant to a single work-item baseline kernel.
+pub fn apply_variant(kernel: &Kernel, variant: Variant) -> Result<Program, FeasibilityError> {
+    match variant {
+        Variant::Baseline => Ok(Program::single(kernel.clone())),
+        Variant::FeedForward { depth } => feedforward(kernel, depth),
+        Variant::MxCx { parts, depth } => Ok(replicate(&feedforward(kernel, depth)?, parts)),
+        Variant::M1Cx { consumers, depth } => {
+            Ok(replicate_1p(&feedforward(kernel, depth)?, consumers))
+        }
+        Variant::Vectorized { width, depth } => {
+            let vk = vectorize(kernel, width);
+            feedforward(&vk, depth)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::validate_program;
+    use crate::transform::examples::fig2_kernel;
+
+    #[test]
+    fn all_variants_build_and_validate() {
+        let k = fig2_kernel();
+        for variant in [
+            Variant::Baseline,
+            Variant::FeedForward { depth: 1 },
+            Variant::FeedForward { depth: 100 },
+            Variant::MxCx { parts: 2, depth: 1 },
+            Variant::MxCx { parts: 4, depth: 1 },
+            Variant::M1Cx { consumers: 2, depth: 1 },
+        ] {
+            let prog = apply_variant(&k, variant).unwrap();
+            assert_eq!(validate_program(&prog), Ok(()), "variant {variant:?}");
+        }
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(Variant::MxCx { parts: 2, depth: 1 }.label(), "m2c2(d1)");
+        assert_eq!(Variant::FeedForward { depth: 100 }.label(), "ff(d100)");
+    }
+}

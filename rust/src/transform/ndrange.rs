@@ -1,0 +1,104 @@
+//! NDRange -> single work-item conversion (paper step 1, §3: "programmers
+//! can construct the single work-item version by embedding the body of the
+//! NDRange baseline kernel within a nested loop").
+//!
+//! Our benchmarks are 1-D (or linearized), so the wrapping loop is a single
+//! `for (gid = 0; gid < global_size; gid++)`; the work-group/work-item
+//! nesting the paper mentions collapses to the same iteration space.
+
+use crate::ir::{Expr, Kernel, KernelKind, ScalarParam, Stmt, Ty};
+
+/// Loop variable introduced for the linearized global id.
+pub const GID_VAR: &str = "_gid";
+
+fn replace_gid(body: Vec<Stmt>) -> Vec<Stmt> {
+    fn fix(e: Expr) -> Expr {
+        e.map(&|n| match n {
+            Expr::GlobalId(0) => Expr::Var(GID_VAR.to_string()),
+            other => other,
+        })
+    }
+    body.into_iter()
+        .map(|s| match s {
+            Stmt::Let { var, ty, expr } => Stmt::Let { var, ty, expr: fix(expr) },
+            Stmt::Assign { var, expr } => Stmt::Assign { var, expr: fix(expr) },
+            Stmt::Store { buf, idx, val } => Stmt::Store { buf, idx: fix(idx), val: fix(val) },
+            Stmt::If { cond, then_b, else_b } => Stmt::If {
+                cond: fix(cond),
+                then_b: replace_gid(then_b),
+                else_b: replace_gid(else_b),
+            },
+            Stmt::For { id, var, lo, hi, body } => Stmt::For {
+                id,
+                var,
+                lo: fix(lo),
+                hi: fix(hi),
+                body: replace_gid(body),
+            },
+            Stmt::PipeWrite { pipe, val } => Stmt::PipeWrite { pipe, val: fix(val) },
+            s @ Stmt::PipeRead { .. } => s,
+        })
+        .collect()
+}
+
+/// Convert an NDRange kernel to single work-item form. `global_size_param`
+/// names the scalar parameter holding the launch size (added if missing).
+pub fn ndrange_to_swi(kernel: &Kernel, global_size_param: &str) -> Kernel {
+    assert_eq!(kernel.kind, KernelKind::NDRange, "kernel is already single work-item");
+    let mut k = kernel.clone();
+    k.kind = KernelKind::SingleWorkItem;
+    if k.scalar(global_size_param).is_none() {
+        k.scalars.push(ScalarParam { name: global_size_param.into(), ty: Ty::I32 });
+    }
+    let inner = replace_gid(std::mem::take(&mut k.body));
+    k.body = vec![Stmt::For {
+        id: crate::ir::LoopId(u32::MAX),
+        var: GID_VAR.into(),
+        lo: Expr::I(0),
+        hi: Expr::Param(global_size_param.into()),
+        body: inner,
+    }];
+    let mut next = 0;
+    crate::ir::build::assign_loop_ids(&mut k.body, &mut next);
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::build::*;
+    use crate::ir::{validate_kernel, Ty};
+
+    #[test]
+    fn wraps_body_and_rewrites_gid() {
+        let nd = KernelBuilder::new("scale", KernelKind::NDRange)
+            .buf_ro("a", Ty::F32)
+            .buf_wo("o", Ty::F32)
+            .body(vec![store("o", gid(), ld("a", gid()) * f(2.0))])
+            .finish();
+        let swi = ndrange_to_swi(&nd, "n");
+        assert_eq!(swi.kind, KernelKind::SingleWorkItem);
+        assert_eq!(validate_kernel(&swi), Ok(()));
+        assert!(swi.scalar("n").is_some());
+        let src = crate::ir::pretty::kernel_to_string(&swi);
+        assert!(src.contains(&format!("for (int {GID_VAR} = 0; {GID_VAR} < n; {GID_VAR}++)")));
+        assert!(!src.contains("get_global_id"));
+    }
+
+    #[test]
+    fn nested_structures_rewritten() {
+        let nd = KernelBuilder::new("k", KernelKind::NDRange)
+            .buf_ro("a", Ty::I32)
+            .buf_wo("o", Ty::I32)
+            .body(vec![if_(
+                gid().lt(i(100)),
+                vec![for_("j", i(0), i(4), vec![store("o", gid() * i(4) + v("j"), ld("a", gid()))])],
+            )])
+            .finish();
+        let swi = ndrange_to_swi(&nd, "gsz");
+        assert_eq!(validate_kernel(&swi), Ok(()));
+        // loop ids got renumbered: outer wrapping loop is L0
+        assert_eq!(swi.loop_ids().len(), 2);
+        assert_eq!(swi.loop_ids()[0], crate::ir::LoopId(0));
+    }
+}

@@ -1,0 +1,235 @@
+//! Load-naming normalization — the paper's step 5 ("allocating a local
+//! variable for load instructions ... to increase the clarity of data
+//! transfers").
+//!
+//! After this pass every global `Load` appears exactly as the full RHS of a
+//! `Let` whose index expression is load-free, in evaluation order. Nested
+//! indirection (`a[b[i]]`) becomes two `Let`s (`_ld0 = b[i]; _ld1 =
+//! a[_ld0]`), which is precisely the form the feed-forward split needs:
+//! one pipe per static load site.
+
+use crate::ir::{Expr, Kernel, Stmt, Ty};
+
+/// Prefix for compiler-introduced load temporaries.
+pub const LOAD_TMP_PREFIX: &str = "_ld";
+
+struct Ctx<'a> {
+    kernel: &'a Kernel,
+    counter: usize,
+}
+
+impl<'a> Ctx<'a> {
+    fn fresh(&mut self) -> String {
+        let name = format!("{LOAD_TMP_PREFIX}{}", self.counter);
+        self.counter += 1;
+        name
+    }
+
+    fn buf_ty(&self, buf: &str) -> Ty {
+        self.kernel.buf(buf).map(|b| b.elem).unwrap_or(Ty::F32)
+    }
+
+    /// Hoist every load in `e` (inner-first = evaluation order) into `out`,
+    /// returning the load-free rewritten expression.
+    fn extract(&mut self, e: Expr, out: &mut Vec<Stmt>) -> Expr {
+        match e {
+            Expr::Load { buf, idx } => {
+                let idx = self.extract(*idx, out);
+                let ty = self.buf_ty(&buf);
+                let var = self.fresh();
+                out.push(Stmt::Let {
+                    var: var.clone(),
+                    ty,
+                    expr: Expr::Load { buf, idx: Box::new(idx) },
+                });
+                Expr::Var(var)
+            }
+            Expr::Bin(op, a, b) => {
+                let a = self.extract(*a, out);
+                let b = self.extract(*b, out);
+                Expr::Bin(op, Box::new(a), Box::new(b))
+            }
+            Expr::Un(op, a) => {
+                let a = self.extract(*a, out);
+                Expr::Un(op, Box::new(a))
+            }
+            Expr::Select(c, t, f) => {
+                // NOTE: both arms are hoisted unconditionally; `Select` in
+                // our benchmarks never guards loads (If statements do), so
+                // this preserves the trace. The validator keeps this true.
+                let c = self.extract(*c, out);
+                let t = self.extract(*t, out);
+                let f = self.extract(*f, out);
+                Expr::Select(Box::new(c), Box::new(t), Box::new(f))
+            }
+            other => other,
+        }
+    }
+
+    fn rewrite_body(&mut self, body: Vec<Stmt>) -> Vec<Stmt> {
+        let mut out = vec![];
+        for s in body {
+            match s {
+                Stmt::Let { var, ty, expr } => {
+                    // Already-named load with a load-free index: keep as-is.
+                    if let Expr::Load { ref idx, .. } = expr {
+                        if !idx.has_load() {
+                            out.push(Stmt::Let { var, ty, expr });
+                            continue;
+                        }
+                    }
+                    let expr = self.extract(expr, &mut out);
+                    out.push(Stmt::Let { var, ty, expr });
+                }
+                Stmt::Assign { var, expr } => {
+                    let expr = self.extract(expr, &mut out);
+                    out.push(Stmt::Assign { var, expr });
+                }
+                Stmt::Store { buf, idx, val } => {
+                    let idx = self.extract(idx, &mut out);
+                    let val = self.extract(val, &mut out);
+                    out.push(Stmt::Store { buf, idx, val });
+                }
+                Stmt::If { cond, then_b, else_b } => {
+                    let cond = self.extract(cond, &mut out);
+                    let then_b = self.rewrite_body(then_b);
+                    let else_b = self.rewrite_body(else_b);
+                    out.push(Stmt::If { cond, then_b, else_b });
+                }
+                Stmt::For { id, var, lo, hi, body } => {
+                    let lo = self.extract(lo, &mut out);
+                    let hi = self.extract(hi, &mut out);
+                    let body = self.rewrite_body(body);
+                    out.push(Stmt::For { id, var, lo, hi, body });
+                }
+                Stmt::PipeWrite { pipe, val } => {
+                    let val = self.extract(val, &mut out);
+                    out.push(Stmt::PipeWrite { pipe, val });
+                }
+                s @ Stmt::PipeRead { .. } => out.push(s),
+            }
+        }
+        out
+    }
+}
+
+/// Normalize a kernel into named-load form.
+pub fn name_loads(kernel: &Kernel) -> Kernel {
+    let mut k = kernel.clone();
+    let mut ctx = Ctx { kernel, counter: 0 };
+    k.body = ctx.rewrite_body(std::mem::take(&mut k.body));
+    k
+}
+
+/// True if every load is the full RHS of a `Let` with a load-free index.
+pub fn is_load_named(kernel: &Kernel) -> bool {
+    let mut ok = true;
+    crate::ir::stmt::visit_body(&kernel.body, &mut |s| {
+        match s {
+            Stmt::Let { expr: Expr::Load { idx, .. }, .. } => {
+                if idx.has_load() {
+                    ok = false;
+                }
+            }
+            other => {
+                other.visit_own_exprs(&mut |e| {
+                    if e.has_load() {
+                        ok = false;
+                    }
+                });
+            }
+        }
+    });
+    ok
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::build::*;
+    use crate::ir::{validate_kernel, KernelKind};
+
+    #[test]
+    fn hoists_nested_indirection_in_eval_order() {
+        let k = KernelBuilder::new("k", KernelKind::SingleWorkItem)
+            .buf_ro("col", Ty::I32)
+            .buf_ro("val", Ty::F32)
+            .buf_wo("o", Ty::F32)
+            .scalar("n", Ty::I32)
+            .body(vec![for_(
+                "i",
+                i(0),
+                p("n"),
+                vec![store("o", v("i"), ld("val", ld("col", v("i"))) * f(2.0))],
+            )])
+            .finish();
+        assert!(!is_load_named(&k));
+        let n = name_loads(&k);
+        assert!(is_load_named(&n));
+        assert_eq!(validate_kernel(&n), Ok(()));
+        // inner (col) hoisted before outer (val)
+        let src = crate::ir::pretty::kernel_to_string(&n);
+        let col_pos = src.find("_ld0 = col[i]").unwrap();
+        let val_pos = src.find("_ld1 = val[_ld0]").unwrap();
+        assert!(col_pos < val_pos);
+        assert_eq!(n.load_count(), 2);
+    }
+
+    #[test]
+    fn hoists_condition_loads_before_if() {
+        let k = KernelBuilder::new("k", KernelKind::SingleWorkItem)
+            .buf_ro("c", Ty::I32)
+            .buf_wo("o", Ty::I32)
+            .scalar("n", Ty::I32)
+            .body(vec![for_(
+                "t",
+                i(0),
+                p("n"),
+                vec![if_(ld("c", v("t")).eq_(i(-1)), vec![store("o", v("t"), i(1))])],
+            )])
+            .finish();
+        let n = name_loads(&k);
+        assert!(is_load_named(&n));
+        let src = crate::ir::pretty::kernel_to_string(&n);
+        assert!(src.contains("int _ld0 = c[t];"));
+        assert!(src.contains("if ((_ld0 == -1))"));
+    }
+
+    #[test]
+    fn keeps_already_named_loads() {
+        let k = KernelBuilder::new("k", KernelKind::SingleWorkItem)
+            .buf_ro("a", Ty::F32)
+            .buf_wo("o", Ty::F32)
+            .scalar("n", Ty::I32)
+            .body(vec![for_(
+                "i",
+                i(0),
+                p("n"),
+                vec![let_f("x", ld("a", v("i"))), store("o", v("i"), v("x"))],
+            )])
+            .finish();
+        let n = name_loads(&k);
+        let src = crate::ir::pretty::kernel_to_string(&n);
+        assert!(src.contains("float x = a[i];"));
+        assert!(!src.contains("_ld0"));
+    }
+
+    #[test]
+    fn idempotent() {
+        let k = KernelBuilder::new("k", KernelKind::SingleWorkItem)
+            .buf_ro("a", Ty::F32)
+            .buf_ro("b", Ty::I32)
+            .buf_wo("o", Ty::F32)
+            .scalar("n", Ty::I32)
+            .body(vec![for_(
+                "i",
+                i(0),
+                p("n"),
+                vec![store("o", v("i"), ld("a", ld("b", v("i"))) + ld("a", v("i")))],
+            )])
+            .finish();
+        let n1 = name_loads(&k);
+        let n2 = name_loads(&n1);
+        assert_eq!(n1.body, n2.body);
+    }
+}

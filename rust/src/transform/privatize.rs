@@ -1,0 +1,279 @@
+//! MLCD removal by privatization — the paper's NW trick (§4.2): a true
+//! same-buffer dependency of iteration distance 1 ("read at K depends on
+//! the write at K-1") is replaced by carrying the written value in a
+//! private variable across iterations, after which the kernel has no true
+//! MLCD and the feed-forward split becomes applicable.
+
+use crate::analysis::pattern::affine_wrt;
+use crate::analysis::{analyze_lcd, walk_with_loops};
+use crate::ir::{Expr, Kernel, Stmt, Ty};
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum PrivatizeError {
+    #[error("kernel {0}: no provably-true distance-1 MLCD to privatize")]
+    NothingToPrivatize(String),
+    #[error("kernel {0}: unsupported shape for privatization (loop {1:?})")]
+    Unsupported(String, crate::ir::LoopId),
+}
+
+/// Carry variable introduced by the pass.
+pub const CARRY_VAR: &str = "_carry";
+
+/// Rewrite the (single) provably-true distance-1 MLCD: the load of
+/// `buf[i-1]` inside the serialized loop becomes a read of a private
+/// variable that each iteration updates with its stored value.
+pub fn privatize(kernel: &Kernel) -> Result<Kernel, PrivatizeError> {
+    let lcd = analyze_lcd(kernel);
+    let target = lcd
+        .mlcds
+        .iter()
+        .find(|m| m.provably_true && m.distance == Some(1))
+        .ok_or_else(|| PrivatizeError::NothingToPrivatize(kernel.name.clone()))?
+        .clone();
+
+    // Find the serialized loop's var so we can match the load/store pair.
+    let mut loop_var = None;
+    walk_with_loops(kernel, &mut |s, _| {
+        if let Stmt::For { id, var, .. } = s {
+            if *id == target.loop_id {
+                loop_var = Some(var.clone());
+            }
+        }
+    });
+    let loop_var = loop_var.ok_or_else(|| {
+        PrivatizeError::Unsupported(kernel.name.clone(), target.loop_id)
+    })?;
+
+    let mut k = kernel.clone();
+    let carry_ty = k.buf(&target.buf).map(|b| b.elem).unwrap_or(Ty::F32);
+    let mut changed = false;
+    k.body = rewrite(
+        std::mem::take(&mut k.body),
+        &target.buf,
+        &target.loop_id,
+        &loop_var,
+        carry_ty,
+        &mut changed,
+    );
+    if !changed {
+        return Err(PrivatizeError::Unsupported(kernel.name.clone(), target.loop_id));
+    }
+    Ok(k)
+}
+
+/// Inside the target loop: replace `Load(buf, i-1)` (distance-1 w.r.t. the
+/// stored index) with `CARRY_VAR`; after each `Store(buf, i, val)` insert
+/// `CARRY_VAR = val`; before the loop insert the initial carry load at
+/// `lo - 1`.
+fn rewrite(
+    body: Vec<Stmt>,
+    buf: &str,
+    target: &crate::ir::LoopId,
+    loop_var: &str,
+    carry_ty: Ty,
+    changed: &mut bool,
+) -> Vec<Stmt> {
+    let mut out = vec![];
+    for s in body {
+        match s {
+            Stmt::For { id, var, lo, hi, body: inner } if id == *target => {
+                // Initial carry: the store's address one iteration before
+                // the loop starts, i.e. store_idx[var := lo - 1].
+                let store_idx = find_store_idx(&inner, buf)
+                    .expect("privatize: serialized loop has a store to the target buffer");
+                let before = Expr::Bin(
+                    crate::ir::BinOp::Sub,
+                    Box::new(lo.clone()),
+                    Box::new(Expr::I(1)),
+                );
+                let init_idx = store_idx.clone().subst_var(&var, &before);
+                out.push(Stmt::Let {
+                    var: CARRY_VAR.into(),
+                    ty: carry_ty,
+                    expr: Expr::Load { buf: buf.to_string(), idx: Box::new(init_idx) },
+                });
+                let (s_stride, s_const, s_res) = affine_wrt(&store_idx, &var)
+                    .expect("privatize: store index must be affine in the loop var");
+                let new_inner = rewrite_loop_body(
+                    inner,
+                    buf,
+                    loop_var,
+                    carry_ty,
+                    (s_stride, s_const, &s_res),
+                    changed,
+                );
+                out.push(Stmt::For { id, var, lo, hi, body: new_inner });
+            }
+            Stmt::For { id, var, lo, hi, body: inner } => {
+                out.push(Stmt::For {
+                    id,
+                    var,
+                    lo,
+                    hi,
+                    body: rewrite(inner, buf, target, loop_var, carry_ty, changed),
+                });
+            }
+            Stmt::If { cond, then_b, else_b } => out.push(Stmt::If {
+                cond,
+                then_b: rewrite(then_b, buf, target, loop_var, carry_ty, changed),
+                else_b: rewrite(else_b, buf, target, loop_var, carry_ty, changed),
+            }),
+            other => out.push(other),
+        }
+    }
+    out
+}
+
+/// The index expression of the (first) store to `buf` in a loop body.
+fn find_store_idx(body: &[Stmt], buf: &str) -> Option<Expr> {
+    let mut found = None;
+    crate::ir::stmt::visit_body(body, &mut |s| {
+        if found.is_none() {
+            if let Stmt::Store { buf: b, idx, .. } = s {
+                if b == buf {
+                    found = Some(idx.clone());
+                }
+            }
+        }
+    });
+    found
+}
+
+fn rewrite_loop_body(
+    body: Vec<Stmt>,
+    buf: &str,
+    loop_var: &str,
+    carry_ty: Ty,
+    store_aff: (i64, i64, &str),
+    changed: &mut bool,
+) -> Vec<Stmt> {
+    let mut out = vec![];
+    for s in body {
+        match s {
+            Stmt::Let { var, ty, expr } => {
+                let expr = replace_dist1_load(expr, buf, loop_var, store_aff, changed);
+                out.push(Stmt::Let { var, ty, expr });
+            }
+            Stmt::Assign { var, expr } => {
+                let expr = replace_dist1_load(expr, buf, loop_var, store_aff, changed);
+                out.push(Stmt::Assign { var, expr });
+            }
+            Stmt::Store { buf: sb, idx, val } => {
+                let val = replace_dist1_load(val, buf, loop_var, store_aff, changed);
+                if sb == buf {
+                    // Materialize the stored value once so the carry update
+                    // does not duplicate its computation (or its loads).
+                    let tmp = format!("{CARRY_VAR}_val");
+                    out.push(Stmt::Let { var: tmp.clone(), ty: carry_ty, expr: val });
+                    out.push(Stmt::Store { buf: sb, idx, val: Expr::Var(tmp.clone()) });
+                    out.push(Stmt::Assign { var: CARRY_VAR.into(), expr: Expr::Var(tmp) });
+                } else {
+                    out.push(Stmt::Store { buf: sb, idx, val });
+                }
+            }
+            Stmt::If { cond, then_b, else_b } => {
+                let cond = replace_dist1_load(cond, buf, loop_var, store_aff, changed);
+                out.push(Stmt::If {
+                    cond,
+                    then_b: rewrite_loop_body(then_b, buf, loop_var, carry_ty, store_aff, changed),
+                    else_b: rewrite_loop_body(else_b, buf, loop_var, carry_ty, store_aff, changed),
+                });
+            }
+            s @ Stmt::For { .. } => out.push(s), // nested loops untouched
+            other => out.push(other),
+        }
+    }
+    out
+}
+
+/// Replace exactly the distance-1 load: same stride and symbolic residue as
+/// the store, constant offset one stride behind (other loads of the buffer
+/// — e.g. NW's previous-row reads — are left alone).
+fn replace_dist1_load(
+    e: Expr,
+    buf: &str,
+    loop_var: &str,
+    store_aff: (i64, i64, &str),
+    changed: &mut bool,
+) -> Expr {
+    let (s_stride, s_const, s_res) = store_aff;
+    let hit = std::cell::Cell::new(false);
+    let out = e.map(&|node| match &node {
+        Expr::Load { buf: b, idx } if b == buf => {
+            if let Some((stride, off, res)) = affine_wrt(idx, loop_var) {
+                if stride == s_stride && res == s_res && s_const - off == s_stride {
+                    hit.set(true);
+                    return Expr::Var(CARRY_VAR.into());
+                }
+            }
+            node
+        }
+        _ => node,
+    });
+    if hit.get() {
+        *changed = true;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::build::*;
+    use crate::ir::{validate_kernel, KernelKind};
+    use crate::transform::feasibility::check_feasible;
+
+    fn nw_like() -> Kernel {
+        KernelBuilder::new("nw", KernelKind::SingleWorkItem)
+            .buf_rw("m", Ty::I32)
+            .buf_ro("s", Ty::I32)
+            .scalar("n", Ty::I32)
+            .body(vec![for_(
+                "j",
+                i(1),
+                p("n"),
+                vec![store(
+                    "m",
+                    v("j"),
+                    (ld("m", v("j") - i(1)) + ld("s", v("j"))).max(i(0)),
+                )],
+            )])
+            .finish()
+    }
+
+    #[test]
+    fn privatization_unlocks_feasibility() {
+        let k = nw_like();
+        assert!(check_feasible(&k).is_err());
+        let p = privatize(&k).unwrap();
+        assert_eq!(validate_kernel(&p), Ok(()));
+        assert!(check_feasible(&p).is_ok(), "still infeasible: {:?}", check_feasible(&p));
+        // the dependent load is gone; only the s[j] load and the initial
+        // carry load remain
+        assert_eq!(p.load_count(), 2);
+        let src = crate::ir::pretty::kernel_to_string(&p);
+        assert!(src.contains(&format!("int {CARRY_VAR} = m[(1 - 1)];")));
+    }
+
+    #[test]
+    fn errors_when_nothing_to_privatize() {
+        let k = KernelBuilder::new("k", KernelKind::SingleWorkItem)
+            .buf_ro("a", Ty::F32)
+            .buf_wo("o", Ty::F32)
+            .scalar("n", Ty::I32)
+            .body(vec![for_("x", i(0), p("n"), vec![store("o", v("x"), ld("a", v("x")))])])
+            .finish();
+        assert!(matches!(privatize(&k), Err(PrivatizeError::NothingToPrivatize(_))));
+    }
+
+    #[test]
+    fn privatized_kernel_semantics_shape() {
+        // The rewritten body must update the carry after the store.
+        let p = privatize(&nw_like()).unwrap();
+        let src = crate::ir::pretty::kernel_to_string(&p);
+        let store_pos = src.find("m[j] =").unwrap();
+        let carry_pos = src.rfind(&format!("{CARRY_VAR} = ")).unwrap();
+        assert!(carry_pos > store_pos);
+    }
+}

@@ -1,0 +1,187 @@
+//! Multiple producers / multiple consumers (paper step 12 and §4.2,
+//! "M2C2"): instantiate the memory/compute pair R times, each replica
+//! working on a contiguous block of the outer iteration space (static load
+//! balancing — the paper found dynamic balancing's busy-waits
+//! counterproductive on FPGA).
+//!
+//! Also supports the paper's explored-and-rejected 1-producer/N-consumer
+//! shape (`replicate_1p`), used by the E4d sweep to reproduce the finding
+//! that separate producers beat a shared one.
+
+use crate::ir::{Expr, Kernel, PipeDecl, Program, Stmt};
+
+/// Split `[lo, hi)` into `parts` contiguous integer ranges at the IR level.
+fn range_bounds(lo: &Expr, hi: &Expr, r: usize, parts: usize) -> (Expr, Expr) {
+    let span = Expr::Bin(
+        crate::ir::BinOp::Sub,
+        Box::new(hi.clone()),
+        Box::new(lo.clone()),
+    );
+    let chunk = |k: usize| -> Expr {
+        // lo + span * k / parts  (evaluated in i64, ordered to avoid
+        // overflow-free is fine at our sizes)
+        Expr::Bin(
+            crate::ir::BinOp::Add,
+            Box::new(lo.clone()),
+            Box::new(Expr::Bin(
+                crate::ir::BinOp::Div,
+                Box::new(Expr::Bin(
+                    crate::ir::BinOp::Mul,
+                    Box::new(span.clone()),
+                    Box::new(Expr::I(k as i64)),
+                )),
+                Box::new(Expr::I(parts as i64)),
+            )),
+        )
+    };
+    let lo_r = if r == 0 { lo.clone() } else { chunk(r) };
+    let hi_r = if r + 1 == parts { hi.clone() } else { chunk(r + 1) };
+    (lo_r, hi_r)
+}
+
+/// Rename every pipe endpoint in a body with a replica suffix.
+fn suffix_pipes(body: &mut [Stmt], suffix: &str) {
+    for s in body.iter_mut() {
+        match s {
+            Stmt::PipeWrite { pipe, .. } => pipe.push_str(suffix),
+            Stmt::PipeRead { pipe, .. } => pipe.push_str(suffix),
+            Stmt::If { then_b, else_b, .. } => {
+                suffix_pipes(then_b, suffix);
+                suffix_pipes(else_b, suffix);
+            }
+            Stmt::For { body, .. } => suffix_pipes(body, suffix),
+            _ => {}
+        }
+    }
+}
+
+/// Build replica `r` of `parts` for one kernel: its *top-level* loop's
+/// bounds are narrowed to the r-th contiguous block; pipes are suffixed.
+/// Panics if the kernel body has no top-level loop (all feed-forward
+/// kernels in this codebase are a single outer loop, possibly after a
+/// preamble of scalar `Let`s).
+fn replica(k: &Kernel, r: usize, parts: usize) -> Kernel {
+    let mut nk = k.clone();
+    nk.name = format!("{}_r{r}", k.name);
+    let suffix = format!("_r{r}");
+    let mut narrowed = false;
+    for s in nk.body.iter_mut() {
+        if let Stmt::For { lo, hi, .. } = s {
+            let (lo_r, hi_r) = range_bounds(lo, hi, r, parts);
+            *lo = lo_r;
+            *hi = hi_r;
+            narrowed = true;
+            break;
+        }
+    }
+    assert!(narrowed, "kernel {} has no top-level loop to split", k.name);
+    suffix_pipes(&mut nk.body, &suffix);
+    let mut next = 0;
+    crate::ir::build::assign_loop_ids(&mut nk.body, &mut next);
+    nk
+}
+
+/// R memory kernels + R compute kernels over contiguous blocks ("MxCx").
+/// `prog` must be a feed-forward pair (2 kernels). R=2 gives the paper's
+/// M2C2 configuration.
+pub fn replicate(prog: &Program, parts: usize) -> Program {
+    assert!(parts >= 1);
+    assert_eq!(prog.kernels.len(), 2, "replicate expects a feed-forward pair");
+    if parts == 1 {
+        return prog.clone();
+    }
+    let mut kernels = vec![];
+    let mut pipes: Vec<PipeDecl> = vec![];
+    for r in 0..parts {
+        for k in &prog.kernels {
+            kernels.push(replica(k, r, parts));
+        }
+        for pd in &prog.pipes {
+            pipes.push(PipeDecl {
+                name: format!("{}_r{r}", pd.name),
+                ty: pd.ty,
+                depth: pd.depth,
+            });
+        }
+    }
+    Program { name: format!("{}_m{parts}c{parts}", prog.name), kernels, pipes }
+}
+
+/// One shared producer + N consumers ("M1CN", explored and found inferior
+/// by the paper): the memory kernel runs the N consumer ranges back to
+/// back, each feeding that consumer's pipe set.
+pub fn replicate_1p(prog: &Program, consumers: usize) -> Program {
+    assert!(consumers >= 1);
+    assert_eq!(prog.kernels.len(), 2, "replicate_1p expects a feed-forward pair");
+    if consumers == 1 {
+        return prog.clone();
+    }
+    let mem = &prog.kernels[0];
+    let cmp = &prog.kernels[1];
+
+    // Producer: concatenate the per-range bodies sequentially.
+    let mut mem_body = vec![];
+    for r in 0..consumers {
+        let rep = replica(mem, r, consumers);
+        mem_body.extend(rep.body);
+    }
+    let mut prod = mem.clone();
+    prod.name = format!("{}_1p", mem.name);
+    prod.body = mem_body;
+    let mut next = 0;
+    crate::ir::build::assign_loop_ids(&mut prod.body, &mut next);
+
+    let mut kernels = vec![prod];
+    let mut pipes = vec![];
+    for r in 0..consumers {
+        kernels.push(replica(cmp, r, consumers));
+        for pd in &prog.pipes {
+            pipes.push(PipeDecl {
+                name: format!("{}_r{r}", pd.name),
+                ty: pd.ty,
+                depth: pd.depth,
+            });
+        }
+    }
+    Program { name: format!("{}_m1c{consumers}", prog.name), kernels, pipes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::validate_program;
+    use crate::transform::examples::fig2_kernel;
+    use crate::transform::feedforward::feedforward;
+
+    #[test]
+    fn m2c2_has_four_kernels_and_doubled_pipes() {
+        let ff = feedforward(&fig2_kernel(), 1).unwrap();
+        let m2 = replicate(&ff, 2);
+        assert_eq!(m2.kernels.len(), 4);
+        assert_eq!(m2.pipes.len(), 2 * ff.pipes.len());
+        assert_eq!(validate_program(&m2), Ok(()));
+    }
+
+    #[test]
+    fn m1c2_has_one_producer() {
+        let ff = feedforward(&fig2_kernel(), 1).unwrap();
+        let m1 = replicate_1p(&ff, 2);
+        assert_eq!(m1.kernels.len(), 3);
+        assert_eq!(validate_program(&m1), Ok(()));
+        // The producer writes to both replicas' pipe sets.
+        let prod = &m1.kernels[0];
+        let mut pipes_written = std::collections::HashSet::new();
+        crate::ir::stmt::visit_body(&prod.body, &mut |s| {
+            if let Stmt::PipeWrite { pipe, .. } = s {
+                pipes_written.insert(pipe.clone());
+            }
+        });
+        assert_eq!(pipes_written.len(), m1.pipes.len());
+    }
+
+    #[test]
+    fn parts_1_is_identity() {
+        let ff = feedforward(&fig2_kernel(), 1).unwrap();
+        assert_eq!(replicate(&ff, 1), ff);
+    }
+}

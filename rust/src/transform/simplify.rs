@@ -1,0 +1,165 @@
+//! Control-flow and expression simplification — the paper's step 13
+//! ("checking the control flow statements conditions inside each kernel
+//! again and simplifying them if possible"), run between the two DCE
+//! passes.
+//!
+//! * constant folding over expressions,
+//! * `if (const)` branch inlining,
+//! * constant-empty `for` removal,
+//! * removal of empty `if`/`for` shells.
+
+use crate::ir::{Expr, Kernel, Stmt, Val};
+
+/// Fold literal subtrees bottom-up.
+pub fn fold_expr(e: Expr) -> Expr {
+    e.map(&|node| match &node {
+        Expr::Bin(op, a, b) => match (as_lit(a), as_lit(b)) {
+            (Some(x), Some(y)) => lit(Expr::eval_bin(*op, x, y)),
+            _ => {
+                // Algebraic identities: x+0, x*1, x*0, 0+x, 1*x.
+                use crate::ir::BinOp::*;
+                match (op, as_lit(a), as_lit(b)) {
+                    (Add, _, Some(Val::I(0))) => (**a).clone(),
+                    (Add, Some(Val::I(0)), _) => (**b).clone(),
+                    (Sub, _, Some(Val::I(0))) => (**a).clone(),
+                    (Mul, _, Some(Val::I(1))) => (**a).clone(),
+                    (Mul, Some(Val::I(1)), _) => (**b).clone(),
+                    (Mul, _, Some(Val::I(0))) => Expr::I(0),
+                    (Mul, Some(Val::I(0)), _) => Expr::I(0),
+                    _ => node,
+                }
+            }
+        },
+        Expr::Un(op, a) => match as_lit(a) {
+            Some(x) => lit(Expr::eval_un(*op, x)),
+            None => node,
+        },
+        Expr::Select(c, t, f) => match as_lit(c) {
+            Some(v) => {
+                if v.is_true() {
+                    (**t).clone()
+                } else {
+                    (**f).clone()
+                }
+            }
+            None => node,
+        },
+        _ => node,
+    })
+}
+
+fn as_lit(e: &Expr) -> Option<Val> {
+    match e {
+        Expr::I(v) => Some(Val::I(*v)),
+        Expr::F(v) => Some(Val::F(*v)),
+        _ => None,
+    }
+}
+
+fn lit(v: Val) -> Expr {
+    match v {
+        Val::I(x) => Expr::I(x),
+        Val::F(x) => Expr::F(x),
+    }
+}
+
+fn simplify_body(body: Vec<Stmt>) -> Vec<Stmt> {
+    let mut out = vec![];
+    for s in body {
+        match s {
+            Stmt::Let { var, ty, expr } => out.push(Stmt::Let { var, ty, expr: fold_expr(expr) }),
+            Stmt::Assign { var, expr } => out.push(Stmt::Assign { var, expr: fold_expr(expr) }),
+            Stmt::Store { buf, idx, val } => {
+                out.push(Stmt::Store { buf, idx: fold_expr(idx), val: fold_expr(val) })
+            }
+            Stmt::PipeWrite { pipe, val } => out.push(Stmt::PipeWrite { pipe, val: fold_expr(val) }),
+            s @ Stmt::PipeRead { .. } => out.push(s),
+            Stmt::If { cond, then_b, else_b } => {
+                let cond = fold_expr(cond);
+                let then_b = simplify_body(then_b);
+                let else_b = simplify_body(else_b);
+                match as_lit(&cond) {
+                    Some(v) => {
+                        // if (const): inline the taken branch
+                        let taken = if v.is_true() { then_b } else { else_b };
+                        out.extend(taken);
+                    }
+                    None => {
+                        if then_b.is_empty() && else_b.is_empty() {
+                            continue; // empty shell
+                        }
+                        out.push(Stmt::If { cond, then_b, else_b });
+                    }
+                }
+            }
+            Stmt::For { id, var, lo, hi, body } => {
+                let lo = fold_expr(lo);
+                let hi = fold_expr(hi);
+                let body = simplify_body(body);
+                if body.is_empty() {
+                    continue;
+                }
+                if let (Some(Val::I(a)), Some(Val::I(b))) = (as_lit(&lo), as_lit(&hi)) {
+                    if a >= b {
+                        continue; // constant-empty range
+                    }
+                }
+                out.push(Stmt::For { id, var, lo, hi, body });
+            }
+        }
+    }
+    out
+}
+
+/// Simplify a kernel in place (returns a new kernel).
+pub fn simplify_kernel(kernel: &Kernel) -> Kernel {
+    let mut k = kernel.clone();
+    k.body = simplify_body(std::mem::take(&mut k.body));
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::build::*;
+    use crate::ir::{KernelKind, Ty};
+
+    #[test]
+    fn folds_constants() {
+        let e = fold_expr((i(2) + i(3)) * i(4));
+        assert_eq!(e, Expr::I(20));
+        let e = fold_expr(v("x") + i(0));
+        assert_eq!(e, v("x"));
+        let e = fold_expr(v("x") * i(0));
+        assert_eq!(e, Expr::I(0));
+    }
+
+    #[test]
+    fn inlines_constant_branches() {
+        let k = KernelBuilder::new("k", KernelKind::SingleWorkItem)
+            .buf_wo("o", Ty::I32)
+            .body(vec![
+                if_else(i(1).eq_(i(1)), vec![store("o", i(0), i(42))], vec![store("o", i(0), i(7))]),
+                if_(i(0).gt(i(5)), vec![store("o", i(1), i(9))]),
+            ])
+            .finish();
+        let s = simplify_kernel(&k);
+        assert_eq!(s.body.len(), 1);
+        assert!(matches!(&s.body[0], Stmt::Store { val: Expr::I(42), .. }));
+    }
+
+    #[test]
+    fn drops_constant_empty_loop_and_empty_shells() {
+        let k = KernelBuilder::new("k", KernelKind::SingleWorkItem)
+            .buf_wo("o", Ty::I32)
+            .scalar("n", Ty::I32)
+            .body(vec![
+                for_("i", i(5), i(5), vec![store("o", v("i"), i(1))]),
+                if_(p("n").gt(i(0)), vec![]),
+                store("o", i(0), i(2)),
+            ])
+            .finish();
+        let s = simplify_kernel(&k);
+        assert_eq!(s.body.len(), 1);
+    }
+}

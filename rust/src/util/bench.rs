@@ -1,0 +1,60 @@
+//! Minimal bench harness (std-only stand-in for `criterion`, unavailable
+//! offline). Benches are `harness = false` binaries that regenerate the
+//! paper's tables/figures and report both the *modelled* FPGA numbers and
+//! the wall-clock cost of the simulation itself (the §Perf signal).
+
+use std::time::Instant;
+
+pub struct BenchReport {
+    name: String,
+    rows: Vec<(String, f64)>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> BenchReport {
+        println!("==== bench: {name} ====");
+        BenchReport { name: name.to_string(), rows: vec![] }
+    }
+
+    /// Time one sample of `f`, print and record it.
+    pub fn sample<T>(&mut self, label: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed().as_secs_f64();
+        println!("{:>40}  wall {:>9.3}s", format!("{}/{label}", self.name), dt);
+        self.rows.push((label.to_string(), dt));
+        out
+    }
+
+    /// Total wall time of all samples.
+    pub fn total(&self) -> f64 {
+        self.rows.iter().map(|(_, t)| t).sum()
+    }
+
+    pub fn finish(self) {
+        println!("{:>40}  wall {:>9.3}s", format!("{}/total", self.name), self.total());
+    }
+}
+
+/// Scale selection for benches: `PIPEFWD_BENCH_SCALE=tiny|small|paper`.
+pub fn bench_scale() -> crate::workloads::Scale {
+    match std::env::var("PIPEFWD_BENCH_SCALE").as_deref() {
+        Ok("tiny") => crate::workloads::Scale::Tiny,
+        Ok("paper") => crate::workloads::Scale::Paper,
+        _ => crate::workloads::Scale::Small,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_records_and_returns() {
+        let mut b = BenchReport::new("t");
+        let x = b.sample("s", || 41 + 1);
+        assert_eq!(x, 42);
+        assert_eq!(b.rows.len(), 1);
+        assert!(b.total() >= 0.0);
+    }
+}

@@ -1,0 +1,5 @@
+//! Std-only utilities replacing unavailable third-party crates (this image
+//! is offline): PRNG, property-testing mini-framework, bench harness.
+pub mod bench;
+pub mod rng;
+pub mod testing;

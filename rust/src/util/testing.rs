@@ -1,0 +1,178 @@
+//! Property-testing mini-framework (std-only stand-in for `proptest`,
+//! unavailable offline) plus a random-kernel generator used to fuzz the
+//! transformation pipeline.
+//!
+//! `check` runs a property over many seeded cases and reports the failing
+//! seed, so failures reproduce with `PIPEFWD_PROP_SEED=<seed>`.
+
+use crate::ir::build::*;
+use crate::ir::{Kernel, KernelKind, Stmt, Ty};
+use crate::sim::mem::MemoryImage;
+use crate::util::rng::Rng;
+
+/// Run `prop` over `cases` seeded inputs; panic with the failing seed.
+pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Rng) -> Result<(), String>) {
+    let (start, count) = match std::env::var("PIPEFWD_PROP_SEED") {
+        Ok(s) => (s.parse::<u64>().expect("PIPEFWD_PROP_SEED must be a u64"), 1),
+        Err(_) => (0x5EED_0000, cases),
+    };
+    for c in 0..count {
+        let seed = start.wrapping_add(c);
+        let mut rng = Rng::new(seed);
+        if let Err(e) = prop(&mut rng) {
+            panic!(
+                "property `{name}` failed (case {c}, seed {seed}): {e}\n\
+                 reproduce with PIPEFWD_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+/// A generated kernel plus a matching input image factory.
+pub struct GenKernel {
+    pub kernel: Kernel,
+    pub n: usize,
+    seed: u64,
+    n_inputs: usize,
+    has_perm: bool,
+}
+
+impl GenKernel {
+    /// Fresh memory image with deterministic contents for this kernel.
+    pub fn image(&self) -> MemoryImage {
+        let mut rng = Rng::new(self.seed ^ 0xDA7A);
+        let mut m = MemoryImage::new();
+        for b in 0..self.n_inputs {
+            let data: Vec<f32> = (0..self.n).map(|_| rng.f32_range(-2.0, 2.0)).collect();
+            m.add_f32s(&format!("in{b}"), &data);
+        }
+        if self.has_perm {
+            m.add_i64s("perm", &rng.permutation(self.n));
+        }
+        m.add_zeros("out", Ty::F32, self.n);
+        m.add_zeros("out2", Ty::F32, self.n);
+        m.set_i("n", self.n as i64);
+        m
+    }
+}
+
+/// Generate a random feed-forward-eligible single work-item kernel:
+/// reads from read-only inputs (sequential, offset, or permuted indices),
+/// mixes arithmetic, conditionals and an optional inner reduction loop,
+/// stores to write-only outputs. No same-buffer load+store pairs, so the
+/// split is always feasible and all variants must agree exactly.
+pub fn gen_kernel(rng: &mut Rng) -> GenKernel {
+    let seed = rng.next_u64();
+    let mut g = Rng::new(seed);
+    let n_inputs = 1 + g.below(3) as usize; // 1..=3 input buffers
+    let has_perm = g.chance(0.5);
+    let n = 64 + 16 * g.below(8) as usize;
+
+    let mut body: Vec<Stmt> = vec![];
+    let mut exprs: Vec<String> = vec![]; // defined float vars
+
+    // loads
+    let n_loads = 1 + g.below(4) as usize;
+    for l in 0..n_loads {
+        let buf = format!("in{}", g.below(n_inputs as u64));
+        let idx = match g.below(3) {
+            0 => v("t"),
+            1 => (v("t") + i(g.range(1, 8))) % p("n"),
+            _ => {
+                if has_perm {
+                    ld("perm", v("t"))
+                } else {
+                    v("t")
+                }
+            }
+        };
+        let name = format!("x{l}");
+        body.push(let_f(&name, ld(&buf, idx)));
+        exprs.push(name);
+    }
+
+    // arithmetic
+    let n_ops = 1 + g.below(5) as usize;
+    for o in 0..n_ops {
+        let a = exprs[g.below(exprs.len() as u64) as usize].clone();
+        let b = exprs[g.below(exprs.len() as u64) as usize].clone();
+        let e = match g.below(4) {
+            0 => v(&a) + v(&b),
+            1 => v(&a) * f(0.5) + v(&b),
+            2 => v(&a).min(v(&b) + f(0.25)),
+            _ => v(&a).max(v(&b)) - f(0.125),
+        };
+        let name = format!("y{o}");
+        body.push(let_f(&name, e));
+        exprs.push(name);
+    }
+
+    // optional conditional store path
+    let last = exprs.last().unwrap().clone();
+    if g.chance(0.6) {
+        let c0 = exprs[g.below(exprs.len() as u64) as usize].clone();
+        body.push(if_else(
+            v(&c0).gt(f(0.0)),
+            vec![store("out2", v("t"), v(&last) * f(2.0))],
+            vec![store("out2", v("t"), f(-1.0))],
+        ));
+    } else {
+        body.push(store("out2", v("t"), v(&last)));
+    }
+
+    // optional inner reduction loop (a DLCD the split must relocate)
+    if g.chance(0.5) {
+        let trip = g.range(2, 6);
+        let src = format!("in{}", g.below(n_inputs as u64));
+        body.push(let_f("red", f(0.0)));
+        body.push(for_(
+            "j",
+            i(0),
+            i(trip),
+            vec![assign(
+                "red",
+                v("red") + ld(&src, (v("t") + v("j")) % p("n")),
+            )],
+        ));
+        body.push(store("out", v("t"), v(&last) + v("red")));
+    } else {
+        body.push(store("out", v("t"), v(&last) * f(3.0)));
+    }
+
+    let mut kb = KernelBuilder::new("genk", KernelKind::SingleWorkItem);
+    for b in 0..n_inputs {
+        kb = kb.buf_ro(&format!("in{b}"), Ty::F32);
+    }
+    if has_perm {
+        kb = kb.buf_ro("perm", Ty::I32);
+    }
+    let kernel = kb
+        .buf_wo("out", Ty::F32)
+        .buf_wo("out2", Ty::F32)
+        .scalar("n", Ty::I32)
+        .body(vec![for_("t", i(0), p("n"), body)])
+        .finish();
+    GenKernel { kernel, n, seed, n_inputs, has_perm }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::validate_kernel;
+
+    #[test]
+    fn generated_kernels_always_validate() {
+        check("gen_validates", 50, |rng| {
+            let g = gen_kernel(rng);
+            validate_kernel(&g.kernel).map_err(|e| e.to_string())
+        });
+    }
+
+    #[test]
+    fn generated_kernels_are_ff_feasible() {
+        check("gen_feasible", 50, |rng| {
+            let g = gen_kernel(rng);
+            crate::transform::check_feasible(&g.kernel).map_err(|e| e.to_string())
+        });
+    }
+}

@@ -1,0 +1,244 @@
+//! Breadth-First Search (Pannotia-style frontier BFS, Table 2: 13.84x).
+//!
+//! Three launch units per level:
+//!  * `bfs_clear`  — zero the `updating` mask (stores only, II=1);
+//!  * `bfs_kernel` — expand the frontier: for every frontier node walk its
+//!    edges and relax unvisited neighbours. `cost` is loaded *and* stored
+//!    inside the edge loop, so the conservative compiler serializes the
+//!    edge loop (false MLCD — the distance is through different elements);
+//!  * `bfs_update` — rebuild `frontier`/`visited` from `updating` and set
+//!    the stop flag (all cross-buffer, II=1).
+//!
+//! The host iterates levels until the stop flag stays clear.
+
+use super::{App, Harness, Scale, Workload};
+use crate::ir::build::*;
+use crate::ir::{Kernel, KernelKind, Ty, Val};
+use crate::sim::exec::ExecError;
+use crate::sim::mem::MemoryImage;
+use crate::workloads::datagen::{self, CsrGraph};
+
+pub struct Bfs;
+
+pub const SEED: u64 = 0xBF5;
+pub const INF: i64 = 1 << 30;
+
+pub fn graph(scale: Scale) -> CsrGraph {
+    match scale {
+        Scale::Tiny => datagen::random_graph(512, 8, SEED),
+        Scale::Small => datagen::random_graph(40_000, 12, SEED),
+        Scale::Paper => datagen::random_graph(2_000_000, 12, SEED),
+    }
+}
+
+/// Native reference: BFS levels from node 0.
+pub fn reference(g: &CsrGraph) -> Vec<i64> {
+    let mut cost = vec![INF; g.n];
+    cost[0] = 0;
+    let mut frontier = vec![0usize];
+    let mut level = 0i64;
+    while !frontier.is_empty() {
+        let mut next = vec![];
+        for &v in &frontier {
+            for &u in g.neighbors(v) {
+                if cost[u as usize] == INF {
+                    cost[u as usize] = level + 1;
+                    next.push(u as usize);
+                }
+            }
+        }
+        frontier = next;
+        level += 1;
+    }
+    cost
+}
+
+impl Workload for Bfs {
+    fn name(&self) -> &'static str {
+        "bfs"
+    }
+
+    fn suite(&self) -> &'static str {
+        "Rodinia"
+    }
+
+    fn dwarf(&self) -> &'static str {
+        "Graph Traversal"
+    }
+
+    fn pattern(&self) -> &'static str {
+        "Irregular"
+    }
+
+    fn dataset_desc(&self, scale: Scale) -> String {
+        let g = match scale {
+            Scale::Tiny => "512".to_string(),
+            Scale::Small => "40k".to_string(),
+            Scale::Paper => "2M".to_string(),
+        };
+        format!("uniform random graph, #nodes={g}, avg degree 12")
+    }
+
+    fn dominant(&self) -> &'static str {
+        "bfs_kernel"
+    }
+
+    fn kernels(&self) -> Vec<Kernel> {
+        let clear = KernelBuilder::new("bfs_clear", KernelKind::SingleWorkItem)
+            .buf_wo("updating", Ty::I32)
+            .scalar("num_nodes", Ty::I32)
+            .body(vec![for_(
+                "t2",
+                i(0),
+                p("num_nodes"),
+                vec![store("updating", v("t2"), i(0))],
+            )])
+            .finish();
+
+        let expand = KernelBuilder::new("bfs_kernel", KernelKind::SingleWorkItem)
+            .buf_ro("frontier", Ty::I32)
+            .buf_ro("row", Ty::I32)
+            .buf_ro("col", Ty::I32)
+            .buf_ro("visited", Ty::I32)
+            .buf_rw("cost", Ty::I32)
+            .buf_wo("updating", Ty::I32)
+            .scalar("num_nodes", Ty::I32)
+            .body(vec![for_(
+                "t2",
+                i(0),
+                p("num_nodes"),
+                vec![if_(
+                    ld("frontier", v("t2")).eq_(i(1)),
+                    vec![
+                        let_i("start", ld("row", v("t2"))),
+                        let_i("end", ld("row", v("t2") + i(1))),
+                        for_(
+                            "e",
+                            v("start"),
+                            v("end"),
+                            vec![
+                                let_i("id", ld("col", v("e"))),
+                                if_(
+                                    ld("visited", v("id")).eq_(i(0)),
+                                    vec![
+                                        // cost loaded AND stored here: the
+                                        // false MLCD that serializes the loop
+                                        let_i("c", ld("cost", v("t2"))),
+                                        store("cost", v("id"), v("c") + i(1)),
+                                        store("updating", v("id"), i(1)),
+                                    ],
+                                ),
+                            ],
+                        ),
+                    ],
+                )],
+            )])
+            .finish();
+
+        let update = KernelBuilder::new("bfs_update", KernelKind::SingleWorkItem)
+            .buf_ro("updating", Ty::I32)
+            .buf_wo("frontier", Ty::I32)
+            .buf_wo("visited", Ty::I32)
+            .buf_wo("stop", Ty::I32)
+            .scalar("num_nodes", Ty::I32)
+            .body(vec![for_(
+                "t2",
+                i(0),
+                p("num_nodes"),
+                vec![
+                    let_i("u", ld("updating", v("t2"))),
+                    store("frontier", v("t2"), v("u")),
+                    if_(
+                        v("u").eq_(i(1)),
+                        vec![store("visited", v("t2"), i(1)), store("stop", i(0), i(1))],
+                    ),
+                ],
+            )])
+            .finish();
+
+        vec![clear, expand, update]
+    }
+
+    fn image(&self, scale: Scale) -> MemoryImage {
+        let g = graph(scale);
+        let mut m = MemoryImage::new();
+        let mut cost = vec![INF; g.n];
+        cost[0] = 0;
+        let mut frontier = vec![0i64; g.n];
+        frontier[0] = 1;
+        let mut visited = vec![0i64; g.n];
+        visited[0] = 1;
+        m.add_i64s("row", &g.row)
+            .add_i64s("col", &g.col)
+            .add_i64s("cost", &cost)
+            .add_i64s("frontier", &frontier)
+            .add_i64s("visited", &visited)
+            .add_zeros("updating", Ty::I32, g.n)
+            .add_zeros("stop", Ty::I32, 1);
+        m.set_i("num_nodes", g.n as i64);
+        m
+    }
+
+    fn run(&self, app: &App, img: &mut MemoryImage, h: &mut Harness) -> Result<(), ExecError> {
+        let n = img.scalar("num_nodes").unwrap().as_i();
+        for _level in 0..n {
+            img.buf("stop").unwrap().set(0, Val::I(0));
+            h.launch(app.unit("bfs_clear"), img)?;
+            h.launch(app.unit("bfs_kernel"), img)?;
+            h.launch(app.unit("bfs_update"), img)?;
+            if img.buf("stop").unwrap().get(0).as_i() == 0 {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    fn validate(&self, img: &MemoryImage, scale: Scale) -> Result<(), String> {
+        let g = graph(scale);
+        let want = reference(&g);
+        let got = img.buf("cost").unwrap().to_i64s();
+        for (ix, (g_, w)) in got.iter().zip(&want).enumerate() {
+            if g_ != w {
+                return Err(format!("bfs: cost[{ix}] = {g_}, want {w}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::device::DeviceConfig;
+    use crate::transform::Variant;
+    use crate::workloads::run_workload;
+
+    #[test]
+    fn expand_kernel_is_serialized_on_cost() {
+        let ks = Bfs.kernels();
+        let rep = crate::analysis::report::KernelReport::for_kernel(&ks[1]);
+        assert!(rep.max_ii() > 200, "ii = {}", rep.max_ii());
+        let ser = rep.loops.iter().find(|l| l.serialized_by.is_some()).unwrap();
+        assert_eq!(ser.serialized_by.as_deref(), Some("cost"));
+        assert_eq!(ser.depth, 1); // the edge loop, not the node loop
+        // clear/update pipeline fine
+        for k in [&ks[0], &ks[2]] {
+            assert_eq!(crate::analysis::report::KernelReport::for_kernel(k).max_ii(), 1);
+        }
+    }
+
+    #[test]
+    fn tiny_baseline_validates() {
+        let cfg = DeviceConfig::pac_a10();
+        run_workload(&Bfs, Variant::Baseline, Scale::Tiny, &cfg).unwrap();
+    }
+
+    #[test]
+    fn tiny_ff_validates_and_speeds_up() {
+        let cfg = DeviceConfig::pac_a10();
+        let base = run_workload(&Bfs, Variant::Baseline, Scale::Tiny, &cfg).unwrap();
+        let ff = run_workload(&Bfs, Variant::FeedForward { depth: 1 }, Scale::Tiny, &cfg).unwrap();
+        let speedup = base.metrics.seconds / ff.metrics.seconds;
+        assert!(speedup > 2.0, "bfs tiny ff speedup = {speedup}");
+    }
+}

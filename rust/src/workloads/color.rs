@@ -1,0 +1,228 @@
+//! Graph Coloring (Pannotia `color_max`, Table 2: 1.02x — the benchmark
+//! where feed-forward neither helps nor hurts).
+//!
+//! Unlike MIS, the gather kernel writes only cross-buffer outputs
+//! (`node_max`), so the baseline already pipelines at II=1 and is bound by
+//! its irregular gather traffic; the split moves the same traffic into the
+//! memory kernel and performance stays put.
+
+use super::{App, Harness, Scale, Workload};
+use crate::ir::build::*;
+use crate::ir::{Kernel, KernelKind, Ty, Val};
+use crate::sim::exec::ExecError;
+use crate::sim::mem::MemoryImage;
+use crate::workloads::datagen::{self, CsrGraph};
+
+pub struct Color;
+
+pub const SEED: u64 = 0xC010;
+pub const SMALL: f32 = -1.0e30;
+
+pub fn graph(scale: Scale) -> CsrGraph {
+    match scale {
+        Scale::Tiny => datagen::circuit_graph(128, 8, SEED),
+        Scale::Small => datagen::circuit_graph(30_000, 12, SEED),
+        Scale::Paper => datagen::circuit_graph(1_500_000, 12, SEED),
+    }
+}
+
+/// Native reference: Jones–Plassmann max rounds; color[v] = round when v's
+/// value beats all uncolored neighbours.
+pub fn reference(g: &CsrGraph, values: &[f32]) -> Vec<i64> {
+    let mut color = vec![-1i64; g.n];
+    for round in 0.. {
+        let mut any = false;
+        let mut decide = vec![];
+        for v in 0..g.n {
+            if color[v] >= 0 {
+                continue;
+            }
+            any = true;
+            let mut mx = SMALL;
+            for &u in g.neighbors(v) {
+                if color[u as usize] < 0 && u as usize != v {
+                    mx = mx.max(values[u as usize]);
+                }
+            }
+            if values[v] > mx {
+                decide.push((v, round));
+            }
+        }
+        if !any {
+            break;
+        }
+        for (v, c) in decide {
+            color[v] = c;
+        }
+    }
+    color
+}
+
+impl Workload for Color {
+    fn name(&self) -> &'static str {
+        "color"
+    }
+
+    fn suite(&self) -> &'static str {
+        "Pannotia"
+    }
+
+    fn dwarf(&self) -> &'static str {
+        "Graph Traversal"
+    }
+
+    fn pattern(&self) -> &'static str {
+        "Irregular"
+    }
+
+    fn dataset_desc(&self, scale: Scale) -> String {
+        format!(
+            "circuit-like graph (G3_circuit stand-in), #nodes={}",
+            graph(scale).n
+        )
+    }
+
+    fn dominant(&self) -> &'static str {
+        "color_kernel"
+    }
+
+    fn kernels(&self) -> Vec<Kernel> {
+        let gather = KernelBuilder::new("color_kernel", KernelKind::SingleWorkItem)
+            .buf_ro("color", Ty::I32)
+            .buf_ro("row", Ty::I32)
+            .buf_ro("col", Ty::I32)
+            .buf_ro("node_value", Ty::F32)
+            .buf_wo("node_max", Ty::F32)
+            .buf_wo("stop", Ty::I32)
+            .scalar("num_nodes", Ty::I32)
+            .body(vec![for_(
+                "t2",
+                i(0),
+                p("num_nodes"),
+                vec![if_(
+                    ld("color", v("t2")).lt(i(0)),
+                    vec![
+                        store("stop", i(0), i(1)),
+                        let_i("start", ld("row", v("t2"))),
+                        let_i("end", ld("row", v("t2") + i(1))),
+                        let_f("mx", f(SMALL)),
+                        for_(
+                            "e",
+                            v("start"),
+                            v("end"),
+                            vec![
+                                let_i("j", ld("col", v("e"))),
+                                if_(
+                                    ld("color", v("j")).lt(i(0)).and(v("j").ne(v("t2"))),
+                                    vec![assign("mx", v("mx").max(ld("node_value", v("j"))))],
+                                ),
+                            ],
+                        ),
+                        store("node_max", v("t2"), v("mx")),
+                    ],
+                )],
+            )])
+            .finish();
+
+        let assign_k = KernelBuilder::new("color_assign", KernelKind::SingleWorkItem)
+            .buf_ro("color", Ty::I32)
+            .buf_ro("node_value", Ty::F32)
+            .buf_ro("node_max", Ty::F32)
+            .buf_wo("color_next", Ty::I32)
+            .scalar("num_nodes", Ty::I32)
+            .scalar("round", Ty::I32)
+            .body(vec![for_(
+                "t2",
+                i(0),
+                p("num_nodes"),
+                vec![
+                    let_i("c", ld("color", v("t2"))),
+                    if_else(
+                        v("c").lt(i(0)).and(ld("node_value", v("t2")).gt(ld("node_max", v("t2")))),
+                        vec![store("color_next", v("t2"), p("round"))],
+                        vec![store("color_next", v("t2"), v("c"))],
+                    ),
+                ],
+            )])
+            .finish();
+
+        vec![gather, assign_k]
+    }
+
+    fn image(&self, scale: Scale) -> MemoryImage {
+        let g = graph(scale);
+        let values = datagen::node_values(g.n, SEED ^ 1);
+        let mut m = MemoryImage::new();
+        m.add_i64s("row", &g.row)
+            .add_i64s("col", &g.col)
+            .add_f32s("node_value", &values)
+            .add_i64s("color", &vec![-1; g.n])
+            .add_zeros("color_next", Ty::I32, g.n)
+            .add_f32s("node_max", &vec![SMALL; g.n])
+            .add_zeros("stop", Ty::I32, 1);
+        m.set_i("num_nodes", g.n as i64).set_i("round", 0);
+        m
+    }
+
+    fn run(&self, app: &App, img: &mut MemoryImage, h: &mut Harness) -> Result<(), ExecError> {
+        let n = img.scalar("num_nodes").unwrap().as_i();
+        for round in 0..n {
+            img.set_scalar("round", Val::I(round));
+            img.buf("stop").unwrap().set(0, Val::I(0));
+            h.launch(app.unit("color_kernel"), img)?;
+            if img.buf("stop").unwrap().get(0).as_i() == 0 {
+                break;
+            }
+            h.launch(app.unit("color_assign"), img)?;
+            img.swap_bufs("color", "color_next");
+        }
+        Ok(())
+    }
+
+    fn validate(&self, img: &MemoryImage, scale: Scale) -> Result<(), String> {
+        let g = graph(scale);
+        let values = datagen::node_values(g.n, SEED ^ 1);
+        let want = reference(&g, &values);
+        let got = img.buf("color").unwrap().to_i64s();
+        if got != want {
+            let ix = got.iter().zip(&want).position(|(a, b)| a != b).unwrap();
+            return Err(format!("color: c[{ix}] = {}, want {}", got[ix], want[ix]));
+        }
+        // Proper coloring property.
+        for v in 0..g.n {
+            if got[v] < 0 {
+                return Err(format!("color: node {v} uncolored"));
+            }
+            for &u in g.neighbors(v) {
+                if u as usize != v && got[u as usize] == got[v] {
+                    return Err(format!("color: adjacent {v},{u} share color {}", got[v]));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::device::DeviceConfig;
+    use crate::transform::Variant;
+    use crate::workloads::run_workload;
+
+    #[test]
+    fn gather_is_not_serialized() {
+        let ks = Color.kernels();
+        let rep = crate::analysis::report::KernelReport::for_kernel(&ks[0]);
+        assert!(rep.loops.iter().all(|l| l.serialized_by.is_none()));
+    }
+
+    #[test]
+    fn tiny_baseline_and_ff_validate_with_flat_speedup() {
+        let cfg = DeviceConfig::pac_a10();
+        let base = run_workload(&Color, Variant::Baseline, Scale::Tiny, &cfg).unwrap();
+        let ff = run_workload(&Color, Variant::FeedForward { depth: 1 }, Scale::Tiny, &cfg).unwrap();
+        let speedup = base.metrics.seconds / ff.metrics.seconds;
+        assert!(speedup > 0.6 && speedup < 1.5, "color ff speedup = {speedup}");
+    }
+}

@@ -1,0 +1,191 @@
+//! Synthetic dataset generators standing in for the paper's datasets
+//! (Table 1): random/power-law CSR graphs for the Pannotia benchmarks
+//! (G3_circuit, 2M-node BFS graphs), 2D/3D grids for Hotspot, random
+//! points for KNN, random weight matrices for BackProp.
+
+use crate::util::rng::Rng;
+
+/// A CSR graph with sorted adjacency lists.
+#[derive(Debug, Clone)]
+pub struct CsrGraph {
+    pub n: usize,
+    pub row: Vec<i64>, // n+1 entries
+    pub col: Vec<i64>,
+}
+
+impl CsrGraph {
+    pub fn edges(&self) -> usize {
+        self.col.len()
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        (self.row[v + 1] - self.row[v]) as usize
+    }
+
+    pub fn neighbors(&self, v: usize) -> &[i64] {
+        &self.col[self.row[v] as usize..self.row[v + 1] as usize]
+    }
+}
+
+/// Uniform random undirected graph with expected average degree `deg`,
+/// plus a ring backbone so the graph is connected (BFS from node 0 must
+/// reach everything). Sorted neighbor lists give CSR col arrays the
+/// partial locality real graph datasets exhibit.
+pub fn random_graph(n: usize, deg: usize, seed: u64) -> CsrGraph {
+    let mut rng = Rng::new(seed);
+    let m = n * deg.saturating_sub(2) / 2;
+    let mut adj: Vec<Vec<i64>> = vec![vec![]; n];
+    for v in 0..n {
+        let u = (v + 1) % n;
+        adj[v].push(u as i64);
+        adj[u].push(v as i64);
+    }
+    for _ in 0..m {
+        let a = rng.below(n as u64) as usize;
+        let b = rng.below(n as u64) as usize;
+        if a != b {
+            adj[a].push(b as i64);
+            adj[b].push(a as i64);
+        }
+    }
+    build_csr(n, adj)
+}
+
+/// Circuit-like graph (G3_circuit stand-in): mostly short-range mesh
+/// neighbours plus a few long-range nets — near-regular degree, moderate
+/// locality, like a circuit netlist.
+pub fn circuit_graph(n: usize, deg: usize, seed: u64) -> CsrGraph {
+    let mut rng = Rng::new(seed);
+    let mut adj: Vec<Vec<i64>> = vec![vec![]; n];
+    for v in 0..n {
+        let local = deg.saturating_sub(1).max(1);
+        for _ in 0..local / 2 {
+            // short-range net: a few rows away (2..64) — circuit netlists
+            // are local but not contiguous, so gathers stay irregular
+            let off = rng.range(2, 64);
+            let u = (v as i64 + off).rem_euclid(n as i64) as usize;
+            if u != v {
+                adj[v].push(u as i64);
+                adj[u].push(v as i64);
+            }
+        }
+        if rng.chance(0.25) {
+            // occasional long net
+            let u = rng.below(n as u64) as usize;
+            if u != v {
+                adj[v].push(u as i64);
+                adj[u].push(v as i64);
+            }
+        }
+    }
+    build_csr(n, adj)
+}
+
+fn build_csr(n: usize, mut adj: Vec<Vec<i64>>) -> CsrGraph {
+    let mut row = Vec::with_capacity(n + 1);
+    let mut col = vec![];
+    row.push(0i64);
+    for a in adj.iter_mut() {
+        a.sort_unstable();
+        a.dedup();
+        col.extend_from_slice(a);
+        row.push(col.len() as i64);
+    }
+    CsrGraph { n, row, col }
+}
+
+/// Random node values in (0, 1) — the MIS/Color priority values.
+pub fn node_values(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    // strictly distinct values so greedy MIS/Color tie-breaks are stable
+    let mut v: Vec<f32> = (0..n).map(|i| (i as f32 + 0.5) / n as f32).collect();
+    rng.shuffle(&mut v);
+    v
+}
+
+/// Hotspot-style 2D grids: temperatures around ambient, power in [0,1).
+pub fn hotspot_grids(rows: usize, cols: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let temp: Vec<f32> = (0..rows * cols).map(|_| rng.f32_range(50.0, 90.0)).collect();
+    let power: Vec<f32> = (0..rows * cols).map(|_| rng.f32()).collect();
+    (temp, power)
+}
+
+/// Random non-negative distance matrix with zero diagonal (FW input).
+pub fn distance_matrix(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut d = vec![0.0f32; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                d[i * n + j] = rng.f32_range(1.0, 100.0);
+            }
+        }
+    }
+    d
+}
+
+/// Random f32 matrix with entries in [-s, s).
+pub fn matrix(rows: usize, cols: usize, s: f32, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..rows * cols).map(|_| rng.f32_range(-s, s)).collect()
+}
+
+/// NW-style random sequence-similarity scores in [-4, 5).
+pub fn nw_scores(n: usize, seed: u64) -> Vec<i64> {
+    let mut rng = Rng::new(seed);
+    (0..n * n).map(|_| rng.range(-4, 5)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csr_well_formed() {
+        let g = random_graph(1000, 8, 1);
+        assert_eq!(g.row.len(), 1001);
+        assert_eq!(*g.row.last().unwrap() as usize, g.col.len());
+        let avg = g.edges() as f64 / g.n as f64;
+        assert!(avg > 4.0 && avg < 10.0, "avg degree {avg}");
+        for v in 0..g.n {
+            let nb = g.neighbors(v);
+            for w in nb.windows(2) {
+                assert!(w[0] < w[1], "sorted+dedup");
+            }
+        }
+    }
+
+    #[test]
+    fn circuit_graph_has_locality() {
+        let g = circuit_graph(10_000, 12, 2);
+        let mut near = 0usize;
+        let mut total = 0usize;
+        for v in 0..g.n {
+            for &u in g.neighbors(v) {
+                total += 1;
+                if (u - v as i64).abs() <= 64 {
+                    near += 1;
+                }
+            }
+        }
+        assert!(near as f64 / total as f64 > 0.5, "local fraction");
+    }
+
+    #[test]
+    fn distance_matrix_zero_diag() {
+        let d = distance_matrix(16, 3);
+        for i in 0..16 {
+            assert_eq!(d[i * 16 + i], 0.0);
+        }
+    }
+
+    #[test]
+    fn node_values_distinct() {
+        let v = node_values(1000, 4);
+        let mut s = v.clone();
+        s.sort_by(f32::total_cmp);
+        s.dedup();
+        assert_eq!(s.len(), 1000);
+    }
+}

@@ -1,0 +1,164 @@
+//! Floyd–Warshall (Pannotia) — the paper's headline benchmark: 64.95x from
+//! the feed-forward split (Table 2), driven by a false MLCD on `dist` that
+//! serializes the relaxation loop at II=285 (E4a).
+//!
+//! Host loops over pivots; the kernel relaxes all pairs for a fixed pivot.
+//! Note the paper's §4.2 observation that FF+pipes makes the concurrent
+//! read/write of `dist` benign: for pivot k, row k and column k are fixed
+//! points of the relaxation, so the memory and compute kernels never race
+//! on a value that changes.
+
+use super::{App, Harness, Scale, Workload};
+use crate::ir::build::*;
+use crate::ir::{Kernel, KernelKind, Ty, Val};
+use crate::sim::exec::ExecError;
+use crate::sim::mem::MemoryImage;
+use crate::workloads::datagen;
+
+pub struct Fw;
+
+pub const SEED: u64 = 0xF10D;
+
+pub fn size(scale: Scale) -> usize {
+    match scale {
+        Scale::Tiny => 64, // matches artifacts/fw.hlo.txt
+        Scale::Small => 128,
+        Scale::Paper => 512,
+    }
+}
+
+/// Native reference (same f32 evaluation order as the kernel).
+pub fn reference(dist: &mut [f32], n: usize) {
+    for k in 0..n {
+        for i in 0..n {
+            let dik = dist[i * n + k];
+            for j in 0..n {
+                let cand = dik + dist[k * n + j];
+                if cand < dist[i * n + j] {
+                    dist[i * n + j] = cand;
+                }
+            }
+        }
+    }
+}
+
+impl Workload for Fw {
+    fn name(&self) -> &'static str {
+        "fw"
+    }
+
+    fn suite(&self) -> &'static str {
+        "Pannotia"
+    }
+
+    fn dwarf(&self) -> &'static str {
+        "Graph Traversal"
+    }
+
+    fn pattern(&self) -> &'static str {
+        "Irregular"
+    }
+
+    fn dataset_desc(&self, scale: Scale) -> String {
+        format!("dense distance matrix, |V|={}", size(scale))
+    }
+
+    fn dominant(&self) -> &'static str {
+        "fw_kernel"
+    }
+
+    fn kernels(&self) -> Vec<Kernel> {
+        // for (i) for (j) dist[i*n+j] = min(dist[i*n+j], dist[i*n+k] + dist[k*n+j])
+        let body = vec![for_(
+            "i2",
+            i(0),
+            p("n"),
+            vec![for_(
+                "j2",
+                i(0),
+                p("n"),
+                vec![store(
+                    "dist",
+                    v("i2") * p("n") + v("j2"),
+                    ld("dist", v("i2") * p("n") + v("j2"))
+                        .min(ld("dist", v("i2") * p("n") + p("k")) + ld("dist", p("k") * p("n") + v("j2"))),
+                )],
+            )],
+        )];
+        vec![KernelBuilder::new("fw_kernel", KernelKind::SingleWorkItem)
+            .buf_rw("dist", Ty::F32)
+            .scalar("n", Ty::I32)
+            .scalar("k", Ty::I32)
+            .body(body)
+            .finish()]
+    }
+
+    fn image(&self, scale: Scale) -> MemoryImage {
+        let n = size(scale);
+        let mut m = MemoryImage::new();
+        m.add_f32s("dist", &datagen::distance_matrix(n, SEED));
+        m.set_i("n", n as i64).set_i("k", 0);
+        m
+    }
+
+    fn run(&self, app: &App, img: &mut MemoryImage, h: &mut Harness) -> Result<(), ExecError> {
+        let n = img.scalar("n").unwrap().as_i();
+        for k in 0..n {
+            img.set_scalar("k", Val::I(k));
+            h.launch(app.unit("fw_kernel"), img)?;
+        }
+        Ok(())
+    }
+
+    fn validate(&self, img: &MemoryImage, scale: Scale) -> Result<(), String> {
+        let n = size(scale);
+        let mut want = datagen::distance_matrix(n, SEED);
+        reference(&mut want, n);
+        let got = img.buf("dist").unwrap().to_f32s();
+        for (ix, (g, w)) in got.iter().zip(&want).enumerate() {
+            if (g - w).abs() > 1e-3 * w.abs().max(1.0) {
+                return Err(format!("fw: dist[{ix}] = {g}, want {w}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::device::DeviceConfig;
+    use crate::transform::Variant;
+    use crate::workloads::run_workload;
+
+    #[test]
+    fn baseline_is_serialized_at_285() {
+        let k = &Fw.kernels()[0];
+        let rep = crate::analysis::report::KernelReport::for_kernel(k);
+        assert_eq!(rep.max_ii(), 285);
+    }
+
+    #[test]
+    fn tiny_baseline_validates() {
+        let cfg = DeviceConfig::pac_a10();
+        run_workload(&Fw, Variant::Baseline, Scale::Tiny, &cfg).unwrap();
+    }
+
+    #[test]
+    fn tiny_ff_matches_baseline_and_is_much_faster() {
+        let cfg = DeviceConfig::pac_a10();
+        let base = run_workload(&Fw, Variant::Baseline, Scale::Tiny, &cfg).unwrap();
+        let ff = run_workload(&Fw, Variant::FeedForward { depth: 1 }, Scale::Tiny, &cfg).unwrap();
+        let speedup = base.metrics.seconds / ff.metrics.seconds;
+        assert!(speedup > 20.0, "fw tiny ff speedup = {speedup}");
+        // FF must pipeline at II=1 (E4a)
+        assert_eq!(ff.max_ii, 1);
+        assert_eq!(base.max_ii, 285);
+    }
+
+    #[test]
+    fn m2c2_validates() {
+        let cfg = DeviceConfig::pac_a10();
+        run_workload(&Fw, Variant::MxCx { parts: 2, depth: 1 }, Scale::Tiny, &cfg).unwrap();
+    }
+}

@@ -1,0 +1,253 @@
+//! Hotspot (Rodinia) — thermal 5-point stencil. The baseline already
+//! pipelines at II=1 (all cross-buffer accesses), so the feed-forward
+//! split only adds channel overhead: the paper measures 0.85x (Table 2).
+//! M2C2 roughly doubles it back (§3: 7340 -> 13660 MB/s, "up to 93%").
+//!
+//! The kernel updates interior cells; the host replicates the boundary
+//! (edge cells keep their temperature) and ping-pongs the two grids.
+//! Cross-validated against the Pallas artifact `hotspot.hlo.txt` at Tiny
+//! scale by the runtime integration tests.
+
+use super::{App, Harness, Scale, Workload};
+use crate::ir::build::*;
+use crate::ir::{Kernel, KernelKind, Ty};
+use crate::sim::exec::ExecError;
+use crate::sim::mem::MemoryImage;
+use crate::workloads::datagen;
+
+pub struct Hotspot;
+
+pub const SEED: u64 = 0x407;
+
+// Rodinia-flavoured constants — keep in sync with python/compile/kernels/hotspot.py.
+pub const SDC: f32 = 0.1;
+pub const RX: f32 = 0.5;
+pub const RY: f32 = 0.4;
+pub const RZ: f32 = 0.05;
+pub const AMB: f32 = 80.0;
+
+pub fn dims(scale: Scale) -> (usize, usize, usize) {
+    // (rows, cols, steps)
+    match scale {
+        Scale::Tiny => (64, 64, 1), // matches artifacts/hotspot.hlo.txt
+        Scale::Small => (256, 256, 4),
+        Scale::Paper => (1024, 1024, 8),
+    }
+}
+
+/// One reference step with edge-replicated boundary (interior formula
+/// identical to the kernel; edges treated as their own neighbours).
+pub fn reference_step(temp: &[f32], power: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = temp.to_vec();
+    let at = |r: i64, c: i64| -> f32 {
+        let r = r.clamp(0, rows as i64 - 1) as usize;
+        let c = c.clamp(0, cols as i64 - 1) as usize;
+        temp[r * cols + c]
+    };
+    for r in 0..rows as i64 {
+        for c in 0..cols as i64 {
+            let t = at(r, c);
+            let n = at(r - 1, c);
+            let s = at(r + 1, c);
+            let w = at(r, c - 1);
+            let e = at(r, c + 1);
+            let pwr = power[(r * cols as i64 + c) as usize];
+            out[(r * cols as i64 + c) as usize] = t
+                + SDC * (pwr + (n + s - 2.0 * t) * RY + (e + w - 2.0 * t) * RX + (AMB - t) * RZ);
+        }
+    }
+    out
+}
+
+/// The device kernel computes interior cells only; the host patches the
+/// boundary natively (an O(perimeter) job the real host code also does).
+fn patch_boundary(img: &MemoryImage, rows: usize, cols: usize) {
+    let temp = img.buf("temp").unwrap();
+    let power = img.buf("power").unwrap();
+    let result = img.buf("result").unwrap();
+    let at = |r: i64, c: i64| -> f32 {
+        let r = r.clamp(0, rows as i64 - 1) as usize;
+        let c = c.clamp(0, cols as i64 - 1) as usize;
+        temp.get(r * cols + c).as_f()
+    };
+    let cell = |r: usize, c: usize| {
+        let (ri, ci) = (r as i64, c as i64);
+        let t = at(ri, ci);
+        let v = t
+            + SDC * (power.get(r * cols + c).as_f()
+                + (at(ri - 1, ci) + at(ri + 1, ci) - 2.0 * t) * RY
+                + (at(ri, ci - 1) + at(ri, ci + 1) - 2.0 * t) * RX
+                + (AMB - t) * RZ);
+        result.set(r * cols + c, crate::ir::Val::F(v));
+    };
+    for c in 0..cols {
+        cell(0, c);
+        cell(rows - 1, c);
+    }
+    for r in 0..rows {
+        cell(r, 0);
+        cell(r, cols - 1);
+    }
+}
+
+impl Workload for Hotspot {
+    fn name(&self) -> &'static str {
+        "hotspot"
+    }
+
+    fn suite(&self) -> &'static str {
+        "Rodinia"
+    }
+
+    fn dwarf(&self) -> &'static str {
+        "Structured Grid"
+    }
+
+    fn pattern(&self) -> &'static str {
+        "Regular"
+    }
+
+    fn dataset_desc(&self, scale: Scale) -> String {
+        let (r, c, s) = dims(scale);
+        format!("{r}x{c} grid, {s} steps")
+    }
+
+    fn dominant(&self) -> &'static str {
+        "hotspot_kernel"
+    }
+
+    fn kernels(&self) -> Vec<Kernel> {
+        let idx = || v("r") * p("cols") + v("c2");
+        let body = vec![for_(
+            "r",
+            i(1),
+            p("rows") - i(1),
+            vec![for_(
+                "c2",
+                i(1),
+                p("cols") - i(1),
+                vec![
+                    let_f("t", ld("temp", idx())),
+                    let_f("tn", ld("temp", idx() - p("cols"))),
+                    let_f("ts", ld("temp", idx() + p("cols"))),
+                    let_f("tw", ld("temp", idx() - i(1))),
+                    let_f("te", ld("temp", idx() + i(1))),
+                    let_f("pw", ld("power", idx())),
+                    store(
+                        "result",
+                        idx(),
+                        v("t")
+                            + p("sdc")
+                                * (v("pw")
+                                    + (v("tn") + v("ts") - f(2.0) * v("t")) * p("ry")
+                                    + (v("te") + v("tw") - f(2.0) * v("t")) * p("rx")
+                                    + (p("amb") - v("t")) * p("rz")),
+                    ),
+                ],
+            )],
+        )];
+        vec![KernelBuilder::new("hotspot_kernel", KernelKind::SingleWorkItem)
+            .buf_ro("temp", Ty::F32)
+            .buf_ro("power", Ty::F32)
+            .buf_wo("result", Ty::F32)
+            .scalar("rows", Ty::I32)
+            .scalar("cols", Ty::I32)
+            .scalar_f("sdc", Ty::F32)
+            .scalar_f("rx", Ty::F32)
+            .scalar_f("ry", Ty::F32)
+            .scalar_f("rz", Ty::F32)
+            .scalar_f("amb", Ty::F32)
+            .body(body)
+            .finish()]
+    }
+
+    fn image(&self, scale: Scale) -> MemoryImage {
+        let (rows, cols, _) = dims(scale);
+        let (temp, power) = datagen::hotspot_grids(rows, cols, SEED);
+        let mut m = MemoryImage::new();
+        m.add_f32s("temp", &temp)
+            .add_f32s("power", &power)
+            .add_zeros("result", Ty::F32, rows * cols);
+        m.set_i("rows", rows as i64)
+            .set_i("cols", cols as i64)
+            .set_f("sdc", SDC)
+            .set_f("rx", RX)
+            .set_f("ry", RY)
+            .set_f("rz", RZ)
+            .set_f("amb", AMB);
+        m
+    }
+
+    fn run(&self, app: &App, img: &mut MemoryImage, h: &mut Harness) -> Result<(), ExecError> {
+        let rows = img.scalar("rows").unwrap().as_i() as usize;
+        let cols = img.scalar("cols").unwrap().as_i() as usize;
+        let (_, _, steps) = dims_for(rows);
+        for _ in 0..steps {
+            h.launch(app.unit("hotspot_kernel"), img)?;
+            patch_boundary(img, rows, cols);
+            img.swap_bufs("temp", "result");
+        }
+        Ok(())
+    }
+
+    fn validate(&self, img: &MemoryImage, scale: Scale) -> Result<(), String> {
+        let (rows, cols, steps) = dims(scale);
+        let (mut temp, power) = datagen::hotspot_grids(rows, cols, SEED);
+        for _ in 0..steps {
+            temp = reference_step(&temp, &power, rows, cols);
+        }
+        // after the final swap the result lives in "temp"
+        let got = img.buf("temp").unwrap().to_f32s();
+        for (ix, (g, w)) in got.iter().zip(&temp).enumerate() {
+            if (g - w).abs() > 1e-3 {
+                return Err(format!("hotspot: temp[{ix}] = {g}, want {w}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Recover the step count from the runtime grid size (the host driver only
+/// sees the image).
+fn dims_for(rows: usize) -> (usize, usize, usize) {
+    for s in [Scale::Tiny, Scale::Small, Scale::Paper] {
+        let d = dims(s);
+        if d.0 == rows {
+            return d;
+        }
+    }
+    (rows, rows, 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::device::DeviceConfig;
+    use crate::transform::Variant;
+    use crate::workloads::run_workload;
+
+    #[test]
+    fn baseline_pipelines_at_ii_1() {
+        let k = &Hotspot.kernels()[0];
+        let rep = crate::analysis::report::KernelReport::for_kernel(k);
+        assert_eq!(rep.max_ii(), 1);
+        // all five temp loads + power are prefetchable sequential streams
+        assert!(rep.prefetching_loads() >= 5, "prefetching = {}", rep.prefetching_loads());
+    }
+
+    #[test]
+    fn tiny_baseline_validates() {
+        let cfg = DeviceConfig::pac_a10();
+        run_workload(&Hotspot, Variant::Baseline, Scale::Tiny, &cfg).unwrap();
+    }
+
+    #[test]
+    fn ff_is_slightly_slower_than_baseline() {
+        // The paper's 0.85x: FF adds channel overhead to an already-fine kernel.
+        let cfg = DeviceConfig::pac_a10();
+        let base = run_workload(&Hotspot, Variant::Baseline, Scale::Tiny, &cfg).unwrap();
+        let ff = run_workload(&Hotspot, Variant::FeedForward { depth: 1 }, Scale::Tiny, &cfg).unwrap();
+        let speedup = base.metrics.seconds / ff.metrics.seconds;
+        assert!(speedup > 0.7 && speedup < 1.0, "hotspot ff speedup = {speedup}");
+    }
+}

@@ -1,0 +1,244 @@
+//! Hotspot3D (Rodinia, Table 2: 0.88x) — 7-point 3D thermal stencil.
+//! Same story as 2D Hotspot: cross-buffer accesses, II=1 baseline,
+//! feed-forward adds channel overhead.
+
+use super::{App, Harness, Scale, Workload};
+use crate::ir::build::*;
+use crate::ir::{Kernel, KernelKind, Ty};
+use crate::sim::exec::ExecError;
+use crate::sim::mem::MemoryImage;
+use crate::workloads::datagen;
+
+pub struct Hotspot3d;
+
+pub const SEED: u64 = 0x3D07;
+pub const SDC: f32 = 0.06;
+pub const CC: f32 = 0.4;
+pub const CXYZ: f32 = 0.1;
+pub const AMB: f32 = 80.0;
+
+pub fn dims(scale: Scale) -> (usize, usize, usize, usize) {
+    // (nx, ny, nz, steps)
+    match scale {
+        Scale::Tiny => (16, 16, 4, 1),
+        Scale::Small => (64, 64, 8, 3),
+        Scale::Paper => (512, 512, 8, 8),
+    }
+}
+
+/// Edge-replicated reference step.
+pub fn reference_step(temp: &[f32], power: &[f32], nx: usize, ny: usize, nz: usize) -> Vec<f32> {
+    let mut out = temp.to_vec();
+    let at = |x: i64, y: i64, z: i64| -> f32 {
+        let x = x.clamp(0, nx as i64 - 1) as usize;
+        let y = y.clamp(0, ny as i64 - 1) as usize;
+        let z = z.clamp(0, nz as i64 - 1) as usize;
+        temp[(z * ny + y) * nx + x]
+    };
+    for z in 0..nz as i64 {
+        for y in 0..ny as i64 {
+            for x in 0..nx as i64 {
+                let t = at(x, y, z);
+                let sum = at(x - 1, y, z)
+                    + at(x + 1, y, z)
+                    + at(x, y - 1, z)
+                    + at(x, y + 1, z)
+                    + at(x, y, z - 1)
+                    + at(x, y, z + 1);
+                let idx = ((z * ny as i64 + y) * nx as i64 + x) as usize;
+                out[idx] = t + SDC * (power[idx] + (sum - 6.0 * t) * CXYZ + (AMB - t) * CC);
+            }
+        }
+    }
+    out
+}
+
+fn patch_boundary(img: &MemoryImage, nx: usize, ny: usize, nz: usize) {
+    let temp = img.buf("temp").unwrap();
+    let power = img.buf("power").unwrap();
+    let result = img.buf("result").unwrap();
+    let at = |x: i64, y: i64, z: i64| -> f32 {
+        let x = x.clamp(0, nx as i64 - 1) as usize;
+        let y = y.clamp(0, ny as i64 - 1) as usize;
+        let z = z.clamp(0, nz as i64 - 1) as usize;
+        temp.get((z * ny + y) * nx + x).as_f()
+    };
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                let interior = x > 0 && x < nx - 1 && y > 0 && y < ny - 1 && z > 0 && z < nz - 1;
+                if interior {
+                    continue;
+                }
+                let (xi, yi, zi) = (x as i64, y as i64, z as i64);
+                let t = at(xi, yi, zi);
+                let sum = at(xi - 1, yi, zi)
+                    + at(xi + 1, yi, zi)
+                    + at(xi, yi - 1, zi)
+                    + at(xi, yi + 1, zi)
+                    + at(xi, yi, zi - 1)
+                    + at(xi, yi, zi + 1);
+                let idx = (z * ny + y) * nx + x;
+                let v = t + SDC * (power.get(idx).as_f() + (sum - 6.0 * t) * CXYZ + (AMB - t) * CC);
+                result.set(idx, crate::ir::Val::F(v));
+            }
+        }
+    }
+}
+
+impl Workload for Hotspot3d {
+    fn name(&self) -> &'static str {
+        "hotspot3d"
+    }
+
+    fn suite(&self) -> &'static str {
+        "Rodinia"
+    }
+
+    fn dwarf(&self) -> &'static str {
+        "Structured Grid"
+    }
+
+    fn pattern(&self) -> &'static str {
+        "Regular"
+    }
+
+    fn dataset_desc(&self, scale: Scale) -> String {
+        let (nx, ny, nz, s) = dims(scale);
+        format!("{nx}x{ny}x{nz} grid, {s} steps")
+    }
+
+    fn dominant(&self) -> &'static str {
+        "hotspot3d_kernel"
+    }
+
+    fn kernels(&self) -> Vec<Kernel> {
+        let idx = || (v("z") * p("ny") + v("y")) * p("nx") + v("x");
+        let plane = || p("nx") * p("ny");
+        let body = vec![for_(
+            "z",
+            i(1),
+            p("nz") - i(1),
+            vec![for_(
+                "y",
+                i(1),
+                p("ny") - i(1),
+                vec![for_(
+                    "x",
+                    i(1),
+                    p("nx") - i(1),
+                    vec![
+                        let_f("t", ld("temp", idx())),
+                        let_f(
+                            "sum",
+                            ld("temp", idx() - i(1))
+                                + ld("temp", idx() + i(1))
+                                + ld("temp", idx() - p("nx"))
+                                + ld("temp", idx() + p("nx"))
+                                + ld("temp", idx() - plane())
+                                + ld("temp", idx() + plane()),
+                        ),
+                        store(
+                            "result",
+                            idx(),
+                            v("t")
+                                + p("sdc")
+                                    * (ld("power", idx())
+                                        + (v("sum") - f(6.0) * v("t")) * p("cxyz")
+                                        + (p("amb") - v("t")) * p("cc")),
+                        ),
+                    ],
+                )],
+            )],
+        )];
+        vec![KernelBuilder::new("hotspot3d_kernel", KernelKind::SingleWorkItem)
+            .buf_ro("temp", Ty::F32)
+            .buf_ro("power", Ty::F32)
+            .buf_wo("result", Ty::F32)
+            .scalar("nx", Ty::I32)
+            .scalar("ny", Ty::I32)
+            .scalar("nz", Ty::I32)
+            .scalar_f("sdc", Ty::F32)
+            .scalar_f("cxyz", Ty::F32)
+            .scalar_f("cc", Ty::F32)
+            .scalar_f("amb", Ty::F32)
+            .body(body)
+            .finish()]
+    }
+
+    fn image(&self, scale: Scale) -> MemoryImage {
+        let (nx, ny, nz, _) = dims(scale);
+        let (temp, power) = datagen::hotspot_grids(nz * ny, nx, SEED);
+        let mut m = MemoryImage::new();
+        m.add_f32s("temp", &temp)
+            .add_f32s("power", &power)
+            .add_zeros("result", Ty::F32, nx * ny * nz);
+        m.set_i("nx", nx as i64)
+            .set_i("ny", ny as i64)
+            .set_i("nz", nz as i64)
+            .set_f("sdc", SDC)
+            .set_f("cxyz", CXYZ)
+            .set_f("cc", CC)
+            .set_f("amb", AMB);
+        m
+    }
+
+    fn run(&self, app: &App, img: &mut MemoryImage, h: &mut Harness) -> Result<(), ExecError> {
+        let nx = img.scalar("nx").unwrap().as_i() as usize;
+        let ny = img.scalar("ny").unwrap().as_i() as usize;
+        let nz = img.scalar("nz").unwrap().as_i() as usize;
+        let steps = [Scale::Tiny, Scale::Small, Scale::Paper]
+            .iter()
+            .map(|s| dims(*s))
+            .find(|d| d.0 == nx && d.2 == nz)
+            .map(|d| d.3)
+            .unwrap_or(1);
+        for _ in 0..steps {
+            h.launch(app.unit("hotspot3d_kernel"), img)?;
+            patch_boundary(img, nx, ny, nz);
+            img.swap_bufs("temp", "result");
+        }
+        Ok(())
+    }
+
+    fn validate(&self, img: &MemoryImage, scale: Scale) -> Result<(), String> {
+        let (nx, ny, nz, steps) = dims(scale);
+        let (mut temp, power) = datagen::hotspot_grids(nz * ny, nx, SEED);
+        for _ in 0..steps {
+            temp = reference_step(&temp, &power, nx, ny, nz);
+        }
+        let got = img.buf("temp").unwrap().to_f32s();
+        for (ix, (g, w)) in got.iter().zip(&temp).enumerate() {
+            if (g - w).abs() > 1e-3 {
+                return Err(format!("hotspot3d: temp[{ix}] = {g}, want {w}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::device::DeviceConfig;
+    use crate::transform::Variant;
+    use crate::workloads::run_workload;
+
+    #[test]
+    fn baseline_pipelines_at_ii_1() {
+        let k = &Hotspot3d.kernels()[0];
+        let rep = crate::analysis::report::KernelReport::for_kernel(k);
+        assert_eq!(rep.max_ii(), 1);
+    }
+
+    #[test]
+    fn tiny_variants_validate() {
+        let cfg = DeviceConfig::pac_a10();
+        run_workload(&Hotspot3d, Variant::Baseline, Scale::Tiny, &cfg).unwrap();
+        let base = run_workload(&Hotspot3d, Variant::Baseline, Scale::Tiny, &cfg).unwrap();
+        let ff =
+            run_workload(&Hotspot3d, Variant::FeedForward { depth: 1 }, Scale::Tiny, &cfg).unwrap();
+        let speedup = base.metrics.seconds / ff.metrics.seconds;
+        assert!(speedup > 0.6 && speedup < 1.1, "hotspot3d ff speedup = {speedup}");
+    }
+}

@@ -1,0 +1,153 @@
+//! k-Nearest Neighbours (Rodinia `nn`, Table 1) — fully regular streaming:
+//! distance of every reference point to one query, top-k selected by the
+//! host (as Rodinia's host code does). The baseline already pipelines; the
+//! paper's Table 2 omits it, and our harness confirms FF is ~flat here.
+//! Cross-validated against artifacts/knn.hlo.txt at Tiny scale.
+
+use super::{App, Harness, Scale, Workload};
+use crate::ir::build::*;
+use crate::ir::{Kernel, KernelKind, Stmt, Ty};
+use crate::sim::exec::ExecError;
+use crate::sim::mem::MemoryImage;
+use crate::workloads::datagen;
+
+pub struct Knn;
+
+pub const SEED: u64 = 0x4E4E;
+pub const DIMS: usize = 8;
+
+pub fn points(scale: Scale) -> usize {
+    match scale {
+        Scale::Tiny => 1024, // matches artifacts/knn.hlo.txt
+        Scale::Small => 100_000,
+        Scale::Paper => 1_000_000,
+    }
+}
+
+pub fn reference(pts: &[f32], q: &[f32], n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            let mut acc = 0.0f32;
+            for d in 0..DIMS {
+                let diff = pts[i * DIMS + d] - q[d];
+                acc += diff * diff;
+            }
+            acc
+        })
+        .collect()
+}
+
+impl Workload for Knn {
+    fn name(&self) -> &'static str {
+        "knn"
+    }
+
+    fn suite(&self) -> &'static str {
+        "Rodinia"
+    }
+
+    fn dwarf(&self) -> &'static str {
+        "Dense Linear Algebra"
+    }
+
+    fn pattern(&self) -> &'static str {
+        "Regular"
+    }
+
+    fn dataset_desc(&self, scale: Scale) -> String {
+        format!("{} points x {DIMS} dims, 1 query", points(scale))
+    }
+
+    fn dominant(&self) -> &'static str {
+        "knn_kernel"
+    }
+
+    fn kernels(&self) -> Vec<Kernel> {
+        // Unrolled 8-dim distance: acc chains within one iteration only
+        // (no loop-carried recurrence), II=1.
+        let mut body_inner: Vec<Stmt> = vec![let_f("acc", f(0.0))];
+        for d in 0..DIMS as i64 {
+            body_inner.push(let_f(
+                &format!("d{d}"),
+                ld("pts", v("t2") * i(DIMS as i64) + i(d)) - ld("q", i(d)),
+            ));
+            body_inner.push(assign(
+                "acc",
+                v("acc") + v(&format!("d{d}")) * v(&format!("d{d}")),
+            ));
+        }
+        body_inner.push(store("dist", v("t2"), v("acc")));
+        vec![KernelBuilder::new("knn_kernel", KernelKind::SingleWorkItem)
+            .buf_ro("pts", Ty::F32)
+            .buf_ro("q", Ty::F32)
+            .buf_wo("dist", Ty::F32)
+            .scalar("num_points", Ty::I32)
+            .body(vec![for_("t2", i(0), p("num_points"), body_inner)])
+            .finish()]
+    }
+
+    fn image(&self, scale: Scale) -> MemoryImage {
+        let n = points(scale);
+        let mut m = MemoryImage::new();
+        m.add_f32s("pts", &datagen::matrix(n, DIMS, 1.0, SEED))
+            .add_f32s("q", &datagen::matrix(1, DIMS, 1.0, SEED ^ 1))
+            .add_zeros("dist", Ty::F32, n);
+        m.set_i("num_points", n as i64);
+        m
+    }
+
+    fn run(&self, app: &App, img: &mut MemoryImage, h: &mut Harness) -> Result<(), ExecError> {
+        h.launch(app.unit("knn_kernel"), img)?;
+        // host-side top-k (Rodinia does the same selection on the CPU)
+        let dist = img.buf("dist").unwrap().to_f32s();
+        let mut idx: Vec<usize> = (0..dist.len()).collect();
+        idx.sort_by(|&a, &b| dist[a].total_cmp(&dist[b]));
+        let _top5: Vec<usize> = idx.into_iter().take(5).collect();
+        Ok(())
+    }
+
+    fn validate(&self, img: &MemoryImage, scale: Scale) -> Result<(), String> {
+        let n = points(scale);
+        let pts = datagen::matrix(n, DIMS, 1.0, SEED);
+        let q = datagen::matrix(1, DIMS, 1.0, SEED ^ 1);
+        let want = reference(&pts, &q, n);
+        let got = img.buf("dist").unwrap().to_f32s();
+        for (ix, (g, w)) in got.iter().zip(&want).enumerate() {
+            if (g - w).abs() > 1e-4 * (1.0 + w.abs()) {
+                return Err(format!("knn: dist[{ix}] = {g}, want {w}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::AccessPattern;
+    use crate::sim::device::DeviceConfig;
+    use crate::transform::Variant;
+    use crate::workloads::run_workload;
+
+    #[test]
+    fn all_point_loads_strided_regular() {
+        let k = &Knn.kernels()[0];
+        let rep = crate::analysis::report::KernelReport::for_kernel(k);
+        assert_eq!(rep.max_ii(), 1);
+        let strided = rep
+            .sites
+            .iter()
+            .filter(|s| s.buf == "pts" && s.pattern == AccessPattern::Strided(DIMS as i64))
+            .count();
+        assert_eq!(strided, DIMS);
+    }
+
+    #[test]
+    fn tiny_variants_validate() {
+        let cfg = DeviceConfig::pac_a10();
+        let base = run_workload(&Knn, Variant::Baseline, Scale::Tiny, &cfg).unwrap();
+        let ff = run_workload(&Knn, Variant::FeedForward { depth: 1 }, Scale::Tiny, &cfg).unwrap();
+        let speedup = base.metrics.seconds / ff.metrics.seconds;
+        assert!(speedup > 0.5 && speedup < 1.2, "knn ff speedup = {speedup}");
+    }
+}

@@ -1,0 +1,316 @@
+//! Auto-generated microbenchmarks (§4.2, Table 3) plus the parametrized
+//! family the paper's future-work section calls for.
+//!
+//! The first set targets the memory access pattern: 8 load streams x
+//! arithmetic intensity 10, regular (`M_AI10_R`) vs irregular
+//! (`M_AI10_IR`). The second set adds main-loop divergence (a data-
+//! dependent inner `for` with an `if`) and a DLCD reduction at arithmetic
+//! intensity 6 (`M_AI6_forif_R` / `M_AI6_forif_IR`).
+
+use super::{App, Harness, Scale, Workload};
+use crate::ir::build::*;
+use crate::ir::{Kernel, KernelKind, Stmt, Ty};
+use crate::sim::exec::ExecError;
+use crate::sim::mem::MemoryImage;
+use crate::util::rng::Rng;
+
+pub const SEED: u64 = 0x111C40;
+pub const N_STREAMS: usize = 8;
+
+/// Generator parameters (the paper's two axes plus arithmetic intensity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MicroSpec {
+    /// Arithmetic ops per loaded word.
+    pub arith_intensity: usize,
+    /// Irregular (index-buffer-driven) vs sequential loads.
+    pub irregular: bool,
+    /// Add the divergent inner for/if with a DLCD reduction.
+    pub divergent: bool,
+}
+
+impl MicroSpec {
+    pub fn label(&self) -> String {
+        format!(
+            "M_AI{}{}{}",
+            self.arith_intensity,
+            if self.divergent { "_forif" } else { "" },
+            if self.irregular { "_IR" } else { "_R" }
+        )
+    }
+
+    /// The paper's four Table-3 microbenchmarks.
+    pub fn table3() -> Vec<MicroSpec> {
+        vec![
+            MicroSpec { arith_intensity: 10, irregular: false, divergent: false },
+            MicroSpec { arith_intensity: 10, irregular: true, divergent: false },
+            MicroSpec { arith_intensity: 6, irregular: false, divergent: true },
+            MicroSpec { arith_intensity: 6, irregular: true, divergent: true },
+        ]
+    }
+
+    /// The extended family (future work): AI x pattern x divergence sweep.
+    pub fn family() -> Vec<MicroSpec> {
+        let mut out = vec![];
+        for ai in [2, 6, 10, 20] {
+            for irregular in [false, true] {
+                for divergent in [false, true] {
+                    out.push(MicroSpec { arith_intensity: ai, irregular, divergent });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// A generated microbenchmark.
+pub struct Micro {
+    pub spec: MicroSpec,
+    label: &'static str,
+}
+
+impl Micro {
+    pub fn new(spec: MicroSpec) -> Micro {
+        // leak the label: Workload::name returns &'static str
+        let label: &'static str = Box::leak(spec.label().into_boxed_str());
+        Micro { spec, label }
+    }
+}
+
+pub fn elements(scale: Scale) -> usize {
+    match scale {
+        Scale::Tiny => 2_048,
+        Scale::Small => 100_000,
+        Scale::Paper => 2_000_000,
+    }
+}
+
+/// Build the generated kernel for a spec.
+pub fn generate_kernel(spec: MicroSpec) -> Kernel {
+    let mut body: Vec<Stmt> = vec![];
+    // Loads: 8 streams, either a[t] or a[perm[t]].
+    for s in 0..N_STREAMS {
+        let idx = if spec.irregular {
+            ld("perm", v("t2"))
+        } else {
+            v("t2")
+        };
+        body.push(let_f(&format!("x{s}"), ld(&format!("a{s}"), idx)));
+    }
+    // Arithmetic: AI ops per load, a chain mixing mul/add over the streams.
+    let total_ops = spec.arith_intensity * N_STREAMS;
+    body.push(let_f("acc", v("x0")));
+    for op in 0..total_ops {
+        let src = format!("x{}", op % N_STREAMS);
+        if op % 3 == 0 {
+            body.push(assign("acc", v("acc") * f(1.0001) + v(&src)));
+        } else if op % 3 == 1 {
+            body.push(assign("acc", v("acc") + v(&src) * f(0.5)));
+        } else {
+            body.push(assign("acc", v("acc").max(v(&src) - f(0.25))));
+        }
+    }
+    if spec.divergent {
+        // Divergence: data-dependent trip count + if, with a reduction
+        // carried across the inner loop (the DLCD of Fig. 3b).
+        body.push(let_i("trip", ld("trips", v("t2"))));
+        body.push(let_f("r", f(0.0)));
+        body.push(for_(
+            "it",
+            i(0),
+            v("trip"),
+            vec![if_(
+                (v("it") % i(2)).eq_(i(0)),
+                // leaky-integrator recurrence: the carried value feeds a
+                // multiply, so no hard-FP accumulator shortcut applies —
+                // a true Fig. 3b DLCD with a multi-cycle chain
+                vec![assign("r", v("r") * f(0.9995) + v("acc") * f(0.125))],
+            )],
+        ));
+        body.push(assign("acc", v("acc") + v("r")));
+    }
+    body.push(store("out", v("t2"), v("acc")));
+
+    let mut kb = KernelBuilder::new(&format!("micro_{}", spec.label().to_lowercase()), KernelKind::SingleWorkItem);
+    for s in 0..N_STREAMS {
+        kb = kb.buf_ro(&format!("a{s}"), Ty::F32);
+    }
+    if spec.irregular {
+        kb = kb.buf_ro("perm", Ty::I32);
+    }
+    if spec.divergent {
+        kb = kb.buf_ro("trips", Ty::I32);
+    }
+    kb.buf_wo("out", Ty::F32)
+        .scalar("n", Ty::I32)
+        .body(vec![for_("t2", i(0), p("n"), body)])
+        .finish()
+}
+
+/// Native reference evaluation.
+pub fn reference(spec: MicroSpec, n: usize) -> Vec<f32> {
+    let streams = gen_streams(n);
+    let perm = gen_perm(n);
+    let trips = gen_trips(n);
+    (0..n)
+        .map(|t| {
+            let src = if spec.irregular { perm[t] as usize } else { t };
+            let x: Vec<f32> = (0..N_STREAMS).map(|s| streams[s][src]).collect();
+            let mut acc = x[0];
+            for op in 0..spec.arith_intensity * N_STREAMS {
+                let v = x[op % N_STREAMS];
+                if op % 3 == 0 {
+                    acc = acc * 1.0001 + v;
+                } else if op % 3 == 1 {
+                    acc += v * 0.5;
+                } else {
+                    acc = acc.max(v - 0.25);
+                }
+            }
+            if spec.divergent {
+                let mut r = 0.0f32;
+                for it in 0..trips[t] {
+                    if it % 2 == 0 {
+                        r = r * 0.9995 + acc * 0.125;
+                    }
+                }
+                acc += r;
+            }
+            acc
+        })
+        .collect()
+}
+
+fn gen_streams(n: usize) -> Vec<Vec<f32>> {
+    (0..N_STREAMS)
+        .map(|s| {
+            let mut rng = Rng::new(SEED + s as u64);
+            (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect()
+        })
+        .collect()
+}
+
+fn gen_perm(n: usize) -> Vec<i64> {
+    Rng::new(SEED ^ 0xFF).permutation(n)
+}
+
+fn gen_trips(n: usize) -> Vec<i64> {
+    let mut rng = Rng::new(SEED ^ 0xAB);
+    (0..n).map(|_| rng.range(1, 9)).collect()
+}
+
+impl Workload for Micro {
+    fn name(&self) -> &'static str {
+        self.label
+    }
+
+    fn suite(&self) -> &'static str {
+        "Micro"
+    }
+
+    fn dwarf(&self) -> &'static str {
+        "Synthetic"
+    }
+
+    fn pattern(&self) -> &'static str {
+        if self.spec.irregular {
+            "Irregular"
+        } else {
+            "Regular"
+        }
+    }
+
+    fn dataset_desc(&self, scale: Scale) -> String {
+        format!("{} elements x {N_STREAMS} streams", elements(scale))
+    }
+
+    fn dominant(&self) -> &'static str {
+        // single-kernel: dominant is itself; name is dynamic, so resolve
+        // via kernels()[0] in build().
+        self.label
+    }
+
+    fn build(&self, variant: crate::transform::Variant) -> Result<App, crate::transform::FeasibilityError> {
+        let k = generate_kernel(self.spec);
+        let dominant = k.name.clone();
+        super::assemble(self.label, &[k], &dominant, &[], variant)
+    }
+
+    fn kernels(&self) -> Vec<Kernel> {
+        vec![generate_kernel(self.spec)]
+    }
+
+    fn image(&self, scale: Scale) -> MemoryImage {
+        let n = elements(scale);
+        let streams = gen_streams(n);
+        let mut m = MemoryImage::new();
+        for (s, data) in streams.iter().enumerate() {
+            m.add_f32s(&format!("a{s}"), data);
+        }
+        if self.spec.irregular {
+            m.add_i64s("perm", &gen_perm(n));
+        }
+        if self.spec.divergent {
+            m.add_i64s("trips", &gen_trips(n));
+        }
+        m.add_zeros("out", Ty::F32, n);
+        m.set_i("n", n as i64);
+        m
+    }
+
+    fn run(&self, app: &App, img: &mut MemoryImage, h: &mut Harness) -> Result<(), ExecError> {
+        let unit = &app.units[0];
+        h.launch(unit, img)
+    }
+
+    fn validate(&self, img: &MemoryImage, scale: Scale) -> Result<(), String> {
+        let n = elements(scale);
+        let want = reference(self.spec, n);
+        let got = img.buf("out").unwrap().to_f32s();
+        for (ix, (g, w)) in got.iter().zip(&want).enumerate() {
+            if (g - w).abs() > 1e-4 * (1.0 + w.abs()) {
+                return Err(format!("{}: out[{ix}] = {g}, want {w}", self.label));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::device::DeviceConfig;
+    use crate::transform::Variant;
+    use crate::workloads::run_workload;
+
+    #[test]
+    fn labels_match_paper() {
+        let names: Vec<String> = MicroSpec::table3().iter().map(|s| s.label()).collect();
+        assert_eq!(names, vec!["M_AI10_R", "M_AI10_IR", "M_AI6_forif_R", "M_AI6_forif_IR"]);
+    }
+
+    #[test]
+    fn generated_kernels_validate() {
+        for spec in MicroSpec::table3() {
+            let k = generate_kernel(spec);
+            assert_eq!(crate::ir::validate_kernel(&k), Ok(()), "{}", spec.label());
+        }
+    }
+
+    #[test]
+    fn divergent_kernels_have_dlcd() {
+        let k = generate_kernel(MicroSpec { arith_intensity: 6, irregular: false, divergent: true });
+        let lcd = crate::analysis::analyze_lcd(&k);
+        assert!(lcd.dlcds.iter().any(|d| d.var == "r"));
+        assert!(lcd.mlcds.is_empty());
+    }
+
+    #[test]
+    fn tiny_all_four_validate_under_m2c2() {
+        let cfg = DeviceConfig::pac_a10();
+        for spec in MicroSpec::table3() {
+            let w = Micro::new(spec);
+            run_workload(&w, Variant::Baseline, Scale::Tiny, &cfg).unwrap();
+            run_workload(&w, Variant::MxCx { parts: 2, depth: 1 }, Scale::Tiny, &cfg).unwrap();
+        }
+    }
+}

@@ -1,0 +1,294 @@
+//! The paper's benchmark suite (Table 1) re-implemented on the kernel IR:
+//! Rodinia (BFS is Pannotia's formulation, Hotspot, Hotspot3D, KNN, NW,
+//! BackProp) and Pannotia (FW, MIS, Graph Coloring, PageRank), plus the
+//! §4.2 auto-generated microbenchmarks.
+//!
+//! Each workload supplies its baseline single work-item kernels, a dataset
+//! generator (`Scale`d down from the paper's sizes — see DESIGN.md
+//! substitution table), a host driver (convergence loops, ping-pong buffer
+//! swaps — the OpenCL host-code role), and a validator against a native
+//! Rust reference implementation.
+
+pub mod backprop;
+pub mod bfs;
+pub mod color;
+pub mod datagen;
+pub mod fw;
+pub mod hotspot;
+pub mod hotspot3d;
+pub mod knn;
+pub mod micro;
+pub mod mis;
+pub mod nw;
+pub mod pagerank;
+
+use crate::analysis::AreaEstimate;
+use crate::ir::{Kernel, Program};
+use crate::sim::device::DeviceConfig;
+use crate::sim::exec::{run_group, ExecError, ExecOptions};
+use crate::sim::mem::MemoryImage;
+use crate::sim::perf::{LaunchMetrics, PerfModel};
+use crate::transform::{
+    feedforward, privatize, replicate, replicate_1p, vectorize, FeasibilityError, Variant,
+};
+use std::collections::HashMap;
+
+/// Dataset scale: `Tiny` matches the AOT artifact shapes (PJRT golden
+/// validation), `Small` is the default experiment size, `Paper` approaches
+/// the paper's dataset sizes (slow under interpretation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Tiny,
+    Small,
+    Paper,
+}
+
+/// A built application: one FPGA design containing several launch units.
+#[derive(Debug, Clone)]
+pub struct App {
+    pub name: String,
+    /// Launch units in host-invocation granularity; each unit's kernels
+    /// run concurrently (separate queues + pipes).
+    pub units: Vec<Program>,
+}
+
+impl App {
+    /// The union design (all kernels resident on the fabric at once) —
+    /// what area/fmax are charged against.
+    pub fn union_program(&self) -> Program {
+        let mut kernels = vec![];
+        let mut pipes = vec![];
+        for u in &self.units {
+            kernels.extend(u.kernels.iter().cloned());
+            pipes.extend(u.pipes.iter().cloned());
+        }
+        Program { name: self.name.clone(), kernels, pipes }
+    }
+
+    pub fn unit(&self, name: &str) -> &Program {
+        self.units
+            .iter()
+            .find(|p| p.name == name)
+            .unwrap_or_else(|| panic!("no unit `{name}` in app {}", self.name))
+    }
+}
+
+/// Assemble an app from baseline kernels under a design variant.
+///
+/// * `dominant` — the kernel replicated under MxCx/M1Cx (paper step 12:
+///   replicate only the execution-time-dominant kernel).
+/// * `privatize_first` — kernels that need the NW-style privatization
+///   before the feed-forward split is feasible.
+pub fn assemble(
+    name: &str,
+    kernels: &[Kernel],
+    dominant: &str,
+    privatize_first: &[&str],
+    variant: Variant,
+) -> Result<App, FeasibilityError> {
+    let mut units = vec![];
+    for k in kernels {
+        let unit = match variant {
+            Variant::Baseline => Program::single(k.clone()),
+            Variant::FeedForward { depth }
+            | Variant::MxCx { depth, .. }
+            | Variant::M1Cx { depth, .. }
+            | Variant::Vectorized { depth, .. } => {
+                let mut kk = k.clone();
+                if privatize_first.contains(&k.name.as_str()) {
+                    kk = privatize(&kk).expect("privatization applies");
+                }
+                if let Variant::Vectorized { width, .. } = variant {
+                    if k.name == dominant {
+                        kk = vectorize(&kk, width);
+                        // keep the launch-unit name stable
+                        kk.name = k.name.clone();
+                    }
+                }
+                let ff = feedforward(&kk, depth_of(variant).unwrap_or(depth))?;
+                match variant {
+                    Variant::MxCx { parts, .. } if k.name == dominant => replicate(&ff, parts),
+                    Variant::M1Cx { consumers, .. } if k.name == dominant => {
+                        replicate_1p(&ff, consumers)
+                    }
+                    _ => ff,
+                }
+            }
+        };
+        let mut unit = unit;
+        unit.name = k.name.clone(); // launch units keyed by base kernel name
+        units.push(unit);
+    }
+    Ok(App { name: format!("{name}_{}", variant.label()), units })
+}
+
+fn depth_of(v: Variant) -> Option<usize> {
+    match v {
+        Variant::Baseline => None,
+        Variant::FeedForward { depth }
+        | Variant::MxCx { depth, .. }
+        | Variant::M1Cx { depth, .. }
+        | Variant::Vectorized { depth, .. } => Some(depth),
+    }
+}
+
+/// Execution harness: runs launch units functionally, feeds the profiles
+/// to the performance model, accumulates app-level metrics.
+pub struct Harness {
+    pub cfg: DeviceConfig,
+    pub opts: ExecOptions,
+    models: HashMap<String, PerfModel>,
+    pub area: AreaEstimate,
+    pub fmax_hz: f64,
+    pub metrics: LaunchMetrics,
+    pub launches: u64,
+    /// Max achieved bandwidth per launch unit (the paper quotes the
+    /// dominant kernel's number, not the app max).
+    pub bw_by_unit: HashMap<String, f64>,
+    /// Max initiation interval across the design (E4a report).
+    pub max_ii: u32,
+    /// Use the discrete-event simulator instead of the analytic solver.
+    pub use_des: bool,
+}
+
+impl Harness {
+    pub fn new(app: &App, cfg: &DeviceConfig) -> Harness {
+        let union = app.union_program();
+        let area = crate::analysis::estimate_program_area(&union, cfg);
+        let fmax = cfg.fmax_for_area(area.logic_frac);
+        let mut models = HashMap::new();
+        let mut max_ii = 1;
+        for u in &app.units {
+            let mut m = PerfModel::new(u, cfg);
+            m.report.fmax_hz = fmax; // whole-design clock
+            max_ii = max_ii.max(m.report.max_ii());
+            models.insert(u.name.clone(), m);
+        }
+        Harness {
+            cfg: cfg.clone(),
+            opts: ExecOptions::default(),
+            models,
+            area,
+            fmax_hz: fmax,
+            metrics: LaunchMetrics::zero(fmax),
+            launches: 0,
+            bw_by_unit: HashMap::new(),
+            max_ii,
+            use_des: false,
+        }
+    }
+
+    /// Run one launch unit: functional execution + performance estimate.
+    pub fn launch(&mut self, unit: &Program, img: &MemoryImage) -> Result<(), ExecError> {
+        let run = run_group(unit, img, &self.opts)?;
+        let model = &self.models[&unit.name];
+        let mut m = model.estimate(&run.profiles);
+        if self.use_des {
+            let d = crate::sim::des::simulate(unit, model, &run.profiles, &self.cfg, 64);
+            m.cycles = d.cycles;
+            m.seconds = d.seconds;
+            m.bw_bytes_per_s = if d.seconds > 0.0 { m.payload_bytes / d.seconds } else { 0.0 };
+        }
+        let e = self.bw_by_unit.entry(unit.name.clone()).or_insert(0.0);
+        *e = e.max(m.bw_bytes_per_s);
+        self.metrics.accumulate(&m);
+        self.launches += 1;
+        Ok(())
+    }
+
+    pub fn model(&self, unit: &str) -> &PerfModel {
+        &self.models[unit]
+    }
+}
+
+/// One benchmark of the suite.
+pub trait Workload: Sync {
+    fn name(&self) -> &'static str;
+    /// Table 1 columns.
+    fn suite(&self) -> &'static str;
+    fn dwarf(&self) -> &'static str;
+    fn pattern(&self) -> &'static str;
+    fn dataset_desc(&self, scale: Scale) -> String;
+    /// The kernel replicated under M2C2.
+    fn dominant(&self) -> &'static str;
+
+    /// Baseline single work-item kernels (launch units).
+    fn kernels(&self) -> Vec<Kernel>;
+    /// Kernels requiring privatization before the split (NW).
+    fn privatize_first(&self) -> Vec<&'static str> {
+        vec![]
+    }
+
+    /// Whether MxCx replication is semantically valid: splitting the outer
+    /// iteration range must not break inter-iteration data flow. NW's DP
+    /// rows cross replica boundaries, so it opts out (a limitation the
+    /// paper's static-partitioning scheme shares).
+    fn supports_replication(&self) -> bool {
+        true
+    }
+
+    /// Build the app under a variant.
+    fn build(&self, variant: Variant) -> Result<App, FeasibilityError> {
+        if matches!(variant, Variant::MxCx { .. } | Variant::M1Cx { .. })
+            && !self.supports_replication()
+        {
+            return Err(FeasibilityError::ReplicationUnsupported {
+                workload: self.name().to_string(),
+            });
+        }
+        assemble(
+            self.name(),
+            &self.kernels(),
+            self.dominant(),
+            &self.privatize_first(),
+            variant,
+        )
+    }
+
+    /// Dataset + scalar args.
+    fn image(&self, scale: Scale) -> MemoryImage;
+
+    /// Host driver: launch units against the image until the application
+    /// completes (convergence loops, pivot loops, buffer swaps).
+    fn run(&self, app: &App, img: &mut MemoryImage, h: &mut Harness) -> Result<(), ExecError>;
+
+    /// Check the image against the native reference implementation.
+    fn validate(&self, img: &MemoryImage, scale: Scale) -> Result<(), String>;
+}
+
+/// Run a workload end to end under a variant; returns the harness with
+/// accumulated metrics (validated unless `skip_validate`).
+pub fn run_workload(
+    w: &dyn Workload,
+    variant: Variant,
+    scale: Scale,
+    cfg: &DeviceConfig,
+) -> Result<Harness, String> {
+    let app = w.build(variant).map_err(|e| e.to_string())?;
+    let mut img = w.image(scale);
+    let mut h = Harness::new(&app, cfg);
+    w.run(&app, &mut img, &mut h).map_err(|e| e.to_string())?;
+    w.validate(&img, scale)?;
+    Ok(h)
+}
+
+/// The registered benchmark suite (Table 1 order).
+pub fn suite() -> Vec<Box<dyn Workload>> {
+    vec![
+        Box::new(bfs::Bfs),
+        Box::new(hotspot::Hotspot),
+        Box::new(knn::Knn),
+        Box::new(hotspot3d::Hotspot3d),
+        Box::new(nw::Nw),
+        Box::new(backprop::BackProp),
+        Box::new(fw::Fw),
+        Box::new(mis::Mis),
+        Box::new(color::Color),
+        Box::new(pagerank::PageRank),
+    ]
+}
+
+/// Look up one workload by name.
+pub fn by_name(name: &str) -> Option<Box<dyn Workload>> {
+    suite().into_iter().find(|w| w.name() == name)
+}

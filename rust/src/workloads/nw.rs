@@ -1,0 +1,181 @@
+//! Needleman–Wunsch (Rodinia, Table 2: 50.95x) — the benchmark that
+//! exercises the paper's privatization story (§4.2): the DP recurrence
+//! carries a *true* distance-1 MLCD (`m[j]` depends on `m[j-1]` written the
+//! previous iteration), so the plain feed-forward split is infeasible; a
+//! private carry variable removes it, after which the remaining
+//! previous-row loads are false MLCDs the split eliminates.
+
+use super::{App, Harness, Scale, Workload};
+use crate::ir::build::*;
+use crate::ir::{Kernel, KernelKind, Ty};
+use crate::sim::exec::ExecError;
+use crate::sim::mem::MemoryImage;
+use crate::workloads::datagen;
+
+pub struct Nw;
+
+pub const SEED: u64 = 0x5739;
+pub const PENALTY: i64 = 10;
+
+pub fn size(scale: Scale) -> usize {
+    match scale {
+        Scale::Tiny => 64,
+        Scale::Small => 512,
+        Scale::Paper => 4096,
+    }
+}
+
+/// Native DP reference.
+pub fn reference(scores: &[i64], n: usize) -> Vec<i64> {
+    let mut m = vec![0i64; n * n];
+    for j in 0..n {
+        m[j] = -(j as i64) * PENALTY;
+    }
+    for i in 0..n {
+        m[i * n] = -(i as i64) * PENALTY;
+    }
+    for i in 1..n {
+        for j in 1..n {
+            let diag = m[(i - 1) * n + j - 1] + scores[i * n + j];
+            let left = m[i * n + j - 1] - PENALTY;
+            let up = m[(i - 1) * n + j] - PENALTY;
+            m[i * n + j] = diag.max(left).max(up);
+        }
+    }
+    m
+}
+
+impl Workload for Nw {
+    fn name(&self) -> &'static str {
+        "nw"
+    }
+
+    fn suite(&self) -> &'static str {
+        "Rodinia"
+    }
+
+    fn dwarf(&self) -> &'static str {
+        "Dynamic Programming"
+    }
+
+    fn pattern(&self) -> &'static str {
+        "Regular"
+    }
+
+    fn dataset_desc(&self, scale: Scale) -> String {
+        let n = size(scale);
+        format!("{n}x{n} alignment matrix")
+    }
+
+    fn dominant(&self) -> &'static str {
+        "nw_kernel"
+    }
+
+    fn privatize_first(&self) -> Vec<&'static str> {
+        vec!["nw_kernel"]
+    }
+
+    fn supports_replication(&self) -> bool {
+        // Row i needs row i-1: a replica boundary would read half-written
+        // rows. (The single-pair FF version is safe because bounded pipe
+        // depth keeps the memory kernel fewer than a row's width ahead of
+        // the compute kernel — see the module docs.)
+        false
+    }
+
+    fn kernels(&self) -> Vec<Kernel> {
+        let idx = || v("i3") * p("n") + v("j3");
+        let body = vec![for_(
+            "i3",
+            i(1),
+            p("n"),
+            vec![for_(
+                "j3",
+                i(1),
+                p("n"),
+                vec![
+                    let_i("diag", ld("m", idx() - p("n") - i(1)) + ld("s", idx())),
+                    // the true distance-1 dependency the paper privatizes:
+                    let_i("left", ld("m", idx() - i(1)) - p("penalty")),
+                    let_i("up", ld("m", idx() - p("n")) - p("penalty")),
+                    store("m", idx(), v("diag").max(v("left")).max(v("up"))),
+                ],
+            )],
+        )];
+        vec![KernelBuilder::new("nw_kernel", KernelKind::SingleWorkItem)
+            .buf_rw("m", Ty::I32)
+            .buf_ro("s", Ty::I32)
+            .scalar("n", Ty::I32)
+            .scalar("penalty", Ty::I32)
+            .body(body)
+            .finish()]
+    }
+
+    fn image(&self, scale: Scale) -> MemoryImage {
+        let n = size(scale);
+        let mut m0 = vec![0i64; n * n];
+        for j in 0..n {
+            m0[j] = -(j as i64) * PENALTY;
+        }
+        for i2 in 0..n {
+            m0[i2 * n] = -(i2 as i64) * PENALTY;
+        }
+        let mut m = MemoryImage::new();
+        m.add_i64s("m", &m0).add_i64s("s", &datagen::nw_scores(n, SEED));
+        m.set_i("n", n as i64).set_i("penalty", PENALTY);
+        m
+    }
+
+    fn run(&self, app: &App, img: &mut MemoryImage, h: &mut Harness) -> Result<(), ExecError> {
+        h.launch(app.unit("nw_kernel"), img)
+    }
+
+    fn validate(&self, img: &MemoryImage, scale: Scale) -> Result<(), String> {
+        let n = size(scale);
+        let want = reference(&datagen::nw_scores(n, SEED), n);
+        let got = img.buf("m").unwrap().to_i64s();
+        if got != want {
+            let ix = got.iter().zip(&want).position(|(a, b)| a != b).unwrap();
+            return Err(format!("nw: m[{ix}] = {}, want {}", got[ix], want[ix]));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::device::DeviceConfig;
+    use crate::transform::{check_feasible, privatize, Variant};
+    use crate::workloads::run_workload;
+
+    #[test]
+    fn baseline_has_true_mlcd_until_privatized() {
+        let k = &Nw.kernels()[0];
+        assert!(check_feasible(k).is_err());
+        let pk = privatize(k).unwrap();
+        assert!(check_feasible(&pk).is_ok());
+    }
+
+    #[test]
+    fn plain_feedforward_is_rejected() {
+        // Without privatization the split must refuse (paper §3 limits).
+        let k = &Nw.kernels()[0];
+        assert!(crate::transform::feedforward(k, 1).is_err());
+    }
+
+    #[test]
+    fn tiny_baseline_validates() {
+        let cfg = DeviceConfig::pac_a10();
+        run_workload(&Nw, Variant::Baseline, Scale::Tiny, &cfg).unwrap();
+    }
+
+    #[test]
+    fn tiny_ff_validates_with_big_speedup() {
+        let cfg = DeviceConfig::pac_a10();
+        let base = run_workload(&Nw, Variant::Baseline, Scale::Tiny, &cfg).unwrap();
+        let ff = run_workload(&Nw, Variant::FeedForward { depth: 1 }, Scale::Tiny, &cfg).unwrap();
+        let speedup = base.metrics.seconds / ff.metrics.seconds;
+        assert!(speedup > 10.0, "nw tiny ff speedup = {speedup}");
+    }
+}

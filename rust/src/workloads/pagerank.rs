@@ -1,0 +1,192 @@
+//! PageRank (Pannotia, Table 2: 0.96x — bandwidth-saturated baseline).
+//!
+//! Pull-style CSR power iteration: a contribution kernel (pr/degree,
+//! sequential, II=1) and an irregular gather kernel that accumulates
+//! neighbour contributions. Both are cross-buffer (ping-pong), so the
+//! baseline pipelines and is DRAM-bound; FF moves the same traffic and
+//! changes nothing (the paper's explanation for why M2C2 is also flat:
+//! "highly optimized memory operations with high bandwidth utilization").
+
+use super::{App, Harness, Scale, Workload};
+use crate::ir::build::*;
+use crate::ir::{Kernel, KernelKind, Ty};
+use crate::sim::exec::ExecError;
+use crate::sim::mem::MemoryImage;
+use crate::workloads::datagen::{self, CsrGraph};
+
+pub struct PageRank;
+
+pub const SEED: u64 = 0x9A6E;
+pub const DAMPING: f32 = 0.85;
+pub const ROUNDS: usize = 10;
+
+pub fn graph(scale: Scale) -> CsrGraph {
+    match scale {
+        Scale::Tiny => datagen::random_graph(128, 6, SEED), // artifact size
+        Scale::Small => datagen::random_graph(30_000, 8, SEED),
+        Scale::Paper => datagen::random_graph(1_000_000, 10, SEED),
+    }
+}
+
+/// Native reference (same iteration order / f32 arithmetic).
+pub fn reference(g: &CsrGraph, rounds: usize) -> Vec<f32> {
+    let n = g.n;
+    let mut pr = vec![1.0f32 / n as f32; n];
+    for _ in 0..rounds {
+        let contrib: Vec<f32> = (0..n)
+            .map(|v| {
+                let d = g.degree(v).max(1) as f32;
+                pr[v] / d
+            })
+            .collect();
+        let mut next = vec![0.0f32; n];
+        for v in 0..n {
+            let mut sum = 0.0f32;
+            for &u in g.neighbors(v) {
+                sum += contrib[u as usize];
+            }
+            next[v] = (1.0 - DAMPING) / n as f32 + DAMPING * sum;
+        }
+        pr = next;
+    }
+    pr
+}
+
+impl Workload for PageRank {
+    fn name(&self) -> &'static str {
+        "pagerank"
+    }
+
+    fn suite(&self) -> &'static str {
+        "Pannotia"
+    }
+
+    fn dwarf(&self) -> &'static str {
+        "Graph Traversal"
+    }
+
+    fn pattern(&self) -> &'static str {
+        "Irregular"
+    }
+
+    fn dataset_desc(&self, scale: Scale) -> String {
+        format!("uniform random graph, #nodes={}, {ROUNDS} power iterations", graph(scale).n)
+    }
+
+    fn dominant(&self) -> &'static str {
+        "pagerank_kernel"
+    }
+
+    fn kernels(&self) -> Vec<Kernel> {
+        let contrib = KernelBuilder::new("pagerank_contrib", KernelKind::SingleWorkItem)
+            .buf_ro("pr", Ty::F32)
+            .buf_ro("row", Ty::I32)
+            .buf_wo("contrib", Ty::F32)
+            .scalar("num_nodes", Ty::I32)
+            .body(vec![for_(
+                "t2",
+                i(0),
+                p("num_nodes"),
+                vec![
+                    let_i("deg", ld("row", v("t2") + i(1)) - ld("row", v("t2"))),
+                    let_i("d", v("deg").max(i(1))),
+                    store("contrib", v("t2"), ld("pr", v("t2")) / itof(v("d"))),
+                ],
+            )])
+            .finish();
+
+        let gather = KernelBuilder::new("pagerank_kernel", KernelKind::SingleWorkItem)
+            .buf_ro("row", Ty::I32)
+            .buf_ro("col", Ty::I32)
+            .buf_ro("contrib", Ty::F32)
+            .buf_wo("pr_next", Ty::F32)
+            .scalar("num_nodes", Ty::I32)
+            .scalar_f("base", Ty::F32)
+            .scalar_f("damping", Ty::F32)
+            .body(vec![for_(
+                "t2",
+                i(0),
+                p("num_nodes"),
+                vec![
+                    let_i("start", ld("row", v("t2"))),
+                    let_i("end", ld("row", v("t2") + i(1))),
+                    let_f("sum", f(0.0)),
+                    for_(
+                        "e",
+                        v("start"),
+                        v("end"),
+                        vec![assign("sum", v("sum") + ld("contrib", ld("col", v("e"))))],
+                    ),
+                    store("pr_next", v("t2"), p("base") + p("damping") * v("sum")),
+                ],
+            )])
+            .finish();
+
+        vec![contrib, gather]
+    }
+
+    fn image(&self, scale: Scale) -> MemoryImage {
+        let g = graph(scale);
+        let mut m = MemoryImage::new();
+        m.add_i64s("row", &g.row)
+            .add_i64s("col", &g.col)
+            .add_f32s("pr", &vec![1.0 / g.n as f32; g.n])
+            .add_zeros("contrib", Ty::F32, g.n)
+            .add_zeros("pr_next", Ty::F32, g.n);
+        m.set_i("num_nodes", g.n as i64)
+            .set_f("base", (1.0 - DAMPING) / g.n as f32)
+            .set_f("damping", DAMPING);
+        m
+    }
+
+    fn run(&self, app: &App, img: &mut MemoryImage, h: &mut Harness) -> Result<(), ExecError> {
+        for _ in 0..ROUNDS {
+            h.launch(app.unit("pagerank_contrib"), img)?;
+            h.launch(app.unit("pagerank_kernel"), img)?;
+            img.swap_bufs("pr", "pr_next");
+        }
+        Ok(())
+    }
+
+    fn validate(&self, img: &MemoryImage, scale: Scale) -> Result<(), String> {
+        let g = graph(scale);
+        let want = reference(&g, ROUNDS);
+        let got = img.buf("pr").unwrap().to_f32s();
+        let sum: f32 = got.iter().sum();
+        if (sum - 1.0).abs() > 0.05 {
+            return Err(format!("pagerank: probability mass {sum}"));
+        }
+        for (ix, (g_, w)) in got.iter().zip(&want).enumerate() {
+            if (g_ - w).abs() > 1e-5 + 1e-3 * w.abs() {
+                return Err(format!("pagerank: pr[{ix}] = {g_}, want {w}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::device::DeviceConfig;
+    use crate::transform::Variant;
+    use crate::workloads::run_workload;
+
+    #[test]
+    fn gather_has_dlcd_but_no_mlcd() {
+        let ks = PageRank.kernels();
+        let rep = crate::analysis::report::KernelReport::for_kernel(&ks[1]);
+        assert!(rep.loops.iter().all(|l| l.serialized_by.is_none()));
+        assert!(rep.loops.iter().any(|l| l.dlcd_var.as_deref() == Some("sum")));
+    }
+
+    #[test]
+    fn tiny_flat_speedup_and_valid() {
+        let cfg = DeviceConfig::pac_a10();
+        let base = run_workload(&PageRank, Variant::Baseline, Scale::Tiny, &cfg).unwrap();
+        let ff =
+            run_workload(&PageRank, Variant::FeedForward { depth: 1 }, Scale::Tiny, &cfg).unwrap();
+        let speedup = base.metrics.seconds / ff.metrics.seconds;
+        assert!(speedup > 0.6 && speedup < 1.4, "pagerank ff speedup = {speedup}");
+    }
+}

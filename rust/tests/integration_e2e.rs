@@ -1,0 +1,83 @@
+//! End-to-end: the full evaluation pipeline at Tiny scale produces every
+//! table with the paper's qualitative content. (The Small-scale numbers
+//! live in EXPERIMENTS.md and the benches.)
+
+use pipefwd::coordinator;
+use pipefwd::sim::device::DeviceConfig;
+use pipefwd::workloads::Scale;
+
+#[test]
+fn table2_has_all_rows_and_sane_cells() {
+    let cfg = DeviceConfig::pac_a10();
+    let t = coordinator::table2(Scale::Tiny, &cfg);
+    assert_eq!(t.rows.len(), 10);
+    for row in &t.rows {
+        let speedup: f64 = row[2].parse().unwrap();
+        assert!(speedup > 0.3 && speedup < 500.0, "{row:?}");
+        let logic: f64 = row[3].parse().unwrap();
+        assert!(logic > 14.0 && logic < 60.0, "{row:?}");
+        let brams: u32 = row[5].parse().unwrap();
+        assert!(brams >= 380 && brams < 1500, "{row:?}");
+    }
+}
+
+#[test]
+fn figure4_average_gain_in_paper_band() {
+    let cfg = DeviceConfig::pac_a10();
+    let t = coordinator::figure4(Scale::Tiny, &cfg);
+    let avg_row = t.rows.last().unwrap();
+    let avg: f64 = avg_row[1].parse().unwrap();
+    // paper: +39% average; we accept a generous band at Tiny scale
+    assert!(avg > 1.1 && avg < 2.2, "avg M2C2 gain {avg}");
+}
+
+#[test]
+fn table3_regular_benefits_more_than_irregular() {
+    let cfg = DeviceConfig::pac_a10();
+    let t = coordinator::table3(Scale::Tiny, &cfg);
+    assert_eq!(t.rows.len(), 4);
+    let s = |r: usize| -> f64 { t.rows[r][2].trim_end_matches('x').parse().unwrap() };
+    // M_AI10_R gains more than M_AI10_IR (paper: 1.55 vs 1.00)
+    assert!(s(0) > s(1), "R {} vs IR {}", s(0), s(1));
+    // the divergent/DLCD set gains (paper: 1.90 / 1.84)
+    assert!(s(2) > 1.2 && s(3) > 1.2);
+}
+
+#[test]
+fn intext_metrics_match_paper_structure() {
+    let cfg = DeviceConfig::pac_a10();
+    let t = coordinator::intext(Scale::Tiny, &cfg);
+    // fw row: II 285 -> 1
+    let fw = t.rows.iter().find(|r| r[0] == "fw").unwrap();
+    assert_eq!(fw[1], "285");
+    assert_eq!(fw[2], "1");
+    // backprop row: baseline II in the 400s
+    let bp = t.rows.iter().find(|r| r[0] == "backprop").unwrap();
+    let ii: u32 = bp[1].parse().unwrap();
+    assert!((380..=470).contains(&ii));
+    // bandwidth rises for the serialized benchmarks
+    for name in ["fw", "mis", "backprop"] {
+        let row = t.rows.iter().find(|r| r[0] == name).unwrap();
+        let b_bw: f64 = row[3].parse().unwrap();
+        let f_bw: f64 = row[4].parse().unwrap();
+        assert!(f_bw > b_bw, "{name}: FF bandwidth should rise ({b_bw} -> {f_bw})");
+    }
+}
+
+#[test]
+fn headline_claims_reproduce_at_tiny() {
+    let cfg = DeviceConfig::pac_a10();
+    let h = coordinator::headline(Scale::Tiny, &cfg);
+    assert!(h.max_ff_speedup > 20.0, "max ff {:.1}", h.max_ff_speedup);
+    assert!(h.avg_ff_speedup_gainers > 5.0, "avg {:.1}", h.avg_ff_speedup_gainers);
+    assert!(h.max_total_speedup >= h.max_ff_speedup * 0.9);
+}
+
+#[test]
+fn csv_export_roundtrip() {
+    let cfg = DeviceConfig::pac_a10();
+    let t = coordinator::table1(Scale::Tiny);
+    let csv = t.to_csv();
+    assert!(csv.lines().count() == 11); // header + 10 benchmarks
+    let _ = cfg;
+}

@@ -1,0 +1,103 @@
+//! PJRT runtime integration: load the AOT artifacts, execute them, and
+//! cross-validate the IR interpreter's numerics against the JAX/Pallas
+//! golden implementations (requires `make artifacts`; skipped otherwise).
+
+use pipefwd::runtime::{golden, Runtime};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::open_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping runtime tests: {e:#} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_covers_expected_artifacts() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let names = rt.names();
+    for expected in ["hotspot", "fw", "backprop_out", "knn", "pagerank", "mis_neighbor_min"] {
+        assert!(names.contains(&expected), "missing artifact {expected}");
+    }
+}
+
+#[test]
+fn artifact_executes_with_correct_shapes() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let spec = rt.spec("knn").unwrap().clone();
+    assert_eq!(spec.inputs[0].dims, vec![1024, 8]);
+    let pts = vec![0.5f32; 1024 * 8];
+    let q = vec![0.25f32; 8];
+    let out = rt.run_f32("knn", &[pts, q]).unwrap();
+    assert_eq!(out.len(), 1024);
+    // every distance is 8 * 0.25^2 = 0.5
+    for d in out {
+        assert!((d - 0.5).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn wrong_arity_is_rejected() {
+    let Some(rt) = runtime_or_skip() else { return };
+    assert!(rt.run_f32("knn", &[vec![0.0; 8]]).is_err());
+    assert!(rt.run_f32("nope", &[]).is_err());
+}
+
+#[test]
+fn golden_hotspot() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let d = golden::check_hotspot(&rt).unwrap();
+    assert!(d < 1e-3);
+}
+
+#[test]
+fn golden_fw() {
+    let Some(rt) = runtime_or_skip() else { return };
+    golden::check_fw(&rt).unwrap();
+}
+
+#[test]
+fn golden_knn() {
+    let Some(rt) = runtime_or_skip() else { return };
+    golden::check_knn(&rt).unwrap();
+}
+
+#[test]
+fn golden_pagerank() {
+    let Some(rt) = runtime_or_skip() else { return };
+    golden::check_pagerank(&rt).unwrap();
+}
+
+#[test]
+fn golden_mis_neighbor_min() {
+    let Some(rt) = runtime_or_skip() else { return };
+    golden::check_mis_neighbor_min(&rt).unwrap();
+}
+
+/// The backprop artifacts encode the MXU forward pass + the explicit
+/// Rodinia update: spot-check the training-step artifact reduces loss.
+#[test]
+fn backprop_artifact_training_step_descends() {
+    let Some(rt) = runtime_or_skip() else { return };
+    use pipefwd::util::rng::Rng;
+    let mut rng = Rng::new(42);
+    let mut gen = |n: usize, s: f32| -> Vec<f32> {
+        (0..n).map(|_| rng.f32_range(-s, s)).collect()
+    };
+    let x = gen(32 * 64, 1.0);
+    let w1 = gen(64 * 16, 0.1);
+    let w2 = gen(16 * 8, 0.1);
+    let target: Vec<f32> = (0..32 * 8).map(|_| 0.5f32).collect();
+
+    let out0 = rt.run_f32("backprop_out", &[x.clone(), w1.clone(), w2.clone()]).unwrap();
+    let w1b = rt
+        .run_f32("backprop_w1", &[x.clone(), w1, w2.clone(), target.clone()])
+        .unwrap();
+    let out1 = rt.run_f32("backprop_out", &[x, w1b, w2]).unwrap();
+    let loss = |o: &[f32]| -> f32 {
+        o.iter().zip(&target).map(|(a, b)| (a - b) * (a - b)).sum::<f32>()
+    };
+    assert!(loss(&out1) < loss(&out0), "training step did not descend");
+}

@@ -1,0 +1,107 @@
+//! Integration tests for the paper's worked examples (Fig. 2 / Fig. 3) and
+//! the end-to-end transformation recipe on real benchmark kernels.
+
+use pipefwd::analysis::report::KernelReport;
+use pipefwd::ir::pretty::program_to_string;
+use pipefwd::transform::examples::{fig2_kernel, fig3b_kernel};
+use pipefwd::transform::{apply_variant, feedforward, ndrange_to_swi, Variant};
+use pipefwd::workloads::{suite, Workload};
+
+/// E5: the Fig. 2 transformation reproduces the paper's structure — the
+/// printed memory kernel contains only channel writes and loads, the
+/// compute kernel only channel reads and stores.
+#[test]
+fn fig2_printed_structure_matches_paper() {
+    let ff = feedforward(&fig2_kernel(), 1).unwrap();
+    let src = program_to_string(&ff);
+    assert!(src.contains("#pragma OPENCL EXTENSION cl_intel_channels : enable"));
+    // memory kernel: write_channel_intel per load; no stores to min_array
+    let mem_src = pipefwd::ir::pretty::kernel_to_string(&ff.kernels[0]);
+    assert!(mem_src.contains("write_channel_intel"));
+    assert!(!mem_src.contains("min_array["));
+    assert!(mem_src.contains("c_array["));
+    // compute kernel: read_channel_intel, stores, no global loads
+    let cmp_src = pipefwd::ir::pretty::kernel_to_string(&ff.kernels[1]);
+    assert!(cmp_src.contains("read_channel_intel"));
+    assert!(cmp_src.contains("min_array["));
+    assert!(!cmp_src.contains("c_array["));
+    assert!(!cmp_src.contains("col["));
+}
+
+/// E5: Fig. 3 — the DLCD moves to the compute kernel; the memory kernel
+/// pipelines at II=1.
+#[test]
+fn fig3_dlcd_moves_to_compute_kernel() {
+    let k = fig3b_kernel();
+    let base = KernelReport::for_kernel(&k);
+    assert!(base.loops.iter().any(|l| l.dlcd_var.is_some()));
+
+    let ff = feedforward(&k, 1).unwrap();
+    let mem = KernelReport::for_kernel(&ff.kernels[0]);
+    let cmp = KernelReport::for_kernel(&ff.kernels[1]);
+    assert!(mem.loops.iter().all(|l| l.dlcd_var.is_none()), "DLCD left in memory kernel");
+    assert_eq!(mem.max_ii(), 1);
+    assert!(cmp.loops.iter().any(|l| l.dlcd_var.is_some()), "DLCD lost entirely");
+}
+
+/// NDRange -> SWI -> feed-forward composes (paper step 1 feeding step 6).
+#[test]
+fn ndrange_pipeline_composes() {
+    use pipefwd::ir::build::*;
+    use pipefwd::ir::{KernelKind, Ty};
+    let nd = KernelBuilder::new("scale", KernelKind::NDRange)
+        .buf_ro("a", Ty::F32)
+        .buf_wo("o", Ty::F32)
+        .body(vec![store("o", gid(), ld("a", gid()) * f(2.0))])
+        .finish();
+    let swi = ndrange_to_swi(&nd, "n");
+    let ff = feedforward(&swi, 1).unwrap();
+    assert_eq!(ff.kernels.len(), 2);
+    assert_eq!(pipefwd::ir::validate_program(&ff), Ok(()));
+}
+
+/// Every suite benchmark builds every applicable variant, and the variant
+/// matrix is consistent with `supports_replication`.
+#[test]
+fn variant_matrix_builds_for_all_benchmarks() {
+    for w in suite() {
+        for variant in [
+            Variant::Baseline,
+            Variant::FeedForward { depth: 1 },
+            Variant::FeedForward { depth: 1000 },
+        ] {
+            let app = w.build(variant).unwrap_or_else(|e| {
+                panic!("{}: {variant:?} failed: {e}", w.name());
+            });
+            for u in &app.units {
+                pipefwd::ir::validate_program(u)
+                    .unwrap_or_else(|e| panic!("{} {variant:?}: {e}", w.name()));
+            }
+        }
+        let m2 = w.build(Variant::MxCx { parts: 2, depth: 1 });
+        assert_eq!(m2.is_ok(), w.supports_replication(), "{}", w.name());
+    }
+}
+
+/// Transformed kernels keep the paper's naming convention so reports are
+/// readable.
+#[test]
+fn split_kernel_names_follow_convention() {
+    let k = fig2_kernel();
+    let prog = apply_variant(&k, Variant::MxCx { parts: 2, depth: 1 }).unwrap();
+    let names: Vec<&str> = prog.kernels.iter().map(|k| k.name.as_str()).collect();
+    assert_eq!(names, vec!["mis1_mem_r0", "mis1_cmp_r0", "mis1_mem_r1", "mis1_cmp_r1"]);
+}
+
+/// The paper's feasibility limitation: NW is rejected until privatized,
+/// and privatization is discoverable through the public API.
+#[test]
+fn nw_limitation_workflow() {
+    let nw = pipefwd::workloads::by_name("nw").unwrap();
+    let k = &nw.kernels()[0];
+    let err = feedforward(k, 1).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("loop-carried"), "unexpected error: {msg}");
+    let fixed = pipefwd::transform::privatize(k).unwrap();
+    assert!(feedforward(&fixed, 1).is_ok());
+}

@@ -1,0 +1,124 @@
+//! Cross-workload integration: every benchmark validates under every
+//! applicable variant at Tiny scale, and the Table-2 *shape* holds — who
+//! wins, who stays flat (the reproduction's core claim, E1).
+
+use pipefwd::sim::device::DeviceConfig;
+use pipefwd::transform::Variant;
+use pipefwd::workloads::{run_workload, suite, Scale};
+
+#[test]
+fn all_benchmarks_validate_under_all_variants_tiny() {
+    let cfg = DeviceConfig::pac_a10();
+    for w in suite() {
+        for variant in [Variant::Baseline, Variant::FeedForward { depth: 1 }] {
+            run_workload(w.as_ref(), variant, Scale::Tiny, &cfg)
+                .unwrap_or_else(|e| panic!("{} {variant:?}: {e}", w.name()));
+        }
+        if w.supports_replication() {
+            run_workload(w.as_ref(), Variant::MxCx { parts: 2, depth: 1 }, Scale::Tiny, &cfg)
+                .unwrap_or_else(|e| panic!("{} m2c2: {e}", w.name()));
+        }
+    }
+}
+
+/// The paper's Table-2 sign structure at Tiny scale: serialized-baseline
+/// benchmarks gain a lot; already-pipelined ones sit near 1x.
+#[test]
+fn table2_shape_holds_at_tiny() {
+    let cfg = DeviceConfig::pac_a10();
+    let speedup = |name: &str| -> f64 {
+        let w = pipefwd::workloads::by_name(name).unwrap();
+        let b = run_workload(w.as_ref(), Variant::Baseline, Scale::Tiny, &cfg).unwrap();
+        let f = run_workload(w.as_ref(), Variant::FeedForward { depth: 1 }, Scale::Tiny, &cfg)
+            .unwrap();
+        b.metrics.seconds / f.metrics.seconds
+    };
+    // big gainers (paper: 13.8x, 65x, 44.5x, 51x, 6.5x)
+    assert!(speedup("bfs") > 3.0);
+    assert!(speedup("fw") > 20.0);
+    assert!(speedup("backprop") > 10.0);
+    assert!(speedup("nw") > 10.0);
+    assert!(speedup("mis") > 2.0);
+    // flats (paper: 0.85x, 0.88x, 1.02x, 0.96x)
+    let flat = |n: &str| {
+        let s = speedup(n);
+        assert!(s > 0.55 && s < 1.5, "{n} expected flat, got {s}");
+    };
+    flat("hotspot");
+    flat("hotspot3d");
+    flat("color");
+    flat("pagerank");
+}
+
+/// Depth-insensitivity (E4c) on a real benchmark at Tiny scale.
+#[test]
+fn channel_depth_is_insignificant_for_fw() {
+    let cfg = DeviceConfig::pac_a10();
+    let w = pipefwd::workloads::by_name("fw").unwrap();
+    let mut times = vec![];
+    for depth in [1usize, 100, 1000] {
+        let h = run_workload(w.as_ref(), Variant::FeedForward { depth }, Scale::Tiny, &cfg)
+            .unwrap();
+        times.push(h.metrics.seconds);
+    }
+    let max = times.iter().cloned().fold(0.0, f64::max);
+    let min = times.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(max / min < 1.1, "depth sweep spread: {times:?}");
+}
+
+/// M1C2 is not better than M2C2 (paper §3: separate producers win).
+#[test]
+fn shared_producer_not_better() {
+    let cfg = DeviceConfig::pac_a10();
+    for name in ["fw", "mis"] {
+        let w = pipefwd::workloads::by_name(name).unwrap();
+        let m2 =
+            run_workload(w.as_ref(), Variant::MxCx { parts: 2, depth: 1 }, Scale::Tiny, &cfg)
+                .unwrap();
+        let m1 =
+            run_workload(w.as_ref(), Variant::M1Cx { consumers: 2, depth: 1 }, Scale::Tiny, &cfg)
+                .unwrap();
+        assert!(
+            m1.metrics.seconds >= m2.metrics.seconds * 0.95,
+            "{name}: m1c2 ({}) beat m2c2 ({})",
+            m1.metrics.seconds,
+            m2.metrics.seconds
+        );
+    }
+}
+
+/// Area model deltas (E1): feed-forward costs a little logic; M2C2 costs
+/// noticeably more (the paper's +31% average logic overhead).
+#[test]
+fn area_overheads_ordered() {
+    let cfg = DeviceConfig::pac_a10();
+    let w = pipefwd::workloads::by_name("fw").unwrap();
+    let b = run_workload(w.as_ref(), Variant::Baseline, Scale::Tiny, &cfg).unwrap();
+    let f = run_workload(w.as_ref(), Variant::FeedForward { depth: 1 }, Scale::Tiny, &cfg).unwrap();
+    let m = run_workload(w.as_ref(), Variant::MxCx { parts: 2, depth: 1 }, Scale::Tiny, &cfg)
+        .unwrap();
+    assert!(f.area.logic_frac >= b.area.logic_frac * 0.98);
+    assert!(m.area.logic_frac > f.area.logic_frac * 1.1);
+}
+
+/// Vectorization case study (E4e): helps FW, hurts MIS.
+#[test]
+fn vector_case_study_shape() {
+    let cfg = DeviceConfig::pac_a10();
+    let fw = pipefwd::workloads::by_name("fw").unwrap();
+    let ff = run_workload(fw.as_ref(), Variant::FeedForward { depth: 1 }, Scale::Tiny, &cfg)
+        .unwrap();
+    let v4 = run_workload(fw.as_ref(), Variant::Vectorized { width: 4, depth: 1 }, Scale::Tiny, &cfg)
+        .unwrap();
+    let gain = ff.metrics.seconds / v4.metrics.seconds;
+    assert!(gain > 1.5, "fw vec4 gain = {gain} (paper ~3x)");
+
+    let mis = pipefwd::workloads::by_name("mis").unwrap();
+    let ff = run_workload(mis.as_ref(), Variant::FeedForward { depth: 1 }, Scale::Tiny, &cfg)
+        .unwrap();
+    let v4 =
+        run_workload(mis.as_ref(), Variant::Vectorized { width: 4, depth: 1 }, Scale::Tiny, &cfg)
+            .unwrap();
+    let gain = ff.metrics.seconds / v4.metrics.seconds;
+    assert!(gain < 1.2, "mis vec4 should not gain, got {gain}");
+}

@@ -1,0 +1,142 @@
+//! Property tests over the simulator stack: performance-model sanity
+//! (bound consistency, monotonicity), DES vs analytic agreement, and
+//! profile/site-numbering invariants on random kernels.
+
+use pipefwd::ir::Program;
+use pipefwd::sim::device::DeviceConfig;
+use pipefwd::sim::exec::{run_group, ExecOptions};
+use pipefwd::sim::perf::PerfModel;
+use pipefwd::transform::{apply_variant, Variant};
+use pipefwd::util::testing::{check, gen_kernel};
+
+#[test]
+fn profile_sites_match_static_analysis() {
+    check("sites_match", 40, |rng| {
+        let g = gen_kernel(rng);
+        let sites = pipefwd::analysis::select_lsus(&g.kernel);
+        let img = g.image();
+        let run = run_group(&Program::single(g.kernel.clone()), &img, &ExecOptions::default())
+            .map_err(|e| e.to_string())?;
+        if run.profiles[0].sites.len() != sites.len() {
+            return Err(format!(
+                "profile has {} sites, analysis {}",
+                run.profiles[0].sites.len(),
+                sites.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn makespan_at_least_both_bounds() {
+    check("makespan_bounds", 40, |rng| {
+        let g = gen_kernel(rng);
+        let cfg = DeviceConfig::pac_a10();
+        let prog = Program::single(g.kernel.clone());
+        let img = g.image();
+        let run = run_group(&prog, &img, &ExecOptions::default()).map_err(|e| e.to_string())?;
+        let model = PerfModel::new(&prog, &cfg);
+        let m = model.estimate(&run.profiles);
+        let cb_max = m.per_kernel.iter().map(|(_, c)| *c).fold(0.0, f64::max);
+        if m.cycles + 1e-6 < cb_max || m.cycles + 1e-6 < m.dram_cycles {
+            return Err(format!(
+                "makespan {} below bounds (cb {}, dram {})",
+                m.cycles, cb_max, m.dram_cycles
+            ));
+        }
+        if m.payload_bytes > m.dram_bytes + 1e-6 {
+            return Err("payload exceeds DRAM occupancy".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn des_within_factor_of_analytic() {
+    check("des_vs_analytic", 25, |rng| {
+        let g = gen_kernel(rng);
+        let cfg = DeviceConfig::pac_a10();
+        let prog = apply_variant(&g.kernel, Variant::FeedForward { depth: 4 })
+            .map_err(|e| e.to_string())?;
+        let img = g.image();
+        let run = run_group(&prog, &img, &ExecOptions::default()).map_err(|e| e.to_string())?;
+        let model = PerfModel::new(&prog, &cfg);
+        let a = model.estimate(&run.profiles);
+        let d = pipefwd::sim::des::simulate(&prog, &model, &run.profiles, &cfg, 16);
+        let ratio = d.cycles / a.cycles;
+        if !(0.5..=2.5).contains(&ratio) {
+            return Err(format!("DES/analytic ratio {ratio}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn more_traffic_never_modelled_faster() {
+    check("monotone_in_work", 25, |rng| {
+        let g = gen_kernel(rng);
+        let cfg = DeviceConfig::pac_a10();
+        let prog = Program::single(g.kernel.clone());
+        let model = PerfModel::new(&prog, &cfg);
+
+        let img_small = g.image();
+        let run_small =
+            run_group(&prog, &img_small, &ExecOptions::default()).map_err(|e| e.to_string())?;
+        let t_small = model.estimate(&run_small.profiles).cycles;
+
+        // run twice on the same image: accumulated profile = 2x traffic
+        let img2 = g.image();
+        let r1 = run_group(&prog, &img2, &ExecOptions::default()).map_err(|e| e.to_string())?;
+        let r2 = run_group(&prog, &img2, &ExecOptions::default()).map_err(|e| e.to_string())?;
+        let mut merged = r1.profiles[0].clone();
+        merged.merge(&r2.profiles[0]);
+        let t_double = model.estimate(std::slice::from_ref(&merged)).cycles;
+
+        if t_double + 1e-6 < t_small {
+            return Err(format!("2x work modelled faster: {t_double} < {t_small}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn interpreter_is_deterministic_across_runs() {
+    check("deterministic", 25, |rng| {
+        let g = gen_kernel(rng);
+        let prog = apply_variant(&g.kernel, Variant::MxCx { parts: 2, depth: 1 })
+            .map_err(|e| e.to_string())?;
+        let img1 = g.image();
+        let img2 = g.image();
+        run_group(&prog, &img1, &ExecOptions::default()).map_err(|e| e.to_string())?;
+        run_group(&prog, &img2, &ExecOptions::default()).map_err(|e| e.to_string())?;
+        if img1.buf("out").unwrap().to_f32s() != img2.buf("out").unwrap().to_f32s() {
+            return Err("concurrent execution nondeterministic".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn depth_changes_do_not_change_results_or_tokens() {
+    check("depth_invariance", 25, |rng| {
+        let g = gen_kernel(rng);
+        let mut token_counts = vec![];
+        let mut outs = vec![];
+        for depth in [1usize, 7, 100] {
+            let prog = apply_variant(&g.kernel, Variant::FeedForward { depth })
+                .map_err(|e| e.to_string())?;
+            let img = g.image();
+            let run = run_group(&prog, &img, &ExecOptions::default()).map_err(|e| e.to_string())?;
+            token_counts.push(run.profiles.iter().map(|p| p.pipe_writes).sum::<u64>());
+            outs.push(img.buf("out").unwrap().to_f32s());
+        }
+        if token_counts.windows(2).any(|w| w[0] != w[1]) {
+            return Err(format!("token counts vary with depth: {token_counts:?}"));
+        }
+        if outs.windows(2).any(|w| w[0] != w[1]) {
+            return Err("results vary with depth".into());
+        }
+        Ok(())
+    });
+}

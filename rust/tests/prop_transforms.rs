@@ -1,0 +1,137 @@
+//! Property tests over the transformation pipeline: for randomly generated
+//! feed-forward-eligible kernels, every design variant must compute exactly
+//! the same outputs as the single work-item baseline, pipes must conserve
+//! tokens, and the compiler model must see the expected structure.
+
+use pipefwd::ir::{validate_program, Program};
+use pipefwd::sim::exec::{run_group, ExecOptions};
+use pipefwd::transform::{apply_variant, name_loads, Variant};
+use pipefwd::util::testing::{check, gen_kernel};
+
+fn outputs(img: &pipefwd::sim::mem::MemoryImage) -> (Vec<f32>, Vec<f32>) {
+    (
+        img.buf("out").unwrap().to_f32s(),
+        img.buf("out2").unwrap().to_f32s(),
+    )
+}
+
+#[test]
+fn all_variants_preserve_semantics() {
+    check("variants_preserve_semantics", 60, |rng| {
+        let g = gen_kernel(rng);
+        let base_img = g.image();
+        run_group(&Program::single(g.kernel.clone()), &base_img, &ExecOptions::default())
+            .map_err(|e| e.to_string())?;
+        let want = outputs(&base_img);
+
+        for variant in [
+            Variant::FeedForward { depth: 1 },
+            Variant::FeedForward { depth: 100 },
+            Variant::MxCx { parts: 2, depth: 1 },
+            Variant::MxCx { parts: 3, depth: 4 },
+            Variant::M1Cx { consumers: 2, depth: 1 },
+        ] {
+            let prog = apply_variant(&g.kernel, variant).map_err(|e| e.to_string())?;
+            validate_program(&prog).map_err(|e| e.to_string())?;
+            let img = g.image();
+            run_group(&prog, &img, &ExecOptions::default()).map_err(|e| e.to_string())?;
+            let got = outputs(&img);
+            if got != want {
+                return Err(format!("variant {variant:?} diverged from baseline"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pipes_conserve_tokens() {
+    check("pipes_conserve_tokens", 40, |rng| {
+        let g = gen_kernel(rng);
+        let prog = apply_variant(&g.kernel, Variant::FeedForward { depth: 1 })
+            .map_err(|e| e.to_string())?;
+        let img = g.image();
+        let run = run_group(&prog, &img, &ExecOptions::default()).map_err(|e| e.to_string())?;
+        let writes: u64 = run.profiles.iter().map(|p| p.pipe_writes).sum();
+        let reads: u64 = run.profiles.iter().map(|p| p.pipe_reads).sum();
+        if writes != reads {
+            return Err(format!("token mismatch: {writes} writes vs {reads} reads"));
+        }
+        // every dynamic load in the memory kernel produced one token
+        let mem_loads: u64 = run.profiles[0].sites.iter().map(|s| s.count).sum::<u64>();
+        if writes != mem_loads {
+            return Err(format!("{writes} tokens for {mem_loads} loads"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn memory_kernel_is_load_only_compute_is_store_only() {
+    check("split_roles", 40, |rng| {
+        let g = gen_kernel(rng);
+        let prog = apply_variant(&g.kernel, Variant::FeedForward { depth: 1 })
+            .map_err(|e| e.to_string())?;
+        let mem = &prog.kernels[0];
+        let cmp = &prog.kernels[1];
+        if mem.store_count() != 0 {
+            return Err("memory kernel contains stores".into());
+        }
+        if cmp.load_count() != 0 {
+            return Err("compute kernel contains global loads".into());
+        }
+        // every load of the normalized baseline survives in the memory kernel
+        let named = name_loads(&g.kernel);
+        if mem.load_count() != named.load_count() {
+            return Err(format!(
+                "memory kernel has {} loads, baseline {}",
+                mem.load_count(),
+                named.load_count()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dce_and_simplify_preserve_semantics() {
+    check("cleanup_preserves_semantics", 40, |rng| {
+        let g = gen_kernel(rng);
+        let base_img = g.image();
+        run_group(&Program::single(g.kernel.clone()), &base_img, &ExecOptions::default())
+            .map_err(|e| e.to_string())?;
+        let want = outputs(&base_img);
+
+        let cleaned = pipefwd::transform::simplify_kernel(&pipefwd::transform::dce_kernel(
+            &name_loads(&g.kernel),
+        ));
+        let img = g.image();
+        run_group(&Program::single(cleaned), &img, &ExecOptions::default())
+            .map_err(|e| e.to_string())?;
+        if outputs(&img) != want {
+            return Err("dce/simplify changed results".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn vectorize_preserves_semantics_when_trip_divides() {
+    check("vectorize_preserves_semantics", 30, |rng| {
+        let g = gen_kernel(rng); // n is a multiple of 16
+        for w in [2usize, 4] {
+            let vk = pipefwd::transform::vectorize(&g.kernel, w);
+            pipefwd::ir::validate_kernel(&vk).map_err(|e| e.to_string())?;
+            let base_img = g.image();
+            run_group(&Program::single(g.kernel.clone()), &base_img, &ExecOptions::default())
+                .map_err(|e| e.to_string())?;
+            let img = g.image();
+            run_group(&Program::single(vk), &img, &ExecOptions::default())
+                .map_err(|e| e.to_string())?;
+            if outputs(&img) != outputs(&base_img) {
+                return Err(format!("vectorize({w}) changed results"));
+            }
+        }
+        Ok(())
+    });
+}
