@@ -1,24 +1,32 @@
 //! Bench: regenerate the paper's Figure 4 (M2C2 speedup and resource
 //! overhead over the feed-forward baseline) plus the §3 Hotspot M2C2
-//! bandwidth claim (7340 -> 13660 MB/s).
+//! bandwidth claim (7340 -> 13660 MB/s), through the experiment engine —
+//! the hotspot feed-forward point is a cache hit from the figure run.
 
-use pipefwd::coordinator;
+use pipefwd::coordinator::{Engine, ExperimentId};
 use pipefwd::sim::device::DeviceConfig;
-use pipefwd::util::bench::{bench_scale, BenchReport};
+use pipefwd::util::bench::{bench_jobs, bench_scale, BenchReport};
 
 fn main() {
-    let cfg = DeviceConfig::pac_a10();
     let scale = bench_scale();
+    let engine = Engine::new(DeviceConfig::pac_a10(), bench_jobs());
     let mut b = BenchReport::new("figure4");
-    let table = b.sample("generate", || coordinator::figure4(scale, &cfg));
+    b.sample("prewarm_parallel", || engine.prewarm(ExperimentId::E2, scale));
+    let table = b.sample("generate", || engine.figure4(scale));
     print!("{}", table.to_markdown());
     let _ = table.save_csv("figure4");
-    let (ff_bw, m2_bw) = b.sample("hotspot_bw", || coordinator::hotspot_m2c2_bw(scale, &cfg));
+    let (ff_bw, m2_bw) = b.sample("hotspot_bw", || engine.hotspot_m2c2_bw(scale));
     println!(
         "hotspot bandwidth: FF {:.0} MB/s -> M2C2 {:.0} MB/s ({:+.0}%)   (paper: 7340 -> 13660)",
         ff_bw / 1e6,
         m2_bw / 1e6,
         (m2_bw / ff_bw - 1.0) * 100.0
+    );
+    println!(
+        "engine: {} unique configs, {} cache hits, {} jobs",
+        engine.cache_len(),
+        engine.cache_hits(),
+        engine.jobs
     );
     b.finish();
 }

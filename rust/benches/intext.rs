@@ -1,19 +1,33 @@
 //! Bench: regenerate the in-text numbers (E4a/E4b) — per-benchmark II
 //! before/after the split and max global-memory bandwidth, plus the
 //! early-stage compiler reports for FW (the paper's worked example of
-//! II 285 -> 1 with a prefetching LSU).
+//! II 285 -> 1 with a prefetching LSU) — through the experiment engine.
 
-use pipefwd::coordinator;
+use pipefwd::coordinator::engine::INTEXT_NAMES;
+use pipefwd::coordinator::{Cell, Engine};
 use pipefwd::sim::device::DeviceConfig;
 use pipefwd::transform::Variant;
-use pipefwd::util::bench::{bench_scale, BenchReport};
+use pipefwd::util::bench::{bench_jobs, bench_scale, BenchReport};
 use pipefwd::workloads::by_name;
 
 fn main() {
     let cfg = DeviceConfig::pac_a10();
     let scale = bench_scale();
+    let engine = Engine::new(cfg.clone(), bench_jobs());
     let mut b = BenchReport::new("intext");
-    let table = b.sample("metrics", || coordinator::intext(scale, &cfg));
+    b.sample("prewarm_parallel", || {
+        let cells: Vec<Cell> = INTEXT_NAMES
+            .iter()
+            .flat_map(|n| {
+                [Variant::Baseline, Variant::FeedForward { depth: 1 }]
+                    .into_iter()
+                    .map(|v| Cell::new(n, v, scale))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        let _ = engine.run_cells(&cells);
+    });
+    let table = b.sample("metrics", || engine.intext(scale));
     print!("{}", table.to_markdown());
     let _ = table.save_csv("intext");
 

@@ -2,24 +2,36 @@
 //! effect), producer/consumer counts (E4d: plateau past 2x2, shared
 //! producer worse) and the vector-type case study (E4e: FW gains ~3x,
 //! MIS degrades; Intel's SDK crashed here, our substrate completes it).
+//!
+//! One engine serves all three tables, so the shared feed-forward
+//! baselines simulate once (the cache-hit count printed at the end is
+//! the §Perf signal for the PR-1 memoization layer).
 
-use pipefwd::coordinator;
+use pipefwd::coordinator::engine::SWEEP_TRIO;
+use pipefwd::coordinator::experiments::DEPTHS;
+use pipefwd::coordinator::{Engine, ExperimentId};
 use pipefwd::sim::device::DeviceConfig;
-use pipefwd::util::bench::{bench_scale, BenchReport};
+use pipefwd::util::bench::{bench_jobs, bench_scale, BenchReport};
 
 fn main() {
-    let cfg = DeviceConfig::pac_a10();
     let scale = bench_scale();
+    let engine = Engine::new(DeviceConfig::pac_a10(), bench_jobs());
     let mut b = BenchReport::new("sweeps");
-    let names = ["fw", "hotspot", "mis"];
-    let t = b.sample("depth_sweep", || coordinator::depth_sweep(&names, scale, &cfg));
+    b.sample("prewarm_parallel", || engine.prewarm(ExperimentId::E4, scale));
+    let t = b.sample("depth_sweep", || engine.depth_sweep(&SWEEP_TRIO, scale, &DEPTHS));
     print!("{}", t.to_markdown());
     let _ = t.save_csv("depth_sweep");
-    let t = b.sample("pc_sweep", || coordinator::pc_sweep(&names, scale, &cfg));
+    let t = b.sample("pc_sweep", || engine.pc_sweep(&SWEEP_TRIO, scale));
     print!("{}", t.to_markdown());
     let _ = t.save_csv("pc_sweep");
-    let t = b.sample("vector_study", || coordinator::vector_study(scale, &cfg));
+    let t = b.sample("vector_study", || engine.vector_study(scale));
     print!("{}", t.to_markdown());
     let _ = t.save_csv("vector_study");
+    println!(
+        "engine: {} unique configs, {} cache hits, {} jobs",
+        engine.cache_len(),
+        engine.cache_hits(),
+        engine.jobs
+    );
     b.finish();
 }

@@ -1,20 +1,28 @@
 //! Bench: regenerate the paper's Table 2 (feed-forward vs single
-//! work-item baseline across the benchmark suite).
+//! work-item baseline across the benchmark suite) through the parallel,
+//! cache-aware experiment engine.
 //!
 //! `PIPEFWD_BENCH_SCALE=tiny|small|paper` selects the dataset scale
 //! (default small — the calibrated configuration reported in
-//! EXPERIMENTS.md).
+//! EXPERIMENTS.md). `PIPEFWD_BENCH_JOBS=N` overrides the worker count.
 
-use pipefwd::coordinator;
+use pipefwd::coordinator::{Engine, ExperimentId};
 use pipefwd::sim::device::DeviceConfig;
-use pipefwd::util::bench::{bench_scale, BenchReport};
+use pipefwd::util::bench::{bench_jobs, bench_scale, BenchReport};
 
 fn main() {
-    let cfg = DeviceConfig::pac_a10();
     let scale = bench_scale();
+    let engine = Engine::new(DeviceConfig::pac_a10(), bench_jobs());
     let mut b = BenchReport::new("table2");
-    let table = b.sample("generate", || coordinator::table2(scale, &cfg));
+    b.sample("prewarm_parallel", || engine.prewarm(ExperimentId::E1, scale));
+    let table = b.sample("generate", || engine.table2(scale));
     print!("{}", table.to_markdown());
     let _ = table.save_csv("table2");
+    println!(
+        "engine: {} unique configs, {} cache hits, {} jobs",
+        engine.cache_len(),
+        engine.cache_hits(),
+        engine.jobs
+    );
     b.finish();
 }

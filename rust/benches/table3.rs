@@ -1,22 +1,31 @@
 //! Bench: regenerate the paper's Table 3 (microbenchmarks: M2C2 vs
 //! baseline across access pattern and divergence) and the extended
-//! parametrized family (the paper's future-work sweep).
+//! parametrized family (the paper's future-work sweep), through the
+//! experiment engine.
 
-use pipefwd::coordinator;
+use pipefwd::coordinator::{Engine, ExperimentId};
 use pipefwd::sim::device::DeviceConfig;
-use pipefwd::util::bench::{bench_scale, BenchReport};
+use pipefwd::util::bench::{bench_jobs, bench_scale, BenchReport};
 
 fn main() {
-    let cfg = DeviceConfig::pac_a10();
     let scale = bench_scale();
+    let engine = Engine::new(DeviceConfig::pac_a10(), bench_jobs());
     let mut b = BenchReport::new("table3");
-    let table = b.sample("table3", || coordinator::table3(scale, &cfg));
+    b.sample("prewarm_parallel", || engine.prewarm(ExperimentId::E3, scale));
+    let table = b.sample("table3", || engine.table3(scale));
     print!("{}", table.to_markdown());
     let _ = table.save_csv("table3");
     if std::env::var("PIPEFWD_BENCH_FAMILY").is_ok() {
-        let fam = b.sample("family", || coordinator::micro_family(scale, &cfg));
+        b.sample("family_prewarm", || engine.prewarm(ExperimentId::E5, scale));
+        let fam = b.sample("family", || engine.micro_family(scale));
         print!("{}", fam.to_markdown());
         let _ = fam.save_csv("micro_family");
     }
+    println!(
+        "engine: {} unique configs, {} cache hits, {} jobs",
+        engine.cache_len(),
+        engine.cache_hits(),
+        engine.jobs
+    );
     b.finish();
 }

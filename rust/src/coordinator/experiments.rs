@@ -1,19 +1,28 @@
 //! Experiment definitions E1-E7 (see DESIGN.md experiment index): each
 //! regenerates one table/figure of the paper from the live system.
+//!
+//! Since PR 1 the table builders live on [`Engine`] (parallel grid
+//! fan-out + content-addressed measurement cache); the free functions
+//! here keep the original `(scale, cfg)` signatures and delegate to a
+//! fresh single-worker engine, so existing callers are unaffected.
 
-use crate::report::{fx, mbps, ms, Table};
+use super::engine::Engine;
+use super::scale_label;
+use crate::report::Table;
 use crate::sim::device::DeviceConfig;
 use crate::transform::Variant;
-use crate::workloads::{by_name, run_workload, suite, Harness, Scale, Workload};
+use crate::util::json::Json;
+use crate::workloads::{run_workload, suite, Harness, Scale, Workload};
 
 /// The paper's channel-depth candidates (§4.2: best of 1/100/1000).
 pub const DEPTHS: [usize; 3] = [1, 100, 1000];
 
-/// Result of one (workload, variant) measurement.
-#[derive(Debug, Clone)]
+/// Result of one (workload, variant, scale) measurement.
+#[derive(Debug, Clone, PartialEq)]
 pub struct Measurement {
     pub workload: String,
     pub variant: String,
+    pub scale: String,
     pub seconds: f64,
     pub cycles: f64,
     pub logic_pct: f64,
@@ -24,7 +33,12 @@ pub struct Measurement {
 }
 
 impl Measurement {
-    fn from_harness(w: &dyn Workload, variant: Variant, h: &Harness) -> Measurement {
+    pub fn from_harness(
+        w: &dyn Workload,
+        variant: Variant,
+        scale: Scale,
+        h: &Harness,
+    ) -> Measurement {
         // max BW of the *dominant* kernel's launch unit (what the paper's
         // profiler screenshots show), not the app-wide max
         let max_bw = h
@@ -35,6 +49,7 @@ impl Measurement {
         Measurement {
             workload: w.name().to_string(),
             variant: variant.label(),
+            scale: scale_label(scale).to_string(),
             seconds: h.metrics.seconds,
             cycles: h.metrics.cycles,
             logic_pct: h.area.logic_pct(),
@@ -44,9 +59,43 @@ impl Measurement {
             launches: h.launches,
         }
     }
+
+    /// Serialize for the BENCH_PR1.json results sink (field order fixed —
+    /// the determinism test compares bytes).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("workload".into(), Json::Str(self.workload.clone())),
+            ("variant".into(), Json::Str(self.variant.clone())),
+            ("scale".into(), Json::Str(self.scale.clone())),
+            ("seconds".into(), Json::Num(self.seconds)),
+            ("cycles".into(), Json::Num(self.cycles)),
+            ("logic_pct".into(), Json::Num(self.logic_pct)),
+            ("brams".into(), Json::Num(f64::from(self.brams))),
+            ("max_ii".into(), Json::Num(f64::from(self.max_ii))),
+            ("max_bw".into(), Json::Num(self.max_bw)),
+            ("launches".into(), Json::Num(self.launches as f64)),
+        ])
+    }
+
+    /// Inverse of [`Measurement::to_json`] (used by `pipefwd report`).
+    pub fn from_json(v: &Json) -> Option<Measurement> {
+        Some(Measurement {
+            workload: v.get("workload")?.as_str()?.to_string(),
+            variant: v.get("variant")?.as_str()?.to_string(),
+            scale: v.get("scale")?.as_str()?.to_string(),
+            seconds: v.get("seconds")?.as_f64()?,
+            cycles: v.get("cycles")?.as_f64()?,
+            logic_pct: v.get("logic_pct")?.as_f64()?,
+            brams: v.get("brams")?.as_f64()? as u32,
+            max_ii: v.get("max_ii")?.as_f64()? as u32,
+            max_bw: v.get("max_bw")?.as_f64()?,
+            launches: v.get("launches")?.as_f64()? as u64,
+        })
+    }
 }
 
-/// Run one (workload, variant, scale) and collect the measurement.
+/// Run one (workload, variant, scale) and collect the measurement — the
+/// uncached primitive; prefer [`Engine::measure`] which memoizes.
 pub fn measure(
     w: &dyn Workload,
     variant: Variant,
@@ -54,30 +103,12 @@ pub fn measure(
     cfg: &DeviceConfig,
 ) -> Result<Measurement, String> {
     let h = run_workload(w, variant, scale, cfg)?;
-    Ok(Measurement::from_harness(w, variant, &h))
+    Ok(Measurement::from_harness(w, variant, scale, &h))
 }
 
 /// Best feed-forward measurement across the paper's depth sweep.
 pub fn best_ff(w: &dyn Workload, scale: Scale, cfg: &DeviceConfig) -> Result<Measurement, String> {
-    let mut best: Option<Measurement> = None;
-    for d in DEPTHS {
-        // NW is only safe below the row width (see workloads::nw docs);
-        // the harness surfaces that as a validation error which we skip,
-        // exactly as a paper author would drop an invalid configuration.
-        match measure(w, Variant::FeedForward { depth: d }, scale, cfg) {
-            Ok(m) => {
-                if best.as_ref().map(|b| m.seconds < b.seconds).unwrap_or(true) {
-                    best = Some(m);
-                }
-            }
-            Err(e) => {
-                if d == 1 {
-                    return Err(e); // depth-1 must always work
-                }
-            }
-        }
-    }
-    Ok(best.unwrap())
+    Engine::serial(cfg.clone()).best_ff(w, scale)
 }
 
 // ---------------------------------------------------------------------------
@@ -111,40 +142,11 @@ pub struct Table2Row {
 }
 
 pub fn table2_rows(scale: Scale, cfg: &DeviceConfig) -> Vec<Table2Row> {
-    let mut rows = vec![];
-    for w in suite() {
-        let base = measure(w.as_ref(), Variant::Baseline, scale, cfg).expect("baseline runs");
-        let ff = best_ff(w.as_ref(), scale, cfg).expect("feed-forward runs");
-        rows.push(Table2Row { base, ff });
-    }
-    rows
+    Engine::serial(cfg.clone()).table2_rows(scale)
 }
 
 pub fn table2(scale: Scale, cfg: &DeviceConfig) -> Table {
-    let mut t = Table::new(
-        "Table 2: feed-forward design vs single work-item baseline",
-        &[
-            "Benchmark",
-            "Baseline time (ms)",
-            "FF speedup",
-            "Baseline logic (%)",
-            "FF logic (%)",
-            "Baseline BRAM",
-            "FF BRAM",
-        ],
-    );
-    for r in table2_rows(scale, cfg) {
-        t.row(vec![
-            r.base.workload.clone(),
-            ms(r.base.seconds),
-            fx(r.base.seconds / r.ff.seconds),
-            format!("{:.2}", r.base.logic_pct),
-            format!("{:.2}", r.ff.logic_pct),
-            r.base.brams.to_string(),
-            r.ff.brams.to_string(),
-        ]);
-    }
-    t
+    Engine::serial(cfg.clone()).table2(scale)
 }
 
 // ---------------------------------------------------------------------------
@@ -152,35 +154,7 @@ pub fn table2(scale: Scale, cfg: &DeviceConfig) -> Table {
 // ---------------------------------------------------------------------------
 
 pub fn figure4(scale: Scale, cfg: &DeviceConfig) -> Table {
-    let mut t = Table::new(
-        "Figure 4: M2C2 speedup and resource overhead vs feed-forward baseline",
-        &["Benchmark", "M2C2 speedup", "Logic overhead (%)", "BRAM overhead (%)"],
-    );
-    let mut speedups = vec![];
-    for w in suite() {
-        let ff = match measure(w.as_ref(), Variant::FeedForward { depth: 1 }, scale, cfg) {
-            Ok(m) => m,
-            Err(_) => continue,
-        };
-        let m2 = match measure(w.as_ref(), Variant::MxCx { parts: 2, depth: 1 }, scale, cfg) {
-            Ok(m) => m,
-            Err(e) => {
-                t.row(vec![w.name().into(), format!("n/a ({e})"), "-".into(), "-".into()]);
-                continue;
-            }
-        };
-        let s = ff.seconds / m2.seconds;
-        speedups.push(s);
-        t.row(vec![
-            w.name().into(),
-            fx(s),
-            format!("{:+.1}", (m2.logic_pct / ff.logic_pct - 1.0) * 100.0),
-            format!("{:+.1}", (m2.brams as f64 / ff.brams as f64 - 1.0) * 100.0),
-        ]);
-    }
-    let avg = speedups.iter().sum::<f64>() / speedups.len().max(1) as f64;
-    t.row(vec!["(average)".into(), fx(avg), "-".into(), "-".into()]);
-    t
+    Engine::serial(cfg.clone()).figure4(scale)
 }
 
 // ---------------------------------------------------------------------------
@@ -188,55 +162,12 @@ pub fn figure4(scale: Scale, cfg: &DeviceConfig) -> Table {
 // ---------------------------------------------------------------------------
 
 pub fn table3(scale: Scale, cfg: &DeviceConfig) -> Table {
-    use crate::workloads::micro::{Micro, MicroSpec};
-    let mut t = Table::new(
-        "Table 3: microbenchmark speedup (M2C2 over baseline) and area",
-        &[
-            "Benchmark",
-            "Baseline time (ms)",
-            "Speedup",
-            "Logic base (%)",
-            "Logic M2C2 (%)",
-            "BRAM base",
-            "BRAM M2C2",
-        ],
-    );
-    for spec in MicroSpec::table3() {
-        let w = Micro::new(spec);
-        let base = measure(&w, Variant::Baseline, scale, cfg).expect("micro baseline");
-        let m2 = measure(&w, Variant::MxCx { parts: 2, depth: 1 }, scale, cfg).expect("micro m2c2");
-        t.row(vec![
-            spec.label(),
-            ms(base.seconds),
-            format!("{}x", fx(base.seconds / m2.seconds)),
-            format!("{:.2}", base.logic_pct),
-            format!("{:.2}", m2.logic_pct),
-            base.brams.to_string(),
-            m2.brams.to_string(),
-        ]);
-    }
-    t
+    Engine::serial(cfg.clone()).table3(scale)
 }
 
 /// Extended microbenchmark family (the paper's future-work sweep).
 pub fn micro_family(scale: Scale, cfg: &DeviceConfig) -> Table {
-    use crate::workloads::micro::{Micro, MicroSpec};
-    let mut t = Table::new(
-        "Microbenchmark family: AI x pattern x divergence",
-        &["Benchmark", "FF speedup", "M2C2 speedup (over FF)"],
-    );
-    for spec in MicroSpec::family() {
-        let w = Micro::new(spec);
-        let base = measure(&w, Variant::Baseline, scale, cfg).expect("family baseline");
-        let ff = measure(&w, Variant::FeedForward { depth: 1 }, scale, cfg).expect("family ff");
-        let m2 = measure(&w, Variant::MxCx { parts: 2, depth: 1 }, scale, cfg).expect("family m2c2");
-        t.row(vec![
-            spec.label(),
-            fx(base.seconds / ff.seconds),
-            fx(ff.seconds / m2.seconds),
-        ]);
-    }
-    t
+    Engine::serial(cfg.clone()).micro_family(scale)
 }
 
 // ---------------------------------------------------------------------------
@@ -244,31 +175,12 @@ pub fn micro_family(scale: Scale, cfg: &DeviceConfig) -> Table {
 // ---------------------------------------------------------------------------
 
 pub fn intext(scale: Scale, cfg: &DeviceConfig) -> Table {
-    let mut t = Table::new(
-        "In-text metrics: II and max bandwidth, baseline vs feed-forward",
-        &["Benchmark", "Baseline II", "FF II", "Baseline max BW (MB/s)", "FF max BW (MB/s)"],
-    );
-    for name in ["fw", "backprop", "mis", "bfs", "nw", "hotspot"] {
-        let w = by_name(name).unwrap();
-        let base = measure(w.as_ref(), Variant::Baseline, scale, cfg).expect("baseline");
-        let ff = measure(w.as_ref(), Variant::FeedForward { depth: 1 }, scale, cfg).expect("ff");
-        t.row(vec![
-            name.into(),
-            base.max_ii.to_string(),
-            ff.max_ii.to_string(),
-            mbps(base.max_bw),
-            mbps(ff.max_bw),
-        ]);
-    }
-    t
+    Engine::serial(cfg.clone()).intext(scale)
 }
 
 /// Hotspot M2C2 bandwidth claim (§3: 7340 -> 13660 MB/s).
 pub fn hotspot_m2c2_bw(scale: Scale, cfg: &DeviceConfig) -> (f64, f64) {
-    let w = by_name("hotspot").unwrap();
-    let ff = measure(w.as_ref(), Variant::FeedForward { depth: 1 }, scale, cfg).unwrap();
-    let m2 = measure(w.as_ref(), Variant::MxCx { parts: 2, depth: 1 }, scale, cfg).unwrap();
-    (ff.max_bw, m2.max_bw)
+    Engine::serial(cfg.clone()).hotspot_m2c2_bw(scale)
 }
 
 // ---------------------------------------------------------------------------
@@ -277,66 +189,19 @@ pub fn hotspot_m2c2_bw(scale: Scale, cfg: &DeviceConfig) -> (f64, f64) {
 
 /// Channel-depth sweep (paper: no significant effect).
 pub fn depth_sweep(names: &[&str], scale: Scale, cfg: &DeviceConfig) -> Table {
-    let mut t = Table::new(
-        "Channel-depth sweep (feed-forward, seconds)",
-        &["Benchmark", "depth 1", "depth 100", "depth 1000"],
-    );
-    for name in names {
-        let w = by_name(name).unwrap();
-        let mut cells = vec![name.to_string()];
-        for d in DEPTHS {
-            match measure(w.as_ref(), Variant::FeedForward { depth: d }, scale, cfg) {
-                Ok(m) => cells.push(format!("{:.4}", m.seconds)),
-                Err(_) => cells.push("invalid".into()),
-            }
-        }
-        t.row(cells);
-    }
-    t
+    Engine::serial(cfg.clone()).depth_sweep(names, scale, &DEPTHS)
 }
 
 /// Producer/consumer count sweep incl. the 1-producer shape (paper: plateau
 /// at 2x2; M1CN worse than MNCN).
 pub fn pc_sweep(names: &[&str], scale: Scale, cfg: &DeviceConfig) -> Table {
-    let mut t = Table::new(
-        "Producer/consumer sweep (speedup over feed-forward baseline)",
-        &["Benchmark", "m1c1", "m2c2", "m3c3", "m4c4", "m1c2"],
-    );
-    for name in names {
-        let w = by_name(name).unwrap();
-        let ff = measure(w.as_ref(), Variant::FeedForward { depth: 1 }, scale, cfg).unwrap();
-        let mut cells = vec![name.to_string(), "1.00".into()];
-        for parts in [2usize, 3, 4] {
-            match measure(w.as_ref(), Variant::MxCx { parts, depth: 1 }, scale, cfg) {
-                Ok(m) => cells.push(fx(ff.seconds / m.seconds)),
-                Err(_) => cells.push("n/a".into()),
-            }
-        }
-        match measure(w.as_ref(), Variant::M1Cx { consumers: 2, depth: 1 }, scale, cfg) {
-            Ok(m) => cells.push(fx(ff.seconds / m.seconds)),
-            Err(_) => cells.push("n/a".into()),
-        }
-        t.row(cells);
-    }
-    t
+    Engine::serial(cfg.clone()).pc_sweep(names, scale)
 }
 
 /// Vector-type case study (paper: FW ~3x further, MIS degrades; their SDK
 /// crashed on pipes+vectors — our substrate completes the experiment).
 pub fn vector_study(scale: Scale, cfg: &DeviceConfig) -> Table {
-    let mut t = Table::new(
-        "Vector-type case study (speedup of vec4 feed-forward over feed-forward)",
-        &["Benchmark", "ff_v4 vs ff"],
-    );
-    for name in ["fw", "mis"] {
-        let w = by_name(name).unwrap();
-        let ff = measure(w.as_ref(), Variant::FeedForward { depth: 1 }, scale, cfg).unwrap();
-        match measure(w.as_ref(), Variant::Vectorized { width: 4, depth: 1 }, scale, cfg) {
-            Ok(m) => t.row(vec![name.into(), fx(ff.seconds / m.seconds)]),
-            Err(e) => t.row(vec![name.into(), format!("n/a ({e})")]),
-        };
-    }
-    t
+    Engine::serial(cfg.clone()).vector_study(scale)
 }
 
 // ---------------------------------------------------------------------------
@@ -351,25 +216,63 @@ pub struct Headline {
 
 /// "up to 65x, ~20x average across gainers, up to 86x with M2C2".
 pub fn headline(scale: Scale, cfg: &DeviceConfig) -> Headline {
-    let rows = table2_rows(scale, cfg);
-    let speedups: Vec<(String, f64)> = rows
-        .iter()
-        .map(|r| (r.base.workload.clone(), r.base.seconds / r.ff.seconds))
-        .collect();
-    let max_ff = speedups.iter().map(|(_, s)| *s).fold(0.0, f64::max);
-    let gainers: Vec<f64> = speedups.iter().map(|(_, s)| *s).filter(|s| *s > 2.0).collect();
-    let avg = gainers.iter().sum::<f64>() / gainers.len().max(1) as f64;
-    // best total = FF x M2C2 on the biggest gainer
-    let best = speedups
-        .iter()
-        .max_by(|a, b| a.1.total_cmp(&b.1))
-        .map(|(n, _)| n.clone())
-        .unwrap();
-    let w = by_name(&best).unwrap();
-    let base = measure(w.as_ref(), Variant::Baseline, scale, cfg).unwrap();
-    let total = match measure(w.as_ref(), Variant::MxCx { parts: 2, depth: 1 }, scale, cfg) {
-        Ok(m2) => base.seconds / m2.seconds,
-        Err(_) => max_ff,
-    };
-    Headline { max_ff_speedup: max_ff, avg_ff_speedup_gainers: avg, max_total_speedup: total }
+    Engine::serial(cfg.clone()).headline(scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::by_name;
+
+    /// The dominant-kernel bandwidth selection: `from_harness` must quote
+    /// the dominant launch unit's bandwidth when present…
+    #[test]
+    fn from_harness_prefers_dominant_unit_bandwidth() {
+        let cfg = DeviceConfig::pac_a10();
+        let w = by_name("fw").unwrap();
+        let app = w.build(Variant::Baseline).unwrap();
+        let mut h = Harness::new(&app, &cfg);
+        h.metrics.bw_bytes_per_s = 42.0e9; // app-wide max
+        h.bw_by_unit.insert(w.dominant().to_string(), 7.0e9);
+        h.bw_by_unit.insert("some_other_unit".to_string(), 99.0e9);
+        let m = Measurement::from_harness(w.as_ref(), Variant::Baseline, Scale::Tiny, &h);
+        assert_eq!(m.max_bw, 7.0e9, "must pick the dominant unit, not the app max");
+        assert_eq!(m.workload, "fw");
+        assert_eq!(m.variant, "baseline");
+        assert_eq!(m.scale, "tiny");
+    }
+
+    /// …and fall back to the app-wide number when the dominant unit has no
+    /// recorded bandwidth (e.g. the unit never launched).
+    #[test]
+    fn from_harness_falls_back_to_app_max_bw() {
+        let cfg = DeviceConfig::pac_a10();
+        let w = by_name("fw").unwrap();
+        let app = w.build(Variant::Baseline).unwrap();
+        let mut h = Harness::new(&app, &cfg);
+        h.metrics.bw_bytes_per_s = 42.0e9;
+        h.bw_by_unit.insert("unrelated_unit".to_string(), 99.0e9);
+        let m = Measurement::from_harness(w.as_ref(), Variant::Baseline, Scale::Small, &h);
+        assert_eq!(m.max_bw, 42.0e9);
+        assert_eq!(m.scale, "small");
+    }
+
+    #[test]
+    fn measurement_json_roundtrips() {
+        let m = Measurement {
+            workload: "fw".into(),
+            variant: "ff(d1)".into(),
+            scale: "tiny".into(),
+            seconds: 0.125,
+            cycles: 3.0e7,
+            logic_pct: 17.5,
+            brams: 412,
+            max_ii: 285,
+            max_bw: 7.34e9,
+            launches: 3,
+        };
+        let text = m.to_json().to_pretty();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(Measurement::from_json(&parsed), Some(m));
+    }
 }

@@ -1,9 +1,15 @@
 //! Experiment coordinator: orchestrates workloads x variants x scales,
 //! validates against native and PJRT references, renders the paper's
 //! tables/figures.
+//!
+//! The [`engine`] module is the PR-1 parallel, cache-aware experiment
+//! engine: grid fan-out across a worker pool, content-addressed
+//! measurement memoization, and the BENCH_PR1.json results sink.
 
+pub mod engine;
 pub mod experiments;
 
+pub use engine::{grid, resolve_workload, Cell, Engine, ExperimentId};
 pub use experiments::{
     best_ff, depth_sweep, figure4, headline, hotspot_m2c2_bw, intext, measure, micro_family,
     pc_sweep, table1, table2, table2_rows, table3, vector_study, Measurement,
@@ -15,17 +21,17 @@ use crate::workloads::Scale;
 
 /// Run the complete evaluation (every table & figure) and return the
 /// rendered tables in paper order. This is what the e2e example and the
-/// `pipefwd all` CLI command drive.
+/// `pipefwd all` CLI command drive. One host-parallel engine serves every
+/// table, so shared configurations (the feed-forward baselines above all)
+/// simulate once.
 pub fn full_evaluation(scale: Scale, cfg: &DeviceConfig, save_csv: bool) -> Vec<Table> {
+    let e = Engine::host_parallel(cfg.clone());
     let mut out = vec![];
     out.push(table1(scale));
-    out.push(table2(scale, cfg));
-    out.push(figure4(scale, cfg));
-    out.push(table3(scale, cfg));
-    out.push(intext(scale, cfg));
-    out.push(depth_sweep(&["fw", "hotspot", "mis"], scale, cfg));
-    out.push(pc_sweep(&["fw", "hotspot", "mis"], scale, cfg));
-    out.push(vector_study(scale, cfg));
+    out.extend(e.run_experiment(ExperimentId::E1, scale));
+    out.extend(e.run_experiment(ExperimentId::E2, scale));
+    out.extend(e.run_experiment(ExperimentId::E3, scale));
+    out.extend(e.run_experiment(ExperimentId::E4, scale));
     if save_csv {
         let names = [
             "table1", "table2", "figure4", "table3", "intext", "depth_sweep", "pc_sweep",
@@ -48,6 +54,15 @@ pub fn parse_scale(s: &str) -> Option<Scale> {
     }
 }
 
+/// Inverse of [`parse_scale`] (used for cache keys and the results sink).
+pub fn scale_label(s: Scale) -> &'static str {
+    match s {
+        Scale::Tiny => "tiny",
+        Scale::Small => "small",
+        Scale::Paper => "paper",
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -57,6 +72,9 @@ mod tests {
         assert_eq!(parse_scale("tiny"), Some(Scale::Tiny));
         assert_eq!(parse_scale("small"), Some(Scale::Small));
         assert_eq!(parse_scale("nope"), None);
+        for s in [Scale::Tiny, Scale::Small, Scale::Paper] {
+            assert_eq!(parse_scale(scale_label(s)), Some(s));
+        }
     }
 
     #[test]

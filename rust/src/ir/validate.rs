@@ -9,33 +9,64 @@ use super::expr::Expr;
 use super::kernel::{Access, Kernel, KernelKind, Program};
 use super::stmt::Stmt;
 use std::collections::HashSet;
-use thiserror::Error;
 
-#[derive(Debug, Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum ValidateError {
-    #[error("kernel {kernel}: undefined variable `{name}`")]
     UndefinedVar { kernel: String, name: String },
-    #[error("kernel {kernel}: variable `{name}` defined twice in the same scope chain")]
     Redefined { kernel: String, name: String },
-    #[error("kernel {kernel}: undefined buffer `{name}`")]
     UndefinedBuf { kernel: String, name: String },
-    #[error("kernel {kernel}: undefined scalar param `{name}`")]
     UndefinedParam { kernel: String, name: String },
-    #[error("kernel {kernel}: store to read-only buffer `{name}`")]
     StoreToReadOnly { kernel: String, name: String },
-    #[error("kernel {kernel}: load from write-only buffer `{name}`")]
     LoadFromWriteOnly { kernel: String, name: String },
-    #[error("kernel {kernel}: get_global_id in single work-item kernel")]
     GlobalIdInSwi { kernel: String },
-    #[error("kernel {kernel}: undeclared pipe `{name}`")]
     UndefinedPipe { kernel: String, name: String },
-    #[error("pipe {name}: {writers} writer kernel(s) and {readers} reader kernel(s); need exactly 1/1")]
     PipeEndpoints { name: String, writers: usize, readers: usize },
-    #[error("pipe {name}: declared twice")]
     DuplicatePipe { name: String },
-    #[error("program {name}: duplicate kernel name `{kernel}`")]
     DuplicateKernel { name: String, kernel: String },
 }
+
+impl std::fmt::Display for ValidateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ValidateError::UndefinedVar { kernel, name } => {
+                write!(f, "kernel {kernel}: undefined variable `{name}`")
+            }
+            ValidateError::Redefined { kernel, name } => write!(
+                f,
+                "kernel {kernel}: variable `{name}` defined twice in the same scope chain"
+            ),
+            ValidateError::UndefinedBuf { kernel, name } => {
+                write!(f, "kernel {kernel}: undefined buffer `{name}`")
+            }
+            ValidateError::UndefinedParam { kernel, name } => {
+                write!(f, "kernel {kernel}: undefined scalar param `{name}`")
+            }
+            ValidateError::StoreToReadOnly { kernel, name } => {
+                write!(f, "kernel {kernel}: store to read-only buffer `{name}`")
+            }
+            ValidateError::LoadFromWriteOnly { kernel, name } => {
+                write!(f, "kernel {kernel}: load from write-only buffer `{name}`")
+            }
+            ValidateError::GlobalIdInSwi { kernel } => {
+                write!(f, "kernel {kernel}: get_global_id in single work-item kernel")
+            }
+            ValidateError::UndefinedPipe { kernel, name } => {
+                write!(f, "kernel {kernel}: undeclared pipe `{name}`")
+            }
+            ValidateError::PipeEndpoints { name, writers, readers } => write!(
+                f,
+                "pipe {name}: {writers} writer kernel(s) and {readers} reader kernel(s); \
+                 need exactly 1/1"
+            ),
+            ValidateError::DuplicatePipe { name } => write!(f, "pipe {name}: declared twice"),
+            ValidateError::DuplicateKernel { name, kernel } => {
+                write!(f, "program {name}: duplicate kernel name `{kernel}`")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ValidateError {}
 
 struct Scope {
     vars: Vec<HashSet<String>>,

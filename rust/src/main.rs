@@ -1,10 +1,11 @@
 //! `pipefwd` CLI — the leader entrypoint.
 //!
 //! Subcommands regenerate the paper's tables/figures, print compiler
-//! reports and transformed source, and validate against the PJRT golden
-//! artifacts. Std-only argument parsing (no clap in this offline image).
+//! reports and transformed source, validate against the PJRT golden
+//! artifacts, and drive the parallel experiment engine (`run`, `sweep`,
+//! `report`). Std-only argument parsing (no clap in this offline image).
 
-use pipefwd::coordinator::{self, parse_scale};
+use pipefwd::coordinator::{self, parse_scale, Engine, ExperimentId};
 use pipefwd::sim::device::DeviceConfig;
 use pipefwd::transform::Variant;
 use pipefwd::workloads::{by_name, Scale};
@@ -13,9 +14,17 @@ const USAGE: &str = "\
 pipefwd — feed-forward design model for OpenCL kernels via pipes
           (simulated-FPGA reproduction; see DESIGN.md)
 
-USAGE: pipefwd <command> [--scale tiny|small|paper] [--csv]
+USAGE: pipefwd <command> [--scale tiny|small|paper] [--csv] [--jobs N]
 
-COMMANDS:
+ENGINE COMMANDS (parallel, cache-aware):
+  run --experiment E1..E7|all   run experiments through the engine and
+                                write the BENCH_PR1.json results sink
+  sweep [--depths 1,100,1000]   channel-depth sweep over arbitrary depths
+        [--benches fw,hotspot,mis]
+  report [--format table|json]  re-render a results sink (default:
+         [--in BENCH_PR1.json]  BENCH_PR1.json) as a table or as JSON
+
+TABLE COMMANDS:
   table1               benchmark characterisation (paper Table 1)
   table2               feed-forward vs baseline (paper Table 2)
   figure4              M2C2 speedup + overhead (paper Figure 4)
@@ -26,15 +35,27 @@ COMMANDS:
   micro-family         extended microbenchmark family (future work)
   headline             the paper's headline speedup claims (E7)
   all                  everything above, in order
-  report <bench>       early-stage compiler report, baseline vs FF (E4a)
+  report-kernel <b>    early-stage compiler report, baseline vs FF (E4a)
   source <bench>       OpenCL-flavoured source, baseline and FF kernels
   golden               validate IR numerics against PJRT artifacts
   list                 list benchmarks
 
 OPTIONS:
-  --scale S   dataset scale (default: small; tiny = artifact-matched)
-  --csv       also write results/<name>.csv
+  --scale S        dataset scale (default: small; tiny = artifact-matched)
+  --csv            also write results/<name>.csv
+  --jobs N         engine worker threads (default: all cores)
+  --out PATH       results-sink path for `run`/`sweep` (default: BENCH_PR1.json)
+  --experiment E   comma-separated experiment ids for `run` (E1..E7 or all)
+  --depths LIST    comma-separated pipe depths for `sweep`
+  --benches LIST   comma-separated benchmarks for `sweep`
+  --format F       `report` output: table (default) or json
+  --in PATH        `report` input file (default: BENCH_PR1.json)
 ";
+
+fn fail(msg: &str) -> ! {
+    eprintln!("{msg}");
+    std::process::exit(2);
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -45,18 +66,60 @@ fn main() {
     let cmd = args[0].as_str();
     let mut scale = Scale::Small;
     let mut csv = false;
+    let mut jobs: usize = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut experiment = String::from("all");
+    let mut depths: Vec<usize> = vec![1, 100, 1000];
+    let mut benches: Vec<String> = vec!["fw".into(), "hotspot".into(), "mis".into()];
+    let mut out_path = String::from("BENCH_PR1.json");
+    let mut in_path = String::from("BENCH_PR1.json");
+    let mut format = String::from("table");
     let mut positional = vec![];
     let mut it = args[1..].iter();
     while let Some(a) = it.next() {
         match a.as_str() {
             "--scale" => {
-                let v = it.next().expect("--scale needs a value");
-                scale = parse_scale(v).unwrap_or_else(|| {
-                    eprintln!("unknown scale `{v}` (tiny|small|paper)");
-                    std::process::exit(2);
-                });
+                let v = it.next().unwrap_or_else(|| fail("--scale needs a value"));
+                scale = parse_scale(v)
+                    .unwrap_or_else(|| fail(&format!("unknown scale `{v}` (tiny|small|paper)")));
             }
             "--csv" => csv = true,
+            "--jobs" => {
+                let v = it.next().unwrap_or_else(|| fail("--jobs needs a value"));
+                jobs = v
+                    .parse::<usize>()
+                    .ok()
+                    .filter(|n| *n > 0)
+                    .unwrap_or_else(|| fail(&format!("bad --jobs `{v}` (positive integer)")));
+            }
+            "--experiment" => {
+                experiment = it.next().unwrap_or_else(|| fail("--experiment needs a value")).clone();
+            }
+            "--depths" => {
+                let v = it.next().unwrap_or_else(|| fail("--depths needs a value"));
+                depths = v
+                    .split(',')
+                    .map(|d| {
+                        d.trim()
+                            .parse::<usize>()
+                            .ok()
+                            .filter(|n| *n > 0)
+                            .unwrap_or_else(|| fail(&format!("bad depth `{d}`")))
+                    })
+                    .collect();
+            }
+            "--benches" => {
+                let v = it.next().unwrap_or_else(|| fail("--benches needs a value"));
+                benches = v.split(',').map(|b| b.trim().to_string()).collect();
+            }
+            "--out" => {
+                out_path = it.next().unwrap_or_else(|| fail("--out needs a value")).clone();
+            }
+            "--in" => {
+                in_path = it.next().unwrap_or_else(|| fail("--in needs a value")).clone();
+            }
+            "--format" => {
+                format = it.next().unwrap_or_else(|| fail("--format needs a value")).clone();
+            }
             other => positional.push(other.to_string()),
         }
     }
@@ -78,14 +141,109 @@ fn main() {
                 println!("{:>10}  {:8}  {}", w.name(), w.suite(), w.dataset_desc(scale));
             }
         }
+        "run" => {
+            let exps: Vec<ExperimentId> = if experiment.eq_ignore_ascii_case("all") {
+                ExperimentId::all().to_vec()
+            } else {
+                experiment
+                    .split(',')
+                    .map(|e| {
+                        ExperimentId::parse(e.trim())
+                            .unwrap_or_else(|| fail(&format!("unknown experiment `{e}` (E1..E7)")))
+                    })
+                    .collect()
+            };
+            let engine = Engine::new(cfg, jobs);
+            for exp in &exps {
+                for (i, t) in engine.run_experiment(*exp, scale).iter().enumerate() {
+                    save(t, &format!("{}_{i}", exp.label().to_lowercase()));
+                    println!();
+                }
+            }
+            match engine.write_bench_json(std::path::Path::new(&out_path), scale, &exps) {
+                Ok(()) => eprintln!(
+                    "wrote {out_path} ({} measurements, {} unique configs, {} cache hits, {jobs} jobs)",
+                    engine.measurements().len(),
+                    engine.cache_len(),
+                    engine.cache_hits(),
+                ),
+                Err(e) => fail(&format!("writing {out_path}: {e}")),
+            }
+        }
+        "sweep" => {
+            for b in &benches {
+                if coordinator::resolve_workload(b).is_none() {
+                    fail(&format!("unknown benchmark `{b}` (see `pipefwd list`)"));
+                }
+            }
+            let engine = Engine::new(cfg, jobs);
+            let cells: Vec<coordinator::Cell> = benches
+                .iter()
+                .flat_map(|b| {
+                    depths
+                        .iter()
+                        .map(|d| coordinator::Cell::new(b, Variant::FeedForward { depth: *d }, scale))
+                        .collect::<Vec<_>>()
+                })
+                .collect();
+            let _ = engine.run_cells(&cells);
+            let names: Vec<&str> = benches.iter().map(|b| b.as_str()).collect();
+            save(&engine.depth_sweep(&names, scale, &depths), "depth_sweep");
+            match engine.write_bench_json(std::path::Path::new(&out_path), scale, &[]) {
+                Ok(()) => eprintln!("wrote {out_path}"),
+                Err(e) => fail(&format!("writing {out_path}: {e}")),
+            }
+        }
+        "report" => {
+            let text = std::fs::read_to_string(&in_path)
+                .unwrap_or_else(|e| fail(&format!("reading {in_path}: {e} (run `pipefwd run` first)")));
+            let doc = pipefwd::util::json::parse(&text)
+                .unwrap_or_else(|e| fail(&format!("parsing {in_path}: {e}")));
+            match format.as_str() {
+                "json" => print!("{}", doc.to_pretty()),
+                "table" => {
+                    let ms: Vec<coordinator::Measurement> = doc
+                        .get("measurements")
+                        .and_then(|m| m.as_array())
+                        .unwrap_or_else(|| fail(&format!("{in_path}: no measurements array")))
+                        .iter()
+                        .filter_map(coordinator::Measurement::from_json)
+                        .collect();
+                    let mut t = pipefwd::report::Table::new(
+                        &format!("Results sink: {in_path}"),
+                        &[
+                            "Benchmark", "Variant", "Scale", "Time (ms)", "Logic (%)", "BRAM",
+                            "Max II", "Max BW (MB/s)", "Launches",
+                        ],
+                    );
+                    for m in &ms {
+                        t.row(vec![
+                            m.workload.clone(),
+                            m.variant.clone(),
+                            m.scale.clone(),
+                            pipefwd::report::ms(m.seconds),
+                            format!("{:.2}", m.logic_pct),
+                            m.brams.to_string(),
+                            m.max_ii.to_string(),
+                            pipefwd::report::mbps(m.max_bw),
+                            m.launches.to_string(),
+                        ]);
+                    }
+                    print!("{}", t.to_markdown());
+                }
+                other => fail(&format!("unknown --format `{other}` (table|json)")),
+            }
+        }
         "table1" => save(&coordinator::table1(scale), "table1"),
         "table2" => save(&coordinator::table2(scale, &cfg), "table2"),
         "figure4" => save(&coordinator::figure4(scale, &cfg), "figure4"),
         "table3" => save(&coordinator::table3(scale, &cfg), "table3"),
         "intext" => save(&coordinator::intext(scale, &cfg), "intext"),
         "sweeps" => {
-            save(&coordinator::depth_sweep(&["fw", "hotspot", "mis"], scale, &cfg), "depth_sweep");
-            save(&coordinator::pc_sweep(&["fw", "hotspot", "mis"], scale, &cfg), "pc_sweep");
+            let engine = Engine::new(cfg, jobs);
+            let trio = ["fw", "hotspot", "mis"];
+            save(&engine.depth_sweep(&trio, scale, &[1, 100, 1000]), "depth_sweep");
+            save(&engine.pc_sweep(&trio, scale), "pc_sweep");
         }
         "vectors" => save(&coordinator::vector_study(scale, &cfg), "vector_study"),
         "micro-family" => save(&coordinator::micro_family(scale, &cfg), "micro_family"),
@@ -110,12 +268,9 @@ fn main() {
                 println!();
             }
         }
-        "report" => {
-            let name = positional.first().expect("report <bench>");
-            let w = by_name(name).unwrap_or_else(|| {
-                eprintln!("unknown benchmark `{name}`");
-                std::process::exit(2);
-            });
+        "report-kernel" => {
+            let name = positional.first().unwrap_or_else(|| fail("report-kernel <bench>"));
+            let w = by_name(name).unwrap_or_else(|| fail(&format!("unknown benchmark `{name}`")));
             for variant in [Variant::Baseline, Variant::FeedForward { depth: 1 }] {
                 match w.build(variant) {
                     Ok(app) => {
@@ -129,11 +284,8 @@ fn main() {
             }
         }
         "source" => {
-            let name = positional.first().expect("source <bench>");
-            let w = by_name(name).unwrap_or_else(|| {
-                eprintln!("unknown benchmark `{name}`");
-                std::process::exit(2);
-            });
+            let name = positional.first().unwrap_or_else(|| fail("source <bench>"));
+            let w = by_name(name).unwrap_or_else(|| fail(&format!("unknown benchmark `{name}`")));
             for variant in [Variant::Baseline, Variant::FeedForward { depth: 1 }] {
                 match w.build(variant) {
                     Ok(app) => {

@@ -7,8 +7,9 @@ use super::Runtime;
 use crate::ir::Val;
 use crate::sim::exec::{run_group, ExecOptions};
 use crate::transform::Variant;
+use crate::bail;
+use crate::util::error::Result;
 use crate::workloads::{Scale, Workload};
-use anyhow::{bail, Result};
 
 fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)

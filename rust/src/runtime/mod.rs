@@ -7,11 +7,21 @@
 //!
 //! Python never runs here: `Runtime` only needs `artifacts/manifest.txt`
 //! and the `.hlo.txt` files produced once by `make artifacts`.
+//!
+//! The PJRT backend is gated behind the off-by-default `pjrt` cargo
+//! feature: the `xla` crate links a native xla_extension library that the
+//! offline image does not ship. Without the feature, manifest parsing and
+//! the artifact specs still work, but `Runtime::new` reports the backend
+//! as unavailable — every caller already treats that as "skip golden
+//! validation", so the rest of the system is unaffected.
 
 pub mod golden;
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{anyhow, bail};
+#[cfg(feature = "pjrt")]
 use std::cell::RefCell;
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -103,11 +113,20 @@ fn split_specs(s: &str) -> Vec<String> {
 }
 
 /// The PJRT runtime: one CPU client, lazily compiled executables.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
     specs: Vec<ArtifactSpec>,
     exes: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+/// Stub runtime (no `pjrt` feature): construction always fails with a
+/// clear message; callers skip golden validation, as they do when the
+/// artifacts are missing.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    specs: Vec<ArtifactSpec>,
 }
 
 impl Runtime {
@@ -129,14 +148,6 @@ impl Runtime {
         p
     }
 
-    pub fn new(dir: &Path) -> Result<Runtime> {
-        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
-            .with_context(|| format!("reading {}/manifest.txt (run `make artifacts`)", dir.display()))?;
-        let specs = parse_manifest(&manifest)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Runtime { client, dir: dir.to_path_buf(), specs, exes: RefCell::new(HashMap::new()) })
-    }
-
     /// Open the default artifact directory.
     pub fn open_default() -> Result<Runtime> {
         Runtime::new(&Runtime::artifact_dir())
@@ -148,6 +159,17 @@ impl Runtime {
 
     pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
         self.specs.iter().find(|s| s.name == name)
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl Runtime {
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading {}/manifest.txt (run `make artifacts`)", dir.display()))?;
+        let specs = parse_manifest(&manifest)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, dir: dir.to_path_buf(), specs, exes: RefCell::new(HashMap::new()) })
     }
 
     fn ensure_compiled(&self, name: &str) -> Result<()> {
@@ -203,6 +225,26 @@ impl Runtime {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading {}/manifest.txt (run `make artifacts`)", dir.display()))?;
+        let _specs = parse_manifest(&manifest)?;
+        bail!(
+            "PJRT backend not compiled in (artifacts found at {}); \
+             rebuild with `--features pjrt` and the xla crate available",
+            dir.display()
+        )
+    }
+
+    /// Unreachable without the `pjrt` feature: `new` never hands out a
+    /// `Runtime`, so this only exists to keep callers compiling.
+    pub fn run_f32(&self, name: &str, _inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        bail!("PJRT backend not compiled in; cannot execute artifact `{name}`")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -232,5 +274,18 @@ mod tests {
     fn bad_manifest_rejected() {
         assert!(parse_manifest("name-without-fields").is_err());
         assert!(parse_manifest("x;nope;out=f32[1]").is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_backend_unavailable() {
+        let dir = std::env::temp_dir().join("pipefwd_stub_rt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "knn;in=f32[1,8];out=f32[1,1]\n").unwrap();
+        let err = match Runtime::new(&dir) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("stub runtime must not construct"),
+        };
+        assert!(err.contains("PJRT backend not compiled in"), "err: {err}");
     }
 }

@@ -21,23 +21,43 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
-use thiserror::Error;
 
-#[derive(Debug, Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum ExecError {
-    #[error("kernel {kernel}: {buf}[{idx}] out of bounds (len {len})")]
     OutOfBounds { kernel: String, buf: String, idx: i64, len: usize },
-    #[error("kernel {kernel}: pipe {pipe} closed (trace mismatch between producer and consumer)")]
     PipeClosed { kernel: String, pipe: String },
-    #[error("kernel {kernel}: missing buffer `{buf}` in memory image")]
     MissingBuffer { kernel: String, buf: String },
-    #[error("kernel {kernel}: missing scalar `{name}` in memory image")]
     MissingScalar { kernel: String, name: String },
-    #[error("kernel {kernel}: NDRange kernels must be converted to single work-item first")]
     NdRange { kernel: String },
-    #[error("kernel {kernel}: thread panicked")]
     Panic { kernel: String },
 }
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::OutOfBounds { kernel, buf, idx, len } => {
+                write!(f, "kernel {kernel}: {buf}[{idx}] out of bounds (len {len})")
+            }
+            ExecError::PipeClosed { kernel, pipe } => write!(
+                f,
+                "kernel {kernel}: pipe {pipe} closed (trace mismatch between producer and consumer)"
+            ),
+            ExecError::MissingBuffer { kernel, buf } => {
+                write!(f, "kernel {kernel}: missing buffer `{buf}` in memory image")
+            }
+            ExecError::MissingScalar { kernel, name } => {
+                write!(f, "kernel {kernel}: missing scalar `{name}` in memory image")
+            }
+            ExecError::NdRange { kernel } => write!(
+                f,
+                "kernel {kernel}: NDRange kernels must be converted to single work-item first"
+            ),
+            ExecError::Panic { kernel } => write!(f, "kernel {kernel}: thread panicked"),
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}
 
 // ---------------------------------------------------------------------------
 // Resolved IR

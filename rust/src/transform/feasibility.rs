@@ -14,28 +14,39 @@
 
 use crate::analysis::{analyze_lcd, MlcdInfo};
 use crate::ir::Kernel;
-use thiserror::Error;
 
-#[derive(Debug, Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum FeasibilityError {
-    #[error(
-        "kernel {kernel}: provably true memory loop-carried dependency on `{buf}` \
-         (iteration distance {distance}); the feed-forward model would compute wrong \
-         results — resolve it first (e.g. transform::privatize) "
-    )]
     TrueMlcd { kernel: String, buf: String, distance: i64 },
-    #[error(
-        "kernel {kernel}: no programmer guarantee of MLCD-freedom \
-         (Kernel::assume_no_true_mlcd is false) and the analysis cannot prove \
-         independence of the accesses on `{buf}`"
-    )]
     NoGuarantee { kernel: String, buf: String },
-    #[error(
-        "workload {workload}: static range replication would break \
-         inter-iteration data flow (cross-replica dependency)"
-    )]
     ReplicationUnsupported { workload: String },
 }
+
+impl std::fmt::Display for FeasibilityError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FeasibilityError::TrueMlcd { kernel, buf, distance } => write!(
+                f,
+                "kernel {kernel}: provably true memory loop-carried dependency on `{buf}` \
+                 (iteration distance {distance}); the feed-forward model would compute wrong \
+                 results — resolve it first (e.g. transform::privatize) "
+            ),
+            FeasibilityError::NoGuarantee { kernel, buf } => write!(
+                f,
+                "kernel {kernel}: no programmer guarantee of MLCD-freedom \
+                 (Kernel::assume_no_true_mlcd is false) and the analysis cannot prove \
+                 independence of the accesses on `{buf}`"
+            ),
+            FeasibilityError::ReplicationUnsupported { workload } => write!(
+                f,
+                "workload {workload}: static range replication would break \
+                 inter-iteration data flow (cross-replica dependency)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FeasibilityError {}
 
 /// Check that the feed-forward split may be applied to `kernel`.
 pub fn check_feasible(kernel: &Kernel) -> Result<(), FeasibilityError> {

@@ -7,15 +7,27 @@
 use crate::analysis::pattern::affine_wrt;
 use crate::analysis::{analyze_lcd, walk_with_loops};
 use crate::ir::{Expr, Kernel, Stmt, Ty};
-use thiserror::Error;
 
-#[derive(Debug, Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum PrivatizeError {
-    #[error("kernel {0}: no provably-true distance-1 MLCD to privatize")]
     NothingToPrivatize(String),
-    #[error("kernel {0}: unsupported shape for privatization (loop {1:?})")]
     Unsupported(String, crate::ir::LoopId),
 }
+
+impl std::fmt::Display for PrivatizeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PrivatizeError::NothingToPrivatize(kernel) => {
+                write!(f, "kernel {kernel}: no provably-true distance-1 MLCD to privatize")
+            }
+            PrivatizeError::Unsupported(kernel, loop_id) => {
+                write!(f, "kernel {kernel}: unsupported shape for privatization (loop {loop_id:?})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PrivatizeError {}
 
 /// Carry variable introduced by the pass.
 pub const CARRY_VAR: &str = "_carry";

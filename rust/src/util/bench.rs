@@ -45,6 +45,16 @@ pub fn bench_scale() -> crate::workloads::Scale {
     }
 }
 
+/// Engine worker count for benches: `PIPEFWD_BENCH_JOBS=N` (default: all
+/// available cores).
+pub fn bench_jobs() -> usize {
+    std::env::var("PIPEFWD_BENCH_JOBS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|n| *n > 0)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,112 @@
+//! Std-only stand-in for `anyhow` (this image is offline): a string-backed
+//! error type, a `Result` alias, `Context` extension methods, and the
+//! `anyhow!`/`bail!` macros.
+
+use std::fmt;
+
+/// A boxed-string error, API-compatible with the slice of `anyhow` this
+/// crate uses (`anyhow!`, `bail!`, `.context(..)`, `.with_context(..)`).
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e)
+    }
+}
+
+impl From<crate::sim::exec::ExecError> for Error {
+    fn from(e: crate::sim::exec::ExecError) -> Error {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context`-style adapters for `Result` and `Option`.
+pub trait Context<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Format an [`Error`] from a message (drop-in for `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return an `Err` built from a message (drop-in for `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), &str> = Err("inner");
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "x")).unwrap_err();
+        assert_eq!(e.to_string(), "missing x");
+
+        assert_eq!(Some(7).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn fails(n: u32) -> Result<()> {
+            if n > 3 {
+                bail!("too big: {n}");
+            }
+            Err(anyhow!("always: {}", n))
+        }
+        assert_eq!(fails(5).unwrap_err().to_string(), "too big: 5");
+        assert_eq!(fails(1).unwrap_err().to_string(), "always: 1");
+    }
+}

@@ -1,5 +1,8 @@
 //! Std-only utilities replacing unavailable third-party crates (this image
-//! is offline): PRNG, property-testing mini-framework, bench harness.
+//! is offline): PRNG, property-testing mini-framework, bench harness,
+//! error handling (`anyhow` stand-in), JSON (`serde_json` stand-in).
 pub mod bench;
+pub mod error;
+pub mod json;
 pub mod rng;
 pub mod testing;

@@ -265,9 +265,20 @@ pub fn run_workload(
     cfg: &DeviceConfig,
 ) -> Result<Harness, String> {
     let app = w.build(variant).map_err(|e| e.to_string())?;
+    run_built_workload(w, &app, scale, cfg)
+}
+
+/// [`run_workload`] for an already-built app (the coordinator engine
+/// builds the app first to derive the measurement's content address).
+pub fn run_built_workload(
+    w: &dyn Workload,
+    app: &App,
+    scale: Scale,
+    cfg: &DeviceConfig,
+) -> Result<Harness, String> {
     let mut img = w.image(scale);
-    let mut h = Harness::new(&app, cfg);
-    w.run(&app, &mut img, &mut h).map_err(|e| e.to_string())?;
+    let mut h = Harness::new(app, cfg);
+    w.run(app, &mut img, &mut h).map_err(|e| e.to_string())?;
     w.validate(&img, scale)?;
     Ok(h)
 }

@@ -1,0 +1,85 @@
+//! PR-1 engine integration: the parallel experiment engine must produce
+//! measurements — and a BENCH_PR1.json results sink — byte-identical to
+//! the serial reference path, and its memoization layer must collapse the
+//! cross-experiment measurement overlap.
+
+use pipefwd::coordinator::{grid, Cell, Engine, ExperimentId};
+use pipefwd::sim::device::DeviceConfig;
+use pipefwd::transform::Variant;
+use pipefwd::workloads::Scale;
+
+/// A reduced grid: three workloads x three variants at Tiny scale, with a
+/// deliberately infeasible cell (MIS depth sweep stays feasible; NW
+/// replication is rejected) so the error path is covered too.
+fn reduced_grid() -> Vec<Cell> {
+    let mut cells = vec![];
+    for name in ["fw", "hotspot", "mis"] {
+        cells.push(Cell::new(name, Variant::Baseline, Scale::Tiny));
+        cells.push(Cell::new(name, Variant::FeedForward { depth: 1 }, Scale::Tiny));
+        cells.push(Cell::new(name, Variant::MxCx { parts: 2, depth: 1 }, Scale::Tiny));
+    }
+    cells.push(Cell::new("nw", Variant::MxCx { parts: 2, depth: 1 }, Scale::Tiny));
+    cells
+}
+
+#[test]
+fn parallel_engine_matches_serial_measurements() {
+    let cells = reduced_grid();
+    let serial = Engine::new(DeviceConfig::pac_a10(), 1);
+    let parallel = Engine::new(DeviceConfig::pac_a10(), 4);
+    let a = serial.run_cells(&cells);
+    let b = parallel.run_cells(&cells);
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x, y, "cell {i} ({:?}) diverged between serial and parallel", cells[i]);
+    }
+    // the infeasible NW cell errored identically rather than disappearing
+    assert!(a.last().unwrap().is_err());
+}
+
+#[test]
+fn parallel_engine_bench_json_is_byte_identical() {
+    let cells = reduced_grid();
+    let serial = Engine::new(DeviceConfig::pac_a10(), 1);
+    let parallel = Engine::new(DeviceConfig::pac_a10(), 4);
+    let _ = serial.run_cells(&cells);
+    let _ = parallel.run_cells(&cells);
+    let a = serial.bench_json(Scale::Tiny, &[ExperimentId::E2]);
+    let b = parallel.bench_json(Scale::Tiny, &[ExperimentId::E2]);
+    assert_eq!(a, b, "results sink must not depend on scheduling");
+    assert!(a.contains("pipefwd-bench-v1"));
+    assert!(a.contains("\"workload\""));
+}
+
+#[test]
+fn duplicate_cells_simulate_once() {
+    let mut cells = reduced_grid();
+    cells.extend(reduced_grid()); // every cell twice
+    let engine = Engine::new(DeviceConfig::pac_a10(), 4);
+    let results = engine.run_cells(&cells);
+    assert_eq!(results.len(), cells.len());
+    // 9 feasible configurations; the NW replication cell is rejected at
+    // build time and never enters the memo table.
+    assert_eq!(engine.cache_len(), 9, "cache must collapse duplicates");
+    assert!(
+        engine.cache_hits() >= 9,
+        "duplicated grid must be served from the cache (hits={})",
+        engine.cache_hits()
+    );
+    // first and second copy of each cell agree exactly
+    let half = cells.len() / 2;
+    for i in 0..half {
+        assert_eq!(results[i], results[i + half]);
+    }
+}
+
+#[test]
+fn e2_grid_runs_end_to_end_at_tiny_scale() {
+    let engine = Engine::new(DeviceConfig::pac_a10(), 4);
+    let tables = engine.run_experiment(ExperimentId::E2, Scale::Tiny);
+    assert_eq!(tables.len(), 1);
+    assert!(!tables[0].rows.is_empty(), "figure 4 table must have rows");
+    assert!(!engine.measurements().is_empty());
+    // every simulated grid cell for E2 exists and is well-formed
+    assert!(!grid(ExperimentId::E2, Scale::Tiny).is_empty());
+}
