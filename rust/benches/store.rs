@@ -1,0 +1,50 @@
+//! Bench: the persistent measurement store (PR-2 tentpole). Runs the E2
+//! grid cold (simulate + persist), then warm from a fresh engine (every
+//! cell answered by the store) — the cold/warm wall-clock ratio is the
+//! §Perf signal for cross-process caching, and the printed simulation
+//! counts prove the warm pass did no work.
+
+use pipefwd::coordinator::{grid, Engine, ExperimentId, Store};
+use pipefwd::sim::device::DeviceConfig;
+use pipefwd::util::bench::{bench_jobs, bench_scale, BenchReport};
+
+fn main() {
+    let scale = bench_scale();
+    let dir = std::env::temp_dir().join(format!("pipefwd-bench-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cells = grid(ExperimentId::E2, scale);
+    let mut b = BenchReport::new("store");
+
+    let cold = Engine::new(DeviceConfig::pac_a10(), bench_jobs())
+        .with_store(Store::open(&dir).expect("store opens"));
+    b.sample("cold_run_and_persist", || cold.run_cells(&cells));
+    println!(
+        "cold: {} simulated, {} store hits, {} entries persisted",
+        cold.simulations(),
+        cold.store_hits(),
+        cold.store().unwrap().len()
+    );
+
+    let warm = Engine::new(DeviceConfig::pac_a10(), bench_jobs())
+        .with_store(Store::open(&dir).expect("store opens"));
+    b.sample("warm_run_from_store", || warm.run_cells(&cells));
+    println!(
+        "warm: {} simulated (expect 0), {} store hits",
+        warm.simulations(),
+        warm.store_hits()
+    );
+
+    b.sample("merge_bench_json", || {
+        pipefwd::coordinator::merge_bench_json(
+            &[Store::open(&dir).expect("store opens")],
+            &[ExperimentId::E2],
+            scale,
+            &DeviceConfig::pac_a10(),
+            false,
+        )
+        .expect("complete store merges")
+    });
+
+    let _ = std::fs::remove_dir_all(&dir);
+    b.finish();
+}

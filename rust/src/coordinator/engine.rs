@@ -19,19 +19,25 @@
 //!   `BENCH_PR1.json` in a canonical sort order, so the serial and
 //!   parallel engines produce byte-identical files (proved by
 //!   `tests/integration_engine.rs`).
+//!
+//! PR 2 layers a durable tier beneath the memo table: an attached
+//! [`Store`] is consulted on every memo miss and written behind every
+//! simulation, so shards ([`shard_cells`]) and successive processes share
+//! work; [`merge_bench_json`] reassembles shard stores into the same
+//! canonical sink bytes. Keys are stable FNV-1a content addresses
+//! ([`content_key`]) because they now outlive the process.
 
 use super::experiments::{self, Measurement, DEPTHS};
 use super::scale_label;
+use super::store::{fnv1a64, Store};
 use crate::report::{fx, mbps, ms, Table};
 use crate::sim::device::DeviceConfig;
 use crate::sim::exec::ExecOptions;
 use crate::transform::Variant;
 use crate::util::json::Json;
 use crate::workloads::micro::{Micro, MicroSpec};
-use crate::workloads::{by_name, run_built_workload, suite, Scale, Workload};
-use std::collections::hash_map::DefaultHasher;
+use crate::workloads::{by_name, run_built_workload_with, suite, Scale, Workload};
 use std::collections::HashMap;
-use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 
@@ -132,6 +138,46 @@ pub fn resolve_workload(name: &str) -> Option<Box<dyn Workload>> {
         .map(|spec| Box::new(Micro::new(spec)) as Box<dyn Workload>)
 }
 
+/// Drop duplicate cells, keeping first-occurrence order. Experiments
+/// overlap heavily (every table re-measures the feed-forward baselines);
+/// sharding must partition *unique* cells or two shards would each
+/// simulate the shared ones. O(n) via a seen-set (`run --experiment all`
+/// concatenates seven overlapping grids).
+pub fn dedup_cells(cells: &[Cell]) -> Vec<Cell> {
+    let mut seen = std::collections::HashSet::new();
+    let mut out: Vec<Cell> = vec![];
+    for c in cells {
+        if seen.insert(format!("{}\u{1f}{:?}\u{1f}{:?}", c.workload, c.variant, c.scale)) {
+            out.push(c.clone());
+        }
+    }
+    out
+}
+
+/// Deterministic disjoint partition of a cell grid for `run --shard I/N`
+/// (1-based `index`): unique cell `j` belongs to shard `j % count + 1`.
+/// Grid construction is deterministic, so independent processes given the
+/// same experiments and scale agree on the partition with no coordination.
+/// Dedups internally (idempotent and O(n), so already-unique input from
+/// [`grid_for`] costs one cheap extra pass).
+pub fn shard_cells(cells: &[Cell], index: usize, count: usize) -> Vec<Cell> {
+    assert!(count > 0 && (1..=count).contains(&index), "shard index {index} of {count}");
+    dedup_cells(cells)
+        .into_iter()
+        .enumerate()
+        .filter(|(j, _)| j % count == index - 1)
+        .map(|(_, c)| c)
+        .collect()
+}
+
+/// The full (deduplicated) grid of a set of experiments at one scale —
+/// what `run` simulates, what shards partition, and what `merge` replays
+/// against the persistent stores.
+pub fn grid_for(exps: &[ExperimentId], scale: Scale) -> Vec<Cell> {
+    let all: Vec<Cell> = exps.iter().flat_map(|e| grid(*e, scale)).collect();
+    dedup_cells(&all)
+}
+
 /// The simulation grid of one experiment at one scale (the cells the
 /// engine prewarms in parallel before the serial table renderers run).
 pub fn grid(exp: ExperimentId, scale: Scale) -> Vec<Cell> {
@@ -191,6 +237,52 @@ pub fn grid(exp: ExperimentId, scale: Scale) -> Vec<Cell> {
         ExperimentId::E6 => {} // Table 1 is static characterisation
     }
     cells
+}
+
+// ---------------------------------------------------------------------------
+// Content addressing
+// ---------------------------------------------------------------------------
+
+/// The canonical signature a measurement is addressed by: workload + scale
+/// + device config + exec options + the transformed-IR text of every launch
+/// unit (pipes, depths, replication — everything the variant decides).
+/// Hashed with FNV-1a (not `DefaultHasher`) because keys persist on disk
+/// across processes and toolchains; any change to this format requires a
+/// `store::STORE_SCHEMA` bump.
+pub fn content_signature(
+    workload: &str,
+    app: &crate::workloads::App,
+    scale: Scale,
+    cfg: &DeviceConfig,
+    use_des: bool,
+) -> String {
+    let mut sig = String::new();
+    sig.push_str(workload);
+    sig.push('\n');
+    sig.push_str(scale_label(scale));
+    sig.push('\n');
+    sig.push_str(&format!("{cfg:?}"));
+    sig.push('\n');
+    sig.push_str(&format!(
+        "profile={} des={use_des}\n",
+        ExecOptions::default().profile
+    ));
+    for unit in &app.units {
+        sig.push_str(&crate::ir::pretty::program_to_string(unit));
+        sig.push('\n');
+    }
+    sig
+}
+
+/// [`content_signature`] hashed down to the store's 64-bit key.
+pub fn content_key(
+    workload: &str,
+    app: &crate::workloads::App,
+    scale: Scale,
+    cfg: &DeviceConfig,
+    use_des: bool,
+) -> u64 {
+    fnv1a64(content_signature(workload, app, scale, cfg, use_des).as_bytes())
 }
 
 // ---------------------------------------------------------------------------
@@ -306,12 +398,49 @@ pub struct Engine {
     pub cfg: DeviceConfig,
     /// Worker threads for grid fan-out (1 = serial).
     pub jobs: usize,
+    /// Estimate with the discrete-event simulator instead of the analytic
+    /// model (`run --des`). Part of the content address, so both estimates
+    /// cache side by side.
+    pub use_des: bool,
     cache: MeasureCache,
+    /// Durable read-through/write-behind tier beneath the in-memory memo
+    /// table (`coordinator::store`). `None` = process-local only (PR-1
+    /// behavior).
+    store: Option<Store>,
+    store_hits: AtomicU64,
+    store_errors: AtomicU64,
+    simulations: AtomicU64,
 }
 
 impl Engine {
     pub fn new(cfg: DeviceConfig, jobs: usize) -> Engine {
-        Engine { cfg, jobs: jobs.max(1), cache: MeasureCache::new() }
+        Engine {
+            cfg,
+            jobs: jobs.max(1),
+            use_des: false,
+            cache: MeasureCache::new(),
+            store: None,
+            store_hits: AtomicU64::new(0),
+            store_errors: AtomicU64::new(0),
+            simulations: AtomicU64::new(0),
+        }
+    }
+
+    /// Attach a persistent measurement store: cache misses consult it
+    /// before simulating, and fresh results are written behind it.
+    pub fn with_store(mut self, store: Store) -> Engine {
+        self.store = Some(store);
+        self
+    }
+
+    /// Switch the estimator to the discrete-event simulator.
+    pub fn with_des(mut self, use_des: bool) -> Engine {
+        self.use_des = use_des;
+        self
+    }
+
+    pub fn store(&self) -> Option<&Store> {
+        self.store.as_ref()
     }
 
     /// A single-worker engine (still cached — the serial reference path).
@@ -335,24 +464,28 @@ impl Engine {
         self.cache.hits.load(Ordering::Relaxed)
     }
 
-    /// Content-addressed key: transformed-IR text of every launch unit +
-    /// device config + exec options + dataset scale.
-    fn cache_key(&self, workload: &str, app: &crate::workloads::App, scale: Scale) -> u64 {
-        let mut h = DefaultHasher::new();
-        workload.hash(&mut h);
-        scale_label(scale).hash(&mut h);
-        for unit in &app.units {
-            crate::ir::pretty::program_to_string(unit).hash(&mut h);
-        }
-        format!("{:?}", self.cfg).hash(&mut h);
-        ExecOptions::default().profile.hash(&mut h);
-        h.finish()
+    /// Measurements served from the persistent store instead of simulated.
+    pub fn store_hits(&self) -> u64 {
+        self.store_hits.load(Ordering::Relaxed)
     }
 
-    /// Run one (workload, variant, scale) through the memo table: the
-    /// feed-forward split runs here (it defines the content address), but
-    /// interpretation, the performance model and validation run at most
-    /// once per unique configuration.
+    /// Failed store writes (results computed but not persisted). Shard
+    /// runs, whose only product is the store, must treat nonzero as fatal.
+    pub fn store_errors(&self) -> u64 {
+        self.store_errors.load(Ordering::Relaxed)
+    }
+
+    /// Actual simulations performed by this engine (neither memo table nor
+    /// store could answer). A warm-store rerun of the same grid reads 0.
+    pub fn simulations(&self) -> u64 {
+        self.simulations.load(Ordering::Relaxed)
+    }
+
+    /// Run one (workload, variant, scale) through the memo table and the
+    /// persistent store: the feed-forward split runs here (it defines the
+    /// content address), but interpretation, the performance model and
+    /// validation run at most once per unique configuration — across
+    /// processes, when a store is attached.
     pub fn measure(
         &self,
         w: &dyn Workload,
@@ -363,13 +496,27 @@ impl Engine {
             Ok(app) => app,
             Err(e) => return Err(e.to_string()),
         };
-        let key = self.cache_key(w.name(), &app, scale);
+        let key = content_key(w.name(), &app, scale, &self.cfg, self.use_des);
         if let Some(r) = self.cache.get_or_claim(key) {
             return r;
         }
         let guard = self.cache.claim_guard(key);
-        let result = run_built_workload(w, &app, scale, &self.cfg)
+        if let Some(store) = &self.store {
+            if let Some(r) = store.get(key) {
+                self.store_hits.fetch_add(1, Ordering::Relaxed);
+                guard.fulfil(r.clone());
+                return r;
+            }
+        }
+        self.simulations.fetch_add(1, Ordering::Relaxed);
+        let result = run_built_workload_with(w, &app, scale, &self.cfg, self.use_des)
             .map(|h| Measurement::from_harness(w, variant, scale, &h));
+        if let Some(store) = &self.store {
+            if let Err(e) = store.put(key, &result, self.use_des) {
+                self.store_errors.fetch_add(1, Ordering::Relaxed);
+                eprintln!("store: persisting {} failed: {e}", super::store::key_hex(key));
+            }
+        }
         guard.fulfil(result.clone());
         result
     }
@@ -744,27 +891,13 @@ impl Engine {
     /// scale) — identical between serial and parallel engines.
     pub fn measurements(&self) -> Vec<Measurement> {
         let mut ms = self.cache.done_measurements();
-        ms.sort_by(|a, b| {
-            (&a.workload, &a.variant, &a.scale).cmp(&(&b.workload, &b.variant, &b.scale))
-        });
+        experiments::canonical_sort(&mut ms);
         ms
     }
 
     /// The BENCH_PR1.json document (deterministic bytes).
     pub fn bench_json(&self, scale: Scale, experiments: &[ExperimentId]) -> String {
-        let doc = Json::Obj(vec![
-            ("schema".into(), Json::Str("pipefwd-bench-v1".into())),
-            ("scale".into(), Json::Str(scale_label(scale).into())),
-            (
-                "experiments".into(),
-                Json::Arr(experiments.iter().map(|e| Json::Str(e.label().into())).collect()),
-            ),
-            (
-                "measurements".into(),
-                Json::Arr(self.measurements().iter().map(Measurement::to_json).collect()),
-            ),
-        ]);
-        doc.to_pretty()
+        bench_doc(scale, experiments, &self.measurements())
     }
 
     /// Write the results sink to disk (default file name: BENCH_PR1.json).
@@ -776,6 +909,75 @@ impl Engine {
     ) -> std::io::Result<()> {
         std::fs::write(path, self.bench_json(scale, experiments))
     }
+}
+
+/// Render the BENCH_PR1.json document from canonically sorted
+/// measurements. Shared by [`Engine::bench_json`] and [`merge_bench_json`]
+/// so a merged sharded run is byte-identical to the serial path.
+pub fn bench_doc(scale: Scale, experiments: &[ExperimentId], measurements: &[Measurement]) -> String {
+    let doc = Json::Obj(vec![
+        ("schema".into(), Json::Str("pipefwd-bench-v1".into())),
+        ("scale".into(), Json::Str(scale_label(scale).into())),
+        (
+            "experiments".into(),
+            Json::Arr(experiments.iter().map(|e| Json::Str(e.label().into())).collect()),
+        ),
+        (
+            "measurements".into(),
+            Json::Arr(measurements.iter().map(Measurement::to_json).collect()),
+        ),
+    ]);
+    doc.to_pretty()
+}
+
+/// Union a set of shard stores into the serial path's results sink: replay
+/// the experiment grid (IR transforms only — zero simulation), look every
+/// cell's content address up across the stores, and render the canonical
+/// document. Errors if any feasible cell is missing from every store
+/// (i.e. the shards did not cover the grid).
+pub fn merge_bench_json(
+    stores: &[Store],
+    exps: &[ExperimentId],
+    scale: Scale,
+    cfg: &DeviceConfig,
+    use_des: bool,
+) -> Result<String, String> {
+    let mut seen = std::collections::HashSet::new();
+    let mut ms: Vec<Measurement> = vec![];
+    let mut missing: Vec<String> = vec![];
+    for cell in grid_for(exps, scale) {
+        let Some(w) = resolve_workload(&cell.workload) else {
+            missing.push(format!("unknown workload `{}`", cell.workload));
+            continue;
+        };
+        // infeasible variants never enter the serial sink either
+        let Ok(app) = w.build(cell.variant) else { continue };
+        let key = content_key(&cell.workload, &app, cell.scale, cfg, use_des);
+        if !seen.insert(key) {
+            continue;
+        }
+        match stores.iter().find_map(|s| s.get(key)) {
+            Some(Ok(m)) => ms.push(m),
+            // simulated but failed (e.g. validation): excluded, like serial
+            Some(Err(_)) => {}
+            None => missing.push(format!(
+                "{} {} {} ({})",
+                cell.workload,
+                cell.variant.label(),
+                scale_label(cell.scale),
+                super::store::key_hex(key)
+            )),
+        }
+    }
+    if !missing.is_empty() {
+        return Err(format!(
+            "merge: {} grid cell(s) missing from the given stores — did every shard run?\n  {}",
+            missing.len(),
+            missing.join("\n  ")
+        ));
+    }
+    experiments::canonical_sort(&mut ms);
+    Ok(bench_doc(scale, exps, &ms))
 }
 
 #[cfg(test)]
@@ -825,6 +1027,46 @@ mod tests {
         // a different depth is a different content address
         let _ = e.measure(w.as_ref(), Variant::FeedForward { depth: 100 }, Scale::Tiny).unwrap();
         assert_eq!(e.cache_len(), 2);
+    }
+
+    #[test]
+    fn shards_partition_unique_cells_disjointly() {
+        let cells = {
+            // duplicate the grid so dedup has real work to do
+            let mut g = grid(ExperimentId::E2, Scale::Tiny);
+            g.extend(grid(ExperimentId::E2, Scale::Tiny));
+            g
+        };
+        let unique = dedup_cells(&cells);
+        assert_eq!(unique.len(), grid(ExperimentId::E2, Scale::Tiny).len());
+        for n in [1usize, 3, 4] {
+            let shards: Vec<Vec<Cell>> = (1..=n).map(|i| shard_cells(&cells, i, n)).collect();
+            let total: usize = shards.iter().map(|s| s.len()).sum();
+            assert_eq!(total, unique.len(), "shards must cover the unique grid exactly");
+            for (i, s) in shards.iter().enumerate() {
+                for c in s {
+                    for (j, other) in shards.iter().enumerate() {
+                        if i != j {
+                            assert!(!other.contains(c), "cell in shards {i} and {j}");
+                        }
+                    }
+                }
+            }
+            // deterministic across calls
+            assert_eq!(shards[0], shard_cells(&cells, 1, n));
+        }
+    }
+
+    #[test]
+    fn content_key_separates_des_from_analytic() {
+        let cfg = DeviceConfig::pac_a10();
+        let w = by_name("fw").unwrap();
+        let app = w.build(Variant::FeedForward { depth: 1 }).unwrap();
+        let analytic = content_key("fw", &app, Scale::Tiny, &cfg, false);
+        let des = content_key("fw", &app, Scale::Tiny, &cfg, true);
+        assert_ne!(analytic, des, "DES and analytic estimates must cache side by side");
+        // stable across calls (persisted keys depend on it)
+        assert_eq!(analytic, content_key("fw", &app, Scale::Tiny, &cfg, false));
     }
 
     #[test]

@@ -94,6 +94,17 @@ impl Measurement {
     }
 }
 
+/// Canonical results-sink ordering: (workload, variant, scale). Every
+/// producer of sink measurements — the engine, the store views, `merge` —
+/// must sort through this one helper; the byte-identical guarantee
+/// between serial, parallel, and sharded+merged runs depends on them
+/// staying in lockstep.
+pub fn canonical_sort(ms: &mut [Measurement]) {
+    ms.sort_by(|a, b| {
+        (&a.workload, &a.variant, &a.scale).cmp(&(&b.workload, &b.variant, &b.scale))
+    });
+}
+
 /// Run one (workload, variant, scale) and collect the measurement — the
 /// uncached primitive; prefer [`Engine::measure`] which memoizes.
 pub fn measure(

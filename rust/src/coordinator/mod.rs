@@ -4,12 +4,21 @@
 //!
 //! The [`engine`] module is the PR-1 parallel, cache-aware experiment
 //! engine: grid fan-out across a worker pool, content-addressed
-//! measurement memoization, and the BENCH_PR1.json results sink.
+//! measurement memoization, and the BENCH_PR1.json results sink. The
+//! [`store`] module (PR 2) persists that cache on disk so shards and
+//! successive CI runs share work; [`engine::shard_cells`] +
+//! [`engine::merge_bench_json`] split the grid across processes and
+//! reassemble the byte-identical sink.
 
 pub mod engine;
 pub mod experiments;
+pub mod store;
 
-pub use engine::{grid, resolve_workload, Cell, Engine, ExperimentId};
+pub use engine::{
+    bench_doc, content_key, dedup_cells, grid, grid_for, merge_bench_json, resolve_workload,
+    shard_cells, Cell, Engine, ExperimentId,
+};
+pub use store::Store;
 pub use experiments::{
     best_ff, depth_sweep, figure4, headline, hotspot_m2c2_bw, intext, measure, micro_family,
     pc_sweep, table1, table2, table2_rows, table3, vector_study, Measurement,

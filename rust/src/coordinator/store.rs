@@ -1,0 +1,428 @@
+//! Durable, content-addressed measurement store (the PR-2 tentpole).
+//!
+//! PR 1's memoization layer is process-local: every `pipefwd` invocation
+//! and every CI run re-simulates the whole grid. This module persists each
+//! `(transformed-IR hash, DeviceConfig, ExecOptions) → CellResult` record
+//! as one canonical-JSON file under a results directory (default
+//! `.pipefwd-cache/`), so shards and successive runs share work:
+//!
+//! * **One file per entry** — `entries/<16-hex-key>.json`, written with a
+//!   temp-file + rename so concurrent writers (shard processes, parallel
+//!   engines on one store) never expose torn bytes; the last writer wins
+//!   with identical content because measurements are deterministic.
+//! * **Corruption tolerance** — a truncated, garbled, or
+//!   wrong-schema-version entry is a cache *miss*, never a crash: the
+//!   engine just re-simulates and rewrites it.
+//! * **Stable keys** — entries outlive the process, so the content address
+//!   is FNV-1a over a canonical signature string, not `DefaultHasher`
+//!   (whose output is unspecified across Rust releases).
+//! * **Manifest** — `MANIFEST.json` lists every key in sorted order for
+//!   fast external enumeration (CI, tooling). The directory scan remains
+//!   the source of truth; the manifest is advisory and rewritten after
+//!   each run and merge.
+
+use super::engine::CellResult;
+use super::experiments::Measurement;
+use crate::util::json::{self, Json};
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Store layout/keying version. Bumping this orphans every existing entry
+/// (old files parse but fail the schema check and read as misses), which is
+/// exactly what a change to the key signature or record format requires.
+/// CI keys its shared cache on this string.
+pub const STORE_SCHEMA: &str = "pipefwd-store-v1";
+
+/// Default results directory (overridable via `--cache-dir` /
+/// `PIPEFWD_CACHE_DIR`).
+pub const DEFAULT_DIR: &str = ".pipefwd-cache";
+
+/// FNV-1a 64-bit: tiny, dependency-free, and — unlike `DefaultHasher` —
+/// specified, so persisted keys stay valid across toolchains.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Fixed-width file-name form of a key.
+pub fn key_hex(key: u64) -> String {
+    format!("{key:016x}")
+}
+
+/// Durable measurement store rooted at one directory.
+pub struct Store {
+    root: PathBuf,
+}
+
+impl Store {
+    /// Open (creating if needed) a store rooted at `root`.
+    pub fn open(root: impl Into<PathBuf>) -> io::Result<Store> {
+        let root = root.into();
+        std::fs::create_dir_all(root.join("entries"))?;
+        Ok(Store { root })
+    }
+
+    /// Open an existing store, erroring if `root` is not one — the
+    /// read side (`merge <dir>...`), where silently fabricating an empty
+    /// store would turn a typo or a missing CI artifact into a misleading
+    /// "shard incomplete" failure later.
+    pub fn open_existing(root: impl Into<PathBuf>) -> io::Result<Store> {
+        let root = root.into();
+        if !root.join("entries").is_dir() {
+            return Err(io::Error::new(
+                io::ErrorKind::NotFound,
+                format!("{} is not a measurement store (no entries/ directory)", root.display()),
+            ));
+        }
+        Ok(Store { root })
+    }
+
+    /// The store directory configured for this process: `--cache-dir` wins,
+    /// then `PIPEFWD_CACHE_DIR`, then [`DEFAULT_DIR`].
+    pub fn resolve_dir(flag: Option<&str>) -> PathBuf {
+        match flag {
+            Some(d) => PathBuf::from(d),
+            None => std::env::var("PIPEFWD_CACHE_DIR")
+                .map(PathBuf::from)
+                .unwrap_or_else(|_| PathBuf::from(DEFAULT_DIR)),
+        }
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn entry_path(&self, key: u64) -> PathBuf {
+        self.root.join("entries").join(format!("{}.json", key_hex(key)))
+    }
+
+    /// Look an entry up. Any defect — missing file, truncated or garbled
+    /// JSON, schema-version mismatch, key mismatch, malformed record — is a
+    /// miss, not an error: the caller re-simulates and overwrites.
+    pub fn get(&self, key: u64) -> Option<CellResult> {
+        let doc = json::read_file(&self.entry_path(key)).ok()?;
+        decode_entry(&doc, key)
+    }
+
+    /// Persist an entry (atomic temp-file + rename; see `util::json`).
+    /// `des` records which estimator produced the measurement — advisory
+    /// metadata for filtered rendering; the content key already separates
+    /// DES from analytic entries.
+    pub fn put(&self, key: u64, result: &CellResult, des: bool) -> io::Result<()> {
+        json::write_file_atomic(&self.entry_path(key), &encode_entry(key, result, des))
+    }
+
+    /// Every key present on disk (directory scan — the source of truth).
+    pub fn keys(&self) -> Vec<u64> {
+        let mut keys: Vec<u64> = match std::fs::read_dir(self.root.join("entries")) {
+            Ok(rd) => rd
+                .filter_map(|e| e.ok())
+                .filter_map(|e| {
+                    let name = e.file_name().to_string_lossy().to_string();
+                    let hex = name.strip_suffix(".json")?;
+                    u64::from_str_radix(hex, 16).ok()
+                })
+                .collect(),
+            Err(_) => vec![],
+        };
+        keys.sort_unstable();
+        keys
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys().is_empty()
+    }
+
+    /// Every *valid* entry on disk (corrupt files are skipped).
+    pub fn entries(&self) -> Vec<(u64, CellResult)> {
+        self.keys().into_iter().filter_map(|k| self.get(k).map(|r| (k, r))).collect()
+    }
+
+    /// Every successful measurement, in the canonical (workload, variant,
+    /// scale) order the results sink uses.
+    pub fn measurements(&self) -> Vec<Measurement> {
+        let mut ms: Vec<Measurement> =
+            self.entries().into_iter().filter_map(|(_, r)| r.ok()).collect();
+        super::experiments::canonical_sort(&mut ms);
+        ms
+    }
+
+    /// [`Store::measurements`] restricted to one dataset scale and one
+    /// estimator — a store accumulates entries across scales and `--des`
+    /// runs, and mixing them in one rendering would show duplicate
+    /// configurations with divergent times.
+    pub fn measurements_filtered(&self, scale: &str, des: bool) -> Vec<Measurement> {
+        let mut ms: Vec<Measurement> = self
+            .keys()
+            .into_iter()
+            .filter_map(|key| {
+                let doc = json::read_file(&self.entry_path(key)).ok()?;
+                if doc.get("des")?.as_bool()? != des {
+                    return None;
+                }
+                match decode_entry(&doc, key)? {
+                    Ok(m) if m.scale == scale => Some(m),
+                    _ => None,
+                }
+            })
+            .collect();
+        super::experiments::canonical_sort(&mut ms);
+        ms
+    }
+
+    /// Copy every entry of `other` that this store lacks (raw document
+    /// copy, preserving all metadata). Returns how many entries were
+    /// imported. Corrupt source entries are skipped; a corrupt local entry
+    /// is replaced by a valid imported one.
+    pub fn merge_from(&self, other: &Store) -> io::Result<usize> {
+        let mut imported = 0;
+        for key in other.keys() {
+            if self.get(key).is_some() {
+                continue;
+            }
+            let Ok(doc) = json::read_file(&other.entry_path(key)) else { continue };
+            if decode_entry(&doc, key).is_none() {
+                continue;
+            }
+            json::write_file_atomic(&self.entry_path(key), &doc)?;
+            imported += 1;
+        }
+        Ok(imported)
+    }
+
+    /// Rewrite `MANIFEST.json`: schema + sorted key list.
+    pub fn write_manifest(&self) -> io::Result<PathBuf> {
+        let doc = Json::Obj(vec![
+            ("schema".into(), Json::Str(STORE_SCHEMA.into())),
+            (
+                "keys".into(),
+                Json::Arr(self.keys().into_iter().map(|k| Json::Str(key_hex(k))).collect()),
+            ),
+        ]);
+        let path = self.root.join("MANIFEST.json");
+        json::write_file_atomic(&path, &doc)?;
+        Ok(path)
+    }
+
+    /// The manifest's key list, if present and valid for this schema.
+    /// Advisory: may lag the directory (e.g. after a crashed run).
+    pub fn load_manifest(&self) -> Option<Vec<u64>> {
+        let doc = json::read_file(&self.root.join("MANIFEST.json")).ok()?;
+        if doc.get("schema")?.as_str()? != STORE_SCHEMA {
+            return None;
+        }
+        doc.get("keys")?
+            .as_array()?
+            .iter()
+            .map(|k| u64::from_str_radix(k.as_str()?, 16).ok())
+            .collect()
+    }
+}
+
+fn encode_entry(key: u64, result: &CellResult, des: bool) -> Json {
+    let mut fields = vec![
+        ("schema".into(), Json::Str(STORE_SCHEMA.into())),
+        ("key".into(), Json::Str(key_hex(key))),
+        ("des".into(), Json::Bool(des)),
+    ];
+    match result {
+        Ok(m) => {
+            fields.push(("status".into(), Json::Str("ok".into())));
+            fields.push(("measurement".into(), m.to_json()));
+        }
+        Err(e) => {
+            fields.push(("status".into(), Json::Str("err".into())));
+            fields.push(("error".into(), Json::Str(e.clone())));
+        }
+    }
+    Json::Obj(fields)
+}
+
+fn decode_entry(doc: &Json, key: u64) -> Option<CellResult> {
+    if doc.get("schema")?.as_str()? != STORE_SCHEMA {
+        return None;
+    }
+    if doc.get("key")?.as_str()? != key_hex(key) {
+        return None;
+    }
+    match doc.get("status")?.as_str()? {
+        "ok" => Measurement::from_json(doc.get("measurement")?).map(Ok),
+        "err" => Some(Err(doc.get("error")?.as_str()?.to_string())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_store(name: &str) -> Store {
+        let dir = std::env::temp_dir()
+            .join(format!("pipefwd-store-unit-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        Store::open(dir).unwrap()
+    }
+
+    fn sample_measurement() -> Measurement {
+        Measurement {
+            workload: "fw".into(),
+            variant: "ff(d1)".into(),
+            scale: "tiny".into(),
+            seconds: 0.125,
+            cycles: 3.0e7,
+            logic_pct: 17.5,
+            brams: 412,
+            max_ii: 285,
+            max_bw: 7.34e9,
+            launches: 3,
+        }
+    }
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        // published FNV-1a test vectors — the persisted keys depend on them
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn open_existing_rejects_non_stores() {
+        let dir = std::env::temp_dir()
+            .join(format!("pipefwd-store-unit-{}-absent", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(Store::open_existing(&dir).is_err(), "absent dir must not open");
+        Store::open(&dir).unwrap();
+        assert!(Store::open_existing(&dir).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn roundtrips_ok_and_err_entries() {
+        let s = tmp_store("roundtrip");
+        let m = sample_measurement();
+        s.put(1, &Ok(m.clone()), false).unwrap();
+        s.put(2, &Err("replication unsupported".into()), false).unwrap();
+        assert_eq!(s.get(1), Some(Ok(m)));
+        assert_eq!(s.get(2), Some(Err("replication unsupported".into())));
+        assert_eq!(s.get(3), None);
+        assert_eq!(s.keys(), vec![1, 2]);
+        let _ = std::fs::remove_dir_all(s.root());
+    }
+
+    #[test]
+    fn corrupt_truncated_and_mismatched_entries_are_misses() {
+        let s = tmp_store("corrupt");
+        let m = sample_measurement();
+        s.put(7, &Ok(m.clone()), false).unwrap();
+        let path = s.root().join("entries").join(format!("{}.json", key_hex(7)));
+
+        // truncated mid-document
+        let full = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        assert_eq!(s.get(7), None, "truncated entry must be a miss");
+
+        // outright garbage
+        std::fs::write(&path, "not json at all \u{0}\u{1}").unwrap();
+        assert_eq!(s.get(7), None, "garbled entry must be a miss");
+
+        // valid JSON, wrong schema version (a schema bump invalidates)
+        let stale = full.replace(STORE_SCHEMA, "pipefwd-store-v0");
+        std::fs::write(&path, &stale).unwrap();
+        assert_eq!(s.get(7), None, "old-schema entry must be a miss");
+
+        // valid JSON under the wrong key (e.g. a mis-copied file)
+        s.put(8, &Ok(m), false).unwrap();
+        std::fs::copy(s.root().join("entries").join(format!("{}.json", key_hex(8))), &path)
+            .unwrap();
+        assert_eq!(s.get(7), None, "key-mismatched entry must be a miss");
+        let _ = std::fs::remove_dir_all(s.root());
+    }
+
+    #[test]
+    fn manifest_roundtrips_and_rejects_other_schemas() {
+        let s = tmp_store("manifest");
+        s.put(5, &Err("e".into()), false).unwrap();
+        s.put(3, &Err("e".into()), false).unwrap();
+        s.write_manifest().unwrap();
+        assert_eq!(s.load_manifest(), Some(vec![3, 5]));
+        let text = std::fs::read_to_string(s.root().join("MANIFEST.json"))
+            .unwrap()
+            .replace(STORE_SCHEMA, "pipefwd-store-v0");
+        std::fs::write(s.root().join("MANIFEST.json"), text).unwrap();
+        assert_eq!(s.load_manifest(), None);
+        let _ = std::fs::remove_dir_all(s.root());
+    }
+
+    #[test]
+    fn measurements_filter_by_scale_and_estimator() {
+        let s = tmp_store("filter");
+        let analytic_tiny = sample_measurement();
+        let mut des_tiny = sample_measurement();
+        des_tiny.seconds = 0.25; // DES estimate of the same configuration
+        let mut analytic_small = sample_measurement();
+        analytic_small.scale = "small".into();
+        s.put(1, &Ok(analytic_tiny.clone()), false).unwrap();
+        s.put(2, &Ok(des_tiny.clone()), true).unwrap();
+        s.put(3, &Ok(analytic_small), false).unwrap();
+        s.put(4, &Err("infeasible".into()), false).unwrap();
+        assert_eq!(s.measurements_filtered("tiny", false), vec![analytic_tiny]);
+        assert_eq!(s.measurements_filtered("tiny", true), vec![des_tiny]);
+        assert_eq!(s.measurements().len(), 3, "unfiltered view keeps everything");
+        let _ = std::fs::remove_dir_all(s.root());
+    }
+
+    #[test]
+    fn merge_from_imports_only_missing_entries() {
+        let a = tmp_store("merge-a");
+        let b = tmp_store("merge-b");
+        let m = sample_measurement();
+        a.put(1, &Ok(m.clone()), false).unwrap();
+        b.put(1, &Err("divergent (must not overwrite)".into()), false).unwrap();
+        b.put(2, &Ok(m.clone()), false).unwrap();
+        assert_eq!(a.merge_from(&b).unwrap(), 1);
+        assert_eq!(a.get(1), Some(Ok(m.clone())), "existing entries are kept");
+        assert_eq!(a.get(2), Some(Ok(m)));
+        let _ = std::fs::remove_dir_all(a.root());
+        let _ = std::fs::remove_dir_all(b.root());
+    }
+
+    #[test]
+    fn concurrent_writers_lose_no_records() {
+        let s = tmp_store("concurrent");
+        let m = sample_measurement();
+        std::thread::scope(|sc| {
+            for t in 0..8u64 {
+                let s = &s;
+                let m = &m;
+                sc.spawn(move || {
+                    for k in 0..16u64 {
+                        // half the keys contended by every thread, half private
+                        let key = if k % 2 == 0 { k } else { t * 100 + k };
+                        s.put(key, &Ok(m.clone()), false).unwrap();
+                        assert!(s.get(key).is_some(), "entry must be readable after put");
+                    }
+                });
+            }
+        });
+        // all contended + all private keys present and valid
+        for k in (0..16u64).filter(|k| k % 2 == 0) {
+            assert_eq!(s.get(k), Some(Ok(m.clone())));
+        }
+        for t in 0..8u64 {
+            for k in (0..16u64).filter(|k| k % 2 == 1) {
+                assert_eq!(s.get(t * 100 + k), Some(Ok(m.clone())));
+            }
+        }
+        assert_eq!(s.len(), 8 + 8 * 8);
+        let _ = std::fs::remove_dir_all(s.root());
+    }
+}

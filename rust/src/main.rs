@@ -5,7 +5,7 @@
 //! artifacts, and drive the parallel experiment engine (`run`, `sweep`,
 //! `report`). Std-only argument parsing (no clap in this offline image).
 
-use pipefwd::coordinator::{self, parse_scale, Engine, ExperimentId};
+use pipefwd::coordinator::{self, parse_scale, Engine, ExperimentId, Store};
 use pipefwd::sim::device::DeviceConfig;
 use pipefwd::transform::Variant;
 use pipefwd::workloads::{by_name, Scale};
@@ -16,13 +16,19 @@ pipefwd — feed-forward design model for OpenCL kernels via pipes
 
 USAGE: pipefwd <command> [--scale tiny|small|paper] [--csv] [--jobs N]
 
-ENGINE COMMANDS (parallel, cache-aware):
+ENGINE COMMANDS (parallel, cache-aware, persistent):
   run --experiment E1..E7|all   run experiments through the engine and
-                                write the BENCH_PR1.json results sink
+      [--shard I/N] [--des]     write the BENCH_PR1.json results sink;
+                                --shard computes one disjoint grid slice
   sweep [--depths 1,100,1000]   channel-depth sweep over arbitrary depths
         [--benches fw,hotspot,mis]
+  merge <dir>...                union shard stores and emit the canonical
+                                BENCH_PR1.json (byte-identical to serial)
   report [--format table|json]  re-render a results sink (default:
-         [--in BENCH_PR1.json]  BENCH_PR1.json) as a table or as JSON
+         [--in BENCH_PR1.json]  BENCH_PR1.json; if the default file is
+                                absent, renders from the persistent store)
+  report --diff <old> <new>     compare two results sinks; exit 1 on
+         [--threshold PCT]      modelled-performance regressions > PCT %
 
 TABLE COMMANDS:
   table1               benchmark characterisation (paper Table 1)
@@ -44,12 +50,22 @@ OPTIONS:
   --scale S        dataset scale (default: small; tiny = artifact-matched)
   --csv            also write results/<name>.csv
   --jobs N         engine worker threads (default: all cores)
-  --out PATH       results-sink path for `run`/`sweep` (default: BENCH_PR1.json)
-  --experiment E   comma-separated experiment ids for `run` (E1..E7 or all)
+  --out PATH       results-sink path for `run`/`sweep`/`merge`
+                   (default: BENCH_PR1.json)
+  --experiment E   comma-separated experiment ids (E1..E7 or all)
   --depths LIST    comma-separated pipe depths for `sweep`
   --benches LIST   comma-separated benchmarks for `sweep`
   --format F       `report` output: table (default) or json
   --in PATH        `report` input file (default: BENCH_PR1.json)
+  --diff OLD NEW   `report` diff mode: two results sinks to compare
+  --threshold PCT  regression threshold for `report --diff` (default: 5)
+  --shard I/N      compute only shard I of N (1-based) of the unique
+                   experiment grid; merge the stores afterwards
+  --cache-dir DIR  persistent measurement store directory
+                   (default: $PIPEFWD_CACHE_DIR or .pipefwd-cache)
+  --no-cache       do not read or write the persistent store
+  --des            estimate with the discrete-event simulator instead of
+                   the analytic model (cached under a distinct key)
 ";
 
 fn fail(msg: &str) -> ! {
@@ -71,8 +87,16 @@ fn main() {
     let mut depths: Vec<usize> = vec![1, 100, 1000];
     let mut benches: Vec<String> = vec!["fw".into(), "hotspot".into(), "mis".into()];
     let mut out_path = String::from("BENCH_PR1.json");
+    let mut out_set = false;
     let mut in_path = String::from("BENCH_PR1.json");
+    let mut in_set = false;
     let mut format = String::from("table");
+    let mut shard: Option<(usize, usize)> = None;
+    let mut cache_dir: Option<String> = None;
+    let mut no_cache = false;
+    let mut use_des = false;
+    let mut diff: Option<(String, String)> = None;
+    let mut threshold = 5.0_f64;
     let mut positional = vec![];
     let mut it = args[1..].iter();
     while let Some(a) = it.next() {
@@ -113,17 +137,74 @@ fn main() {
             }
             "--out" => {
                 out_path = it.next().unwrap_or_else(|| fail("--out needs a value")).clone();
+                out_set = true;
             }
             "--in" => {
                 in_path = it.next().unwrap_or_else(|| fail("--in needs a value")).clone();
+                in_set = true;
             }
             "--format" => {
                 format = it.next().unwrap_or_else(|| fail("--format needs a value")).clone();
+            }
+            "--shard" => {
+                let v = it.next().unwrap_or_else(|| fail("--shard needs a value (I/N)"));
+                shard = Some(parse_shard(v).unwrap_or_else(|| {
+                    fail(&format!("bad --shard `{v}` (expected I/N with 1 <= I <= N)"))
+                }));
+            }
+            "--cache-dir" => {
+                cache_dir =
+                    Some(it.next().unwrap_or_else(|| fail("--cache-dir needs a value")).clone());
+            }
+            "--no-cache" => no_cache = true,
+            "--des" => use_des = true,
+            "--diff" => {
+                let old = it.next().unwrap_or_else(|| fail("--diff needs two paths")).clone();
+                let new = it.next().unwrap_or_else(|| fail("--diff needs two paths")).clone();
+                diff = Some((old, new));
+            }
+            "--threshold" => {
+                let v = it.next().unwrap_or_else(|| fail("--threshold needs a value"));
+                threshold = v
+                    .parse::<f64>()
+                    .ok()
+                    .filter(|t| t.is_finite() && *t >= 0.0)
+                    .unwrap_or_else(|| fail(&format!("bad --threshold `{v}` (percent >= 0)")));
             }
             other => positional.push(other.to_string()),
         }
     }
     let cfg = DeviceConfig::pac_a10();
+
+    // The persistent store every engine command reads through / writes
+    // behind (tentpole of PR 2); `--no-cache` restores PR-1 behavior.
+    let open_store = || -> Option<Store> {
+        if no_cache {
+            return None;
+        }
+        let dir = Store::resolve_dir(cache_dir.as_deref());
+        match Store::open(&dir) {
+            Ok(s) => Some(s),
+            Err(e) => {
+                eprintln!("warning: cannot open store {}: {e} (running uncached)", dir.display());
+                None
+            }
+        }
+    };
+    let mk_engine = |jobs: usize| {
+        let mut e = Engine::new(DeviceConfig::pac_a10(), jobs).with_des(use_des);
+        if let Some(s) = open_store() {
+            e = e.with_store(s);
+        }
+        e
+    };
+    let finish_engine = |engine: &Engine| {
+        if let Some(s) = engine.store() {
+            if let Err(e) = s.write_manifest() {
+                eprintln!("warning: writing store manifest: {e}");
+            }
+        }
+    };
 
     let save = |t: &pipefwd::report::Table, name: &str| {
         print!("{}", t.to_markdown());
@@ -142,31 +223,96 @@ fn main() {
             }
         }
         "run" => {
-            let exps: Vec<ExperimentId> = if experiment.eq_ignore_ascii_case("all") {
-                ExperimentId::all().to_vec()
+            let exps = parse_experiments(&experiment);
+            let engine = mk_engine(jobs);
+            if let Some((index, count)) = shard {
+                // one disjoint slice of the unique grid: simulate into the
+                // store, no table rendering (tables need the full grid —
+                // that's what `merge` reassembles). The store IS the
+                // shard's product, so store problems are fatal here where
+                // a plain run only warns.
+                if engine.store().is_none() {
+                    fail("run --shard: the persistent store is unavailable (or --no-cache \
+                          was given) — a shard's results have nowhere to go");
+                }
+                let cells = coordinator::grid_for(&exps, scale);
+                let slice = coordinator::shard_cells(&cells, index, count);
+                let _ = engine.run_cells(&slice);
+                if engine.store_errors() > 0 {
+                    fail(&format!(
+                        "run --shard: {} result(s) failed to persist — the merge would \
+                         report this slice as missing",
+                        engine.store_errors()
+                    ));
+                }
+                eprintln!(
+                    "shard {index}/{count}: {} of {} unique cells, {} simulated, {} store hits",
+                    slice.len(),
+                    cells.len(),
+                    engine.simulations(),
+                    engine.store_hits(),
+                );
             } else {
-                experiment
-                    .split(',')
-                    .map(|e| {
-                        ExperimentId::parse(e.trim())
-                            .unwrap_or_else(|| fail(&format!("unknown experiment `{e}` (E1..E7)")))
-                    })
-                    .collect()
-            };
-            let engine = Engine::new(cfg, jobs);
-            for exp in &exps {
-                for (i, t) in engine.run_experiment(*exp, scale).iter().enumerate() {
-                    save(t, &format!("{}_{i}", exp.label().to_lowercase()));
-                    println!();
+                for exp in &exps {
+                    for (i, t) in engine.run_experiment(*exp, scale).iter().enumerate() {
+                        save(t, &format!("{}_{i}", exp.label().to_lowercase()));
+                        println!();
+                    }
                 }
             }
-            match engine.write_bench_json(std::path::Path::new(&out_path), scale, &exps) {
-                Ok(()) => eprintln!(
-                    "wrote {out_path} ({} measurements, {} unique configs, {} cache hits, {jobs} jobs)",
-                    engine.measurements().len(),
-                    engine.cache_len(),
-                    engine.cache_hits(),
-                ),
+            // A shard's product is its store entries; a partial sink under
+            // the default name would masquerade as a complete one (and
+            // concurrent shards would race on it), so shards only write a
+            // sink to an explicit --out.
+            if shard.is_none() || out_set {
+                match engine.write_bench_json(std::path::Path::new(&out_path), scale, &exps) {
+                    Ok(()) => eprintln!(
+                        "wrote {out_path} ({} measurements, {} unique configs, {} cache hits, \
+                         {} store hits, {} simulated, {jobs} jobs)",
+                        engine.measurements().len(),
+                        engine.cache_len(),
+                        engine.cache_hits(),
+                        engine.store_hits(),
+                        engine.simulations(),
+                    ),
+                    Err(e) => fail(&format!("writing {out_path}: {e}")),
+                }
+            }
+            finish_engine(&engine);
+        }
+        "merge" => {
+            if positional.is_empty() {
+                fail("merge <dir>... (at least one shard store directory)");
+            }
+            let exps = parse_experiments(&experiment);
+            let shards: Vec<Store> = positional
+                .iter()
+                .map(|d| {
+                    Store::open_existing(d)
+                        .unwrap_or_else(|e| fail(&format!("opening store {d}: {e}")))
+                })
+                .collect();
+            // union the shard stores into the local persistent store too,
+            // so the merge host is warm for future runs
+            if let Some(local) = open_store() {
+                let mut imported = 0;
+                for s in &shards {
+                    imported += local
+                        .merge_from(s)
+                        .unwrap_or_else(|e| fail(&format!("merging into local store: {e}")));
+                }
+                if let Err(e) = local.write_manifest() {
+                    eprintln!("warning: writing store manifest: {e}");
+                }
+                eprintln!(
+                    "imported {imported} new entries into {}",
+                    local.root().display()
+                );
+            }
+            let json = coordinator::merge_bench_json(&shards, &exps, scale, &cfg, use_des)
+                .unwrap_or_else(|e| fail(&e));
+            match std::fs::write(&out_path, &json) {
+                Ok(()) => eprintln!("wrote {out_path} (merged from {} store(s))", shards.len()),
                 Err(e) => fail(&format!("writing {out_path}: {e}")),
             }
         }
@@ -176,7 +322,7 @@ fn main() {
                     fail(&format!("unknown benchmark `{b}` (see `pipefwd list`)"));
                 }
             }
-            let engine = Engine::new(cfg, jobs);
+            let engine = mk_engine(jobs);
             let cells: Vec<coordinator::Cell> = benches
                 .iter()
                 .flat_map(|b| {
@@ -193,45 +339,86 @@ fn main() {
                 Ok(()) => eprintln!("wrote {out_path}"),
                 Err(e) => fail(&format!("writing {out_path}: {e}")),
             }
+            finish_engine(&engine);
         }
         "report" => {
-            let text = std::fs::read_to_string(&in_path)
-                .unwrap_or_else(|e| fail(&format!("reading {in_path}: {e} (run `pipefwd run` first)")));
-            let doc = pipefwd::util::json::parse(&text)
-                .unwrap_or_else(|e| fail(&format!("parsing {in_path}: {e}")));
-            match format.as_str() {
-                "json" => print!("{}", doc.to_pretty()),
-                "table" => {
-                    let ms: Vec<coordinator::Measurement> = doc
-                        .get("measurements")
-                        .and_then(|m| m.as_array())
-                        .unwrap_or_else(|| fail(&format!("{in_path}: no measurements array")))
-                        .iter()
-                        .filter_map(coordinator::Measurement::from_json)
-                        .collect();
-                    let mut t = pipefwd::report::Table::new(
-                        &format!("Results sink: {in_path}"),
-                        &[
-                            "Benchmark", "Variant", "Scale", "Time (ms)", "Logic (%)", "BRAM",
-                            "Max II", "Max BW (MB/s)", "Launches",
-                        ],
+            if let Some((old_path, new_path)) = &diff {
+                let failures = report_diff(old_path, new_path, threshold);
+                if failures > 0 {
+                    eprintln!(
+                        "FAIL: {failures} gate failure(s) — regressions above {threshold}% \
+                         or configurations lost (old: {old_path}, new: {new_path})"
                     );
-                    for m in &ms {
-                        t.row(vec![
-                            m.workload.clone(),
-                            m.variant.clone(),
-                            m.scale.clone(),
-                            pipefwd::report::ms(m.seconds),
-                            format!("{:.2}", m.logic_pct),
-                            m.brams.to_string(),
-                            m.max_ii.to_string(),
-                            pipefwd::report::mbps(m.max_bw),
-                            m.launches.to_string(),
-                        ]);
-                    }
-                    print!("{}", t.to_markdown());
+                    std::process::exit(1);
                 }
-                other => fail(&format!("unknown --format `{other}` (table|json)")),
+                return;
+            }
+            match std::fs::read_to_string(&in_path) {
+                Ok(text) => {
+                    let doc = pipefwd::util::json::parse(&text)
+                        .unwrap_or_else(|e| fail(&format!("parsing {in_path}: {e}")));
+                    match format.as_str() {
+                        "json" => print!("{}", doc.to_pretty()),
+                        "table" => {
+                            let ms: Vec<coordinator::Measurement> = doc
+                                .get("measurements")
+                                .and_then(|m| m.as_array())
+                                .unwrap_or_else(|| fail(&format!("{in_path}: no measurements array")))
+                                .iter()
+                                .filter_map(coordinator::Measurement::from_json)
+                                .collect();
+                            let t = measurements_table(&format!("Results sink: {in_path}"), &ms);
+                            print!("{}", t.to_markdown());
+                        }
+                        other => fail(&format!("unknown --format `{other}` (table|json)")),
+                    }
+                }
+                Err(read_err) => {
+                    // the DEFAULT sink file is absent: render from the
+                    // persistent store instead of erroring — restricted to
+                    // the requested scale and estimator, since the store
+                    // accumulates entries across both. An explicitly
+                    // requested --in file, or any error other than
+                    // not-found, still fails: silently substituting store
+                    // data for a named file would hand scripts wrong data.
+                    if in_set || read_err.kind() != std::io::ErrorKind::NotFound {
+                        fail(&format!("reading {in_path}: {read_err}"));
+                    }
+                    // read-only path: open the store only if it already
+                    // exists (no create_dir_all side effect)
+                    let store = (!no_cache)
+                        .then(|| Store::open_existing(Store::resolve_dir(cache_dir.as_deref())).ok())
+                        .flatten()
+                        .unwrap_or_else(|| {
+                            fail(&format!(
+                                "reading {in_path}: {read_err} (run `pipefwd run` first)"
+                            ))
+                        });
+                    let ms =
+                        store.measurements_filtered(coordinator::scale_label(scale), use_des);
+                    if ms.is_empty() {
+                        fail(&format!(
+                            "reading {in_path}: {read_err} (and store {} has no {} {} \
+                             measurements — run `pipefwd run` first)",
+                            store.root().display(),
+                            coordinator::scale_label(scale),
+                            if use_des { "DES" } else { "analytic" },
+                        ));
+                    }
+                    match format.as_str() {
+                        "json" => print!("{}", coordinator::bench_doc(scale, &[], &ms)),
+                        "table" => {
+                            let title = format!(
+                                "Results sink: store {} ({}, {})",
+                                store.root().display(),
+                                coordinator::scale_label(scale),
+                                if use_des { "des" } else { "analytic" },
+                            );
+                            print!("{}", measurements_table(&title, &ms).to_markdown());
+                        }
+                        other => fail(&format!("unknown --format `{other}` (table|json)")),
+                    }
+                }
             }
         }
         "table1" => save(&coordinator::table1(scale), "table1"),
@@ -321,4 +508,146 @@ fn main() {
             std::process::exit(2);
         }
     }
+}
+
+/// Parse the `--experiment` value: `all` or a comma-separated id list.
+fn parse_experiments(s: &str) -> Vec<ExperimentId> {
+    if s.eq_ignore_ascii_case("all") {
+        return ExperimentId::all().to_vec();
+    }
+    s.split(',')
+        .map(|e| {
+            ExperimentId::parse(e.trim())
+                .unwrap_or_else(|| fail(&format!("unknown experiment `{e}` (E1..E7)")))
+        })
+        .collect()
+}
+
+/// Parse `I/N` (1-based) for `--shard`.
+fn parse_shard(s: &str) -> Option<(usize, usize)> {
+    let (i, n) = s.split_once('/')?;
+    let i = i.trim().parse::<usize>().ok()?;
+    let n = n.trim().parse::<usize>().ok()?;
+    (n > 0 && (1..=n).contains(&i)).then_some((i, n))
+}
+
+/// The `report --format table` rendering, shared by the file and store
+/// paths.
+fn measurements_table(
+    title: &str,
+    ms: &[coordinator::Measurement],
+) -> pipefwd::report::Table {
+    let mut t = pipefwd::report::Table::new(
+        title,
+        &[
+            "Benchmark", "Variant", "Scale", "Time (ms)", "Logic (%)", "BRAM", "Max II",
+            "Max BW (MB/s)", "Launches",
+        ],
+    );
+    for m in ms {
+        t.row(vec![
+            m.workload.clone(),
+            m.variant.clone(),
+            m.scale.clone(),
+            pipefwd::report::ms(m.seconds),
+            format!("{:.2}", m.logic_pct),
+            m.brams.to_string(),
+            m.max_ii.to_string(),
+            pipefwd::report::mbps(m.max_bw),
+            m.launches.to_string(),
+        ]);
+    }
+    t
+}
+
+/// `report --diff`: compare two results sinks configuration by
+/// configuration and render a markdown table (readable in a CI job
+/// summary). Returns the number of gate failures: modelled-performance
+/// regressions whose slowdown exceeds `threshold` percent, plus
+/// configurations that vanished from the new sink (silent loss of
+/// coverage — e.g. a variant that started failing validation).
+fn report_diff(old_path: &str, new_path: &str, threshold: f64) -> usize {
+    let load = |path: &str| -> Vec<coordinator::Measurement> {
+        let doc = pipefwd::util::json::read_file(std::path::Path::new(path))
+            .unwrap_or_else(|e| fail(&e));
+        doc.get("measurements")
+            .and_then(|m| m.as_array())
+            .unwrap_or_else(|| fail(&format!("{path}: no measurements array")))
+            .iter()
+            .filter_map(coordinator::Measurement::from_json)
+            .collect()
+    };
+    let old = load(old_path);
+    let new = load(new_path);
+    let mut old_by_key = std::collections::HashMap::new();
+    for m in &old {
+        old_by_key.insert((m.workload.clone(), m.variant.clone(), m.scale.clone()), m);
+    }
+
+    let mut t = pipefwd::report::Table::new(
+        &format!("Modelled-performance diff (threshold {threshold}%)"),
+        &["Benchmark", "Variant", "Scale", "Old (ms)", "New (ms)", "Delta (%)", "Status"],
+    );
+    let mut regressions = 0;
+    let mut added = 0;
+    for m in &new {
+        let key = (m.workload.clone(), m.variant.clone(), m.scale.clone());
+        let Some(o) = old_by_key.get(&key) else {
+            added += 1;
+            continue;
+        };
+        let delta_pct = if o.seconds > 0.0 {
+            (m.seconds / o.seconds - 1.0) * 100.0
+        } else if m.seconds > 0.0 {
+            f64::INFINITY // 0 -> nonzero: unambiguously slower
+        } else {
+            0.0
+        };
+        let status = if delta_pct > threshold {
+            regressions += 1;
+            "REGRESSION"
+        } else if delta_pct < -threshold {
+            "improved"
+        } else {
+            "ok"
+        };
+        t.row(vec![
+            m.workload.clone(),
+            m.variant.clone(),
+            m.scale.clone(),
+            pipefwd::report::ms(o.seconds),
+            pipefwd::report::ms(m.seconds),
+            format!("{delta_pct:+.2}"),
+            status.into(),
+        ]);
+    }
+    // configurations that vanished are a gate failure too: a variant that
+    // silently stopped producing measurements must not pass as "no
+    // regressions"
+    let new_keys: std::collections::HashSet<(String, String, String)> = new
+        .iter()
+        .map(|m| (m.workload.clone(), m.variant.clone(), m.scale.clone()))
+        .collect();
+    let mut removed = 0;
+    for m in &old {
+        if !new_keys.contains(&(m.workload.clone(), m.variant.clone(), m.scale.clone())) {
+            removed += 1;
+            t.row(vec![
+                m.workload.clone(),
+                m.variant.clone(),
+                m.scale.clone(),
+                pipefwd::report::ms(m.seconds),
+                "-".into(),
+                "-".into(),
+                "REMOVED".into(),
+            ]);
+        }
+    }
+    print!("{}", t.to_markdown());
+    println!(
+        "\n{} configuration(s) compared, {regressions} regression(s) > {threshold}%, \
+         {added} new, {removed} removed",
+        t.rows.len() - removed
+    );
+    regressions + removed
 }

@@ -31,6 +31,13 @@ impl Json {
         }
     }
 
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -146,6 +153,39 @@ fn write_escaped(out: &mut String, s: &str) {
         }
     }
     out.push('"');
+}
+
+/// Read and parse a JSON file. IO and parse failures both come back as a
+/// descriptive string naming the path, so callers can treat any failure as
+/// "not a valid document" (the persistent measurement store treats that as
+/// a cache miss).
+pub fn read_file(path: &std::path::Path) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("reading {}: {e}", path.display()))?;
+    parse(&text).map_err(|e| format!("parsing {}: {e}", path.display()))
+}
+
+/// Write a document as canonical pretty JSON via a temp file + rename in
+/// the destination directory, so concurrent writers of the same path never
+/// expose a torn file — readers see either the old bytes or the new bytes.
+pub fn write_file_atomic(path: &std::path::Path, doc: &Json) -> std::io::Result<()> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let dir = path.parent().filter(|p| !p.as_os_str().is_empty());
+    let file = path.file_name().unwrap_or_default().to_string_lossy().to_string();
+    let tmp_name = format!(
+        ".{file}.tmp-{}-{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    );
+    let tmp = match dir {
+        Some(d) => d.join(&tmp_name),
+        None => std::path::PathBuf::from(&tmp_name),
+    };
+    std::fs::write(&tmp, doc.to_pretty())?;
+    std::fs::rename(&tmp, path).inspect_err(|_| {
+        let _ = std::fs::remove_file(&tmp);
+    })
 }
 
 /// Parse a JSON document (the subset this crate writes, plus standard
@@ -373,6 +413,39 @@ mod tests {
         assert!(parse("{").is_err());
         assert!(parse("[1,]").is_err());
         assert!(parse("12 34").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip_is_atomic_and_canonical() {
+        let dir = std::env::temp_dir().join(format!("pipefwd-json-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("doc.json");
+        let doc = Json::Obj(vec![("k".into(), Json::Num(1.5))]);
+        write_file_atomic(&path, &doc).unwrap();
+        assert_eq!(read_file(&path).unwrap(), doc);
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), doc.to_pretty());
+        // overwrite goes through the same rename path
+        let doc2 = Json::Arr(vec![Json::Bool(true)]);
+        write_file_atomic(&path, &doc2).unwrap();
+        assert_eq!(read_file(&path).unwrap(), doc2);
+        // no temp droppings left behind
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter(|e| e.as_ref().unwrap().file_name().to_string_lossy().contains(".tmp-"))
+            .collect();
+        assert!(leftovers.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn read_file_reports_io_and_parse_errors() {
+        let dir = std::env::temp_dir().join(format!("pipefwd-json-err-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(read_file(&dir.join("absent.json")).is_err());
+        let bad = dir.join("bad.json");
+        std::fs::write(&bad, "{ not json").unwrap();
+        assert!(read_file(&bad).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -276,8 +276,23 @@ pub fn run_built_workload(
     scale: Scale,
     cfg: &DeviceConfig,
 ) -> Result<Harness, String> {
+    run_built_workload_with(w, app, scale, cfg, false)
+}
+
+/// [`run_built_workload`] with an explicit estimator choice: `use_des`
+/// swaps the analytic performance model for the discrete-event simulator
+/// (`pipefwd run --des`). Both estimates cache side by side — the engine's
+/// content address includes this flag.
+pub fn run_built_workload_with(
+    w: &dyn Workload,
+    app: &App,
+    scale: Scale,
+    cfg: &DeviceConfig,
+    use_des: bool,
+) -> Result<Harness, String> {
     let mut img = w.image(scale);
     let mut h = Harness::new(app, cfg);
+    h.use_des = use_des;
     w.run(app, &mut img, &mut h).map_err(|e| e.to_string())?;
     w.validate(&img, scale)?;
     Ok(h)

@@ -3,7 +3,9 @@
 //! the serial reference path, and its memoization layer must collapse the
 //! cross-experiment measurement overlap.
 
-use pipefwd::coordinator::{grid, Cell, Engine, ExperimentId};
+use pipefwd::coordinator::{
+    grid, merge_bench_json, shard_cells, Cell, Engine, ExperimentId, Store,
+};
 use pipefwd::sim::device::DeviceConfig;
 use pipefwd::transform::Variant;
 use pipefwd::workloads::Scale;
@@ -49,6 +51,63 @@ fn parallel_engine_bench_json_is_byte_identical() {
     assert_eq!(a, b, "results sink must not depend on scheduling");
     assert!(a.contains("pipefwd-bench-v1"));
     assert!(a.contains("\"workload\""));
+}
+
+/// The PR-2 acceptance proof: one process, eight workers, and a 3-shard
+/// run reassembled by `merge` all emit byte-identical BENCH_PR1.json —
+/// and a second warm-store pass performs zero new simulations.
+#[test]
+fn sharded_run_plus_merge_is_byte_identical_to_serial() {
+    let cfg = DeviceConfig::pac_a10();
+    let scale = Scale::Tiny;
+    let exps = [ExperimentId::E2];
+
+    // `run` (1 process, serial)
+    let serial = Engine::new(cfg.clone(), 1);
+    serial.prewarm(ExperimentId::E2, scale);
+    let a = serial.bench_json(scale, &exps);
+
+    // `run --jobs 8`
+    let parallel = Engine::new(cfg.clone(), 8);
+    parallel.prewarm(ExperimentId::E2, scale);
+    let b = parallel.bench_json(scale, &exps);
+
+    // `run --shard i/3` in three independent store directories + `merge`
+    let dirs: Vec<_> = (1..=3)
+        .map(|i| {
+            let d = std::env::temp_dir()
+                .join(format!("pipefwd-int-{}-shard-{i}", std::process::id()));
+            let _ = std::fs::remove_dir_all(&d);
+            d
+        })
+        .collect();
+    let full = grid(ExperimentId::E2, scale);
+    let mut sharded_cells = 0;
+    for (i, dir) in dirs.iter().enumerate() {
+        let shard = Engine::new(cfg.clone(), 2).with_store(Store::open(dir).unwrap());
+        let slice = shard_cells(&full, i + 1, 3);
+        sharded_cells += slice.len();
+        let _ = shard.run_cells(&slice);
+    }
+    assert_eq!(sharded_cells, full.len(), "3 shards must cover the whole E2 grid");
+    let stores: Vec<Store> = dirs.iter().map(|d| Store::open(d).unwrap()).collect();
+    let c = merge_bench_json(&stores, &exps, scale, &cfg, false).unwrap();
+
+    assert_eq!(a, b, "serial vs --jobs 8 sink diverged");
+    assert_eq!(a, c, "serial vs sharded+merged sink diverged");
+
+    // warm-store rerun: the full grid is answered without one simulation
+    let warm = Engine::new(cfg.clone(), 4).with_store(Store::open(&dirs[0]).unwrap());
+    for s in &stores[1..] {
+        warm.store().unwrap().merge_from(s).unwrap();
+    }
+    let _ = warm.run_cells(&full);
+    assert_eq!(warm.simulations(), 0, "warm store must answer the entire grid");
+    assert_eq!(warm.bench_json(scale, &exps), a, "warm rerun sink diverged");
+
+    for d in &dirs {
+        let _ = std::fs::remove_dir_all(d);
+    }
 }
 
 #[test]

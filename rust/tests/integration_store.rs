@@ -1,0 +1,162 @@
+//! PR-2 store integration: the persistent content-addressed measurement
+//! store must make warm reruns free (zero new simulations), tolerate
+//! corrupted entries as misses, and survive concurrent writers — and a
+//! sharded run merged back together must reproduce the serial results
+//! sink byte for byte (see also `integration_engine.rs`).
+
+use pipefwd::coordinator::store::{key_hex, STORE_SCHEMA};
+use pipefwd::coordinator::{
+    grid, merge_bench_json, shard_cells, Cell, Engine, ExperimentId, Store,
+};
+use pipefwd::sim::device::DeviceConfig;
+use pipefwd::transform::Variant;
+use pipefwd::workloads::Scale;
+use std::path::PathBuf;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pipefwd-int-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Same reduced grid as the engine integration test: three workloads x
+/// three variants at Tiny scale plus an infeasible NW replication cell.
+fn reduced_grid() -> Vec<Cell> {
+    let mut cells = vec![];
+    for name in ["fw", "hotspot", "mis"] {
+        cells.push(Cell::new(name, Variant::Baseline, Scale::Tiny));
+        cells.push(Cell::new(name, Variant::FeedForward { depth: 1 }, Scale::Tiny));
+        cells.push(Cell::new(name, Variant::MxCx { parts: 2, depth: 1 }, Scale::Tiny));
+    }
+    cells.push(Cell::new("nw", Variant::MxCx { parts: 2, depth: 1 }, Scale::Tiny));
+    cells
+}
+
+#[test]
+fn warm_store_rerun_does_zero_simulations() {
+    let dir = tmp_dir("warm");
+    let cells = reduced_grid();
+
+    let cold = Engine::new(DeviceConfig::pac_a10(), 4).with_store(Store::open(&dir).unwrap());
+    let first = cold.run_cells(&cells);
+    assert_eq!(cold.simulations(), 9, "9 feasible unique configs simulate on a cold store");
+    assert_eq!(cold.store_hits(), 0);
+    assert_eq!(cold.store().unwrap().len(), 9, "every result persisted");
+
+    // a fresh process (new engine, same directory) re-running the same
+    // grid must be answered entirely by the store
+    let warm = Engine::new(DeviceConfig::pac_a10(), 4).with_store(Store::open(&dir).unwrap());
+    let second = warm.run_cells(&cells);
+    assert_eq!(warm.simulations(), 0, "warm rerun must not simulate anything");
+    assert_eq!(warm.store_hits(), 9);
+    assert_eq!(first, second, "store round-trip must preserve results exactly");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_store_entries_are_resimulated_not_fatal() {
+    let dir = tmp_dir("corrupt");
+    let cells = reduced_grid();
+    {
+        let e = Engine::new(DeviceConfig::pac_a10(), 2).with_store(Store::open(&dir).unwrap());
+        let _ = e.run_cells(&cells);
+    }
+    // vandalize every entry: truncate one, garble the rest
+    let entries = dir.join("entries");
+    for (i, f) in std::fs::read_dir(&entries).unwrap().enumerate() {
+        let path = f.unwrap().path();
+        if i == 0 {
+            let text = std::fs::read_to_string(&path).unwrap();
+            std::fs::write(&path, &text[..text.len() / 3]).unwrap();
+        } else {
+            std::fs::write(&path, "garbage{{{").unwrap();
+        }
+    }
+    let e = Engine::new(DeviceConfig::pac_a10(), 2).with_store(Store::open(&dir).unwrap());
+    let results = e.run_cells(&cells);
+    assert_eq!(e.store_hits(), 0, "corrupt entries must read as misses");
+    assert_eq!(e.simulations(), 9, "every config re-simulates");
+    // the re-simulated results match an uncached reference run exactly
+    let reference = Engine::new(DeviceConfig::pac_a10(), 2).run_cells(&cells);
+    assert_eq!(results, reference);
+    // and the rewritten entries are valid again
+    let rewarmed = Engine::new(DeviceConfig::pac_a10(), 2).with_store(Store::open(&dir).unwrap());
+    let _ = rewarmed.run_cells(&cells);
+    assert_eq!(rewarmed.simulations(), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn schema_bump_invalidates_all_entries() {
+    let dir = tmp_dir("schema");
+    let cells = reduced_grid();
+    {
+        let e = Engine::new(DeviceConfig::pac_a10(), 2).with_store(Store::open(&dir).unwrap());
+        let _ = e.run_cells(&cells);
+    }
+    // rewrite every entry as if an older store version had produced it
+    for f in std::fs::read_dir(dir.join("entries")).unwrap() {
+        let path = f.unwrap().path();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, text.replace(STORE_SCHEMA, "pipefwd-store-v0")).unwrap();
+    }
+    let e = Engine::new(DeviceConfig::pac_a10(), 2).with_store(Store::open(&dir).unwrap());
+    let _ = e.run_cells(&cells);
+    assert_eq!(e.store_hits(), 0, "old-schema entries must not be served");
+    assert_eq!(e.simulations(), 9);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn concurrent_engines_on_one_store_lose_no_records() {
+    let dir = tmp_dir("concurrent-engines");
+    let cells = reduced_grid();
+    std::thread::scope(|s| {
+        for _ in 0..3 {
+            let dir = &dir;
+            let cells = &cells;
+            s.spawn(move || {
+                let e = Engine::new(DeviceConfig::pac_a10(), 2)
+                    .with_store(Store::open(dir).unwrap());
+                let _ = e.run_cells(cells);
+            });
+        }
+    });
+    let store = Store::open(&dir).unwrap();
+    assert_eq!(store.len(), 9, "atomic renames must not lose or duplicate entries");
+    for key in store.keys() {
+        assert!(store.get(key).is_some(), "entry {} unreadable", key_hex(key));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn merge_reports_missing_shards_instead_of_emitting_a_partial_sink() {
+    let d1 = tmp_dir("partial-1");
+    let d2 = tmp_dir("partial-2");
+    let cfg = DeviceConfig::pac_a10();
+    let cells = grid(ExperimentId::E2, Scale::Tiny);
+    // run shards 1 and 2 of 3, leave shard 3 missing
+    for (i, dir) in [(1usize, &d1), (2, &d2)] {
+        let e = Engine::new(cfg.clone(), 2).with_store(Store::open(dir).unwrap());
+        let _ = e.run_cells(&shard_cells(&cells, i, 3));
+    }
+    let stores = [Store::open(&d1).unwrap(), Store::open(&d2).unwrap()];
+    let err = merge_bench_json(&stores, &[ExperimentId::E2], Scale::Tiny, &cfg, false)
+        .unwrap_err();
+    assert!(err.contains("missing"), "error must name the gap: {err}");
+    let _ = std::fs::remove_dir_all(&d1);
+    let _ = std::fs::remove_dir_all(&d2);
+}
+
+#[test]
+fn manifest_covers_every_persisted_entry() {
+    let dir = tmp_dir("manifest");
+    let e = Engine::new(DeviceConfig::pac_a10(), 2).with_store(Store::open(&dir).unwrap());
+    let _ = e.run_cells(&reduced_grid());
+    let store = e.store().unwrap();
+    store.write_manifest().unwrap();
+    assert_eq!(store.load_manifest(), Some(store.keys()));
+    let _ = std::fs::remove_dir_all(&dir);
+}
