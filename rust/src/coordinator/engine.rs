@@ -30,13 +30,16 @@
 use super::experiments::{self, Measurement, DEPTHS};
 use super::scale_label;
 use super::store::{fnv1a64, Store};
+use super::tune::{self, TuneSpec};
 use crate::report::{fx, mbps, ms, Table};
 use crate::sim::device::DeviceConfig;
 use crate::sim::exec::ExecOptions;
 use crate::transform::Variant;
 use crate::util::json::Json;
 use crate::workloads::micro::{Micro, MicroSpec};
-use crate::workloads::{by_name, run_built_workload_with, suite, Scale, Workload};
+use crate::workloads::{
+    by_name, is_validation_error, run_built_workload_with, suite, Scale, Workload,
+};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
@@ -159,15 +162,28 @@ pub fn dedup_cells(cells: &[Cell]) -> Vec<Cell> {
 /// Grid construction is deterministic, so independent processes given the
 /// same experiments and scale agree on the partition with no coordination.
 /// Dedups internally (idempotent and O(n), so already-unique input from
-/// [`grid_for`] costs one cheap extra pass).
-pub fn shard_cells(cells: &[Cell], index: usize, count: usize) -> Vec<Cell> {
-    assert!(count > 0 && (1..=count).contains(&index), "shard index {index} of {count}");
-    dedup_cells(cells)
+/// [`grid_for`] costs one cheap extra pass). Out-of-range indices are a
+/// clean `Err`, never a panic — `--shard 0/3` is user input.
+pub fn shard_cells(cells: &[Cell], index: usize, count: usize) -> Result<Vec<Cell>, String> {
+    if count == 0 || !(1..=count).contains(&index) {
+        return Err(format!("bad shard {index}/{count} (expected I/N with 1 <= I <= N)"));
+    }
+    Ok(dedup_cells(cells)
         .into_iter()
         .enumerate()
         .filter(|(j, _)| j % count == index - 1)
         .map(|(_, c)| c)
-        .collect()
+        .collect())
+}
+
+/// Sort + dedup a user-supplied depth list: `--depths 100,100,1` must
+/// render the same sweep table (and sink) as `--depths 1,100` — duplicate
+/// columns and order-dependent output would break the byte-identical
+/// guarantees downstream.
+pub fn normalize_depths(mut depths: Vec<usize>) -> Vec<usize> {
+    depths.sort_unstable();
+    depths.dedup();
+    depths
 }
 
 /// The full (deduplicated) grid of a set of experiments at one scale —
@@ -407,6 +423,10 @@ pub struct Engine {
     /// table (`coordinator::store`). `None` = process-local only (PR-1
     /// behavior).
     store: Option<Store>,
+    /// When set, [`Engine::best_ff`] searches the depth ladder through
+    /// `coordinator::tune` instead of sweeping the exhaustive `DEPTHS`
+    /// grid, and [`Engine::depth_sweep`] annotates the tuned choice.
+    tuner: Option<TuneSpec>,
     store_hits: AtomicU64,
     store_errors: AtomicU64,
     simulations: AtomicU64,
@@ -420,6 +440,7 @@ impl Engine {
             use_des: false,
             cache: MeasureCache::new(),
             store: None,
+            tuner: None,
             store_hits: AtomicU64::new(0),
             store_errors: AtomicU64::new(0),
             simulations: AtomicU64::new(0),
@@ -437,6 +458,17 @@ impl Engine {
     pub fn with_des(mut self, use_des: bool) -> Engine {
         self.use_des = use_des;
         self
+    }
+
+    /// Attach a depth autotuner: `best_ff` searches instead of sweeping,
+    /// and the depth-sweep table reports the tuned choice per benchmark.
+    pub fn with_tuner(mut self, spec: TuneSpec) -> Engine {
+        self.tuner = Some(spec);
+        self
+    }
+
+    pub fn tuner(&self) -> Option<TuneSpec> {
+        self.tuner
     }
 
     pub fn store(&self) -> Option<&Store> {
@@ -494,7 +526,9 @@ impl Engine {
     ) -> Result<Measurement, String> {
         let app = match w.build(variant) {
             Ok(app) => app,
-            Err(e) => return Err(e.to_string()),
+            // feasibility-class: searches may skip these like validation
+            // failures (see workloads::INFEASIBLE_PREFIX)
+            Err(e) => return Err(format!("{}{e}", crate::workloads::INFEASIBLE_PREFIX)),
         };
         let key = content_key(w.name(), &app, scale, &self.cfg, self.use_des);
         if let Some(r) = self.cache.get_or_claim(key) {
@@ -521,27 +555,41 @@ impl Engine {
         result
     }
 
-    /// Best feed-forward measurement across the paper's depth sweep.
+    /// Best feed-forward measurement across the paper's depth sweep —
+    /// or, when a tuner is attached ([`Engine::with_tuner`]), across a
+    /// budgeted search of the depth ladder instead of the exhaustive
+    /// grid.
+    ///
+    /// Validation-class failures are skipped, exactly as a paper author
+    /// drops an invalid configuration (NW is only safe below the row
+    /// width — see `workloads::nw`); any *other* error class is a real
+    /// defect and propagates immediately. If no depth yields a valid
+    /// measurement the collected per-depth failures come back as one
+    /// `Err` instead of the historical `Ok(best.unwrap())` panic.
     pub fn best_ff(&self, w: &dyn Workload, scale: Scale) -> Result<Measurement, String> {
+        if let Some(spec) = self.tuner {
+            return tune::best_ff_tuned(self, w, scale, spec);
+        }
         let mut best: Option<Measurement> = None;
+        let mut failures: Vec<String> = vec![];
         for d in DEPTHS {
-            // NW is only safe below the row width (see workloads::nw docs);
-            // the harness surfaces that as a validation error which we skip,
-            // exactly as a paper author would drop an invalid configuration.
             match self.measure(w, Variant::FeedForward { depth: d }, scale) {
                 Ok(m) => {
                     if best.as_ref().map(|b| m.seconds < b.seconds).unwrap_or(true) {
                         best = Some(m);
                     }
                 }
-                Err(e) => {
-                    if d == 1 {
-                        return Err(e); // depth-1 must always work
-                    }
-                }
+                Err(e) if is_validation_error(&e) => failures.push(format!("depth {d}: {e}")),
+                Err(e) => return Err(format!("{} ff depth {d}: {e}", w.name())),
             }
         }
-        Ok(best.unwrap())
+        best.ok_or_else(|| {
+            format!(
+                "{}: no feed-forward depth in {DEPTHS:?} produced a valid measurement:\n  {}",
+                w.name(),
+                failures.join("\n  ")
+            )
+        })
     }
 
     /// Fan a grid of cells out across the worker pool. Results come back
@@ -607,7 +655,16 @@ impl Engine {
         let mut rows = vec![];
         for w in suite() {
             let base = self.measure(w.as_ref(), Variant::Baseline, scale).expect("baseline runs");
-            let ff = self.best_ff(w.as_ref(), scale).expect("feed-forward runs");
+            // best_ff now errors (instead of panicking) when every depth
+            // fails; report and drop the row rather than killing the
+            // whole table
+            let ff = match self.best_ff(w.as_ref(), scale) {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!("table2: skipping {}: {e}", w.name());
+                    continue;
+                }
+            };
             rows.push(experiments::Table2Row { base, ff });
         }
         rows
@@ -755,11 +812,16 @@ impl Engine {
     }
 
     /// Channel-depth sweep over an arbitrary depth list (paper: no
-    /// significant effect at 1/100/1000).
+    /// significant effect at 1/100/1000). With a tuner attached, a final
+    /// column reports the config the budgeted search picked for each
+    /// benchmark — the E4 sweep consuming tuner output.
     pub fn depth_sweep(&self, names: &[&str], scale: Scale, depths: &[usize]) -> Table {
         let mut header: Vec<String> = vec!["Benchmark".to_string()];
         for d in depths {
             header.push(format!("depth {d}"));
+        }
+        if self.tuner.is_some() {
+            header.push("tuned best".to_string());
         }
         let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
         let mut t = Table::new("Channel-depth sweep (feed-forward, seconds)", &header_refs);
@@ -773,8 +835,19 @@ impl Engine {
                             Err(_) => cells.push("invalid".into()),
                         }
                     }
+                    if self.tuner.is_some() {
+                        match self.best_ff(w.as_ref(), scale) {
+                            Ok(m) => cells.push(m.variant.clone()),
+                            Err(_) => cells.push("n/a".into()),
+                        }
+                    }
                 }
-                None => cells.extend(depths.iter().map(|_| "unknown".to_string())),
+                None => {
+                    cells.extend(depths.iter().map(|_| "unknown".to_string()));
+                    if self.tuner.is_some() {
+                        cells.push("unknown".into());
+                    }
+                }
             }
             t.row(cells);
         }
@@ -1040,7 +1113,8 @@ mod tests {
         let unique = dedup_cells(&cells);
         assert_eq!(unique.len(), grid(ExperimentId::E2, Scale::Tiny).len());
         for n in [1usize, 3, 4] {
-            let shards: Vec<Vec<Cell>> = (1..=n).map(|i| shard_cells(&cells, i, n)).collect();
+            let shards: Vec<Vec<Cell>> =
+                (1..=n).map(|i| shard_cells(&cells, i, n).unwrap()).collect();
             let total: usize = shards.iter().map(|s| s.len()).sum();
             assert_eq!(total, unique.len(), "shards must cover the unique grid exactly");
             for (i, s) in shards.iter().enumerate() {
@@ -1053,8 +1127,105 @@ mod tests {
                 }
             }
             // deterministic across calls
-            assert_eq!(shards[0], shard_cells(&cells, 1, n));
+            assert_eq!(shards[0], shard_cells(&cells, 1, n).unwrap());
         }
+    }
+
+    /// `--shard 0/3`, `4/3`, and `1/0` are user input: a clean `Err`,
+    /// never an assert backtrace.
+    #[test]
+    fn shard_bounds_are_rejected_not_asserted() {
+        let cells = grid(ExperimentId::E2, Scale::Tiny);
+        for (i, n) in [(0usize, 3usize), (4, 3), (1, 0), (0, 0)] {
+            let err = shard_cells(&cells, i, n).unwrap_err();
+            assert!(err.contains(&format!("{i}/{n}")), "error must quote the input: {err}");
+        }
+        assert!(shard_cells(&cells, 3, 3).is_ok());
+    }
+
+    #[test]
+    fn normalize_depths_sorts_and_dedups() {
+        assert_eq!(normalize_depths(vec![100, 100, 1]), vec![1, 100]);
+        assert_eq!(normalize_depths(vec![1000, 1, 100]), vec![1, 100, 1000]);
+        assert_eq!(normalize_depths(vec![]), Vec::<usize>::new());
+    }
+
+    /// `--depths 100,100,1` must render the same sweep table as
+    /// `--depths 1,100`: one column per unique depth, ascending.
+    #[test]
+    fn duplicate_depth_sweep_is_deterministic() {
+        let e = Engine::serial(DeviceConfig::pac_a10());
+        let a = e.depth_sweep(&["fw"], Scale::Tiny, &normalize_depths(vec![100, 100, 1]));
+        let b = e.depth_sweep(&["fw"], Scale::Tiny, &[1, 100]);
+        assert_eq!(a.to_markdown(), b.to_markdown());
+        assert_eq!(a.header.len(), 3, "Benchmark + one column per unique depth");
+    }
+
+    /// A workload whose output never matches the reference: every depth
+    /// fails validation, and `best_ff` must collect the per-depth
+    /// failures into one `Err` instead of panicking on `best.unwrap()`.
+    struct AlwaysInvalid;
+
+    impl crate::workloads::Workload for AlwaysInvalid {
+        fn name(&self) -> &'static str {
+            "always_invalid"
+        }
+        fn suite(&self) -> &'static str {
+            "test"
+        }
+        fn dwarf(&self) -> &'static str {
+            "-"
+        }
+        fn pattern(&self) -> &'static str {
+            "-"
+        }
+        fn dataset_desc(&self, _scale: Scale) -> String {
+            "-".into()
+        }
+        fn dominant(&self) -> &'static str {
+            "mis1"
+        }
+        fn kernels(&self) -> Vec<crate::ir::Kernel> {
+            vec![crate::transform::examples::fig2_kernel()]
+        }
+        fn image(&self, _scale: Scale) -> crate::sim::mem::MemoryImage {
+            crate::sim::mem::MemoryImage::new()
+        }
+        fn run(
+            &self,
+            _app: &crate::workloads::App,
+            _img: &mut crate::sim::mem::MemoryImage,
+            _h: &mut crate::workloads::Harness,
+        ) -> Result<(), crate::sim::exec::ExecError> {
+            Ok(())
+        }
+        fn validate(
+            &self,
+            _img: &crate::sim::mem::MemoryImage,
+            _scale: Scale,
+        ) -> Result<(), String> {
+            Err("forced mismatch".into())
+        }
+    }
+
+    #[test]
+    fn best_ff_collects_failures_instead_of_panicking() {
+        let e = Engine::serial(DeviceConfig::pac_a10());
+        let err = e.best_ff(&AlwaysInvalid, Scale::Tiny).unwrap_err();
+        assert!(err.contains("no feed-forward depth"), "{err}");
+        for d in DEPTHS {
+            assert!(err.contains(&format!("depth {d}")), "missing depth {d} in: {err}");
+        }
+        assert!(err.contains("validation"), "{err}");
+    }
+
+    /// NW: deep pipes break validation (past the safe row width) and are
+    /// skipped; depth 1 succeeds and wins.
+    #[test]
+    fn best_ff_skips_validation_failures_and_still_succeeds() {
+        let e = Engine::serial(DeviceConfig::pac_a10());
+        let m = e.best_ff(by_name("nw").unwrap().as_ref(), Scale::Tiny).unwrap();
+        assert_eq!(m.variant, "ff(d1)");
     }
 
     #[test]

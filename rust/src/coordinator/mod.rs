@@ -8,21 +8,26 @@
 //! [`store`] module (PR 2) persists that cache on disk so shards and
 //! successive CI runs share work; [`engine::shard_cells`] +
 //! [`engine::merge_bench_json`] split the grid across processes and
-//! reassemble the byte-identical sink.
+//! reassemble the byte-identical sink. The [`tune`] module (PR 3)
+//! replaces exhaustive depth grids with budgeted search policies
+//! (golden-section / successive halving) whose probes are ordinary
+//! engine measurements — content-addressed, stored, replayable.
 
 pub mod engine;
 pub mod experiments;
 pub mod store;
+pub mod tune;
 
 pub use engine::{
-    bench_doc, content_key, dedup_cells, grid, grid_for, merge_bench_json, resolve_workload,
-    shard_cells, Cell, Engine, ExperimentId,
+    bench_doc, content_key, dedup_cells, grid, grid_for, merge_bench_json, normalize_depths,
+    resolve_workload, shard_cells, Cell, Engine, ExperimentId,
 };
 pub use store::Store;
 pub use experiments::{
     best_ff, depth_sweep, figure4, headline, hotspot_m2c2_bw, intext, measure, micro_family,
     pc_sweep, table1, table2, table2_rows, table3, vector_study, Measurement,
 };
+pub use tune::{run_tune, Policy, TuneConfig, TuneReport, TuneRequest, TuneSpec};
 
 use crate::report::Table;
 use crate::sim::device::DeviceConfig;

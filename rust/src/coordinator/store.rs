@@ -15,7 +15,16 @@
 //!   engine just re-simulates and rewrites it.
 //! * **Stable keys** — entries outlive the process, so the content address
 //!   is FNV-1a over a canonical signature string, not `DefaultHasher`
-//!   (whose output is unspecified across Rust releases).
+//!   (whose output is unspecified across Rust releases). The key shape
+//!   (see `engine::content_signature`) is
+//!   `workload \n scale \n DeviceConfig \n profile/des flags \n
+//!   per-launch-unit transformed IR`, hashed to 64 bits — pipe depth and
+//!   replication factor are part of the IR text, so every probe of the
+//!   PR-3 tuner's depth×replication product space (`coordinator::tune`)
+//!   lands under this same key shape, and a warm store replays an entire
+//!   search with zero simulations. (PR 3 still bumps [`STORE_SCHEMA`] to
+//!   v2: the *record* format changed — error strings gained class
+//!   prefixes — not the key.)
 //! * **Manifest** — `MANIFEST.json` lists every key in sorted order for
 //!   fast external enumeration (CI, tooling). The directory scan remains
 //!   the source of truth; the manifest is advisory and rewritten after
@@ -30,8 +39,11 @@ use std::path::{Path, PathBuf};
 /// Store layout/keying version. Bumping this orphans every existing entry
 /// (old files parse but fail the schema check and read as misses), which is
 /// exactly what a change to the key signature or record format requires.
-/// CI keys its shared cache on this string.
-pub const STORE_SCHEMA: &str = "pipefwd-store-v1";
+/// CI keys its shared cache on this string. v2: error records carry a
+/// class prefix (`validation: ` / `infeasible: `) that `best_ff` and the
+/// PR-3 tuner dispatch on — v1 stores hold unprefixed error strings that
+/// would be misclassified as fatal, so they must read as misses.
+pub const STORE_SCHEMA: &str = "pipefwd-store-v2";
 
 /// Default results directory (overridable via `--cache-dir` /
 /// `PIPEFWD_CACHE_DIR`).
@@ -377,6 +389,26 @@ mod tests {
         assert_eq!(s.measurements_filtered("tiny", false), vec![analytic_tiny]);
         assert_eq!(s.measurements_filtered("tiny", true), vec![des_tiny]);
         assert_eq!(s.measurements().len(), 3, "unfiltered view keeps everything");
+        let _ = std::fs::remove_dir_all(s.root());
+    }
+
+    /// Tuner probes persist like any other measurement: product-space
+    /// variants (deep pipes, replication at depth) round-trip and sort
+    /// canonically next to the classic grid entries.
+    #[test]
+    fn tuner_product_space_entries_roundtrip_and_sort() {
+        let s = tmp_store("tune-space");
+        let mk = |variant: &str| {
+            let mut m = sample_measurement();
+            m.variant = variant.into();
+            m
+        };
+        s.put(1, &Ok(mk("m3c3(d16)")), false).unwrap();
+        s.put(2, &Ok(mk("ff(d512)")), false).unwrap();
+        s.put(3, &Ok(mk("ff(d1)")), false).unwrap();
+        let ms = s.measurements_filtered("tiny", false);
+        let variants: Vec<&str> = ms.iter().map(|m| m.variant.as_str()).collect();
+        assert_eq!(variants, vec!["ff(d1)", "ff(d512)", "m3c3(d16)"]);
         let _ = std::fs::remove_dir_all(s.root());
     }
 

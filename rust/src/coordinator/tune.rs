@@ -1,0 +1,754 @@
+//! Depth×replication autotuner (the PR-3 tentpole).
+//!
+//! The paper picks pipe depth by exhaustively sweeping {1, 100, 1000} per
+//! kernel (§V, the Fig. 4-style sweeps). This module replaces the
+//! exhaustive grid with budgeted search policies over the
+//! (pipe depth, replication factor) configuration space, the ROADMAP's
+//! "depth autotuning" item (cf. MKPipe's per-pipeline parameter search,
+//! arXiv:2002.01614, and the per-kernel factor search of
+//! arXiv:2208.11890):
+//!
+//! * [`GoldenSection`] — golden-section search over the log-spaced
+//!   [`DEPTH_LADDER`], exploiting the (empirically) unimodal
+//!   time-vs-depth curve; with replication enabled it finishes with a
+//!   coordinate-descent pass over the replication factors at the chosen
+//!   depth.
+//! * [`SuccessiveHalving`] — successive halving over the full
+//!   depth×replication product space, using cheaper dataset scales as the
+//!   low-fidelity rungs (arms are ranked at `tiny` before the survivors
+//!   are re-measured at the target scale).
+//!
+//! Every probe goes through [`Engine::measure`], so it is
+//! content-addressed and lands in the persistent store: a warm-store
+//! rerun replays the whole search with **zero simulations** and a
+//! byte-identical [`TuneReport`] (`tests/integration_tune.rs` proves it).
+//! The budget caps the number of distinct probes — on a cold store, the
+//! maximum number of simulations a search may spend.
+
+use super::engine::{resolve_workload, Engine};
+use super::experiments::Measurement;
+use super::scale_label;
+use crate::report::{fx, ms, pct, Table};
+use crate::transform::Variant;
+use crate::util::json::Json;
+use crate::workloads::{is_infeasible_error, is_validation_error, Scale, Workload};
+use std::collections::HashMap;
+
+/// Candidate pipe depths: log-spaced, bracketing the paper's {1, 100,
+/// 1000} sweep. Golden-section searches over the *index* of this ladder
+/// (log-depth), so the unimodality assumption is about the ladder, not
+/// raw depth values.
+pub const DEPTH_LADDER: [usize; 11] = [1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024];
+
+/// Candidate replication factors (`1` = plain feed-forward; the paper's
+/// producer/consumer sweep plateaus at 2×2 and explores up to 4×4).
+pub const PART_LADDER: [usize; 4] = [1, 2, 3, 4];
+
+/// One point of the tuner's configuration space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TuneConfig {
+    pub depth: usize,
+    /// Replication factor: 1 = feed-forward, R>1 = MxCx with R parts.
+    pub parts: usize,
+}
+
+impl TuneConfig {
+    pub fn variant(self) -> Variant {
+        if self.parts <= 1 {
+            Variant::FeedForward { depth: self.depth }
+        } else {
+            Variant::MxCx { parts: self.parts, depth: self.depth }
+        }
+    }
+
+    pub fn label(self) -> String {
+        self.variant().label()
+    }
+}
+
+/// Which search policy drives the probes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    Golden,
+    Sh,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s {
+            "golden" => Some(Policy::Golden),
+            "sh" => Some(Policy::Sh),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Policy::Golden => "golden",
+            Policy::Sh => "sh",
+        }
+    }
+}
+
+/// Tuner attachment for [`Engine`]: when set, `Engine::best_ff` searches
+/// the depth ladder instead of sweeping the exhaustive `DEPTHS` grid, and
+/// `Engine::depth_sweep` annotates each benchmark with the tuned choice.
+#[derive(Debug, Clone, Copy)]
+pub struct TuneSpec {
+    pub policy: Policy,
+    pub budget: usize,
+}
+
+/// The configuration space one search runs over.
+pub struct Space {
+    pub depths: Vec<usize>,
+    pub parts: Vec<usize>,
+    /// The scale the tuner optimizes for (low-fidelity rungs may probe
+    /// cheaper scales, but "best" always means best at this one).
+    pub scale: Scale,
+}
+
+impl Space {
+    pub fn new(scale: Scale, replication: bool) -> Space {
+        Space {
+            depths: DEPTH_LADDER.to_vec(),
+            parts: if replication { PART_LADDER.to_vec() } else { vec![1] },
+            scale,
+        }
+    }
+
+    /// The full product space in deterministic order (parts-major, so a
+    /// strided subsample keeps depth coverage within every factor).
+    pub fn configs(&self) -> Vec<TuneConfig> {
+        let mut out = vec![];
+        for &parts in &self.parts {
+            for &depth in &self.depths {
+                out.push(TuneConfig { depth, parts });
+            }
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.depths.len() * self.parts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.depths.is_empty() || self.parts.is_empty()
+    }
+}
+
+/// Budgeted probe channel between a policy and the engine. Each distinct
+/// `(config, scale)` pair costs one unit of budget (one simulation on a
+/// cold store); repeats are memoized and free. Validation- and
+/// feasibility-class failures describe the *configuration* and are
+/// recorded as `None` — a policy treats them as infinitely slow and
+/// searches away from them. Any other error class is a real defect: it
+/// stops the search ([`Probe::fatal`]) and the driver propagates it.
+pub struct Probe<'a> {
+    engine: &'a Engine,
+    workload: &'a dyn Workload,
+    target: Scale,
+    budget: usize,
+    spent: usize,
+    seen: HashMap<(usize, usize, &'static str), Option<f64>>,
+    failures: Vec<(String, String)>,
+    fatal: Option<String>,
+    best: Option<(TuneConfig, f64)>,
+}
+
+impl<'a> Probe<'a> {
+    pub fn new(
+        engine: &'a Engine,
+        workload: &'a dyn Workload,
+        target: Scale,
+        budget: usize,
+    ) -> Probe<'a> {
+        Probe {
+            engine,
+            workload,
+            target,
+            budget,
+            spent: 0,
+            seen: HashMap::new(),
+            failures: vec![],
+            fatal: None,
+            best: None,
+        }
+    }
+
+    /// Modelled seconds of `c` at `scale`, distinguishing the two
+    /// non-answers: outer `None` = budget exhausted (the search must
+    /// stop), `Some(None)` = the measurement failed (infinitely slow —
+    /// search away from it).
+    pub fn try_at(&mut self, c: TuneConfig, scale: Scale) -> Option<Option<f64>> {
+        let key = (c.depth, c.parts, scale_label(scale));
+        if let Some(v) = self.seen.get(&key) {
+            return Some(*v);
+        }
+        if self.exhausted() {
+            return None;
+        }
+        self.spent += 1;
+        let v = match self.engine.measure(self.workload, c.variant(), scale) {
+            Ok(m) => Some(m.seconds),
+            Err(e) if is_validation_error(&e) || is_infeasible_error(&e) => {
+                self.failures.push((format!("{}@{}", c.label(), scale_label(scale)), e));
+                None
+            }
+            Err(e) => {
+                // a real defect, not a property of this configuration:
+                // stop the search and let the driver surface it
+                self.fatal = Some(format!("{}@{}: {e}", c.label(), scale_label(scale)));
+                return None;
+            }
+        };
+        self.seen.insert(key, v);
+        if scale == self.target {
+            if let Some(s) = v {
+                if self.best.map(|(_, b)| s < b).unwrap_or(true) {
+                    self.best = Some((c, s));
+                }
+            }
+        }
+        Some(v)
+    }
+
+    /// Modelled seconds of `c` at `scale`; `None` if the measurement
+    /// failed *or* the budget is exhausted (check [`Probe::exhausted`]).
+    pub fn at(&mut self, c: TuneConfig, scale: Scale) -> Option<f64> {
+        self.try_at(c, scale).flatten()
+    }
+
+    /// [`Probe::at`] the target scale.
+    pub fn target(&mut self, c: TuneConfig) -> Option<f64> {
+        self.at(c, self.target)
+    }
+
+    pub fn target_scale(&self) -> Scale {
+        self.target
+    }
+
+    /// No further probes will be answered: the budget ran out or a fatal
+    /// (non-configuration) error stopped the search.
+    pub fn exhausted(&self) -> bool {
+        self.spent >= self.budget || self.fatal.is_some()
+    }
+
+    /// The defect that stopped the search, if any.
+    pub fn fatal(&self) -> Option<&str> {
+        self.fatal.as_deref()
+    }
+
+    /// Distinct probes spent so far (= max simulations on a cold store).
+    pub fn spent(&self) -> usize {
+        self.spent
+    }
+
+    /// Best target-scale measurement seen so far (first-probed wins ties,
+    /// so the outcome is deterministic).
+    pub fn best(&self) -> Option<(TuneConfig, f64)> {
+        self.best
+    }
+
+    pub fn take_failures(&mut self) -> Vec<(String, String)> {
+        std::mem::take(&mut self.failures)
+    }
+}
+
+/// A pluggable search policy: decides *where* to probe; the chosen config
+/// is whatever the probe recorded as best, so even a misbehaving policy
+/// cannot report a config it never measured.
+pub trait SearchPolicy {
+    fn name(&self) -> &'static str;
+    fn search(&self, probe: &mut Probe<'_>, space: &Space);
+}
+
+pub fn policy_for(p: Policy) -> Box<dyn SearchPolicy> {
+    match p {
+        Policy::Golden => Box::new(GoldenSection),
+        Policy::Sh => Box::new(SuccessiveHalving),
+    }
+}
+
+/// Golden-section search over the indices `0..n` of a discrete (assumed
+/// unimodal) cost curve. `f` returns the cost at an index, or `None` once
+/// the probe budget is exhausted; failed configurations should come back
+/// as `Some(f64::INFINITY)` so the bracket moves away from them. Probes
+/// strictly fewer than `n` distinct points for `n > 5`.
+fn golden_search(n: usize, f: &mut dyn FnMut(usize) -> Option<f64>) {
+    if n == 0 {
+        return;
+    }
+    const INV_PHI: f64 = 0.618_033_988_749_894_8;
+    let (mut lo, mut hi) = (0usize, n - 1);
+    while hi - lo > 3 {
+        let step = ((hi - lo) as f64 * INV_PHI).round() as usize;
+        let (x1, mut x2) = (hi - step, lo + step);
+        if x1 == x2 {
+            x2 += 1; // a span of 4 rounds both interior points together
+        }
+        // short-circuit between the pair: a probe after exhaustion is waste
+        let Some(f1) = f(x1) else { return };
+        let Some(f2) = f(x2) else { return };
+        if f1 <= f2 {
+            hi = x2;
+        } else {
+            lo = x1;
+        }
+    }
+    for i in lo..=hi {
+        if f(i).is_none() {
+            return;
+        }
+    }
+}
+
+/// Golden-section over log-depth (the [`DEPTH_LADDER`] index). Depth
+/// curves are unimodal in the model — deeper pipes only add BRAM/area —
+/// so the bracket converges on the minimum with O(log n) probes. When the
+/// space includes replication factors, a coordinate-descent pass tries
+/// each factor at the chosen depth.
+pub struct GoldenSection;
+
+impl SearchPolicy for GoldenSection {
+    fn name(&self) -> &'static str {
+        "golden"
+    }
+
+    fn search(&self, probe: &mut Probe<'_>, space: &Space) {
+        if space.is_empty() {
+            return;
+        }
+        let depths = &space.depths;
+        let target = probe.target_scale();
+        golden_search(depths.len(), &mut |i| {
+            probe
+                .try_at(TuneConfig { depth: depths[i], parts: 1 }, target)
+                .map(|v| v.unwrap_or(f64::INFINITY))
+        });
+        if space.parts.len() > 1 {
+            if let Some((c, _)) = probe.best() {
+                for &parts in &space.parts {
+                    if parts != c.parts && !probe.exhausted() {
+                        probe.target(TuneConfig { depth: c.depth, parts });
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The low-to-high fidelity ladder ending at the target scale.
+fn fidelity_rungs(target: Scale) -> Vec<Scale> {
+    match target {
+        Scale::Tiny => vec![Scale::Tiny],
+        Scale::Small => vec![Scale::Tiny, Scale::Small],
+        Scale::Paper => vec![Scale::Tiny, Scale::Small, Scale::Paper],
+    }
+}
+
+/// Successive halving over the depth×replication product space: rank all
+/// arms at the cheapest scale, keep the top half, re-rank the survivors
+/// one rung up, and so on until the target scale. When the budget cannot
+/// afford the full arm set, the first rung evenly subsamples the space
+/// (deterministic stride), trading coverage for feasibility.
+pub struct SuccessiveHalving;
+
+impl SearchPolicy for SuccessiveHalving {
+    fn name(&self) -> &'static str {
+        "sh"
+    }
+
+    fn search(&self, probe: &mut Probe<'_>, space: &Space) {
+        if space.is_empty() {
+            return;
+        }
+        let rungs = fidelity_rungs(probe.target_scale());
+        let mut arms = space.configs();
+        // budget share of the first rung: the halving tail costs about as
+        // much again, so cap the entry set at budget / rungs
+        let cap = (probe.budget / rungs.len()).max(2);
+        if arms.len() > cap {
+            let stride = arms.len().div_ceil(cap);
+            arms = arms.into_iter().step_by(stride).collect();
+        }
+        for (r, &scale) in rungs.iter().enumerate() {
+            let mut ranked: Vec<(TuneConfig, f64)> = vec![];
+            for &c in &arms {
+                if probe.exhausted() {
+                    break;
+                }
+                if let Some(s) = probe.at(c, scale) {
+                    ranked.push((c, s));
+                }
+            }
+            // deterministic rank: seconds, then the config itself
+            ranked.sort_by(|a, b| {
+                a.1.total_cmp(&b.1)
+                    .then(a.0.parts.cmp(&b.0.parts))
+                    .then(a.0.depth.cmp(&b.0.depth))
+            });
+            let keep =
+                if r + 1 < rungs.len() { ranked.len().div_ceil(2).max(1) } else { ranked.len() };
+            arms = ranked.into_iter().take(keep).map(|(c, _)| c).collect();
+        }
+        // make sure every surviving arm was measured at the target scale
+        // (free when the last rung already was the target)
+        for c in arms {
+            if probe.exhausted() {
+                break;
+            }
+            probe.target(c);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Driver + report
+// ---------------------------------------------------------------------------
+
+/// One `pipefwd tune` invocation.
+pub struct TuneRequest {
+    pub benches: Vec<String>,
+    pub policy: Policy,
+    pub budget: usize,
+    pub replication: bool,
+    pub scale: Scale,
+    /// Also compute the exhaustive best over the full space (the regret
+    /// column). Budget-exempt: it is the *reference* the search is judged
+    /// against, content-addressed like every probe, so it is free on a
+    /// warm store.
+    pub reference: bool,
+}
+
+/// Per-benchmark tuning outcome.
+pub struct TuneOutcome {
+    pub workload: String,
+    /// Best config found by the search and its modelled seconds.
+    pub chosen: Option<(TuneConfig, f64)>,
+    /// Feed-forward depth-1 seconds (the speedup-vs-depth-1 reference).
+    pub ff1_seconds: Option<f64>,
+    /// Distinct probes the search spent (max simulations on a cold store).
+    pub probes: usize,
+    /// Size of the full product space at the target scale.
+    pub space: usize,
+    /// Exhaustive best over the full space (when requested).
+    pub exhaustive: Option<(TuneConfig, f64)>,
+    /// Failed probes: (config@scale, error).
+    pub failures: Vec<(String, String)>,
+}
+
+impl TuneOutcome {
+    pub fn speedup_vs_ff1(&self) -> Option<f64> {
+        match (self.ff1_seconds, self.chosen) {
+            (Some(ff1), Some((_, s))) if s > 0.0 => Some(ff1 / s),
+            _ => None,
+        }
+    }
+
+    /// Fractional regret vs the exhaustive best (0.0 = matched it).
+    pub fn regret_frac(&self) -> Option<f64> {
+        match (self.exhaustive, self.chosen) {
+            (Some((_, e)), Some((_, s))) if e > 0.0 => Some(s / e - 1.0),
+            _ => None,
+        }
+    }
+}
+
+/// The `tune` command's product: one row per benchmark, rendered through
+/// the existing `report` table machinery and serialized to `TUNE.json`.
+/// Deliberately excludes live counters (simulations, store hits — those
+/// go to stderr): the document is byte-identical between a cold run and a
+/// warm-store rerun.
+pub struct TuneReport {
+    pub policy: Policy,
+    pub budget: usize,
+    pub replication: bool,
+    pub scale: Scale,
+    pub outcomes: Vec<TuneOutcome>,
+}
+
+impl TuneReport {
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "TuneReport: {} policy, budget {}, {} scale{}",
+                self.policy.label(),
+                self.budget,
+                scale_label(self.scale),
+                if self.replication { ", with replication" } else { "" }
+            ),
+            &[
+                "Benchmark",
+                "Chosen",
+                "Time (ms)",
+                "vs ff(d1)",
+                "Probes",
+                "Space",
+                "Exhaustive best",
+                "Regret (%)",
+            ],
+        );
+        for o in &self.outcomes {
+            t.row(vec![
+                o.workload.clone(),
+                o.chosen.map(|(c, _)| c.label()).unwrap_or_else(|| "n/a".into()),
+                o.chosen.map(|(_, s)| ms(s)).unwrap_or_else(|| "-".into()),
+                o.speedup_vs_ff1().map(fx).unwrap_or_else(|| "-".into()),
+                o.probes.to_string(),
+                o.space.to_string(),
+                o.exhaustive.map(|(c, _)| c.label()).unwrap_or_else(|| "-".into()),
+                o.regret_frac().map(pct).unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        t
+    }
+
+    pub fn to_json(&self) -> Json {
+        let outcomes = self
+            .outcomes
+            .iter()
+            .map(|o| {
+                Json::Obj(vec![
+                    ("workload".into(), Json::Str(o.workload.clone())),
+                    (
+                        "chosen".into(),
+                        o.chosen.map(|(c, _)| Json::Str(c.label())).unwrap_or(Json::Null),
+                    ),
+                    (
+                        "seconds".into(),
+                        o.chosen.map(|(_, s)| Json::Num(s)).unwrap_or(Json::Null),
+                    ),
+                    (
+                        "ff1_seconds".into(),
+                        o.ff1_seconds.map(Json::Num).unwrap_or(Json::Null),
+                    ),
+                    ("probes".into(), Json::Num(o.probes as f64)),
+                    ("space".into(), Json::Num(o.space as f64)),
+                    (
+                        "exhaustive".into(),
+                        o.exhaustive.map(|(c, _)| Json::Str(c.label())).unwrap_or(Json::Null),
+                    ),
+                    (
+                        "exhaustive_seconds".into(),
+                        o.exhaustive.map(|(_, s)| Json::Num(s)).unwrap_or(Json::Null),
+                    ),
+                    (
+                        "failures".into(),
+                        Json::Arr(
+                            o.failures
+                                .iter()
+                                .map(|(c, e)| {
+                                    Json::Obj(vec![
+                                        ("config".into(), Json::Str(c.clone())),
+                                        ("error".into(), Json::Str(e.clone())),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("schema".into(), Json::Str("pipefwd-tune-v1".into())),
+            ("policy".into(), Json::Str(self.policy.label().into())),
+            ("budget".into(), Json::Num(self.budget as f64)),
+            ("replication".into(), Json::Bool(self.replication)),
+            ("scale".into(), Json::Str(scale_label(self.scale).into())),
+            ("workloads".into(), Json::Arr(outcomes)),
+        ])
+    }
+
+    /// Total probes spent across all benchmarks.
+    pub fn total_probes(&self) -> usize {
+        self.outcomes.iter().map(|o| o.probes).sum()
+    }
+}
+
+/// Exhaustive best over the full space at the target scale (the regret
+/// reference; also what `--tuned` is benchmarked against in tests).
+pub fn exhaustive_best(
+    engine: &Engine,
+    w: &dyn Workload,
+    space: &Space,
+) -> Option<(TuneConfig, f64)> {
+    let mut best: Option<(TuneConfig, f64)> = None;
+    for c in space.configs() {
+        if let Ok(m) = engine.measure(w, c.variant(), space.scale) {
+            if best.map(|(_, b)| m.seconds < b).unwrap_or(true) {
+                best = Some((c, m.seconds));
+            }
+        }
+    }
+    best
+}
+
+/// Run one tuning request end to end through an engine. Probes are
+/// content-addressed measurements, so attaching a store makes warm reruns
+/// replay the search with zero simulations.
+pub fn run_tune(engine: &Engine, req: &TuneRequest) -> Result<TuneReport, String> {
+    if req.benches.is_empty() {
+        return Err("tune: no benchmarks given (--benches a,b,c)".into());
+    }
+    let space = Space::new(req.scale, req.replication);
+    let policy = policy_for(req.policy);
+    let mut outcomes = vec![];
+    for name in &req.benches {
+        let w = resolve_workload(name)
+            .ok_or_else(|| format!("unknown benchmark `{name}` (see `pipefwd list`)"))?;
+        let mut probe = Probe::new(engine, w.as_ref(), req.scale, req.budget);
+        policy.search(&mut probe, &space);
+        if let Some(e) = probe.fatal() {
+            return Err(format!("tune {name}: {e}"));
+        }
+        let probes = probe.spent();
+        let chosen = probe.best();
+        let failures = probe.take_failures();
+        // the report's reference columns are budget-exempt (see
+        // TuneRequest::reference); both are memoized/store-backed probes
+        let ff1 = engine
+            .measure(w.as_ref(), Variant::FeedForward { depth: 1 }, req.scale)
+            .ok()
+            .map(|m| m.seconds);
+        let exhaustive =
+            if req.reference { exhaustive_best(engine, w.as_ref(), &space) } else { None };
+        outcomes.push(TuneOutcome {
+            workload: name.clone(),
+            chosen,
+            ff1_seconds: ff1,
+            probes,
+            space: space.len(),
+            exhaustive,
+            failures,
+        });
+    }
+    Ok(TuneReport {
+        policy: req.policy,
+        budget: req.budget,
+        replication: req.replication,
+        scale: req.scale,
+        outcomes,
+    })
+}
+
+/// Tuner-driven replacement for the exhaustive `Engine::best_ff` depth
+/// sweep: search the depth ladder (feed-forward only — callers of
+/// `best_ff` compare against replication separately) and return the full
+/// measurement of the chosen depth.
+pub fn best_ff_tuned(
+    engine: &Engine,
+    w: &dyn Workload,
+    scale: Scale,
+    spec: TuneSpec,
+) -> Result<Measurement, String> {
+    let space = Space::new(scale, false);
+    let mut probe = Probe::new(engine, w, scale, spec.budget);
+    policy_for(spec.policy).search(&mut probe, &space);
+    if let Some(e) = probe.fatal() {
+        return Err(format!("tuner: {}: {e}", w.name()));
+    }
+    match probe.best() {
+        Some((c, _)) => engine.measure(w, c.variant(), scale),
+        None => {
+            let mut msg = format!(
+                "tuner ({}, budget {}): no feasible feed-forward depth for {}",
+                spec.policy.label(),
+                spec.budget,
+                w.name()
+            );
+            for (c, e) in probe.take_failures() {
+                msg.push_str(&format!("\n  {c}: {e}"));
+            }
+            Err(msg)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parsing_roundtrips() {
+        for p in [Policy::Golden, Policy::Sh] {
+            assert_eq!(Policy::parse(p.label()), Some(p));
+        }
+        assert_eq!(Policy::parse("exhaustive"), None);
+    }
+
+    #[test]
+    fn config_labels_match_variants() {
+        assert_eq!(TuneConfig { depth: 16, parts: 1 }.label(), "ff(d16)");
+        assert_eq!(TuneConfig { depth: 4, parts: 3 }.label(), "m3c3(d4)");
+    }
+
+    #[test]
+    fn space_is_the_product_of_ladders() {
+        let s = Space::new(Scale::Tiny, true);
+        assert_eq!(s.len(), DEPTH_LADDER.len() * PART_LADDER.len());
+        assert_eq!(s.configs().len(), s.len());
+        let ff_only = Space::new(Scale::Tiny, false);
+        assert_eq!(ff_only.len(), DEPTH_LADDER.len());
+        assert!(ff_only.configs().iter().all(|c| c.parts == 1));
+    }
+
+    /// Golden-section on a synthetic unimodal curve: finds the minimum
+    /// with strictly fewer probes than the exhaustive grid.
+    #[test]
+    fn golden_search_finds_unimodal_minimum_with_fewer_probes() {
+        // V-shaped cost over 11 points, minimum at index 3
+        let cost: Vec<f64> =
+            (0..11).map(|i| ((i as f64) - 3.0).abs() + 1.0).collect();
+        let mut probed = std::collections::BTreeSet::new();
+        golden_search(cost.len(), &mut |i| {
+            probed.insert(i);
+            Some(cost[i])
+        });
+        assert!(probed.contains(&3), "minimum index must be probed: {probed:?}");
+        assert!(
+            probed.len() < cost.len(),
+            "golden must probe strictly fewer than exhaustive ({probed:?})"
+        );
+    }
+
+    /// Failed configurations (infinite cost) push the bracket away.
+    #[test]
+    fn golden_search_avoids_infeasible_tail() {
+        // cost rises then "fails" (NW-style: deep pipes break validation)
+        let cost: Vec<f64> = (0..11)
+            .map(|i| if i >= 6 { f64::INFINITY } else { 1.0 + i as f64 })
+            .collect();
+        let mut probed = std::collections::BTreeSet::new();
+        golden_search(cost.len(), &mut |i| {
+            probed.insert(i);
+            Some(cost[i])
+        });
+        assert!(probed.contains(&0), "must converge onto the feasible minimum");
+    }
+
+    #[test]
+    fn golden_search_stops_when_budget_runs_out() {
+        let mut calls = 0;
+        golden_search(11, &mut |_| {
+            calls += 1;
+            if calls > 2 {
+                None
+            } else {
+                Some(1.0)
+            }
+        });
+        assert_eq!(calls, 3, "search must stop at the first exhausted probe");
+    }
+
+    #[test]
+    fn fidelity_rungs_end_at_the_target() {
+        assert_eq!(fidelity_rungs(Scale::Tiny), vec![Scale::Tiny]);
+        assert_eq!(fidelity_rungs(Scale::Small), vec![Scale::Tiny, Scale::Small]);
+        assert_eq!(
+            fidelity_rungs(Scale::Paper),
+            vec![Scale::Tiny, Scale::Small, Scale::Paper]
+        );
+    }
+}

@@ -22,6 +22,11 @@ ENGINE COMMANDS (parallel, cache-aware, persistent):
                                 --shard computes one disjoint grid slice
   sweep [--depths 1,100,1000]   channel-depth sweep over arbitrary depths
         [--benches fw,hotspot,mis]
+  tune --benches LIST           autotune (pipe depth x replication) per
+       [--policy golden|sh]     workload with a budgeted search instead
+       [--budget 40]            of an exhaustive grid; renders a
+       [--replication]          TuneReport table and writes TUNE.json
+       [--no-ref]               (--out overrides the path)
   merge <dir>...                union shard stores and emit the canonical
                                 BENCH_PR1.json (byte-identical to serial)
   report [--format table|json]  re-render a results sink (default:
@@ -53,8 +58,22 @@ OPTIONS:
   --out PATH       results-sink path for `run`/`sweep`/`merge`
                    (default: BENCH_PR1.json)
   --experiment E   comma-separated experiment ids (E1..E7 or all)
-  --depths LIST    comma-separated pipe depths for `sweep`
-  --benches LIST   comma-separated benchmarks for `sweep`
+  --depths LIST    comma-separated pipe depths for `sweep` (sorted and
+                   deduplicated; duplicate columns would break the
+                   deterministic-output guarantees)
+  --benches LIST   comma-separated benchmarks for `sweep`/`tune`
+                   (validated against the workload registry at parse time)
+  --policy P       search policy for `tune`/`--tuned`: golden
+                   (golden-section over log-depth) or sh (successive
+                   halving over depth x replication, cheap scales first)
+  --budget N       max distinct probes a search may spend (default 40) —
+                   on a cold store, the max simulations
+  --replication    include replication factors m2c2..m4c4 in the tuned
+                   configuration space
+  --no-ref         skip the TuneReport's exhaustive-reference column
+                   (the regret baseline costs the full grid once)
+  --tuned          `run`/`sweep`: let the tuner pick best-ff depths for
+                   the E1/E2/E7 tables and annotate the E4 depth sweep
   --format F       `report` output: table (default) or json
   --in PATH        `report` input file (default: BENCH_PR1.json)
   --diff OLD NEW   `report` diff mode: two results sinks to compare
@@ -95,6 +114,11 @@ fn main() {
     let mut cache_dir: Option<String> = None;
     let mut no_cache = false;
     let mut use_des = false;
+    let mut policy = coordinator::Policy::Golden;
+    let mut budget: usize = 40;
+    let mut replication = false;
+    let mut no_ref = false;
+    let mut tuned = false;
     let mut diff: Option<(String, String)> = None;
     let mut threshold = 5.0_f64;
     let mut positional = vec![];
@@ -120,21 +144,47 @@ fn main() {
             }
             "--depths" => {
                 let v = it.next().unwrap_or_else(|| fail("--depths needs a value"));
-                depths = v
-                    .split(',')
-                    .map(|d| {
-                        d.trim()
-                            .parse::<usize>()
-                            .ok()
-                            .filter(|n| *n > 0)
-                            .unwrap_or_else(|| fail(&format!("bad depth `{d}`")))
-                    })
-                    .collect();
+                // sorted + deduplicated: `--depths 100,100,1` must emit
+                // the same table (and sink) as `--depths 1,100`
+                depths = coordinator::normalize_depths(
+                    v.split(',')
+                        .map(|d| {
+                            d.trim()
+                                .parse::<usize>()
+                                .ok()
+                                .filter(|n| *n > 0)
+                                .unwrap_or_else(|| fail(&format!("bad depth `{d}`")))
+                        })
+                        .collect(),
+                );
             }
             "--benches" => {
                 let v = it.next().unwrap_or_else(|| fail("--benches needs a value"));
                 benches = v.split(',').map(|b| b.trim().to_string()).collect();
+                // fail fast at parse time — an unknown name must not flow
+                // into the engine's grid fan-out
+                for b in &benches {
+                    if coordinator::resolve_workload(b).is_none() {
+                        fail(&format!("unknown benchmark `{b}` (see `pipefwd list`)"));
+                    }
+                }
             }
+            "--policy" => {
+                let v = it.next().unwrap_or_else(|| fail("--policy needs a value"));
+                policy = coordinator::Policy::parse(v)
+                    .unwrap_or_else(|| fail(&format!("unknown policy `{v}` (golden|sh)")));
+            }
+            "--budget" => {
+                let v = it.next().unwrap_or_else(|| fail("--budget needs a value"));
+                budget = v
+                    .parse::<usize>()
+                    .ok()
+                    .filter(|n| *n > 0)
+                    .unwrap_or_else(|| fail(&format!("bad --budget `{v}` (positive integer)")));
+            }
+            "--replication" => replication = true,
+            "--no-ref" => no_ref = true,
+            "--tuned" => tuned = true,
             "--out" => {
                 out_path = it.next().unwrap_or_else(|| fail("--out needs a value")).clone();
                 out_set = true;
@@ -196,6 +246,9 @@ fn main() {
         if let Some(s) = open_store() {
             e = e.with_store(s);
         }
+        if tuned {
+            e = e.with_tuner(coordinator::TuneSpec { policy, budget });
+        }
         e
     };
     let finish_engine = |engine: &Engine| {
@@ -236,7 +289,8 @@ fn main() {
                           was given) — a shard's results have nowhere to go");
                 }
                 let cells = coordinator::grid_for(&exps, scale);
-                let slice = coordinator::shard_cells(&cells, index, count);
+                let slice = coordinator::shard_cells(&cells, index, count)
+                    .unwrap_or_else(|e| fail(&e));
                 let _ = engine.run_cells(&slice);
                 if engine.store_errors() > 0 {
                     fail(&format!(
@@ -317,11 +371,8 @@ fn main() {
             }
         }
         "sweep" => {
-            for b in &benches {
-                if coordinator::resolve_workload(b).is_none() {
-                    fail(&format!("unknown benchmark `{b}` (see `pipefwd list`)"));
-                }
-            }
+            // bench names were validated when `--benches` was parsed; the
+            // default list is registry-known
             let engine = mk_engine(jobs);
             let cells: Vec<coordinator::Cell> = benches
                 .iter()
@@ -338,6 +389,38 @@ fn main() {
             match engine.write_bench_json(std::path::Path::new(&out_path), scale, &[]) {
                 Ok(()) => eprintln!("wrote {out_path}"),
                 Err(e) => fail(&format!("writing {out_path}: {e}")),
+            }
+            finish_engine(&engine);
+        }
+        "tune" => {
+            let engine = mk_engine(jobs);
+            let req = coordinator::TuneRequest {
+                benches: benches.clone(),
+                policy,
+                budget,
+                replication,
+                scale,
+                reference: !no_ref,
+            };
+            let report = coordinator::run_tune(&engine, &req).unwrap_or_else(|e| fail(&e));
+            save(&report.table(), "tune");
+            // the TuneReport artifact deliberately excludes live counters,
+            // so a warm-store rerun is byte-identical to the cold run
+            let tune_path = if out_set { out_path.clone() } else { "TUNE.json".to_string() };
+            match pipefwd::util::json::write_file_atomic(
+                std::path::Path::new(&tune_path),
+                &report.to_json(),
+            ) {
+                Ok(()) => eprintln!(
+                    "wrote {tune_path} ({} bench(es), {} policy, {} probes, \
+                     simulations: {}, store hits: {})",
+                    report.outcomes.len(),
+                    report.policy.label(),
+                    report.total_probes(),
+                    engine.simulations(),
+                    engine.store_hits(),
+                ),
+                Err(e) => fail(&format!("writing {tune_path}: {e}")),
             }
             finish_engine(&engine);
         }
@@ -427,7 +510,10 @@ fn main() {
         "table3" => save(&coordinator::table3(scale, &cfg), "table3"),
         "intext" => save(&coordinator::intext(scale, &cfg), "intext"),
         "sweeps" => {
-            let engine = Engine::new(cfg, jobs);
+            let mut engine = Engine::new(cfg, jobs);
+            if tuned {
+                engine = engine.with_tuner(coordinator::TuneSpec { policy, budget });
+            }
             let trio = ["fw", "hotspot", "mis"];
             save(&engine.depth_sweep(&trio, scale, &[1, 100, 1000]), "depth_sweep");
             save(&engine.pc_sweep(&trio, scale), "pc_sweep");

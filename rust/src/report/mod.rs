@@ -103,6 +103,12 @@ pub fn mbps(bytes_per_s: f64) -> String {
     format!("{:.0}", bytes_per_s / 1e6)
 }
 
+/// Signed percent with two decimals from a fraction (regret/regression
+/// columns): `pct(0.031)` renders `+3.10`.
+pub fn pct(frac: f64) -> String {
+    format!("{:+.2}", frac * 100.0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,5 +135,12 @@ mod tests {
         assert_eq!(fx(123.4), "123");
         assert_eq!(fx(13.84), "13.8");
         assert_eq!(fx(0.96), "0.96");
+    }
+
+    #[test]
+    fn pct_is_signed() {
+        assert_eq!(pct(0.031), "+3.10");
+        assert_eq!(pct(-0.05), "-5.00");
+        assert_eq!(pct(0.0), "+0.00");
     }
 }

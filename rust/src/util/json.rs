@@ -38,6 +38,16 @@ impl Json {
         }
     }
 
+    /// Non-negative integral number as `usize` (counters like the tune
+    /// report's `probes`/`budget` fields); fractional or negative numbers
+    /// are `None`, not truncated.
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= 9.0e15 => Some(*n as usize),
+            _ => None,
+        }
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -400,6 +410,15 @@ mod tests {
         assert_eq!(Json::Num(-3.0).to_compact(), "-3");
         assert_eq!(Json::Num(0.5).to_compact(), "0.5");
         assert_eq!(Json::Num(f64::NAN).to_compact(), "null");
+    }
+
+    #[test]
+    fn as_usize_rejects_fractions_and_negatives() {
+        assert_eq!(Json::Num(40.0).as_usize(), Some(40));
+        assert_eq!(Json::Num(0.0).as_usize(), Some(0));
+        assert_eq!(Json::Num(0.5).as_usize(), None);
+        assert_eq!(Json::Num(-1.0).as_usize(), None);
+        assert_eq!(Json::Str("40".into()).as_usize(), None);
     }
 
     #[test]

@@ -33,6 +33,31 @@ use crate::transform::{
 };
 use std::collections::HashMap;
 
+/// Prefix distinguishing *result-validation* failures (the computed
+/// output diverged from the native reference — an invalid configuration,
+/// like NW past its safe pipe depth) from feasibility and execution
+/// errors. Depth searches may skip validation-class failures exactly as a
+/// paper author drops an invalid configuration; every other error class
+/// is a real defect and must propagate.
+pub const VALIDATION_PREFIX: &str = "validation: ";
+
+/// Is this stringified cell error a validation-class failure?
+pub fn is_validation_error(e: &str) -> bool {
+    e.starts_with(VALIDATION_PREFIX)
+}
+
+/// Prefix for *feasibility*-class failures (the variant cannot be built
+/// for this workload at all — e.g. replication on NW). Applied by
+/// `Engine::measure` where the build error is stringified. Searches over
+/// a configuration space may skip these like validation failures; they
+/// describe the configuration, not a defect.
+pub const INFEASIBLE_PREFIX: &str = "infeasible: ";
+
+/// Is this stringified cell error a feasibility-class failure?
+pub fn is_infeasible_error(e: &str) -> bool {
+    e.starts_with(INFEASIBLE_PREFIX)
+}
+
 /// Dataset scale: `Tiny` matches the AOT artifact shapes (PJRT golden
 /// validation), `Small` is the default experiment size, `Paper` approaches
 /// the paper's dataset sizes (slow under interpretation).
@@ -294,7 +319,7 @@ pub fn run_built_workload_with(
     let mut h = Harness::new(app, cfg);
     h.use_des = use_des;
     w.run(app, &mut img, &mut h).map_err(|e| e.to_string())?;
-    w.validate(&img, scale)?;
+    w.validate(&img, scale).map_err(|e| format!("{VALIDATION_PREFIX}{e}"))?;
     Ok(h)
 }
 

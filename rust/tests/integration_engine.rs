@@ -85,7 +85,7 @@ fn sharded_run_plus_merge_is_byte_identical_to_serial() {
     let mut sharded_cells = 0;
     for (i, dir) in dirs.iter().enumerate() {
         let shard = Engine::new(cfg.clone(), 2).with_store(Store::open(dir).unwrap());
-        let slice = shard_cells(&full, i + 1, 3);
+        let slice = shard_cells(&full, i + 1, 3).expect("valid shard index");
         sharded_cells += slice.len();
         let _ = shard.run_cells(&slice);
     }

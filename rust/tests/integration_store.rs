@@ -140,7 +140,7 @@ fn merge_reports_missing_shards_instead_of_emitting_a_partial_sink() {
     // run shards 1 and 2 of 3, leave shard 3 missing
     for (i, dir) in [(1usize, &d1), (2, &d2)] {
         let e = Engine::new(cfg.clone(), 2).with_store(Store::open(dir).unwrap());
-        let _ = e.run_cells(&shard_cells(&cells, i, 3));
+        let _ = e.run_cells(&shard_cells(&cells, i, 3).expect("valid shard index"));
     }
     let stores = [Store::open(&d1).unwrap(), Store::open(&d2).unwrap()];
     let err = merge_bench_json(&stores, &[ExperimentId::E2], Scale::Tiny, &cfg, false)
