@@ -1,0 +1,99 @@
+//! Bench: the measurement hot path (PR-4 tentpole). Three ablations, each
+//! printing the "before" and "after" legs side by side:
+//!
+//! 1. **Pipe transport** — the same feed-forward stream pair interpreted
+//!    with per-token transfers (depth 1, the historical path: chunk size
+//!    derives from declared depth) vs chunked transfers (depth 1024 →
+//!    512-token chunks + buffer recycling).
+//! 2. **DES scheduler** — `simulate_reference` (O(P) linear scan + the
+//!    ever-growing `Vec` DRAM ledger) vs `simulate` (binary heap + epoch
+//!    ring) at chunk 1, the scheduling-heaviest configuration; also
+//!    prints the two ledgers' live-epoch footprints.
+//! 3. **Two-tier measurement pipeline** — a depth ladder through one
+//!    engine (interpreter runs once, other rungs replay the shared
+//!    trace) vs isolated per-depth engines (the pre-PR-4 cost: one
+//!    interpreter run per rung).
+
+use pipefwd::coordinator::Engine;
+use pipefwd::ir::build::*;
+use pipefwd::ir::{KernelKind, Program, Ty};
+use pipefwd::sim::device::DeviceConfig;
+use pipefwd::sim::exec::{run_group, ExecOptions};
+use pipefwd::sim::mem::MemoryImage;
+use pipefwd::sim::perf::PerfModel;
+use pipefwd::transform::{feedforward, Variant};
+use pipefwd::util::bench::{bench_scale, BenchReport};
+use pipefwd::workloads::by_name;
+
+fn stream_pair(depth: usize, n: usize) -> (Program, MemoryImage) {
+    let k = KernelBuilder::new("s", KernelKind::SingleWorkItem)
+        .buf_ro("a", Ty::F32)
+        .buf_wo("o", Ty::F32)
+        .scalar("n", Ty::I32)
+        .body(vec![for_(
+            "i",
+            i(0),
+            p("n"),
+            vec![store("o", v("i"), ld("a", v("i")) * f(2.0))],
+        )])
+        .finish();
+    let ff = feedforward(&k, depth).unwrap();
+    let mut m = MemoryImage::new();
+    m.add_f32s("a", &vec![1.0; n]).add_zeros("o", Ty::F32, n).set_i("n", n as i64);
+    (ff, m)
+}
+
+fn main() {
+    let mut b = BenchReport::new("interp");
+    let n = 200_000usize;
+
+    // 1. per-token vs chunked pipe transfers (2n tokens each)
+    let (p1, m1) = stream_pair(1, n);
+    let r1 =
+        b.sample("pipes_per_token_d1", || run_group(&p1, &m1, &ExecOptions::default()).unwrap());
+    let (p2, m2) = stream_pair(1024, n);
+    let r2 = b.sample("pipes_chunked_d1024", || {
+        run_group(&p2, &m2, &ExecOptions::default()).unwrap()
+    });
+    assert_eq!(
+        r1.profiles.iter().map(|p| p.pipe_writes).sum::<u64>(),
+        r2.profiles.iter().map(|p| p.pipe_writes).sum::<u64>(),
+        "chunking must not change token counts"
+    );
+
+    // 2. DES: linear scan + growing ledger vs heap + epoch ring
+    let cfg = DeviceConfig::pac_a10();
+    let model = PerfModel::new(&p2, &cfg);
+    let lin = b.sample("des_linear_scan_chunk1", || {
+        pipefwd::sim::des::simulate_reference(&p2, &model, &r2.profiles, &cfg, 1)
+    });
+    let heap = b.sample("des_heap_ring_chunk1", || {
+        pipefwd::sim::des::simulate(&p2, &model, &r2.profiles, &cfg, 1)
+    });
+    assert_eq!(lin.cycles, heap.cycles, "the schedulers must agree exactly");
+    println!(
+        "  des ledgers: Vec reference held {} epochs, epoch ring peaked at {}",
+        lin.dram_window, heap.dram_window
+    );
+
+    // 3. depth ladder with and without the shared trace tier
+    let scale = bench_scale();
+    let depths = [1usize, 100, 1000];
+    b.sample("depth_ladder_shared_trace", || {
+        let e = Engine::serial(DeviceConfig::pac_a10());
+        let w = by_name("fw").unwrap();
+        for d in depths {
+            e.measure(w.as_ref(), Variant::FeedForward { depth: d }, scale).unwrap();
+        }
+        assert_eq!(e.trace_runs(), 1, "the ladder must share one trace");
+    });
+    b.sample("depth_ladder_isolated_engines", || {
+        let w = by_name("fw").unwrap();
+        for d in depths {
+            let e = Engine::serial(DeviceConfig::pac_a10());
+            e.measure(w.as_ref(), Variant::FeedForward { depth: d }, scale).unwrap();
+        }
+    });
+
+    b.finish();
+}

@@ -47,7 +47,7 @@ fn main() {
         let label = if profile { "interp_profiled" } else { "interp_raw" };
         let t0 = std::time::Instant::now();
         b.sample(label, || {
-            run_group(&prog, &img, &ExecOptions { profile }).unwrap();
+            run_group(&prog, &img, &ExecOptions { profile, ..ExecOptions::default() }).unwrap();
         });
         let dt = t0.elapsed().as_secs_f64();
         println!("{:>40}  {:.1} M iters/s", " ", n as f64 / dt / 1e6);

@@ -26,6 +26,28 @@
 //! work; [`merge_bench_json`] reassembles shard stores into the same
 //! canonical sink bytes. Keys are stable FNV-1a content addresses
 //! ([`content_key`]) because they now outlive the process.
+//!
+//! PR 4 splits the measurement itself into **two content-addressed
+//! tiers**, mirroring the paper's core move of letting each part of a
+//! pipeline run at its natural rate:
+//!
+//! 1. **Trace acquisition** — the functional interpreter run producing
+//!    [`crate::workloads::ExecTrace`], keyed by [`trace_key`]: the full
+//!    signature with pipe depths *masked to 1* wherever the trace is
+//!    provably (or vouchedly) depth-invariant, and with `DeviceConfig` /
+//!    the estimator flag dropped entirely (the interpreter sees neither).
+//!    This is by far the most expensive stage, and it is exactly the one
+//!    a depth ladder repeats needlessly: with the tier in place, a sweep
+//!    over D depths runs the interpreter once per (workload, scale).
+//! 2. **Modelling** — the analytic `PerfModel` (or the DES under
+//!    `--des`), replayed from the trace against the *actual* probed
+//!    configuration, keyed by the existing full [`content_key`].
+//!
+//! Both tiers persist in the attached [`Store`] (measurement entries +
+//! trace entries, schema v3) and are counted separately:
+//! [`Engine::trace_runs`] (interpreter executions) and
+//! [`Engine::trace_hits`] (trace-tier answers) next to
+//! [`Engine::store_hits`] / [`Engine::simulations`].
 
 use super::experiments::{self, Measurement, DEPTHS};
 use super::scale_label;
@@ -38,11 +60,12 @@ use crate::transform::Variant;
 use crate::util::json::Json;
 use crate::workloads::micro::{Micro, MicroSpec};
 use crate::workloads::{
-    by_name, is_validation_error, run_built_workload_with, suite, Scale, Workload,
+    by_name, is_validation_error, replay_built_workload, run_built_workload_recorded, suite,
+    unit_depth_invariant, ExecTrace, Scale, Workload,
 };
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Benchmarks used by the paper's sweep experiments (E4c/E4d).
 pub const SWEEP_TRIO: [&str; 3] = ["fw", "hotspot", "mis"];
@@ -301,6 +324,57 @@ pub fn content_key(
     fnv1a64(content_signature(workload, app, scale, cfg, use_des).as_bytes())
 }
 
+/// The trace tier's content signature: what the *functional interpreter*
+/// run depends on, and nothing more. Differences from
+/// [`content_signature`]:
+///
+/// * no `DeviceConfig` and no estimator flag — the interpreter consults
+///   neither, so analytic and DES engines (and any device config) share
+///   one trace;
+/// * pipe depths are **masked to 1** in every launch unit whose trace is
+///   depth-invariant ([`unit_depth_invariant`], or the workload's
+///   [`Workload::benign_cross_kernel_races`] vouch), so every rung of a
+///   depth ladder lands on the same trace key. Units where depth can
+///   leak into values read (NW) keep their real depths — conservative,
+///   never wrong.
+///
+/// Replication, vectorization and privatization all change the kernel
+/// text itself, so they address distinct traces automatically. Any change
+/// to this format requires a `store::STORE_SCHEMA` bump.
+pub fn trace_signature(
+    workload: &str,
+    benign_races: bool,
+    app: &crate::workloads::App,
+    scale: Scale,
+) -> String {
+    let mut sig = String::from("trace\n");
+    sig.push_str(workload);
+    sig.push('\n');
+    sig.push_str(scale_label(scale));
+    sig.push('\n');
+    sig.push_str(&format!("profile={}\n", ExecOptions::default().profile));
+    for unit in &app.units {
+        if benign_races || unit_depth_invariant(unit) {
+            let masked = unit.clone().with_pipe_depth(1);
+            sig.push_str(&crate::ir::pretty::program_to_string(&masked));
+        } else {
+            sig.push_str(&crate::ir::pretty::program_to_string(unit));
+        }
+        sig.push('\n');
+    }
+    sig
+}
+
+/// [`trace_signature`] hashed down to the store's 64-bit key.
+pub fn trace_key(
+    workload: &str,
+    benign_races: bool,
+    app: &crate::workloads::App,
+    scale: Scale,
+) -> u64 {
+    fnv1a64(trace_signature(workload, benign_races, app, scale).as_bytes())
+}
+
 // ---------------------------------------------------------------------------
 // Memoization layer
 // ---------------------------------------------------------------------------
@@ -309,31 +383,38 @@ pub fn content_key(
 /// error string (matching the serial path's reporting).
 pub type CellResult = Result<Measurement, String>;
 
-enum Slot {
+/// Outcome of one trace acquisition: the recorded trace, or the
+/// execution/validation error string. Shared behind an `Arc` — traces can
+/// be large (one record per host launch) and are read by many probes.
+pub type TraceResult = Result<ExecTrace, String>;
+
+enum Slot<V> {
     InFlight,
-    Done(CellResult),
+    Done(V),
 }
 
-/// Claim/fulfil memo table: at most one worker simulates a configuration;
-/// concurrent requesters for the same key block until it is fulfilled.
-struct MeasureCache {
-    slots: Mutex<HashMap<u64, Slot>>,
+/// Claim/fulfil memo table: at most one worker computes a key; concurrent
+/// requesters for the same key block until it is fulfilled. Generic over
+/// the value so the measurement tier ([`CellResult`]) and the trace tier
+/// (`Arc<TraceResult>`) share one implementation.
+struct ClaimCache<V: Clone> {
+    slots: Mutex<HashMap<u64, Slot<V>>>,
     ready: Condvar,
     hits: AtomicU64,
 }
 
-impl MeasureCache {
-    fn new() -> MeasureCache {
-        MeasureCache {
+impl<V: Clone> ClaimCache<V> {
+    fn new() -> ClaimCache<V> {
+        ClaimCache {
             slots: Mutex::new(HashMap::new()),
             ready: Condvar::new(),
             hits: AtomicU64::new(0),
         }
     }
 
-    /// `Some(result)` if the key is (or becomes) computed; `None` if the
-    /// caller claimed the slot and must compute + [`MeasureCache::fulfil`].
-    fn get_or_claim(&self, key: u64) -> Option<Result<Measurement, String>> {
+    /// `Some(value)` if the key is (or becomes) computed; `None` if the
+    /// caller claimed the slot and must compute + [`ClaimCache::fulfil`].
+    fn get_or_claim(&self, key: u64) -> Option<V> {
         let mut slots = self.slots.lock().unwrap();
         loop {
             match slots.get(&key) {
@@ -341,9 +422,9 @@ impl MeasureCache {
                     slots.insert(key, Slot::InFlight);
                     return None;
                 }
-                Some(Slot::Done(r)) => {
+                Some(Slot::Done(v)) => {
                     self.hits.fetch_add(1, Ordering::Relaxed);
-                    return Some(r.clone());
+                    return Some(v.clone());
                 }
                 Some(Slot::InFlight) => {
                     slots = self.ready.wait(slots).unwrap();
@@ -352,17 +433,32 @@ impl MeasureCache {
         }
     }
 
-    fn fulfil(&self, key: u64, result: Result<Measurement, String>) {
+    fn fulfil(&self, key: u64, value: V) {
         let mut slots = self.slots.lock().unwrap();
-        slots.insert(key, Slot::Done(result));
+        slots.insert(key, Slot::Done(value));
         self.ready.notify_all();
     }
 
-    /// Claim a key for computation, returning a guard that fulfils the
-    /// slot with an error if the computation panics before [`ClaimGuard::fulfil`]
-    /// runs — otherwise waiters in [`MeasureCache::get_or_claim`] would
-    /// block on the Condvar forever.
-    fn claim_guard(&self, key: u64) -> ClaimGuard<'_> {
+    /// Release an in-flight claim without a result (the computation
+    /// panicked): the slot is removed and every waiter is woken — the
+    /// next one through [`ClaimCache::get_or_claim`] re-claims and
+    /// recomputes. Crucially, no sentinel value is ever stored: a
+    /// "panicked" placeholder served to a waiter holding a *different*
+    /// claim could be written through to the persistent store and make a
+    /// transient panic durable.
+    fn abandon(&self, key: u64) {
+        let mut slots = self.slots.lock().unwrap();
+        if matches!(slots.get(&key), Some(Slot::InFlight)) {
+            slots.remove(&key);
+        }
+        self.ready.notify_all();
+    }
+
+    /// Claim a key for computation, returning a guard that abandons the
+    /// claim if the computation panics before [`ClaimGuard::fulfil`] runs
+    /// — otherwise waiters in [`ClaimCache::get_or_claim`] would block on
+    /// the Condvar forever.
+    fn claim_guard(&self, key: u64) -> ClaimGuard<'_, V> {
         ClaimGuard { cache: self, key, done: false }
     }
 
@@ -370,38 +466,38 @@ impl MeasureCache {
         self.slots.lock().unwrap().len()
     }
 
-    fn done_measurements(&self) -> Vec<Measurement> {
+    fn done_values(&self) -> Vec<V> {
         self.slots
             .lock()
             .unwrap()
             .values()
             .filter_map(|s| match s {
-                Slot::Done(Ok(m)) => Some(m.clone()),
-                _ => None,
+                Slot::Done(v) => Some(v.clone()),
+                Slot::InFlight => None,
             })
             .collect()
     }
 }
 
-struct ClaimGuard<'a> {
-    cache: &'a MeasureCache,
+struct ClaimGuard<'a, V: Clone> {
+    cache: &'a ClaimCache<V>,
     key: u64,
     done: bool,
 }
 
-impl ClaimGuard<'_> {
-    fn fulfil(mut self, result: CellResult) {
+impl<V: Clone> ClaimGuard<'_, V> {
+    fn fulfil(mut self, value: V) {
         self.done = true;
-        self.cache.fulfil(self.key, result);
+        self.cache.fulfil(self.key, value);
     }
 }
 
-impl Drop for ClaimGuard<'_> {
+impl<V: Clone> Drop for ClaimGuard<'_, V> {
     fn drop(&mut self) {
         if !self.done {
-            // unwound mid-computation: wake the waiters with an error so
-            // the panic can propagate instead of deadlocking the pool
-            self.cache.fulfil(self.key, Err("measurement panicked".to_string()));
+            // unwound mid-computation: release the claim so waiters
+            // re-claim and recompute while this thread's panic propagates
+            self.cache.abandon(self.key);
         }
     }
 }
@@ -418,7 +514,11 @@ pub struct Engine {
     /// model (`run --des`). Part of the content address, so both estimates
     /// cache side by side.
     pub use_des: bool,
-    cache: MeasureCache,
+    cache: ClaimCache<CellResult>,
+    /// Trace-tier memo table (depth-invariant keys — see [`trace_key`]):
+    /// the in-process layer that lets a cold depth sweep run the
+    /// interpreter once per (workload, scale) even with no store attached.
+    traces: ClaimCache<Arc<TraceResult>>,
     /// Durable read-through/write-behind tier beneath the in-memory memo
     /// table (`coordinator::store`). `None` = process-local only (PR-1
     /// behavior).
@@ -430,6 +530,8 @@ pub struct Engine {
     store_hits: AtomicU64,
     store_errors: AtomicU64,
     simulations: AtomicU64,
+    trace_hits: AtomicU64,
+    trace_runs: AtomicU64,
 }
 
 impl Engine {
@@ -438,12 +540,15 @@ impl Engine {
             cfg,
             jobs: jobs.max(1),
             use_des: false,
-            cache: MeasureCache::new(),
+            cache: ClaimCache::new(),
+            traces: ClaimCache::new(),
             store: None,
             tuner: None,
             store_hits: AtomicU64::new(0),
             store_errors: AtomicU64::new(0),
             simulations: AtomicU64::new(0),
+            trace_hits: AtomicU64::new(0),
+            trace_runs: AtomicU64::new(0),
         }
     }
 
@@ -513,11 +618,29 @@ impl Engine {
         self.simulations.load(Ordering::Relaxed)
     }
 
+    /// Measurements answered by replaying a cached execution trace
+    /// through the model instead of re-running the interpreter (memo or
+    /// store tier). On a cold depth sweep over D depths this reads D-1
+    /// per depth-invariant (workload, scale).
+    pub fn trace_hits(&self) -> u64 {
+        self.trace_hits.load(Ordering::Relaxed)
+    }
+
+    /// Functional interpreter executions — the expensive tier. A cold
+    /// depth sweep reads 1 per depth-invariant (workload, scale); a
+    /// warm-store rerun reads 0.
+    pub fn trace_runs(&self) -> u64 {
+        self.trace_runs.load(Ordering::Relaxed)
+    }
+
     /// Run one (workload, variant, scale) through the memo table and the
     /// persistent store: the feed-forward split runs here (it defines the
     /// content address), but interpretation, the performance model and
     /// validation run at most once per unique configuration — across
-    /// processes, when a store is attached.
+    /// processes, when a store is attached. On a full-key miss the work
+    /// splits into the two tiers: trace acquisition (interpreter, keyed
+    /// depth-invariantly by [`trace_key`]) and modelling (replay through
+    /// `PerfModel`/DES at the actual configuration).
     pub fn measure(
         &self,
         w: &dyn Workload,
@@ -543,8 +666,7 @@ impl Engine {
             }
         }
         self.simulations.fetch_add(1, Ordering::Relaxed);
-        let result = run_built_workload_with(w, &app, scale, &self.cfg, self.use_des)
-            .map(|h| Measurement::from_harness(w, variant, scale, &h));
+        let result = self.compute_measurement(w, &app, variant, scale);
         if let Some(store) = &self.store {
             if let Err(e) = store.put(key, &result, self.use_des) {
                 self.store_errors.fetch_add(1, Ordering::Relaxed);
@@ -552,6 +674,111 @@ impl Engine {
             }
         }
         guard.fulfil(result.clone());
+        result
+    }
+
+    /// Full-key miss path: answer from the trace tier (replay) when a
+    /// trace exists, else run the interpreter once — recording the trace
+    /// for every other configuration that shares it.
+    fn compute_measurement(
+        &self,
+        w: &dyn Workload,
+        app: &crate::workloads::App,
+        variant: Variant,
+        scale: Scale,
+    ) -> CellResult {
+        let tkey = trace_key(w.name(), w.benign_cross_kernel_races(), app, scale);
+
+        // in-process trace memo (claims the slot on a miss)
+        if let Some(tr) = self.traces.get_or_claim(tkey) {
+            if let Some(r) = self.result_from_trace(w, app, variant, scale, &tr) {
+                // a hit only once the replay actually answered — same
+                // accounting as the store tier below
+                self.trace_hits.fetch_add(1, Ordering::Relaxed);
+                return r;
+            }
+            // corrupt/stale memoized trace (should not happen in-process):
+            // re-acquire and overwrite the slot
+            return self.acquire_trace_and_measure(w, app, variant, scale, tkey, None);
+        }
+        let tguard = self.traces.claim_guard(tkey);
+
+        // durable trace tier
+        if let Some(store) = &self.store {
+            if let Some(tr) = store.get_trace(tkey) {
+                let tr = Arc::new(tr);
+                if let Some(r) = self.result_from_trace(w, app, variant, scale, &tr) {
+                    self.trace_hits.fetch_add(1, Ordering::Relaxed);
+                    tguard.fulfil(tr);
+                    return r;
+                }
+                // a persisted trace that no longer replays (program drift
+                // without a schema bump, disk corruption the JSON layer
+                // could not catch): fall through and re-acquire
+                eprintln!(
+                    "store: trace {} does not replay against {}; re-running the interpreter",
+                    super::store::key_hex(tkey),
+                    app.name
+                );
+            }
+        }
+        self.acquire_trace_and_measure(w, app, variant, scale, tkey, Some(tguard))
+    }
+
+    /// Replay a cached trace through the modelling tier. `None` = the
+    /// trace does not fit this app (caller re-acquires).
+    fn result_from_trace(
+        &self,
+        w: &dyn Workload,
+        app: &crate::workloads::App,
+        variant: Variant,
+        scale: Scale,
+        tr: &TraceResult,
+    ) -> Option<CellResult> {
+        match tr {
+            // the recorded run failed (execution or validation error) —
+            // depth-invariant like the trace itself, so it IS the result
+            Err(e) => Some(Err(e.clone())),
+            Ok(trace) => match replay_built_workload(app, &self.cfg, self.use_des, trace) {
+                Ok(h) => Some(Ok(Measurement::from_harness(w, variant, scale, &h))),
+                Err(_) => None,
+            },
+        }
+    }
+
+    /// The expensive tier: one recorded interpreter run. Persists the
+    /// trace (write-behind; failures only warn — the measurement result
+    /// itself is persisted separately) and fulfils the memo slot.
+    fn acquire_trace_and_measure(
+        &self,
+        w: &dyn Workload,
+        app: &crate::workloads::App,
+        variant: Variant,
+        scale: Scale,
+        tkey: u64,
+        guard: Option<ClaimGuard<'_, Arc<TraceResult>>>,
+    ) -> CellResult {
+        self.trace_runs.fetch_add(1, Ordering::Relaxed);
+        let outcome = run_built_workload_recorded(w, app, scale, &self.cfg, self.use_des);
+        let (tres, result) = match outcome {
+            Ok((h, trace)) => {
+                (Ok(trace), Ok(Measurement::from_harness(w, variant, scale, &h)))
+            }
+            Err(e) => (Err(e.clone()), Err(e)),
+        };
+        let tres = Arc::new(tres);
+        if let Some(store) = &self.store {
+            if let Err(e) = store.put_trace(tkey, &tres) {
+                eprintln!(
+                    "store: persisting trace {} failed: {e} (warm reruns will re-interpret)",
+                    super::store::key_hex(tkey)
+                );
+            }
+        }
+        match guard {
+            Some(g) => g.fulfil(tres),
+            None => self.traces.fulfil(tkey, tres),
+        }
         result
     }
 
@@ -963,7 +1190,8 @@ impl Engine {
     /// Every successful measurement in canonical order (workload, variant,
     /// scale) — identical between serial and parallel engines.
     pub fn measurements(&self) -> Vec<Measurement> {
-        let mut ms = self.cache.done_measurements();
+        let mut ms: Vec<Measurement> =
+            self.cache.done_values().into_iter().filter_map(|r| r.ok()).collect();
         experiments::canonical_sort(&mut ms);
         ms
     }
@@ -1226,6 +1454,87 @@ mod tests {
         let e = Engine::serial(DeviceConfig::pac_a10());
         let m = e.best_ff(by_name("nw").unwrap().as_ref(), Scale::Tiny).unwrap();
         assert_eq!(m.variant, "ff(d1)");
+    }
+
+    /// The tentpole acceptance shape in miniature: a cold depth ladder
+    /// over a depth-invariant workload runs the interpreter exactly once;
+    /// every other rung replays the shared trace through the model.
+    #[test]
+    fn depth_sweep_shares_one_trace_per_workload() {
+        let e = Engine::serial(DeviceConfig::pac_a10());
+        let w = by_name("fw").unwrap();
+        for d in DEPTHS {
+            e.measure(w.as_ref(), Variant::FeedForward { depth: d }, Scale::Tiny).unwrap();
+        }
+        assert_eq!(e.simulations(), 3, "each depth is still a distinct measurement");
+        assert_eq!(e.trace_runs(), 1, "one interpreter run for the whole ladder");
+        assert_eq!(e.trace_hits(), 2);
+    }
+
+    /// Replayed rungs must equal what an independent cold engine computes
+    /// at that depth — the byte-identity guarantee of the results sink
+    /// rests on this.
+    #[test]
+    fn replayed_depths_match_independent_cold_runs() {
+        let sweep = Engine::serial(DeviceConfig::pac_a10());
+        let w = by_name("fw").unwrap();
+        for d in DEPTHS {
+            let replayed =
+                sweep.measure(w.as_ref(), Variant::FeedForward { depth: d }, Scale::Tiny).unwrap();
+            let cold = Engine::serial(DeviceConfig::pac_a10())
+                .measure(w.as_ref(), Variant::FeedForward { depth: d }, Scale::Tiny)
+                .unwrap();
+            assert_eq!(replayed, cold, "depth {d}: replay diverged from a cold run");
+        }
+        assert_eq!(sweep.trace_runs(), 1);
+    }
+
+    /// NW's trace is depth-sensitive (shared read-write buffer, no
+    /// vouch): every depth must acquire its own trace.
+    #[test]
+    fn depth_sensitive_workloads_do_not_share_traces() {
+        let e = Engine::serial(DeviceConfig::pac_a10());
+        let w = by_name("nw").unwrap();
+        let _ = e.measure(w.as_ref(), Variant::FeedForward { depth: 1 }, Scale::Tiny);
+        let _ = e.measure(w.as_ref(), Variant::FeedForward { depth: 100 }, Scale::Tiny);
+        assert_eq!(e.trace_runs(), 2, "NW depths must not share a trace");
+        assert_eq!(e.trace_hits(), 0);
+    }
+
+    #[test]
+    fn trace_key_masks_depth_only_where_invariant() {
+        let fw = by_name("fw").unwrap();
+        let a1 = fw.build(Variant::FeedForward { depth: 1 }).unwrap();
+        let a100 = fw.build(Variant::FeedForward { depth: 100 }).unwrap();
+        assert_eq!(
+            trace_key("fw", true, &a1, Scale::Tiny),
+            trace_key("fw", true, &a100, Scale::Tiny),
+            "vouched workload: depth masked"
+        );
+        let nw = by_name("nw").unwrap();
+        let n1 = nw.build(Variant::FeedForward { depth: 1 }).unwrap();
+        let n100 = nw.build(Variant::FeedForward { depth: 100 }).unwrap();
+        assert_ne!(
+            trace_key("nw", false, &n1, Scale::Tiny),
+            trace_key("nw", false, &n100, Scale::Tiny),
+            "depth-sensitive unit keeps its real depth"
+        );
+        // replication changes the kernel text: distinct trace even vouched
+        let m2 = fw.build(Variant::MxCx { parts: 2, depth: 1 }).unwrap();
+        assert_ne!(
+            trace_key("fw", true, &a1, Scale::Tiny),
+            trace_key("fw", true, &m2, Scale::Tiny)
+        );
+        // scale is part of the trace address
+        assert_ne!(
+            trace_key("fw", true, &a1, Scale::Tiny),
+            trace_key("fw", true, &a1, Scale::Small)
+        );
+        // stable across calls (persisted keys depend on it)
+        assert_eq!(
+            trace_key("fw", true, &a1, Scale::Tiny),
+            trace_key("fw", true, &a1, Scale::Tiny)
+        );
     }
 
     #[test]

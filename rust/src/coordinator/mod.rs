@@ -11,7 +11,11 @@
 //! reassemble the byte-identical sink. The [`tune`] module (PR 3)
 //! replaces exhaustive depth grids with budgeted search policies
 //! (golden-section / successive halving) whose probes are ordinary
-//! engine measurements — content-addressed, stored, replayable.
+//! engine measurements — content-addressed, stored, replayable. PR 4
+//! splits `Engine::measure` into two content-addressed tiers — trace
+//! acquisition (the interpreter, keyed depth-invariantly) and modelling
+//! (analytic/DES replay, keyed fully) — so depth ladders and tuner
+//! searches pay the interpreter once per functional trace.
 
 pub mod engine;
 pub mod experiments;
@@ -20,7 +24,7 @@ pub mod tune;
 
 pub use engine::{
     bench_doc, content_key, dedup_cells, grid, grid_for, merge_bench_json, normalize_depths,
-    resolve_workload, shard_cells, Cell, Engine, ExperimentId,
+    resolve_workload, shard_cells, trace_key, trace_signature, Cell, Engine, ExperimentId,
 };
 pub use store::Store;
 pub use experiments::{

@@ -29,10 +29,17 @@
 //!   fast external enumeration (CI, tooling). The directory scan remains
 //!   the source of truth; the manifest is advisory and rewritten after
 //!   each run and merge.
+//! * **Trace tier (v3)** — execution traces (the functional interpreter's
+//!   per-launch profiles, `workloads::ExecTrace`) persist under
+//!   `traces/<16-hex-key>.json` beside the measurement entries, keyed by
+//!   the *depth-invariant* `engine::trace_key`. A warm store answers a
+//!   whole depth ladder from one trace file; `merge_from` carries traces
+//!   across shards like any other entry.
 
-use super::engine::CellResult;
+use super::engine::{CellResult, TraceResult};
 use super::experiments::Measurement;
 use crate::util::json::{self, Json};
+use crate::workloads::ExecTrace;
 use std::io;
 use std::path::{Path, PathBuf};
 
@@ -42,8 +49,13 @@ use std::path::{Path, PathBuf};
 /// CI keys its shared cache on this string. v2: error records carry a
 /// class prefix (`validation: ` / `infeasible: `) that `best_ff` and the
 /// PR-3 tuner dispatch on — v1 stores hold unprefixed error strings that
-/// would be misclassified as fatal, so they must read as misses.
-pub const STORE_SCHEMA: &str = "pipefwd-store-v2";
+/// would be misclassified as fatal, so they must read as misses. v3: the
+/// two-tier measurement pipeline — execution traces persist under
+/// `traces/` beside the measurement entries, and the interpreter moved to
+/// chunked pipe transfers, which can change results for depth-*sensitive*
+/// workloads (NW past its safe depth) — v2 measurement entries must
+/// therefore read as misses, not be served beside v3 ones.
+pub const STORE_SCHEMA: &str = "pipefwd-store-v3";
 
 /// Default results directory (overridable via `--cache-dir` /
 /// `PIPEFWD_CACHE_DIR`).
@@ -75,6 +87,7 @@ impl Store {
     pub fn open(root: impl Into<PathBuf>) -> io::Result<Store> {
         let root = root.into();
         std::fs::create_dir_all(root.join("entries"))?;
+        std::fs::create_dir_all(root.join("traces"))?;
         Ok(Store { root })
     }
 
@@ -112,6 +125,10 @@ impl Store {
         self.root.join("entries").join(format!("{}.json", key_hex(key)))
     }
 
+    fn trace_path(&self, key: u64) -> PathBuf {
+        self.root.join("traces").join(format!("{}.json", key_hex(key)))
+    }
+
     /// Look an entry up. Any defect — missing file, truncated or garbled
     /// JSON, schema-version mismatch, key mismatch, malformed record — is a
     /// miss, not an error: the caller re-simulates and overwrites.
@@ -128,9 +145,34 @@ impl Store {
         json::write_file_atomic(&self.entry_path(key), &encode_entry(key, result, des))
     }
 
+    /// Look a trace up (the measurement pipeline's first tier). Same
+    /// corruption contract as [`Store::get`]: any defect is a miss — the
+    /// engine re-runs the interpreter and rewrites the entry.
+    pub fn get_trace(&self, key: u64) -> Option<TraceResult> {
+        let doc = json::read_file(&self.trace_path(key)).ok()?;
+        decode_trace(&doc, key)
+    }
+
+    /// Persist a trace-tier entry (atomic temp-file + rename;
+    /// [`Store::open`] created `traces/`). Traces are written compact —
+    /// one record per host launch, they dominate the store's disk
+    /// footprint.
+    pub fn put_trace(&self, key: u64, result: &TraceResult) -> io::Result<()> {
+        json::write_file_atomic_compact(&self.trace_path(key), &encode_trace(key, result))
+    }
+
     /// Every key present on disk (directory scan — the source of truth).
     pub fn keys(&self) -> Vec<u64> {
-        let mut keys: Vec<u64> = match std::fs::read_dir(self.root.join("entries")) {
+        Self::scan_keys(self.root.join("entries"))
+    }
+
+    /// Every trace-tier key present on disk.
+    pub fn trace_keys(&self) -> Vec<u64> {
+        Self::scan_keys(self.root.join("traces"))
+    }
+
+    fn scan_keys(dir: PathBuf) -> Vec<u64> {
+        let mut keys: Vec<u64> = match std::fs::read_dir(dir) {
             Ok(rd) => rd
                 .filter_map(|e| e.ok())
                 .filter_map(|e| {
@@ -191,9 +233,9 @@ impl Store {
     }
 
     /// Copy every entry of `other` that this store lacks (raw document
-    /// copy, preserving all metadata). Returns how many entries were
-    /// imported. Corrupt source entries are skipped; a corrupt local entry
-    /// is replaced by a valid imported one.
+    /// copy, preserving all metadata), measurement and trace tiers both.
+    /// Returns how many entries were imported. Corrupt source entries are
+    /// skipped; a corrupt local entry is replaced by a valid imported one.
     pub fn merge_from(&self, other: &Store) -> io::Result<usize> {
         let mut imported = 0;
         for key in other.keys() {
@@ -205,6 +247,17 @@ impl Store {
                 continue;
             }
             json::write_file_atomic(&self.entry_path(key), &doc)?;
+            imported += 1;
+        }
+        for key in other.trace_keys() {
+            if self.get_trace(key).is_some() {
+                continue;
+            }
+            let Ok(doc) = json::read_file(&other.trace_path(key)) else { continue };
+            if decode_trace(&doc, key).is_none() {
+                continue;
+            }
+            json::write_file_atomic_compact(&self.trace_path(key), &doc)?;
             imported += 1;
         }
         Ok(imported)
@@ -272,9 +325,46 @@ fn decode_entry(doc: &Json, key: u64) -> Option<CellResult> {
     }
 }
 
+fn encode_trace(key: u64, result: &TraceResult) -> Json {
+    let mut fields = vec![
+        ("schema".into(), Json::Str(STORE_SCHEMA.into())),
+        ("kind".into(), Json::Str("trace".into())),
+        ("key".into(), Json::Str(key_hex(key))),
+    ];
+    match result {
+        Ok(trace) => {
+            fields.push(("status".into(), Json::Str("ok".into())));
+            fields.push(("launches".into(), trace.to_json()));
+        }
+        Err(e) => {
+            fields.push(("status".into(), Json::Str("err".into())));
+            fields.push(("error".into(), Json::Str(e.clone())));
+        }
+    }
+    Json::Obj(fields)
+}
+
+fn decode_trace(doc: &Json, key: u64) -> Option<TraceResult> {
+    if doc.get("schema")?.as_str()? != STORE_SCHEMA {
+        return None;
+    }
+    if doc.get("kind")?.as_str()? != "trace" {
+        return None;
+    }
+    if doc.get("key")?.as_str()? != key_hex(key) {
+        return None;
+    }
+    match doc.get("status")?.as_str()? {
+        "ok" => ExecTrace::from_json(doc.get("launches")?).map(Ok),
+        "err" => Some(Err(doc.get("error")?.as_str()?.to_string())),
+        _ => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workloads::LaunchRecord;
 
     fn tmp_store(name: &str) -> Store {
         let dir = std::env::temp_dir()
@@ -410,6 +500,79 @@ mod tests {
         let variants: Vec<&str> = ms.iter().map(|m| m.variant.as_str()).collect();
         assert_eq!(variants, vec!["ff(d1)", "ff(d512)", "m3c3(d16)"]);
         let _ = std::fs::remove_dir_all(s.root());
+    }
+
+    fn sample_trace() -> ExecTrace {
+        let mut prof = crate::sim::profile::KernelProfile::new("fw_mem", 3);
+        for a in 0..50i64 {
+            prof.sites[0].record(a);
+            prof.sites[1].record(a * 7 % 13);
+        }
+        prof.loops.insert(crate::ir::LoopId(0), crate::sim::profile::LoopStats {
+            invocations: 1,
+            iters: 50,
+        });
+        prof.pipe_writes = 100;
+        ExecTrace {
+            launches: vec![
+                LaunchRecord { unit: "fw_kernel".into(), profiles: vec![prof.clone()] },
+                LaunchRecord { unit: "fw_kernel".into(), profiles: vec![prof] },
+            ],
+        }
+    }
+
+    #[test]
+    fn trace_entries_roundtrip_ok_and_err() {
+        let s = tmp_store("trace-roundtrip");
+        let t = sample_trace();
+        s.put_trace(11, &Ok(t.clone())).unwrap();
+        s.put_trace(12, &Err("validation: nw: m[9] = 1, want 2".into())).unwrap();
+        assert_eq!(s.get_trace(11), Some(Ok(t)));
+        assert_eq!(s.get_trace(12), Some(Err("validation: nw: m[9] = 1, want 2".into())));
+        assert_eq!(s.get_trace(13), None);
+        assert_eq!(s.trace_keys(), vec![11, 12]);
+        // the two tiers are separate namespaces: no measurement entry
+        // exists under a trace key
+        assert_eq!(s.get(11), None);
+        assert_eq!(s.len(), 0, "traces must not count as measurement entries");
+        let _ = std::fs::remove_dir_all(s.root());
+    }
+
+    #[test]
+    fn corrupt_or_stale_trace_entries_are_misses() {
+        let s = tmp_store("trace-corrupt");
+        s.put_trace(7, &Ok(sample_trace())).unwrap();
+        let path = s.root().join("traces").join(format!("{}.json", key_hex(7)));
+        let full = std::fs::read_to_string(&path).unwrap();
+
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        assert_eq!(s.get_trace(7), None, "truncated trace must be a miss");
+
+        // a previous schema version (the chunked-interpreter bump): stale
+        let stale = full.replace(STORE_SCHEMA, "pipefwd-store-v2");
+        std::fs::write(&path, &stale).unwrap();
+        assert_eq!(s.get_trace(7), None, "v2 trace must be a miss under v3");
+
+        // a measurement entry misfiled under a trace path (wrong kind)
+        s.put(7, &Ok(sample_measurement()), false).unwrap();
+        std::fs::copy(s.root().join("entries").join(format!("{}.json", key_hex(7))), &path)
+            .unwrap();
+        assert_eq!(s.get_trace(7), None, "kind mismatch must be a miss");
+        let _ = std::fs::remove_dir_all(s.root());
+    }
+
+    #[test]
+    fn merge_from_carries_traces_across_stores() {
+        let a = tmp_store("trace-merge-a");
+        let b = tmp_store("trace-merge-b");
+        let t = sample_trace();
+        b.put_trace(21, &Ok(t.clone())).unwrap();
+        b.put(22, &Ok(sample_measurement()), false).unwrap();
+        assert_eq!(a.merge_from(&b).unwrap(), 2, "one trace + one measurement");
+        assert_eq!(a.get_trace(21), Some(Ok(t)));
+        assert!(a.get(22).is_some());
+        let _ = std::fs::remove_dir_all(a.root());
+        let _ = std::fs::remove_dir_all(b.root());
     }
 
     #[test]

@@ -85,6 +85,10 @@ OPTIONS:
   --no-cache       do not read or write the persistent store
   --des            estimate with the discrete-event simulator instead of
                    the analytic model (cached under a distinct key)
+  --counters PATH  after `run`/`sweep`/`tune`, write the engine counters
+                   (trace_hits/trace_runs/store_hits/simulations/
+                   cache_hits) plus wall-clock to a COUNTERS.json document
+                   — CI gates on a warm rerun reporting zero trace runs
 ";
 
 fn fail(msg: &str) -> ! {
@@ -93,6 +97,7 @@ fn fail(msg: &str) -> ! {
 }
 
 fn main() {
+    let wall_start = std::time::Instant::now();
     let args: Vec<String> = std::env::args().skip(1).collect();
     if args.is_empty() {
         print!("{USAGE}");
@@ -114,6 +119,7 @@ fn main() {
     let mut cache_dir: Option<String> = None;
     let mut no_cache = false;
     let mut use_des = false;
+    let mut counters_path: Option<String> = None;
     let mut policy = coordinator::Policy::Golden;
     let mut budget: usize = 40;
     let mut replication = false;
@@ -208,6 +214,10 @@ fn main() {
             }
             "--no-cache" => no_cache = true,
             "--des" => use_des = true,
+            "--counters" => {
+                counters_path =
+                    Some(it.next().unwrap_or_else(|| fail("--counters needs a path")).clone());
+            }
             "--diff" => {
                 let old = it.next().unwrap_or_else(|| fail("--diff needs two paths")).clone();
                 let new = it.next().unwrap_or_else(|| fail("--diff needs two paths")).clone();
@@ -250,6 +260,33 @@ fn main() {
             e = e.with_tuner(coordinator::TuneSpec { policy, budget });
         }
         e
+    };
+    // `--counters PATH`: the engine's tier counters + wall clock as one
+    // machine-readable document per invocation. CI's warm-rerun gate reads
+    // `trace_runs`/`simulations` from here (bench-diff fails on nonzero).
+    let write_counters = |engine: &Engine, command: &str| {
+        let Some(path) = counters_path.as_deref() else { return };
+        let doc = pipefwd::util::json::Json::Obj(vec![
+            ("schema".into(), pipefwd::util::json::Json::Str("pipefwd-counters-v1".into())),
+            ("command".into(), pipefwd::util::json::Json::Str(command.into())),
+            (
+                "scale".into(),
+                pipefwd::util::json::Json::Str(coordinator::scale_label(scale).into()),
+            ),
+            ("cache_hits".into(), pipefwd::util::json::Json::Num(engine.cache_hits() as f64)),
+            ("store_hits".into(), pipefwd::util::json::Json::Num(engine.store_hits() as f64)),
+            ("simulations".into(), pipefwd::util::json::Json::Num(engine.simulations() as f64)),
+            ("trace_hits".into(), pipefwd::util::json::Json::Num(engine.trace_hits() as f64)),
+            ("trace_runs".into(), pipefwd::util::json::Json::Num(engine.trace_runs() as f64)),
+            (
+                "wall_ms".into(),
+                pipefwd::util::json::Json::Num(wall_start.elapsed().as_millis() as f64),
+            ),
+        ]);
+        match pipefwd::util::json::write_file_atomic(std::path::Path::new(path), &doc) {
+            Ok(()) => eprintln!("wrote {path}"),
+            Err(e) => fail(&format!("writing {path}: {e}")),
+        }
     };
     let finish_engine = |engine: &Engine| {
         if let Some(s) = engine.store() {
@@ -300,10 +337,13 @@ fn main() {
                     ));
                 }
                 eprintln!(
-                    "shard {index}/{count}: {} of {} unique cells, {} simulated, {} store hits",
+                    "shard {index}/{count}: {} of {} unique cells, {} simulated \
+                     ({} trace runs, {} trace hits), {} store hits",
                     slice.len(),
                     cells.len(),
                     engine.simulations(),
+                    engine.trace_runs(),
+                    engine.trace_hits(),
                     engine.store_hits(),
                 );
             } else {
@@ -322,16 +362,19 @@ fn main() {
                 match engine.write_bench_json(std::path::Path::new(&out_path), scale, &exps) {
                     Ok(()) => eprintln!(
                         "wrote {out_path} ({} measurements, {} unique configs, {} cache hits, \
-                         {} store hits, {} simulated, {jobs} jobs)",
+                         {} store hits, {} simulated, {} trace runs, {} trace hits, {jobs} jobs)",
                         engine.measurements().len(),
                         engine.cache_len(),
                         engine.cache_hits(),
                         engine.store_hits(),
                         engine.simulations(),
+                        engine.trace_runs(),
+                        engine.trace_hits(),
                     ),
                     Err(e) => fail(&format!("writing {out_path}: {e}")),
                 }
             }
+            write_counters(&engine, "run");
             finish_engine(&engine);
         }
         "merge" => {
@@ -359,7 +402,7 @@ fn main() {
                     eprintln!("warning: writing store manifest: {e}");
                 }
                 eprintln!(
-                    "imported {imported} new entries into {}",
+                    "imported {imported} new records (measurement + trace tiers) into {}",
                     local.root().display()
                 );
             }
@@ -387,9 +430,15 @@ fn main() {
             let names: Vec<&str> = benches.iter().map(|b| b.as_str()).collect();
             save(&engine.depth_sweep(&names, scale, &depths), "depth_sweep");
             match engine.write_bench_json(std::path::Path::new(&out_path), scale, &[]) {
-                Ok(()) => eprintln!("wrote {out_path}"),
+                Ok(()) => eprintln!(
+                    "wrote {out_path} ({} simulated, {} trace runs, {} trace hits)",
+                    engine.simulations(),
+                    engine.trace_runs(),
+                    engine.trace_hits(),
+                ),
                 Err(e) => fail(&format!("writing {out_path}: {e}")),
             }
+            write_counters(&engine, "sweep");
             finish_engine(&engine);
         }
         "tune" => {
@@ -413,15 +462,18 @@ fn main() {
             ) {
                 Ok(()) => eprintln!(
                     "wrote {tune_path} ({} bench(es), {} policy, {} probes, \
-                     simulations: {}, store hits: {})",
+                     simulations: {}, trace runs: {}, trace hits: {}, store hits: {})",
                     report.outcomes.len(),
                     report.policy.label(),
                     report.total_probes(),
                     engine.simulations(),
+                    engine.trace_runs(),
+                    engine.trace_hits(),
                     engine.store_hits(),
                 ),
                 Err(e) => fail(&format!("writing {tune_path}: {e}")),
             }
+            write_counters(&engine, "tune");
             finish_engine(&engine);
         }
         "report" => {

@@ -6,14 +6,37 @@
 //! depth-bounded backpressure; the DRAM controller is an epoch-bucketed
 //! byte ledger that stalls whoever overdraws it. Captures what the
 //! steady-state solver abstracts away — pipeline fill skew, channel-depth
-//! slack, congestion transients — and is used by the `simulator` bench as
-//! an ablation (analytic vs DES) and by `prop_sim` for consistency
-//! properties (DES >= either bound, depth insensitivity, monotonicity).
+//! slack, congestion transients — and is used by the `simulator` and
+//! `interp` benches as an ablation (analytic vs DES) and by `prop_sim`
+//! for consistency properties (DES >= either bound, depth insensitivity,
+//! monotonicity).
+//!
+//! § Perf — two data-structure upgrades over the original implementation
+//! (kept as [`simulate_reference`] for the equivalence tests and the
+//! `interp` bench ablation):
+//!
+//! * **Heap scheduler** — picking the least-advanced runnable process was
+//!   an O(P) scan per scheduling decision; it is now a [`BinaryHeap`]
+//!   keyed on `(virtual time, process index)`. Only the popped process's
+//!   clock ever moves, so entries never go stale and the pop order is
+//!   exactly the scan's pick order (first index among minimal times) —
+//!   `DesResult::cycles` is bit-identical by construction, proved by
+//!   `heap_scheduler_matches_reference_exactly`.
+//! * **Epoch-ring DRAM ledger** — [`Dram`] used to keep one `f64` per
+//!   epoch since time zero in an ever-growing `Vec`, so long simulations
+//!   resized the ledger forever. Scheduled times are non-decreasing
+//!   (each pop is the global minimum and clocks only move forward), so
+//!   epochs before the current pick are final: the ledger is now a ring
+//!   (`VecDeque` + base epoch) that retires dead epochs as the pick time
+//!   advances — O(1) amortized per consume, memory bounded by the active
+//!   congestion window instead of total simulated time.
 
 use super::device::DeviceConfig;
 use super::perf::PerfModel;
 use super::profile::KernelProfile;
 use crate::ir::{Program, Stmt};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 
 /// DRAM epoch length in cycles (granularity of the bandwidth ledger).
 const EPOCH: f64 = 256.0;
@@ -24,6 +47,9 @@ pub struct DesResult {
     pub seconds: f64,
     /// Per-kernel finish times (cycles).
     pub finish: Vec<(String, f64)>,
+    /// High-water mark of live DRAM-ledger epochs (ring occupancy); the
+    /// reference implementation reports its full ledger length here.
+    pub dram_window: usize,
 }
 
 struct Proc {
@@ -41,54 +67,79 @@ struct Proc {
     /// simulation state
     t: f64,
     done: u64,
-    /// finish time of each of the last `depth` tokens of the *consumer*
-    /// is tracked on the producer side via the consumer's `done`/times.
-    recent: std::collections::VecDeque<f64>,
 }
 
-/// DRAM ledger: bytes available per epoch.
+/// DRAM ledger: bytes available per epoch, stored as a ring over the
+/// active window. `base` is the epoch index of `ring[0]`; epochs before
+/// `base` are retired (final) and epochs past the back are implicitly
+/// empty until first touched.
 struct Dram {
     capacity_per_epoch: f64,
-    used: Vec<f64>,
+    base: usize,
+    ring: VecDeque<f64>,
+    peak_window: usize,
 }
 
 impl Dram {
     fn new(bytes_per_cycle: f64) -> Dram {
-        Dram { capacity_per_epoch: bytes_per_cycle * EPOCH, used: vec![] }
+        Dram {
+            capacity_per_epoch: bytes_per_cycle * EPOCH,
+            base: 0,
+            ring: VecDeque::new(),
+            peak_window: 0,
+        }
+    }
+
+    /// Retire every epoch strictly before `t`'s. Sound because the
+    /// scheduler's pick times are non-decreasing and every transfer
+    /// starts at or after its pick time — a retired epoch can never be
+    /// written again.
+    fn retire(&mut self, t: f64) {
+        let e = (t / EPOCH) as usize;
+        while self.base < e && self.ring.pop_front().is_some() {
+            self.base += 1;
+        }
+        if self.ring.is_empty() && self.base < e {
+            self.base = e;
+        }
     }
 
     /// Consume `bytes` starting at time `t`; returns the time the transfer
     /// completes (stalls into later epochs when the ledger is exhausted).
+    /// Same arithmetic as the historical `Vec` ledger — only the storage
+    /// of live epochs changed.
     fn consume(&mut self, t: f64, mut bytes: f64) -> f64 {
         let mut e = (t / EPOCH) as usize;
+        debug_assert!(e >= self.base, "transfer into a retired epoch ({e} < {})", self.base);
+        e = e.max(self.base);
         loop {
-            if self.used.len() <= e {
-                self.used.resize(e + 1, 0.0);
+            while self.ring.len() <= e - self.base {
+                self.ring.push_back(0.0);
             }
-            let free = self.capacity_per_epoch - self.used[e];
+            self.peak_window = self.peak_window.max(self.ring.len());
+            let slot = &mut self.ring[e - self.base];
+            let free = self.capacity_per_epoch - *slot;
             if bytes <= free {
-                self.used[e] += bytes;
-                let frac = self.used[e] / self.capacity_per_epoch;
+                *slot += bytes;
+                let frac = *slot / self.capacity_per_epoch;
                 return (((e as f64) + frac.min(1.0)) * EPOCH).max(t);
             }
             bytes -= free;
-            self.used[e] = self.capacity_per_epoch;
+            *slot = self.capacity_per_epoch;
             e += 1;
         }
     }
 }
 
-/// Run the DES for one launch. `chunk` tokens are advanced per scheduling
-/// decision (1 = exact, larger = faster with bounded error).
-pub fn simulate(
+/// Outer-token processes + pipe topology shared by [`simulate`] and
+/// [`simulate_reference`] (cost model identical between the two).
+/// Returns the processes plus the design fmax from the analytic estimate.
+fn build_procs(
     prog: &Program,
     model: &PerfModel,
     profiles: &[KernelProfile],
-    cfg: &DeviceConfig,
-    chunk: u64,
-) -> DesResult {
+) -> (Vec<Proc>, f64) {
     let analytic = model.estimate(profiles);
-    let fmax = analytic.fmax_hz;
 
     // Outer-token count: iterations of each kernel's first top-level loop.
     let mut procs: Vec<Proc> = vec![];
@@ -125,12 +176,12 @@ pub fn simulate(
             depth: 1,
             t: 0.0,
             done: 0,
-            recent: Default::default(),
         });
     }
 
-    // Pipe topology: consumer's upstream = producer index; depth = min depth
-    // of the connecting pipes.
+    // Pipe topology: consumer's upstream = producer index; depth = the
+    // deepest connecting pipe (the historical, deliberately loose
+    // backpressure bound — kept bit-compatible with simulate_reference).
     for pd in &prog.pipes {
         let mut producer = None;
         let mut consumer = None;
@@ -147,13 +198,158 @@ pub fn simulate(
             procs[c].depth = d;
         }
     }
+    (procs, analytic.fmax_hz)
+}
 
+/// Min-heap key: `(virtual time, process index)` — lexicographic order
+/// reproduces the linear scan's pick exactly (first index among the
+/// minimal times).
+#[derive(PartialEq)]
+struct SchedKey {
+    t: f64,
+    i: usize,
+}
+
+impl Eq for SchedKey {}
+
+impl Ord for SchedKey {
+    fn cmp(&self, other: &SchedKey) -> std::cmp::Ordering {
+        self.t.total_cmp(&other.t).then(self.i.cmp(&other.i))
+    }
+}
+
+impl PartialOrd for SchedKey {
+    fn partial_cmp(&self, other: &SchedKey) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Run the DES for one launch. `chunk` tokens are advanced per scheduling
+/// decision (1 = exact, larger = faster with bounded error).
+pub fn simulate(
+    prog: &Program,
+    model: &PerfModel,
+    profiles: &[KernelProfile],
+    cfg: &DeviceConfig,
+    chunk: u64,
+) -> DesResult {
+    let (mut procs, fmax) = build_procs(prog, model, profiles);
     let mut dram = Dram::new(cfg.dram_bytes_per_cycle(fmax));
 
-    // Round-based co-simulation: advance the least-advanced runnable proc.
+    // Reverse adjacency for the backpressure pass: consumers of each proc.
+    let mut downstream: Vec<Vec<usize>> = vec![vec![]; procs.len()];
+    for (j, p) in procs.iter().enumerate() {
+        if let Some(u) = p.upstream {
+            downstream[u].push(j);
+        }
+    }
+
+    // Heap-based co-simulation: pop the least-advanced unfinished proc.
+    // Only the popped proc's clock moves, so each proc has exactly one
+    // live heap entry and entries never go stale.
+    let mut heap: BinaryHeap<Reverse<SchedKey>> = procs
+        .iter()
+        .enumerate()
+        .map(|(i, p)| Reverse(SchedKey { t: p.t, i }))
+        .collect();
+    while let Some(Reverse(SchedKey { t, i })) = heap.pop() {
+        debug_assert_eq!(t, procs[i].t, "stale heap entry for proc {i}");
+        if procs[i].done >= procs[i].tokens {
+            continue;
+        }
+        // the pick time is the global minimum and clocks only advance:
+        // epochs before it are final
+        dram.retire(t);
+
+        let n = chunk.min(procs[i].tokens - procs[i].done);
+        // data dependency: token `done + n` needs upstream to have produced
+        // at least that many (channel latency added)
+        let mut start = procs[i].t;
+        if let Some(u) = procs[i].upstream {
+            let need = procs[i].done + n;
+            if procs[u].done < need && procs[u].done < procs[u].tokens {
+                // upstream not there yet: move this proc's clock to
+                // upstream's to deprioritize, and retry later
+                procs[i].t = procs[i].t.max(procs[u].t + cfg.channel_latency as f64);
+                heap.push(Reverse(SchedKey { t: procs[i].t, i }));
+                continue;
+            }
+            start = start.max(procs[u].t + cfg.channel_latency as f64);
+        }
+
+        let compute_end = start + procs[i].cost * n as f64;
+        let end = if procs[i].bytes > 0.0 {
+            dram.consume(start, procs[i].bytes * n as f64).max(compute_end)
+        } else {
+            compute_end
+        };
+        procs[i].t = end;
+        procs[i].done += n;
+
+        // backpressure: if this proc is a producer, cap how far it runs
+        // ahead of its consumers by depth tokens
+        for &j in &downstream[i] {
+            let lead = procs[i].done as i64 - procs[j].done as i64;
+            let max_lead = procs[j].depth as i64 + chunk as i64;
+            if lead > max_lead {
+                // producer stalls until consumer catches up: approximate
+                // by setting producer clock to consumer clock
+                let tj = procs[j].t;
+                if tj > procs[i].t {
+                    procs[i].t = tj;
+                }
+            }
+        }
+        if procs[i].done < procs[i].tokens {
+            heap.push(Reverse(SchedKey { t: procs[i].t, i }));
+        }
+    }
+
+    finish(prog, &procs, fmax, dram.peak_window)
+}
+
+/// The historical O(P)-scan scheduler with the ever-growing `Vec` DRAM
+/// ledger, kept verbatim as the equivalence baseline for the heap/ring
+/// implementation (`heap_scheduler_matches_reference_exactly`) and as the
+/// "before" leg of the `interp` bench ablation. Do not use in production
+/// paths: its ledger memory grows with simulated time.
+#[doc(hidden)]
+pub fn simulate_reference(
+    prog: &Program,
+    model: &PerfModel,
+    profiles: &[KernelProfile],
+    cfg: &DeviceConfig,
+    chunk: u64,
+) -> DesResult {
+    struct DramVec {
+        capacity_per_epoch: f64,
+        used: Vec<f64>,
+    }
+    impl DramVec {
+        fn consume(&mut self, t: f64, mut bytes: f64) -> f64 {
+            let mut e = (t / EPOCH) as usize;
+            loop {
+                if self.used.len() <= e {
+                    self.used.resize(e + 1, 0.0);
+                }
+                let free = self.capacity_per_epoch - self.used[e];
+                if bytes <= free {
+                    self.used[e] += bytes;
+                    let frac = self.used[e] / self.capacity_per_epoch;
+                    return (((e as f64) + frac.min(1.0)) * EPOCH).max(t);
+                }
+                bytes -= free;
+                self.used[e] = self.capacity_per_epoch;
+                e += 1;
+            }
+        }
+    }
+
+    let (mut procs, fmax) = build_procs(prog, model, profiles);
+    let mut dram =
+        DramVec { capacity_per_epoch: cfg.dram_bytes_per_cycle(fmax) * EPOCH, used: vec![] };
+
     loop {
-        // pick unfinished process with smallest virtual time whose
-        // dependencies allow progress
         let mut pick: Option<usize> = None;
         for (i, p) in procs.iter().enumerate() {
             if p.done >= p.tokens {
@@ -169,24 +365,14 @@ pub fn simulate(
         };
 
         let n = chunk.min(procs[i].tokens - procs[i].done);
-        // data dependency: token `done + n` needs upstream to have produced
-        // at least that many (channel latency added)
         let mut start = procs[i].t;
         if let Some(u) = procs[i].upstream {
             let need = procs[i].done + n;
-            if procs[u].done < need {
-                // upstream not there yet: advance upstream first by
-                // retrying (set our clock to upstream's and loop)
-                if procs[u].done < procs[u].tokens {
-                    // move this proc's clock to upstream's to deprioritize
-                    procs[i].t = procs[i].t.max(procs[u].t + cfg.channel_latency as f64);
-                    continue;
-                }
+            if procs[u].done < need && procs[u].done < procs[u].tokens {
+                procs[i].t = procs[i].t.max(procs[u].t + cfg.channel_latency as f64);
+                continue;
             }
             start = start.max(procs[u].t + cfg.channel_latency as f64);
-            // backpressure on producer handled implicitly by consumer lag:
-            // producer may run ahead at most depth tokens
-            let _ = procs[i].depth;
         }
 
         let compute_end = start + procs[i].cost * n as f64;
@@ -195,23 +381,14 @@ pub fn simulate(
         } else {
             compute_end
         };
-        let p = &mut procs[i];
-        p.t = end;
-        p.done += n;
-        p.recent.push_back(end);
-        if p.recent.len() > p.depth {
-            p.recent.pop_front();
-        }
+        procs[i].t = end;
+        procs[i].done += n;
 
-        // backpressure: if this proc is a producer, cap how far it runs
-        // ahead of its consumer by depth tokens
         for j in 0..procs.len() {
             if procs[j].upstream == Some(i) {
                 let lead = procs[i].done as i64 - procs[j].done as i64;
                 let max_lead = procs[j].depth as i64 + chunk as i64;
                 if lead > max_lead {
-                    // producer stalls until consumer catches up: approximate
-                    // by setting producer clock to consumer clock
                     let tj = procs[j].t;
                     if tj > procs[i].t {
                         procs[i].t = tj;
@@ -221,6 +398,10 @@ pub fn simulate(
         }
     }
 
+    finish(prog, &procs, fmax, dram.used.len())
+}
+
+fn finish(prog: &Program, procs: &[Proc], fmax: f64, dram_window: usize) -> DesResult {
     let cycles = procs.iter().map(|p| p.t).fold(0.0, f64::max);
     DesResult {
         cycles,
@@ -228,9 +409,10 @@ pub fn simulate(
         finish: prog
             .kernels
             .iter()
-            .zip(&procs)
+            .zip(procs)
             .map(|(k, p)| (k.name.clone(), p.t))
             .collect(),
+        dram_window,
     }
 }
 
@@ -270,6 +452,9 @@ mod tests {
         let d = simulate(&prog, &model, &run.profiles, &cfg, 64);
         let ratio = d.cycles / a.cycles;
         assert!(ratio > 0.8 && ratio < 2.0, "DES/analytic = {ratio}");
+        // the heap scheduler + epoch ring are storage changes only
+        let r = simulate_reference(&prog, &model, &run.profiles, &cfg, 64);
+        assert_eq!(d.cycles, r.cycles, "heap DES diverged from the reference scan");
     }
 
     #[test]
@@ -283,10 +468,112 @@ mod tests {
             let run = run_group(&prog, &img, &ExecOptions::default()).unwrap();
             let model = PerfModel::new(&prog, &cfg);
             let d = simulate(&prog, &model, &run.profiles, &cfg, 64);
+            let r = simulate_reference(&prog, &model, &run.profiles, &cfg, 64);
+            assert_eq!(d.cycles, r.cycles, "depth {depth}: heap DES diverged from reference");
             times.push(d.cycles);
         }
         let max = times.iter().cloned().fold(0.0, f64::max);
         let min = times.iter().cloned().fold(f64::MAX, f64::min);
         assert!(max / min < 1.15, "depth sweep spread too large: {times:?}");
+    }
+
+    /// Bit-exact equivalence on a topology that stresses the scheduler:
+    /// a replicated producer/consumer program (4 processes, asymmetric
+    /// token counts) at chunk 1 — the scheduling-heaviest configuration,
+    /// where a tie-breaking or staleness bug in the heap would surface.
+    #[test]
+    fn heap_scheduler_matches_reference_exactly() {
+        let cfg = DeviceConfig::pac_a10();
+        let k = crate::transform::examples::fig2_kernel();
+        let prog =
+            crate::transform::apply_variant(&k, crate::transform::Variant::MxCx {
+                parts: 2,
+                depth: 1,
+            })
+            .unwrap();
+        let row = vec![0i64, 2, 4, 5, 7];
+        let col = vec![1i64, 2, 0, 3, 0, 1, 2];
+        let mut img = MemoryImage::new();
+        img.add_i64s("row", &row)
+            .add_i64s("col", &col)
+            .add_i64s("c_array", &[-1, -1, 3, -1])
+            .add_f32s("node_value", &[0.3, 0.1, 0.9, 0.7])
+            .add_zeros("min_array", Ty::F32, 4)
+            .add_zeros("stop", Ty::I32, 1);
+        img.set_i("num_nodes", 4).set_i("num_edges", 7);
+        let run = run_group(&prog, &img, &ExecOptions::default()).unwrap();
+        let model = PerfModel::new(&prog, &cfg);
+        for chunk in [1u64, 7, 64] {
+            let d = simulate(&prog, &model, &run.profiles, &cfg, chunk);
+            let r = simulate_reference(&prog, &model, &run.profiles, &cfg, chunk);
+            assert_eq!(d.cycles, r.cycles, "chunk {chunk}: cycles diverged");
+            assert_eq!(d.finish, r.finish, "chunk {chunk}: per-kernel finish times diverged");
+        }
+    }
+
+    /// The epoch ring must retire dead epochs as simulated time advances:
+    /// a long monotone consume stream keeps the live window small where
+    /// the historical `Vec` ledger grew one slot per epoch forever.
+    #[test]
+    fn dram_ring_memory_stays_bounded() {
+        let mut d = Dram::new(1.0); // 256 bytes per epoch
+        let epochs = 100_000usize;
+        for step in 0..epochs {
+            let t = step as f64 * EPOCH;
+            d.retire(t);
+            // bursty but sustainable traffic (~74% average utilization):
+            // every 10th step overdraws ~4 epochs ahead, the rest underfill
+            let bytes = if step % 10 == 0 { 1000.0 } else { 100.0 };
+            let end = d.consume(t, bytes);
+            assert!(end >= t);
+        }
+        assert!(
+            d.peak_window <= 16,
+            "ring window {} epochs; a leaking ledger would hold ~{epochs}",
+            d.peak_window
+        );
+        assert!(d.ring.len() <= 16);
+        assert!(d.base > 0, "old epochs must actually retire");
+    }
+
+    /// Ring-vs-Vec ledger equivalence on an adversarial pattern: starts
+    /// jump ahead (upstream latency) and fall back to the pick time, with
+    /// overdraw spilling several epochs forward.
+    #[test]
+    fn dram_ring_matches_vec_ledger_arithmetic() {
+        let mut ring = Dram::new(0.5);
+        let mut used: Vec<f64> = vec![]; // reference ledger
+        let capacity = 0.5 * EPOCH;
+        let mut reference_consume = |t: f64, mut bytes: f64| -> f64 {
+            let mut e = (t / EPOCH) as usize;
+            loop {
+                if used.len() <= e {
+                    used.resize(e + 1, 0.0);
+                }
+                let free = capacity - used[e];
+                if bytes <= free {
+                    used[e] += bytes;
+                    let frac = used[e] / capacity;
+                    return (((e as f64) + frac.min(1.0)) * EPOCH).max(t);
+                }
+                bytes -= free;
+                used[e] = capacity;
+                e += 1;
+            }
+        };
+        let mut pick = 0.0f64;
+        for step in 0..5_000 {
+            pick += (step % 7) as f64 * 13.0; // non-decreasing pick times
+            ring.retire(pick);
+            // starts at or after the pick, sometimes far ahead
+            let start = pick + (step % 11) as f64 * 97.0;
+            let bytes = 1.0 + (step % 13) as f64 * 40.0;
+            assert_eq!(
+                ring.consume(start, bytes),
+                reference_consume(start, bytes),
+                "step {step}: ring and Vec ledgers diverged"
+            );
+        }
+        assert!(ring.ring.len() < used.len(), "ring must hold fewer live epochs");
     }
 }

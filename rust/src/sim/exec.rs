@@ -2,10 +2,9 @@
 //!
 //! Executes a device [`Program`] the way the board would: every kernel of
 //! the launch group runs on its own thread (the paper's step 14 — all
-//! kernels enqueued on separate queues), blocking pipes are bounded
-//! `sync_channel`s with exactly the Intel-channel semantics (blocking
-//! read/write, FIFO order, declared minimum depth), and global memory is
-//! the shared [`MemoryImage`].
+//! kernels enqueued on separate queues), blocking pipes honour the
+//! Intel-channel semantics (blocking read/write, FIFO order, declared
+//! *minimum* depth), and global memory is the shared [`MemoryImage`].
 //!
 //! Kernels are first *compiled*: variable names resolve to frame slots,
 //! scalar parameters are baked to constants, buffers and pipes to dense
@@ -13,13 +12,35 @@
 //! that `analysis::lsu::select_lsus` assigns — the profiles this
 //! interpreter emits line up 1:1 with the static analysis, which is what
 //! makes the performance model trace-driven.
+//!
+//! § Perf — chunked pipe transfers: tokens used to cross a
+//! `sync_channel<u64>` one at a time, paying a full synchronization per
+//! token on the hottest path. They now move in chunks of
+//! `ceil(depth / 2)` tokens, capped at 1024 ([`chunk_for_depth`]),
+//! through a `sync_channel<Vec<u64>>` holding [`chunks_in_flight`]
+//! chunks, and spent chunk buffers are handed back to the producer over
+//! a recycle channel so the steady state allocates nothing per outer
+//! iteration. Capacity accounting: `chunk * (capacity + 1) >= depth + 1`,
+//! so a producer always *completes* at least `depth` writes before
+//! blocking — the `sync_channel(depth)` per-token contract (the declared
+//! depth is a *minimum* the offline compiler may deepen, §3 — see
+//! [`crate::ir::PipeDecl`]) — and holds at most `depth + 3 * chunk`
+//! tokens transiently. Deadlock freedom with buffering: a producer flushes
+//! every pending buffer before parking on a full channel, and a consumer
+//! flushes its own pending *sends* before parking on an empty one —
+//! conditional load sites fire at data-dependent rates, so one pipe's
+//! tokens must never sit buffered while a peer starves on them.
+//! Programs whose kernels share writable buffers opt out of chunking
+//! entirely (`ExecOptions::exact_pipes`): they run per-token with
+//! capacity exactly the declared depth, preserving the historical
+//! producer-lead bound their semantics depend on.
 
 use super::mem::{Buffer, MemoryImage};
 use super::profile::{KernelProfile, LoopStats};
 use crate::ir::{BinOp, Expr, Kernel, KernelKind, LoopId, Program, Stmt, Ty, UnOp, Val};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
 
 #[derive(Debug, PartialEq)]
@@ -280,11 +301,160 @@ pub fn compile_kernel(
 // Runtime
 // ---------------------------------------------------------------------------
 
+/// Upper bound on tokens per transfer chunk (8 KiB of `u64` bits) — keeps
+/// very deep pipes from buffering unboundedly large chunks.
+const MAX_CHUNK: usize = 1024;
+
+/// Tokens per chunk for a pipe of the given declared depth: `ceil(d/2)`,
+/// capped at [`MAX_CHUNK`]. Paired with [`chunks_in_flight`] so that a
+/// producer can always *complete* at least `depth` writes before
+/// blocking (the declared minimum — see the invariant test
+/// `chunk_sizes_honor_declared_minimum_depth`), while the transient
+/// maximum (producer buffer + channel + consumer buffer) stays within
+/// `depth + 3 * chunk`.
+pub fn chunk_for_depth(depth: usize) -> usize {
+    depth.max(1).div_ceil(2).min(MAX_CHUNK)
+}
+
+/// Channel capacity in chunks for a declared depth: the smallest count
+/// such that `chunk * (capacity + 1) >= depth + 1`. Writes completed
+/// with zero consumer progress = `capacity * chunk` delivered + `chunk -
+/// 1` buffered below the flush threshold — the `depth + 1`-th write is
+/// the first allowed to park, exactly the `sync_channel(depth)`
+/// per-token contract. 1 or 2 slots for depths up to `2 * MAX_CHUNK`;
+/// deeper pipes get proportionally more slots instead of bigger chunks.
+pub fn chunks_in_flight(depth: usize) -> usize {
+    let d = depth.max(1);
+    (d + 1).div_ceil(chunk_for_depth(d)).saturating_sub(1).max(1)
+}
+
+/// Producer endpoint: a local chunk buffer in front of the channel, plus
+/// the recycle lane returning spent chunk allocations from the consumer.
+struct PipeTx {
+    tx: SyncSender<Vec<u64>>,
+    recycle: Receiver<Vec<u64>>,
+    buf: Vec<u64>,
+    chunk: usize,
+    /// Declared pipe depth: how many unread tokens a consumer that
+    /// exited may leave behind before the overrun is a trace mismatch.
+    depth: u64,
+    /// Tokens silently discarded because the consumer was gone — a real
+    /// FIFO's unread contents at the end of the launch group.
+    dropped: u64,
+}
+
+impl PipeTx {
+    /// A cleared buffer for the next chunk — recycled from the consumer
+    /// when one has come back, freshly allocated otherwise.
+    fn next_buf(&mut self) -> Vec<u64> {
+        match self.recycle.try_recv() {
+            Ok(mut v) => {
+                v.clear();
+                v
+            }
+            Err(_) => Vec::with_capacity(self.chunk),
+        }
+    }
+
+    /// Non-blocking flush: `Ok(true)` settled (delivered, nothing
+    /// pending, or discarded within the dead-consumer tolerance),
+    /// `Ok(false)` channel full (tokens stay buffered), `Err(())` the
+    /// consumer is gone *and* more than the declared depth of tokens
+    /// went undelivered — a token-trace mismatch, not teardown slack.
+    ///
+    /// The tolerance keeps the outcome schedule-independent: under the
+    /// per-token channels, whether a trailing write to an exiting
+    /// consumer returned Ok (delivered, dropped at Receiver teardown) or
+    /// PipeClosed raced on thread timing. Here, up to `depth` unread
+    /// tokens are always tolerated — what the declared FIFO could have
+    /// absorbed — and a larger overrun always errors.
+    fn try_flush(&mut self) -> Result<bool, ()> {
+        if self.buf.is_empty() {
+            return Ok(true);
+        }
+        let full = std::mem::take(&mut self.buf);
+        match self.tx.try_send(full) {
+            Ok(()) => {
+                self.buf = self.next_buf();
+                Ok(true)
+            }
+            Err(TrySendError::Full(full)) => {
+                self.buf = full;
+                Ok(false)
+            }
+            Err(TrySendError::Disconnected(full)) => {
+                self.dropped += full.len() as u64;
+                if self.dropped > self.depth {
+                    Err(())
+                } else {
+                    Ok(true)
+                }
+            }
+        }
+    }
+
+    /// Blocking flush with the same dead-consumer tolerance as
+    /// [`PipeTx::try_flush`]. Only safe when this kernel holds no other
+    /// pipe's tokens (see `Runner::flush_pipe`'s parking condition).
+    fn flush_blocking(&mut self) -> Result<(), ()> {
+        if self.buf.is_empty() {
+            return Ok(());
+        }
+        let next = self.next_buf();
+        let full = std::mem::replace(&mut self.buf, next);
+        match self.tx.send(full) {
+            Ok(()) => Ok(()),
+            Err(std::sync::mpsc::SendError(full)) => {
+                self.dropped += full.len() as u64;
+                if self.dropped > self.depth {
+                    Err(())
+                } else {
+                    Ok(())
+                }
+            }
+        }
+    }
+}
+
+/// Consumer endpoint: drains one received chunk at a time and returns the
+/// spent allocation to the producer.
+struct PipeRx {
+    rx: Receiver<Vec<u64>>,
+    recycle: Sender<Vec<u64>>,
+    buf: Vec<u64>,
+    pos: usize,
+}
+
+impl PipeRx {
+    fn has_buffered(&self) -> bool {
+        self.pos < self.buf.len()
+    }
+
+    /// Next token, blocking for the next chunk when the local one is
+    /// drained. `Err(())` = producer gone with no tokens left.
+    fn pop(&mut self) -> Result<u64, ()> {
+        loop {
+            if self.pos < self.buf.len() {
+                let v = self.buf[self.pos];
+                self.pos += 1;
+                return Ok(v);
+            }
+            let spent = std::mem::take(&mut self.buf);
+            self.pos = 0;
+            if spent.capacity() > 0 {
+                // producer may already be gone; reuse is best-effort
+                let _ = self.recycle.send(spent);
+            }
+            self.buf = self.rx.recv().map_err(|_| ())?;
+        }
+    }
+}
+
 struct Runner<'k> {
     k: &'k CompiledKernel,
     slots: Vec<Val>,
-    senders: Vec<Option<SyncSender<u64>>>,
-    receivers: Vec<Option<Receiver<u64>>>,
+    senders: Vec<Option<PipeTx>>,
+    receivers: Vec<Option<PipeRx>>,
     pipe_tys: Vec<Ty>,
     pipe_names: Vec<String>,
     profile: KernelProfile,
@@ -294,6 +464,90 @@ struct Runner<'k> {
 }
 
 impl<'k> Runner<'k> {
+    fn closed(&self, pipe: usize) -> ExecError {
+        ExecError::PipeClosed {
+            kernel: self.k.name.clone(),
+            pipe: self.pipe_names[pipe].clone(),
+        }
+    }
+
+    /// Deliver pipe `p`'s buffered chunk. While the channel is full, every
+    /// *other* pending buffer is re-offered on each retry: a peer starving
+    /// on a different pipe (conditional sites fire at data-dependent
+    /// rates) must always be able to drain tokens this kernel holds, or
+    /// the group deadlocks where the per-token channels delivered every
+    /// write immediately — and the peer may only *become* ready to drain
+    /// them while we are already waiting, so a single pre-park pass is
+    /// not enough. Once every other buffer is empty, nothing this kernel
+    /// holds can starve anyone, and the wait downgrades to a native
+    /// blocking send (zero CPU, immediate wake) instead of the poll loop.
+    fn flush_pipe(&mut self, p: usize) -> Result<(), ExecError> {
+        let mut spins = 0u32;
+        loop {
+            match self.senders[p].as_mut() {
+                None => return Ok(()),
+                Some(tx) => match tx.try_flush() {
+                    Ok(true) => return Ok(()),
+                    Ok(false) => {}
+                    // beyond-depth overrun of a dead pipe
+                    Err(()) => return Err(self.closed(p)),
+                },
+            }
+            self.try_flush_all_sends()?;
+            let others_empty = self
+                .senders
+                .iter()
+                .enumerate()
+                .all(|(q, s)| q == p || s.as_ref().is_none_or(|tx| tx.buf.is_empty()));
+            if others_empty {
+                // this kernel writes nothing while parked, so the
+                // emptiness invariant holds for the whole wait
+                let r = self.senders[p].as_mut().unwrap().flush_blocking();
+                return match r {
+                    Ok(()) => Ok(()),
+                    Err(()) => Err(self.closed(p)),
+                };
+            }
+            spins += 1;
+            if spins < 64 {
+                std::thread::yield_now();
+            } else {
+                // peers still hold undelivered tokens: poll with backoff
+                std::thread::sleep(std::time::Duration::from_micros(50));
+            }
+        }
+    }
+
+    /// Non-blocking delivery of every pending outgoing buffer — called
+    /// before parking (on a read, or on another pipe's full channel) so
+    /// tokens this kernel owes are visible first. A full channel is fine:
+    /// the consumer already has a whole chunk to drain there; a consumer
+    /// that exited within its pipe's depth tolerance is fine too (see
+    /// [`PipeTx::try_flush`]). Only a beyond-depth overrun errors.
+    fn try_flush_all_sends(&mut self) -> Result<(), ExecError> {
+        for q in 0..self.senders.len() {
+            let over = match self.senders[q].as_mut() {
+                Some(tx) => tx.try_flush().is_err(),
+                None => false,
+            };
+            if over {
+                return Err(self.closed(q));
+            }
+        }
+        Ok(())
+    }
+
+    /// End-of-kernel drain of every buffered partial chunk. Deadlock-free
+    /// by the same argument as [`Runner::flush_pipe`] (which it reuses);
+    /// dead consumers are tolerated up to their pipes' declared depths
+    /// and error beyond (token-trace mismatch).
+    fn flush_all_sends(&mut self) -> Result<(), ExecError> {
+        for p in 0..self.senders.len() {
+            self.flush_pipe(p)?;
+        }
+        Ok(())
+    }
+
     #[inline]
     fn eval(&mut self, e: EId) -> Result<Val, ExecError> {
         Ok(match self.k.exprs[e as usize] {
@@ -386,24 +640,33 @@ impl<'k> Runner<'k> {
                 RStmt::PipeWrite { pipe, val } => {
                     let v = self.eval(*val)?;
                     self.profile.pipe_writes += 1;
-                    let tx = self.senders[*pipe as usize]
-                        .as_ref()
+                    let p = *pipe as usize;
+                    let tx = self.senders[p]
+                        .as_mut()
                         .expect("kernel writes undeclared pipe endpoint");
-                    tx.send(v.to_bits()).map_err(|_| ExecError::PipeClosed {
-                        kernel: self.k.name.clone(),
-                        pipe: self.pipe_names[*pipe as usize].clone(),
-                    })?;
+                    tx.buf.push(v.to_bits());
+                    if tx.buf.len() >= tx.chunk {
+                        self.flush_pipe(p)?;
+                    }
                 }
                 RStmt::PipeRead { slot, pipe } => {
-                    let rx = self.receivers[*pipe as usize]
+                    let p = *pipe as usize;
+                    let buffered = self.receivers[p]
                         .as_ref()
-                        .expect("kernel reads undeclared pipe endpoint");
-                    let bits = rx.recv().map_err(|_| ExecError::PipeClosed {
-                        kernel: self.k.name.clone(),
-                        pipe: self.pipe_names[*pipe as usize].clone(),
-                    })?;
+                        .expect("kernel reads undeclared pipe endpoint")
+                        .has_buffered();
+                    if !buffered {
+                        // about to park on an empty pipe: deliver whatever
+                        // this kernel still owes its own consumers first
+                        self.try_flush_all_sends()?;
+                    }
+                    let popped = self.receivers[p].as_mut().unwrap().pop();
+                    let bits = match popped {
+                        Ok(b) => b,
+                        Err(()) => return Err(self.closed(p)),
+                    };
                     self.profile.pipe_reads += 1;
-                    self.slots[*slot as usize] = Val::from_bits(self.pipe_tys[*pipe as usize], bits);
+                    self.slots[*slot as usize] = Val::from_bits(self.pipe_tys[p], bits);
                 }
             }
         }
@@ -416,11 +679,21 @@ impl<'k> Runner<'k> {
 pub struct ExecOptions {
     /// Collect site/loop profiles (small constant per-op cost).
     pub profile: bool,
+    /// Per-token pipe transport with channel capacity exactly the
+    /// declared depth — the historical semantics. Chunked transfers let a
+    /// producer run up to `~2 * depth` tokens ahead, which is fine when
+    /// the functional trace is interleaving-independent but widens the
+    /// race window of depth-*sensitive* programs (NW's split is only
+    /// valid while the memory kernel stays under a row's width ahead).
+    /// `Harness::launch` sets this automatically from
+    /// `unit_depth_invariant` / the workload's benign-races vouch; it
+    /// defaults to false (chunked) for race-free standalone use.
+    pub exact_pipes: bool,
 }
 
 impl Default for ExecOptions {
     fn default() -> Self {
-        ExecOptions { profile: true }
+        ExecOptions { profile: true, exact_pipes: false }
     }
 }
 
@@ -447,17 +720,33 @@ pub fn run_group(prog: &Program, image: &MemoryImage, opts: &ExecOptions) -> Res
         .map(|k| compile_kernel(k, image, &pipe_ix))
         .collect::<Result<_, _>>()?;
 
-    // Create channels; hand endpoints to the right kernels.
-    let mut senders: Vec<Vec<Option<SyncSender<u64>>>> = (0..prog.kernels.len())
+    // Create channels; hand endpoints to the right kernels. One chunk in
+    // flight per pipe; the chunk size carries the depth bound.
+    let mut senders: Vec<Vec<Option<PipeTx>>> = (0..prog.kernels.len())
         .map(|_| (0..prog.pipes.len()).map(|_| None).collect())
         .collect();
-    let mut receivers: Vec<Vec<Option<Receiver<u64>>>> = (0..prog.kernels.len())
+    let mut receivers: Vec<Vec<Option<PipeRx>>> = (0..prog.kernels.len())
         .map(|_| (0..prog.pipes.len()).map(|_| None).collect())
         .collect();
     for (pi, pd) in prog.pipes.iter().enumerate() {
-        let (tx, rx) = sync_channel::<u64>(pd.depth.max(1));
-        let mut tx = Some(tx);
-        let mut rx = Some(rx);
+        // exact mode: one token per chunk, capacity = declared depth —
+        // bit-for-bit the old sync_channel(depth) producer lead
+        let (chunk, slots) = if opts.exact_pipes {
+            (1, pd.depth.max(1))
+        } else {
+            (chunk_for_depth(pd.depth), chunks_in_flight(pd.depth))
+        };
+        let (ctx, crx) = sync_channel::<Vec<u64>>(slots);
+        let (rtx, rrx) = channel::<Vec<u64>>();
+        let mut tx = Some(PipeTx {
+            tx: ctx,
+            recycle: rrx,
+            buf: Vec::with_capacity(chunk),
+            chunk,
+            depth: pd.depth.max(1) as u64,
+            dropped: 0,
+        });
+        let mut rx = Some(PipeRx { rx: crx, recycle: rtx, buf: vec![], pos: 0 });
         for (ki, k) in prog.kernels.iter().enumerate() {
             crate::ir::stmt::visit_body(&k.body, &mut |s| match s {
                 Stmt::PipeWrite { pipe, .. } if pipe == &pd.name => {
@@ -498,7 +787,16 @@ pub fn run_group(prog: &Program, image: &MemoryImage, opts: &ExecOptions) -> Res
                     loop_stats: vec![LoopStats::default(); ck.loop_ids.len()],
                     profiling,
                 };
-                let out = r.exec(&ck.body);
+                // drain partial chunks before the endpoints drop; on an
+                // error, still deliver what was written where there is
+                // room (per-token channels delivered every write), but
+                // never block a failing kernel
+                let mut out = r.exec(&ck.body);
+                if out.is_ok() {
+                    out = r.flush_all_sends();
+                } else {
+                    let _ = r.try_flush_all_sends();
+                }
                 // fold dense counters back into the LoopId-keyed profile
                 for (lix, st) in r.loop_stats.iter().enumerate() {
                     if st.invocations > 0 {
@@ -644,6 +942,71 @@ mod tests {
                 "variant {variant:?}"
             );
         }
+    }
+
+    /// Chunked transfers must still admit at least the declared depth of
+    /// written-but-unread tokens (producer buffer + in-flight chunks) for
+    /// *every* depth — deeper pipes than the chunk cap get more chunk
+    /// slots — and depth 1 must stay per-token exact.
+    #[test]
+    fn chunk_sizes_honor_declared_minimum_depth() {
+        assert_eq!(chunk_for_depth(0), 1); // depth 0 normalizes to 1
+        assert_eq!(chunk_for_depth(1), 1);
+        assert_eq!(chunk_for_depth(2), 1);
+        assert_eq!(chunk_for_depth(3), 2);
+        assert_eq!(chunk_for_depth(100), 50);
+        assert_eq!(chunk_for_depth(1000), 500);
+        assert_eq!(chunk_for_depth(1_000_000), 1024, "chunks are memory-capped");
+        assert_eq!(chunks_in_flight(1), 1);
+        assert_eq!(chunks_in_flight(2048), 2);
+        assert_eq!(chunks_in_flight(4096), 4, "deep pipes scale slots, not chunk size");
+        for d in (1..=4096usize).chain([10_000, 1_000_000]) {
+            let (chunk, cap) = (chunk_for_depth(d), chunks_in_flight(d));
+            // completable writes with zero consumer progress: cap chunks
+            // delivered + chunk-1 buffered below the flush threshold
+            assert!(
+                cap * chunk + chunk - 1 >= d,
+                "depth {d}: chunk {chunk} x {cap} slots completes fewer than depth writes"
+            );
+        }
+    }
+
+    /// Exact mode (per-token, capacity = declared depth — what
+    /// depth-sensitive launch units run under) must produce the same
+    /// results and the same profiles as the chunked transport on a
+    /// race-free program.
+    #[test]
+    fn exact_pipes_mode_matches_chunked_results() {
+        let base = saxpy();
+        let img1 = saxpy_image(300);
+        let img2 = saxpy_image(300);
+        let ff = crate::transform::feedforward(&base, 100).unwrap();
+        let exact = ExecOptions { exact_pipes: true, ..ExecOptions::default() };
+        let r1 = run_group(&ff, &img1, &exact).unwrap();
+        let r2 = run_group(&ff, &img2, &ExecOptions::default()).unwrap();
+        assert_eq!(img1.buf("out").unwrap().to_f32s(), img2.buf("out").unwrap().to_f32s());
+        for (a, b) in r1.profiles.iter().zip(&r2.profiles) {
+            let (mut a, mut b) = (a.clone(), b.clone());
+            a.host_nanos = 0;
+            b.host_nanos = 0;
+            assert_eq!(a, b, "profiles must not depend on the transport mode");
+        }
+    }
+
+    /// Deep pipes exercise multi-chunk streaming plus the end-of-kernel
+    /// partial-chunk drain; the functional result must match depth 1.
+    #[test]
+    fn deep_pipes_stream_in_chunks_and_drain_partials() {
+        let base = saxpy();
+        let img1 = saxpy_image(777); // odd size: final chunk is partial
+        let img2 = saxpy_image(777);
+        let ff1 = crate::transform::feedforward(&base, 1).unwrap();
+        let ff1000 = crate::transform::feedforward(&base, 1000).unwrap();
+        run_group(&ff1, &img1, &ExecOptions::default()).unwrap();
+        let run = run_group(&ff1000, &img2, &ExecOptions::default()).unwrap();
+        assert_eq!(img1.buf("out").unwrap().to_f32s(), img2.buf("out").unwrap().to_f32s());
+        let wr: u64 = run.profiles.iter().map(|p| p.pipe_writes).sum();
+        assert_eq!(wr, 2 * 777, "chunking must not change token counts");
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! summarization, so memory stays bounded on multi-million-iteration runs).
 
 use crate::ir::LoopId;
+use crate::util::json::Json;
 use std::collections::HashMap;
 
 /// Address-stream summary for one static memory site. Site ids share the
@@ -56,7 +57,56 @@ impl SiteStats {
         self.same += other.same;
         self.lines += other.lines;
     }
+
+    /// Compact array form for the persisted trace tier:
+    /// `[count, seq, same, lines, last_addr, started]`. All six fields are
+    /// kept (including the run-state pair) so a deserialized profile is
+    /// bit-equal to the live one — the replay/cold byte-identity proof in
+    /// `tests/integration_store.rs` depends on it.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(vec![
+            Json::Num(self.count as f64),
+            Json::Num(self.seq as f64),
+            Json::Num(self.same as f64),
+            Json::Num(self.lines as f64),
+            Json::Num(self.last_addr as f64),
+            Json::Num(if self.started { 1.0 } else { 0.0 }),
+        ])
+    }
+
+    /// Inverse of [`SiteStats::to_json`]; malformed input is `None` —
+    /// including magnitudes past 2^53, where `f64` rounds integers
+    /// silently: such a record cannot be trusted to roundtrip bit-equal,
+    /// so it must read as corruption (a trace-tier miss), never as a
+    /// slightly-wrong profile.
+    pub fn from_json(v: &Json) -> Option<SiteStats> {
+        let a = v.as_array()?;
+        if a.len() != 6 {
+            return None;
+        }
+        let u = |i: usize| -> Option<u64> {
+            let n = a[i].as_f64()?;
+            (n >= 0.0 && n.fract() == 0.0 && n < MAX_SAFE_COUNT).then_some(n as u64)
+        };
+        Some(SiteStats {
+            count: u(0)?,
+            seq: u(1)?,
+            same: u(2)?,
+            lines: u(3)?,
+            last_addr: {
+                let n = a[4].as_f64()?;
+                (n.fract() == 0.0 && n.abs() < MAX_SAFE_COUNT).then_some(n as i64)?
+            },
+            started: u(5)? != 0,
+        })
+    }
 }
+
+/// 2^53. Counters and addresses at or above it cannot be trusted to have
+/// survived the `f64` JSON number encoding bit-equal (2^53 + 1 rounds to
+/// 2^53 itself, so the boundary value is ambiguous too — hence the
+/// *strict* comparisons), and the deserializers reject them as corrupt.
+const MAX_SAFE_COUNT: f64 = 9_007_199_254_740_992.0;
 
 /// Per-static-loop dynamic counts.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -68,7 +118,7 @@ pub struct LoopStats {
 }
 
 /// The full profile of one kernel execution (one launch).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct KernelProfile {
     pub kernel: String,
     pub loops: HashMap<LoopId, LoopStats>,
@@ -113,6 +163,71 @@ impl KernelProfile {
         self.pipe_reads += other.pipe_reads;
         self.host_nanos += other.host_nanos;
     }
+
+    /// Serialize for the persistent trace tier (`coordinator::store`).
+    /// Loops are written sorted by `LoopId` so the document is canonical;
+    /// `host_nanos` is deliberately *not* persisted — it is wall clock of
+    /// the recording host, not part of the modelled trace, and keeping it
+    /// out makes trace files deterministic across machines.
+    pub fn to_json(&self) -> Json {
+        let mut loops: Vec<(LoopId, LoopStats)> =
+            self.loops.iter().map(|(id, ls)| (*id, *ls)).collect();
+        loops.sort_by_key(|(id, _)| id.0);
+        Json::Obj(vec![
+            ("kernel".into(), Json::Str(self.kernel.clone())),
+            ("pipe_writes".into(), Json::Num(self.pipe_writes as f64)),
+            ("pipe_reads".into(), Json::Num(self.pipe_reads as f64)),
+            (
+                "loops".into(),
+                Json::Arr(
+                    loops
+                        .iter()
+                        .map(|(id, ls)| {
+                            Json::Arr(vec![
+                                Json::Num(f64::from(id.0)),
+                                Json::Num(ls.invocations as f64),
+                                Json::Num(ls.iters as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("sites".into(), Json::Arr(self.sites.iter().map(SiteStats::to_json).collect())),
+        ])
+    }
+
+    /// Inverse of [`KernelProfile::to_json`] (`host_nanos` reads as 0).
+    pub fn from_json(v: &Json) -> Option<KernelProfile> {
+        let ctr = |n: &f64| *n >= 0.0 && n.fract() == 0.0 && *n < MAX_SAFE_COUNT;
+        let mut loops = HashMap::new();
+        for l in v.get("loops")?.as_array()? {
+            let a = l.as_array()?;
+            if a.len() != 3 {
+                return None;
+            }
+            let id = LoopId(a[0].as_f64().filter(|n| ctr(n) && *n <= f64::from(u32::MAX))? as u32);
+            loops.insert(
+                id,
+                LoopStats {
+                    invocations: a[1].as_f64().filter(ctr)? as u64,
+                    iters: a[2].as_f64().filter(ctr)? as u64,
+                },
+            );
+        }
+        Some(KernelProfile {
+            kernel: v.get("kernel")?.as_str()?.to_string(),
+            loops,
+            sites: v
+                .get("sites")?
+                .as_array()?
+                .iter()
+                .map(SiteStats::from_json)
+                .collect::<Option<Vec<_>>>()?,
+            pipe_writes: v.get("pipe_writes")?.as_f64().filter(ctr)? as u64,
+            pipe_reads: v.get("pipe_reads")?.as_f64().filter(ctr)? as u64,
+            host_nanos: 0,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -140,6 +255,45 @@ mod tests {
             s.record(x.abs());
         }
         assert!(s.seq_frac() < 0.05, "seq_frac={}", s.seq_frac());
+    }
+
+    /// Trace-tier roundtrip: every field the performance models read
+    /// (counts, sequentiality, loop trips, pipe ops) must survive JSON —
+    /// including the SiteStats run-state pair, so a replayed profile is
+    /// `==` the recorded one. `host_nanos` is wall clock and reads as 0.
+    #[test]
+    fn profile_json_roundtrips_exactly() {
+        let mut p = KernelProfile::new("k_mem", 2);
+        for a in [0i64, 1, 2, 2, 9] {
+            p.sites[0].record(a);
+        }
+        p.sites[1].record(-3);
+        p.loops.insert(LoopId(0), LoopStats { invocations: 1, iters: 5 });
+        p.loops.insert(LoopId(2), LoopStats { invocations: 5, iters: 40 });
+        p.pipe_writes = 10;
+        p.pipe_reads = 0;
+        p.host_nanos = 0; // recorded traces zero this before serializing
+        let text = p.to_json().to_pretty();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(KernelProfile::from_json(&parsed), Some(p.clone()));
+        // canonical bytes: re-serializing the roundtripped profile is stable
+        assert_eq!(KernelProfile::from_json(&parsed).unwrap().to_json().to_pretty(), text);
+        // seq_frac (what the model consumes) survives
+        let q = KernelProfile::from_json(&parsed).unwrap();
+        assert_eq!(q.sites[0].seq_frac(), p.sites[0].seq_frac());
+    }
+
+    #[test]
+    fn malformed_profile_json_is_rejected_not_panicking() {
+        for text in [
+            "{}",
+            r#"{"kernel": "k", "pipe_writes": 1.5, "pipe_reads": 0, "loops": [], "sites": []}"#,
+            r#"{"kernel": "k", "pipe_writes": 1, "pipe_reads": 0, "loops": [[0, 1]], "sites": []}"#,
+            r#"{"kernel": "k", "pipe_writes": 1, "pipe_reads": 0, "loops": [], "sites": [[1, 0, 0]]}"#,
+        ] {
+            let doc = crate::util::json::parse(text).unwrap();
+            assert_eq!(KernelProfile::from_json(&doc), None, "accepted: {text}");
+        }
     }
 
     #[test]

@@ -179,6 +179,19 @@ pub fn read_file(path: &std::path::Path) -> Result<Json, String> {
 /// the destination directory, so concurrent writers of the same path never
 /// expose a torn file — readers see either the old bytes or the new bytes.
 pub fn write_file_atomic(path: &std::path::Path, doc: &Json) -> std::io::Result<()> {
+    write_bytes_atomic(path, doc.to_pretty())
+}
+
+/// [`write_file_atomic`] with compact (single-line) serialization — for
+/// bulk records like the measurement store's trace tier, where the pretty
+/// form would triple the disk footprint for no reader.
+pub fn write_file_atomic_compact(path: &std::path::Path, doc: &Json) -> std::io::Result<()> {
+    let mut text = doc.to_compact();
+    text.push('\n');
+    write_bytes_atomic(path, text)
+}
+
+fn write_bytes_atomic(path: &std::path::Path, bytes: String) -> std::io::Result<()> {
     use std::sync::atomic::{AtomicU64, Ordering};
     static SEQ: AtomicU64 = AtomicU64::new(0);
     let dir = path.parent().filter(|p| !p.as_os_str().is_empty());
@@ -192,7 +205,7 @@ pub fn write_file_atomic(path: &std::path::Path, doc: &Json) -> std::io::Result<
         Some(d) => d.join(&tmp_name),
         None => std::path::PathBuf::from(&tmp_name),
     };
-    std::fs::write(&tmp, doc.to_pretty())?;
+    std::fs::write(&tmp, bytes)?;
     std::fs::rename(&tmp, path).inspect_err(|_| {
         let _ = std::fs::remove_file(&tmp);
     })

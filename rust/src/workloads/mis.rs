@@ -94,6 +94,19 @@ impl Workload for Mis {
         "mis_kernel"
     }
 
+    /// The gather kernel's split shares `min_array` (memory kernel loads
+    /// `min_array[t2]` for the accumulate, compute kernel stores it), but
+    /// the race is benign: the compute kernel writes index `t2` only
+    /// after receiving that iteration's tokens, i.e. strictly after the
+    /// memory kernel issued the load of the same index, and each index is
+    /// written at most once per launch — no interleaving (and hence no
+    /// pipe depth) can change the values read. Replicas partition `t2`
+    /// disjointly, so the argument carries over to MxCx. The trace tier
+    /// therefore shares one interpreter trace across the depth sweep.
+    fn benign_cross_kernel_races(&self) -> bool {
+        true
+    }
+
     fn kernels(&self) -> Vec<Kernel> {
         let reset = KernelBuilder::new("mis_reset", KernelKind::SingleWorkItem)
             .buf_wo("min_array", Ty::F32)

@@ -23,14 +23,16 @@ pub mod nw;
 pub mod pagerank;
 
 use crate::analysis::AreaEstimate;
-use crate::ir::{Kernel, Program};
+use crate::ir::{Access, Kernel, Program};
 use crate::sim::device::DeviceConfig;
 use crate::sim::exec::{run_group, ExecError, ExecOptions};
 use crate::sim::mem::MemoryImage;
 use crate::sim::perf::{LaunchMetrics, PerfModel};
+use crate::sim::profile::KernelProfile;
 use crate::transform::{
     feedforward, privatize, replicate, replicate_1p, vectorize, FeasibilityError, Variant,
 };
+use crate::util::json::Json;
 use std::collections::HashMap;
 
 /// Prefix distinguishing *result-validation* failures (the computed
@@ -157,6 +159,97 @@ fn depth_of(v: Variant) -> Option<usize> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Execution traces (the two-tier measurement pipeline's first tier)
+// ---------------------------------------------------------------------------
+
+/// One host launch as the trace tier records it: which unit ran and the
+/// per-kernel profiles the interpreter emitted.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LaunchRecord {
+    pub unit: String,
+    pub profiles: Vec<KernelProfile>,
+}
+
+/// The full functional execution trace of one workload run: every host
+/// launch in order. This is everything the performance models consume —
+/// replaying it through [`replay_built_workload`] reproduces the exact
+/// `Harness` metrics of the original run without re-interpreting, which
+/// is what lets a depth sweep run the interpreter once (the trace is
+/// invariant to pipe depth wherever kernels share no writable buffers;
+/// see [`unit_depth_invariant`]).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ExecTrace {
+    pub launches: Vec<LaunchRecord>,
+}
+
+impl ExecTrace {
+    /// Serialize for the persistent trace store (canonical field order;
+    /// profiles sorted internally by `KernelProfile::to_json`).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.launches
+                .iter()
+                .map(|r| {
+                    Json::Obj(vec![
+                        ("unit".into(), Json::Str(r.unit.clone())),
+                        (
+                            "kernels".into(),
+                            Json::Arr(r.profiles.iter().map(KernelProfile::to_json).collect()),
+                        ),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Inverse of [`ExecTrace::to_json`]; malformed input is `None`.
+    pub fn from_json(v: &Json) -> Option<ExecTrace> {
+        let launches = v
+            .as_array()?
+            .iter()
+            .map(|r| {
+                Some(LaunchRecord {
+                    unit: r.get("unit")?.as_str()?.to_string(),
+                    profiles: r
+                        .get("kernels")?
+                        .as_array()?
+                        .iter()
+                        .map(KernelProfile::from_json)
+                        .collect::<Option<Vec<_>>>()?,
+                })
+            })
+            .collect::<Option<Vec<_>>>()?;
+        Some(ExecTrace { launches })
+    }
+}
+
+/// Is this launch unit's functional trace provably invariant to pipe
+/// depth? Pipe depth only changes *when* tokens are delivered, never what
+/// they carry — the interleaving can leak into results only through a
+/// buffer one kernel writes while another kernel of the same concurrent
+/// group reads or writes it (NW's split is the canonical counterexample:
+/// the memory kernel re-reads rows the compute kernel is still writing,
+/// safe only below the row width). Single-kernel units are trivially
+/// invariant; multi-kernel units are invariant when every shared buffer
+/// is read-only on all sides. Workloads whose shared-buffer races are
+/// benign by construction can vouch past this conservative check via
+/// [`Workload::benign_cross_kernel_races`].
+pub fn unit_depth_invariant(unit: &Program) -> bool {
+    for (i, a) in unit.kernels.iter().enumerate() {
+        for b in unit.kernels.iter().skip(i + 1) {
+            for ba in &a.bufs {
+                if let Some(bb) = b.buf(&ba.name) {
+                    if ba.access != Access::ReadOnly || bb.access != Access::ReadOnly {
+                        return false;
+                    }
+                }
+            }
+        }
+    }
+    true
+}
+
 /// Execution harness: runs launch units functionally, feeds the profiles
 /// to the performance model, accumulates app-level metrics.
 pub struct Harness {
@@ -174,6 +267,15 @@ pub struct Harness {
     pub max_ii: u32,
     /// Use the discrete-event simulator instead of the analytic solver.
     pub use_des: bool,
+    /// When `Some`, every launch's profiles are recorded here (the trace
+    /// tier's acquisition mode — see [`run_built_workload_recorded`]).
+    pub trace: Option<ExecTrace>,
+    /// The workload's [`Workload::benign_cross_kernel_races`] vouch;
+    /// launch units that fail [`unit_depth_invariant`] and carry no vouch
+    /// run with exact per-token pipes so their interleaving-sensitive
+    /// semantics stay bit-for-bit historical. Defaults to false (the
+    /// conservative choice) for directly constructed harnesses.
+    pub benign_races: bool,
 }
 
 impl Harness {
@@ -200,16 +302,40 @@ impl Harness {
             bw_by_unit: HashMap::new(),
             max_ii,
             use_des: false,
+            trace: None,
+            benign_races: false,
         }
     }
 
     /// Run one launch unit: functional execution + performance estimate.
     pub fn launch(&mut self, unit: &Program, img: &MemoryImage) -> Result<(), ExecError> {
-        let run = run_group(unit, img, &self.opts)?;
+        let mut opts = self.opts.clone();
+        // chunked transfers widen the producer's run-ahead: only safe
+        // when no interleaving can leak into the results
+        opts.exact_pipes = !(self.benign_races || unit_depth_invariant(unit));
+        let run = run_group(unit, img, &opts)?;
+        if let Some(trace) = &mut self.trace {
+            let mut profiles = run.profiles.clone();
+            for p in &mut profiles {
+                // wall clock of the recording host, not part of the trace
+                p.host_nanos = 0;
+            }
+            trace.launches.push(LaunchRecord { unit: unit.name.clone(), profiles });
+        }
+        self.apply_profiles(unit, &run.profiles);
+        Ok(())
+    }
+
+    /// The modelling half of [`Harness::launch`]: feed one launch's
+    /// profiles to the performance model (or the DES) and accumulate the
+    /// app-level metrics. Shared verbatim by the live path and the trace
+    /// replay — the byte-identity of replayed measurements depends on
+    /// there being exactly one implementation.
+    fn apply_profiles(&mut self, unit: &Program, profiles: &[KernelProfile]) {
         let model = &self.models[&unit.name];
-        let mut m = model.estimate(&run.profiles);
+        let mut m = model.estimate(profiles);
         if self.use_des {
-            let d = crate::sim::des::simulate(unit, model, &run.profiles, &self.cfg, 64);
+            let d = crate::sim::des::simulate(unit, model, profiles, &self.cfg, 64);
             m.cycles = d.cycles;
             m.seconds = d.seconds;
             m.bw_bytes_per_s = if d.seconds > 0.0 { m.payload_bytes / d.seconds } else { 0.0 };
@@ -218,7 +344,6 @@ impl Harness {
         *e = e.max(m.bw_bytes_per_s);
         self.metrics.accumulate(&m);
         self.launches += 1;
-        Ok(())
     }
 
     pub fn model(&self, unit: &str) -> &PerfModel {
@@ -250,6 +375,19 @@ pub trait Workload: Sync {
     /// paper's static-partitioning scheme shares).
     fn supports_replication(&self) -> bool {
         true
+    }
+
+    /// Programmer guarantee that every cross-kernel shared-buffer race in
+    /// this workload's split designs is *benign*: whatever value a racing
+    /// read observes, the functional result and the execution profiles
+    /// are identical. When true, the trace tier strips pipe depth from
+    /// the trace content key even where [`unit_depth_invariant`]'s
+    /// conservative syntactic check fails, so a depth sweep shares one
+    /// interpreter trace. Defaults to false — NW's races are *not* benign
+    /// (its split is only valid below the row width), which is exactly
+    /// the case the conservative default protects.
+    fn benign_cross_kernel_races(&self) -> bool {
+        false
     }
 
     /// Build the app under a variant.
@@ -315,11 +453,89 @@ pub fn run_built_workload_with(
     cfg: &DeviceConfig,
     use_des: bool,
 ) -> Result<Harness, String> {
+    run_built_workload_impl(w, app, scale, cfg, use_des, false).map(|(h, _)| h)
+}
+
+/// [`run_built_workload_with`] in trace-acquisition mode: the harness
+/// records every launch's profiles, and the recorded [`ExecTrace`] comes
+/// back beside the harness so the engine can persist it. Error strings
+/// (execution failures, `validation:`-prefixed mismatches) are identical
+/// to the unrecorded path by construction — both are thin wrappers over
+/// [`run_built_workload_impl`].
+pub fn run_built_workload_recorded(
+    w: &dyn Workload,
+    app: &App,
+    scale: Scale,
+    cfg: &DeviceConfig,
+    use_des: bool,
+) -> Result<(Harness, ExecTrace), String> {
+    run_built_workload_impl(w, app, scale, cfg, use_des, true)
+        .map(|(h, t)| (h, t.expect("recording was requested")))
+}
+
+/// The single execution path behind both wrappers above — the trace
+/// tier's replay/cold byte-identity depends on recorded and unrecorded
+/// runs sharing every code path but the recording itself.
+fn run_built_workload_impl(
+    w: &dyn Workload,
+    app: &App,
+    scale: Scale,
+    cfg: &DeviceConfig,
+    use_des: bool,
+    record: bool,
+) -> Result<(Harness, Option<ExecTrace>), String> {
     let mut img = w.image(scale);
     let mut h = Harness::new(app, cfg);
     h.use_des = use_des;
+    h.benign_races = w.benign_cross_kernel_races();
+    if record {
+        h.trace = Some(ExecTrace::default());
+    }
     w.run(app, &mut img, &mut h).map_err(|e| e.to_string())?;
     w.validate(&img, scale).map_err(|e| format!("{VALIDATION_PREFIX}{e}"))?;
+    let trace = h.trace.take();
+    Ok((h, trace))
+}
+
+/// The trace tier's second stage: rebuild a [`Harness`] for `app` and
+/// feed a previously recorded [`ExecTrace`] through the performance
+/// model (or the DES when `use_des`) without running the interpreter.
+/// The app carries the *actual* pipe depths, so the model and DES see the
+/// probed configuration even when the trace was recorded at another
+/// depth. Shape mismatches (a stale or corrupt trace against a changed
+/// program) are a clean `Err` — the caller re-acquires.
+pub fn replay_built_workload(
+    app: &App,
+    cfg: &DeviceConfig,
+    use_des: bool,
+    trace: &ExecTrace,
+) -> Result<Harness, String> {
+    let mut h = Harness::new(app, cfg);
+    h.use_des = use_des;
+    for (ix, rec) in trace.launches.iter().enumerate() {
+        let Some(unit) = app.units.iter().find(|u| u.name == rec.unit) else {
+            return Err(format!("trace launch {ix}: no unit `{}` in app {}", rec.unit, app.name));
+        };
+        if rec.profiles.len() != unit.kernels.len() {
+            return Err(format!(
+                "trace launch {ix}: {} profiles for {} kernels in unit `{}`",
+                rec.profiles.len(),
+                unit.kernels.len(),
+                rec.unit
+            ));
+        }
+        // every site the model will index must exist in the profile
+        let report = &h.models[&unit.name].report;
+        for (kr, prof) in report.kernels.iter().zip(&rec.profiles) {
+            if kr.sites.iter().any(|s| s.site >= prof.sites.len()) {
+                return Err(format!(
+                    "trace launch {ix}: profile of `{}` is missing memory sites",
+                    kr.name
+                ));
+            }
+        }
+        h.apply_profiles(unit, &rec.profiles);
+    }
     Ok(h)
 }
 
@@ -342,4 +558,96 @@ pub fn suite() -> Vec<Box<dyn Workload>> {
 /// Look up one workload by name.
 pub fn by_name(name: &str) -> Option<Box<dyn Workload>> {
     suite().into_iter().find(|w| w.name() == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::device::DeviceConfig;
+
+    #[test]
+    fn depth_invariance_analysis_classifies_the_suite() {
+        // hotspot's split reads temp/power and writes result — disjoint,
+        // so the conservative syntactic check already passes
+        let hs = by_name("hotspot").unwrap().build(Variant::FeedForward { depth: 1 }).unwrap();
+        assert!(hs.units.iter().all(unit_depth_invariant));
+        // NW's split shares the read-write `m`: depth-sensitive, no vouch
+        let nw = by_name("nw").unwrap();
+        let nw_app = nw.build(Variant::FeedForward { depth: 1 }).unwrap();
+        assert!(!nw_app.units.iter().all(unit_depth_invariant));
+        assert!(!nw.benign_cross_kernel_races());
+        // FW/MIS fail the syntactic check (shared dist / min_array) but
+        // vouch for benign races
+        let fw = by_name("fw").unwrap();
+        let fw_app = fw.build(Variant::FeedForward { depth: 1 }).unwrap();
+        assert!(!fw_app.units.iter().all(unit_depth_invariant));
+        assert!(fw.benign_cross_kernel_races());
+        assert!(by_name("mis").unwrap().benign_cross_kernel_races());
+        // single-kernel baselines are trivially invariant
+        let base = nw.build(Variant::Baseline).unwrap();
+        assert!(base.units.iter().all(unit_depth_invariant));
+    }
+
+    /// The two-tier contract: a recorded trace roundtrips through JSON
+    /// and replays to bit-identical harness metrics — including when the
+    /// replay targets a *different* pipe depth than the recording (the
+    /// depth-sweep fast path).
+    #[test]
+    fn recorded_trace_replays_to_identical_metrics() {
+        let cfg = DeviceConfig::pac_a10();
+        let w = by_name("hotspot").unwrap();
+        let app = w.build(Variant::FeedForward { depth: 1 }).unwrap();
+        let (h, trace) =
+            run_built_workload_recorded(w.as_ref(), &app, Scale::Tiny, &cfg, false).unwrap();
+        assert!(!trace.launches.is_empty());
+        assert_eq!(h.launches as usize, trace.launches.len());
+
+        let doc = crate::util::json::parse(&trace.to_json().to_pretty()).unwrap();
+        let rt = ExecTrace::from_json(&doc).expect("trace JSON roundtrips");
+        assert_eq!(rt, trace, "serialization must be lossless");
+
+        let r = replay_built_workload(&app, &cfg, false, &rt).unwrap();
+        assert_eq!(r.launches, h.launches);
+        assert_eq!(r.metrics.seconds, h.metrics.seconds);
+        assert_eq!(r.metrics.cycles, h.metrics.cycles);
+        assert_eq!(r.max_ii, h.max_ii);
+        assert_eq!(r.bw_by_unit, h.bw_by_unit);
+
+        // replaying the depth-1 trace against the depth-100 build must
+        // equal a live depth-100 run (hotspot is depth-invariant)
+        let deep = w.build(Variant::FeedForward { depth: 100 }).unwrap();
+        let (hd, _) =
+            run_built_workload_recorded(w.as_ref(), &deep, Scale::Tiny, &cfg, false).unwrap();
+        let rd = replay_built_workload(&deep, &cfg, false, &rt).unwrap();
+        assert_eq!(
+            rd.metrics.seconds, hd.metrics.seconds,
+            "depth-100 replay from the depth-1 trace diverged from a live depth-100 run"
+        );
+        assert_eq!(rd.metrics.cycles, hd.metrics.cycles);
+    }
+
+    /// Stale or corrupt traces are a clean `Err` (the engine re-acquires),
+    /// never a model-side panic.
+    #[test]
+    fn replay_rejects_mismatched_traces() {
+        let cfg = DeviceConfig::pac_a10();
+        let w = by_name("hotspot").unwrap();
+        let app = w.build(Variant::FeedForward { depth: 1 }).unwrap();
+        let (_, trace) =
+            run_built_workload_recorded(w.as_ref(), &app, Scale::Tiny, &cfg, false).unwrap();
+
+        let mut renamed = trace.clone();
+        renamed.launches[0].unit = "no_such_unit".into();
+        assert!(replay_built_workload(&app, &cfg, false, &renamed).is_err());
+
+        let mut short = trace.clone();
+        short.launches[0].profiles.pop();
+        assert!(replay_built_workload(&app, &cfg, false, &short).is_err());
+
+        let mut siteless = trace;
+        for p in &mut siteless.launches[0].profiles {
+            p.sites.clear();
+        }
+        assert!(replay_built_workload(&app, &cfg, false, &siteless).is_err());
+    }
 }

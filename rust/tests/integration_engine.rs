@@ -24,6 +24,34 @@ fn reduced_grid() -> Vec<Cell> {
     cells
 }
 
+/// PR-4 acceptance: a cold depth sweep over D depths performs exactly one
+/// interpreter run per (workload, scale) — not D — and the parallel
+/// engine's sink bytes still match the serial reference.
+#[test]
+fn cold_depth_sweep_interprets_once_per_workload() {
+    let mut cells = vec![];
+    for name in ["fw", "hotspot", "mis"] {
+        for d in [1usize, 100, 1000] {
+            cells.push(Cell::new(name, Variant::FeedForward { depth: d }, Scale::Tiny));
+        }
+    }
+    let parallel = Engine::new(DeviceConfig::pac_a10(), 4);
+    let a = parallel.run_cells(&cells);
+    assert_eq!(parallel.simulations(), 9);
+    assert_eq!(parallel.trace_runs(), 3, "one interpreter run per (workload, scale)");
+    assert_eq!(parallel.trace_hits(), 6);
+
+    let serial = Engine::new(DeviceConfig::pac_a10(), 1);
+    let b = serial.run_cells(&cells);
+    assert_eq!(serial.trace_runs(), 3);
+    assert_eq!(a, b, "trace sharing must not depend on scheduling");
+    assert_eq!(
+        parallel.bench_json(Scale::Tiny, &[]),
+        serial.bench_json(Scale::Tiny, &[]),
+        "sink bytes must be identical under trace replay"
+    );
+}
+
 #[test]
 fn parallel_engine_matches_serial_measurements() {
     let cells = reduced_grid();

@@ -54,6 +54,82 @@ fn warm_store_rerun_does_zero_simulations() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// PR-4 acceptance: the E4 depth trio (fw/hotspot/mis x depths 1/100/1000)
+/// is served by the two-tier store. Cold: one interpreter run per
+/// workload, nine modelled measurements. Plain warm: nothing runs at all.
+/// Warm *trace* tier alone (measurement entries deleted): the model re-runs
+/// but the interpreter does not — and the results sink is byte-identical
+/// in all three regimes.
+#[test]
+fn warm_trace_rerun_of_the_depth_trio_is_byte_identical() {
+    let dir = tmp_dir("trace-trio");
+    let mut cells = vec![];
+    for name in ["fw", "hotspot", "mis"] {
+        for d in [1usize, 100, 1000] {
+            cells.push(Cell::new(name, Variant::FeedForward { depth: d }, Scale::Tiny));
+        }
+    }
+
+    let cold = Engine::new(DeviceConfig::pac_a10(), 4).with_store(Store::open(&dir).unwrap());
+    let _ = cold.run_cells(&cells);
+    assert_eq!(cold.simulations(), 9, "every depth is a distinct measurement");
+    assert_eq!(cold.trace_runs(), 3, "exactly 1 interpreter run per (workload, scale)");
+    assert_eq!(cold.trace_hits(), 6, "the other two rungs replay the shared trace");
+    let cold_sink = cold.bench_json(Scale::Tiny, &[]);
+    assert_eq!(cold.store().unwrap().trace_keys().len(), 3, "one trace file per workload");
+
+    // plain warm rerun: the measurement tier answers everything
+    let warm = Engine::new(DeviceConfig::pac_a10(), 4).with_store(Store::open(&dir).unwrap());
+    let _ = warm.run_cells(&cells);
+    assert_eq!(warm.simulations(), 0);
+    assert_eq!(warm.trace_runs(), 0, "a warm rerun must not touch the interpreter");
+    assert_eq!(warm.trace_hits(), 0, "full-key hits answer before the trace tier");
+    assert_eq!(warm.bench_json(Scale::Tiny, &[]), cold_sink);
+
+    // delete the measurement tier, keep the traces: the model re-runs
+    // from persisted traces and reproduces the sink byte for byte
+    std::fs::remove_dir_all(dir.join("entries")).unwrap();
+    let traced = Engine::new(DeviceConfig::pac_a10(), 4).with_store(Store::open(&dir).unwrap());
+    let _ = traced.run_cells(&cells);
+    assert_eq!(traced.trace_runs(), 0, "persisted traces must answer the interpreter tier");
+    assert_eq!(traced.trace_hits(), 9);
+    assert_eq!(traced.simulations(), 9, "the cheap modelling tier re-runs");
+    assert_eq!(traced.bench_json(Scale::Tiny, &[]), cold_sink, "trace replay must be byte-exact");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The v2 -> v3 schema bump must orphan stale *trace* entries exactly like
+/// measurement entries: a v2-stamped trace reads as a miss and the
+/// interpreter re-runs.
+#[test]
+fn stale_schema_trace_entries_read_as_misses() {
+    let dir = tmp_dir("trace-stale");
+    let cells: Vec<Cell> = [1usize, 100, 1000]
+        .iter()
+        .map(|d| Cell::new("fw", Variant::FeedForward { depth: *d }, Scale::Tiny))
+        .collect();
+    {
+        let e = Engine::new(DeviceConfig::pac_a10(), 2).with_store(Store::open(&dir).unwrap());
+        let _ = e.run_cells(&cells);
+        assert_eq!(e.trace_runs(), 1);
+    }
+    // stamp every trace as if the previous store version had written it,
+    // and drop the measurement tier so the trace tier is actually exercised
+    for f in std::fs::read_dir(dir.join("traces")).unwrap() {
+        let path = f.unwrap().path();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, text.replace(STORE_SCHEMA, "pipefwd-store-v2")).unwrap();
+    }
+    std::fs::remove_dir_all(dir.join("entries")).unwrap();
+
+    let e = Engine::new(DeviceConfig::pac_a10(), 2).with_store(Store::open(&dir).unwrap());
+    let _ = e.run_cells(&cells);
+    assert_eq!(e.trace_hits(), 2, "only the fresh in-process trace may be shared");
+    assert_eq!(e.trace_runs(), 1, "the stale v2 trace must be re-acquired, once");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn corrupted_store_entries_are_resimulated_not_fatal() {
     let dir = tmp_dir("corrupt");

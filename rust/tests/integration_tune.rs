@@ -41,6 +41,14 @@ fn golden_tune_cold_vs_warm_is_byte_identical_with_zero_simulations() {
     let cold = Engine::new(DeviceConfig::pac_a10(), 4).with_store(Store::open(&dir).unwrap());
     let cold_report = run_tune(&cold, &req).unwrap();
     assert!(cold.simulations() > 0, "cold run must actually simulate");
+    // PR-4 trace tier: however many depths the search and the exhaustive
+    // reference probe, the functional interpreter runs once per workload
+    assert_eq!(
+        cold.trace_runs(),
+        TRIO.len() as u64,
+        "cold tune must run the interpreter exactly once per (workload, scale)"
+    );
+    assert!(cold.trace_hits() > 0, "the other probes replay the shared trace");
     let cold_table = cold_report.table().to_markdown();
     let cold_json = cold_report.to_json().to_pretty();
 
@@ -67,6 +75,8 @@ fn golden_tune_cold_vs_warm_is_byte_identical_with_zero_simulations() {
     let warm = Engine::new(DeviceConfig::pac_a10(), 4).with_store(Store::open(&dir).unwrap());
     let warm_report = run_tune(&warm, &req).unwrap();
     assert_eq!(warm.simulations(), 0, "warm store must answer every probe");
+    assert_eq!(warm.trace_runs(), 0, "warm store must never re-run the interpreter");
+    assert_eq!(warm.trace_hits(), 0, "full-key hits answer before the trace tier");
     assert!(warm.store_hits() > 0);
     assert_eq!(warm_report.table().to_markdown(), cold_table);
     assert_eq!(warm_report.to_json().to_pretty(), cold_json);
@@ -99,6 +109,7 @@ fn successive_halving_searches_the_product_space_within_budget() {
     let warm = Engine::new(DeviceConfig::pac_a10(), 4).with_store(Store::open(&dir).unwrap());
     let warm_report = run_tune(&warm, &req).unwrap();
     assert_eq!(warm.simulations(), 0);
+    assert_eq!(warm.trace_runs(), 0, "warm sh rerun must not re-interpret");
     assert_eq!(
         warm_report.to_json().to_pretty(),
         cold_report.to_json().to_pretty(),
