@@ -3,10 +3,118 @@
 //! cell answered by the store) — the cold/warm wall-clock ratio is the
 //! §Perf signal for cross-process caching, and the printed simulation
 //! counts prove the warm pass did no work.
+//!
+//! PR 5 adds two sections:
+//! * **Profile pool dedup** — a pagerank convergence trace (every power
+//!   iteration re-launches byte-identical kernels) persisted through the
+//!   v4 pool vs. what the inline (v3) encoding would have written:
+//!   on-disk bytes, dedup ratio, and put/get wall clock.
+//! * **Vouch leverage** — the bfs and pagerank depth ladders with and
+//!   without the benign-race vouch. bfs is where the vouch is
+//!   load-bearing (its split shares the writable `cost`, so stripping
+//!   the vouch costs one interpreter run per rung: 3 vs 1 — the biggest
+//!   remaining `trace_runs` hot spot before PR 5). pagerank is the
+//!   control: its split already passes the syntactic
+//!   `unit_depth_invariant` check, so both columns read 1 and the vouch
+//!   is documentation, not a key change.
 
 use pipefwd::coordinator::{grid, Engine, ExperimentId, Store};
 use pipefwd::sim::device::DeviceConfig;
+use pipefwd::transform::Variant;
 use pipefwd::util::bench::{bench_jobs, bench_scale, BenchReport};
+use pipefwd::workloads::{by_name, run_built_workload_recorded, Scale, Workload};
+
+/// `inner` with its benign-race vouch stripped — what the PR-4 engine
+/// saw for bfs (for already-syntactically-invariant workloads like
+/// pagerank this changes nothing, which is the control the bench
+/// prints). Same kernels, same datasets, same validation; only the
+/// vouch bit differs.
+struct Unvouched(Box<dyn Workload>);
+
+impl Workload for Unvouched {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+    fn suite(&self) -> &'static str {
+        self.0.suite()
+    }
+    fn dwarf(&self) -> &'static str {
+        self.0.dwarf()
+    }
+    fn pattern(&self) -> &'static str {
+        self.0.pattern()
+    }
+    fn dataset_desc(&self, scale: Scale) -> String {
+        self.0.dataset_desc(scale)
+    }
+    fn dominant(&self) -> &'static str {
+        self.0.dominant()
+    }
+    fn kernels(&self) -> Vec<pipefwd::ir::Kernel> {
+        self.0.kernels()
+    }
+    fn privatize_first(&self) -> Vec<&'static str> {
+        self.0.privatize_first()
+    }
+    fn supports_replication(&self) -> bool {
+        self.0.supports_replication()
+    }
+    fn benign_cross_kernel_races(&self) -> bool {
+        false // the point of the wrapper
+    }
+    fn image(&self, scale: Scale) -> pipefwd::sim::mem::MemoryImage {
+        self.0.image(scale)
+    }
+    fn run(
+        &self,
+        app: &pipefwd::workloads::App,
+        img: &mut pipefwd::sim::mem::MemoryImage,
+        h: &mut pipefwd::workloads::Harness,
+    ) -> Result<(), pipefwd::sim::exec::ExecError> {
+        self.0.run(app, img, h)
+    }
+    fn validate(&self, img: &pipefwd::sim::mem::MemoryImage, scale: Scale) -> Result<(), String> {
+        self.0.validate(img, scale)
+    }
+}
+
+/// How many interpreter runs a depth ladder costs with vs. without the
+/// workload's benign-race vouch (cold engines, no store).
+/// `expect_unvouched` makes the printed signal honest: 3 where the vouch
+/// is load-bearing (bfs), 1 where the syntactic check already masks
+/// depth and the vouch only documents the semantics (pagerank).
+fn vouch_ladder(b: &mut BenchReport, name: &str, expect_unvouched: u64) {
+    let depths = [1usize, 100, 1000];
+    let vouched = Engine::new(DeviceConfig::pac_a10(), 1);
+    b.sample(&format!("{name}_ladder_vouched"), || {
+        let w = by_name(name).unwrap();
+        for d in depths {
+            let _ = vouched.measure(w.as_ref(), Variant::FeedForward { depth: d }, Scale::Tiny);
+        }
+    });
+    let plain = Engine::new(DeviceConfig::pac_a10(), 1);
+    b.sample(&format!("{name}_ladder_unvouched"), || {
+        let w = Unvouched(by_name(name).unwrap());
+        for d in depths {
+            let _ = plain.measure(&w, Variant::FeedForward { depth: d }, Scale::Tiny);
+        }
+    });
+    assert_eq!(vouched.trace_runs(), 1, "{name}: vouched ladder must share one trace");
+    assert_eq!(
+        plain.trace_runs(),
+        expect_unvouched,
+        "{name}: unvouched ladder expectation drifted"
+    );
+    println!(
+        "{name} depth ladder: vouched {} interpreter runs, unvouched {} \
+         (trace hits {} vs {}){}",
+        vouched.trace_runs(),
+        plain.trace_runs(),
+        vouched.trace_hits(),
+        plain.trace_hits(),
+        if expect_unvouched == 1 { "  [control: syntactic check already masks]" } else { "" },
+    );
+}
 
 fn main() {
     let scale = bench_scale();
@@ -44,6 +152,49 @@ fn main() {
         )
         .expect("complete store merges")
     });
+
+    // -- profile-pool dedup on a convergence trace (PR 5) -------------------
+    let pr = by_name("pagerank").unwrap();
+    let app = pr.build(Variant::FeedForward { depth: 1 }).unwrap();
+    let (_, trace) =
+        run_built_workload_recorded(pr.as_ref(), &app, Scale::Tiny, &DeviceConfig::pac_a10(), false)
+            .expect("pagerank tiny records");
+    let inline_bytes = trace.to_json().to_compact().len();
+    let pool_dir =
+        std::env::temp_dir().join(format!("pipefwd-bench-pool-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&pool_dir);
+    let pool = Store::open(&pool_dir).expect("pool store opens");
+    let tkey = pipefwd::coordinator::trace_key(
+        "pagerank",
+        pr.benign_cross_kernel_races(),
+        &app,
+        Scale::Tiny,
+    );
+    b.sample("pool_put_convergence_trace", || {
+        pool.put_trace(tkey, &Ok(trace.clone())).expect("trace persists")
+    });
+    b.sample("pool_get_convergence_trace", || {
+        pool.get_trace(tkey).expect("trace resolves").expect("trace is ok")
+    });
+    let stats = pool.stats();
+    println!(
+        "pagerank convergence trace: {} launches, {} profile refs -> {} pooled \
+         (dedup {:.1}x); pooled {} B (trace {} + pool {}) vs inline {} B ({:.1}% of inline)",
+        trace.launches.len(),
+        stats.profile_refs,
+        stats.profiles.count,
+        stats.dedup_ratio(),
+        stats.traces.bytes + stats.profiles.bytes,
+        stats.traces.bytes,
+        stats.profiles.bytes,
+        inline_bytes,
+        100.0 * (stats.traces.bytes + stats.profiles.bytes) as f64 / inline_bytes as f64,
+    );
+    let _ = std::fs::remove_dir_all(&pool_dir);
+
+    // -- vouch leverage: graph-trio depth ladders (PR 5) --------------------
+    vouch_ladder(&mut b, "bfs", 3); // vouch is load-bearing: 3 -> 1
+    vouch_ladder(&mut b, "pagerank", 1); // control: already syntactically invariant
 
     let _ = std::fs::remove_dir_all(&dir);
     b.finish();

@@ -44,7 +44,8 @@
 //!    configuration, keyed by the existing full [`content_key`].
 //!
 //! Both tiers persist in the attached [`Store`] (measurement entries +
-//! trace entries, schema v3) and are counted separately:
+//! trace entries whose per-launch profiles live in a content-addressed
+//! pool, schema v4) and are counted separately:
 //! [`Engine::trace_runs`] (interpreter executions) and
 //! [`Engine::trace_hits`] (trace-tier answers) next to
 //! [`Engine::store_hits`] / [`Engine::simulations`].

@@ -1,0 +1,148 @@
+//! Reachability for `pipefwd store gc` (the PR-5 satellite of the
+//! profile-pool tentpole).
+//!
+//! The store grows monotonically: every probe of every sweep, search, and
+//! CI run persists forever, and after a transform or grid change the old
+//! keys are dead weight that no replay will ever look up again. GC asks
+//! the only question that matters for a content-addressed cache: *could
+//! the current code still request this key?* The answer is computed the
+//! same way `merge` validates shard coverage — by replaying the grid
+//! construction (IR transforms only, zero simulation):
+//!
+//! * **Experiment grids** — every cell of `grid_for(E1..E7)` contributes
+//!   its measurement key (analytic *and* DES — both estimator flags are
+//!   one `--des` away) and its depth-invariant trace key, at every
+//!   dataset scale.
+//! * **Tuner ladders** — `pipefwd tune` probes the
+//!   [`DEPTH_LADDER`] × [`PART_LADDER`] product space for any registered
+//!   workload (suite + microbenchmarks) at the target scale and the
+//!   cheap fidelity rungs, so the full product space at every scale is
+//!   reachable.
+//!
+//! Grid shape and app construction are scale-independent (only the
+//! dataset is scaled), so each unique (workload, variant) builds once and
+//! fans its keys out across scales. Keys outside this set — e.g. a
+//! custom `sweep --depths 7` probe — are deleted by `store gc`; rerunning
+//! that sweep simply re-simulates and re-persists them.
+
+use super::engine::{content_key, grid_for, resolve_workload, trace_key, ExperimentId};
+use super::tune::{TuneConfig, DEPTH_LADDER, PART_LADDER};
+use crate::sim::device::DeviceConfig;
+use crate::workloads::micro::MicroSpec;
+use crate::workloads::{suite, App, Scale, Workload};
+use std::collections::HashSet;
+
+/// Every dataset scale a run can request (`--scale tiny|small|paper`).
+pub const ALL_SCALES: [Scale; 3] = [Scale::Tiny, Scale::Small, Scale::Paper];
+
+/// The key sets `store gc` keeps (pooled-profile reachability is derived
+/// from the surviving traces by [`super::store::Store::gc`] itself).
+#[derive(Debug, Default)]
+pub struct Reachable {
+    pub entries: HashSet<u64>,
+    pub traces: HashSet<u64>,
+}
+
+impl Reachable {
+    /// Add every key one built app can be asked under: measurement keys
+    /// for both estimators and the trace key, at one scale.
+    fn add(&mut self, workload: &str, benign: bool, app: &App, scale: Scale, cfg: &DeviceConfig) {
+        self.entries.insert(content_key(workload, app, scale, cfg, false));
+        self.entries.insert(content_key(workload, app, scale, cfg, true));
+        self.traces.insert(trace_key(workload, benign, app, scale));
+    }
+}
+
+/// Every workload name the CLI can route into the engine: the Table-1
+/// suite plus both generated microbenchmark families (the same registry
+/// `resolve_workload` consults).
+fn registry_names() -> Vec<String> {
+    suite()
+        .iter()
+        .map(|w| w.name().to_string())
+        .chain(MicroSpec::table3().into_iter().map(|s| s.label()))
+        .chain(MicroSpec::family().into_iter().map(|s| s.label()))
+        .collect()
+}
+
+/// Compute the reachable key sets for the current experiment grids and
+/// tuner configuration space under `cfg`. Pure IR work — builds every
+/// unique app exactly once and never touches a dataset or simulator.
+pub fn reachable_keys(cfg: &DeviceConfig) -> Reachable {
+    let mut r = Reachable::default();
+
+    // 1. The experiment grids, exactly like `merge` replays them. The
+    //    grid's cell list is identical at every scale (only the cell's
+    //    scale field differs), so build per Tiny cell and fan out.
+    for cell in grid_for(&ExperimentId::all(), Scale::Tiny) {
+        let Some(w) = resolve_workload(&cell.workload) else { continue };
+        let Ok(app) = w.build(cell.variant) else { continue };
+        for scale in ALL_SCALES {
+            r.add(&cell.workload, w.benign_cross_kernel_races(), &app, scale, cfg);
+        }
+    }
+
+    // 2. The tuner's probe space: depth × replication ladders for every
+    //    registered workload (`tune --benches` accepts any of them), at
+    //    every scale (successive halving probes cheap scales as
+    //    low-fidelity rungs). Infeasible points (e.g. replication on NW)
+    //    never produce a key, exactly as the tuner skips them.
+    for name in registry_names() {
+        let Some(w) = resolve_workload(&name) else { continue };
+        for parts in PART_LADDER {
+            for depth in DEPTH_LADDER {
+                let config = TuneConfig { depth, parts };
+                let Ok(app) = w.build(config.variant()) else { continue };
+                for scale in ALL_SCALES {
+                    r.add(&name, w.benign_cross_kernel_races(), &app, scale, cfg);
+                }
+            }
+        }
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::grid;
+    use crate::transform::Variant;
+
+    /// Every key the E1–E7 grids and the tuner ladder can request must be
+    /// in the reachable set — spot-checked across tiers, estimators,
+    /// scales, and both probe families.
+    #[test]
+    fn reachable_covers_grid_and_tuner_keys() {
+        let cfg = DeviceConfig::pac_a10();
+        let r = reachable_keys(&cfg);
+        assert!(!r.entries.is_empty() && !r.traces.is_empty());
+
+        // an E2 grid cell, both estimators, every scale
+        for cell in grid(ExperimentId::E2, Scale::Tiny) {
+            let w = resolve_workload(&cell.workload).unwrap();
+            let Ok(app) = w.build(cell.variant) else { continue };
+            for scale in ALL_SCALES {
+                for des in [false, true] {
+                    let k = content_key(&cell.workload, &app, scale, &cfg, des);
+                    assert!(r.entries.contains(&k), "grid cell missing: {cell:?} des={des}");
+                }
+                let t = trace_key(&cell.workload, w.benign_cross_kernel_races(), &app, scale);
+                assert!(r.traces.contains(&t), "grid trace missing: {cell:?}");
+            }
+        }
+
+        // a deep tuner-only probe (depth 512 is on no experiment grid)
+        let w = resolve_workload("fw").unwrap();
+        let app = w.build(Variant::FeedForward { depth: 512 }).unwrap();
+        assert!(r.entries.contains(&content_key("fw", &app, Scale::Small, &cfg, false)));
+
+        // an off-ladder key is NOT reachable (custom sweep probes die)
+        let odd = w.build(Variant::FeedForward { depth: 7 }).unwrap();
+        assert!(!r.entries.contains(&content_key("fw", &odd, Scale::Tiny, &cfg, false)));
+
+        // stability: the replay is deterministic
+        let again = reachable_keys(&cfg);
+        assert_eq!(r.entries, again.entries);
+        assert_eq!(r.traces, again.traces);
+    }
+}

@@ -15,10 +15,17 @@
 //! splits `Engine::measure` into two content-addressed tiers — trace
 //! acquisition (the interpreter, keyed depth-invariantly) and modelling
 //! (analytic/DES replay, keyed fully) — so depth ladders and tuner
-//! searches pay the interpreter once per functional trace.
+//! searches pay the interpreter once per functional trace. PR 5 adds the
+//! per-launch profile pool beneath the trace tier (store schema v4, one
+//! canonical file per distinct `KernelProfile` shared across traces and
+//! shards), the [`gc`] module's grid-replay reachability for
+//! `pipefwd store gc`/`store stats`, and the bfs/color/pagerank
+//! benign-race vouches that collapse the irregular graph workloads'
+//! depth ladders to one interpreter run each.
 
 pub mod engine;
 pub mod experiments;
+pub mod gc;
 pub mod store;
 pub mod tune;
 
@@ -26,7 +33,8 @@ pub use engine::{
     bench_doc, content_key, dedup_cells, grid, grid_for, merge_bench_json, normalize_depths,
     resolve_workload, shard_cells, trace_key, trace_signature, Cell, Engine, ExperimentId,
 };
-pub use store::Store;
+pub use gc::{reachable_keys, Reachable};
+pub use store::{GcReport, Store, StoreStats};
 pub use experiments::{
     best_ff, depth_sweep, figure4, headline, hotspot_m2c2_bw, intext, measure, micro_family,
     pc_sweep, table1, table2, table2_rows, table3, vector_study, Measurement,

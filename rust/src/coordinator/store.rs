@@ -35,11 +35,31 @@
 //!   the *depth-invariant* `engine::trace_key`. A warm store answers a
 //!   whole depth ladder from one trace file; `merge_from` carries traces
 //!   across shards like any other entry.
+//! * **Per-launch profile pool (v4)** — a trace file no longer inlines
+//!   its `KernelProfile`s: each launch records a list of *refs* into a
+//!   content-addressed pool, `profiles/<16-hex-fnv>.json`, one canonical
+//!   compact file per distinct profile (FNV-1a over
+//!   `KernelProfile::canonical_compact`). Convergence-loop workloads
+//!   (pagerank/bfs/mis iterations) re-launch byte-identical kernels
+//!   dozens of times per trace, and the same profiles recur across
+//!   traces, configs and shards — the pool stores each distinct profile
+//!   once, globally. A missing, truncated, or hash-mismatched pool file
+//!   degrades only the *referencing* trace to a miss (the engine
+//!   re-interprets); `merge_from` unions the pool before the traces so a
+//!   merged store never holds a dangling ref.
+//! * **GC** — [`Store::gc`] deletes every entry/trace whose key is not in
+//!   a caller-supplied reachable set (computed by `coordinator::gc` from
+//!   the current experiment grids + tuner ladders, exactly like `merge`
+//!   replays the grid) and every pooled profile no surviving trace
+//!   references, then rewrites the manifest. [`Store::stats`] reports
+//!   per-tier counts/bytes and the pool's dedup ratio.
 
 use super::engine::{CellResult, TraceResult};
 use super::experiments::Measurement;
+use crate::sim::profile::KernelProfile;
 use crate::util::json::{self, Json};
-use crate::workloads::ExecTrace;
+use crate::workloads::{ExecTrace, LaunchRecord};
+use std::collections::{HashMap, HashSet};
 use std::io;
 use std::path::{Path, PathBuf};
 
@@ -54,8 +74,15 @@ use std::path::{Path, PathBuf};
 /// `traces/` beside the measurement entries, and the interpreter moved to
 /// chunked pipe transfers, which can change results for depth-*sensitive*
 /// workloads (NW past its safe depth) — v2 measurement entries must
-/// therefore read as misses, not be served beside v3 ones.
-pub const STORE_SCHEMA: &str = "pipefwd-store-v3";
+/// therefore read as misses, not be served beside v3 ones. v4: the
+/// per-launch profile pool — trace records hold refs into
+/// `profiles/<fnv>.json` instead of inline profiles (a v3 trace never
+/// referenced the pool), and the bfs benign-race vouch changes bfs's
+/// trace key *and* its interpreter pipe mode (chunked instead of exact).
+/// color/pagerank also gained vouches, but their split units already
+/// passed the syntactic depth-invariance check, so their keys and pipe
+/// mode are unchanged — the record format alone forces the bump.
+pub const STORE_SCHEMA: &str = "pipefwd-store-v4";
 
 /// Default results directory (overridable via `--cache-dir` /
 /// `PIPEFWD_CACHE_DIR`).
@@ -88,13 +115,18 @@ impl Store {
         let root = root.into();
         std::fs::create_dir_all(root.join("entries"))?;
         std::fs::create_dir_all(root.join("traces"))?;
+        std::fs::create_dir_all(root.join("profiles"))?;
         Ok(Store { root })
     }
 
     /// Open an existing store, erroring if `root` is not one — the
-    /// read side (`merge <dir>...`), where silently fabricating an empty
-    /// store would turn a typo or a missing CI artifact into a misleading
-    /// "shard incomplete" failure later.
+    /// read side (`merge <dir>...`, `store gc`, `store stats`), where
+    /// silently fabricating an empty store would turn a typo or a missing
+    /// CI artifact into a misleading "shard incomplete" failure later.
+    /// Deliberately creates nothing (a source store may live on a
+    /// read-only mount, and `store gc --dry-run` promises to touch
+    /// nothing): every read path tolerates absent subdirectories, and
+    /// write destinations go through [`Store::open`], which creates them.
     pub fn open_existing(root: impl Into<PathBuf>) -> io::Result<Store> {
         let root = root.into();
         if !root.join("entries").is_dir() {
@@ -129,6 +161,10 @@ impl Store {
         self.root.join("traces").join(format!("{}.json", key_hex(key)))
     }
 
+    fn profile_path(&self, fnv: u64) -> PathBuf {
+        self.root.join("profiles").join(format!("{}.json", key_hex(fnv)))
+    }
+
     /// Look an entry up. Any defect — missing file, truncated or garbled
     /// JSON, schema-version mismatch, key mismatch, malformed record — is a
     /// miss, not an error: the caller re-simulates and overwrites.
@@ -146,19 +182,109 @@ impl Store {
     }
 
     /// Look a trace up (the measurement pipeline's first tier). Same
-    /// corruption contract as [`Store::get`]: any defect is a miss — the
-    /// engine re-runs the interpreter and rewrites the entry.
+    /// corruption contract as [`Store::get`]: any defect — in the trace
+    /// document itself *or* in any pooled profile it references (missing
+    /// file, truncated JSON, content that no longer hashes to its own
+    /// name) — is a miss, never a panic: the engine re-runs the
+    /// interpreter and rewrites both the trace and its pool files. A bad
+    /// pool file only fails the traces that reference it; every other
+    /// trace resolves independently.
     pub fn get_trace(&self, key: u64) -> Option<TraceResult> {
         let doc = json::read_file(&self.trace_path(key)).ok()?;
-        decode_trace(&doc, key)
+        self.decode_trace_doc(&doc, key)
     }
 
     /// Persist a trace-tier entry (atomic temp-file + rename;
-    /// [`Store::open`] created `traces/`). Traces are written compact —
-    /// one record per host launch, they dominate the store's disk
-    /// footprint.
+    /// [`Store::open`] created `traces/` and `profiles/`). The launch
+    /// profiles go to the content-addressed pool first — each distinct
+    /// `KernelProfile` is written once, under the FNV-1a of its canonical
+    /// compact bytes — and the trace document records only the refs, so a
+    /// reader never sees a trace whose pool files are not yet on disk.
+    /// Convergence-loop workloads whose launches repeat byte-identically
+    /// across iterations (pagerank/bfs/mis) collapse to a handful of pool
+    /// files regardless of launch count.
     pub fn put_trace(&self, key: u64, result: &TraceResult) -> io::Result<()> {
-        json::write_file_atomic_compact(&self.trace_path(key), &encode_trace(key, result))
+        let doc = match result {
+            Ok(trace) => {
+                // one pool write per *distinct* profile in this trace —
+                // convergence loops repeat launches byte-identically, so
+                // `written` collapses dozens of refs to one file. The
+                // write is unconditional (not guarded on `exists`) so
+                // persisting a freshly re-acquired trace also heals a
+                // garbled pool file under the same key; concurrent
+                // writers land identical canonical bytes via the atomic
+                // rename.
+                let mut written: HashSet<u64> = HashSet::new();
+                let mut launches = vec![];
+                for rec in &trace.launches {
+                    let mut refs = vec![];
+                    for prof in &rec.profiles {
+                        let text = prof.canonical_compact();
+                        let fnv = fnv1a64(text.as_bytes());
+                        if written.insert(fnv) {
+                            json::write_text_atomic(&self.profile_path(fnv), &text)?;
+                        }
+                        refs.push(Json::Str(key_hex(fnv)));
+                    }
+                    launches.push(Json::Obj(vec![
+                        ("unit".into(), Json::Str(rec.unit.clone())),
+                        ("kernels".into(), Json::Arr(refs)),
+                    ]));
+                }
+                encode_trace_doc(key, Ok(Json::Arr(launches)))
+            }
+            Err(e) => encode_trace_doc(key, Err(e)),
+        };
+        json::write_file_atomic_compact(&self.trace_path(key), &doc)
+    }
+
+    /// Resolve one pooled profile. `memo` collapses repeated refs within
+    /// one trace resolution (a convergence trace references the same
+    /// profile dozens of times). Any defect — unreadable file, malformed
+    /// JSON, or content whose canonical bytes no longer hash to `fnv` —
+    /// is `None`: the caller degrades the referencing trace to a miss.
+    fn pool_get(&self, fnv: u64, memo: &mut HashMap<u64, KernelProfile>) -> Option<KernelProfile> {
+        if let Some(p) = memo.get(&fnv) {
+            return Some(p.clone());
+        }
+        let doc = json::read_file(&self.profile_path(fnv)).ok()?;
+        let prof = KernelProfile::from_json(&doc)?;
+        if fnv1a64(prof.canonical_compact().as_bytes()) != fnv {
+            return None; // content/name mismatch: corrupt or misfiled
+        }
+        memo.insert(fnv, prof.clone());
+        Some(prof)
+    }
+
+    fn decode_trace_doc(&self, doc: &Json, key: u64) -> Option<TraceResult> {
+        check_trace_header(doc, key)?;
+        match doc.get("status")?.as_str()? {
+            "err" => Some(Err(doc.get("error")?.as_str()?.to_string())),
+            "ok" => {
+                let mut memo = HashMap::new();
+                let mut launches = vec![];
+                for rec in doc.get("launches")?.as_array()? {
+                    let unit = rec.get("unit")?.as_str()?.to_string();
+                    let mut profiles = vec![];
+                    for r in rec.get("kernels")?.as_array()? {
+                        let fnv = u64::from_str_radix(r.as_str()?, 16).ok()?;
+                        profiles.push(self.pool_get(fnv, &mut memo)?);
+                    }
+                    launches.push(LaunchRecord { unit, profiles });
+                }
+                Some(Ok(ExecTrace { launches }))
+            }
+            _ => None,
+        }
+    }
+
+    /// The pool refs a trace document records, without resolving them —
+    /// what GC and `store stats` walk. `None` if the document itself is
+    /// missing/corrupt/stale (its refs then hold nothing live); an error
+    /// trace yields an empty list.
+    pub fn trace_profile_refs(&self, key: u64) -> Option<Vec<u64>> {
+        let doc = json::read_file(&self.trace_path(key)).ok()?;
+        trace_doc_refs(&doc, key)
     }
 
     /// Every key present on disk (directory scan — the source of truth).
@@ -169,6 +295,11 @@ impl Store {
     /// Every trace-tier key present on disk.
     pub fn trace_keys(&self) -> Vec<u64> {
         Self::scan_keys(self.root.join("traces"))
+    }
+
+    /// Every pooled-profile key present on disk.
+    pub fn profile_keys(&self) -> Vec<u64> {
+        Self::scan_keys(self.root.join("profiles"))
     }
 
     fn scan_keys(dir: PathBuf) -> Vec<u64> {
@@ -232,12 +363,64 @@ impl Store {
         ms
     }
 
-    /// Copy every entry of `other` that this store lacks (raw document
-    /// copy, preserving all metadata), measurement and trace tiers both.
-    /// Returns how many entries were imported. Corrupt source entries are
-    /// skipped; a corrupt local entry is replaced by a valid imported one.
+    /// Copy every record of `other` that this store lacks (raw document
+    /// copy, preserving all metadata) — measurement entries, traces, and
+    /// the profile pool, which is unioned *first* so an imported trace
+    /// never references a profile that has not landed yet. Returns how
+    /// many records (across all three tiers) were imported. Corrupt
+    /// source records are skipped; a corrupt local record is replaced by
+    /// a valid imported one.
     pub fn merge_from(&self, other: &Store) -> io::Result<usize> {
         let mut imported = 0;
+        // profile pool first: content-addressed, so "missing locally" is
+        // the only question — identical keys are identical bytes. Each
+        // source file is read once, validated (parse + re-hash to its own
+        // name), and its canonical bytes rewritten locally; `local_pool`
+        // memoizes validated profiles so the trace validation below never
+        // re-parses a pool file.
+        let mut local_pool: HashMap<u64, KernelProfile> = HashMap::new();
+        for fnv in other.profile_keys() {
+            if self.pool_get(fnv, &mut local_pool).is_some() {
+                continue;
+            }
+            let Ok(doc) = json::read_file(&other.profile_path(fnv)) else { continue };
+            let Some(prof) = KernelProfile::from_json(&doc) else { continue };
+            let canonical = prof.canonical_compact();
+            if fnv1a64(canonical.as_bytes()) != fnv {
+                continue; // corrupt in the source: skip, don't propagate
+            }
+            // write the *canonical* bytes, not a copy of the source doc:
+            // a hash-valid but non-canonical source file must not break
+            // the one-canonical-file-per-profile invariant downstream
+            json::write_text_atomic(&self.profile_path(fnv), &canonical)?;
+            local_pool.insert(fnv, prof);
+            imported += 1;
+        }
+        // one trace validation for both sides: structurally sound and
+        // every ref resolves in the (just-unioned) local pool — all pool
+        // reads go through `local_pool`, so shared profiles parse once
+        // across the whole merge, not once per referencing trace
+        let mut trace_ok = |store: &Store, doc: &Json, key: u64| -> bool {
+            trace_doc_refs(doc, key).is_some_and(|refs| {
+                refs.iter().all(|f| store.pool_get(*f, &mut local_pool).is_some())
+            })
+        };
+        for key in other.trace_keys() {
+            if let Ok(local) = json::read_file(&self.trace_path(key)) {
+                if trace_ok(self, &local, key) {
+                    continue; // present and valid locally: keep ours
+                }
+            }
+            let Ok(doc) = json::read_file(&other.trace_path(key)) else { continue };
+            // a ref whose profile was corrupt at the source was not
+            // imported above, so its trace is skipped exactly as if it
+            // failed to resolve there
+            if !trace_ok(self, &doc, key) {
+                continue;
+            }
+            json::write_file_atomic_compact(&self.trace_path(key), &doc)?;
+            imported += 1;
+        }
         for key in other.keys() {
             if self.get(key).is_some() {
                 continue;
@@ -247,17 +430,6 @@ impl Store {
                 continue;
             }
             json::write_file_atomic(&self.entry_path(key), &doc)?;
-            imported += 1;
-        }
-        for key in other.trace_keys() {
-            if self.get_trace(key).is_some() {
-                continue;
-            }
-            let Ok(doc) = json::read_file(&other.trace_path(key)) else { continue };
-            if decode_trace(&doc, key).is_none() {
-                continue;
-            }
-            json::write_file_atomic_compact(&self.trace_path(key), &doc)?;
             imported += 1;
         }
         Ok(imported)
@@ -289,6 +461,164 @@ impl Store {
             .iter()
             .map(|k| u64::from_str_radix(k.as_str()?, 16).ok())
             .collect()
+    }
+
+    /// Garbage-collect the store against a reachable-key set (computed by
+    /// `coordinator::gc::reachable_keys` from the current experiment
+    /// grids and tuner ladders — the same replay `merge` performs):
+    ///
+    /// 1. measurement entries whose key is unreachable are deleted;
+    /// 2. traces whose key is unreachable are deleted;
+    /// 3. pooled profiles referenced by **no surviving trace** are
+    ///    deleted — a reachable-but-corrupt trace document contributes no
+    ///    refs (it already reads as a miss and will be rewritten by the
+    ///    next run);
+    /// 4. `MANIFEST.json` is rewritten.
+    ///
+    /// With `dry_run` the same report is computed and *nothing* is
+    /// touched — not even the manifest.
+    pub fn gc(
+        &self,
+        reachable_entries: &HashSet<u64>,
+        reachable_traces: &HashSet<u64>,
+        dry_run: bool,
+    ) -> io::Result<GcReport> {
+        let mut report = GcReport { dry_run, ..GcReport::default() };
+        for key in self.keys() {
+            if reachable_entries.contains(&key) {
+                report.kept_entries += 1;
+            } else {
+                report.removed_entries += 1;
+                if !dry_run {
+                    std::fs::remove_file(self.entry_path(key))?;
+                }
+            }
+        }
+        let mut live_profiles: HashSet<u64> = HashSet::new();
+        for key in self.trace_keys() {
+            if reachable_traces.contains(&key) {
+                report.kept_traces += 1;
+                if let Some(refs) = self.trace_profile_refs(key) {
+                    live_profiles.extend(refs);
+                }
+            } else {
+                report.removed_traces += 1;
+                if !dry_run {
+                    std::fs::remove_file(self.trace_path(key))?;
+                }
+            }
+        }
+        for fnv in self.profile_keys() {
+            if live_profiles.contains(&fnv) {
+                report.kept_profiles += 1;
+            } else {
+                report.removed_profiles += 1;
+                if !dry_run {
+                    std::fs::remove_file(self.profile_path(fnv))?;
+                }
+            }
+        }
+        if !dry_run {
+            self.write_manifest()?;
+        }
+        Ok(report)
+    }
+
+    /// Per-tier counts and on-disk bytes, plus the profile pool's dedup
+    /// leverage: `profile_refs` counts every ref every valid trace
+    /// document holds (what an inline-profile store would have written),
+    /// against `profiles.count` distinct pooled files.
+    pub fn stats(&self) -> StoreStats {
+        let tier = |dir: &str| {
+            let mut t = TierStats::default();
+            if let Ok(rd) = std::fs::read_dir(self.root.join(dir)) {
+                for e in rd.filter_map(|e| e.ok()) {
+                    if e.path().extension().is_some_and(|x| x == "json") {
+                        t.count += 1;
+                        t.bytes += e.metadata().map(|m| m.len()).unwrap_or(0);
+                    }
+                }
+            }
+            t
+        };
+        let mut refs = 0u64;
+        for key in self.trace_keys() {
+            if let Some(r) = self.trace_profile_refs(key) {
+                refs += r.len() as u64;
+            }
+        }
+        StoreStats {
+            entries: tier("entries"),
+            traces: tier("traces"),
+            profiles: tier("profiles"),
+            profile_refs: refs,
+        }
+    }
+}
+
+/// What [`Store::gc`] kept and removed, per tier.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GcReport {
+    pub dry_run: bool,
+    pub kept_entries: usize,
+    pub removed_entries: usize,
+    pub kept_traces: usize,
+    pub removed_traces: usize,
+    pub kept_profiles: usize,
+    pub removed_profiles: usize,
+}
+
+impl GcReport {
+    pub fn removed_total(&self) -> usize {
+        self.removed_entries + self.removed_traces + self.removed_profiles
+    }
+}
+
+/// One tier's footprint as [`Store::stats`] reports it.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TierStats {
+    pub count: usize,
+    pub bytes: u64,
+}
+
+/// Per-tier footprint + pool dedup ratio (`pipefwd store stats`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StoreStats {
+    pub entries: TierStats,
+    pub traces: TierStats,
+    pub profiles: TierStats,
+    /// Profile refs across all valid trace documents — the number of
+    /// profile records an inline (pre-v4) trace tier would store.
+    pub profile_refs: u64,
+}
+
+impl StoreStats {
+    /// refs ÷ distinct pooled profiles (1.0 = no repetition; convergence
+    /// workloads typically read well above 1).
+    pub fn dedup_ratio(&self) -> f64 {
+        if self.profiles.count == 0 {
+            return 1.0;
+        }
+        self.profile_refs as f64 / self.profiles.count as f64
+    }
+
+    /// The `store stats --format json` document.
+    pub fn to_json(&self) -> Json {
+        let tier = |t: &TierStats| {
+            Json::Obj(vec![
+                ("count".into(), Json::Num(t.count as f64)),
+                ("bytes".into(), Json::Num(t.bytes as f64)),
+            ])
+        };
+        Json::Obj(vec![
+            ("schema".into(), Json::Str("pipefwd-store-stats-v1".into())),
+            ("store_schema".into(), Json::Str(STORE_SCHEMA.into())),
+            ("entries".into(), tier(&self.entries)),
+            ("traces".into(), tier(&self.traces)),
+            ("profiles".into(), tier(&self.profiles)),
+            ("profile_refs".into(), Json::Num(self.profile_refs as f64)),
+            ("dedup_ratio".into(), Json::Num(self.dedup_ratio())),
+        ])
     }
 }
 
@@ -325,16 +655,18 @@ fn decode_entry(doc: &Json, key: u64) -> Option<CellResult> {
     }
 }
 
-fn encode_trace(key: u64, result: &TraceResult) -> Json {
+/// The v4 trace document envelope: `launches` holds pool refs (built by
+/// [`Store::put_trace`]), never inline profiles.
+fn encode_trace_doc(key: u64, body: Result<Json, &String>) -> Json {
     let mut fields = vec![
         ("schema".into(), Json::Str(STORE_SCHEMA.into())),
         ("kind".into(), Json::Str("trace".into())),
         ("key".into(), Json::Str(key_hex(key))),
     ];
-    match result {
-        Ok(trace) => {
+    match body {
+        Ok(launches) => {
             fields.push(("status".into(), Json::Str("ok".into())));
-            fields.push(("launches".into(), trace.to_json()));
+            fields.push(("launches".into(), launches));
         }
         Err(e) => {
             fields.push(("status".into(), Json::Str("err".into())));
@@ -344,7 +676,35 @@ fn encode_trace(key: u64, result: &TraceResult) -> Json {
     Json::Obj(fields)
 }
 
-fn decode_trace(doc: &Json, key: u64) -> Option<TraceResult> {
+/// Structural walk of a trace document without pool resolution: every
+/// launch record must carry a `unit` string and well-formed hex refs.
+/// `None` = corrupt/stale/misfiled document; an error trace is `Some`
+/// with no refs. Shared by [`Store::trace_profile_refs`] (GC, stats) and
+/// the merge import validation.
+fn trace_doc_refs(doc: &Json, key: u64) -> Option<Vec<u64>> {
+    check_trace_header(doc, key)?;
+    match doc.get("status")?.as_str()? {
+        "err" => {
+            doc.get("error")?.as_str()?;
+            Some(vec![])
+        }
+        "ok" => {
+            let mut refs = vec![];
+            for rec in doc.get("launches")?.as_array()? {
+                rec.get("unit")?.as_str()?;
+                for r in rec.get("kernels")?.as_array()? {
+                    refs.push(u64::from_str_radix(r.as_str()?, 16).ok()?);
+                }
+            }
+            Some(refs)
+        }
+        _ => None,
+    }
+}
+
+/// Schema/kind/key validation shared by trace resolution and the
+/// refs-only walk. `None` = stale or misfiled document (a miss).
+fn check_trace_header(doc: &Json, key: u64) -> Option<()> {
     if doc.get("schema")?.as_str()? != STORE_SCHEMA {
         return None;
     }
@@ -354,11 +714,7 @@ fn decode_trace(doc: &Json, key: u64) -> Option<TraceResult> {
     if doc.get("key")?.as_str()? != key_hex(key) {
         return None;
     }
-    match doc.get("status")?.as_str()? {
-        "ok" => ExecTrace::from_json(doc.get("launches")?).map(Ok),
-        "err" => Some(Err(doc.get("error")?.as_str()?.to_string())),
-        _ => None,
-    }
+    Some(())
 }
 
 #[cfg(test)]
@@ -531,10 +887,112 @@ mod tests {
         assert_eq!(s.get_trace(12), Some(Err("validation: nw: m[9] = 1, want 2".into())));
         assert_eq!(s.get_trace(13), None);
         assert_eq!(s.trace_keys(), vec![11, 12]);
+        // both launches carry the identical profile: the pool holds it once
+        assert_eq!(s.profile_keys().len(), 1, "identical launches must share one pool file");
+        assert_eq!(s.trace_profile_refs(11), Some(vec![s.profile_keys()[0]; 2]));
+        assert_eq!(s.trace_profile_refs(12), Some(vec![]), "error traces hold no refs");
         // the two tiers are separate namespaces: no measurement entry
         // exists under a trace key
         assert_eq!(s.get(11), None);
         assert_eq!(s.len(), 0, "traces must not count as measurement entries");
+        let _ = std::fs::remove_dir_all(s.root());
+    }
+
+    /// The pool is global: a second trace (different key, overlapping
+    /// launches) reuses the existing profile files instead of rewriting
+    /// its own copies.
+    #[test]
+    fn profile_pool_dedups_across_traces() {
+        let s = tmp_store("pool-dedup");
+        s.put_trace(31, &Ok(sample_trace())).unwrap();
+        let mut longer = sample_trace();
+        let extra = longer.launches[0].clone();
+        longer.launches.push(extra); // 3 identical launches now
+        s.put_trace(32, &Ok(longer.clone())).unwrap();
+        assert_eq!(s.profile_keys().len(), 1, "one distinct profile across both traces");
+        assert_eq!(s.get_trace(32), Some(Ok(longer)));
+        let stats = s.stats();
+        assert_eq!(stats.profiles.count, 1);
+        assert_eq!(stats.profile_refs, 5, "2 + 3 refs against one pooled profile");
+        assert_eq!(stats.dedup_ratio(), 5.0);
+        assert_eq!(stats.traces.count, 2);
+        assert!(stats.profiles.bytes > 0 && stats.traces.bytes > 0);
+        let _ = std::fs::remove_dir_all(s.root());
+    }
+
+    /// A defective pool file (missing, garbled, or content that no longer
+    /// hashes to its name) fails exactly the traces that reference it —
+    /// never a panic, never an unrelated trace.
+    #[test]
+    fn corrupt_pool_files_degrade_only_referencing_traces() {
+        let s = tmp_store("pool-corrupt");
+        s.put_trace(41, &Ok(sample_trace())).unwrap();
+        // an unrelated trace with a distinct profile
+        let mut other = sample_trace();
+        other.launches.truncate(1);
+        other.launches[0].profiles[0].pipe_writes = 999; // distinct content
+        s.put_trace(42, &Ok(other.clone())).unwrap();
+        assert_eq!(s.profile_keys().len(), 2);
+        let victim = s.trace_profile_refs(41).unwrap()[0];
+        let path = s.root().join("profiles").join(format!("{}.json", key_hex(victim)));
+
+        // valid JSON profile, but the content no longer matches the name
+        let swapped = other.launches[0].profiles[0].canonical_compact();
+        std::fs::write(&path, &swapped).unwrap();
+        assert_eq!(s.get_trace(41), None, "hash-mismatched pool file must be a miss");
+        assert_eq!(s.get_trace(42), Some(Ok(other.clone())), "other traces unaffected");
+
+        // garbled
+        std::fs::write(&path, "not json \u{0}").unwrap();
+        assert_eq!(s.get_trace(41), None, "garbled pool file must be a miss");
+
+        // missing entirely
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(s.get_trace(41), None, "dangling ref must be a miss");
+        assert_eq!(s.get_trace(42), Some(Ok(other)), "other traces still resolve");
+
+        // rewriting the trace heals the pool
+        s.put_trace(41, &Ok(sample_trace())).unwrap();
+        assert_eq!(s.get_trace(41), Some(Ok(sample_trace())));
+        let _ = std::fs::remove_dir_all(s.root());
+    }
+
+    /// GC against explicit reachable sets: unreachable entries and traces
+    /// go, pooled profiles survive exactly as long as one surviving trace
+    /// references them, and the manifest is rewritten (unless dry-run).
+    #[test]
+    fn gc_removes_unreachable_records_and_orphan_profiles() {
+        let s = tmp_store("gc-unit");
+        let m = sample_measurement();
+        s.put(1, &Ok(m.clone()), false).unwrap();
+        s.put(2, &Ok(m), false).unwrap();
+        s.put_trace(11, &Ok(sample_trace())).unwrap();
+        let mut other = sample_trace();
+        other.launches[0].profiles[0].pipe_writes = 777; // distinct profile
+        other.launches.truncate(1);
+        s.put_trace(12, &Ok(other)).unwrap();
+        assert_eq!(s.profile_keys().len(), 2);
+
+        let entries: HashSet<u64> = [1].into_iter().collect();
+        let traces: HashSet<u64> = [11].into_iter().collect();
+
+        // dry run: full report, zero deletion, manifest untouched
+        let dry = s.gc(&entries, &traces, true).unwrap();
+        assert!(dry.dry_run);
+        assert_eq!((dry.kept_entries, dry.removed_entries), (1, 1));
+        assert_eq!((dry.kept_traces, dry.removed_traces), (1, 1));
+        assert_eq!((dry.kept_profiles, dry.removed_profiles), (1, 1));
+        assert_eq!(s.keys(), vec![1, 2], "dry run must not delete");
+        assert_eq!(s.trace_keys(), vec![11, 12]);
+        assert!(!s.root().join("MANIFEST.json").exists(), "dry run must not write");
+
+        let real = s.gc(&entries, &traces, false).unwrap();
+        assert_eq!(real, GcReport { dry_run: false, ..dry });
+        assert_eq!(s.keys(), vec![1]);
+        assert_eq!(s.trace_keys(), vec![11]);
+        assert_eq!(s.profile_keys().len(), 1);
+        assert_eq!(s.get_trace(11), Some(Ok(sample_trace())), "kept trace still resolves");
+        assert_eq!(s.load_manifest(), Some(vec![1]), "manifest rewritten post-gc");
         let _ = std::fs::remove_dir_all(s.root());
     }
 
@@ -548,10 +1006,11 @@ mod tests {
         std::fs::write(&path, &full[..full.len() / 2]).unwrap();
         assert_eq!(s.get_trace(7), None, "truncated trace must be a miss");
 
-        // a previous schema version (the chunked-interpreter bump): stale
-        let stale = full.replace(STORE_SCHEMA, "pipefwd-store-v2");
+        // a previous schema version (the inline-profile trace format):
+        // stale — its launches never referenced the v4 pool
+        let stale = full.replace(STORE_SCHEMA, "pipefwd-store-v3");
         std::fs::write(&path, &stale).unwrap();
-        assert_eq!(s.get_trace(7), None, "v2 trace must be a miss under v3");
+        assert_eq!(s.get_trace(7), None, "v3 trace must be a miss under v4");
 
         // a measurement entry misfiled under a trace path (wrong kind)
         s.put(7, &Ok(sample_measurement()), false).unwrap();
@@ -562,15 +1021,44 @@ mod tests {
     }
 
     #[test]
-    fn merge_from_carries_traces_across_stores() {
+    fn merge_from_carries_traces_and_unions_the_pool() {
         let a = tmp_store("trace-merge-a");
         let b = tmp_store("trace-merge-b");
         let t = sample_trace();
         b.put_trace(21, &Ok(t.clone())).unwrap();
         b.put(22, &Ok(sample_measurement()), false).unwrap();
-        assert_eq!(a.merge_from(&b).unwrap(), 2, "one trace + one measurement");
-        assert_eq!(a.get_trace(21), Some(Ok(t)));
+        assert_eq!(
+            a.merge_from(&b).unwrap(),
+            3,
+            "one pooled profile + one trace + one measurement"
+        );
+        assert_eq!(a.profile_keys(), b.profile_keys(), "pool must be unioned");
+        assert_eq!(a.get_trace(21), Some(Ok(t)), "imported trace resolves against local pool");
         assert!(a.get(22).is_some());
+        // idempotent: nothing new on a second merge
+        assert_eq!(a.merge_from(&b).unwrap(), 0);
+        let _ = std::fs::remove_dir_all(a.root());
+        let _ = std::fs::remove_dir_all(b.root());
+    }
+
+    /// A trace whose pool file is corrupt in the source store is skipped
+    /// by merge (it would not resolve there either); valid records still
+    /// import.
+    #[test]
+    fn merge_skips_traces_with_corrupt_source_pools() {
+        let a = tmp_store("pool-merge-a");
+        let b = tmp_store("pool-merge-b");
+        b.put_trace(51, &Ok(sample_trace())).unwrap();
+        let victim = b.profile_keys()[0];
+        std::fs::write(
+            b.root().join("profiles").join(format!("{}.json", key_hex(victim))),
+            "garbage",
+        )
+        .unwrap();
+        b.put(52, &Ok(sample_measurement()), false).unwrap();
+        assert_eq!(a.merge_from(&b).unwrap(), 1, "only the measurement imports");
+        assert_eq!(a.get_trace(51), None);
+        assert!(a.get(52).is_some());
         let _ = std::fs::remove_dir_all(a.root());
         let _ = std::fs::remove_dir_all(b.root());
     }

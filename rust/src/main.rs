@@ -34,6 +34,16 @@ ENGINE COMMANDS (parallel, cache-aware, persistent):
                                 absent, renders from the persistent store)
   report --diff <old> <new>     compare two results sinks; exit 1 on
          [--threshold PCT]      modelled-performance regressions > PCT %
+  store stats                   per-tier store footprint (entries /
+        [--format table|json]   traces / pooled profiles, counts + bytes)
+                                and the profile pool's dedup ratio
+  store gc [--dry-run]          delete every store record unreachable
+                                from the current E1-E7 grids (all scales,
+                                both estimators) and the tuner's
+                                depth x replication ladders, plus pooled
+                                profiles no surviving trace references;
+                                rewrites MANIFEST.json (--dry-run only
+                                reports)
 
 TABLE COMMANDS:
   table1               benchmark characterisation (paper Table 1)
@@ -72,6 +82,8 @@ OPTIONS:
                    configuration space
   --no-ref         skip the TuneReport's exhaustive-reference column
                    (the regret baseline costs the full grid once)
+  --dry-run        `store gc`: report what would be deleted without
+                   touching the store (not even the manifest)
   --tuned          `run`/`sweep`: let the tuner pick best-ff depths for
                    the E1/E2/E7 tables and annotate the E4 depth sweep
   --format F       `report` output: table (default) or json
@@ -123,6 +135,7 @@ fn main() {
     let mut policy = coordinator::Policy::Golden;
     let mut budget: usize = 40;
     let mut replication = false;
+    let mut dry_run = false;
     let mut no_ref = false;
     let mut tuned = false;
     let mut diff: Option<(String, String)> = None;
@@ -189,6 +202,7 @@ fn main() {
                     .unwrap_or_else(|| fail(&format!("bad --budget `{v}` (positive integer)")));
             }
             "--replication" => replication = true,
+            "--dry-run" => dry_run = true,
             "--no-ref" => no_ref = true,
             "--tuned" => tuned = true,
             "--out" => {
@@ -554,6 +568,94 @@ fn main() {
                         other => fail(&format!("unknown --format `{other}` (table|json)")),
                     }
                 }
+            }
+        }
+        "store" => {
+            let action = positional
+                .first()
+                .map(String::as_str)
+                .unwrap_or_else(|| fail("store <stats|gc> (see `pipefwd` usage)"));
+            // operate on the store in place: it must already exist —
+            // fabricating an empty one just to stat or gc it would hide a
+            // typo'd --cache-dir
+            let dir = Store::resolve_dir(cache_dir.as_deref());
+            let store = Store::open_existing(&dir)
+                .unwrap_or_else(|e| fail(&format!("opening store {}: {e}", dir.display())));
+            match action {
+                "stats" => {
+                    let stats = store.stats();
+                    match format.as_str() {
+                        "json" => print!("{}", stats.to_json().to_pretty()),
+                        "table" => {
+                            let schema = coordinator::store::STORE_SCHEMA;
+                            let mut t = pipefwd::report::Table::new(
+                                &format!("Store {} ({schema})", dir.display()),
+                                &["Tier", "Records", "Bytes"],
+                            );
+                            for (name, tier) in [
+                                ("entries", stats.entries),
+                                ("traces", stats.traces),
+                                ("profiles (pool)", stats.profiles),
+                            ] {
+                                t.row(vec![
+                                    name.into(),
+                                    tier.count.to_string(),
+                                    tier.bytes.to_string(),
+                                ]);
+                            }
+                            print!("{}", t.to_markdown());
+                            println!(
+                                "\nprofile refs: {} across {} pooled profiles \
+                                 (dedup ratio {:.2}x)",
+                                stats.profile_refs,
+                                stats.profiles.count,
+                                stats.dedup_ratio(),
+                            );
+                        }
+                        other => fail(&format!("unknown --format `{other}` (table|json)")),
+                    }
+                }
+                "gc" => {
+                    // the reachable set is a pure grid/ladder replay (IR
+                    // transforms only) — same move as `merge`, zero
+                    // simulation
+                    let reachable = coordinator::reachable_keys(&cfg);
+                    let report = store
+                        .gc(&reachable.entries, &reachable.traces, dry_run)
+                        .unwrap_or_else(|e| fail(&format!("store gc: {e}")));
+                    let verb = if dry_run { "would remove" } else { "removed" };
+                    let removed_col = if dry_run { "Would remove" } else { "Removed" };
+                    let mut t = pipefwd::report::Table::new(
+                        &format!(
+                            "Store gc {}{}",
+                            dir.display(),
+                            if dry_run { " (dry run)" } else { "" }
+                        ),
+                        &["Tier", "Kept", removed_col],
+                    );
+                    t.row(vec![
+                        "entries".into(),
+                        report.kept_entries.to_string(),
+                        report.removed_entries.to_string(),
+                    ]);
+                    t.row(vec![
+                        "traces".into(),
+                        report.kept_traces.to_string(),
+                        report.removed_traces.to_string(),
+                    ]);
+                    t.row(vec![
+                        "profiles (pool)".into(),
+                        report.kept_profiles.to_string(),
+                        report.removed_profiles.to_string(),
+                    ]);
+                    print!("{}", t.to_markdown());
+                    eprintln!(
+                        "{verb} {} unreachable record(s){}",
+                        report.removed_total(),
+                        if dry_run { "" } else { "; MANIFEST.json rewritten" },
+                    );
+                }
+                other => fail(&format!("unknown store action `{other}` (stats|gc)")),
             }
         }
         "table1" => save(&coordinator::table1(scale), "table1"),

@@ -196,6 +196,17 @@ impl KernelProfile {
         ])
     }
 
+    /// The canonical compact byte form of this profile — what the
+    /// persistent profile pool (`coordinator::store`) hashes and writes.
+    /// One distinct profile ⇒ one byte string ⇒ one pool key: the
+    /// content address of a pooled profile is FNV-1a over exactly these
+    /// bytes, and the pool reader verifies a loaded file re-serializes to
+    /// the hash it was filed under. `host_nanos` is not serialized (see
+    /// [`KernelProfile::to_json`]), so wall clock never splits the pool.
+    pub fn canonical_compact(&self) -> String {
+        self.to_json().to_compact()
+    }
+
     /// Inverse of [`KernelProfile::to_json`] (`host_nanos` reads as 0).
     pub fn from_json(v: &Json) -> Option<KernelProfile> {
         let ctr = |n: &f64| *n >= 0.0 && n.fract() == 0.0 && *n < MAX_SAFE_COUNT;
@@ -294,6 +305,27 @@ mod tests {
             let doc = crate::util::json::parse(text).unwrap();
             assert_eq!(KernelProfile::from_json(&doc), None, "accepted: {text}");
         }
+    }
+
+    /// The profile pool's content-address contract: canonical bytes are
+    /// stable across a JSON roundtrip (same bytes ⇒ same FNV ⇒ same pool
+    /// file), and `host_nanos` never perturbs them (wall clock must not
+    /// split the pool).
+    #[test]
+    fn canonical_compact_is_roundtrip_stable_and_clock_free() {
+        let mut p = KernelProfile::new("k_mem", 2);
+        for a in [0i64, 1, 5, 5] {
+            p.sites[0].record(a);
+        }
+        p.loops.insert(LoopId(1), LoopStats { invocations: 2, iters: 9 });
+        p.pipe_writes = 4;
+        let bytes = p.canonical_compact();
+        let parsed = crate::util::json::parse(&bytes).unwrap();
+        let rt = KernelProfile::from_json(&parsed).unwrap();
+        assert_eq!(rt.canonical_compact(), bytes);
+        let mut clocked = p.clone();
+        clocked.host_nanos = 123_456;
+        assert_eq!(clocked.canonical_compact(), bytes, "host_nanos must not split the pool");
     }
 
     #[test]

@@ -191,6 +191,17 @@ pub fn write_file_atomic_compact(path: &std::path::Path, doc: &Json) -> std::io:
     write_bytes_atomic(path, text)
 }
 
+/// Atomically write pre-serialized compact JSON (plus the conventional
+/// trailing newline). The measurement store's profile pool hashes the
+/// canonical compact bytes to derive the file name *before* writing — this
+/// entry point avoids re-serializing (and the risk of the hashed and
+/// written bytes drifting apart).
+pub fn write_text_atomic(path: &std::path::Path, compact: &str) -> std::io::Result<()> {
+    let mut text = compact.to_string();
+    text.push('\n');
+    write_bytes_atomic(path, text)
+}
+
 fn write_bytes_atomic(path: &std::path::Path, bytes: String) -> std::io::Result<()> {
     use std::sync::atomic::{AtomicU64, Ordering};
     static SEQ: AtomicU64 = AtomicU64::new(0);

@@ -83,6 +83,34 @@ impl Workload for Bfs {
         "bfs_kernel"
     }
 
+    /// The expand kernel's split shares `cost`: the memory kernel
+    /// re-reads `cost[t2]` for frontier nodes while the compute kernel
+    /// writes `cost[id]` for their unvisited neighbours. Every such race
+    /// is benign:
+    ///
+    /// * the racing index sets are **disjoint** — reads are guarded by
+    ///   `frontier[t2] == 1` and frontier ⊆ visited (`bfs_update` sets
+    ///   both together, and node 0 starts with both), while writes are
+    ///   guarded by `visited[id] == 0`; `visited` itself is only written
+    ///   by the separate `bfs_update` launch, so the guard is constant
+    ///   for the whole launch;
+    /// * concurrent writes to one `cost[id]` all store the identical
+    ///   value `level + 1` (every frontier node of one level carries
+    ///   `cost == level`), and `updating[id] = 1` is a **monotonic OR**
+    ///   idempotent under any arrival order.
+    ///
+    /// No interleaving — and hence no pipe depth, chunking, or replica
+    /// schedule (MxCx partitions `t2` disjointly, so the same guards
+    /// apply across replicas) — can change a value read, the control
+    /// flow it drives, or the recorded address streams, so the execution
+    /// trace is depth-invariant and a depth ladder runs the interpreter
+    /// once. This vouch is load-bearing: the conservative syntactic check
+    /// (`unit_depth_invariant`) rejects the split over the shared
+    /// writable `cost`.
+    fn benign_cross_kernel_races(&self) -> bool {
+        true
+    }
+
     fn kernels(&self) -> Vec<Kernel> {
         let clear = KernelBuilder::new("bfs_clear", KernelKind::SingleWorkItem)
             .buf_wo("updating", Ty::I32)

@@ -385,7 +385,9 @@ pub trait Workload: Sync {
     /// conservative syntactic check fails, so a depth sweep shares one
     /// interpreter trace. Defaults to false — NW's races are *not* benign
     /// (its split is only valid below the row width), which is exactly
-    /// the case the conservative default protects.
+    /// the case the conservative default protects. Vouched: fw, mis
+    /// (PR 4), and the irregular graph trio bfs/color/pagerank (the
+    /// ROADMAP vouch audit — each carries its proof at the impl).
     fn benign_cross_kernel_races(&self) -> bool {
         false
     }
@@ -583,6 +585,22 @@ mod tests {
         assert!(!fw_app.units.iter().all(unit_depth_invariant));
         assert!(fw.benign_cross_kernel_races());
         assert!(by_name("mis").unwrap().benign_cross_kernel_races());
+        // BFS likewise: the expand split shares the writable `cost`, so
+        // the vouch is load-bearing (disjoint visited/unvisited index
+        // sets + idempotent writes — see workloads::bfs)
+        let bfs = by_name("bfs").unwrap();
+        let bfs_app = bfs.build(Variant::FeedForward { depth: 1 }).unwrap();
+        assert!(!bfs_app.units.iter().all(unit_depth_invariant));
+        assert!(bfs.benign_cross_kernel_races());
+        // color/pagerank: the audit found their splits share no writable
+        // buffer (cross-buffer ping-pong), so the syntactic check already
+        // passes — the vouch documents the semantic argument
+        for name in ["color", "pagerank"] {
+            let w = by_name(name).unwrap();
+            let app = w.build(Variant::FeedForward { depth: 1 }).unwrap();
+            assert!(app.units.iter().all(unit_depth_invariant), "{name} split shares a buffer");
+            assert!(w.benign_cross_kernel_races());
+        }
         // single-kernel baselines are trivially invariant
         let base = nw.build(Variant::Baseline).unwrap();
         assert!(base.units.iter().all(unit_depth_invariant));

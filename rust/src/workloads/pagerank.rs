@@ -77,6 +77,23 @@ impl Workload for PageRank {
         "pagerank_kernel"
     }
 
+    /// Audited benign (ROADMAP vouch audit): the rank accumulator
+    /// `pr_next` is a pure sum target — written by the gather launch,
+    /// read only *next* iteration after the host's ping-pong swap — and
+    /// `contrib` is produced by the preceding `pagerank_contrib` launch
+    /// and read-only during the gather. Launches are sequential, so
+    /// within any single launch the split pair shares no writable buffer
+    /// (the memory kernel owns all loads of `pr`/`row`/`col`/`contrib`,
+    /// the compute kernel all stores of `contrib`/`pr_next`, over
+    /// disjoint buffers). The syntactic `unit_depth_invariant` check
+    /// already accepts every split unit; the vouch records the semantic
+    /// argument (accumulate-into-a-buffer-read-next-iteration) so it
+    /// survives transform changes and covers MxCx, where replicas write
+    /// disjoint `t2` slices of the same sum buffer.
+    fn benign_cross_kernel_races(&self) -> bool {
+        true
+    }
+
     fn kernels(&self) -> Vec<Kernel> {
         let contrib = KernelBuilder::new("pagerank_contrib", KernelKind::SingleWorkItem)
             .buf_ro("pr", Ty::F32)

@@ -52,6 +52,63 @@ fn cold_depth_sweep_interprets_once_per_workload() {
     );
 }
 
+/// PR-5 acceptance: the irregular graph trio's depth ladders collapse to
+/// one interpreter run per (workload, scale) under the new benign-race
+/// vouches — bfs (frontier flag is a monotonic OR over disjoint
+/// visited/unvisited index sets), color (color array written strictly
+/// behind the conflict reads, one round later), pagerank (rank sum
+/// buffer read only next iteration) — and every replayed rung is
+/// bit-identical to an independent cold run at that depth.
+#[test]
+fn vouched_graph_trio_depth_ladders_share_one_trace() {
+    let mut cells = vec![];
+    for name in ["bfs", "color", "pagerank"] {
+        for d in [1usize, 100, 1000] {
+            cells.push(Cell::new(name, Variant::FeedForward { depth: d }, Scale::Tiny));
+        }
+    }
+    let sweep = Engine::new(DeviceConfig::pac_a10(), 1);
+    let results = sweep.run_cells(&cells);
+    assert_eq!(sweep.simulations(), 9, "each depth is still a distinct measurement");
+    assert_eq!(sweep.trace_runs(), 3, "at most one interpreter run per (workload, scale)");
+    assert_eq!(sweep.trace_hits(), 6, "the other two rungs replay the shared trace");
+
+    // replay fidelity: every rung equals what a cold engine computes for
+    // that depth alone — the sink's byte-identity rests on this
+    for (cell, replayed) in cells.iter().zip(&results) {
+        let cold = Engine::new(DeviceConfig::pac_a10(), 1);
+        let fresh = cold.measure(
+            pipefwd::workloads::by_name(&cell.workload).unwrap().as_ref(),
+            cell.variant,
+            cell.scale,
+        );
+        assert_eq!(
+            replayed.clone(),
+            fresh,
+            "{} depth ladder replay diverged from a cold run at {:?}",
+            cell.workload,
+            cell.variant
+        );
+    }
+
+    // and through a persistent store, the *warm* trio ladder does zero
+    // interpreter work at all (the acceptance criterion verbatim)
+    let dir = std::env::temp_dir()
+        .join(format!("pipefwd-int-{}-vouch-trio", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    {
+        let seed = Engine::new(DeviceConfig::pac_a10(), 2).with_store(Store::open(&dir).unwrap());
+        let _ = seed.run_cells(&cells);
+        assert_eq!(seed.trace_runs(), 3);
+    }
+    let warm = Engine::new(DeviceConfig::pac_a10(), 2).with_store(Store::open(&dir).unwrap());
+    let warm_results = warm.run_cells(&cells);
+    assert_eq!(warm.trace_runs(), 0, "warm graph-trio ladder must not interpret");
+    assert_eq!(warm.simulations(), 0, "warm graph-trio ladder must not simulate");
+    assert_eq!(warm_results, results, "warm results must match the cold ladder exactly");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn parallel_engine_matches_serial_measurements() {
     let cells = reduced_grid();

@@ -10,7 +10,7 @@ use pipefwd::coordinator::{
 };
 use pipefwd::sim::device::DeviceConfig;
 use pipefwd::transform::Variant;
-use pipefwd::workloads::Scale;
+use pipefwd::workloads::{Scale, Workload as _};
 use std::path::PathBuf;
 
 fn tmp_dir(name: &str) -> PathBuf {
@@ -99,9 +99,9 @@ fn warm_trace_rerun_of_the_depth_trio_is_byte_identical() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
-/// The v2 -> v3 schema bump must orphan stale *trace* entries exactly like
-/// measurement entries: a v2-stamped trace reads as a miss and the
-/// interpreter re-runs.
+/// The v3 -> v4 schema bump must orphan stale *trace* entries exactly like
+/// measurement entries: a v3-stamped trace (inline profiles, no pool refs)
+/// reads as a miss and the interpreter re-runs.
 #[test]
 fn stale_schema_trace_entries_read_as_misses() {
     let dir = tmp_dir("trace-stale");
@@ -119,14 +119,138 @@ fn stale_schema_trace_entries_read_as_misses() {
     for f in std::fs::read_dir(dir.join("traces")).unwrap() {
         let path = f.unwrap().path();
         let text = std::fs::read_to_string(&path).unwrap();
-        std::fs::write(&path, text.replace(STORE_SCHEMA, "pipefwd-store-v2")).unwrap();
+        std::fs::write(&path, text.replace(STORE_SCHEMA, "pipefwd-store-v3")).unwrap();
     }
     std::fs::remove_dir_all(dir.join("entries")).unwrap();
 
     let e = Engine::new(DeviceConfig::pac_a10(), 2).with_store(Store::open(&dir).unwrap());
     let _ = e.run_cells(&cells);
     assert_eq!(e.trace_hits(), 2, "only the fresh in-process trace may be shared");
-    assert_eq!(e.trace_runs(), 1, "the stale v2 trace must be re-acquired, once");
+    assert_eq!(e.trace_runs(), 1, "the stale v3 trace must be re-acquired, once");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// PR-5 pool-corruption contract at engine level: vandalizing the pool
+/// files one workload's trace references degrades exactly that trace to a
+/// miss (one re-interpretation) — the other workloads' traces resolve,
+/// and the regenerated store reproduces the cold sink byte for byte.
+#[test]
+fn corrupt_pool_files_degrade_one_trace_and_heal() {
+    let dir = tmp_dir("pool-heal");
+    let mut cells = vec![];
+    for name in ["fw", "hotspot", "mis"] {
+        for d in [1usize, 100, 1000] {
+            cells.push(Cell::new(name, Variant::FeedForward { depth: d }, Scale::Tiny));
+        }
+    }
+    let cold = Engine::new(DeviceConfig::pac_a10(), 2).with_store(Store::open(&dir).unwrap());
+    let _ = cold.run_cells(&cells);
+    let cold_sink = cold.bench_json(Scale::Tiny, &[]);
+
+    // locate fw's trace via its public content address and garble every
+    // pool file it references
+    let fw = pipefwd::workloads::by_name("fw").unwrap();
+    let app = fw.build(Variant::FeedForward { depth: 1 }).unwrap();
+    let tkey =
+        pipefwd::coordinator::trace_key("fw", fw.benign_cross_kernel_races(), &app, Scale::Tiny);
+    let store = Store::open(&dir).unwrap();
+    let refs = store.trace_profile_refs(tkey).expect("fw trace persisted");
+    assert!(!refs.is_empty());
+    for fnv in &refs {
+        let path = dir.join("profiles").join(format!("{}.json", key_hex(*fnv)));
+        std::fs::write(&path, "garbage{{{").unwrap();
+    }
+    // drop the measurement tier so the trace tier actually answers
+    std::fs::remove_dir_all(dir.join("entries")).unwrap();
+
+    let warm = Engine::new(DeviceConfig::pac_a10(), 2).with_store(Store::open(&dir).unwrap());
+    let _ = warm.run_cells(&cells);
+    assert_eq!(warm.trace_runs(), 1, "only fw re-interprets");
+    assert_eq!(warm.trace_hits(), 8, "hotspot/mis traces + fw's fresh trace replay");
+    assert_eq!(warm.bench_json(Scale::Tiny, &[]), cold_sink, "healed sink must be byte-exact");
+
+    // the rewrite healed the pool: a third engine replays everything
+    std::fs::remove_dir_all(dir.join("entries")).unwrap();
+    let healed = Engine::new(DeviceConfig::pac_a10(), 2).with_store(Store::open(&dir).unwrap());
+    let _ = healed.run_cells(&cells);
+    assert_eq!(healed.trace_runs(), 0, "pool must be fully healed");
+    assert_eq!(healed.bench_json(Scale::Tiny, &[]), cold_sink);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// PR-5 gc acceptance: a warm store survives `store gc` intact — the
+/// warm rerun still replays BENCH_PR1.json byte-identically with zero
+/// simulations and zero trace runs — while planted orphans (an
+/// unreachable entry, trace, and their pooled profile) are deleted and
+/// the manifest is rewritten to exactly the surviving keys.
+#[test]
+fn gc_keeps_warm_replay_and_deletes_only_orphans() {
+    let dir = tmp_dir("gc-warm");
+    let mut cells = vec![];
+    for name in ["fw", "hotspot", "mis"] {
+        for d in [1usize, 100, 1000] {
+            cells.push(Cell::new(name, Variant::FeedForward { depth: d }, Scale::Tiny));
+        }
+    }
+    let cold = Engine::new(DeviceConfig::pac_a10(), 2).with_store(Store::open(&dir).unwrap());
+    let _ = cold.run_cells(&cells);
+    let cold_sink = cold.bench_json(Scale::Tiny, &[]);
+
+    // plant orphans under keys no grid replay can produce
+    let store = Store::open(&dir).unwrap();
+    let entries_before = store.keys().len();
+    let traces_before = store.trace_keys().len();
+    let profiles_before = store.profile_keys().len();
+    store.put(0xDEAD_BEEF, &Err("orphan".into()), false).unwrap();
+    let mut orphan_prof = pipefwd::sim::profile::KernelProfile::new("orphan_kernel", 1);
+    orphan_prof.sites[0].record(42);
+    store
+        .put_trace(
+            0xFEED_FACE,
+            &Ok(pipefwd::workloads::ExecTrace {
+                launches: vec![pipefwd::workloads::LaunchRecord {
+                    unit: "orphan_kernel".into(),
+                    profiles: vec![orphan_prof],
+                }],
+            }),
+        )
+        .unwrap();
+    assert_eq!(store.profile_keys().len(), profiles_before + 1);
+
+    let reachable = pipefwd::coordinator::reachable_keys(&DeviceConfig::pac_a10());
+
+    // dry run first: same numbers, zero deletion
+    let dry = store.gc(&reachable.entries, &reachable.traces, true).unwrap();
+    assert_eq!(dry.removed_entries, 1);
+    assert_eq!(dry.removed_traces, 1);
+    assert_eq!(dry.removed_profiles, 1);
+    assert_eq!(store.keys().len(), entries_before + 1, "dry run must not delete");
+
+    let report = store.gc(&reachable.entries, &reachable.traces, false).unwrap();
+    assert_eq!(report.kept_entries, entries_before);
+    assert_eq!(report.kept_traces, traces_before);
+    assert_eq!(report.kept_profiles, profiles_before);
+    assert_eq!(report.removed_entries, 1, "only the orphan entry goes");
+    assert_eq!(report.removed_traces, 1, "only the orphan trace goes");
+    assert_eq!(report.removed_profiles, 1, "only the orphan's pooled profile goes");
+    assert!(store.get(0xDEAD_BEEF).is_none());
+    assert!(store.get_trace(0xFEED_FACE).is_none());
+    assert_eq!(store.load_manifest(), Some(store.keys()), "manifest rewritten post-gc");
+
+    // the gc'd pooled store answers the whole grid with zero work
+    let warm = Engine::new(DeviceConfig::pac_a10(), 2).with_store(Store::open(&dir).unwrap());
+    let _ = warm.run_cells(&cells);
+    assert_eq!(warm.simulations(), 0, "post-gc warm rerun must not simulate");
+    assert_eq!(warm.trace_runs(), 0, "post-gc warm rerun must not interpret");
+    assert_eq!(warm.bench_json(Scale::Tiny, &[]), cold_sink, "post-gc sink must be byte-exact");
+
+    // and with the measurement tier dropped, the gc-surviving traces +
+    // pool still reproduce the sink from the interpreter-free path
+    std::fs::remove_dir_all(dir.join("entries")).unwrap();
+    let traced = Engine::new(DeviceConfig::pac_a10(), 2).with_store(Store::open(&dir).unwrap());
+    let _ = traced.run_cells(&cells);
+    assert_eq!(traced.trace_runs(), 0, "gc must keep every reachable trace + pool file");
+    assert_eq!(traced.bench_json(Scale::Tiny, &[]), cold_sink);
     let _ = std::fs::remove_dir_all(&dir);
 }
 
