@@ -1,0 +1,98 @@
+//! Bench: the measurement daemon (PR-6 tentpole). Spawns an in-process
+//! `pipefwd serve` over a loopback port, then hits it with N concurrent
+//! clients all requesting the same E2 grid. The §Perf signal is the
+//! comparison against one serial cold run of that grid: the daemon's
+//! wall clock should track ONE cold grid (plus transport noise), not N,
+//! and the printed counters prove it — `simulations`/`trace_runs` equal
+//! the serial run's, with the overlap answered from the claim/fulfil
+//! memo (`requests_deduped`). A final warm client pass shows the
+//! fully-memoized round-trip cost (pure wire + encode/decode).
+
+use pipefwd::coordinator::{grid, net, service, Engine, ExperimentId, Service, ServiceRequest};
+use pipefwd::sim::device::DeviceConfig;
+use pipefwd::util::bench::{bench_jobs, bench_scale, BenchReport};
+use std::sync::Arc;
+
+const CLIENTS: usize = 4;
+
+fn main() {
+    let scale = bench_scale();
+    let exps = vec![ExperimentId::E2];
+    let mut b = BenchReport::new("serve");
+
+    // the cost ceiling: one cold serial grid, no daemon involved
+    let reference = Engine::new(DeviceConfig::pac_a10(), bench_jobs());
+    let cells = grid(ExperimentId::E2, scale);
+    b.sample("serial_cold_grid", || reference.run_cells(&cells));
+    println!(
+        "serial: {} simulated, {} trace runs",
+        reference.simulations(),
+        reference.trace_runs()
+    );
+
+    let svc = Arc::new(Service::daemon(Engine::new(DeviceConfig::pac_a10(), bench_jobs())));
+    let server = net::Server::spawn(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        net::ServerConfig { workers: CLIENTS, queue_cap: 64 },
+    )
+    .expect("binding a loopback port");
+    let addr = server.addr().to_string();
+
+    let fan_out = |b: &mut BenchReport, label: &str| {
+        let responses = b.sample(label, || {
+            let handles: Vec<_> = (0..CLIENTS)
+                .map(|_| {
+                    let addr = addr.clone();
+                    let exps = exps.clone();
+                    std::thread::spawn(move || {
+                        net::request(
+                            &addr,
+                            &ServiceRequest::Run { experiments: exps, scale, shard: None },
+                        )
+                        .expect("daemon answers")
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
+        });
+        for items in &responses {
+            let bench = service::cells_to_bench(items, scale, &exps).expect("client sink");
+            assert_eq!(
+                bench,
+                reference.bench_json(scale, &exps),
+                "daemon sink must match the serial path byte-for-byte"
+            );
+        }
+    };
+
+    fan_out(&mut b, &format!("cold_grid_x{CLIENTS}_clients"));
+    println!(
+        "daemon cold: {} simulated, {} trace runs, {} requests deduped, \
+         {} clients served, queue depth max {}",
+        svc.engine().simulations(),
+        svc.engine().trace_runs(),
+        svc.requests_deduped(),
+        svc.clients_served(),
+        svc.queue_depth_max()
+    );
+    assert_eq!(
+        svc.engine().simulations(),
+        reference.simulations(),
+        "{CLIENTS} overlapping clients must cost one cold grid, not {CLIENTS}"
+    );
+    assert_eq!(svc.engine().trace_runs(), reference.trace_runs());
+
+    // warm pass: the grid is fully memoized, so this measures the pure
+    // transport + codec round-trip
+    fan_out(&mut b, &format!("warm_grid_x{CLIENTS}_clients"));
+    println!(
+        "daemon warm: {} simulated (expect unchanged), {} requests deduped",
+        svc.engine().simulations(),
+        svc.requests_deduped()
+    );
+    assert_eq!(svc.engine().simulations(), reference.simulations());
+
+    server.shutdown();
+    b.finish();
+}

@@ -389,6 +389,21 @@ pub type CellResult = Result<Measurement, String>;
 /// be large (one record per host launch) and are read by many probes.
 pub type TraceResult = Result<ExecTrace, String>;
 
+/// Snapshot of the engine's tier counters ([`Engine::counters`]): one
+/// value instead of six accessor calls, so the `Service` facade and the
+/// daemon's stats endpoint report a single coherent reading.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineCounters {
+    /// Unique configurations entered into the memo table (claimed keys).
+    pub cache_len: u64,
+    pub cache_hits: u64,
+    pub store_hits: u64,
+    pub store_errors: u64,
+    pub simulations: u64,
+    pub trace_hits: u64,
+    pub trace_runs: u64,
+}
+
 enum Slot<V> {
     InFlight,
     Done(V),
@@ -632,6 +647,24 @@ impl Engine {
     /// warm-store rerun reads 0.
     pub fn trace_runs(&self) -> u64 {
         self.trace_runs.load(Ordering::Relaxed)
+    }
+
+    /// One consistent-enough snapshot of every tier counter — what the
+    /// `Service` facade reports through `--counters` documents and the
+    /// daemon's `GET /stats`. Individual loads are relaxed (exactly like
+    /// the accessors above); a snapshot taken while workers are mid-cell
+    /// may be skewed by in-flight increments, which the counters gates
+    /// never race against (they read quiesced engines).
+    pub fn counters(&self) -> EngineCounters {
+        EngineCounters {
+            cache_len: self.cache.len() as u64,
+            cache_hits: self.cache_hits(),
+            store_hits: self.store_hits(),
+            store_errors: self.store_errors(),
+            simulations: self.simulations(),
+            trace_hits: self.trace_hits(),
+            trace_runs: self.trace_runs(),
+        }
     }
 
     /// Run one (workload, variant, scale) through the memo table and the

@@ -102,6 +102,18 @@ pub fn reachable_keys(cfg: &DeviceConfig) -> Reachable {
     r
 }
 
+/// Reachability + collection in one call: what the CLI's `store gc` arm
+/// and the daemon's `store_gc` request both run (the `Service` facade
+/// keeps them one code path).
+pub fn run_gc(
+    store: &super::store::Store,
+    cfg: &DeviceConfig,
+    dry_run: bool,
+) -> std::io::Result<super::store::GcReport> {
+    let r = reachable_keys(cfg);
+    store.gc(&r.entries, &r.traces, dry_run)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -21,11 +21,18 @@
 //! shards), the [`gc`] module's grid-replay reachability for
 //! `pipefwd store gc`/`store stats`, and the bfs/color/pagerank
 //! benign-race vouches that collapse the irregular graph workloads'
-//! depth ladders to one interpreter run each.
+//! depth ladders to one interpreter run each. PR 6 puts every engine
+//! capability behind the [`service`] module's typed `Service` facade
+//! (requests/responses with a versioned `pipefwd-api-v1` wire schema)
+//! and adds the [`net`] module's `pipefwd serve` daemon — a bounded-
+//! queue TCP/HTTP front end whose concurrent clients dedup through the
+//! same claim/fulfil memo table a single process uses.
 
 pub mod engine;
 pub mod experiments;
 pub mod gc;
+pub mod net;
+pub mod service;
 pub mod store;
 pub mod tune;
 
@@ -33,8 +40,9 @@ pub use engine::{
     bench_doc, content_key, dedup_cells, grid, grid_for, merge_bench_json, normalize_depths,
     resolve_workload, shard_cells, trace_key, trace_signature, Cell, Engine, ExperimentId,
 };
-pub use gc::{reachable_keys, Reachable};
-pub use store::{GcReport, Store, StoreStats};
+pub use gc::{reachable_keys, run_gc, Reachable};
+pub use service::{Mode, Service, ServiceRequest, ServiceResponse, API_SCHEMA};
+pub use store::{ExportRecord, GcReport, Store, StoreStats, Tier};
 pub use experiments::{
     best_ff, depth_sweep, figure4, headline, hotspot_m2c2_bw, intext, measure, micro_family,
     pc_sweep, table1, table2, table2_rows, table3, vector_study, Measurement,

@@ -1,0 +1,465 @@
+//! `pipefwd serve`: the measurement daemon (PR-6 tentpole, transport
+//! layer).
+//!
+//! A deliberately small std-only HTTP/1.1 server over
+//! [`std::net::TcpListener`]: one accept thread feeding a *bounded*
+//! connection queue, a fixed pool of worker threads draining it, and
+//! one shared [`Service`] handling every request. Backpressure is the
+//! queue bound — when it is full the accept thread answers `503` with a
+//! structured error line instead of buffering unboundedly, and the
+//! observed depth is reported through the v2 counters document
+//! (`queue_depth_max`).
+//!
+//! Cross-client dedup needs no code here: all workers share one
+//! `Service`, so concurrent requests for the same cell meet in the
+//! engine's claim/fulfil memo table — the first claims and computes,
+//! the rest block on the claim and are fulfilled from it. A client that
+//! disconnects mid-computation releases nothing: its worker computes to
+//! completion and fulfils the claim (the write of the response simply
+//! fails), so a second client asking for the same cell still gets the
+//! memoized result.
+//!
+//! Wire format: `POST /api/v1` with one `pipefwd-api-v1` request
+//! document; the response body is newline-delimited compact JSON ending
+//! in a `done` terminator (see [`super::service`]). `GET /stats`
+//! returns the live counters + store footprint as one pretty document.
+
+use super::service::{self, Service, ServiceRequest};
+use crate::util::json::{self, Json};
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Request-body cap: a `store_push` of a large store fits comfortably;
+/// anything bigger is rejected with `413` before allocation.
+pub const MAX_BODY_BYTES: usize = 32 * 1024 * 1024;
+/// Request-head cap (request line + headers).
+pub const MAX_HEAD_BYTES: u64 = 16 * 1024;
+/// Server-side socket timeout: bounds how long a worker can be held by
+/// a stalled peer (reading the request or writing the response). The
+/// *compute* between the two is unbounded by design — paper-scale
+/// grids take as long as they take.
+pub const IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+#[derive(Debug, Clone, Copy)]
+pub struct ServerConfig {
+    /// Connection-handling worker threads.
+    pub workers: usize,
+    /// Bounded queue capacity: accepted-but-unhandled connections.
+    pub queue_cap: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig { workers: 4, queue_cap: 64 }
+    }
+}
+
+/// The bounded hand-off between the accept thread and the workers.
+struct Queue {
+    inner: Mutex<QueueState>,
+    ready: Condvar,
+}
+
+struct QueueState {
+    items: VecDeque<TcpStream>,
+    open: bool,
+}
+
+impl Queue {
+    fn new() -> Queue {
+        Queue { inner: Mutex::new(QueueState { items: VecDeque::new(), open: true }), ready: Condvar::new() }
+    }
+
+    /// Enqueue, or hand the stream back when full/closed (the caller
+    /// turns that into a `503`). Returns the depth after the push — the
+    /// number the backpressure counter tracks.
+    fn push(&self, stream: TcpStream, cap: usize) -> Result<usize, TcpStream> {
+        let mut st = self.inner.lock().unwrap();
+        if !st.open || st.items.len() >= cap {
+            return Err(stream);
+        }
+        st.items.push_back(stream);
+        let depth = st.items.len();
+        self.ready.notify_one();
+        Ok(depth)
+    }
+
+    /// Blocking pop; `None` once closed *and* drained, so in-flight
+    /// work finishes before workers exit.
+    fn pop(&self) -> Option<TcpStream> {
+        let mut st = self.inner.lock().unwrap();
+        loop {
+            if let Some(s) = st.items.pop_front() {
+                return Some(s);
+            }
+            if !st.open {
+                return None;
+            }
+            st = self.ready.wait(st).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        self.inner.lock().unwrap().open = false;
+        self.ready.notify_all();
+    }
+}
+
+/// A running daemon. [`Server::join`] blocks forever (the CLI `serve`
+/// arm); [`Server::shutdown`] (or drop) stops the accept loop, drains
+/// in-flight work, and joins every thread — what the in-process tests
+/// and benches use.
+pub struct Server {
+    addr: SocketAddr,
+    queue: Arc<Queue>,
+    stop: Arc<AtomicBool>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (`HOST:PORT`; port 0 picks a free one) and start the
+    /// accept thread + worker pool over one shared service.
+    pub fn spawn(service: Arc<Service>, addr: &str, cfg: ServerConfig) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let queue = Arc::new(Queue::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut handles = vec![];
+        for _ in 0..cfg.workers.max(1) {
+            let q = Arc::clone(&queue);
+            let svc = Arc::clone(&service);
+            handles.push(std::thread::spawn(move || worker_loop(&q, &svc)));
+        }
+        {
+            let q = Arc::clone(&queue);
+            let svc = Arc::clone(&service);
+            let stop = Arc::clone(&stop);
+            let cap = cfg.queue_cap.max(1);
+            handles.push(std::thread::spawn(move || accept_loop(&listener, &q, &svc, &stop, cap)));
+        }
+        Ok(Server { addr, queue, stop, handles })
+    }
+
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Serve until the process dies (the CLI foreground mode).
+    pub fn join(mut self) {
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting, finish in-flight requests, join every thread.
+    pub fn shutdown(self) {
+        drop(self);
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.queue.close();
+        // unblock the accept loop so it observes the stop flag
+        let _ = TcpStream::connect(self.addr);
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    queue: &Queue,
+    service: &Service,
+    stop: &AtomicBool,
+    cap: usize,
+) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = conn else { continue };
+        match queue.push(stream, cap) {
+            Ok(depth) => service.note_queue_depth(depth),
+            Err(mut stream) => {
+                // backpressure: answer, don't buffer
+                let line =
+                    service::request_error_line("busy: request queue is full — retry later");
+                let _ = write_http(&mut stream, 503, "Service Unavailable", &[line]);
+            }
+        }
+    }
+    queue.close();
+}
+
+fn worker_loop(queue: &Queue, service: &Service) {
+    while let Some(stream) = queue.pop() {
+        service.note_client_served();
+        // one malformed or panicking request must never take the worker
+        // (and with it the daemon's capacity) down
+        let _ = catch_unwind(AssertUnwindSafe(|| handle_connection(stream, service)));
+    }
+}
+
+fn handle_connection(stream: TcpStream, service: &Service) {
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut out = stream;
+    let mut reader = BufReader::new(read_half).take(MAX_HEAD_BYTES);
+
+    let mut request_line = String::new();
+    if reader.read_line(&mut request_line).unwrap_or(0) == 0 {
+        return; // closed (or stalled) before a request arrived
+    }
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+
+    let mut content_length: Option<usize> = None;
+    loop {
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            // EOF before the blank separator: truncated or oversized head
+            Ok(0) => {
+                respond_error(&mut out, 400, "Bad Request", "request: truncated head");
+                return;
+            }
+            Ok(_) => {}
+            Err(_) => return,
+        }
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse::<usize>().ok();
+            }
+        }
+    }
+
+    match (method.as_str(), path.as_str()) {
+        ("GET", "/stats") => {
+            let _ = write_http_raw(&mut out, 200, "OK", &service.stats_doc().to_pretty());
+        }
+        ("POST", "/api/v1") => {
+            let Some(len) = content_length else {
+                respond_error(&mut out, 411, "Length Required", "request: missing Content-Length");
+                return;
+            };
+            if len > MAX_BODY_BYTES {
+                respond_error(
+                    &mut out,
+                    413,
+                    "Payload Too Large",
+                    &format!("request: body of {len} bytes exceeds the {MAX_BODY_BYTES}-byte cap"),
+                );
+                return;
+            }
+            let mut body = vec![0u8; len];
+            if reader.into_inner().read_exact(&mut body).is_err() {
+                respond_error(&mut out, 400, "Bad Request", "request: truncated body");
+                return;
+            }
+            let Ok(text) = String::from_utf8(body) else {
+                respond_error(&mut out, 400, "Bad Request", "request: body is not UTF-8");
+                return;
+            };
+            let doc = match json::parse(&text) {
+                Ok(d) => d,
+                Err(e) => {
+                    respond_error(&mut out, 400, "Bad Request", &format!("request: {e}"));
+                    return;
+                }
+            };
+            let req = match service::decode_request(&doc) {
+                Ok(r) => r,
+                Err(e) => {
+                    respond_error(&mut out, 400, "Bad Request", &e);
+                    return;
+                }
+            };
+            // application-level failures are a 200 with a structured
+            // error line: the request was understood, the operation
+            // failed — clients surface `MeasureError::render`
+            let lines = match service.handle(&req) {
+                Ok(resp) => service::response_lines(&resp),
+                Err(e) => vec![service::error_line(&e)],
+            };
+            let _ = write_http(&mut out, 200, "OK", &lines);
+        }
+        (_, p) if method == "GET" || method == "POST" => {
+            respond_error(&mut out, 404, "Not Found", &format!("request: unknown path `{p}`"));
+        }
+        _ => {
+            respond_error(
+                &mut out,
+                405,
+                "Method Not Allowed",
+                &format!("request: unsupported method `{method}`"),
+            );
+        }
+    }
+}
+
+fn respond_error(out: &mut TcpStream, status: u16, reason: &str, msg: &str) {
+    let _ = write_http(out, status, reason, &[service::request_error_line(msg)]);
+}
+
+fn write_http(
+    out: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    lines: &[String],
+) -> std::io::Result<()> {
+    let mut body = lines.join("\n");
+    body.push('\n');
+    write_http_raw(out, status, reason, &body)
+}
+
+fn write_http_raw(
+    out: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    out.write_all(head.as_bytes())?;
+    out.write_all(body.as_bytes())?;
+    out.flush()
+}
+
+// ---------------------------------------------------------------------------
+// Client side (`pipefwd client`, the serve tests/benches)
+// ---------------------------------------------------------------------------
+
+/// Send one request, return the response items (the `done` terminator
+/// verified and stripped). Server-side failures surface as `Err` with
+/// the error's store-form rendering.
+pub fn request(addr: &str, req: &ServiceRequest) -> Result<Vec<Json>, String> {
+    let body = service::encode_request(req).to_compact();
+    let (status, text) = http(addr, "POST", "/api/v1", Some(&body))?;
+    let lines = parse_ndjson(&text)?;
+    match service::decode_response_lines(&lines) {
+        Ok(items) if status == 200 => Ok(items),
+        Ok(_) => Err(format!("server returned HTTP {status}")),
+        Err(e) => Err(e),
+    }
+}
+
+/// `GET /stats` as one parsed document.
+pub fn get_stats(addr: &str) -> Result<Json, String> {
+    let (status, text) = http(addr, "GET", "/stats", None)?;
+    if status != 200 {
+        let lines = parse_ndjson(&text).unwrap_or_default();
+        return Err(service::decode_response_lines(&lines)
+            .err()
+            .unwrap_or_else(|| format!("server returned HTTP {status}")));
+    }
+    json::parse(&text)
+}
+
+/// Minimal HTTP/1.1 exchange: write the request, read status + headers,
+/// then the body to EOF (the server always answers `Connection: close`).
+/// No read timeout — a paper-scale grid legitimately computes for a
+/// long time before the first response byte.
+fn http(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String), String> {
+    let mut stream =
+        TcpStream::connect(addr).map_err(|e| format!("connecting to {addr}: {e}"))?;
+    let content = body.unwrap_or("");
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        content.len()
+    );
+    stream
+        .write_all(head.as_bytes())
+        .and_then(|()| stream.write_all(content.as_bytes()))
+        .map_err(|e| format!("sending request to {addr}: {e}"))?;
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader
+        .read_line(&mut status_line)
+        .map_err(|e| format!("reading response from {addr}: {e}"))?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| {
+            format!("malformed HTTP status line from {addr}: `{}`", status_line.trim_end())
+        })?;
+    loop {
+        let mut line = String::new();
+        let n = reader
+            .read_line(&mut line)
+            .map_err(|e| format!("reading response from {addr}: {e}"))?;
+        if n == 0 || line.trim_end().is_empty() {
+            break;
+        }
+    }
+    let mut text = String::new();
+    reader
+        .read_to_string(&mut text)
+        .map_err(|e| format!("reading response from {addr}: {e}"))?;
+    Ok((status, text))
+}
+
+/// Parse a newline-delimited JSON body (blank lines ignored).
+pub fn parse_ndjson(text: &str) -> Result<Vec<Json>, String> {
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| json::parse(l).map_err(|e| format!("response line `{l}`: {e}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A bound listener keeps the pushed streams alive for the queue
+    /// tests without touching the network beyond loopback binds.
+    fn dummy_stream(listener: &TcpListener) -> TcpStream {
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        drop(client);
+        server_side
+    }
+
+    #[test]
+    fn queue_bounds_and_drains_after_close() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let q = Queue::new();
+        assert_eq!(q.push(dummy_stream(&listener), 2).ok(), Some(1));
+        assert_eq!(q.push(dummy_stream(&listener), 2).ok(), Some(2));
+        // full: the stream comes back for the 503 path
+        assert!(q.push(dummy_stream(&listener), 2).is_err());
+        q.close();
+        // closed: rejects new pushes but drains what it holds
+        assert!(q.push(dummy_stream(&listener), 2).is_err());
+        assert!(q.pop().is_some());
+        assert!(q.pop().is_some());
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn ndjson_parses_lines_and_rejects_garbage() {
+        let docs = parse_ndjson("{\"a\": 1}\n\n{\"b\": 2}\n").unwrap();
+        assert_eq!(docs.len(), 2);
+        assert!(parse_ndjson("{\"a\": 1}\nnot json\n").is_err());
+    }
+}

@@ -1,0 +1,1072 @@
+//! The `Service` facade: every engine capability behind one typed
+//! request/response pair (PR-6 tentpole).
+//!
+//! The CLI arms of `main.rs` and the daemon of [`super::net`] are both
+//! thin clients of [`Service::handle`] — one code path decides what a
+//! `run`, `sweep`, `tune`, `merge`, or store operation means, so the
+//! daemon cannot drift from the CLI semantics it mirrors. The facade
+//! owns the [`Engine`] (and through it the optional persistent
+//! [`Store`]) plus the daemon-only counters (`clients_served`,
+//! `queue_depth_max`); dedup across concurrent clients is not a new
+//! mechanism but the engine's existing claim/fulfil memo table observed
+//! from many connection threads at once.
+//!
+//! The wire schema is versioned as [`API_SCHEMA`] (`pipefwd-api-v1`):
+//! requests are single JSON documents, responses are newline-delimited
+//! compact JSON ending in a `done` terminator line (so a client can
+//! distinguish a complete stream from a mid-stream disconnect). Every
+//! request field is validated by the same `*_from` parsers the CLI's
+//! declarative arg table uses — one consistent error shape everywhere.
+//! `Engine`'s public constructors (`new`/`serial`/`host_parallel`,
+//! `with_store`/`with_des`/`with_tuner`) are untouched: benches and
+//! tests that build engines directly keep working, and a `Service` is
+//! just an engine plus a mode wrapped after construction.
+
+use super::engine::{
+    bench_doc, grid_for, merge_bench_json, normalize_depths, resolve_workload, shard_cells, Cell,
+    Engine, ExperimentId,
+};
+use super::experiments::{canonical_sort, Measurement};
+use super::store::{key_hex, ExportRecord, GcReport, Store, StoreStats, Tier};
+use super::tune::{run_tune, Policy, TuneReport, TuneRequest};
+use super::{parse_scale, scale_label};
+use crate::transform::Variant;
+use crate::util::json::Json;
+use crate::workloads::{MeasureError, Scale};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Wire-protocol version: requests carry it, daemons reject mismatches.
+pub const API_SCHEMA: &str = "pipefwd-api-v1";
+/// `--counters` document schema (v2 adds the daemon counters
+/// `queue_depth_max` / `clients_served` / `requests_deduped`).
+pub const COUNTERS_SCHEMA: &str = "pipefwd-counters-v2";
+/// The pre-daemon counters schema — still accepted by `report --diff`
+/// and the CI bench gates (old artifacts remain comparable).
+pub const COUNTERS_SCHEMA_V1: &str = "pipefwd-counters-v1";
+
+/// Counter fields a counters document may carry, in canonical order.
+/// v1 documents stop at `trace_runs` + `wall_ms`; missing fields render
+/// as absent in diffs rather than failing them.
+pub const COUNTER_FIELDS: &[&str] = &[
+    "cache_hits",
+    "store_hits",
+    "simulations",
+    "trace_hits",
+    "trace_runs",
+    "queue_depth_max",
+    "clients_served",
+    "requests_deduped",
+    "wall_ms",
+];
+
+/// Who is driving the facade. Daemon-only counters read zero in CLI
+/// mode: a plain `pipefwd run` re-measuring shared baselines produces
+/// cache hits, but those are not *deduplicated client requests*.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Cli,
+    Daemon,
+}
+
+/// Everything a client can ask of the facade — the typed form both the
+/// CLI arg table and [`decode_request`] produce.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServiceRequest {
+    /// One (workload, variant, scale) measurement.
+    Measure { workload: String, variant: Variant, scale: Scale },
+    /// One or more experiment grids, optionally one disjoint shard.
+    Run { experiments: Vec<ExperimentId>, scale: Scale, shard: Option<(usize, usize)> },
+    /// Feed-forward depth sweep over arbitrary benches × depths.
+    Sweep { benches: Vec<String>, depths: Vec<usize>, scale: Scale },
+    /// Budgeted depth × replication search per workload.
+    Tune {
+        benches: Vec<String>,
+        policy: Policy,
+        budget: usize,
+        replication: bool,
+        scale: Scale,
+        reference: bool,
+    },
+    /// Union shard stores into the local store and emit the canonical
+    /// merged results sink.
+    Merge { dirs: Vec<String>, experiments: Vec<ExperimentId>, scale: Scale },
+    StoreStats,
+    StoreGc { dry_run: bool },
+    /// Export every valid store record (store exchange, pull side).
+    StorePull,
+    /// Import records exported by another store (push side).
+    StorePush { records: Vec<ExportRecord> },
+    /// Daemon liveness + counters + store footprint.
+    Stats,
+}
+
+/// What [`Service::handle`] returns. No derives: [`TuneReport`] is
+/// carried by value and deliberately implements neither `Clone` nor
+/// `PartialEq`.
+pub enum ServiceResponse {
+    /// Measured cells in request order. `grid_cells` is the full unique
+    /// grid size (so a shard response still reports the whole).
+    Cells { grid_cells: usize, cells: Vec<(Cell, Result<Measurement, MeasureError>)> },
+    Tune { report: TuneReport },
+    Merged { imported: usize, bench: String },
+    StoreStats { stats: StoreStats },
+    Gc { report: GcReport },
+    Records { records: Vec<ExportRecord> },
+    Imported { count: usize },
+    Stats { doc: Json },
+}
+
+/// The facade. Owns the engine; shared immutably across the daemon's
+/// connection workers (everything inside is `&self` + atomics, exactly
+/// like [`Engine::run_cells`]'s scoped worker threads).
+pub struct Service {
+    engine: Engine,
+    mode: Mode,
+    started: Instant,
+    clients_served: AtomicU64,
+    queue_depth_max: AtomicU64,
+}
+
+impl Service {
+    pub fn new(engine: Engine, mode: Mode) -> Service {
+        Service {
+            engine,
+            mode,
+            started: Instant::now(),
+            clients_served: AtomicU64::new(0),
+            queue_depth_max: AtomicU64::new(0),
+        }
+    }
+
+    pub fn cli(engine: Engine) -> Service {
+        Service::new(engine, Mode::Cli)
+    }
+
+    pub fn daemon(engine: Engine) -> Service {
+        Service::new(engine, Mode::Daemon)
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    pub fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    /// Record one accepted connection (called by the daemon per client).
+    pub fn note_client_served(&self) {
+        self.clients_served.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record an observed request-queue depth; the maximum is reported
+    /// through the v2 counters document (backpressure visibility).
+    pub fn note_queue_depth(&self, depth: usize) {
+        self.queue_depth_max.fetch_max(depth as u64, Ordering::Relaxed);
+    }
+
+    pub fn clients_served(&self) -> u64 {
+        self.clients_served.load(Ordering::Relaxed)
+    }
+
+    pub fn queue_depth_max(&self) -> u64 {
+        self.queue_depth_max.load(Ordering::Relaxed)
+    }
+
+    /// Requests answered from the claim/fulfil memo instead of computed
+    /// again. Only meaningful under concurrent clients, so CLI mode
+    /// pins it to zero (a serial run's cache hits are table re-reads,
+    /// not deduplicated requests).
+    pub fn requests_deduped(&self) -> u64 {
+        match self.mode {
+            Mode::Daemon => self.engine.cache_hits(),
+            Mode::Cli => 0,
+        }
+    }
+
+    /// The `--counters PATH` document (schema [`COUNTERS_SCHEMA`]): v1's
+    /// engine tiers plus the daemon counters, which read zero in CLI
+    /// mode so the v1→v2 bump changes no existing gate's meaning.
+    pub fn counters_doc(&self, command: &str, scale: &str, wall_ms: f64) -> Json {
+        let c = self.engine.counters();
+        Json::obj(vec![
+            ("schema", Json::Str(COUNTERS_SCHEMA.into())),
+            ("command", Json::Str(command.into())),
+            ("scale", Json::Str(scale.into())),
+            ("cache_hits", Json::Num(c.cache_hits as f64)),
+            ("store_hits", Json::Num(c.store_hits as f64)),
+            ("simulations", Json::Num(c.simulations as f64)),
+            ("trace_hits", Json::Num(c.trace_hits as f64)),
+            ("trace_runs", Json::Num(c.trace_runs as f64)),
+            ("queue_depth_max", Json::Num(self.queue_depth_max() as f64)),
+            ("clients_served", Json::Num(self.clients_served() as f64)),
+            ("requests_deduped", Json::Num(self.requests_deduped() as f64)),
+            ("wall_ms", Json::Num(wall_ms)),
+        ])
+    }
+
+    /// The `GET /stats` document: live counters + store footprint.
+    pub fn stats_doc(&self) -> Json {
+        let uptime_ms = self.started.elapsed().as_millis() as f64;
+        let store =
+            self.engine.store().map(|s| s.stats().to_json()).unwrap_or(Json::Null);
+        Json::obj(vec![
+            ("schema", Json::Str(API_SCHEMA.into())),
+            ("type", Json::Str("stats".into())),
+            ("counters", self.counters_doc("serve", "-", uptime_ms)),
+            ("store", store),
+        ])
+    }
+
+    fn store_or_err(&self, what: &str) -> Result<&Store, MeasureError> {
+        self.engine.store().ok_or_else(|| {
+            MeasureError::parse(&format!(
+                "{what}: no persistent store attached (started with --no-cache?)"
+            ))
+        })
+    }
+
+    /// Execute one request. This is the single semantic authority: the
+    /// CLI arms and the daemon route everything through here.
+    pub fn handle(&self, req: &ServiceRequest) -> Result<ServiceResponse, MeasureError> {
+        match req {
+            ServiceRequest::Measure { workload, variant, scale } => {
+                let w = resolve_workload(workload).ok_or_else(|| {
+                    MeasureError::parse(&format!(
+                        "unknown benchmark `{workload}` (see `pipefwd list`)"
+                    ))
+                })?;
+                let cell = Cell::new(workload, *variant, *scale);
+                let r = self.engine.measure(w.as_ref(), *variant, *scale);
+                Ok(ServiceResponse::Cells { grid_cells: 1, cells: vec![pair(cell, r)] })
+            }
+            ServiceRequest::Run { experiments, scale, shard } => {
+                let grid = grid_for(experiments, *scale);
+                let grid_cells = grid.len();
+                let cells = match shard {
+                    Some((index, count)) => {
+                        // a shard's only product is its store entries, so
+                        // store problems are fatal here where a plain run
+                        // merely warns
+                        if self.engine.store().is_none() {
+                            return Err(MeasureError::parse(
+                                "run --shard: the persistent store is unavailable (or \
+                                 --no-cache was given) — a shard's results have nowhere \
+                                 to go",
+                            ));
+                        }
+                        shard_cells(&grid, *index, *count)
+                            .map_err(|e| MeasureError::parse(&e))?
+                    }
+                    None => grid,
+                };
+                let errors_before = self.engine.store_errors();
+                let results = self.engine.run_cells(&cells);
+                if shard.is_some() && self.engine.store_errors() > errors_before {
+                    return Err(MeasureError::parse(&format!(
+                        "run --shard: {} result(s) failed to persist — the merge would \
+                         report this slice as missing",
+                        self.engine.store_errors() - errors_before
+                    )));
+                }
+                let cells =
+                    cells.into_iter().zip(results).map(|(c, r)| pair(c, r)).collect();
+                Ok(ServiceResponse::Cells { grid_cells, cells })
+            }
+            ServiceRequest::Sweep { benches, depths, scale } => {
+                for b in benches {
+                    bench_from(b).map_err(|e| MeasureError::parse(&e))?;
+                }
+                let cells: Vec<Cell> = benches
+                    .iter()
+                    .flat_map(|b| {
+                        depths
+                            .iter()
+                            .map(|d| Cell::new(b, Variant::FeedForward { depth: *d }, *scale))
+                            .collect::<Vec<_>>()
+                    })
+                    .collect();
+                let results = self.engine.run_cells(&cells);
+                let grid_cells = cells.len();
+                let cells =
+                    cells.into_iter().zip(results).map(|(c, r)| pair(c, r)).collect();
+                Ok(ServiceResponse::Cells { grid_cells, cells })
+            }
+            ServiceRequest::Tune { benches, policy, budget, replication, scale, reference } => {
+                let req = TuneRequest {
+                    benches: benches.clone(),
+                    policy: *policy,
+                    budget: *budget,
+                    replication: *replication,
+                    scale: *scale,
+                    reference: *reference,
+                };
+                let report =
+                    run_tune(&self.engine, &req).map_err(|e| MeasureError::parse(&e))?;
+                Ok(ServiceResponse::Tune { report })
+            }
+            ServiceRequest::Merge { dirs, experiments, scale } => {
+                if dirs.is_empty() {
+                    return Err(MeasureError::parse(
+                        "merge: at least one shard store directory required",
+                    ));
+                }
+                let mut shards = vec![];
+                for d in dirs {
+                    shards.push(Store::open_existing(d).map_err(|e| {
+                        MeasureError::parse(&format!("opening store {d}: {e}"))
+                    })?);
+                }
+                // union the shard stores into the local store too, so the
+                // merge host is warm for future runs (best-effort: the
+                // canonical sink below replays against the shards)
+                let mut imported = 0;
+                if let Some(local) = self.engine.store() {
+                    for s in &shards {
+                        imported += local.merge_from(s).map_err(|e| {
+                            MeasureError::parse(&format!("merging into local store: {e}"))
+                        })?;
+                    }
+                    if let Err(e) = local.write_manifest() {
+                        eprintln!("warning: writing store manifest: {e}");
+                    }
+                }
+                let bench = merge_bench_json(
+                    &shards,
+                    experiments,
+                    *scale,
+                    &self.engine.cfg,
+                    self.engine.use_des,
+                )
+                .map_err(|e| MeasureError::parse(&e))?;
+                Ok(ServiceResponse::Merged { imported, bench })
+            }
+            ServiceRequest::StoreStats => {
+                let s = self.store_or_err("store stats")?;
+                Ok(ServiceResponse::StoreStats { stats: s.stats() })
+            }
+            ServiceRequest::StoreGc { dry_run } => {
+                let s = self.store_or_err("store gc")?;
+                let report = super::gc::run_gc(s, &self.engine.cfg, *dry_run)
+                    .map_err(|e| MeasureError::parse(&format!("store gc: {e}")))?;
+                Ok(ServiceResponse::Gc { report })
+            }
+            ServiceRequest::StorePull => {
+                let s = self.store_or_err("store pull")?;
+                Ok(ServiceResponse::Records { records: s.export_records() })
+            }
+            ServiceRequest::StorePush { records } => {
+                let s = self.store_or_err("store push")?;
+                let count = s.import_records(records).map_err(|e| {
+                    MeasureError::parse(&format!("store push: {e}"))
+                })?;
+                if let Err(e) = s.write_manifest() {
+                    eprintln!("warning: writing store manifest: {e}");
+                }
+                Ok(ServiceResponse::Imported { count })
+            }
+            ServiceRequest::Stats => Ok(ServiceResponse::Stats { doc: self.stats_doc() }),
+        }
+    }
+}
+
+fn pair(
+    cell: Cell,
+    r: Result<Measurement, String>,
+) -> (Cell, Result<Measurement, MeasureError>) {
+    (cell, r.map_err(|e| MeasureError::parse(&e)))
+}
+
+// ---------------------------------------------------------------------------
+// Shared validators: the CLI's declarative arg table and the wire
+// decoder both call these, so `pipefwd sweep --depths 0` and a daemon
+// request with a zero depth produce the same message.
+// ---------------------------------------------------------------------------
+
+pub fn scale_from(s: &str) -> Result<Scale, String> {
+    parse_scale(s).ok_or_else(|| format!("unknown scale `{s}` (tiny|small|paper)"))
+}
+
+pub fn policy_from(s: &str) -> Result<Policy, String> {
+    Policy::parse(s).ok_or_else(|| format!("unknown policy `{s}` (golden|sh)"))
+}
+
+pub fn experiment_from(s: &str) -> Result<ExperimentId, String> {
+    ExperimentId::parse(s.trim())
+        .ok_or_else(|| format!("unknown experiment `{s}` (E1..E7 or all)"))
+}
+
+/// `all` or a comma-separated experiment-id list.
+pub fn experiments_from(s: &str) -> Result<Vec<ExperimentId>, String> {
+    if s.eq_ignore_ascii_case("all") {
+        return Ok(ExperimentId::all().to_vec());
+    }
+    s.split(',').map(experiment_from).collect()
+}
+
+pub fn bench_from(s: &str) -> Result<String, String> {
+    if resolve_workload(s).is_some() {
+        Ok(s.to_string())
+    } else {
+        Err(format!("unknown benchmark `{s}` (see `pipefwd list`)"))
+    }
+}
+
+pub fn benches_from(s: &str) -> Result<Vec<String>, String> {
+    s.split(',').map(|b| bench_from(b.trim())).collect()
+}
+
+pub fn depth_from(s: &str) -> Result<usize, String> {
+    s.trim()
+        .parse::<usize>()
+        .ok()
+        .filter(|n| *n > 0)
+        .ok_or_else(|| format!("bad depth `{s}` (positive integer)"))
+}
+
+/// Comma-separated depth list, sorted + deduplicated (duplicate columns
+/// would break the deterministic-output guarantees).
+pub fn depths_from(s: &str) -> Result<Vec<usize>, String> {
+    Ok(normalize_depths(s.split(',').map(depth_from).collect::<Result<Vec<_>, _>>()?))
+}
+
+/// `I/N`, 1-based.
+pub fn shard_from(s: &str) -> Result<(usize, usize), String> {
+    let bad = || format!("bad shard `{s}` (expected I/N with 1 <= I <= N)");
+    let (i, n) = s.split_once('/').ok_or_else(bad)?;
+    let i = i.trim().parse::<usize>().map_err(|_| bad())?;
+    let n = n.trim().parse::<usize>().map_err(|_| bad())?;
+    if n > 0 && (1..=n).contains(&i) {
+        Ok((i, n))
+    } else {
+        Err(bad())
+    }
+}
+
+pub fn posint_from(s: &str) -> Result<usize, String> {
+    s.parse::<usize>()
+        .ok()
+        .filter(|n| *n > 0)
+        .ok_or_else(|| format!("expected a positive integer, got `{s}`"))
+}
+
+pub fn threshold_from(s: &str) -> Result<f64, String> {
+    s.parse::<f64>()
+        .ok()
+        .filter(|t| t.is_finite() && *t >= 0.0)
+        .ok_or_else(|| format!("expected a percent >= 0, got `{s}`"))
+}
+
+pub fn addr_from(s: &str) -> Result<String, String> {
+    if s.contains(':') {
+        Ok(s.to_string())
+    } else {
+        Err(format!("bad address `{s}` (expected HOST:PORT)"))
+    }
+}
+
+/// Inverse of [`Variant::label`]. `m1c1(dN)` parses as `M1Cx` — the
+/// `MxCx {{ parts: 1 }}` spelling never occurs (a 1-part replication is
+/// spelled `ff`), so the labels stay a bijection over reachable space.
+pub fn variant_from(s: &str) -> Result<Variant, String> {
+    let err = || {
+        format!("unknown variant `{s}` (baseline | ff(dN) | m2c2(dN) | m1c2(dN) | ff_v4(dN))")
+    };
+    if s == "baseline" {
+        return Ok(Variant::Baseline);
+    }
+    let body = s.strip_suffix(')').ok_or_else(err)?;
+    let (head, depth) = body.split_once("(d").ok_or_else(err)?;
+    let depth: usize = depth.parse().ok().filter(|d| *d > 0).ok_or_else(err)?;
+    if head == "ff" {
+        return Ok(Variant::FeedForward { depth });
+    }
+    if let Some(w) = head.strip_prefix("ff_v") {
+        let width = w.parse().ok().filter(|x| *x > 0).ok_or_else(err)?;
+        return Ok(Variant::Vectorized { width, depth });
+    }
+    if let Some(c) = head.strip_prefix("m1c") {
+        let consumers = c.parse().ok().filter(|x| *x > 0).ok_or_else(err)?;
+        return Ok(Variant::M1Cx { consumers, depth });
+    }
+    if let Some(rest) = head.strip_prefix('m') {
+        if let Some((p, check)) = rest.split_once('c') {
+            let parts: usize = p.parse().ok().filter(|x| *x > 1).ok_or_else(err)?;
+            if check.parse::<usize>().ok() == Some(parts) {
+                return Ok(Variant::MxCx { parts, depth });
+            }
+        }
+    }
+    Err(err())
+}
+
+// ---------------------------------------------------------------------------
+// Wire codec (`pipefwd-api-v1`)
+// ---------------------------------------------------------------------------
+
+fn tagged(ty: &str, mut rest: Vec<(&str, Json)>) -> Json {
+    let mut fields =
+        vec![("schema", Json::Str(API_SCHEMA.into())), ("type", Json::Str(ty.into()))];
+    fields.append(&mut rest);
+    Json::obj(fields)
+}
+
+fn scale_json(s: Scale) -> Json {
+    Json::Str(scale_label(s).into())
+}
+
+fn exps_json(exps: &[ExperimentId]) -> Json {
+    Json::Arr(exps.iter().map(|e| Json::Str(e.label().into())).collect())
+}
+
+fn strs_json(ss: &[String]) -> Json {
+    Json::Arr(ss.iter().map(|s| Json::Str(s.clone())).collect())
+}
+
+pub fn record_to_json(r: &ExportRecord) -> Json {
+    Json::obj(vec![
+        ("tier", Json::Str(r.tier.label().into())),
+        ("key", Json::Str(key_hex(r.key))),
+        ("doc", r.doc.clone()),
+    ])
+}
+
+pub fn decode_record(v: &Json) -> Result<ExportRecord, String> {
+    let tier = v
+        .get("tier")
+        .and_then(|t| t.as_str())
+        .and_then(Tier::parse)
+        .ok_or_else(|| "record: bad `tier` (entries|traces|profiles)".to_string())?;
+    let key = v
+        .get("key")
+        .and_then(|k| k.as_str())
+        .and_then(|s| u64::from_str_radix(s, 16).ok())
+        .ok_or_else(|| "record: bad `key` (hex digits)".to_string())?;
+    let doc = v.get("doc").cloned().ok_or_else(|| "record: missing `doc`".to_string())?;
+    Ok(ExportRecord { tier, key, doc })
+}
+
+/// One request document. The client side of the wire.
+pub fn encode_request(req: &ServiceRequest) -> Json {
+    match req {
+        ServiceRequest::Measure { workload, variant, scale } => tagged(
+            "measure",
+            vec![
+                ("workload", Json::Str(workload.clone())),
+                ("variant", Json::Str(variant.label())),
+                ("scale", scale_json(*scale)),
+            ],
+        ),
+        ServiceRequest::Run { experiments, scale, shard } => {
+            let mut rest = vec![
+                ("experiments", exps_json(experiments)),
+                ("scale", scale_json(*scale)),
+            ];
+            if let Some((i, n)) = shard {
+                rest.push(("shard", Json::Str(format!("{i}/{n}"))));
+            }
+            tagged("run", rest)
+        }
+        ServiceRequest::Sweep { benches, depths, scale } => tagged(
+            "sweep",
+            vec![
+                ("benches", strs_json(benches)),
+                ("depths", Json::Arr(depths.iter().map(|d| Json::Num(*d as f64)).collect())),
+                ("scale", scale_json(*scale)),
+            ],
+        ),
+        ServiceRequest::Tune { benches, policy, budget, replication, scale, reference } => {
+            tagged(
+                "tune",
+                vec![
+                    ("benches", strs_json(benches)),
+                    ("policy", Json::Str(policy.label().into())),
+                    ("budget", Json::Num(*budget as f64)),
+                    ("replication", Json::Bool(*replication)),
+                    ("scale", scale_json(*scale)),
+                    ("reference", Json::Bool(*reference)),
+                ],
+            )
+        }
+        ServiceRequest::Merge { dirs, experiments, scale } => tagged(
+            "merge",
+            vec![
+                ("dirs", strs_json(dirs)),
+                ("experiments", exps_json(experiments)),
+                ("scale", scale_json(*scale)),
+            ],
+        ),
+        ServiceRequest::StoreStats => tagged("store_stats", vec![]),
+        ServiceRequest::StoreGc { dry_run } => {
+            tagged("store_gc", vec![("dry_run", Json::Bool(*dry_run))])
+        }
+        ServiceRequest::StorePull => tagged("store_pull", vec![]),
+        ServiceRequest::StorePush { records } => tagged(
+            "store_push",
+            vec![("records", Json::Arr(records.iter().map(record_to_json).collect()))],
+        ),
+        ServiceRequest::Stats => tagged("stats", vec![]),
+    }
+}
+
+/// Parse + validate one request document. The daemon side of the wire;
+/// every field goes through the same `*_from` validators as the CLI.
+pub fn decode_request(doc: &Json) -> Result<ServiceRequest, String> {
+    let schema = doc.get("schema").and_then(|s| s.as_str()).unwrap_or("(none)");
+    if schema != API_SCHEMA {
+        return Err(format!(
+            "request: unsupported schema `{schema}` (this daemon speaks {API_SCHEMA})"
+        ));
+    }
+    let ty = doc
+        .get("type")
+        .and_then(|s| s.as_str())
+        .ok_or_else(|| "request: missing `type`".to_string())?;
+    let str_field = |k: &str| -> Result<&str, String> {
+        doc.get(k)
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("{ty} request: missing `{k}`"))
+    };
+    let bool_field = |k: &str| -> Result<bool, String> {
+        doc.get(k)
+            .and_then(|v| v.as_bool())
+            .ok_or_else(|| format!("{ty} request: missing `{k}`"))
+    };
+    let str_list = |k: &str| -> Result<Vec<String>, String> {
+        doc.get(k)
+            .and_then(|v| v.as_array())
+            .map(|a| a.iter().filter_map(|s| s.as_str().map(String::from)).collect::<Vec<_>>())
+            .filter(|v: &Vec<String>| {
+                doc.get(k).and_then(|x| x.as_array()).map(|a| a.len()) == Some(v.len())
+            })
+            .ok_or_else(|| format!("{ty} request: missing `{k}` (array of strings)"))
+    };
+    match ty {
+        "measure" => Ok(ServiceRequest::Measure {
+            workload: bench_from(str_field("workload")?)?,
+            variant: variant_from(str_field("variant")?)?,
+            scale: scale_from(str_field("scale")?)?,
+        }),
+        "run" => {
+            let experiments = str_list("experiments")?
+                .iter()
+                .map(|e| experiment_from(e))
+                .collect::<Result<Vec<_>, _>>()?;
+            let shard = match doc.get("shard") {
+                None => None,
+                Some(v) => Some(shard_from(
+                    v.as_str().ok_or_else(|| "run request: bad `shard`".to_string())?,
+                )?),
+            };
+            Ok(ServiceRequest::Run { experiments, scale: scale_from(str_field("scale")?)?, shard })
+        }
+        "sweep" => {
+            let benches = str_list("benches")?
+                .iter()
+                .map(|b| bench_from(b))
+                .collect::<Result<Vec<_>, _>>()?;
+            let depths = doc
+                .get("depths")
+                .and_then(|v| v.as_array())
+                .ok_or_else(|| "sweep request: missing `depths` (array of integers)".to_string())?
+                .iter()
+                .map(|d| {
+                    d.as_usize()
+                        .filter(|n| *n > 0)
+                        .ok_or_else(|| "sweep request: bad depth (positive integer)".to_string())
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok(ServiceRequest::Sweep {
+                benches,
+                depths: normalize_depths(depths),
+                scale: scale_from(str_field("scale")?)?,
+            })
+        }
+        "tune" => {
+            let benches = str_list("benches")?
+                .iter()
+                .map(|b| bench_from(b))
+                .collect::<Result<Vec<_>, _>>()?;
+            let budget = doc
+                .get("budget")
+                .and_then(|v| v.as_usize())
+                .filter(|n| *n > 0)
+                .ok_or_else(|| "tune request: bad `budget` (positive integer)".to_string())?;
+            Ok(ServiceRequest::Tune {
+                benches,
+                policy: policy_from(str_field("policy")?)?,
+                budget,
+                replication: bool_field("replication")?,
+                scale: scale_from(str_field("scale")?)?,
+                reference: bool_field("reference")?,
+            })
+        }
+        "merge" => Ok(ServiceRequest::Merge {
+            dirs: str_list("dirs")?,
+            experiments: str_list("experiments")?
+                .iter()
+                .map(|e| experiment_from(e))
+                .collect::<Result<Vec<_>, _>>()?,
+            scale: scale_from(str_field("scale")?)?,
+        }),
+        "store_stats" => Ok(ServiceRequest::StoreStats),
+        "store_gc" => Ok(ServiceRequest::StoreGc { dry_run: bool_field("dry_run")? }),
+        "store_pull" => Ok(ServiceRequest::StorePull),
+        "store_push" => {
+            let records = doc
+                .get("records")
+                .and_then(|v| v.as_array())
+                .ok_or_else(|| "store_push request: missing `records` (array)".to_string())?
+                .iter()
+                .map(decode_record)
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok(ServiceRequest::StorePush { records })
+        }
+        "stats" => Ok(ServiceRequest::Stats),
+        other => Err(format!("request: unknown type `{other}`")),
+    }
+}
+
+/// Render a response as newline-delimited compact JSON: zero or more
+/// item lines, then a `done` terminator carrying the item count so
+/// clients detect mid-stream disconnects.
+pub fn response_lines(resp: &ServiceResponse) -> Vec<String> {
+    let line = |ty: &str, rest: Vec<(&str, Json)>| tagged(ty, rest).to_compact();
+    let mut out = vec![];
+    match resp {
+        ServiceResponse::Cells { grid_cells, cells } => {
+            out.push(line(
+                "cells",
+                vec![
+                    ("grid_cells", Json::Num(*grid_cells as f64)),
+                    ("count", Json::Num(cells.len() as f64)),
+                ],
+            ));
+            for (cell, r) in cells {
+                let mut rest = vec![
+                    ("workload", Json::Str(cell.workload.clone())),
+                    ("variant", Json::Str(cell.variant.label())),
+                    ("scale", scale_json(cell.scale)),
+                ];
+                match r {
+                    Ok(m) => {
+                        rest.push(("status", Json::Str("ok".into())));
+                        rest.push(("measurement", m.to_json()));
+                    }
+                    Err(e) => {
+                        rest.push(("status", Json::Str("err".into())));
+                        rest.push(("error", e.to_json()));
+                    }
+                }
+                out.push(line("cell", rest));
+            }
+        }
+        ServiceResponse::Tune { report } => {
+            out.push(line("tune", vec![("report", report.to_json())]));
+        }
+        ServiceResponse::Merged { imported, bench } => out.push(line(
+            "merged",
+            vec![
+                ("imported", Json::Num(*imported as f64)),
+                ("bench", Json::Str(bench.clone())),
+            ],
+        )),
+        ServiceResponse::StoreStats { stats } => {
+            out.push(line("store_stats", vec![("stats", stats.to_json())]));
+        }
+        ServiceResponse::Gc { report } => {
+            out.push(line("gc", vec![("report", report.to_json())]));
+        }
+        ServiceResponse::Records { records } => {
+            for r in records {
+                out.push(line(
+                    "record",
+                    vec![
+                        ("tier", Json::Str(r.tier.label().into())),
+                        ("key", Json::Str(key_hex(r.key))),
+                        ("doc", r.doc.clone()),
+                    ],
+                ));
+            }
+        }
+        ServiceResponse::Imported { count } => {
+            out.push(line("imported", vec![("count", Json::Num(*count as f64))]));
+        }
+        ServiceResponse::Stats { doc } => out.push(doc.to_compact()),
+    }
+    let items = out.len();
+    out.push(line("done", vec![("items", Json::Num(items as f64))]));
+    out
+}
+
+/// A single-line error stream (no `done` — errors terminate).
+pub fn error_line(e: &MeasureError) -> String {
+    tagged("error", vec![("error", e.to_json())]).to_compact()
+}
+
+/// Errors raised before a request reaches [`Service::handle`]
+/// (malformed JSON, schema mismatch, validation failures).
+pub fn request_error_line(msg: &str) -> String {
+    error_line(&MeasureError::parse(msg))
+}
+
+/// Client-side stream check: surfaces the server's error line, verifies
+/// the `done` terminator + item count, and strips the terminator.
+pub fn decode_response_lines(lines: &[Json]) -> Result<Vec<Json>, String> {
+    if let Some(err) = lines
+        .iter()
+        .find(|l| l.get("type").and_then(|t| t.as_str()) == Some("error"))
+    {
+        let e = err
+            .get("error")
+            .and_then(MeasureError::from_json)
+            .unwrap_or_else(|| MeasureError::parse("malformed error line"));
+        return Err(e.render());
+    }
+    let Some(last) = lines.last() else {
+        return Err("empty response (connection closed early?)".to_string());
+    };
+    if last.get("type").and_then(|t| t.as_str()) != Some("done") {
+        return Err(
+            "truncated response (no `done` terminator — connection dropped mid-stream?)"
+                .to_string(),
+        );
+    }
+    let items = last.get("items").and_then(|v| v.as_usize());
+    if items != Some(lines.len() - 1) {
+        return Err(format!(
+            "truncated response (`done` claims {items:?} items, received {})",
+            lines.len() - 1
+        ));
+    }
+    Ok(lines[..lines.len() - 1].to_vec())
+}
+
+/// Reassemble a client-side results sink from `cell` stream lines —
+/// byte-identical to the server engine's own `bench_json` because both
+/// canonically sort + dedup before [`bench_doc`].
+pub fn cells_to_bench(
+    items: &[Json],
+    scale: Scale,
+    exps: &[ExperimentId],
+) -> Result<String, String> {
+    let mut ms: Vec<Measurement> = vec![];
+    for it in items {
+        if it.get("type").and_then(|t| t.as_str()) != Some("cell") {
+            continue;
+        }
+        if it.get("status").and_then(|s| s.as_str()) != Some("ok") {
+            continue;
+        }
+        let m = it
+            .get("measurement")
+            .and_then(Measurement::from_json)
+            .ok_or_else(|| "cell line: malformed `measurement`".to_string())?;
+        ms.push(m);
+    }
+    canonical_sort(&mut ms);
+    ms.dedup();
+    Ok(bench_doc(scale, exps, &ms))
+}
+
+/// The counter fields present in a counters document, in canonical
+/// order — `None` if the document is not a counters doc (v1 or v2).
+/// `report --diff` uses this to compare mixed-version artifacts.
+pub fn counters_fields(doc: &Json) -> Option<Vec<(&'static str, f64)>> {
+    let schema = doc.get("schema")?.as_str()?;
+    if schema != COUNTERS_SCHEMA && schema != COUNTERS_SCHEMA_V1 {
+        return None;
+    }
+    let mut out = vec![];
+    for k in COUNTER_FIELDS {
+        if let Some(v) = doc.get(k).and_then(|v| v.as_f64()) {
+            out.push((*k, v));
+        }
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::device::DeviceConfig;
+
+    #[test]
+    fn variant_labels_roundtrip() {
+        for v in [
+            Variant::Baseline,
+            Variant::FeedForward { depth: 1 },
+            Variant::FeedForward { depth: 1000 },
+            Variant::MxCx { parts: 2, depth: 16 },
+            Variant::MxCx { parts: 4, depth: 1 },
+            Variant::M1Cx { consumers: 2, depth: 4 },
+            Variant::M1Cx { consumers: 1, depth: 4 },
+            Variant::Vectorized { width: 4, depth: 100 },
+        ] {
+            assert_eq!(variant_from(&v.label()), Ok(v), "label {}", v.label());
+        }
+        for bad in ["", "ff", "ff(d0)", "ff(dx)", "m2c3(d1)", "m0c0(d1)", "base"] {
+            assert!(variant_from(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn request_codec_roundtrips_every_variant() {
+        let reqs = vec![
+            ServiceRequest::Measure {
+                workload: "fw".into(),
+                variant: Variant::FeedForward { depth: 100 },
+                scale: Scale::Tiny,
+            },
+            ServiceRequest::Run {
+                experiments: vec![ExperimentId::E2, ExperimentId::E4],
+                scale: Scale::Small,
+                shard: Some((2, 3)),
+            },
+            ServiceRequest::Run {
+                experiments: vec![ExperimentId::E1],
+                scale: Scale::Tiny,
+                shard: None,
+            },
+            ServiceRequest::Sweep {
+                benches: vec!["fw".into(), "hotspot".into()],
+                depths: vec![1, 100],
+                scale: Scale::Tiny,
+            },
+            ServiceRequest::Tune {
+                benches: vec!["fw".into()],
+                policy: Policy::Sh,
+                budget: 12,
+                replication: true,
+                scale: Scale::Tiny,
+                reference: false,
+            },
+            ServiceRequest::Merge {
+                dirs: vec!["/tmp/a".into(), "/tmp/b".into()],
+                experiments: vec![ExperimentId::E2],
+                scale: Scale::Tiny,
+            },
+            ServiceRequest::StoreStats,
+            ServiceRequest::StoreGc { dry_run: true },
+            ServiceRequest::StorePull,
+            ServiceRequest::StorePush {
+                records: vec![ExportRecord {
+                    tier: Tier::Entries,
+                    key: 0xdead_beef,
+                    doc: Json::obj(vec![("x", Json::Num(1.0))]),
+                }],
+            },
+            ServiceRequest::Stats,
+        ];
+        for req in reqs {
+            // through the textual wire form, exactly as the daemon sees it
+            let text = encode_request(&req).to_compact();
+            let doc = crate::util::json::parse(&text).unwrap();
+            assert_eq!(decode_request(&doc), Ok(req.clone()), "{text}");
+        }
+    }
+
+    #[test]
+    fn decode_request_rejects_bad_schema_and_fields() {
+        let doc = crate::util::json::parse(
+            r#"{"schema": "pipefwd-api-v0", "type": "stats"}"#,
+        )
+        .unwrap();
+        let e = decode_request(&doc).unwrap_err();
+        assert!(e.contains("unsupported schema `pipefwd-api-v0`"), "{e}");
+
+        let doc = crate::util::json::parse(
+            r#"{"schema": "pipefwd-api-v1", "type": "sweep", "benches": ["nope"],
+                "depths": [1], "scale": "tiny"}"#,
+        )
+        .unwrap();
+        let e = decode_request(&doc).unwrap_err();
+        assert!(e.contains("unknown benchmark `nope`"), "{e}");
+
+        let doc = crate::util::json::parse(
+            r#"{"schema": "pipefwd-api-v1", "type": "run", "experiments": ["E9"],
+                "scale": "tiny"}"#,
+        )
+        .unwrap();
+        assert!(decode_request(&doc).is_err());
+    }
+
+    #[test]
+    fn counters_doc_is_v2_with_zero_daemon_counters_in_cli_mode() {
+        let svc = Service::cli(Engine::new(DeviceConfig::pac_a10(), 1));
+        let doc = svc.counters_doc("run", "tiny", 12.0);
+        assert_eq!(doc.get("schema").unwrap().as_str(), Some(COUNTERS_SCHEMA));
+        for k in ["queue_depth_max", "clients_served", "requests_deduped"] {
+            assert_eq!(doc.get(k).unwrap().as_f64(), Some(0.0), "{k}");
+        }
+        let fields = counters_fields(&doc).unwrap();
+        assert_eq!(fields.len(), COUNTER_FIELDS.len());
+
+        // a v1 document yields only its own fields, in the same order
+        let v1 = Json::obj(vec![
+            ("schema", Json::Str(COUNTERS_SCHEMA_V1.into())),
+            ("command", Json::Str("run".into())),
+            ("scale", Json::Str("tiny".into())),
+            ("cache_hits", Json::Num(3.0)),
+            ("store_hits", Json::Num(0.0)),
+            ("simulations", Json::Num(5.0)),
+            ("trace_hits", Json::Num(2.0)),
+            ("trace_runs", Json::Num(1.0)),
+            ("wall_ms", Json::Num(10.0)),
+        ]);
+        let fields = counters_fields(&v1).unwrap();
+        assert_eq!(fields.len(), 6);
+        assert_eq!(fields[0], ("cache_hits", 3.0));
+        assert_eq!(fields[5], ("wall_ms", 10.0));
+        assert!(counters_fields(&Json::obj(vec![("schema", Json::Str("x".into()))])).is_none());
+    }
+
+    #[test]
+    fn response_stream_roundtrips_and_detects_truncation() {
+        let svc = Service::cli(Engine::new(DeviceConfig::pac_a10(), 1));
+        let resp = svc
+            .handle(&ServiceRequest::Measure {
+                workload: "fw".into(),
+                variant: Variant::FeedForward { depth: 1 },
+                scale: Scale::Tiny,
+            })
+            .unwrap();
+        let lines = response_lines(&resp);
+        assert_eq!(lines.len(), 3); // head + 1 cell + done
+        let docs: Vec<Json> =
+            lines.iter().map(|l| crate::util::json::parse(l).unwrap()).collect();
+        let items = decode_response_lines(&docs).unwrap();
+        assert_eq!(items.len(), 2);
+        assert_eq!(items[1].get("status").unwrap().as_str(), Some("ok"));
+
+        // the daemon-side engine actually measured it
+        assert_eq!(svc.engine().simulations(), 1);
+        assert_eq!(svc.requests_deduped(), 0); // CLI mode pins to zero
+
+        // reassembled sink == the engine's own sink
+        let bench = cells_to_bench(&items, Scale::Tiny, &[]).unwrap();
+        assert_eq!(bench, svc.engine().bench_json(Scale::Tiny, &[]));
+
+        // dropping the terminator reads as truncation, not success
+        assert!(decode_response_lines(&docs[..2]).is_err());
+        // an error line surfaces as the rendered store-form string
+        let err_docs = vec![crate::util::json::parse(&request_error_line(
+            "validation: boom",
+        ))
+        .unwrap()];
+        assert_eq!(decode_response_lines(&err_docs), Err("validation: boom".to_string()));
+    }
+
+    #[test]
+    fn records_roundtrip_through_the_wire_form() {
+        let rec = ExportRecord {
+            tier: Tier::Profiles,
+            key: 0x0123_4567_89ab_cdef,
+            doc: Json::obj(vec![("a", Json::Str("b".into()))]),
+        };
+        let doc = record_to_json(&rec);
+        assert_eq!(decode_record(&doc), Ok(rec));
+        assert!(decode_record(&Json::obj(vec![("tier", Json::Str("nope".into()))])).is_err());
+    }
+}

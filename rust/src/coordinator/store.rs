@@ -400,14 +400,9 @@ impl Store {
         // every ref resolves in the (just-unioned) local pool — all pool
         // reads go through `local_pool`, so shared profiles parse once
         // across the whole merge, not once per referencing trace
-        let mut trace_ok = |store: &Store, doc: &Json, key: u64| -> bool {
-            trace_doc_refs(doc, key).is_some_and(|refs| {
-                refs.iter().all(|f| store.pool_get(*f, &mut local_pool).is_some())
-            })
-        };
         for key in other.trace_keys() {
             if let Ok(local) = json::read_file(&self.trace_path(key)) {
-                if trace_ok(self, &local, key) {
+                if self.trace_resolves(&local, key, &mut local_pool) {
                     continue; // present and valid locally: keep ours
                 }
             }
@@ -415,7 +410,7 @@ impl Store {
             // a ref whose profile was corrupt at the source was not
             // imported above, so its trace is skipped exactly as if it
             // failed to resolve there
-            if !trace_ok(self, &doc, key) {
+            if !self.trace_resolves(&doc, key, &mut local_pool) {
                 continue;
             }
             json::write_file_atomic_compact(&self.trace_path(key), &doc)?;
@@ -524,6 +519,101 @@ impl Store {
         Ok(report)
     }
 
+    /// Is this trace document structurally sound with every pool ref
+    /// resolving locally? Shared by [`Store::merge_from`] and
+    /// [`Store::import_records`]; `memo` collapses repeated profile
+    /// parses across many traces.
+    fn trace_resolves(
+        &self,
+        doc: &Json,
+        key: u64,
+        memo: &mut HashMap<u64, KernelProfile>,
+    ) -> bool {
+        trace_doc_refs(doc, key)
+            .is_some_and(|refs| refs.iter().all(|f| self.pool_get(*f, memo).is_some()))
+    }
+
+    /// Every valid record as a raw wire document, in import-safe order —
+    /// profiles, then traces, then entries, mirroring [`Store::merge_from`]'s
+    /// union order so a receiver applying them in sequence never holds a
+    /// trace whose pool files have not landed. Corrupt records are skipped
+    /// (they would not import anywhere either). This is what the daemon
+    /// streams for a `store_pull` exchange.
+    pub fn export_records(&self) -> Vec<ExportRecord> {
+        let mut out = vec![];
+        for fnv in self.profile_keys() {
+            let Ok(doc) = json::read_file(&self.profile_path(fnv)) else { continue };
+            let Some(prof) = KernelProfile::from_json(&doc) else { continue };
+            if fnv1a64(prof.canonical_compact().as_bytes()) != fnv {
+                continue;
+            }
+            out.push(ExportRecord { tier: Tier::Profiles, key: fnv, doc });
+        }
+        for key in self.trace_keys() {
+            let Ok(doc) = json::read_file(&self.trace_path(key)) else { continue };
+            if trace_doc_refs(&doc, key).is_none() {
+                continue;
+            }
+            out.push(ExportRecord { tier: Tier::Traces, key, doc });
+        }
+        for key in self.keys() {
+            let Ok(doc) = json::read_file(&self.entry_path(key)) else { continue };
+            if decode_entry(&doc, key).is_none() {
+                continue;
+            }
+            out.push(ExportRecord { tier: Tier::Entries, key, doc });
+        }
+        out
+    }
+
+    /// [`Store::merge_from`] over a wire-record list instead of a sibling
+    /// directory — the receiving half of a store exchange (`store_push`
+    /// on the daemon, `client store-pull` locally). Same validation and
+    /// precedence: pooled profiles are re-hashed and written canonically,
+    /// traces must resolve every ref against the (just-unioned) local
+    /// pool, and existing valid local records win. Returns how many
+    /// records were written.
+    pub fn import_records(&self, records: &[ExportRecord]) -> io::Result<usize> {
+        let mut imported = 0;
+        let mut local_pool: HashMap<u64, KernelProfile> = HashMap::new();
+        for r in records.iter().filter(|r| r.tier == Tier::Profiles) {
+            if self.pool_get(r.key, &mut local_pool).is_some() {
+                continue;
+            }
+            let Some(prof) = KernelProfile::from_json(&r.doc) else { continue };
+            let canonical = prof.canonical_compact();
+            if fnv1a64(canonical.as_bytes()) != r.key {
+                continue; // corrupt in transit or at the source: skip
+            }
+            json::write_text_atomic(&self.profile_path(r.key), &canonical)?;
+            local_pool.insert(r.key, prof);
+            imported += 1;
+        }
+        for r in records.iter().filter(|r| r.tier == Tier::Traces) {
+            if let Ok(local) = json::read_file(&self.trace_path(r.key)) {
+                if self.trace_resolves(&local, r.key, &mut local_pool) {
+                    continue;
+                }
+            }
+            if !self.trace_resolves(&r.doc, r.key, &mut local_pool) {
+                continue;
+            }
+            json::write_file_atomic_compact(&self.trace_path(r.key), &r.doc)?;
+            imported += 1;
+        }
+        for r in records.iter().filter(|r| r.tier == Tier::Entries) {
+            if self.get(r.key).is_some() {
+                continue;
+            }
+            if decode_entry(&r.doc, r.key).is_none() {
+                continue;
+            }
+            json::write_file_atomic(&self.entry_path(r.key), &r.doc)?;
+            imported += 1;
+        }
+        Ok(imported)
+    }
+
     /// Per-tier counts and on-disk bytes, plus the profile pool's dedup
     /// leverage: `profile_refs` counts every ref every valid trace
     /// document holds (what an inline-profile store would have written),
@@ -572,6 +662,72 @@ impl GcReport {
     pub fn removed_total(&self) -> usize {
         self.removed_entries + self.removed_traces + self.removed_profiles
     }
+
+    /// The `pipefwd-api-v1` `store_gc` reply body.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dry_run", Json::Bool(self.dry_run)),
+            ("kept_entries", Json::Num(self.kept_entries as f64)),
+            ("removed_entries", Json::Num(self.removed_entries as f64)),
+            ("kept_traces", Json::Num(self.kept_traces as f64)),
+            ("removed_traces", Json::Num(self.removed_traces as f64)),
+            ("kept_profiles", Json::Num(self.kept_profiles as f64)),
+            ("removed_profiles", Json::Num(self.removed_profiles as f64)),
+            ("removed_total", Json::Num(self.removed_total() as f64)),
+        ])
+    }
+
+    /// Inverse of [`GcReport::to_json`] (the client renders the daemon's
+    /// reply with the same table code the local CLI path uses).
+    pub fn from_json(v: &Json) -> Option<GcReport> {
+        Some(GcReport {
+            dry_run: v.get("dry_run")?.as_bool()?,
+            kept_entries: v.get("kept_entries")?.as_usize()?,
+            removed_entries: v.get("removed_entries")?.as_usize()?,
+            kept_traces: v.get("kept_traces")?.as_usize()?,
+            removed_traces: v.get("removed_traces")?.as_usize()?,
+            kept_profiles: v.get("kept_profiles")?.as_usize()?,
+            removed_profiles: v.get("removed_profiles")?.as_usize()?,
+        })
+    }
+}
+
+/// Which store tier a wire-exchange record belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    Entries,
+    Traces,
+    Profiles,
+}
+
+impl Tier {
+    pub fn label(self) -> &'static str {
+        match self {
+            Tier::Entries => "entries",
+            Tier::Traces => "traces",
+            Tier::Profiles => "profiles",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Tier> {
+        match s {
+            "entries" => Some(Tier::Entries),
+            "traces" => Some(Tier::Traces),
+            "profiles" => Some(Tier::Profiles),
+            _ => None,
+        }
+    }
+}
+
+/// One store record in wire form: the raw on-disk document plus its tier
+/// and key. Produced by [`Store::export_records`], consumed by
+/// [`Store::import_records`]; `coordinator::service` maps these to and
+/// from `pipefwd-api-v1` record lines.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExportRecord {
+    pub tier: Tier,
+    pub key: u64,
+    pub doc: Json,
 }
 
 /// One tier's footprint as [`Store::stats`] reports it.
@@ -1076,6 +1232,83 @@ mod tests {
         assert_eq!(a.get(2), Some(Ok(m)));
         let _ = std::fs::remove_dir_all(a.root());
         let _ = std::fs::remove_dir_all(b.root());
+    }
+
+    /// `export_records` → `import_records` is `merge_from` over the wire:
+    /// all three tiers round-trip in import-safe order and the exchange
+    /// is idempotent.
+    #[test]
+    fn export_import_records_roundtrip_all_tiers() {
+        let a = tmp_store("export-a");
+        let b = tmp_store("export-b");
+        a.put_trace(61, &Ok(sample_trace())).unwrap();
+        a.put(62, &Ok(sample_measurement()), false).unwrap();
+        a.put(63, &Err("validation: nw: m[9] = 1, want 2".into()), false).unwrap();
+        let records = a.export_records();
+        let tiers: Vec<Tier> = records.iter().map(|r| r.tier).collect();
+        assert_eq!(
+            tiers,
+            vec![Tier::Profiles, Tier::Traces, Tier::Entries, Tier::Entries],
+            "pool must precede the traces that reference it"
+        );
+        assert_eq!(b.import_records(&records).unwrap(), 4);
+        assert_eq!(b.get_trace(61), Some(Ok(sample_trace())));
+        assert_eq!(b.get(62), Some(Ok(sample_measurement())));
+        assert_eq!(b.get(63), Some(Err("validation: nw: m[9] = 1, want 2".into())));
+        assert_eq!(b.import_records(&records).unwrap(), 0, "exchange is idempotent");
+        let _ = std::fs::remove_dir_all(a.root());
+        let _ = std::fs::remove_dir_all(b.root());
+    }
+
+    /// A record set missing the pool a trace references imports nothing
+    /// for that trace (same contract as a corrupt source pool in
+    /// `merge_from`); hash-mismatched pooled profiles are dropped too.
+    #[test]
+    fn import_records_skips_unresolvable_and_corrupt_records() {
+        let src = tmp_store("import-src");
+        src.put_trace(71, &Ok(sample_trace())).unwrap();
+        src.put(72, &Ok(sample_measurement()), false).unwrap();
+        let records = src.export_records();
+
+        // strip the pool: the trace must not import, the entry still does
+        let no_pool: Vec<ExportRecord> =
+            records.iter().filter(|r| r.tier != Tier::Profiles).cloned().collect();
+        let dst = tmp_store("import-nopool");
+        assert_eq!(dst.import_records(&no_pool).unwrap(), 1, "only the entry lands");
+        assert_eq!(dst.get_trace(71), None);
+        assert!(dst.get(72).is_some());
+
+        // mis-key a profile: re-hash validation drops it and its trace
+        let mut bad = records.clone();
+        for r in &mut bad {
+            if r.tier == Tier::Profiles {
+                r.key ^= 1;
+            }
+        }
+        let dst2 = tmp_store("import-badpool");
+        assert_eq!(dst2.import_records(&bad).unwrap(), 1, "only the entry lands");
+        assert_eq!(dst2.get_trace(71), None);
+        let _ = std::fs::remove_dir_all(src.root());
+        let _ = std::fs::remove_dir_all(dst.root());
+        let _ = std::fs::remove_dir_all(dst2.root());
+    }
+
+    #[test]
+    fn tier_labels_roundtrip_and_gc_report_json_roundtrips() {
+        for t in [Tier::Entries, Tier::Traces, Tier::Profiles] {
+            assert_eq!(Tier::parse(t.label()), Some(t));
+        }
+        assert_eq!(Tier::parse("pool"), None);
+        let r = GcReport {
+            dry_run: true,
+            kept_entries: 1,
+            removed_entries: 2,
+            kept_traces: 3,
+            removed_traces: 4,
+            kept_profiles: 5,
+            removed_profiles: 6,
+        };
+        assert_eq!(GcReport::from_json(&r.to_json()), Some(r));
     }
 
     #[test]

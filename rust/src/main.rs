@@ -2,13 +2,22 @@
 //!
 //! Subcommands regenerate the paper's tables/figures, print compiler
 //! reports and transformed source, validate against the PJRT golden
-//! artifacts, and drive the parallel experiment engine (`run`, `sweep`,
-//! `report`). Std-only argument parsing (no clap in this offline image).
+//! artifacts, and drive the experiment engine — locally through the
+//! `coordinator::Service` facade (`run`, `sweep`, `tune`, `merge`,
+//! `store`), as a daemon (`serve`), or as a client of one (`client`).
+//! Std-only argument parsing (no clap in this offline image): one
+//! declarative spec table shared by every subcommand, with the same
+//! validators the daemon's wire decoder uses.
 
-use pipefwd::coordinator::{self, parse_scale, Engine, ExperimentId, Store};
+use pipefwd::coordinator::{
+    self, net, service, Engine, Mode, Service, ServiceRequest, ServiceResponse, Store,
+};
 use pipefwd::sim::device::DeviceConfig;
 use pipefwd::transform::Variant;
+use pipefwd::util::json;
 use pipefwd::workloads::{by_name, Scale};
+use std::path::Path;
+use std::sync::Arc;
 
 const USAGE: &str = "\
 pipefwd — feed-forward design model for OpenCL kernels via pipes
@@ -32,8 +41,9 @@ ENGINE COMMANDS (parallel, cache-aware, persistent):
   report [--format table|json]  re-render a results sink (default:
          [--in BENCH_PR1.json]  BENCH_PR1.json; if the default file is
                                 absent, renders from the persistent store)
-  report --diff <old> <new>     compare two results sinks; exit 1 on
-         [--threshold PCT]      modelled-performance regressions > PCT %
+  report --diff <old> <new>     compare two results sinks (exit 1 on
+         [--threshold PCT]      modelled regressions > PCT %) or two
+                                counters documents (informational)
   store stats                   per-tier store footprint (entries /
         [--format table|json]   traces / pooled profiles, counts + bytes)
                                 and the profile pool's dedup ratio
@@ -44,6 +54,18 @@ ENGINE COMMANDS (parallel, cache-aware, persistent):
                                 profiles no surviving trace references;
                                 rewrites MANIFEST.json (--dry-run only
                                 reports)
+
+DAEMON COMMANDS (measurement as a service, schema pipefwd-api-v1):
+  serve --addr HOST:PORT        serve measure/sweep/tune/store requests
+        [--workers N]           to many concurrent clients over TCP/HTTP;
+        [--queue N]             shared cells dedup through one engine's
+                                claim/fulfil memo; bounded request queue
+                                answers 503 when full; GET /stats for
+                                live counters + store footprint
+  client <action>               drive a daemon from the same binary:
+        [--addr HOST:PORT]      run | sweep | tune | stats | store-pull
+                                — sinks are reassembled byte-identical
+                                to the serial CLI path
 
 TABLE COMMANDS:
   table1               benchmark characterisation (paper Table 1)
@@ -88,7 +110,8 @@ OPTIONS:
                    the E1/E2/E7 tables and annotate the E4 depth sweep
   --format F       `report` output: table (default) or json
   --in PATH        `report` input file (default: BENCH_PR1.json)
-  --diff OLD NEW   `report` diff mode: two results sinks to compare
+  --diff OLD NEW   `report` diff mode: two results sinks (or counters
+                   documents, v1/v2) to compare
   --threshold PCT  regression threshold for `report --diff` (default: 5)
   --shard I/N      compute only shard I of N (1-based) of the unique
                    experiment grid; merge the stores afterwards
@@ -98,9 +121,17 @@ OPTIONS:
   --des            estimate with the discrete-event simulator instead of
                    the analytic model (cached under a distinct key)
   --counters PATH  after `run`/`sweep`/`tune`, write the engine counters
+                   to a pipefwd-counters-v2 document: the engine tiers
                    (trace_hits/trace_runs/store_hits/simulations/
-                   cache_hits) plus wall-clock to a COUNTERS.json document
-                   — CI gates on a warm rerun reporting zero trace runs
+                   cache_hits) plus the daemon counters (queue_depth_max/
+                   clients_served/requests_deduped, zero in CLI mode)
+                   and wall-clock — CI gates on a warm rerun reporting
+                   zero trace runs
+  --addr H:P       daemon address for `serve`/`client`
+                   (default: 127.0.0.1:7341)
+  --workers N      `serve`: connection-handling worker threads (default 4)
+  --queue N        `serve`: bounded request-queue capacity — when full
+                   the daemon answers 503 instead of buffering (default 64)
 ";
 
 fn fail(msg: &str) -> ! {
@@ -108,146 +139,208 @@ fn fail(msg: &str) -> ! {
     std::process::exit(2);
 }
 
+// ---------------------------------------------------------------------------
+// Declarative argument parsing: one spec table for every subcommand.
+// Validation happens at parse time through the same `service::*_from`
+// parsers the daemon's wire decoder uses, so a bad value produces the
+// same message whether it arrives via argv or via a pipefwd-api-v1
+// request document.
+// ---------------------------------------------------------------------------
+
+struct ArgSpec {
+    name: &'static str,
+    /// Values the flag consumes (0 = boolean flag, 2 = `--diff OLD NEW`).
+    arity: usize,
+    /// Parse-time validator for each consumed value.
+    validate: Option<fn(&str) -> Result<(), String>>,
+}
+
+fn v_scale(v: &str) -> Result<(), String> {
+    service::scale_from(v).map(|_| ())
+}
+fn v_posint(v: &str) -> Result<(), String> {
+    service::posint_from(v).map(|_| ())
+}
+fn v_experiments(v: &str) -> Result<(), String> {
+    service::experiments_from(v).map(|_| ())
+}
+fn v_depths(v: &str) -> Result<(), String> {
+    service::depths_from(v).map(|_| ())
+}
+fn v_benches(v: &str) -> Result<(), String> {
+    service::benches_from(v).map(|_| ())
+}
+fn v_policy(v: &str) -> Result<(), String> {
+    service::policy_from(v).map(|_| ())
+}
+fn v_shard(v: &str) -> Result<(), String> {
+    service::shard_from(v).map(|_| ())
+}
+fn v_threshold(v: &str) -> Result<(), String> {
+    service::threshold_from(v).map(|_| ())
+}
+fn v_addr(v: &str) -> Result<(), String> {
+    service::addr_from(v).map(|_| ())
+}
+fn v_format(v: &str) -> Result<(), String> {
+    if v == "table" || v == "json" {
+        Ok(())
+    } else {
+        Err(format!("unknown format `{v}` (table|json)"))
+    }
+}
+
+const ARG_SPECS: &[ArgSpec] = &[
+    ArgSpec { name: "--scale", arity: 1, validate: Some(v_scale) },
+    ArgSpec { name: "--csv", arity: 0, validate: None },
+    ArgSpec { name: "--jobs", arity: 1, validate: Some(v_posint) },
+    ArgSpec { name: "--experiment", arity: 1, validate: Some(v_experiments) },
+    ArgSpec { name: "--depths", arity: 1, validate: Some(v_depths) },
+    ArgSpec { name: "--benches", arity: 1, validate: Some(v_benches) },
+    ArgSpec { name: "--policy", arity: 1, validate: Some(v_policy) },
+    ArgSpec { name: "--budget", arity: 1, validate: Some(v_posint) },
+    ArgSpec { name: "--replication", arity: 0, validate: None },
+    ArgSpec { name: "--dry-run", arity: 0, validate: None },
+    ArgSpec { name: "--no-ref", arity: 0, validate: None },
+    ArgSpec { name: "--tuned", arity: 0, validate: None },
+    ArgSpec { name: "--out", arity: 1, validate: None },
+    ArgSpec { name: "--in", arity: 1, validate: None },
+    ArgSpec { name: "--format", arity: 1, validate: Some(v_format) },
+    ArgSpec { name: "--shard", arity: 1, validate: Some(v_shard) },
+    ArgSpec { name: "--cache-dir", arity: 1, validate: None },
+    ArgSpec { name: "--no-cache", arity: 0, validate: None },
+    ArgSpec { name: "--des", arity: 0, validate: None },
+    ArgSpec { name: "--counters", arity: 1, validate: None },
+    ArgSpec { name: "--diff", arity: 2, validate: None },
+    ArgSpec { name: "--threshold", arity: 1, validate: Some(v_threshold) },
+    ArgSpec { name: "--addr", arity: 1, validate: Some(v_addr) },
+    ArgSpec { name: "--workers", arity: 1, validate: Some(v_posint) },
+    ArgSpec { name: "--queue", arity: 1, validate: Some(v_posint) },
+];
+
+struct Args {
+    values: std::collections::HashMap<&'static str, Vec<String>>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse(raw: &[String]) -> Args {
+        let mut values: std::collections::HashMap<&'static str, Vec<String>> =
+            std::collections::HashMap::new();
+        let mut positional = vec![];
+        let mut it = raw.iter();
+        while let Some(a) = it.next() {
+            if let Some(spec) = ARG_SPECS.iter().find(|s| s.name == a.as_str()) {
+                let mut vals = vec![];
+                for _ in 0..spec.arity {
+                    let v = it
+                        .next()
+                        .unwrap_or_else(|| fail(&format!("{}: expected a value", spec.name)));
+                    if let Some(validate) = spec.validate {
+                        if let Err(e) = validate(v) {
+                            fail(&format!("{}: {e}", spec.name));
+                        }
+                    }
+                    vals.push(v.clone());
+                }
+                values.insert(spec.name, vals); // last occurrence wins
+            } else if a.starts_with("--") {
+                fail(&format!("unknown flag `{a}` (see `pipefwd` usage)"));
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Args { values, positional }
+    }
+
+    fn flag(&self, name: &str) -> bool {
+        self.values.contains_key(name)
+    }
+
+    fn value(&self, name: &str) -> Option<&str> {
+        self.values.get(name).and_then(|v| v.first()).map(String::as_str)
+    }
+
+    fn pair(&self, name: &str) -> Option<(&str, &str)> {
+        let v = self.values.get(name)?;
+        Some((v[0].as_str(), v[1].as_str()))
+    }
+}
+
+/// Unwrap a validated value (parse-time validation means this cannot
+/// fire for table-spec'd flags, but the message stays consistent).
+fn req<T>(name: &str, r: Result<T, String>) -> T {
+    r.unwrap_or_else(|e| fail(&format!("{name}: {e}")))
+}
+
 fn main() {
     let wall_start = std::time::Instant::now();
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    if args.is_empty() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() {
         print!("{USAGE}");
         std::process::exit(2);
     }
-    let cmd = args[0].as_str();
-    let mut scale = Scale::Small;
-    let mut csv = false;
-    let mut jobs: usize = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let mut experiment = String::from("all");
-    let mut depths: Vec<usize> = vec![1, 100, 1000];
-    let mut benches: Vec<String> = vec!["fw".into(), "hotspot".into(), "mis".into()];
-    let mut out_path = String::from("BENCH_PR1.json");
-    let mut out_set = false;
-    let mut in_path = String::from("BENCH_PR1.json");
-    let mut in_set = false;
-    let mut format = String::from("table");
-    let mut shard: Option<(usize, usize)> = None;
-    let mut cache_dir: Option<String> = None;
-    let mut no_cache = false;
-    let mut use_des = false;
-    let mut counters_path: Option<String> = None;
-    let mut policy = coordinator::Policy::Golden;
-    let mut budget: usize = 40;
-    let mut replication = false;
-    let mut dry_run = false;
-    let mut no_ref = false;
-    let mut tuned = false;
-    let mut diff: Option<(String, String)> = None;
-    let mut threshold = 5.0_f64;
-    let mut positional = vec![];
-    let mut it = args[1..].iter();
-    while let Some(a) = it.next() {
-        match a.as_str() {
-            "--scale" => {
-                let v = it.next().unwrap_or_else(|| fail("--scale needs a value"));
-                scale = parse_scale(v)
-                    .unwrap_or_else(|| fail(&format!("unknown scale `{v}` (tiny|small|paper)")));
-            }
-            "--csv" => csv = true,
-            "--jobs" => {
-                let v = it.next().unwrap_or_else(|| fail("--jobs needs a value"));
-                jobs = v
-                    .parse::<usize>()
-                    .ok()
-                    .filter(|n| *n > 0)
-                    .unwrap_or_else(|| fail(&format!("bad --jobs `{v}` (positive integer)")));
-            }
-            "--experiment" => {
-                experiment = it.next().unwrap_or_else(|| fail("--experiment needs a value")).clone();
-            }
-            "--depths" => {
-                let v = it.next().unwrap_or_else(|| fail("--depths needs a value"));
-                // sorted + deduplicated: `--depths 100,100,1` must emit
-                // the same table (and sink) as `--depths 1,100`
-                depths = coordinator::normalize_depths(
-                    v.split(',')
-                        .map(|d| {
-                            d.trim()
-                                .parse::<usize>()
-                                .ok()
-                                .filter(|n| *n > 0)
-                                .unwrap_or_else(|| fail(&format!("bad depth `{d}`")))
-                        })
-                        .collect(),
-                );
-            }
-            "--benches" => {
-                let v = it.next().unwrap_or_else(|| fail("--benches needs a value"));
-                benches = v.split(',').map(|b| b.trim().to_string()).collect();
-                // fail fast at parse time — an unknown name must not flow
-                // into the engine's grid fan-out
-                for b in &benches {
-                    if coordinator::resolve_workload(b).is_none() {
-                        fail(&format!("unknown benchmark `{b}` (see `pipefwd list`)"));
-                    }
-                }
-            }
-            "--policy" => {
-                let v = it.next().unwrap_or_else(|| fail("--policy needs a value"));
-                policy = coordinator::Policy::parse(v)
-                    .unwrap_or_else(|| fail(&format!("unknown policy `{v}` (golden|sh)")));
-            }
-            "--budget" => {
-                let v = it.next().unwrap_or_else(|| fail("--budget needs a value"));
-                budget = v
-                    .parse::<usize>()
-                    .ok()
-                    .filter(|n| *n > 0)
-                    .unwrap_or_else(|| fail(&format!("bad --budget `{v}` (positive integer)")));
-            }
-            "--replication" => replication = true,
-            "--dry-run" => dry_run = true,
-            "--no-ref" => no_ref = true,
-            "--tuned" => tuned = true,
-            "--out" => {
-                out_path = it.next().unwrap_or_else(|| fail("--out needs a value")).clone();
-                out_set = true;
-            }
-            "--in" => {
-                in_path = it.next().unwrap_or_else(|| fail("--in needs a value")).clone();
-                in_set = true;
-            }
-            "--format" => {
-                format = it.next().unwrap_or_else(|| fail("--format needs a value")).clone();
-            }
-            "--shard" => {
-                let v = it.next().unwrap_or_else(|| fail("--shard needs a value (I/N)"));
-                shard = Some(parse_shard(v).unwrap_or_else(|| {
-                    fail(&format!("bad --shard `{v}` (expected I/N with 1 <= I <= N)"))
-                }));
-            }
-            "--cache-dir" => {
-                cache_dir =
-                    Some(it.next().unwrap_or_else(|| fail("--cache-dir needs a value")).clone());
-            }
-            "--no-cache" => no_cache = true,
-            "--des" => use_des = true,
-            "--counters" => {
-                counters_path =
-                    Some(it.next().unwrap_or_else(|| fail("--counters needs a path")).clone());
-            }
-            "--diff" => {
-                let old = it.next().unwrap_or_else(|| fail("--diff needs two paths")).clone();
-                let new = it.next().unwrap_or_else(|| fail("--diff needs two paths")).clone();
-                diff = Some((old, new));
-            }
-            "--threshold" => {
-                let v = it.next().unwrap_or_else(|| fail("--threshold needs a value"));
-                threshold = v
-                    .parse::<f64>()
-                    .ok()
-                    .filter(|t| t.is_finite() && *t >= 0.0)
-                    .unwrap_or_else(|| fail(&format!("bad --threshold `{v}` (percent >= 0)")));
-            }
-            other => positional.push(other.to_string()),
-        }
-    }
+    let cmd = raw[0].as_str();
+    let args = Args::parse(&raw[1..]);
+
+    let scale = args
+        .value("--scale")
+        .map(|v| req("--scale", service::scale_from(v)))
+        .unwrap_or(Scale::Small);
+    let csv = args.flag("--csv");
+    let jobs = args
+        .value("--jobs")
+        .map(|v| req("--jobs", service::posint_from(v)))
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    let experiment = args.value("--experiment").unwrap_or("all").to_string();
+    let depths: Vec<usize> = args
+        .value("--depths")
+        .map(|v| req("--depths", service::depths_from(v)))
+        .unwrap_or_else(|| vec![1, 100, 1000]);
+    let benches: Vec<String> = args
+        .value("--benches")
+        .map(|v| req("--benches", service::benches_from(v)))
+        .unwrap_or_else(|| vec!["fw".into(), "hotspot".into(), "mis".into()]);
+    let policy = args
+        .value("--policy")
+        .map(|v| req("--policy", service::policy_from(v)))
+        .unwrap_or(coordinator::Policy::Golden);
+    let budget = args
+        .value("--budget")
+        .map(|v| req("--budget", service::posint_from(v)))
+        .unwrap_or(40);
+    let replication = args.flag("--replication");
+    let dry_run = args.flag("--dry-run");
+    let no_ref = args.flag("--no-ref");
+    let tuned = args.flag("--tuned");
+    let out_set = args.flag("--out");
+    let out_path = args.value("--out").unwrap_or("BENCH_PR1.json").to_string();
+    let in_set = args.flag("--in");
+    let in_path = args.value("--in").unwrap_or("BENCH_PR1.json").to_string();
+    let format = args.value("--format").unwrap_or("table").to_string();
+    let shard = args.value("--shard").map(|v| req("--shard", service::shard_from(v)));
+    let cache_dir = args.value("--cache-dir").map(String::from);
+    let no_cache = args.flag("--no-cache");
+    let use_des = args.flag("--des");
+    let counters_path = args.value("--counters").map(String::from);
+    let threshold = args
+        .value("--threshold")
+        .map(|v| req("--threshold", service::threshold_from(v)))
+        .unwrap_or(5.0);
+    let addr = args
+        .value("--addr")
+        .map(|v| req("--addr", service::addr_from(v)))
+        .unwrap_or_else(|| "127.0.0.1:7341".to_string());
+    let workers = args
+        .value("--workers")
+        .map(|v| req("--workers", service::posint_from(v)))
+        .unwrap_or(4);
+    let queue_cap = args
+        .value("--queue")
+        .map(|v| req("--queue", service::posint_from(v)))
+        .unwrap_or(64);
+    let positional = &args.positional;
+
     let cfg = DeviceConfig::pac_a10();
 
     // The persistent store every engine command reads through / writes
@@ -265,7 +358,9 @@ fn main() {
             }
         }
     };
-    let mk_engine = |jobs: usize| {
+    // Every engine command talks to the same `Service` facade the daemon
+    // serves — the CLI is just a local client of it.
+    let mk_service = |jobs: usize, mode: Mode| -> Service {
         let mut e = Engine::new(DeviceConfig::pac_a10(), jobs).with_des(use_des);
         if let Some(s) = open_store() {
             e = e.with_store(s);
@@ -273,31 +368,19 @@ fn main() {
         if tuned {
             e = e.with_tuner(coordinator::TuneSpec { policy, budget });
         }
-        e
+        Service::new(e, mode)
     };
-    // `--counters PATH`: the engine's tier counters + wall clock as one
-    // machine-readable document per invocation. CI's warm-rerun gate reads
-    // `trace_runs`/`simulations` from here (bench-diff fails on nonzero).
-    let write_counters = |engine: &Engine, command: &str| {
+    // `--counters PATH`: the service's tier counters + wall clock as one
+    // machine-readable pipefwd-counters-v2 document per invocation. CI's
+    // warm-rerun gate reads `trace_runs`/`simulations` from here.
+    let write_counters = |svc: &Service, command: &str| {
         let Some(path) = counters_path.as_deref() else { return };
-        let doc = pipefwd::util::json::Json::Obj(vec![
-            ("schema".into(), pipefwd::util::json::Json::Str("pipefwd-counters-v1".into())),
-            ("command".into(), pipefwd::util::json::Json::Str(command.into())),
-            (
-                "scale".into(),
-                pipefwd::util::json::Json::Str(coordinator::scale_label(scale).into()),
-            ),
-            ("cache_hits".into(), pipefwd::util::json::Json::Num(engine.cache_hits() as f64)),
-            ("store_hits".into(), pipefwd::util::json::Json::Num(engine.store_hits() as f64)),
-            ("simulations".into(), pipefwd::util::json::Json::Num(engine.simulations() as f64)),
-            ("trace_hits".into(), pipefwd::util::json::Json::Num(engine.trace_hits() as f64)),
-            ("trace_runs".into(), pipefwd::util::json::Json::Num(engine.trace_runs() as f64)),
-            (
-                "wall_ms".into(),
-                pipefwd::util::json::Json::Num(wall_start.elapsed().as_millis() as f64),
-            ),
-        ]);
-        match pipefwd::util::json::write_file_atomic(std::path::Path::new(path), &doc) {
+        let doc = svc.counters_doc(
+            command,
+            coordinator::scale_label(scale),
+            wall_start.elapsed().as_millis() as f64,
+        );
+        match json::write_file_atomic(Path::new(path), &doc) {
             Ok(()) => eprintln!("wrote {path}"),
             Err(e) => fail(&format!("writing {path}: {e}")),
         }
@@ -327,40 +410,29 @@ fn main() {
             }
         }
         "run" => {
-            let exps = parse_experiments(&experiment);
-            let engine = mk_engine(jobs);
+            let exps = req("--experiment", service::experiments_from(&experiment));
+            let svc = mk_service(jobs, Mode::Cli);
+            let resp = svc
+                .handle(&ServiceRequest::Run { experiments: exps.clone(), scale, shard })
+                .unwrap_or_else(|e| fail(&e.render()));
+            let engine = svc.engine();
             if let Some((index, count)) = shard {
-                // one disjoint slice of the unique grid: simulate into the
-                // store, no table rendering (tables need the full grid —
-                // that's what `merge` reassembles). The store IS the
-                // shard's product, so store problems are fatal here where
-                // a plain run only warns.
-                if engine.store().is_none() {
-                    fail("run --shard: the persistent store is unavailable (or --no-cache \
-                          was given) — a shard's results have nowhere to go");
-                }
-                let cells = coordinator::grid_for(&exps, scale);
-                let slice = coordinator::shard_cells(&cells, index, count)
-                    .unwrap_or_else(|e| fail(&e));
-                let _ = engine.run_cells(&slice);
-                if engine.store_errors() > 0 {
-                    fail(&format!(
-                        "run --shard: {} result(s) failed to persist — the merge would \
-                         report this slice as missing",
-                        engine.store_errors()
-                    ));
-                }
+                let ServiceResponse::Cells { grid_cells, cells } = &resp else {
+                    fail("run: unexpected response kind")
+                };
                 eprintln!(
                     "shard {index}/{count}: {} of {} unique cells, {} simulated \
                      ({} trace runs, {} trace hits), {} store hits",
-                    slice.len(),
                     cells.len(),
+                    grid_cells,
                     engine.simulations(),
                     engine.trace_runs(),
                     engine.trace_hits(),
                     engine.store_hits(),
                 );
             } else {
+                // the facade already measured the grid; the table
+                // renderers replay it from the warm memo table
                 for exp in &exps {
                     for (i, t) in engine.run_experiment(*exp, scale).iter().enumerate() {
                         save(t, &format!("{}_{i}", exp.label().to_lowercase()));
@@ -373,7 +445,7 @@ fn main() {
             // concurrent shards would race on it), so shards only write a
             // sink to an explicit --out.
             if shard.is_none() || out_set {
-                match engine.write_bench_json(std::path::Path::new(&out_path), scale, &exps) {
+                match engine.write_bench_json(Path::new(&out_path), scale, &exps) {
                     Ok(()) => eprintln!(
                         "wrote {out_path} ({} measurements, {} unique configs, {} cache hits, \
                          {} store hits, {} simulated, {} trace runs, {} trace hits, {jobs} jobs)",
@@ -388,62 +460,51 @@ fn main() {
                     Err(e) => fail(&format!("writing {out_path}: {e}")),
                 }
             }
-            write_counters(&engine, "run");
-            finish_engine(&engine);
+            write_counters(&svc, "run");
+            finish_engine(engine);
         }
         "merge" => {
             if positional.is_empty() {
                 fail("merge <dir>... (at least one shard store directory)");
             }
-            let exps = parse_experiments(&experiment);
-            let shards: Vec<Store> = positional
-                .iter()
-                .map(|d| {
-                    Store::open_existing(d)
-                        .unwrap_or_else(|e| fail(&format!("opening store {d}: {e}")))
+            let exps = req("--experiment", service::experiments_from(&experiment));
+            let svc = mk_service(1, Mode::Cli);
+            let resp = svc
+                .handle(&ServiceRequest::Merge {
+                    dirs: positional.clone(),
+                    experiments: exps,
+                    scale,
                 })
-                .collect();
-            // union the shard stores into the local persistent store too,
-            // so the merge host is warm for future runs
-            if let Some(local) = open_store() {
-                let mut imported = 0;
-                for s in &shards {
-                    imported += local
-                        .merge_from(s)
-                        .unwrap_or_else(|e| fail(&format!("merging into local store: {e}")));
-                }
-                if let Err(e) = local.write_manifest() {
-                    eprintln!("warning: writing store manifest: {e}");
-                }
+                .unwrap_or_else(|e| fail(&e.render()));
+            let ServiceResponse::Merged { imported, bench } = resp else {
+                fail("merge: unexpected response kind")
+            };
+            if let Some(local) = svc.engine().store() {
                 eprintln!(
                     "imported {imported} new records (measurement + trace tiers) into {}",
                     local.root().display()
                 );
             }
-            let json = coordinator::merge_bench_json(&shards, &exps, scale, &cfg, use_des)
-                .unwrap_or_else(|e| fail(&e));
-            match std::fs::write(&out_path, &json) {
-                Ok(()) => eprintln!("wrote {out_path} (merged from {} store(s))", shards.len()),
+            match std::fs::write(&out_path, &bench) {
+                Ok(()) => {
+                    eprintln!("wrote {out_path} (merged from {} store(s))", positional.len());
+                }
                 Err(e) => fail(&format!("writing {out_path}: {e}")),
             }
         }
         "sweep" => {
-            // bench names were validated when `--benches` was parsed; the
-            // default list is registry-known
-            let engine = mk_engine(jobs);
-            let cells: Vec<coordinator::Cell> = benches
-                .iter()
-                .flat_map(|b| {
-                    depths
-                        .iter()
-                        .map(|d| coordinator::Cell::new(b, Variant::FeedForward { depth: *d }, scale))
-                        .collect::<Vec<_>>()
-                })
-                .collect();
-            let _ = engine.run_cells(&cells);
+            let svc = mk_service(jobs, Mode::Cli);
+            if let Err(e) = svc.handle(&ServiceRequest::Sweep {
+                benches: benches.clone(),
+                depths: depths.clone(),
+                scale,
+            }) {
+                fail(&e.render());
+            }
+            let engine = svc.engine();
             let names: Vec<&str> = benches.iter().map(|b| b.as_str()).collect();
             save(&engine.depth_sweep(&names, scale, &depths), "depth_sweep");
-            match engine.write_bench_json(std::path::Path::new(&out_path), scale, &[]) {
+            match engine.write_bench_json(Path::new(&out_path), scale, &[]) {
                 Ok(()) => eprintln!(
                     "wrote {out_path} ({} simulated, {} trace runs, {} trace hits)",
                     engine.simulations(),
@@ -452,28 +513,30 @@ fn main() {
                 ),
                 Err(e) => fail(&format!("writing {out_path}: {e}")),
             }
-            write_counters(&engine, "sweep");
-            finish_engine(&engine);
+            write_counters(&svc, "sweep");
+            finish_engine(engine);
         }
         "tune" => {
-            let engine = mk_engine(jobs);
-            let req = coordinator::TuneRequest {
-                benches: benches.clone(),
-                policy,
-                budget,
-                replication,
-                scale,
-                reference: !no_ref,
+            let svc = mk_service(jobs, Mode::Cli);
+            let resp = svc
+                .handle(&ServiceRequest::Tune {
+                    benches: benches.clone(),
+                    policy,
+                    budget,
+                    replication,
+                    scale,
+                    reference: !no_ref,
+                })
+                .unwrap_or_else(|e| fail(&e.render()));
+            let ServiceResponse::Tune { report } = resp else {
+                fail("tune: unexpected response kind")
             };
-            let report = coordinator::run_tune(&engine, &req).unwrap_or_else(|e| fail(&e));
             save(&report.table(), "tune");
+            let engine = svc.engine();
             // the TuneReport artifact deliberately excludes live counters,
             // so a warm-store rerun is byte-identical to the cold run
             let tune_path = if out_set { out_path.clone() } else { "TUNE.json".to_string() };
-            match pipefwd::util::json::write_file_atomic(
-                std::path::Path::new(&tune_path),
-                &report.to_json(),
-            ) {
+            match json::write_file_atomic(Path::new(&tune_path), &report.to_json()) {
                 Ok(()) => eprintln!(
                     "wrote {tune_path} ({} bench(es), {} policy, {} probes, \
                      simulations: {}, trace runs: {}, trace hits: {}, store hits: {})",
@@ -487,12 +550,141 @@ fn main() {
                 ),
                 Err(e) => fail(&format!("writing {tune_path}: {e}")),
             }
-            write_counters(&engine, "tune");
-            finish_engine(&engine);
+            write_counters(&svc, "tune");
+            finish_engine(engine);
+        }
+        "serve" => {
+            let svc = Arc::new(mk_service(jobs, Mode::Daemon));
+            let store_desc = svc
+                .engine()
+                .store()
+                .map(|s| s.root().display().to_string())
+                .unwrap_or_else(|| "none".to_string());
+            let server = net::Server::spawn(
+                Arc::clone(&svc),
+                &addr,
+                net::ServerConfig { workers, queue_cap },
+            )
+            .unwrap_or_else(|e| fail(&format!("serve: binding {addr}: {e}")));
+            eprintln!(
+                "pipefwd serve: listening on {} ({jobs} engine jobs, {workers} workers, \
+                 queue {queue_cap}, store: {store_desc}, schema {})",
+                server.addr(),
+                coordinator::API_SCHEMA,
+            );
+            server.join();
+        }
+        "client" => {
+            let action = positional
+                .first()
+                .map(String::as_str)
+                .unwrap_or_else(|| {
+                    fail("client <run|sweep|tune|stats|store-pull> (see `pipefwd` usage)")
+                });
+            match action {
+                "run" => {
+                    let exps = req("--experiment", service::experiments_from(&experiment));
+                    let items = net::request(
+                        &addr,
+                        &ServiceRequest::Run { experiments: exps.clone(), scale, shard },
+                    )
+                    .unwrap_or_else(|e| fail(&e));
+                    // mirror the CLI shard rule: a slice writes a sink
+                    // only to an explicit --out
+                    if shard.is_none() || out_set {
+                        let bench = service::cells_to_bench(&items, scale, &exps)
+                            .unwrap_or_else(|e| fail(&e));
+                        match std::fs::write(&out_path, &bench) {
+                            Ok(()) => eprintln!("wrote {out_path} (measured by {addr})"),
+                            Err(e) => fail(&format!("writing {out_path}: {e}")),
+                        }
+                    } else {
+                        eprintln!(
+                            "shard complete on {addr} ({} cell(s))",
+                            items.len().saturating_sub(1)
+                        );
+                    }
+                }
+                "sweep" => {
+                    let items = net::request(
+                        &addr,
+                        &ServiceRequest::Sweep {
+                            benches: benches.clone(),
+                            depths: depths.clone(),
+                            scale,
+                        },
+                    )
+                    .unwrap_or_else(|e| fail(&e));
+                    let bench =
+                        service::cells_to_bench(&items, scale, &[]).unwrap_or_else(|e| fail(&e));
+                    match std::fs::write(&out_path, &bench) {
+                        Ok(()) => eprintln!("wrote {out_path} (measured by {addr})"),
+                        Err(e) => fail(&format!("writing {out_path}: {e}")),
+                    }
+                }
+                "tune" => {
+                    let items = net::request(
+                        &addr,
+                        &ServiceRequest::Tune {
+                            benches: benches.clone(),
+                            policy,
+                            budget,
+                            replication,
+                            scale,
+                            reference: !no_ref,
+                        },
+                    )
+                    .unwrap_or_else(|e| fail(&e));
+                    let report_doc = items
+                        .first()
+                        .and_then(|l| l.get("report"))
+                        .cloned()
+                        .unwrap_or_else(|| fail("client tune: malformed daemon response"));
+                    let tune_path =
+                        if out_set { out_path.clone() } else { "TUNE.json".to_string() };
+                    match json::write_file_atomic(Path::new(&tune_path), &report_doc) {
+                        Ok(()) => eprintln!("wrote {tune_path} (tuned by {addr})"),
+                        Err(e) => fail(&format!("writing {tune_path}: {e}")),
+                    }
+                }
+                "stats" => {
+                    let doc = net::get_stats(&addr).unwrap_or_else(|e| fail(&e));
+                    print!("{}", doc.to_pretty());
+                }
+                "store-pull" => {
+                    let items = net::request(&addr, &ServiceRequest::StorePull)
+                        .unwrap_or_else(|e| fail(&e));
+                    let records = items
+                        .iter()
+                        .map(service::decode_record)
+                        .collect::<Result<Vec<_>, _>>()
+                        .unwrap_or_else(|e| fail(&e));
+                    let dir = Store::resolve_dir(cache_dir.as_deref());
+                    let store = Store::open(&dir)
+                        .unwrap_or_else(|e| fail(&format!("opening store {}: {e}", dir.display())));
+                    let count = store
+                        .import_records(&records)
+                        .unwrap_or_else(|e| fail(&format!("importing records: {e}")));
+                    if let Err(e) = store.write_manifest() {
+                        eprintln!("warning: writing store manifest: {e}");
+                    }
+                    eprintln!(
+                        "pulled {} record(s) from {addr}, imported {count} new into {}",
+                        records.len(),
+                        dir.display()
+                    );
+                }
+                other => {
+                    fail(&format!("unknown client action `{other}` (run|sweep|tune|stats|store-pull)"))
+                }
+            }
         }
         "report" => {
-            if let Some((old_path, new_path)) = &diff {
-                let failures = report_diff(old_path, new_path, threshold);
+            if let Some((old_path, new_path)) = args.pair("--diff") {
+                let (rendered, failures) =
+                    pipefwd::report::sink_diff(old_path, new_path, threshold)
+                        .unwrap_or_else(|e| fail(&e));
+                print!("{rendered}");
                 if failures > 0 {
                     eprintln!(
                         "FAIL: {failures} gate failure(s) — regressions above {threshold}% \
@@ -504,22 +696,26 @@ fn main() {
             }
             match std::fs::read_to_string(&in_path) {
                 Ok(text) => {
-                    let doc = pipefwd::util::json::parse(&text)
+                    let doc = json::parse(&text)
                         .unwrap_or_else(|e| fail(&format!("parsing {in_path}: {e}")));
                     match format.as_str() {
                         "json" => print!("{}", doc.to_pretty()),
-                        "table" => {
+                        _ => {
                             let ms: Vec<coordinator::Measurement> = doc
                                 .get("measurements")
                                 .and_then(|m| m.as_array())
-                                .unwrap_or_else(|| fail(&format!("{in_path}: no measurements array")))
+                                .unwrap_or_else(|| {
+                                    fail(&format!("{in_path}: no measurements array"))
+                                })
                                 .iter()
                                 .filter_map(coordinator::Measurement::from_json)
                                 .collect();
-                            let t = measurements_table(&format!("Results sink: {in_path}"), &ms);
+                            let t = pipefwd::report::measurements_table(
+                                &format!("Results sink: {in_path}"),
+                                &ms,
+                            );
                             print!("{}", t.to_markdown());
                         }
-                        other => fail(&format!("unknown --format `{other}` (table|json)")),
                     }
                 }
                 Err(read_err) => {
@@ -536,7 +732,9 @@ fn main() {
                     // read-only path: open the store only if it already
                     // exists (no create_dir_all side effect)
                     let store = (!no_cache)
-                        .then(|| Store::open_existing(Store::resolve_dir(cache_dir.as_deref())).ok())
+                        .then(|| {
+                            Store::open_existing(Store::resolve_dir(cache_dir.as_deref())).ok()
+                        })
                         .flatten()
                         .unwrap_or_else(|| {
                             fail(&format!(
@@ -556,16 +754,18 @@ fn main() {
                     }
                     match format.as_str() {
                         "json" => print!("{}", coordinator::bench_doc(scale, &[], &ms)),
-                        "table" => {
+                        _ => {
                             let title = format!(
                                 "Results sink: store {} ({}, {})",
                                 store.root().display(),
                                 coordinator::scale_label(scale),
                                 if use_des { "des" } else { "analytic" },
                             );
-                            print!("{}", measurements_table(&title, &ms).to_markdown());
+                            print!(
+                                "{}",
+                                pipefwd::report::measurements_table(&title, &ms).to_markdown()
+                            );
                         }
-                        other => fail(&format!("unknown --format `{other}` (table|json)")),
                     }
                 }
             }
@@ -581,12 +781,19 @@ fn main() {
             let dir = Store::resolve_dir(cache_dir.as_deref());
             let store = Store::open_existing(&dir)
                 .unwrap_or_else(|e| fail(&format!("opening store {}: {e}", dir.display())));
+            let svc =
+                Service::cli(Engine::new(cfg.clone(), 1).with_des(use_des).with_store(store));
             match action {
                 "stats" => {
-                    let stats = store.stats();
+                    let resp = svc
+                        .handle(&ServiceRequest::StoreStats)
+                        .unwrap_or_else(|e| fail(&e.render()));
+                    let ServiceResponse::StoreStats { stats } = resp else {
+                        fail("store stats: unexpected response kind")
+                    };
                     match format.as_str() {
                         "json" => print!("{}", stats.to_json().to_pretty()),
-                        "table" => {
+                        _ => {
                             let schema = coordinator::store::STORE_SCHEMA;
                             let mut t = pipefwd::report::Table::new(
                                 &format!("Store {} ({schema})", dir.display()),
@@ -612,17 +819,15 @@ fn main() {
                                 stats.dedup_ratio(),
                             );
                         }
-                        other => fail(&format!("unknown --format `{other}` (table|json)")),
                     }
                 }
                 "gc" => {
-                    // the reachable set is a pure grid/ladder replay (IR
-                    // transforms only) — same move as `merge`, zero
-                    // simulation
-                    let reachable = coordinator::reachable_keys(&cfg);
-                    let report = store
-                        .gc(&reachable.entries, &reachable.traces, dry_run)
-                        .unwrap_or_else(|e| fail(&format!("store gc: {e}")));
+                    let resp = svc
+                        .handle(&ServiceRequest::StoreGc { dry_run })
+                        .unwrap_or_else(|e| fail(&e.render()));
+                    let ServiceResponse::Gc { report } = resp else {
+                        fail("store gc: unexpected response kind")
+                    };
                     let verb = if dry_run { "would remove" } else { "removed" };
                     let removed_col = if dry_run { "Would remove" } else { "Removed" };
                     let mut t = pipefwd::report::Table::new(
@@ -748,146 +953,4 @@ fn main() {
             std::process::exit(2);
         }
     }
-}
-
-/// Parse the `--experiment` value: `all` or a comma-separated id list.
-fn parse_experiments(s: &str) -> Vec<ExperimentId> {
-    if s.eq_ignore_ascii_case("all") {
-        return ExperimentId::all().to_vec();
-    }
-    s.split(',')
-        .map(|e| {
-            ExperimentId::parse(e.trim())
-                .unwrap_or_else(|| fail(&format!("unknown experiment `{e}` (E1..E7)")))
-        })
-        .collect()
-}
-
-/// Parse `I/N` (1-based) for `--shard`.
-fn parse_shard(s: &str) -> Option<(usize, usize)> {
-    let (i, n) = s.split_once('/')?;
-    let i = i.trim().parse::<usize>().ok()?;
-    let n = n.trim().parse::<usize>().ok()?;
-    (n > 0 && (1..=n).contains(&i)).then_some((i, n))
-}
-
-/// The `report --format table` rendering, shared by the file and store
-/// paths.
-fn measurements_table(
-    title: &str,
-    ms: &[coordinator::Measurement],
-) -> pipefwd::report::Table {
-    let mut t = pipefwd::report::Table::new(
-        title,
-        &[
-            "Benchmark", "Variant", "Scale", "Time (ms)", "Logic (%)", "BRAM", "Max II",
-            "Max BW (MB/s)", "Launches",
-        ],
-    );
-    for m in ms {
-        t.row(vec![
-            m.workload.clone(),
-            m.variant.clone(),
-            m.scale.clone(),
-            pipefwd::report::ms(m.seconds),
-            format!("{:.2}", m.logic_pct),
-            m.brams.to_string(),
-            m.max_ii.to_string(),
-            pipefwd::report::mbps(m.max_bw),
-            m.launches.to_string(),
-        ]);
-    }
-    t
-}
-
-/// `report --diff`: compare two results sinks configuration by
-/// configuration and render a markdown table (readable in a CI job
-/// summary). Returns the number of gate failures: modelled-performance
-/// regressions whose slowdown exceeds `threshold` percent, plus
-/// configurations that vanished from the new sink (silent loss of
-/// coverage — e.g. a variant that started failing validation).
-fn report_diff(old_path: &str, new_path: &str, threshold: f64) -> usize {
-    let load = |path: &str| -> Vec<coordinator::Measurement> {
-        let doc = pipefwd::util::json::read_file(std::path::Path::new(path))
-            .unwrap_or_else(|e| fail(&e));
-        doc.get("measurements")
-            .and_then(|m| m.as_array())
-            .unwrap_or_else(|| fail(&format!("{path}: no measurements array")))
-            .iter()
-            .filter_map(coordinator::Measurement::from_json)
-            .collect()
-    };
-    let old = load(old_path);
-    let new = load(new_path);
-    let mut old_by_key = std::collections::HashMap::new();
-    for m in &old {
-        old_by_key.insert((m.workload.clone(), m.variant.clone(), m.scale.clone()), m);
-    }
-
-    let mut t = pipefwd::report::Table::new(
-        &format!("Modelled-performance diff (threshold {threshold}%)"),
-        &["Benchmark", "Variant", "Scale", "Old (ms)", "New (ms)", "Delta (%)", "Status"],
-    );
-    let mut regressions = 0;
-    let mut added = 0;
-    for m in &new {
-        let key = (m.workload.clone(), m.variant.clone(), m.scale.clone());
-        let Some(o) = old_by_key.get(&key) else {
-            added += 1;
-            continue;
-        };
-        let delta_pct = if o.seconds > 0.0 {
-            (m.seconds / o.seconds - 1.0) * 100.0
-        } else if m.seconds > 0.0 {
-            f64::INFINITY // 0 -> nonzero: unambiguously slower
-        } else {
-            0.0
-        };
-        let status = if delta_pct > threshold {
-            regressions += 1;
-            "REGRESSION"
-        } else if delta_pct < -threshold {
-            "improved"
-        } else {
-            "ok"
-        };
-        t.row(vec![
-            m.workload.clone(),
-            m.variant.clone(),
-            m.scale.clone(),
-            pipefwd::report::ms(o.seconds),
-            pipefwd::report::ms(m.seconds),
-            format!("{delta_pct:+.2}"),
-            status.into(),
-        ]);
-    }
-    // configurations that vanished are a gate failure too: a variant that
-    // silently stopped producing measurements must not pass as "no
-    // regressions"
-    let new_keys: std::collections::HashSet<(String, String, String)> = new
-        .iter()
-        .map(|m| (m.workload.clone(), m.variant.clone(), m.scale.clone()))
-        .collect();
-    let mut removed = 0;
-    for m in &old {
-        if !new_keys.contains(&(m.workload.clone(), m.variant.clone(), m.scale.clone())) {
-            removed += 1;
-            t.row(vec![
-                m.workload.clone(),
-                m.variant.clone(),
-                m.scale.clone(),
-                pipefwd::report::ms(m.seconds),
-                "-".into(),
-                "-".into(),
-                "REMOVED".into(),
-            ]);
-        }
-    }
-    print!("{}", t.to_markdown());
-    println!(
-        "\n{} configuration(s) compared, {regressions} regression(s) > {threshold}%, \
-         {added} new, {removed} removed",
-        t.rows.len() - removed
-    );
-    regressions + removed
 }

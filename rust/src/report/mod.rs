@@ -109,6 +109,198 @@ pub fn pct(frac: f64) -> String {
     format!("{:+.2}", frac * 100.0)
 }
 
+// ---------------------------------------------------------------------------
+// Results-sink rendering + diffing (`pipefwd report`), shared by the
+// CLI and the daemon so both produce identical documents.
+// ---------------------------------------------------------------------------
+
+use crate::coordinator::experiments::Measurement;
+use crate::coordinator::service::counters_fields;
+use crate::util::json;
+
+/// The `report --format table` rendering, shared by the file and store
+/// paths.
+pub fn measurements_table(title: &str, ms_list: &[Measurement]) -> Table {
+    let mut t = Table::new(
+        title,
+        &[
+            "Benchmark",
+            "Variant",
+            "Scale",
+            "Time (ms)",
+            "Logic (%)",
+            "BRAM",
+            "Max II",
+            "Max BW (MB/s)",
+            "Launches",
+        ],
+    );
+    for m in ms_list {
+        t.row(vec![
+            m.workload.clone(),
+            m.variant.clone(),
+            m.scale.clone(),
+            ms(m.seconds),
+            format!("{:.2}", m.logic_pct),
+            m.brams.to_string(),
+            m.max_ii.to_string(),
+            mbps(m.max_bw),
+            m.launches.to_string(),
+        ]);
+    }
+    t
+}
+
+fn load_measurements(path: &str) -> Result<Vec<Measurement>, String> {
+    let doc = json::read_file(Path::new(path))?;
+    Ok(doc
+        .get("measurements")
+        .and_then(|m| m.as_array())
+        .ok_or_else(|| format!("{path}: no measurements array"))?
+        .iter()
+        .filter_map(Measurement::from_json)
+        .collect())
+}
+
+/// `report --diff`: compare two artifacts and render a markdown report.
+/// Returns `(rendered, gate_failures)`.
+///
+/// Two results sinks are compared configuration by configuration: gate
+/// failures are modelled-performance regressions above `threshold`
+/// percent plus configurations that vanished (silent loss of coverage).
+/// Two counters documents — any mix of `pipefwd-counters-v1` and `-v2`
+/// — diff field by field informationally (never a gate failure; fields
+/// absent from a v1 document render as `-`). Mixing the two kinds is an
+/// error: the comparison would be meaningless.
+pub fn sink_diff(
+    old_path: &str,
+    new_path: &str,
+    threshold: f64,
+) -> Result<(String, usize), String> {
+    let old_doc = json::read_file(Path::new(old_path))?;
+    let new_doc = json::read_file(Path::new(new_path))?;
+    match (counters_fields(&old_doc), counters_fields(&new_doc)) {
+        (Some(o), Some(n)) => Ok(counters_diff(old_path, new_path, &o, &n)),
+        (None, None) => bench_sink_diff(old_path, new_path, threshold),
+        _ => Err(format!(
+            "cannot diff {old_path} against {new_path}: one is a counters document, \
+             the other a results sink"
+        )),
+    }
+}
+
+/// Field-by-field counters comparison (v1 and v2 interchangeably).
+fn counters_diff(
+    old_path: &str,
+    new_path: &str,
+    old: &[(&'static str, f64)],
+    new: &[(&'static str, f64)],
+) -> (String, usize) {
+    let old_map: std::collections::HashMap<&str, f64> = old.iter().copied().collect();
+    let new_map: std::collections::HashMap<&str, f64> = new.iter().copied().collect();
+    let mut t = Table::new(
+        &format!("Counters diff: {old_path} vs {new_path}"),
+        &["Counter", "Old", "New", "Delta"],
+    );
+    // canonical field order; the union of both documents
+    for k in crate::coordinator::service::COUNTER_FIELDS {
+        let (o, n) = (old_map.get(k), new_map.get(k));
+        if o.is_none() && n.is_none() {
+            continue;
+        }
+        let show = |v: Option<&f64>| v.map(|x| format!("{x:.0}")).unwrap_or_else(|| "-".into());
+        let delta = match (o, n) {
+            (Some(o), Some(n)) => format!("{:+.0}", n - o),
+            _ => "-".into(),
+        };
+        t.row(vec![k.to_string(), show(o), show(n), delta]);
+    }
+    let mut out = t.to_markdown();
+    out.push_str("\ncounters diff is informational (never a gate failure)\n");
+    (out, 0)
+}
+
+/// The results-sink comparison (the original `report --diff` gate).
+fn bench_sink_diff(
+    old_path: &str,
+    new_path: &str,
+    threshold: f64,
+) -> Result<(String, usize), String> {
+    let old = load_measurements(old_path)?;
+    let new = load_measurements(new_path)?;
+    let mut old_by_key = std::collections::HashMap::new();
+    for m in &old {
+        old_by_key.insert((m.workload.clone(), m.variant.clone(), m.scale.clone()), m);
+    }
+
+    let mut t = Table::new(
+        &format!("Modelled-performance diff (threshold {threshold}%)"),
+        &["Benchmark", "Variant", "Scale", "Old (ms)", "New (ms)", "Delta (%)", "Status"],
+    );
+    let mut regressions = 0;
+    let mut added = 0;
+    for m in &new {
+        let key = (m.workload.clone(), m.variant.clone(), m.scale.clone());
+        let Some(o) = old_by_key.get(&key) else {
+            added += 1;
+            continue;
+        };
+        let delta_pct = if o.seconds > 0.0 {
+            (m.seconds / o.seconds - 1.0) * 100.0
+        } else if m.seconds > 0.0 {
+            f64::INFINITY // 0 -> nonzero: unambiguously slower
+        } else {
+            0.0
+        };
+        let status = if delta_pct > threshold {
+            regressions += 1;
+            "REGRESSION"
+        } else if delta_pct < -threshold {
+            "improved"
+        } else {
+            "ok"
+        };
+        t.row(vec![
+            m.workload.clone(),
+            m.variant.clone(),
+            m.scale.clone(),
+            ms(o.seconds),
+            ms(m.seconds),
+            format!("{delta_pct:+.2}"),
+            status.into(),
+        ]);
+    }
+    // configurations that vanished are a gate failure too: a variant that
+    // silently stopped producing measurements must not pass as "no
+    // regressions"
+    let new_keys: std::collections::HashSet<(String, String, String)> = new
+        .iter()
+        .map(|m| (m.workload.clone(), m.variant.clone(), m.scale.clone()))
+        .collect();
+    let mut removed = 0;
+    for m in &old {
+        if !new_keys.contains(&(m.workload.clone(), m.variant.clone(), m.scale.clone())) {
+            removed += 1;
+            t.row(vec![
+                m.workload.clone(),
+                m.variant.clone(),
+                m.scale.clone(),
+                ms(m.seconds),
+                "-".into(),
+                "-".into(),
+                "REMOVED".into(),
+            ]);
+        }
+    }
+    let mut out = t.to_markdown();
+    out.push_str(&format!(
+        "\n{} configuration(s) compared, {regressions} regression(s) > {threshold}%, \
+         {added} new, {removed} removed\n",
+        t.rows.len() - removed
+    ));
+    Ok((out, regressions + removed))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,5 +334,66 @@ mod tests {
         assert_eq!(pct(0.031), "+3.10");
         assert_eq!(pct(-0.05), "-5.00");
         assert_eq!(pct(0.0), "+0.00");
+    }
+
+    fn tmp(name: &str, text: &str) -> String {
+        let dir = std::env::temp_dir().join(format!("pipefwd-report-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        std::fs::write(&p, text).unwrap();
+        p.to_string_lossy().into_owned()
+    }
+
+    fn sink(seconds: &[(&str, f64)]) -> String {
+        let ms: Vec<String> = seconds
+            .iter()
+            .map(|(v, s)| {
+                format!(
+                    r#"{{"workload": "fw", "variant": "{v}", "scale": "tiny",
+                         "seconds": {s}, "cycles": 1.0, "logic_pct": 1.0, "max_bw": 1.0,
+                         "brams": 1, "max_ii": 1, "launches": 1}}"#
+                )
+            })
+            .collect();
+        format!(r#"{{"schema": "pipefwd-bench-v1", "measurements": [{}]}}"#, ms.join(","))
+    }
+
+    #[test]
+    fn bench_diff_counts_regressions_and_removed_configs() {
+        let old = tmp("diff-old.json", &sink(&[("baseline", 1.0), ("ff(d1)", 1.0)]));
+        // ff(d1) regresses 50%, baseline vanishes
+        let new = tmp("diff-new.json", &sink(&[("ff(d1)", 1.5)]));
+        let (rendered, failures) = sink_diff(&old, &new, 5.0).unwrap();
+        assert_eq!(failures, 2, "{rendered}");
+        assert!(rendered.contains("REGRESSION"));
+        assert!(rendered.contains("REMOVED"));
+        // identical sinks: clean gate
+        let (_, failures) = sink_diff(&old, &old, 5.0).unwrap();
+        assert_eq!(failures, 0);
+    }
+
+    #[test]
+    fn counters_diff_accepts_v1_v2_mix_and_never_gates() {
+        let v1 = tmp(
+            "counters-v1.json",
+            r#"{"schema": "pipefwd-counters-v1", "command": "run", "scale": "tiny",
+                "cache_hits": 3, "store_hits": 0, "simulations": 5, "trace_hits": 2,
+                "trace_runs": 1, "wall_ms": 10}"#,
+        );
+        let v2 = tmp(
+            "counters-v2.json",
+            r#"{"schema": "pipefwd-counters-v2", "command": "run", "scale": "tiny",
+                "cache_hits": 4, "store_hits": 0, "simulations": 0, "trace_hits": 2,
+                "trace_runs": 0, "queue_depth_max": 3, "clients_served": 7,
+                "requests_deduped": 9, "wall_ms": 12}"#,
+        );
+        let (rendered, failures) = sink_diff(&v1, &v2, 5.0).unwrap();
+        assert_eq!(failures, 0);
+        assert!(rendered.contains("clients_served"), "{rendered}");
+        assert!(rendered.contains('-'), "v1-absent fields render as -");
+
+        // mixing a counters doc with a results sink is refused
+        let s = tmp("diff-sink.json", &sink(&[("baseline", 1.0)]));
+        assert!(sink_diff(&v1, &s, 5.0).is_err());
     }
 }

@@ -16,6 +16,12 @@ pub enum Json {
 }
 
 impl Json {
+    /// Object construction without the `.into()` noise — the wire-protocol
+    /// codec (`coordinator::service`) builds many small documents.
+    pub fn obj(fields: Vec<(&str, Json)>) -> Json {
+        Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
     /// Object field lookup (first match).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
@@ -44,6 +50,16 @@ impl Json {
     pub fn as_usize(&self) -> Option<usize> {
         match self {
             Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= 9.0e15 => Some(*n as usize),
+            _ => None,
+        }
+    }
+
+    /// Non-negative integral number as `u64` (the engine's tier counters
+    /// travel through counters/stats documents); same no-truncation
+    /// contract as [`Json::as_usize`].
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= 9.0e15 => Some(*n as u64),
             _ => None,
         }
     }
@@ -411,6 +427,23 @@ impl Parser<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn obj_builder_matches_literal_form() {
+        let a = Json::obj(vec![("k", Json::Num(1.0)), ("s", Json::Str("x".into()))]);
+        let b = Json::Obj(vec![("k".into(), Json::Num(1.0)), ("s".into(), Json::Str("x".into()))]);
+        assert_eq!(a, b);
+        assert_eq!(a.to_compact(), "{\"k\":1,\"s\":\"x\"}");
+    }
+
+    #[test]
+    fn as_u64_accepts_only_nonnegative_integers() {
+        assert_eq!(Json::Num(7.0).as_u64(), Some(7));
+        assert_eq!(Json::Num(0.0).as_u64(), Some(0));
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Num(1.5).as_u64(), None);
+        assert_eq!(Json::Str("7".into()).as_u64(), None);
+    }
 
     #[test]
     fn roundtrip_document() {

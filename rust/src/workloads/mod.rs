@@ -45,7 +45,7 @@ pub const VALIDATION_PREFIX: &str = "validation: ";
 
 /// Is this stringified cell error a validation-class failure?
 pub fn is_validation_error(e: &str) -> bool {
-    e.starts_with(VALIDATION_PREFIX)
+    MeasureError::parse(e).class == ErrorClass::Validation
 }
 
 /// Prefix for *feasibility*-class failures (the variant cannot be built
@@ -57,7 +57,89 @@ pub const INFEASIBLE_PREFIX: &str = "infeasible: ";
 
 /// Is this stringified cell error a feasibility-class failure?
 pub fn is_infeasible_error(e: &str) -> bool {
-    e.starts_with(INFEASIBLE_PREFIX)
+    MeasureError::parse(e).class == ErrorClass::Infeasible
+}
+
+/// The error classes a measurement can fail with. `Validation` and
+/// `Infeasible` describe the *configuration* (searches may skip them);
+/// `Other` is a real defect and must propagate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorClass {
+    Validation,
+    Infeasible,
+    Other,
+}
+
+impl ErrorClass {
+    /// Wire-protocol label (`pipefwd-api-v1` error documents).
+    pub fn label(self) -> &'static str {
+        match self {
+            ErrorClass::Validation => "validation",
+            ErrorClass::Infeasible => "infeasible",
+            ErrorClass::Other => "error",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ErrorClass> {
+        match s {
+            "validation" => Some(ErrorClass::Validation),
+            "infeasible" => Some(ErrorClass::Infeasible),
+            "error" => Some(ErrorClass::Other),
+            _ => None,
+        }
+    }
+}
+
+/// A measurement failure as a typed (class, message) pair — the form the
+/// `pipefwd-api-v1` wire protocol transports. The persistent store keeps
+/// the historical string form ([`MeasureError::render`]: class prefix +
+/// message), so promoting the class to a field changes no store bytes and
+/// needs no schema bump; [`MeasureError::parse`] recovers the class from
+/// any stored string, treating unprefixed messages as [`ErrorClass::Other`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MeasureError {
+    pub class: ErrorClass,
+    pub msg: String,
+}
+
+impl MeasureError {
+    /// Classify a stringified cell error (the store/engine form).
+    pub fn parse(e: &str) -> MeasureError {
+        if let Some(m) = e.strip_prefix(VALIDATION_PREFIX) {
+            MeasureError { class: ErrorClass::Validation, msg: m.to_string() }
+        } else if let Some(m) = e.strip_prefix(INFEASIBLE_PREFIX) {
+            MeasureError { class: ErrorClass::Infeasible, msg: m.to_string() }
+        } else {
+            MeasureError { class: ErrorClass::Other, msg: e.to_string() }
+        }
+    }
+
+    /// The exact store/engine string form: class prefix + message. For
+    /// every parsed error, `render(parse(s)) == s` — the byte-stability
+    /// the no-schema-bump promise rests on.
+    pub fn render(&self) -> String {
+        match self.class {
+            ErrorClass::Validation => format!("{VALIDATION_PREFIX}{}", self.msg),
+            ErrorClass::Infeasible => format!("{INFEASIBLE_PREFIX}{}", self.msg),
+            ErrorClass::Other => self.msg.clone(),
+        }
+    }
+
+    /// The `pipefwd-api-v1` error document: `{"class": ..., "msg": ...}`.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("class".into(), Json::Str(self.class.label().into())),
+            ("msg".into(), Json::Str(self.msg.clone())),
+        ])
+    }
+
+    /// Inverse of [`MeasureError::to_json`].
+    pub fn from_json(v: &Json) -> Option<MeasureError> {
+        Some(MeasureError {
+            class: ErrorClass::parse(v.get("class")?.as_str()?)?,
+            msg: v.get("msg")?.as_str()?.to_string(),
+        })
+    }
 }
 
 /// Dataset scale: `Tiny` matches the AOT artifact shapes (PJRT golden
@@ -566,6 +648,36 @@ pub fn by_name(name: &str) -> Option<Box<dyn Workload>> {
 mod tests {
     use super::*;
     use crate::sim::device::DeviceConfig;
+
+    /// The typed error form and the stored string form are the same bytes
+    /// in both directions — the store keeps v4's prefixed strings, so no
+    /// schema bump rides along with the `MeasureError` promotion.
+    #[test]
+    fn measure_error_roundtrips_store_strings() {
+        for (s, class, msg) in [
+            ("validation: nw: m[9] = 1, want 2", ErrorClass::Validation, "nw: m[9] = 1, want 2"),
+            ("infeasible: replication unsupported", ErrorClass::Infeasible, "replication unsupported"),
+            ("pipe overflow in fw_mem", ErrorClass::Other, "pipe overflow in fw_mem"),
+        ] {
+            let e = MeasureError::parse(s);
+            assert_eq!(e.class, class);
+            assert_eq!(e.msg, msg);
+            assert_eq!(e.render(), s, "store bytes must be unchanged");
+            assert_eq!(MeasureError::from_json(&e.to_json()), Some(e));
+        }
+        assert!(is_validation_error("validation: x"));
+        assert!(!is_validation_error("infeasible: x"));
+        assert!(is_infeasible_error("infeasible: x"));
+        assert!(!is_infeasible_error("plain defect"));
+    }
+
+    #[test]
+    fn error_class_labels_roundtrip() {
+        for c in [ErrorClass::Validation, ErrorClass::Infeasible, ErrorClass::Other] {
+            assert_eq!(ErrorClass::parse(c.label()), Some(c));
+        }
+        assert_eq!(ErrorClass::parse("warning"), None);
+    }
 
     #[test]
     fn depth_invariance_analysis_classifies_the_suite() {

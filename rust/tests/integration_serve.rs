@@ -1,0 +1,303 @@
+//! PR-6 serve integration: the measurement daemon must (a) answer N
+//! concurrent clients requesting overlapping grids at the cost of ONE
+//! cold grid — the engine's claim/fulfil memo is the dedup layer, the
+//! transport adds nothing — with every client's reassembled sink
+//! byte-identical to the serial CLI path; (b) survive malformed,
+//! truncated, and oversized requests without losing the accept loop;
+//! (c) treat a mid-stream client disconnect as a failed response write,
+//! not an abandoned claim; and (d) exchange store records faithfully
+//! over the wire.
+
+use pipefwd::coordinator::{
+    grid_for, net, service, Cell, Engine, ExperimentId, Service, ServiceRequest, Store,
+};
+use pipefwd::sim::device::DeviceConfig;
+use pipefwd::transform::Variant;
+use pipefwd::workloads::Scale;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn spawn_daemon(engine: Engine, workers: usize) -> (Arc<Service>, net::Server) {
+    let svc = Arc::new(Service::daemon(engine));
+    let server = net::Server::spawn(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        net::ServerConfig { workers, queue_cap: 16 },
+    )
+    .expect("binding a loopback port");
+    (svc, server)
+}
+
+/// One raw HTTP exchange: write the payload verbatim, half-close, read
+/// the response to EOF. This is how the wire-abuse tests speak to the
+/// daemon without the client layer's well-formedness guarantees.
+fn raw_exchange(addr: &str, payload: &[u8]) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(payload).unwrap();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut out = String::new();
+    let _ = s.read_to_string(&mut out);
+    out
+}
+
+fn http_status(response: &str) -> u16 {
+    response
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("no HTTP status in response: {response:?}"))
+}
+
+/// Acceptance: three concurrent clients requesting the same E2 grid cost
+/// the server exactly one cold grid (same `simulations`/`trace_runs` as
+/// one serial reference run), and every client's sink is byte-identical
+/// to the serial `bench_json`.
+#[test]
+fn three_concurrent_clients_cost_one_cold_grid() {
+    let exps = vec![ExperimentId::E2];
+    let (svc, server) = spawn_daemon(Engine::new(DeviceConfig::pac_a10(), 2), 4);
+    let addr = server.addr().to_string();
+
+    let handles: Vec<_> = (0..3)
+        .map(|_| {
+            let addr = addr.clone();
+            let exps = exps.clone();
+            std::thread::spawn(move || {
+                net::request(
+                    &addr,
+                    &ServiceRequest::Run { experiments: exps, scale: Scale::Tiny, shard: None },
+                )
+                .expect("daemon run request")
+            })
+        })
+        .collect();
+    let responses: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    // one cold serial run of the same grid is the cost ceiling
+    let reference = Engine::new(DeviceConfig::pac_a10(), 1);
+    let _ = reference.run_cells(&grid_for(&exps, Scale::Tiny));
+
+    assert_eq!(
+        svc.engine().simulations(),
+        reference.simulations(),
+        "N overlapping clients must cost one cold grid, not N"
+    );
+    assert_eq!(svc.engine().trace_runs(), reference.trace_runs());
+    assert_eq!(svc.clients_served(), 3);
+
+    let expect = reference.bench_json(Scale::Tiny, &exps);
+    for items in &responses {
+        assert_eq!(
+            service::cells_to_bench(items, Scale::Tiny, &exps).unwrap(),
+            expect,
+            "every client's reassembled sink must match the serial path byte-for-byte"
+        );
+    }
+
+    // the live stats endpoint reflects the same counters
+    let stats = net::get_stats(&addr).unwrap();
+    assert_eq!(stats.get("schema").and_then(|s| s.as_str()), Some("pipefwd-api-v1"));
+    let counters = stats.get("counters").expect("stats counters");
+    assert_eq!(
+        counters.get("schema").and_then(|s| s.as_str()),
+        Some("pipefwd-counters-v2")
+    );
+    assert_eq!(
+        counters.get("simulations").and_then(|v| v.as_f64()),
+        Some(reference.simulations() as f64)
+    );
+    // the stats GET itself is the 4th connection
+    assert_eq!(counters.get("clients_served").and_then(|v| v.as_f64()), Some(4.0));
+
+    server.shutdown();
+}
+
+/// The daemon's sweep answers are byte-identical to the serial sweep.
+#[test]
+fn daemon_sweep_matches_serial_sink_bytes() {
+    let (_svc, server) = spawn_daemon(Engine::new(DeviceConfig::pac_a10(), 2), 2);
+    let addr = server.addr().to_string();
+
+    let benches = vec!["fw".to_string(), "hotspot".to_string()];
+    let depths = vec![1usize, 100];
+    let items = net::request(
+        &addr,
+        &ServiceRequest::Sweep { benches: benches.clone(), depths: depths.clone(), scale: Scale::Tiny },
+    )
+    .unwrap();
+    let bench = service::cells_to_bench(&items, Scale::Tiny, &[]).unwrap();
+
+    let reference = Engine::new(DeviceConfig::pac_a10(), 1);
+    let cells: Vec<Cell> = benches
+        .iter()
+        .flat_map(|b| {
+            depths
+                .iter()
+                .map(|d| Cell::new(b, Variant::FeedForward { depth: *d }, Scale::Tiny))
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    let _ = reference.run_cells(&cells);
+    assert_eq!(bench, reference.bench_json(Scale::Tiny, &[]));
+
+    server.shutdown();
+}
+
+/// Wire abuse: malformed heads, missing/oversized/truncated bodies, bad
+/// JSON, and wrong schemas are each rejected with a structured error —
+/// and the accept loop survives all of them, proven by a well-formed
+/// request afterwards.
+#[test]
+fn malformed_requests_are_rejected_without_killing_the_accept_loop() {
+    let (svc, server) = spawn_daemon(Engine::new(DeviceConfig::pac_a10(), 1), 2);
+    let addr = server.addr().to_string();
+
+    // not HTTP at all
+    let r = raw_exchange(&addr, b"GARBAGE\r\n\r\n");
+    assert_eq!(http_status(&r), 405, "unknown method: {r:?}");
+
+    // unknown path
+    let r = raw_exchange(&addr, b"GET /nope HTTP/1.1\r\n\r\n");
+    assert_eq!(http_status(&r), 404);
+    assert!(r.contains("unknown path"), "{r:?}");
+
+    // POST without Content-Length
+    let r = raw_exchange(&addr, b"POST /api/v1 HTTP/1.1\r\n\r\n");
+    assert_eq!(http_status(&r), 411);
+
+    // oversized body, rejected before allocation
+    let r = raw_exchange(
+        &addr,
+        b"POST /api/v1 HTTP/1.1\r\nContent-Length: 999999999999\r\n\r\n",
+    );
+    assert_eq!(http_status(&r), 413);
+    assert!(r.contains("exceeds"), "{r:?}");
+
+    // truncated body: promises 100 bytes, delivers 2
+    let r = raw_exchange(&addr, b"POST /api/v1 HTTP/1.1\r\nContent-Length: 100\r\n\r\n{}");
+    assert_eq!(http_status(&r), 400);
+    assert!(r.contains("truncated body"), "{r:?}");
+
+    // body that is not JSON
+    let r = raw_exchange(&addr, b"POST /api/v1 HTTP/1.1\r\nContent-Length: 8\r\n\r\nnot json");
+    assert_eq!(http_status(&r), 400);
+
+    // valid JSON, wrong schema
+    let body = br#"{"schema": "pipefwd-api-v0", "type": "stats"}"#;
+    let head = format!("POST /api/v1 HTTP/1.1\r\nContent-Length: {}\r\n\r\n", body.len());
+    let mut payload = head.into_bytes();
+    payload.extend_from_slice(body);
+    let r = raw_exchange(&addr, &payload);
+    assert_eq!(http_status(&r), 400);
+    assert!(r.contains("unsupported schema"), "{r:?}");
+
+    // the daemon is still alive and serving
+    let items = net::request(
+        &addr,
+        &ServiceRequest::Measure {
+            workload: "fw".into(),
+            variant: Variant::FeedForward { depth: 1 },
+            scale: Scale::Tiny,
+        },
+    )
+    .expect("daemon must survive wire abuse");
+    assert_eq!(items.len(), 2, "head line + one cell");
+    assert_eq!(svc.engine().simulations(), 1);
+
+    server.shutdown();
+}
+
+/// A client that sends a valid request and vanishes without reading the
+/// response must not poison the claim: the worker computes to completion
+/// and fulfils the memo, so the next client asking for the same cell
+/// costs zero additional simulations.
+#[test]
+fn mid_stream_disconnect_does_not_abandon_the_claim() {
+    let (svc, server) = spawn_daemon(Engine::new(DeviceConfig::pac_a10(), 2), 2);
+    let addr = server.addr().to_string();
+
+    let req = ServiceRequest::Measure {
+        workload: "fw".into(),
+        variant: Variant::FeedForward { depth: 1 },
+        scale: Scale::Tiny,
+    };
+    let body = service::encode_request(&req).to_compact();
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let head = format!(
+            "POST /api/v1 HTTP/1.1\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            body.len()
+        );
+        s.write_all(head.as_bytes()).unwrap();
+        s.write_all(body.as_bytes()).unwrap();
+        // vanish without reading a byte of the response
+    }
+
+    let items = net::request(&addr, &req).expect("second client");
+    assert_eq!(items.len(), 2);
+    assert_eq!(
+        items[1].get("status").and_then(|s| s.as_str()),
+        Some("ok"),
+        "the surviving client gets the real measurement"
+    );
+    assert_eq!(
+        svc.engine().simulations(),
+        1,
+        "whichever request computed, the other was fulfilled from its claim"
+    );
+
+    server.shutdown();
+}
+
+/// Store exchange over the wire: a store-backed daemon's `store_pull`
+/// records import cleanly into a fresh local store, and `store_push`
+/// travels the other way.
+#[test]
+fn store_records_roundtrip_between_daemon_and_client() {
+    let base = std::env::temp_dir().join(format!("pipefwd-serve-test-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    let server_dir: PathBuf = base.join("server");
+    let client_dir: PathBuf = base.join("client");
+
+    let engine = Engine::new(DeviceConfig::pac_a10(), 1)
+        .with_store(Store::open(&server_dir).unwrap());
+    let (svc, server) = spawn_daemon(engine, 2);
+    let addr = server.addr().to_string();
+
+    // populate the daemon's store with one measured cell
+    let req = ServiceRequest::Measure {
+        workload: "fw".into(),
+        variant: Variant::FeedForward { depth: 1 },
+        scale: Scale::Tiny,
+    };
+    net::request(&addr, &req).unwrap();
+
+    // pull: every tier record arrives typed and imports cleanly
+    let items = net::request(&addr, &ServiceRequest::StorePull).unwrap();
+    assert!(!items.is_empty(), "a measured cell must export records");
+    let records: Vec<_> = items
+        .iter()
+        .map(|l| service::decode_record(l).unwrap())
+        .collect();
+    let local = Store::open(&client_dir).unwrap();
+    let imported = local.import_records(&records).unwrap();
+    assert_eq!(imported, records.len());
+    // a warm engine over the pulled store answers without simulating
+    let warm = Engine::new(DeviceConfig::pac_a10(), 1)
+        .with_store(Store::open_existing(&client_dir).unwrap());
+    let w = pipefwd::coordinator::resolve_workload("fw").unwrap();
+    warm.measure(w.as_ref(), Variant::FeedForward { depth: 1 }, Scale::Tiny).unwrap();
+    assert_eq!(warm.simulations(), 0, "pulled records must answer a warm run");
+
+    // push: the same records go back up (all duplicates → zero imported,
+    // and the daemon's store is unchanged)
+    let before = svc.engine().store().unwrap().export_records().len();
+    let items = net::request(&addr, &ServiceRequest::StorePush { records }).unwrap();
+    assert_eq!(items[0].get("count").and_then(|v| v.as_usize()), Some(0));
+    assert_eq!(svc.engine().store().unwrap().export_records().len(), before);
+
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&base);
+}
