@@ -48,7 +48,12 @@ fn main() {
                     std::thread::spawn(move || {
                         net::request(
                             &addr,
-                            &ServiceRequest::Run { experiments: exps, scale, shard: None },
+                            &ServiceRequest::Run {
+                                experiments: exps,
+                                scale,
+                                shard: None,
+                                device: None,
+                            },
                         )
                         .expect("daemon answers")
                     })

@@ -45,10 +45,39 @@
 //!
 //! Both tiers persist in the attached [`Store`] (measurement entries +
 //! trace entries whose per-launch profiles live in a content-addressed
-//! pool, schema v4) and are counted separately:
+//! pool) and are counted separately:
 //! [`Engine::trace_runs`] (interpreter executions) and
 //! [`Engine::trace_hits`] (trace-tier answers) next to
 //! [`Engine::store_hits`] / [`Engine::simulations`].
+//!
+//! # The device axis and the key shape
+//!
+//! An engine is bound to exactly one device profile
+//! (`DeviceConfig::by_name` / the CLI `--device` flag); `--device all`
+//! fans out one engine per registry profile and stitches their E8
+//! portability rows together with [`cross_device_table`].
+//! The two tiers split cleanly across devices:
+//!
+//! * **Measurement keys** ([`content_key`]) are per-device. The signature
+//!   embeds the frozen `Debug` of the 32 classic `DeviceConfig` fields
+//!   and, for every device *except* `arria10`, an extra
+//!   `device=<name>` line carrying the registry name (which also stands
+//!   in for the device's `MemModel` calibration). `arria10` omits the
+//!   line so its keys — and therefore every store record written before
+//!   the device zoo existed (schema <= v4, accepted by the v5 store) —
+//!   hash identically to today's.
+//! * **Trace keys** ([`trace_key`]) carry no device at all: the
+//!   functional interpreter never consults a `DeviceConfig`, so all
+//!   registry profiles share one trace per (workload, scale) — a full
+//!   cross-device sweep pays the interpreter cost once, then replays the
+//!   model per device. The depth-invariance vouch contract is unchanged:
+//!   pipe depths are masked to 1 in the trace key wherever
+//!   [`unit_depth_invariant`] proves (or the workload's
+//!   `benign_cross_kernel_races` vouch asserts) the interpreter's
+//!   observable trace cannot depend on channel capacity; depth-sensitive
+//!   units (NW) keep their real depths. Vouches are claims about the
+//!   *interpreter*, not the model — modelled time may (and on HBM-class
+//!   profiles does) depend on depth even for vouched workloads.
 
 use super::experiments::{self, Measurement, DEPTHS};
 use super::scale_label;
@@ -97,6 +126,11 @@ pub enum ExperimentId {
     E6,
     /// Headline speedup claims.
     E7,
+    /// Cross-device portability grid: the pipe win and best channel depth
+    /// per device (one device per engine; `--device all` stitches the
+    /// registry's rows together via [`cross_device_table`]). Its cells
+    /// are a subset of E4's, so it adds no new reachable store keys.
+    E8,
 }
 
 impl ExperimentId {
@@ -109,11 +143,12 @@ impl ExperimentId {
             "E5" => Some(ExperimentId::E5),
             "E6" => Some(ExperimentId::E6),
             "E7" => Some(ExperimentId::E7),
+            "E8" => Some(ExperimentId::E8),
             _ => None,
         }
     }
 
-    pub fn all() -> [ExperimentId; 7] {
+    pub fn all() -> [ExperimentId; 8] {
         [
             ExperimentId::E1,
             ExperimentId::E2,
@@ -122,6 +157,7 @@ impl ExperimentId {
             ExperimentId::E5,
             ExperimentId::E6,
             ExperimentId::E7,
+            ExperimentId::E8,
         ]
     }
 
@@ -134,6 +170,7 @@ impl ExperimentId {
             ExperimentId::E5 => "E5",
             ExperimentId::E6 => "E6",
             ExperimentId::E7 => "E7",
+            ExperimentId::E8 => "E8",
         }
     }
 }
@@ -275,6 +312,18 @@ pub fn grid(exp: ExperimentId, scale: Scale) -> Vec<Cell> {
             }
         }
         ExperimentId::E6 => {} // Table 1 is static characterisation
+        ExperimentId::E8 => {
+            // Strict subset of E4's grid: the portability table only needs
+            // the baseline plus the feed-forward depth ladder per trio
+            // benchmark, so running E8 after E4 costs zero new simulations
+            // and `gc` reachability gains no new keys.
+            for name in SWEEP_TRIO {
+                cells.push(Cell::new(name, Variant::Baseline, scale));
+                for d in DEPTHS {
+                    cells.push(Cell::new(name, Variant::FeedForward { depth: d }, scale));
+                }
+            }
+        }
     }
     cells
 }
@@ -289,6 +338,15 @@ pub fn grid(exp: ExperimentId, scale: Scale) -> Vec<Cell> {
 /// Hashed with FNV-1a (not `DefaultHasher`) because keys persist on disk
 /// across processes and toolchains; any change to this format requires a
 /// `store::STORE_SCHEMA` bump.
+///
+/// The device axis rides on a dedicated `device=<name>` line that is
+/// **omitted for `arria10`**: the default device's signatures are byte
+/// for byte what they were before the device zoo, so every record in
+/// every pre-existing store stays a warm hit. Non-default devices get
+/// distinct keys via the name line even where their 32 classic `Debug`
+/// fields happen to match, because the name also keys the `MemModel`
+/// calibration (deliberately excluded from the frozen `Debug` — see
+/// `sim::device`).
 pub fn content_signature(
     workload: &str,
     app: &crate::workloads::App,
@@ -303,6 +361,9 @@ pub fn content_signature(
     sig.push('\n');
     sig.push_str(&format!("{cfg:?}"));
     sig.push('\n');
+    if cfg.name != "arria10" {
+        sig.push_str(&format!("device={}\n", cfg.name));
+    }
     sig.push_str(&format!(
         "profile={} des={use_des}\n",
         ExecOptions::default().profile
@@ -907,6 +968,7 @@ impl Engine {
             ExperimentId::E5 => vec![self.micro_family(scale)],
             ExperimentId::E6 => vec![experiments::table1(scale)],
             ExperimentId::E7 => vec![self.headline_table(scale)],
+            ExperimentId::E8 => vec![self.portability(scale)],
         }
     }
 
@@ -1219,6 +1281,49 @@ impl Engine {
         t
     }
 
+    /// E8: the single-device slice of the portability grid — baseline vs
+    /// best feed-forward pipe design on *this* engine's device, with the
+    /// winning channel depth spelled out in the variant label. The depth
+    /// column is the point of the experiment: on `arria10` the fill cost
+    /// is zero so every depth ties and the sweep keeps depth 1, while on
+    /// `stratix10-hbm` deep channels amortise the 24-cycle fill and the
+    /// deepest depth wins. Stitch several engines' slices into one table
+    /// with [`cross_device_table`].
+    pub fn portability(&self, scale: Scale) -> Table {
+        let mut t = Table::new(
+            &format!("E8: pipe-win portability ({})", self.cfg.name),
+            &["Benchmark", "Baseline (ms)", "Best FF", "FF (ms)", "Pipe win"],
+        );
+        for name in SWEEP_TRIO {
+            t.row(self.portability_cells(name, scale));
+        }
+        t
+    }
+
+    /// One benchmark's portability row, minus any device column: label,
+    /// baseline ms, winning feed-forward variant, its ms, and the win.
+    fn portability_cells(&self, name: &str, scale: Scale) -> Vec<String> {
+        let Some(w) = resolve_workload(name) else {
+            return vec![name.to_string(), "unknown".into(), "-".into(), "-".into(), "-".into()];
+        };
+        let base = match self.measure(w.as_ref(), Variant::Baseline, scale) {
+            Ok(m) => m,
+            Err(e) => {
+                return vec![name.to_string(), format!("n/a ({e})"), "-".into(), "-".into(), "-".into()]
+            }
+        };
+        match self.best_ff(w.as_ref(), scale) {
+            Ok(ff) => vec![
+                name.to_string(),
+                ms(base.seconds),
+                ff.variant.clone(),
+                ms(ff.seconds),
+                fx(base.seconds / ff.seconds),
+            ],
+            Err(e) => vec![name.to_string(), ms(base.seconds), format!("n/a ({e})"), "-".into(), "-".into()],
+        }
+    }
+
     // -- structured results sink --------------------------------------------
 
     /// Every successful measurement in canonical order (workload, variant,
@@ -1313,6 +1418,29 @@ pub fn merge_bench_json(
     }
     experiments::canonical_sort(&mut ms);
     Ok(bench_doc(scale, exps, &ms))
+}
+
+/// Stitch one E8 portability slice per engine into a single cross-device
+/// comparison table: one row per (benchmark, device), benchmark-major so
+/// the devices of one workload read as a block. This is the `--device all`
+/// output — the repo's answer to "does the pipe win travel?". Each engine
+/// carries its own device config, store, and memo cache; the trace tier is
+/// device-free, so a multi-engine sweep sharing a store directory pays the
+/// interpreter once per (workload, scale) no matter how many devices run.
+pub fn cross_device_table(engines: &[&Engine], scale: Scale) -> Table {
+    let mut t = Table::new(
+        "E8: cross-device pipe-win portability",
+        &["Benchmark", "Device", "Baseline (ms)", "Best FF", "FF (ms)", "Pipe win"],
+    );
+    for name in SWEEP_TRIO {
+        for e in engines {
+            let cells = e.portability_cells(name, scale);
+            let mut row = vec![cells[0].clone(), e.cfg.name.to_string()];
+            row.extend(cells.into_iter().skip(1));
+            t.row(row);
+        }
+    }
+    t
 }
 
 #[cfg(test)]
@@ -1590,5 +1718,77 @@ mod tests {
         // NW opts out of replication; the engine reports, not panics.
         let r = e.measure(w.as_ref(), Variant::MxCx { parts: 2, depth: 1 }, Scale::Tiny);
         assert!(r.is_err());
+    }
+
+    /// The store-compat contract: the default device's signature is byte
+    /// for byte the pre-zoo signature (no `device=` line), so every
+    /// record written before the device axis existed stays a warm hit.
+    /// Every other profile gets its name on a dedicated line.
+    #[test]
+    fn arria10_signature_has_no_device_line_but_others_do() {
+        let w = by_name("fw").unwrap();
+        let app = w.build(Variant::FeedForward { depth: 1 }).unwrap();
+        let a10 = content_signature("fw", &app, Scale::Tiny, &DeviceConfig::pac_a10(), false);
+        assert!(!a10.contains("device="), "default device must keep pre-zoo key bytes");
+        let hbm =
+            content_signature("fw", &app, Scale::Tiny, &DeviceConfig::stratix10_hbm(), false);
+        assert!(hbm.contains("device=stratix10-hbm\n"));
+    }
+
+    /// Devices separate at the measurement tier but share the trace tier:
+    /// a cross-device sweep re-estimates per device yet pays the
+    /// interpreter exactly once per (workload, scale).
+    #[test]
+    fn content_keys_differ_across_devices_but_trace_keys_do_not() {
+        let w = by_name("fw").unwrap();
+        let app = w.build(Variant::FeedForward { depth: 1 }).unwrap();
+        let mut keys = vec![];
+        for cfg in crate::sim::device::DeviceRegistry::all() {
+            keys.push(content_key("fw", &app, Scale::Tiny, &cfg, false));
+        }
+        let distinct: std::collections::HashSet<u64> = keys.iter().copied().collect();
+        assert_eq!(distinct.len(), keys.len(), "every device needs its own measurement key");
+        // the trace address never mentions the device
+        assert_eq!(
+            trace_key("fw", true, &app, Scale::Tiny),
+            trace_key("fw", true, &app, Scale::Tiny)
+        );
+    }
+
+    /// The acceptance-criterion divergence, provable from the model: on
+    /// arria10 the channel fill cost is zero, so every feed-forward depth
+    /// estimates identical seconds and the strict `<` sweep keeps depth 1;
+    /// on stratix10-hbm deep channels amortise the 24-cycle fill, so the
+    /// deepest depth strictly wins. The best pipe depth is a property of
+    /// the device, not the kernel — the point of the portability grid.
+    #[test]
+    fn best_depth_diverges_between_arria10_and_hbm() {
+        let a10 = Engine::serial(DeviceConfig::pac_a10());
+        let hbm = Engine::serial(DeviceConfig::stratix10_hbm());
+        let w = by_name("fw").unwrap();
+        let d = |e: &Engine, depth| {
+            e.measure(w.as_ref(), Variant::FeedForward { depth }, Scale::Tiny).unwrap().seconds
+        };
+        assert_eq!(d(&a10, 1), d(&a10, 1000), "identity fill: depth cannot matter on arria10");
+        assert!(d(&hbm, 1000) < d(&hbm, 1), "HBM fill latency must reward deep channels");
+        assert_eq!(a10.best_ff(w.as_ref(), Scale::Tiny).unwrap().variant, "ff(d1)");
+        assert_eq!(hbm.best_ff(w.as_ref(), Scale::Tiny).unwrap().variant, "ff(d1000)");
+    }
+
+    /// `--device all` output shape: benchmark-major rows, one per
+    /// (benchmark, device), with the device column spelling out whose
+    /// numbers each row carries.
+    #[test]
+    fn cross_device_table_stitches_one_row_per_device() {
+        let engines = vec![
+            Engine::serial(DeviceConfig::pac_a10()),
+            Engine::serial(DeviceConfig::stratix10_hbm()),
+        ];
+        let refs: Vec<&Engine> = engines.iter().collect();
+        let t = cross_device_table(&refs, Scale::Tiny);
+        assert_eq!(t.rows.len(), SWEEP_TRIO.len() * engines.len());
+        assert_eq!(t.rows[0][0], t.rows[1][0], "devices of one benchmark read as a block");
+        assert_eq!(t.rows[0][1], "arria10");
+        assert_eq!(t.rows[1][1], "stratix10-hbm");
     }
 }

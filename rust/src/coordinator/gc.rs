@@ -24,10 +24,19 @@
 //! fans its keys out across scales. Keys outside this set — e.g. a
 //! custom `sweep --depths 7` probe — are deleted by `store gc`; rerunning
 //! that sweep simply re-simulates and re-persists them.
+//!
+//! **The device axis (PR 7):** measurement keys are per device, so
+//! reachability fans each app across every [`DeviceRegistry`] profile
+//! *plus* the caller's config (normally one of the four — the union is a
+//! no-op then, but a daemon serving a custom-calibrated config must not
+//! have its own records collected). Trace keys are device-free and
+//! computed once per (workload, scale) regardless of how many devices are
+//! in play — the same sharing that makes a `--device all` sweep pay the
+//! interpreter once.
 
 use super::engine::{content_key, grid_for, resolve_workload, trace_key, ExperimentId};
 use super::tune::{TuneConfig, DEPTH_LADDER, PART_LADDER};
-use crate::sim::device::DeviceConfig;
+use crate::sim::device::{DeviceConfig, DeviceRegistry};
 use crate::workloads::micro::MicroSpec;
 use crate::workloads::{suite, App, Scale, Workload};
 use std::collections::HashSet;
@@ -44,11 +53,14 @@ pub struct Reachable {
 }
 
 impl Reachable {
-    /// Add every key one built app can be asked under: measurement keys
-    /// for both estimators and the trace key, at one scale.
-    fn add(&mut self, workload: &str, benign: bool, app: &App, scale: Scale, cfg: &DeviceConfig) {
-        self.entries.insert(content_key(workload, app, scale, cfg, false));
-        self.entries.insert(content_key(workload, app, scale, cfg, true));
+    /// Add every key one built app can be asked under at one scale:
+    /// measurement keys for both estimators on every device in `cfgs`,
+    /// plus the single device-free trace key.
+    fn add(&mut self, workload: &str, benign: bool, app: &App, scale: Scale, cfgs: &[DeviceConfig]) {
+        for cfg in cfgs {
+            self.entries.insert(content_key(workload, app, scale, cfg, false));
+            self.entries.insert(content_key(workload, app, scale, cfg, true));
+        }
         self.traces.insert(trace_key(workload, benign, app, scale));
     }
 }
@@ -66,10 +78,16 @@ fn registry_names() -> Vec<String> {
 }
 
 /// Compute the reachable key sets for the current experiment grids and
-/// tuner configuration space under `cfg`. Pure IR work — builds every
-/// unique app exactly once and never touches a dataset or simulator.
+/// tuner configuration space. Pure IR work — builds every unique app
+/// exactly once and never touches a dataset or simulator. Entry keys fan
+/// across the whole device registry ∪ `cfg` (a `--device` flag away);
+/// trace keys are device-free and added once.
 pub fn reachable_keys(cfg: &DeviceConfig) -> Reachable {
     let mut r = Reachable::default();
+    let mut cfgs = DeviceRegistry::all();
+    if !cfgs.iter().any(|c| c.name == cfg.name) {
+        cfgs.push(cfg.clone());
+    }
 
     // 1. The experiment grids, exactly like `merge` replays them. The
     //    grid's cell list is identical at every scale (only the cell's
@@ -78,7 +96,7 @@ pub fn reachable_keys(cfg: &DeviceConfig) -> Reachable {
         let Some(w) = resolve_workload(&cell.workload) else { continue };
         let Ok(app) = w.build(cell.variant) else { continue };
         for scale in ALL_SCALES {
-            r.add(&cell.workload, w.benign_cross_kernel_races(), &app, scale, cfg);
+            r.add(&cell.workload, w.benign_cross_kernel_races(), &app, scale, &cfgs);
         }
     }
 
@@ -94,7 +112,7 @@ pub fn reachable_keys(cfg: &DeviceConfig) -> Reachable {
                 let config = TuneConfig { depth, parts };
                 let Ok(app) = w.build(config.variant()) else { continue };
                 for scale in ALL_SCALES {
-                    r.add(&name, w.benign_cross_kernel_races(), &app, scale, cfg);
+                    r.add(&name, w.benign_cross_kernel_races(), &app, scale, &cfgs);
                 }
             }
         }
@@ -156,5 +174,23 @@ mod tests {
         let again = reachable_keys(&cfg);
         assert_eq!(r.entries, again.entries);
         assert_eq!(r.traces, again.traces);
+    }
+
+    /// A store serving a `--device all` sweep must survive gc run under
+    /// any single device: entry keys fan across the whole registry, and
+    /// the set is identical whichever registered device the caller holds
+    /// (so shard gc is order-independent).
+    #[test]
+    fn reachable_fans_entries_across_the_device_registry() {
+        let r = reachable_keys(&DeviceConfig::pac_a10());
+        let w = resolve_workload("fw").unwrap();
+        let app = w.build(Variant::FeedForward { depth: 1 }).unwrap();
+        for cfg in DeviceRegistry::all() {
+            let k = content_key("fw", &app, Scale::Tiny, &cfg, false);
+            assert!(r.entries.contains(&k), "device {} missing from reachability", cfg.name);
+        }
+        let from_hbm = reachable_keys(&DeviceConfig::stratix10_hbm());
+        assert_eq!(r.entries, from_hbm.entries, "reachability must not depend on caller device");
+        assert_eq!(r.traces, from_hbm.traces);
     }
 }

@@ -26,7 +26,12 @@
 //! (requests/responses with a versioned `pipefwd-api-v1` wire schema)
 //! and adds the [`net`] module's `pipefwd serve` daemon — a bounded-
 //! queue TCP/HTTP front end whose concurrent clients dedup through the
-//! same claim/fulfil memo table a single process uses.
+//! same claim/fulfil memo table a single process uses. PR 7 adds the
+//! device zoo: a [`crate::sim::device::DeviceRegistry`] of calibrated
+//! memory-controller profiles, a `--device` axis on every measuring
+//! command (per-device measurement keys, device-free trace keys), the E8
+//! cross-device portability grid, and [`cross_device_table`] to stitch a
+//! `--device all` run's per-engine slices into one comparison table.
 
 pub mod engine;
 pub mod experiments;
@@ -37,8 +42,9 @@ pub mod store;
 pub mod tune;
 
 pub use engine::{
-    bench_doc, content_key, dedup_cells, grid, grid_for, merge_bench_json, normalize_depths,
-    resolve_workload, shard_cells, trace_key, trace_signature, Cell, Engine, ExperimentId,
+    bench_doc, content_key, cross_device_table, dedup_cells, grid, grid_for, merge_bench_json,
+    normalize_depths, resolve_workload, shard_cells, trace_key, trace_signature, Cell, Engine,
+    ExperimentId,
 };
 pub use gc::{reachable_keys, run_gc, Reachable};
 pub use service::{Mode, Service, ServiceRequest, ServiceResponse, API_SCHEMA};

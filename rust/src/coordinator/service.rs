@@ -73,12 +73,22 @@ pub enum Mode {
 /// CLI arg table and [`decode_request`] produce.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ServiceRequest {
-    /// One (workload, variant, scale) measurement.
-    Measure { workload: String, variant: Variant, scale: Scale },
+    /// One (workload, variant, scale) measurement. `device` (here and on
+    /// the other measuring requests) is the client's expectation of which
+    /// profile the serving engine models: `None` defers to the daemon's
+    /// engine (and is omitted on the wire, so pre-zoo daemons accept the
+    /// request), `Some` is checked against it — a silent cross-device
+    /// answer would be worse than an error.
+    Measure { workload: String, variant: Variant, scale: Scale, device: Option<String> },
     /// One or more experiment grids, optionally one disjoint shard.
-    Run { experiments: Vec<ExperimentId>, scale: Scale, shard: Option<(usize, usize)> },
+    Run {
+        experiments: Vec<ExperimentId>,
+        scale: Scale,
+        shard: Option<(usize, usize)>,
+        device: Option<String>,
+    },
     /// Feed-forward depth sweep over arbitrary benches × depths.
-    Sweep { benches: Vec<String>, depths: Vec<usize>, scale: Scale },
+    Sweep { benches: Vec<String>, depths: Vec<usize>, scale: Scale, device: Option<String> },
     /// Budgeted depth × replication search per workload.
     Tune {
         benches: Vec<String>,
@@ -87,6 +97,7 @@ pub enum ServiceRequest {
         replication: bool,
         scale: Scale,
         reference: bool,
+        device: Option<String>,
     },
     /// Union shard stores into the local store and emit the canonical
     /// merged results sink.
@@ -227,11 +238,26 @@ impl Service {
         })
     }
 
+    /// A measuring request naming a device must name *this* engine's
+    /// device — the facade never silently answers with another profile's
+    /// numbers (`None` defers to the engine, the pre-zoo behaviour).
+    fn check_device(&self, device: &Option<String>) -> Result<(), MeasureError> {
+        match device {
+            Some(d) if d != self.engine.cfg.name => Err(MeasureError::parse(&format!(
+                "device mismatch: request asks for `{d}` but this service models \
+                 `{}` (restart with --device {d}, or drop the flag)",
+                self.engine.cfg.name
+            ))),
+            _ => Ok(()),
+        }
+    }
+
     /// Execute one request. This is the single semantic authority: the
     /// CLI arms and the daemon route everything through here.
     pub fn handle(&self, req: &ServiceRequest) -> Result<ServiceResponse, MeasureError> {
         match req {
-            ServiceRequest::Measure { workload, variant, scale } => {
+            ServiceRequest::Measure { workload, variant, scale, device } => {
+                self.check_device(device)?;
                 let w = resolve_workload(workload).ok_or_else(|| {
                     MeasureError::parse(&format!(
                         "unknown benchmark `{workload}` (see `pipefwd list`)"
@@ -241,7 +267,8 @@ impl Service {
                 let r = self.engine.measure(w.as_ref(), *variant, *scale);
                 Ok(ServiceResponse::Cells { grid_cells: 1, cells: vec![pair(cell, r)] })
             }
-            ServiceRequest::Run { experiments, scale, shard } => {
+            ServiceRequest::Run { experiments, scale, shard, device } => {
+                self.check_device(device)?;
                 let grid = grid_for(experiments, *scale);
                 let grid_cells = grid.len();
                 let cells = match shard {
@@ -274,7 +301,8 @@ impl Service {
                     cells.into_iter().zip(results).map(|(c, r)| pair(c, r)).collect();
                 Ok(ServiceResponse::Cells { grid_cells, cells })
             }
-            ServiceRequest::Sweep { benches, depths, scale } => {
+            ServiceRequest::Sweep { benches, depths, scale, device } => {
+                self.check_device(device)?;
                 for b in benches {
                     bench_from(b).map_err(|e| MeasureError::parse(&e))?;
                 }
@@ -293,7 +321,16 @@ impl Service {
                     cells.into_iter().zip(results).map(|(c, r)| pair(c, r)).collect();
                 Ok(ServiceResponse::Cells { grid_cells, cells })
             }
-            ServiceRequest::Tune { benches, policy, budget, replication, scale, reference } => {
+            ServiceRequest::Tune {
+                benches,
+                policy,
+                budget,
+                replication,
+                scale,
+                reference,
+                device,
+            } => {
+                self.check_device(device)?;
                 let req = TuneRequest {
                     benches: benches.clone(),
                     policy: *policy,
@@ -394,7 +431,21 @@ pub fn policy_from(s: &str) -> Result<Policy, String> {
 
 pub fn experiment_from(s: &str) -> Result<ExperimentId, String> {
     ExperimentId::parse(s.trim())
-        .ok_or_else(|| format!("unknown experiment `{s}` (E1..E7 or all)"))
+        .ok_or_else(|| format!("unknown experiment `{s}` (E1..E8 or all)"))
+}
+
+/// A device-zoo profile name. `all` is deliberately rejected here: fanning
+/// a request across the registry is a CLI-side loop (`run --device all`),
+/// never a single engine's request.
+pub fn device_from(s: &str) -> Result<String, String> {
+    if crate::sim::device::by_name(s).is_some() {
+        Ok(s.to_string())
+    } else {
+        Err(format!(
+            "unknown device `{s}` (one of: {})",
+            crate::sim::device::DEVICE_NAMES.join(", ")
+        ))
+    }
 }
 
 /// `all` or a comma-separated experiment-id list.
@@ -549,16 +600,24 @@ pub fn decode_record(v: &Json) -> Result<ExportRecord, String> {
 
 /// One request document. The client side of the wire.
 pub fn encode_request(req: &ServiceRequest) -> Json {
+    // `device: None` is omitted from the document, not encoded as null:
+    // an old (pre-device-zoo) daemon then accepts the request unchanged.
+    let push_device = |rest: &mut Vec<(&str, Json)>, device: &Option<String>| {
+        if let Some(d) = device {
+            rest.push(("device", Json::Str(d.clone())));
+        }
+    };
     match req {
-        ServiceRequest::Measure { workload, variant, scale } => tagged(
-            "measure",
-            vec![
+        ServiceRequest::Measure { workload, variant, scale, device } => {
+            let mut rest = vec![
                 ("workload", Json::Str(workload.clone())),
                 ("variant", Json::Str(variant.label())),
                 ("scale", scale_json(*scale)),
-            ],
-        ),
-        ServiceRequest::Run { experiments, scale, shard } => {
+            ];
+            push_device(&mut rest, device);
+            tagged("measure", rest)
+        }
+        ServiceRequest::Run { experiments, scale, shard, device } => {
             let mut rest = vec![
                 ("experiments", exps_json(experiments)),
                 ("scale", scale_json(*scale)),
@@ -566,28 +625,37 @@ pub fn encode_request(req: &ServiceRequest) -> Json {
             if let Some((i, n)) = shard {
                 rest.push(("shard", Json::Str(format!("{i}/{n}"))));
             }
+            push_device(&mut rest, device);
             tagged("run", rest)
         }
-        ServiceRequest::Sweep { benches, depths, scale } => tagged(
-            "sweep",
-            vec![
+        ServiceRequest::Sweep { benches, depths, scale, device } => {
+            let mut rest = vec![
                 ("benches", strs_json(benches)),
                 ("depths", Json::Arr(depths.iter().map(|d| Json::Num(*d as f64)).collect())),
                 ("scale", scale_json(*scale)),
-            ],
-        ),
-        ServiceRequest::Tune { benches, policy, budget, replication, scale, reference } => {
-            tagged(
-                "tune",
-                vec![
-                    ("benches", strs_json(benches)),
-                    ("policy", Json::Str(policy.label().into())),
-                    ("budget", Json::Num(*budget as f64)),
-                    ("replication", Json::Bool(*replication)),
-                    ("scale", scale_json(*scale)),
-                    ("reference", Json::Bool(*reference)),
-                ],
-            )
+            ];
+            push_device(&mut rest, device);
+            tagged("sweep", rest)
+        }
+        ServiceRequest::Tune {
+            benches,
+            policy,
+            budget,
+            replication,
+            scale,
+            reference,
+            device,
+        } => {
+            let mut rest = vec![
+                ("benches", strs_json(benches)),
+                ("policy", Json::Str(policy.label().into())),
+                ("budget", Json::Num(*budget as f64)),
+                ("replication", Json::Bool(*replication)),
+                ("scale", scale_json(*scale)),
+                ("reference", Json::Bool(*reference)),
+            ];
+            push_device(&mut rest, device);
+            tagged("tune", rest)
         }
         ServiceRequest::Merge { dirs, experiments, scale } => tagged(
             "merge",
@@ -642,11 +710,21 @@ pub fn decode_request(doc: &Json) -> Result<ServiceRequest, String> {
             })
             .ok_or_else(|| format!("{ty} request: missing `{k}` (array of strings)"))
     };
+    // optional: absent on pre-device-zoo clients (and whenever the client
+    // defers to the daemon's engine), validated like the CLI flag when
+    // present
+    let device = match doc.get("device") {
+        None => None,
+        Some(v) => Some(device_from(
+            v.as_str().ok_or_else(|| format!("{ty} request: bad `device`"))?,
+        )?),
+    };
     match ty {
         "measure" => Ok(ServiceRequest::Measure {
             workload: bench_from(str_field("workload")?)?,
             variant: variant_from(str_field("variant")?)?,
             scale: scale_from(str_field("scale")?)?,
+            device,
         }),
         "run" => {
             let experiments = str_list("experiments")?
@@ -659,7 +737,12 @@ pub fn decode_request(doc: &Json) -> Result<ServiceRequest, String> {
                     v.as_str().ok_or_else(|| "run request: bad `shard`".to_string())?,
                 )?),
             };
-            Ok(ServiceRequest::Run { experiments, scale: scale_from(str_field("scale")?)?, shard })
+            Ok(ServiceRequest::Run {
+                experiments,
+                scale: scale_from(str_field("scale")?)?,
+                shard,
+                device,
+            })
         }
         "sweep" => {
             let benches = str_list("benches")?
@@ -681,6 +764,7 @@ pub fn decode_request(doc: &Json) -> Result<ServiceRequest, String> {
                 benches,
                 depths: normalize_depths(depths),
                 scale: scale_from(str_field("scale")?)?,
+                device,
             })
         }
         "tune" => {
@@ -700,6 +784,7 @@ pub fn decode_request(doc: &Json) -> Result<ServiceRequest, String> {
                 replication: bool_field("replication")?,
                 scale: scale_from(str_field("scale")?)?,
                 reference: bool_field("reference")?,
+                device,
             })
         }
         "merge" => Ok(ServiceRequest::Merge {
@@ -918,21 +1003,31 @@ mod tests {
                 workload: "fw".into(),
                 variant: Variant::FeedForward { depth: 100 },
                 scale: Scale::Tiny,
+                device: None,
+            },
+            ServiceRequest::Measure {
+                workload: "fw".into(),
+                variant: Variant::Baseline,
+                scale: Scale::Tiny,
+                device: Some("stratix10-hbm".into()),
             },
             ServiceRequest::Run {
                 experiments: vec![ExperimentId::E2, ExperimentId::E4],
                 scale: Scale::Small,
                 shard: Some((2, 3)),
+                device: Some("arria10".into()),
             },
             ServiceRequest::Run {
-                experiments: vec![ExperimentId::E1],
+                experiments: vec![ExperimentId::E1, ExperimentId::E8],
                 scale: Scale::Tiny,
                 shard: None,
+                device: None,
             },
             ServiceRequest::Sweep {
                 benches: vec!["fw".into(), "hotspot".into()],
                 depths: vec![1, 100],
                 scale: Scale::Tiny,
+                device: Some("cpu-like".into()),
             },
             ServiceRequest::Tune {
                 benches: vec!["fw".into()],
@@ -941,6 +1036,7 @@ mod tests {
                 replication: true,
                 scale: Scale::Tiny,
                 reference: false,
+                device: Some("gpu-like".into()),
             },
             ServiceRequest::Merge {
                 dirs: vec!["/tmp/a".into(), "/tmp/b".into()],
@@ -990,6 +1086,36 @@ mod tests {
         )
         .unwrap();
         assert!(decode_request(&doc).is_err());
+
+        // the device field is validated against the registry, and `all`
+        // is a CLI fan-out, not a wire value
+        for bad in ["nope", "all"] {
+            let doc = crate::util::json::parse(&format!(
+                r#"{{"schema": "pipefwd-api-v1", "type": "run", "experiments": ["E1"],
+                    "scale": "tiny", "device": "{bad}"}}"#,
+            ))
+            .unwrap();
+            let e = decode_request(&doc).unwrap_err();
+            assert!(e.contains(&format!("unknown device `{bad}`")), "{e}");
+        }
+    }
+
+    /// A request naming a device other than the serving engine's is an
+    /// error, never a silent wrong-device answer; naming the engine's own
+    /// device (or none) passes through.
+    #[test]
+    fn handle_rejects_mismatched_device_requests() {
+        let svc = Service::cli(Engine::new(DeviceConfig::pac_a10(), 1));
+        let mk = |device: Option<String>| ServiceRequest::Measure {
+            workload: "fw".into(),
+            variant: Variant::Baseline,
+            scale: Scale::Tiny,
+            device,
+        };
+        assert!(svc.handle(&mk(None)).is_ok());
+        assert!(svc.handle(&mk(Some("arria10".into()))).is_ok());
+        let err = svc.handle(&mk(Some("gpu-like".into()))).unwrap_err();
+        assert!(err.render().contains("device mismatch"), "{}", err.render());
     }
 
     #[test]
@@ -1030,6 +1156,7 @@ mod tests {
                 workload: "fw".into(),
                 variant: Variant::FeedForward { depth: 1 },
                 scale: Scale::Tiny,
+                device: None,
             })
             .unwrap();
         let lines = response_lines(&resp);

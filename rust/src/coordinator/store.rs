@@ -81,8 +81,21 @@ use std::path::{Path, PathBuf};
 /// trace key *and* its interpreter pipe mode (chunked instead of exact).
 /// color/pagerank also gained vouches, but their split units already
 /// passed the syntactic depth-invariance check, so their keys and pipe
-/// mode are unchanged — the record format alone forces the bump.
-pub const STORE_SCHEMA: &str = "pipefwd-store-v4";
+/// mode are unchanged — the record format alone forces the bump. v5: the
+/// device zoo — the content signature gained a `device=<name>` line for
+/// every profile *except* `arria10` (whose keys are byte-identical to
+/// v4's, by the frozen-`Debug` contract in `sim::device`), so the key
+/// *space* grew without moving any existing key. Uniquely among bumps,
+/// v5 therefore accepts [`STORE_SCHEMA_COMPAT`] (v4) records on read:
+/// every v4 record is an `arria10` record by construction and its key,
+/// format, and meaning are unchanged. New writes always carry v5.
+pub const STORE_SCHEMA: &str = "pipefwd-store-v5";
+
+/// The one prior schema version v5 still reads (see the v5 note on
+/// [`STORE_SCHEMA`]): v4 records are `arria10`-only and key-compatible,
+/// so orphaning them would force a full pointless re-simulation of every
+/// pre-device-zoo store. Earlier versions (v1–v3) remain misses.
+pub const STORE_SCHEMA_COMPAT: &str = "pipefwd-store-v4";
 
 /// Default results directory (overridable via `--cache-dir` /
 /// `PIPEFWD_CACHE_DIR`).
@@ -798,7 +811,10 @@ fn encode_entry(key: u64, result: &CellResult, des: bool) -> Json {
 }
 
 fn decode_entry(doc: &Json, key: u64) -> Option<CellResult> {
-    if doc.get("schema")?.as_str()? != STORE_SCHEMA {
+    let schema = doc.get("schema")?.as_str()?;
+    // v4 read-compat: pre-device-zoo records are arria10 records with
+    // unchanged keys and format (see STORE_SCHEMA_COMPAT).
+    if schema != STORE_SCHEMA && schema != STORE_SCHEMA_COMPAT {
         return None;
     }
     if doc.get("key")?.as_str()? != key_hex(key) {
@@ -861,7 +877,10 @@ fn trace_doc_refs(doc: &Json, key: u64) -> Option<Vec<u64>> {
 /// Schema/kind/key validation shared by trace resolution and the
 /// refs-only walk. `None` = stale or misfiled document (a miss).
 fn check_trace_header(doc: &Json, key: u64) -> Option<()> {
-    if doc.get("schema")?.as_str()? != STORE_SCHEMA {
+    let schema = doc.get("schema")?.as_str()?;
+    // v4 read-compat, as for measurement entries: trace keys are
+    // device-free and the v4 record format is unchanged under v5.
+    if schema != STORE_SCHEMA && schema != STORE_SCHEMA_COMPAT {
         return None;
     }
     if doc.get("kind")?.as_str()? != "trace" {
@@ -958,6 +977,30 @@ mod tests {
         std::fs::copy(s.root().join("entries").join(format!("{}.json", key_hex(8))), &path)
             .unwrap();
         assert_eq!(s.get(7), None, "key-mismatched entry must be a miss");
+        let _ = std::fs::remove_dir_all(s.root());
+    }
+
+    /// The v5 read-compat window: a record whose schema field says v4 —
+    /// i.e. every record written before the device zoo — must be a warm
+    /// *hit*, for both tiers. v4 stores are arria10-only by construction
+    /// and the arria10 signature kept its pre-zoo bytes, so orphaning
+    /// them would re-simulate every pre-existing store for nothing.
+    #[test]
+    fn v4_schema_records_read_as_hits_under_v5() {
+        let s = tmp_store("v4-compat");
+        let m = sample_measurement();
+        s.put(7, &Ok(m.clone()), false).unwrap();
+        let epath = s.root().join("entries").join(format!("{}.json", key_hex(7)));
+        let full = std::fs::read_to_string(&epath).unwrap();
+        assert!(full.contains(STORE_SCHEMA), "new writes carry v5");
+        std::fs::write(&epath, full.replace(STORE_SCHEMA, STORE_SCHEMA_COMPAT)).unwrap();
+        assert_eq!(s.get(7), Some(Ok(m)), "v4 entry must stay a warm hit");
+
+        s.put_trace(9, &Ok(sample_trace())).unwrap();
+        let tpath = s.root().join("traces").join(format!("{}.json", key_hex(9)));
+        let tfull = std::fs::read_to_string(&tpath).unwrap();
+        std::fs::write(&tpath, tfull.replace(STORE_SCHEMA, STORE_SCHEMA_COMPAT)).unwrap();
+        assert_eq!(s.get_trace(9), Some(Ok(sample_trace())), "v4 trace must stay a warm hit");
         let _ = std::fs::remove_dir_all(s.root());
     }
 
@@ -1163,10 +1206,11 @@ mod tests {
         assert_eq!(s.get_trace(7), None, "truncated trace must be a miss");
 
         // a previous schema version (the inline-profile trace format):
-        // stale — its launches never referenced the v4 pool
+        // stale — its launches never referenced the pool, and v3 is
+        // outside the v5/v4 read-compat window
         let stale = full.replace(STORE_SCHEMA, "pipefwd-store-v3");
         std::fs::write(&path, &stale).unwrap();
-        assert_eq!(s.get_trace(7), None, "v3 trace must be a miss under v4");
+        assert_eq!(s.get_trace(7), None, "v3 trace must be a miss under v5");
 
         // a measurement entry misfiled under a trace path (wrong kind)
         s.put(7, &Ok(sample_measurement()), false).unwrap();

@@ -466,6 +466,10 @@ pub struct TuneReport {
     pub budget: usize,
     pub replication: bool,
     pub scale: Scale,
+    /// Which device profile the probes were estimated on — the answer to
+    /// "which depth on which device". Additive in `pipefwd-tune-v1`
+    /// documents (old readers ignore it).
+    pub device: &'static str,
     pub outcomes: Vec<TuneOutcome>,
 }
 
@@ -473,10 +477,11 @@ impl TuneReport {
     pub fn table(&self) -> Table {
         let mut t = Table::new(
             &format!(
-                "TuneReport: {} policy, budget {}, {} scale{}",
+                "TuneReport: {} policy, budget {}, {} scale, {}{}",
                 self.policy.label(),
                 self.budget,
                 scale_label(self.scale),
+                self.device,
                 if self.replication { ", with replication" } else { "" }
             ),
             &[
@@ -557,6 +562,7 @@ impl TuneReport {
             ("budget".into(), Json::Num(self.budget as f64)),
             ("replication".into(), Json::Bool(self.replication)),
             ("scale".into(), Json::Str(scale_label(self.scale).into())),
+            ("device".into(), Json::Str(self.device.into())),
             ("workloads".into(), Json::Arr(outcomes)),
         ])
     }
@@ -629,6 +635,7 @@ pub fn run_tune(engine: &Engine, req: &TuneRequest) -> Result<TuneReport, String
         budget: req.budget,
         replication: req.replication,
         scale: req.scale,
+        device: engine.cfg.name,
         outcomes,
     })
 }

@@ -12,7 +12,7 @@
 use pipefwd::coordinator::{
     self, net, service, Engine, Mode, Service, ServiceRequest, ServiceResponse, Store,
 };
-use pipefwd::sim::device::DeviceConfig;
+use pipefwd::sim::device::{DeviceConfig, DeviceRegistry};
 use pipefwd::transform::Variant;
 use pipefwd::util::json;
 use pipefwd::workloads::{by_name, Scale};
@@ -26,9 +26,12 @@ pipefwd — feed-forward design model for OpenCL kernels via pipes
 USAGE: pipefwd <command> [--scale tiny|small|paper] [--csv] [--jobs N]
 
 ENGINE COMMANDS (parallel, cache-aware, persistent):
-  run --experiment E1..E7|all   run experiments through the engine and
+  run --experiment E1..E8|all   run experiments through the engine and
       [--shard I/N] [--des]     write the BENCH_PR1.json results sink;
-                                --shard computes one disjoint grid slice
+      [--device NAME|all]       --shard computes one disjoint grid slice;
+                                --device all fans out across the device
+                                registry (one sink per device) and
+                                stitches the E8 cross-device table
   sweep [--depths 1,100,1000]   channel-depth sweep over arbitrary depths
         [--benches fw,hotspot,mis]
   tune --benches LIST           autotune (pipe depth x replication) per
@@ -48,8 +51,9 @@ ENGINE COMMANDS (parallel, cache-aware, persistent):
         [--format table|json]   traces / pooled profiles, counts + bytes)
                                 and the profile pool's dedup ratio
   store gc [--dry-run]          delete every store record unreachable
-                                from the current E1-E7 grids (all scales,
-                                both estimators) and the tuner's
+                                from the current E1-E8 grids (all scales,
+                                all registry devices, both estimators)
+                                and the tuner's
                                 depth x replication ladders, plus pooled
                                 profiles no surviving trace references;
                                 rewrites MANIFEST.json (--dry-run only
@@ -89,7 +93,14 @@ OPTIONS:
   --jobs N         engine worker threads (default: all cores)
   --out PATH       results-sink path for `run`/`sweep`/`merge`
                    (default: BENCH_PR1.json)
-  --experiment E   comma-separated experiment ids (E1..E7 or all)
+  --experiment E   comma-separated experiment ids (E1..E8 or all)
+  --device D       device profile to model: arria10 (default),
+                   stratix10-hbm, gpu-like, cpu-like (see docs/DEVICES.md
+                   for the calibrations); `run` also accepts `all` to
+                   sweep the whole registry — per-device sinks plus one
+                   stitched E8 cross-device portability table. Every
+                   profile shares the device-free trace tier, so a
+                   cross-device sweep pays the interpreter once.
   --depths LIST    comma-separated pipe depths for `sweep` (sorted and
                    deduplicated; duplicate columns would break the
                    deterministic-output guarantees)
@@ -176,6 +187,15 @@ fn v_policy(v: &str) -> Result<(), String> {
 fn v_shard(v: &str) -> Result<(), String> {
     service::shard_from(v).map(|_| ())
 }
+fn v_device(v: &str) -> Result<(), String> {
+    // `all` is CLI-only fan-out sugar (rejected on the wire by
+    // `service::device_from`); whether the subcommand accepts it is
+    // checked after parsing, where the command is known.
+    if v == "all" {
+        return Ok(());
+    }
+    service::device_from(v).map(|_| ())
+}
 fn v_threshold(v: &str) -> Result<(), String> {
     service::threshold_from(v).map(|_| ())
 }
@@ -207,6 +227,7 @@ const ARG_SPECS: &[ArgSpec] = &[
     ArgSpec { name: "--in", arity: 1, validate: None },
     ArgSpec { name: "--format", arity: 1, validate: Some(v_format) },
     ArgSpec { name: "--shard", arity: 1, validate: Some(v_shard) },
+    ArgSpec { name: "--device", arity: 1, validate: Some(v_device) },
     ArgSpec { name: "--cache-dir", arity: 1, validate: None },
     ArgSpec { name: "--no-cache", arity: 0, validate: None },
     ArgSpec { name: "--des", arity: 0, validate: None },
@@ -273,6 +294,17 @@ fn req<T>(name: &str, r: Result<T, String>) -> T {
     r.unwrap_or_else(|e| fail(&format!("{name}: {e}")))
 }
 
+/// Suffix an artifact path with a device name — `BENCH_PR1.json` +
+/// `stratix10-hbm` → `BENCH_PR1.stratix10-hbm.json` — so a
+/// `--device all` run writes one sink (and counters document) per
+/// registry profile instead of each device clobbering the last.
+fn device_path(base: &str, device: &str) -> String {
+    match base.rsplit_once('.') {
+        Some((stem, ext)) if !stem.is_empty() => format!("{stem}.{device}.{ext}"),
+        _ => format!("{base}.{device}"),
+    }
+}
+
 fn main() {
     let wall_start = std::time::Instant::now();
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -319,6 +351,10 @@ fn main() {
     let in_path = args.value("--in").unwrap_or("BENCH_PR1.json").to_string();
     let format = args.value("--format").unwrap_or("table").to_string();
     let shard = args.value("--shard").map(|v| req("--shard", service::shard_from(v)));
+    // `device_flag` keeps the tri-state: absent (None, wire-compatible
+    // with pre-device daemons), an explicit name, or `all` (run-only).
+    let device_flag = args.value("--device").map(String::from);
+    let device_all = device_flag.as_deref() == Some("all");
     let cache_dir = args.value("--cache-dir").map(String::from);
     let no_cache = args.flag("--no-cache");
     let use_des = args.flag("--des");
@@ -341,7 +377,20 @@ fn main() {
         .unwrap_or(64);
     let positional = &args.positional;
 
-    let cfg = DeviceConfig::pac_a10();
+    if device_all && cmd != "run" {
+        fail("--device all: only `run` fans out across the device registry (name one device)");
+    }
+    // Resolve the device profile every single-device code path models
+    // (default: arria10, the calibration all pre-device-zoo artifacts
+    // were measured on). `run --device all` ignores this and builds one
+    // engine per registry profile instead.
+    let cfg = if device_all {
+        DeviceConfig::pac_a10()
+    } else {
+        let name = device_flag.as_deref().unwrap_or("arria10");
+        pipefwd::sim::device::by_name(name)
+            .unwrap_or_else(|| fail(&format!("--device: unknown device `{name}`")))
+    };
 
     // The persistent store every engine command reads through / writes
     // behind (tentpole of PR 2); `--no-cache` restores PR-1 behavior.
@@ -359,9 +408,10 @@ fn main() {
         }
     };
     // Every engine command talks to the same `Service` facade the daemon
-    // serves — the CLI is just a local client of it.
-    let mk_service = |jobs: usize, mode: Mode| -> Service {
-        let mut e = Engine::new(DeviceConfig::pac_a10(), jobs).with_des(use_des);
+    // serves — the CLI is just a local client of it. The caller names the
+    // device so `run --device all` can build one service per profile.
+    let mk_service = |dev: DeviceConfig, jobs: usize, mode: Mode| -> Service {
+        let mut e = Engine::new(dev, jobs).with_des(use_des);
         if let Some(s) = open_store() {
             e = e.with_store(s);
         }
@@ -411,9 +461,72 @@ fn main() {
         }
         "run" => {
             let exps = req("--experiment", service::experiments_from(&experiment));
-            let svc = mk_service(jobs, Mode::Cli);
+            if device_all {
+                if shard.is_some() {
+                    fail("--device all cannot combine with --shard: shard one device at a \
+                          time, then merge");
+                }
+                // One engine per registry profile, all sharing the same
+                // store directory: measurement keys are per-device but the
+                // trace tier is device-free, so the first engine pays the
+                // interpreter and every later device replays its traces.
+                let svcs: Vec<Service> = DeviceRegistry::all()
+                    .into_iter()
+                    .map(|dev| {
+                        let name = dev.name;
+                        let svc = mk_service(dev, jobs, Mode::Cli);
+                        svc.handle(&ServiceRequest::Run {
+                            experiments: exps.clone(),
+                            scale,
+                            shard: None,
+                            device: Some(name.to_string()),
+                        })
+                        .unwrap_or_else(|e| fail(&e.render()));
+                        svc
+                    })
+                    .collect();
+                for svc in &svcs {
+                    let engine = svc.engine();
+                    let dev = engine.cfg.name;
+                    let sink = device_path(&out_path, dev);
+                    match engine.write_bench_json(Path::new(&sink), scale, &exps) {
+                        Ok(()) => eprintln!(
+                            "wrote {sink} ({dev}: {} measurements, {} simulated, \
+                             {} trace runs, {} trace hits, {} store hits)",
+                            engine.measurements().len(),
+                            engine.simulations(),
+                            engine.trace_runs(),
+                            engine.trace_hits(),
+                            engine.store_hits(),
+                        ),
+                        Err(e) => fail(&format!("writing {sink}: {e}")),
+                    }
+                    if let Some(cpath) = counters_path.as_deref() {
+                        let doc = svc.counters_doc(
+                            "run",
+                            coordinator::scale_label(scale),
+                            wall_start.elapsed().as_millis() as f64,
+                        );
+                        let cpath = device_path(cpath, dev);
+                        match json::write_file_atomic(Path::new(&cpath), &doc) {
+                            Ok(()) => eprintln!("wrote {cpath}"),
+                            Err(e) => fail(&format!("writing {cpath}: {e}")),
+                        }
+                    }
+                    finish_engine(engine);
+                }
+                let engines: Vec<&Engine> = svcs.iter().map(|s| s.engine()).collect();
+                save(&coordinator::cross_device_table(&engines, scale), "e8_cross_device");
+                return;
+            }
+            let svc = mk_service(cfg.clone(), jobs, Mode::Cli);
             let resp = svc
-                .handle(&ServiceRequest::Run { experiments: exps.clone(), scale, shard })
+                .handle(&ServiceRequest::Run {
+                    experiments: exps.clone(),
+                    scale,
+                    shard,
+                    device: device_flag.clone(),
+                })
                 .unwrap_or_else(|e| fail(&e.render()));
             let engine = svc.engine();
             if let Some((index, count)) = shard {
@@ -468,7 +581,7 @@ fn main() {
                 fail("merge <dir>... (at least one shard store directory)");
             }
             let exps = req("--experiment", service::experiments_from(&experiment));
-            let svc = mk_service(1, Mode::Cli);
+            let svc = mk_service(cfg.clone(), 1, Mode::Cli);
             let resp = svc
                 .handle(&ServiceRequest::Merge {
                     dirs: positional.clone(),
@@ -493,11 +606,12 @@ fn main() {
             }
         }
         "sweep" => {
-            let svc = mk_service(jobs, Mode::Cli);
+            let svc = mk_service(cfg.clone(), jobs, Mode::Cli);
             if let Err(e) = svc.handle(&ServiceRequest::Sweep {
                 benches: benches.clone(),
                 depths: depths.clone(),
                 scale,
+                device: device_flag.clone(),
             }) {
                 fail(&e.render());
             }
@@ -517,7 +631,7 @@ fn main() {
             finish_engine(engine);
         }
         "tune" => {
-            let svc = mk_service(jobs, Mode::Cli);
+            let svc = mk_service(cfg.clone(), jobs, Mode::Cli);
             let resp = svc
                 .handle(&ServiceRequest::Tune {
                     benches: benches.clone(),
@@ -526,6 +640,7 @@ fn main() {
                     replication,
                     scale,
                     reference: !no_ref,
+                    device: device_flag.clone(),
                 })
                 .unwrap_or_else(|e| fail(&e.render()));
             let ServiceResponse::Tune { report } = resp else {
@@ -554,7 +669,7 @@ fn main() {
             finish_engine(engine);
         }
         "serve" => {
-            let svc = Arc::new(mk_service(jobs, Mode::Daemon));
+            let svc = Arc::new(mk_service(cfg.clone(), jobs, Mode::Daemon));
             let store_desc = svc
                 .engine()
                 .store()
@@ -567,9 +682,10 @@ fn main() {
             )
             .unwrap_or_else(|e| fail(&format!("serve: binding {addr}: {e}")));
             eprintln!(
-                "pipefwd serve: listening on {} ({jobs} engine jobs, {workers} workers, \
-                 queue {queue_cap}, store: {store_desc}, schema {})",
+                "pipefwd serve: listening on {} (device {}, {jobs} engine jobs, \
+                 {workers} workers, queue {queue_cap}, store: {store_desc}, schema {})",
                 server.addr(),
+                cfg.name,
                 coordinator::API_SCHEMA,
             );
             server.join();
@@ -586,7 +702,12 @@ fn main() {
                     let exps = req("--experiment", service::experiments_from(&experiment));
                     let items = net::request(
                         &addr,
-                        &ServiceRequest::Run { experiments: exps.clone(), scale, shard },
+                        &ServiceRequest::Run {
+                            experiments: exps.clone(),
+                            scale,
+                            shard,
+                            device: device_flag.clone(),
+                        },
                     )
                     .unwrap_or_else(|e| fail(&e));
                     // mirror the CLI shard rule: a slice writes a sink
@@ -612,6 +733,7 @@ fn main() {
                             benches: benches.clone(),
                             depths: depths.clone(),
                             scale,
+                            device: device_flag.clone(),
                         },
                     )
                     .unwrap_or_else(|e| fail(&e));
@@ -632,6 +754,7 @@ fn main() {
                             replication,
                             scale,
                             reference: !no_ref,
+                            device: device_flag.clone(),
                         },
                     )
                     .unwrap_or_else(|e| fail(&e));

@@ -4,7 +4,10 @@
 //! the launch: every kernel is a process consuming its outer-iteration
 //! token stream; pipes impose producer->consumer data dependencies plus
 //! depth-bounded backpressure; the DRAM controller is an epoch-bucketed
-//! byte ledger that stalls whoever overdraws it. Captures what the
+//! byte ledger that stalls whoever overdraws it. The ledger's capacity is
+//! derated by the device's bank-level parallelism (`sim::mem::MemModel`),
+//! so the DES and the analytic estimator tell the same per-device story
+//! (exact identity on `arria10`). Captures what the
 //! steady-state solver abstracts away — pipeline fill skew, channel-depth
 //! slack, congestion transients — and is used by the `simulator` and
 //! `interp` benches as an ablation (analytic vs DES) and by `prop_sim`
@@ -234,7 +237,12 @@ pub fn simulate(
     chunk: u64,
 ) -> DesResult {
     let (mut procs, fmax) = build_procs(prog, model, profiles);
-    let mut dram = Dram::new(cfg.dram_bytes_per_cycle(fmax));
+    // The ledger sees the same bank-parallelism-derated capacity as the
+    // analytic model: kernels that move DRAM bytes are the requesters
+    // (exact x1.0 on arria10, so historical cycle counts are unchanged).
+    let requesters = procs.iter().filter(|p| p.bytes > 0.0).count();
+    let mut dram =
+        Dram::new(cfg.dram_bytes_per_cycle(fmax) * cfg.mem.bank_parallel_efficiency(requesters));
 
     // Reverse adjacency for the backpressure pass: consumers of each proc.
     let mut downstream: Vec<Vec<usize>> = vec![vec![]; procs.len()];
@@ -346,8 +354,13 @@ pub fn simulate_reference(
     }
 
     let (mut procs, fmax) = build_procs(prog, model, profiles);
-    let mut dram =
-        DramVec { capacity_per_epoch: cfg.dram_bytes_per_cycle(fmax) * EPOCH, used: vec![] };
+    let requesters = procs.iter().filter(|p| p.bytes > 0.0).count();
+    let mut dram = DramVec {
+        capacity_per_epoch: cfg.dram_bytes_per_cycle(fmax)
+            * cfg.mem.bank_parallel_efficiency(requesters)
+            * EPOCH,
+        used: vec![],
+    };
 
     loop {
         let mut pick: Option<usize> = None;

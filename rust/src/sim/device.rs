@@ -1,12 +1,53 @@
-//! Device model: an Intel PAC (Arria 10 GX) -like board, §4.1 of the paper.
+//! Device zoo: named, calibrated board models behind one [`DeviceConfig`].
 //!
-//! All performance/area constants of the substrate live here so experiments
-//! can sweep them (and so the calibration targets in DESIGN.md are in one
-//! place).
+//! The source paper measures one board (an Intel PAC with Arria 10 GX,
+//! §4.1), but its framing is performance *portability*: pipes win because
+//! FPGA external memory behaves unlike CPU/GPU memory. This module keeps
+//! every performance/area constant of the modelled substrate in one place
+//! and grows it into a registry of four calibrated profiles
+//! ([`DeviceRegistry`]): `arria10` (the paper's testbed, numerically
+//! unchanged so persistent-store keys and BENCH sinks stay byte-identical),
+//! `stratix10-hbm`, `gpu-like`, and `cpu-like`. Per-profile provenance
+//! lives on the constructors below and in `docs/DEVICES.md`.
+//!
+//! Two invariants the rest of the stack relies on:
+//!
+//! * **Frozen `Debug`.** `coordinator::engine` bakes `format!("{cfg:?}")`
+//!   into every content-address key. The manual [`std::fmt::Debug`] impl
+//!   reproduces the historical derived output over the original 32 fields
+//!   *only* — the registry [`DeviceConfig::name`] and the
+//!   [`MemModel`](crate::sim::mem::MemModel) are deliberately excluded, so
+//!   `arria10` keys hash identically to every record written before the
+//!   device zoo existed. Non-default devices are distinguished by a
+//!   separate `device=<name>` line in the signature, not by `Debug`.
+//! * **Identity memory model on `arria10`.** The default profile's
+//!   [`MemModel`](crate::sim::mem::MemModel) hooks are exact no-ops
+//!   (multipliers of 1.0, adders of 0.0), keeping `sim::perf` and
+//!   `sim::des` arithmetic bit-identical to the pre-zoo code.
+#![deny(missing_docs)]
+
+use crate::sim::mem::MemModel;
+
+/// Registry names, in presentation order. `DEVICE_NAMES[0]` is the
+/// default device everywhere a device is optional.
+pub const DEVICE_NAMES: [&str; 4] = ["arria10", "stratix10-hbm", "gpu-like", "cpu-like"];
 
 /// Board + toolchain model parameters.
-#[derive(Debug, Clone)]
+///
+/// Construct via the named registry constructors ([`DeviceConfig::pac_a10`]
+/// and friends) or [`DeviceConfig::by_name`]; the `Default` impl exists
+/// only so historical tests keep compiling (see its deprecation note).
+#[derive(Clone)]
 pub struct DeviceConfig {
+    /// Registry name of this profile (`"arria10"`, `"stratix10-hbm"`, ...).
+    /// Joins the content-address key for every non-default device;
+    /// intentionally *not* part of the frozen `Debug` output.
+    pub name: &'static str,
+    /// Memory-controller model (banking / interleave / stride-class
+    /// efficiency); exact identity on `arria10`. Keyed by [`Self::name`]
+    /// in the content address, not by value — see `sim::mem`.
+    pub mem: MemModel,
+
     // ---- clocks -----------------------------------------------------------
     /// Nominal kernel clock (Hz). The paper reports no consistent fmax
     /// trend; we derate it slightly with design size (see `fmax_for_area`).
@@ -71,22 +112,43 @@ pub struct DeviceConfig {
     pub kernel_alms: f64,
     /// Per-kernel BRAM overhead.
     pub kernel_brams: u32,
-    /// LSU areas (ALMs, BRAMs).
+    /// Burst-coalesced LSU area in ALMs.
     pub lsu_burst_alms: f64,
+    /// Burst-coalesced LSU area in M20K blocks.
     pub lsu_burst_brams: u32,
+    /// Prefetching LSU area in ALMs.
     pub lsu_prefetch_alms: f64,
+    /// Prefetching LSU area in M20K blocks.
     pub lsu_prefetch_brams: u32,
+    /// Pipelined LSU area in ALMs.
     pub lsu_pipelined_alms: f64,
+    /// Pipelined LSU area in M20K blocks.
     pub lsu_pipelined_brams: u32,
-    /// Channel endpoint area; BRAM grows with depth (words / 512 per M20K).
+    /// Channel endpoint area in ALMs; BRAM grows with depth
+    /// (words / `channel_words_per_bram` per M20K).
     pub channel_alms: f64,
+    /// Channel FIFO capacity per M20K block, in words.
     pub channel_words_per_bram: usize,
 }
 
 impl DeviceConfig {
-    /// The paper's testbed: Intel PAC with Arria 10 GX 1150, 2x4 GB DDR4.
+    /// `arria10` — the paper's testbed: Intel PAC with Arria 10 GX 1150,
+    /// 2x4 GB DDR4 at 34.1 GB/s peak.
+    ///
+    /// **Provenance:** every number is the original calibration against
+    /// the source paper's §4 measurements (see DESIGN.md); the
+    /// `random_access_cost_bytes = 256` floor and the 74-86% sequential
+    /// LSU efficiencies are the effects *The Memory Controller Wall*
+    /// (Zohouri & Matsuoka, arXiv:1910.06726) measures on the same
+    /// DDR4-based Intel OpenCL memory interface. The memory model is the
+    /// exact identity: one streaming LSU already saturates both DDR4
+    /// banks (`bank_queue >= banks`), so banking adds nothing — which is
+    /// why this profile reproduces the pre-device-zoo numbers bit for bit.
     pub fn pac_a10() -> DeviceConfig {
         DeviceConfig {
+            name: "arria10",
+            mem: MemModel::identity(2, 1024, 8),
+
             fmax_hz: 240e6,
             fmax_derate_knee: 0.20,
             fmax_derate_slope: 0.55,
@@ -125,6 +187,218 @@ impl DeviceConfig {
         }
     }
 
+    /// `stratix10-hbm` — an HBM2-attached Stratix 10 MX-class part: 32
+    /// narrow pseudo-channels, ~410 GB/s aggregate, higher access latency.
+    ///
+    /// **Provenance:** *The Memory Controller Wall* (arXiv:1910.06726)
+    /// motivates the shape: aggregate bandwidth is enormous but each
+    /// 256-bit pseudo-channel needs its own deep request queue, so a
+    /// single in-order OpenCL LSU strands most of the part's bandwidth —
+    /// modelled as `banks = 32, bank_queue = 4` (one streamer reaches
+    /// ~1/8 of peak; eight concurrent requesters saturate). Aggregate
+    /// 409.6 GB/s and the 32x256-bit channel split are the public HBM2
+    /// spec of the Stratix 10 MX 2100; the deeper `pipeline_depth` and
+    /// higher nominal fmax reflect HyperFlex registering; the 24-cycle
+    /// `channel_fill_cycles` models the longer load-to-use latency HBM
+    /// exposes through a depth-1 pipe (deep pipes amortize it, which is
+    /// why this device tunes to deeper channels than `arria10`).
+    pub fn stratix10_hbm() -> DeviceConfig {
+        DeviceConfig {
+            name: "stratix10-hbm",
+            mem: MemModel {
+                banks: 32,
+                interleave_bytes: 256,
+                bank_queue: 4,
+                channel_fill_cycles: 24.0,
+                seq_scale: 1.0,
+                strided_scale: 1.25,
+                irregular_scale: 1.1,
+            },
+
+            fmax_hz: 350e6,
+            fmax_derate_knee: 0.25,
+            fmax_derate_slope: 0.45,
+
+            dram_peak_bytes_per_s: 409.6e9,
+            burst_bytes: 32,
+            eff_seq_prefetch: 0.82,
+            eff_seq_burst: 0.70,
+            random_access_cost_bytes: 160.0,
+            congestion_free_requesters: 8,
+            congestion_slope_regular: 0.02,
+            congestion_slope_irregular: 0.03,
+
+            pipeline_depth: 140,
+            serialized_overlap: 4,
+            loop_fill_cycles: 16.0,
+            kernel_port_bytes_per_cycle: 32.0,
+            channel_overhead_cycles: 0.035,
+            channel_latency: 5,
+
+            total_alms: 702_720.0,
+            total_brams: 6_847,
+            total_dsps: 3_960,
+            shell_logic_frac: 0.11,
+            shell_brams: 520,
+            kernel_alms: 1_800.0,
+            kernel_brams: 11,
+            lsu_burst_alms: 3_600.0,
+            lsu_burst_brams: 16,
+            lsu_prefetch_alms: 1_500.0,
+            lsu_prefetch_brams: 10,
+            lsu_pipelined_alms: 560.0,
+            lsu_pipelined_brams: 0,
+            channel_alms: 80.0,
+            channel_words_per_bram: 512,
+        }
+    }
+
+    /// `gpu-like` — a discrete-GPU-shaped memory system: very high peak
+    /// bandwidth, wide coalesced transactions, harsh penalties for
+    /// uncoalesced strides, cheap on-chip queues with real per-token cost.
+    ///
+    /// **Provenance:** qualitative calibration against the GPU behavior
+    /// *The Memory Controller Wall* contrasts FPGAs with: 128-byte
+    /// coalesced transactions (`burst_bytes = 128`), ~90% of a 320 GB/s
+    /// GDDR peak on streams, a 128 B effective cost per isolated 4 B
+    /// gather (one 32 B sector fetched, mostly wasted, across 4 ideal
+    /// accesses), and deep memory-level parallelism (`bank_queue = 16`)
+    /// so even one kernel saturates the controller. Strided accesses
+    /// serialize into multiple transactions (`strided_scale = 2.5` —
+    /// the coalescing cliff). Pipes compile to on-chip queues that cost
+    /// real instructions per token (`channel_overhead_cycles = 0.25`),
+    /// so the pipe win shrinks relative to the FPGA profiles. Area is
+    /// effectively unconstrained: fixed-function silicon, no fmax derate.
+    pub fn gpu_like() -> DeviceConfig {
+        DeviceConfig {
+            name: "gpu-like",
+            mem: MemModel {
+                banks: 16,
+                interleave_bytes: 256,
+                bank_queue: 16,
+                channel_fill_cycles: 6.0,
+                seq_scale: 1.0,
+                strided_scale: 2.5,
+                irregular_scale: 1.3,
+            },
+
+            fmax_hz: 1.2e9,
+            fmax_derate_knee: 1.0,
+            fmax_derate_slope: 0.0,
+
+            dram_peak_bytes_per_s: 320e9,
+            burst_bytes: 128,
+            eff_seq_prefetch: 0.92,
+            eff_seq_burst: 0.88,
+            random_access_cost_bytes: 128.0,
+            congestion_free_requesters: 16,
+            congestion_slope_regular: 0.01,
+            congestion_slope_irregular: 0.02,
+
+            pipeline_depth: 24,
+            serialized_overlap: 6,
+            loop_fill_cycles: 3.0,
+            kernel_port_bytes_per_cycle: 128.0,
+            channel_overhead_cycles: 0.25,
+            channel_latency: 20,
+
+            total_alms: 1.0e9,
+            total_brams: 1_000_000,
+            total_dsps: 1_000_000,
+            shell_logic_frac: 0.0,
+            shell_brams: 0,
+            kernel_alms: 100.0,
+            kernel_brams: 1,
+            lsu_burst_alms: 100.0,
+            lsu_burst_brams: 1,
+            lsu_prefetch_alms: 100.0,
+            lsu_prefetch_brams: 1,
+            lsu_pipelined_alms: 50.0,
+            lsu_pipelined_brams: 0,
+            channel_alms: 10.0,
+            channel_words_per_bram: 4096,
+        }
+    }
+
+    /// `cpu-like` — a commodity multicore: low access latency, modest
+    /// bandwidth, caches that forgive irregular access, and pipes that
+    /// degrade into software queues.
+    ///
+    /// **Provenance:** dual-channel DDR4-3200 peak (51.2 GB/s) with
+    /// hardware prefetchers near peak on streams (0.90-0.95 efficiency);
+    /// the 16 B effective cost per irregular 4 B access plus
+    /// `irregular_scale = 0.3` models last-level-cache absorption of
+    /// gathers that would hit the controller wall on an FPGA — the
+    /// contrast *The Memory Controller Wall* draws in its motivation.
+    /// Pipes become shared-memory SPSC queues: ~1.5 cycles of real
+    /// instructions per token (`channel_overhead_cycles`) and ~40 cycles
+    /// of core-to-core latency, so the pipe transformation wins least
+    /// here — the portability cliff the source paper's framing predicts.
+    /// Area is unconstrained and fmax never derates (fixed silicon).
+    pub fn cpu_like() -> DeviceConfig {
+        DeviceConfig {
+            name: "cpu-like",
+            mem: MemModel {
+                banks: 2,
+                interleave_bytes: 4096,
+                bank_queue: 10,
+                channel_fill_cycles: 0.0,
+                seq_scale: 1.0,
+                strided_scale: 1.15,
+                irregular_scale: 0.3,
+            },
+
+            fmax_hz: 3.2e9,
+            fmax_derate_knee: 1.0,
+            fmax_derate_slope: 0.0,
+
+            dram_peak_bytes_per_s: 51.2e9,
+            burst_bytes: 64,
+            eff_seq_prefetch: 0.95,
+            eff_seq_burst: 0.90,
+            random_access_cost_bytes: 16.0,
+            congestion_free_requesters: 4,
+            congestion_slope_regular: 0.03,
+            congestion_slope_irregular: 0.04,
+
+            pipeline_depth: 14,
+            serialized_overlap: 8,
+            loop_fill_cycles: 2.0,
+            kernel_port_bytes_per_cycle: 32.0,
+            channel_overhead_cycles: 1.5,
+            channel_latency: 40,
+
+            total_alms: 1.0e9,
+            total_brams: 1_000_000,
+            total_dsps: 1_000_000,
+            shell_logic_frac: 0.0,
+            shell_brams: 0,
+            kernel_alms: 100.0,
+            kernel_brams: 1,
+            lsu_burst_alms: 100.0,
+            lsu_burst_brams: 1,
+            lsu_prefetch_alms: 100.0,
+            lsu_prefetch_brams: 1,
+            lsu_pipelined_alms: 50.0,
+            lsu_pipelined_brams: 0,
+            channel_alms: 10.0,
+            channel_words_per_bram: 4096,
+        }
+    }
+
+    /// Look up a registry profile by name (the `--device` axis).
+    /// Returns `None` for unknown names; `"all"` is handled by the CLI,
+    /// not here.
+    pub fn by_name(name: &str) -> Option<DeviceConfig> {
+        match name {
+            "arria10" => Some(DeviceConfig::pac_a10()),
+            "stratix10-hbm" => Some(DeviceConfig::stratix10_hbm()),
+            "gpu-like" => Some(DeviceConfig::gpu_like()),
+            "cpu-like" => Some(DeviceConfig::cpu_like()),
+            _ => None,
+        }
+    }
+
     /// DRAM capacity in bytes per kernel clock cycle.
     pub fn dram_bytes_per_cycle(&self, fmax: f64) -> f64 {
         self.dram_peak_bytes_per_s / fmax
@@ -139,6 +413,86 @@ impl DeviceConfig {
     }
 }
 
+/// The named device registry behind the `--device` CLI axis.
+pub struct DeviceRegistry;
+
+impl DeviceRegistry {
+    /// Registry names in presentation order (`arria10` first = default).
+    pub fn names() -> &'static [&'static str] {
+        &DEVICE_NAMES
+    }
+
+    /// All registry profiles, in [`DeviceRegistry::names`] order.
+    pub fn all() -> Vec<DeviceConfig> {
+        DEVICE_NAMES.iter().map(|n| DeviceConfig::by_name(n).expect("registry name")).collect()
+    }
+
+    /// Look up one profile by name.
+    pub fn get(name: &str) -> Option<DeviceConfig> {
+        DeviceConfig::by_name(name)
+    }
+}
+
+/// Free-function form of [`DeviceConfig::by_name`], for callers (the CLI,
+/// the service codec's `device_from`) that resolve a registry name
+/// without wanting the config type in scope.
+pub fn by_name(name: &str) -> Option<DeviceConfig> {
+    DeviceConfig::by_name(name)
+}
+
+/// Frozen `Debug`: byte-identical to the historical `#[derive(Debug)]`
+/// output over the original 32 fields, in declaration order, with
+/// [`DeviceConfig::name`] and [`DeviceConfig::mem`] deliberately omitted.
+/// `coordinator::engine::content_signature` feeds this string into every
+/// persisted content-address key, so changing it orphans every store on
+/// disk — non-default devices are keyed by a separate `device=<name>`
+/// signature line instead. Pinned by `debug_format_is_frozen` below.
+impl std::fmt::Debug for DeviceConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DeviceConfig")
+            .field("fmax_hz", &self.fmax_hz)
+            .field("fmax_derate_knee", &self.fmax_derate_knee)
+            .field("fmax_derate_slope", &self.fmax_derate_slope)
+            .field("dram_peak_bytes_per_s", &self.dram_peak_bytes_per_s)
+            .field("burst_bytes", &self.burst_bytes)
+            .field("eff_seq_prefetch", &self.eff_seq_prefetch)
+            .field("eff_seq_burst", &self.eff_seq_burst)
+            .field("random_access_cost_bytes", &self.random_access_cost_bytes)
+            .field("congestion_free_requesters", &self.congestion_free_requesters)
+            .field("congestion_slope_regular", &self.congestion_slope_regular)
+            .field("congestion_slope_irregular", &self.congestion_slope_irregular)
+            .field("pipeline_depth", &self.pipeline_depth)
+            .field("serialized_overlap", &self.serialized_overlap)
+            .field("loop_fill_cycles", &self.loop_fill_cycles)
+            .field("kernel_port_bytes_per_cycle", &self.kernel_port_bytes_per_cycle)
+            .field("channel_overhead_cycles", &self.channel_overhead_cycles)
+            .field("channel_latency", &self.channel_latency)
+            .field("total_alms", &self.total_alms)
+            .field("total_brams", &self.total_brams)
+            .field("total_dsps", &self.total_dsps)
+            .field("shell_logic_frac", &self.shell_logic_frac)
+            .field("shell_brams", &self.shell_brams)
+            .field("kernel_alms", &self.kernel_alms)
+            .field("kernel_brams", &self.kernel_brams)
+            .field("lsu_burst_alms", &self.lsu_burst_alms)
+            .field("lsu_burst_brams", &self.lsu_burst_brams)
+            .field("lsu_prefetch_alms", &self.lsu_prefetch_alms)
+            .field("lsu_prefetch_brams", &self.lsu_prefetch_brams)
+            .field("lsu_pipelined_alms", &self.lsu_pipelined_alms)
+            .field("lsu_pipelined_brams", &self.lsu_pipelined_brams)
+            .field("channel_alms", &self.channel_alms)
+            .field("channel_words_per_bram", &self.channel_words_per_bram)
+            .finish()
+    }
+}
+
+/// Test-only convenience, kept for the pre-device-zoo test suite.
+///
+/// **Deprecation note:** with multiple devices in the registry, a silent
+/// `Default` meaning `arria10` is a trap — production call sites must name
+/// their device explicitly (`DeviceConfig::by_name` / the `--device` flag).
+/// New code should not call this; it survives only so existing tests and
+/// any `..Default::default()` struct updates keep compiling.
 impl Default for DeviceConfig {
     fn default() -> Self {
         DeviceConfig::pac_a10()
@@ -166,5 +520,61 @@ mod tests {
         assert_eq!(f1, c.fmax_hz); // below knee
         assert!(f2 < f1 && f3 < f2);
         assert!(f3 > 0.5 * c.fmax_hz);
+    }
+
+    /// The content-address contract: `Debug` must reproduce the historical
+    /// derived output (32 original fields, no `name`, no `mem`), or every
+    /// persisted `arria10` record on every machine goes stale. If this
+    /// test fails you are changing store keys — bump the store schema.
+    #[test]
+    fn debug_format_is_frozen() {
+        let s = format!("{:?}", DeviceConfig::pac_a10());
+        assert_eq!(
+            s,
+            "DeviceConfig { fmax_hz: 240000000.0, fmax_derate_knee: 0.2, \
+             fmax_derate_slope: 0.55, dram_peak_bytes_per_s: 34100000000.0, \
+             burst_bytes: 64, eff_seq_prefetch: 0.86, eff_seq_burst: 0.74, \
+             random_access_cost_bytes: 256.0, congestion_free_requesters: 2, \
+             congestion_slope_regular: 0.06, congestion_slope_irregular: 0.05, \
+             pipeline_depth: 90, serialized_overlap: 4, loop_fill_cycles: 12.0, \
+             kernel_port_bytes_per_cycle: 64.0, channel_overhead_cycles: 0.035, \
+             channel_latency: 3, total_alms: 427200.0, total_brams: 2713, \
+             total_dsps: 3036, shell_logic_frac: 0.1393, shell_brams: 380, \
+             kernel_alms: 1500.0, kernel_brams: 9, lsu_burst_alms: 3200.0, \
+             lsu_burst_brams: 14, lsu_prefetch_alms: 1350.0, lsu_prefetch_brams: 9, \
+             lsu_pipelined_alms: 520.0, lsu_pipelined_brams: 0, channel_alms: 70.0, \
+             channel_words_per_bram: 512 }"
+        );
+        assert!(!s.contains("name"), "registry name must stay out of Debug/store keys");
+        assert!(!s.contains("mem"), "mem model must stay out of Debug/store keys");
+    }
+
+    #[test]
+    fn registry_resolves_every_name_and_rejects_unknowns() {
+        for n in DeviceRegistry::names() {
+            let d = DeviceConfig::by_name(n).expect("registry name resolves");
+            assert_eq!(d.name, *n);
+        }
+        assert_eq!(DeviceRegistry::all().len(), DEVICE_NAMES.len());
+        assert!(DeviceConfig::by_name("all").is_none(), "'all' is a CLI fan-out, not a device");
+        assert!(DeviceConfig::by_name("arria-10").is_none());
+        assert_eq!(DEVICE_NAMES[0], "arria10", "first registry entry is the default device");
+    }
+
+    #[test]
+    fn default_device_has_the_identity_mem_model() {
+        let c = DeviceConfig::pac_a10();
+        assert_eq!(c.mem, crate::sim::mem::MemModel::identity(2, 1024, 8));
+        // identity really means identity: queue covers both DDR banks
+        assert!(c.mem.bank_queue >= c.mem.banks);
+    }
+
+    #[test]
+    fn hbm_profile_rewards_concurrency_and_depth() {
+        let h = DeviceConfig::stratix10_hbm();
+        assert!(h.dram_peak_bytes_per_s > 10.0 * DeviceConfig::pac_a10().dram_peak_bytes_per_s);
+        assert!(h.mem.bank_parallel_efficiency(1) < 0.2);
+        assert_eq!(h.mem.bank_parallel_efficiency(8), 1.0);
+        assert!(h.mem.pipe_fill_cost(1) > h.mem.pipe_fill_cost(1000));
     }
 }

@@ -1,14 +1,120 @@
-//! Global-memory image shared by concurrently executing kernels.
+//! Global-memory image shared by concurrently executing kernels, plus the
+//! per-device memory-controller model.
 //!
 //! Buffers are bit-encoded in `AtomicU64` cells with relaxed ordering —
 //! plain loads/stores on x86, safely shareable across the kernel threads.
 //! The feed-forward feasibility rules guarantee concurrent kernels never
 //! race on the same element (no true MLCD; memory kernels only read).
+//!
+//! # Memory-controller model ([`MemModel`])
+//!
+//! *The Memory Controller Wall* (Zohouri & Matsuoka, arXiv:1910.06726)
+//! shows the fraction of peak external bandwidth an OpenCL kernel actually
+//! achieves depends on the memory system's *banking* as much as on the
+//! access pattern: a single in-order load unit cannot keep enough requests
+//! in flight to cover many narrow banks (HBM pseudo-channels), while a
+//! 2-bank DDR board saturates with one streamer. [`MemModel`] captures
+//! that per device with three orthogonal knobs, each an exact identity on
+//! the default Arria-10 profile so its modelled numbers (and therefore the
+//! persistent store's content keys and BENCH sinks) are bit-identical to
+//! the pre-device-zoo code:
+//!
+//! * **Stride-class efficiency** — a multiplier on the DRAM-occupancy cost
+//!   of each access, keyed by `analysis::pattern::AccessPattern`
+//!   (sequential / strided / irregular). GPUs punish uncoalesced strides;
+//!   CPU caches forgive irregular gathers.
+//! * **Bank-level parallelism** — effective capacity is peak bandwidth
+//!   scaled by `min(1, requesters * bank_queue / banks)`: with many narrow
+//!   banks, few concurrent requesters leave most banks idle. Consumed by
+//!   both `sim::perf`'s capacity term and `sim::des`'s DRAM ledger, so the
+//!   analytic and event-driven estimators agree on the device story.
+//! * **Channel fill latency** — a per-token pipe cost of
+//!   `channel_fill_cycles / depth`: on high-latency memory systems a
+//!   shallow pipe exposes the handshake latency every token, a deep pipe
+//!   amortizes it away. This is what makes the best pipe depth
+//!   *device-dependent* (the cross-device E8 grid).
 
+use crate::analysis::AccessPattern;
 use crate::ir::{Ty, Val};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+
+/// Banking / interleaving / efficiency model of one device's memory
+/// controller. Embedded in `sim::device::DeviceConfig`; see the module
+/// docs for the calibration rationale and `docs/DEVICES.md` for the
+/// per-device numbers.
+///
+/// Note: these parameters are keyed by the *device name* in the content
+/// address (not by value) — recalibrating a profile without renaming it
+/// requires a store-schema bump to invalidate stale records.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemModel {
+    /// Independent banks / pseudo-channels the controller interleaves
+    /// across (2 for a DDR4 board, 32 for HBM2 pseudo-channels).
+    pub banks: usize,
+    /// Address interleave granularity across banks, in bytes.
+    pub interleave_bytes: u64,
+    /// Outstanding requests one streaming load unit keeps in flight
+    /// (the per-requester queue depth the controller can exploit).
+    pub bank_queue: usize,
+    /// Extra channel handshake latency (cycles) a pipe endpoint exposes
+    /// per token before steady state; amortized by pipe depth via
+    /// [`MemModel::pipe_fill_cost`]. 0.0 = latency fully hidden.
+    pub channel_fill_cycles: f64,
+    /// DRAM-occupancy cost multiplier for sequential / loop-invariant
+    /// accesses (1.0 = the base LSU efficiencies already tell the story).
+    pub seq_scale: f64,
+    /// Cost multiplier for strided accesses (coalescing sensitivity).
+    pub strided_scale: f64,
+    /// Cost multiplier for irregular accesses (cache absorption < 1.0,
+    /// uncoalesced-gather penalty > 1.0).
+    pub irregular_scale: f64,
+}
+
+impl MemModel {
+    /// The identity model: every hook returns an exact no-op factor, so a
+    /// device using it reproduces the pre-device-zoo arithmetic bit for
+    /// bit (x * 1.0 and x + 0.0 are exact for finite positive f64).
+    pub fn identity(banks: usize, interleave_bytes: u64, bank_queue: usize) -> MemModel {
+        MemModel {
+            banks,
+            interleave_bytes,
+            bank_queue,
+            channel_fill_cycles: 0.0,
+            seq_scale: 1.0,
+            strided_scale: 1.0,
+            irregular_scale: 1.0,
+        }
+    }
+
+    /// Cost multiplier for one access of the given stride class.
+    pub fn stride_scale(&self, pattern: &AccessPattern) -> f64 {
+        match pattern {
+            AccessPattern::Sequential | AccessPattern::LoopInvariant => self.seq_scale,
+            AccessPattern::Strided(_) => self.strided_scale,
+            AccessPattern::Irregular => self.irregular_scale,
+        }
+    }
+
+    /// Fraction of aggregate bandwidth `requesters` concurrent streaming
+    /// kernels can actually draw: `min(1, requesters * bank_queue /
+    /// banks)`. One streamer saturates a 2-bank DDR controller
+    /// (queue >= banks) but strands most of 32 HBM pseudo-channels —
+    /// the Memory Controller Wall effect that makes kernel replication
+    /// (M2C2) and pipe fan-out *more* valuable on HBM-class parts.
+    pub fn bank_parallel_efficiency(&self, requesters: usize) -> f64 {
+        let in_flight = (requesters.max(1) * self.bank_queue.max(1)) as f64;
+        (in_flight / self.banks.max(1) as f64).min(1.0)
+    }
+
+    /// Per-token pipe cost exposed by channel handshake latency at the
+    /// given depth: `channel_fill_cycles / depth`. Deeper pipes hide the
+    /// latency; depth 1 pays it on every token.
+    pub fn pipe_fill_cost(&self, depth: usize) -> f64 {
+        self.channel_fill_cycles / depth.max(1) as f64
+    }
+}
 
 /// One global buffer.
 pub struct Buffer {
@@ -172,5 +278,46 @@ mod tests {
         let d = b.duplicate();
         b.set(0, Val::I(99));
         assert_eq!(d.get(0), Val::I(1));
+    }
+
+    #[test]
+    fn identity_model_is_an_exact_noop() {
+        let m = MemModel::identity(2, 1024, 8);
+        for p in [
+            AccessPattern::Sequential,
+            AccessPattern::Strided(7),
+            AccessPattern::LoopInvariant,
+            AccessPattern::Irregular,
+        ] {
+            assert_eq!(m.stride_scale(&p), 1.0);
+        }
+        for r in [0usize, 1, 2, 16] {
+            assert_eq!(m.bank_parallel_efficiency(r), 1.0);
+        }
+        for d in [1usize, 100, 1000] {
+            assert_eq!(m.pipe_fill_cost(d), 0.0);
+        }
+    }
+
+    #[test]
+    fn narrow_banks_starve_single_requesters() {
+        // HBM-shaped: 32 pseudo-channels, 4 requests in flight per LSU.
+        let m = MemModel { banks: 32, bank_queue: 4, ..MemModel::identity(32, 256, 4) };
+        let one = m.bank_parallel_efficiency(1);
+        let four = m.bank_parallel_efficiency(4);
+        let many = m.bank_parallel_efficiency(16);
+        assert!(one < 0.2, "one streamer should strand most HBM banks: {one}");
+        assert!(four > one && four < 1.0);
+        assert_eq!(many, 1.0, "enough requesters saturate the aggregate");
+    }
+
+    #[test]
+    fn deep_pipes_amortize_fill_latency() {
+        let m = MemModel { channel_fill_cycles: 24.0, ..MemModel::identity(32, 256, 4) };
+        assert_eq!(m.pipe_fill_cost(1), 24.0);
+        assert!(m.pipe_fill_cost(100) < 0.25);
+        assert!(m.pipe_fill_cost(1000) < m.pipe_fill_cost(100));
+        // depth 0 is normalized like PipeDecl depths are
+        assert_eq!(m.pipe_fill_cost(0), 24.0);
     }
 }

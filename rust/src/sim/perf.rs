@@ -26,6 +26,14 @@
 //! beyond `congestion_free_requesters` pay an arbitration penalty, more so
 //! for irregular traffic (the effect that makes M2C2 plateau at two
 //! producers, §4.2). A discrete-event cross-check lives in `sim::des`.
+//!
+//! The per-device memory-controller model (`sim::mem::MemModel`) hooks in
+//! at three points: each access's DRAM-occupancy cost is scaled by its
+//! stride class (`access_cost`), `CAP` is scaled by bank-level parallelism
+//! (few requesters cannot cover many narrow banks), and each pipe token
+//! pays `channel_fill_cycles / depth` on top of the handshake overhead
+//! (deep pipes hide memory latency). All three are exact identities on
+//! the default `arria10` profile — see `sim::device`.
 
 use super::device::DeviceConfig;
 use super::profile::KernelProfile;
@@ -85,17 +93,28 @@ impl LaunchMetrics {
 pub struct PerfModel {
     pub report: CompilerReport,
     pub cfg: DeviceConfig,
+    /// Per-token channel fill cost at this program's shallowest pipe
+    /// depth (`mem.channel_fill_cycles / depth`); 0.0 when the device
+    /// hides channel latency or the program has no pipes.
+    pipe_fill: f64,
 }
 
 impl PerfModel {
     pub fn new(prog: &Program, cfg: &DeviceConfig) -> PerfModel {
+        // The shallowest pipe bounds how well the whole chain hides the
+        // device's channel fill latency (a deep pipe behind a depth-1 pipe
+        // still stalls at the depth-1 handshake).
+        let min_depth = prog.pipes.iter().map(|p| p.depth.max(1)).min().unwrap_or(1);
         PerfModel {
             report: crate::analysis::program_report(prog, cfg),
             cfg: cfg.clone(),
+            pipe_fill: cfg.mem.pipe_fill_cost(min_depth),
         }
     }
 
-    /// DRAM-occupancy bytes for one access of a site.
+    /// DRAM-occupancy bytes for one access of a site, scaled by the
+    /// device's per-stride-class controller efficiency (identity on
+    /// `arria10`).
     pub fn access_cost(&self, kr: &KernelReport, site_ix: usize, seq_frac: f64) -> f64 {
         let cfg = &self.cfg;
         let site = &kr.sites[site_ix];
@@ -103,7 +122,7 @@ impl PerfModel {
             LsuKind::Prefetching => cfg.eff_seq_prefetch,
             _ => cfg.eff_seq_burst,
         };
-        match site.pattern {
+        let base = match site.pattern {
             AccessPattern::Sequential => 4.0 / seq_eff,
             AccessPattern::Strided(c) => {
                 // Unrolled/vectorized kernels produce W interleaved
@@ -123,7 +142,8 @@ impl PerfModel {
                 seq_frac * (4.0 / cfg.eff_seq_burst)
                     + (1.0 - seq_frac) * cfg.random_access_cost_bytes
             }
-        }
+        };
+        base * cfg.mem.stride_scale(&site.pattern)
     }
 
     /// Model one launch from its measured profiles (one per kernel, in
@@ -197,7 +217,11 @@ impl PerfModel {
                     }
                 }
             }
-            cb += (prof.pipe_writes + prof.pipe_reads) as f64 * cfg.channel_overhead_cycles;
+            // Each pipe token pays the steady-state handshake plus the
+            // channel fill latency the program's shallowest pipe exposes
+            // (0.0 on arria10; deep pipes amortize it on HBM-class parts).
+            cb += (prof.pipe_writes + prof.pipe_reads) as f64
+                * (cfg.channel_overhead_cycles + self.pipe_fill);
             cb += cfg.pipeline_depth as f64;
             if kernel_mem_active {
                 requesters += 1;
@@ -211,7 +235,12 @@ impl PerfModel {
             + cfg.congestion_slope_irregular * irr_share;
         let extra = requesters.saturating_sub(cfg.congestion_free_requesters) as f64;
         let congestion = 1.0 + slope * extra;
-        let capacity = cfg.dram_bytes_per_cycle(fmax) / congestion;
+        // Bank-level parallelism: few requesters cannot cover many narrow
+        // banks (HBM pseudo-channels), so effective capacity scales with
+        // the in-flight requests the launch actually sustains (exactly
+        // 1.0 on arria10 — one streamer saturates both DDR4 banks).
+        let bank_eff = cfg.mem.bank_parallel_efficiency(requesters);
+        let capacity = cfg.dram_bytes_per_cycle(fmax) * bank_eff / congestion;
         let dram_cycles = total_dram_bytes / capacity;
 
         let cb_max = per_kernel.iter().map(|(_, c)| *c).fold(0.0, f64::max);
@@ -361,5 +390,71 @@ mod tests {
         // random gathers: DRAM-bound, low achieved bandwidth
         assert!(m.dram_cycles > 0.5 * m.cycles, "should be near DRAM bound");
         assert!(m.bw_bytes_per_s < 3e9, "bw = {}", m.bw_bytes_per_s);
+    }
+
+    /// The device axis at work: a depth ladder over the same pipe program
+    /// is time-invariant on arria10 (channel fill latency fully hidden)
+    /// but strictly improves with depth on the HBM profile, whose 24-cycle
+    /// fill cost a depth-1 pipe exposes on every token.
+    #[test]
+    fn pipe_depth_matters_on_hbm_but_not_on_arria10() {
+        let n = 20_000usize;
+        let mut secs_a10 = vec![];
+        let mut secs_hbm = vec![];
+        for depth in [1usize, 1000] {
+            let ff = crate::transform::feedforward(&stream_kernel("s"), 1)
+                .unwrap()
+                .with_pipe_depth(depth);
+            let img = image(n);
+            let run = run_group(&ff, &img, &ExecOptions::default()).unwrap();
+            secs_a10
+                .push(PerfModel::new(&ff, &DeviceConfig::pac_a10()).estimate(&run.profiles).seconds);
+            secs_hbm.push(
+                PerfModel::new(&ff, &DeviceConfig::stratix10_hbm())
+                    .estimate(&run.profiles)
+                    .seconds,
+            );
+        }
+        assert_eq!(secs_a10[0], secs_a10[1], "arria10 must stay depth-invariant bit for bit");
+        assert!(
+            secs_hbm[1] < secs_hbm[0],
+            "deep pipes must amortize HBM fill latency: {secs_hbm:?}"
+        );
+    }
+
+    /// Bank-level parallelism gates a lone irregular requester on the
+    /// HBM profile: the same gather gets strictly faster if the model is
+    /// granted enough per-requester queue depth to cover all 32 banks.
+    #[test]
+    fn bank_parallelism_caps_a_lone_requester_on_hbm() {
+        let k = KernelBuilder::new("gather", KernelKind::SingleWorkItem)
+            .buf_ro("idx", Ty::I32)
+            .buf_ro("a", Ty::F32)
+            .buf_wo("o", Ty::F32)
+            .scalar("n", Ty::I32)
+            .body(vec![for_(
+                "i",
+                i(0),
+                p("n"),
+                vec![store("o", v("i"), ld("a", ld("idx", v("i"))))],
+            )])
+            .finish();
+        let n = 40_000usize;
+        let prog = Program::single(k);
+        let mut img = MemoryImage::new();
+        let idx: Vec<i64> = (0..n).map(|i| ((i as i64).wrapping_mul(48271)) % n as i64).collect();
+        img.add_i64s("idx", &idx)
+            .add_f32s("a", &vec![1.0; n])
+            .add_zeros("o", Ty::F32, n)
+            .set_i("n", n as i64);
+        let run = run_group(&prog, &img, &ExecOptions::default()).unwrap();
+
+        let starved = DeviceConfig::stratix10_hbm();
+        let mut covered = DeviceConfig::stratix10_hbm();
+        covered.mem.bank_queue = covered.mem.banks; // hypothetical deep-MLP LSU
+        let t_starved = PerfModel::new(&prog, &starved).estimate(&run.profiles);
+        let t_covered = PerfModel::new(&prog, &covered).estimate(&run.profiles);
+        assert!(t_starved.dram_cycles > 2.0 * t_covered.dram_cycles);
+        assert!(t_starved.cycles > t_covered.cycles);
     }
 }

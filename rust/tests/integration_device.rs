@@ -1,0 +1,198 @@
+//! PR-7 device-zoo integration: the calibrated registry profiles must
+//! (1) all resolve by name, (2) disagree about the best channel depth
+//! (the portability claim the E8 grid exists to show), (3) share one
+//! store's device-free trace tier so a `--device all` style sweep pays
+//! the functional interpreter once, (4) keep reading pre-zoo (schema v4)
+//! `arria10` records as hits after the v5 bump, and (5) pin every
+//! device's modelled cycle counts to the committed fixture.
+
+use pipefwd::coordinator::{cross_device_table, resolve_workload, Engine, Store};
+use pipefwd::coordinator::store::{STORE_SCHEMA, STORE_SCHEMA_COMPAT};
+use pipefwd::sim::device::{by_name, DeviceConfig, DeviceRegistry, DEVICE_NAMES};
+use pipefwd::transform::Variant;
+use pipefwd::util::json::{self, Json};
+use pipefwd::workloads::Scale;
+use std::path::{Path, PathBuf};
+
+const TRIO: [&str; 3] = ["fw", "hotspot", "mis"];
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pipefwd-device-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Every documented name resolves, carries itself as `cfg.name`, and the
+/// registry iterates in presentation order with `arria10` first (the
+/// default everywhere a device is optional).
+#[test]
+fn registry_resolves_every_documented_name() {
+    assert_eq!(DEVICE_NAMES.len(), 4);
+    for name in DEVICE_NAMES {
+        let cfg = by_name(name).unwrap_or_else(|| panic!("registry name `{name}` must resolve"));
+        assert_eq!(cfg.name, name);
+    }
+    let all = DeviceRegistry::all();
+    assert_eq!(all.len(), DEVICE_NAMES.len());
+    assert_eq!(all[0].name, "arria10");
+    assert!(by_name("all").is_none(), "`all` is CLI fan-out sugar, not a device");
+}
+
+/// The acceptance claim behind the whole zoo: at least one workload's
+/// best pipe depth differs across devices. On `arria10` the channel-fill
+/// cost is zero, every depth ties, and the strict-`<` sweep keeps depth
+/// 1; on `stratix10-hbm` deep channels amortise the 24-cycle fill and
+/// the deepest depth wins.
+#[test]
+fn best_depth_disagrees_across_the_registry() {
+    let a10 = Engine::new(DeviceConfig::pac_a10(), 2);
+    let hbm = Engine::new(DeviceConfig::stratix10_hbm(), 2);
+    let w = resolve_workload("fw").unwrap();
+    let a = a10.best_ff(w.as_ref(), Scale::Tiny).unwrap();
+    let h = hbm.best_ff(w.as_ref(), Scale::Tiny).unwrap();
+    assert_eq!(a.variant, "ff(d1)", "zero fill cost: all depths tie, depth 1 kept");
+    assert_eq!(h.variant, "ff(d1000)", "24-cycle fill: the deepest depth strictly wins");
+
+    // ... and the stitched `--device all` table shows it: one row per
+    // (benchmark, device), fw's two rows naming different best variants
+    let engines = [&a10, &hbm];
+    let t = cross_device_table(&engines, Scale::Tiny);
+    assert_eq!(t.rows.len(), TRIO.len() * engines.len());
+    let fw: Vec<&Vec<String>> = t.rows.iter().filter(|r| r[0] == "fw").collect();
+    assert_eq!(fw.len(), 2);
+    assert_eq!(fw[0][1], "arria10");
+    assert_eq!(fw[1][1], "stratix10-hbm");
+    assert_ne!(fw[0][3], fw[1][3], "the best-FF column is where portability breaks");
+}
+
+/// A `--device all` sweep through one shared store directory pays the
+/// functional interpreter only for the first device: trace keys are
+/// device-free, so every later engine answers its trace lookups from the
+/// store and only replays the per-device performance model.
+#[test]
+fn cross_device_sweep_pays_the_interpreter_once() {
+    let dir = tmp_dir("all-sweep");
+    for (i, cfg) in DeviceRegistry::all().into_iter().enumerate() {
+        let e = Engine::new(cfg, 2).with_store(Store::open(&dir).unwrap());
+        for name in TRIO {
+            let w = resolve_workload(name).unwrap();
+            e.measure(w.as_ref(), Variant::Baseline, Scale::Tiny).unwrap();
+            e.best_ff(w.as_ref(), Scale::Tiny).unwrap();
+        }
+        if i == 0 {
+            assert!(e.trace_runs() > 0, "the first device must run the interpreter");
+        } else {
+            assert_eq!(
+                e.trace_runs(),
+                0,
+                "device #{i} must replay the shared device-free traces, not re-interpret"
+            );
+            assert!(e.simulations() > 0, "the per-device model replay is real work");
+        }
+        e.store().unwrap().write_manifest().unwrap();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Rewrite every non-manifest store record from the v5 schema string to
+/// the v4 one, mimicking a store written before the device zoo existed
+/// (`arria10` content keys are unchanged by design).
+fn downgrade_records(dir: &Path) -> usize {
+    let mut n = 0;
+    for entry in std::fs::read_dir(dir).unwrap() {
+        let p = entry.unwrap().path();
+        if p.is_dir() {
+            n += downgrade_records(&p);
+            continue;
+        }
+        if p.file_name().and_then(|s| s.to_str()) == Some("MANIFEST.json") {
+            continue;
+        }
+        let Ok(text) = std::fs::read_to_string(&p) else { continue };
+        if text.contains(STORE_SCHEMA) {
+            std::fs::write(&p, text.replace(STORE_SCHEMA, STORE_SCHEMA_COMPAT)).unwrap();
+            n += 1;
+        }
+    }
+    n
+}
+
+/// Store compatibility across the v5 bump: records written under the v4
+/// schema (pre-device-zoo, necessarily `arria10`) must replay as warm
+/// hits — zero simulations, zero interpreter runs — because `arria10`
+/// deliberately hashes to the same content keys as before the zoo.
+#[test]
+fn pre_zoo_arria10_records_hit_after_schema_bump() {
+    let dir = tmp_dir("v4-compat");
+    let cold = Engine::new(DeviceConfig::pac_a10(), 2).with_store(Store::open(&dir).unwrap());
+    let w = resolve_workload("fw").unwrap();
+    let cold_m = cold.measure(w.as_ref(), Variant::FeedForward { depth: 1 }, Scale::Tiny).unwrap();
+    assert!(cold.simulations() > 0);
+    cold.store().unwrap().write_manifest().unwrap();
+
+    assert!(downgrade_records(&dir) > 0, "the cold run must have persisted v5 records");
+
+    let warm = Engine::new(DeviceConfig::pac_a10(), 2).with_store(Store::open(&dir).unwrap());
+    let warm_m = warm.measure(w.as_ref(), Variant::FeedForward { depth: 1 }, Scale::Tiny).unwrap();
+    assert_eq!(warm.simulations(), 0, "v4 records must answer a v5 engine's lookups");
+    assert_eq!(warm.trace_runs(), 0);
+    assert!(warm.store_hits() > 0);
+    assert_eq!(warm_m.seconds, cold_m.seconds);
+    assert_eq!(warm_m.cycles, cold_m.cycles);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Golden per-device numbers, pinned to `tests/fixtures/device_cycles.json`.
+///
+/// The fixture self-blesses: committed with `"blessed": false`, the first
+/// `cargo test` run fills in the modelled cycle counts and flips the
+/// flag; every later run compares strictly. Re-bless after an intentional
+/// model change by resetting the file to `"blessed": false`.
+#[test]
+fn golden_cycles_match_the_committed_fixture() {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/device_cycles.json");
+    let text = std::fs::read_to_string(&path).expect("committed fixture must exist");
+    let committed = json::parse(&text).expect("fixture must parse");
+    assert_eq!(committed.get("schema").unwrap().as_str(), Some("pipefwd-device-fixture-v1"));
+    let blessed = committed.get("blessed").unwrap().as_bool().unwrap();
+
+    let mut devices: Vec<(String, Json)> = vec![];
+    for cfg in DeviceRegistry::all() {
+        let name = cfg.name;
+        let e = Engine::new(cfg, 2);
+        let mut rows: Vec<(String, Json)> = vec![];
+        for bench in TRIO {
+            let w = resolve_workload(bench).unwrap();
+            let base = e.measure(w.as_ref(), Variant::Baseline, Scale::Tiny).unwrap();
+            let ff = e.best_ff(w.as_ref(), Scale::Tiny).unwrap();
+            rows.push((
+                bench.to_string(),
+                Json::Obj(vec![
+                    ("baseline_cycles".into(), Json::Num(base.cycles)),
+                    ("best_variant".into(), Json::Str(ff.variant.clone())),
+                    ("ff_cycles".into(), Json::Num(ff.cycles)),
+                ]),
+            ));
+        }
+        devices.push((name.to_string(), Json::Obj(rows)));
+    }
+    let current = Json::Obj(vec![
+        ("schema".into(), Json::Str("pipefwd-device-fixture-v1".into())),
+        ("blessed".into(), Json::Bool(true)),
+        ("scale".into(), Json::Str("tiny".into())),
+        ("devices".into(), Json::Obj(devices)),
+    ]);
+
+    if !blessed {
+        std::fs::write(&path, current.to_pretty()).expect("blessing the fixture");
+        eprintln!("blessed {} — reruns now compare against these numbers", path.display());
+        return;
+    }
+    assert_eq!(
+        committed.to_pretty(),
+        current.to_pretty(),
+        "per-device modelled cycles drifted from the blessed fixture — if the model \
+         change is intentional, reset the fixture to `\"blessed\": false` and rerun"
+    );
+}

@@ -67,7 +67,12 @@ fn three_concurrent_clients_cost_one_cold_grid() {
             std::thread::spawn(move || {
                 net::request(
                     &addr,
-                    &ServiceRequest::Run { experiments: exps, scale: Scale::Tiny, shard: None },
+                    &ServiceRequest::Run {
+                        experiments: exps,
+                        scale: Scale::Tiny,
+                        shard: None,
+                        device: None,
+                    },
                 )
                 .expect("daemon run request")
             })
@@ -124,7 +129,12 @@ fn daemon_sweep_matches_serial_sink_bytes() {
     let depths = vec![1usize, 100];
     let items = net::request(
         &addr,
-        &ServiceRequest::Sweep { benches: benches.clone(), depths: depths.clone(), scale: Scale::Tiny },
+        &ServiceRequest::Sweep {
+            benches: benches.clone(),
+            depths: depths.clone(),
+            scale: Scale::Tiny,
+            device: None,
+        },
     )
     .unwrap();
     let bench = service::cells_to_bench(&items, Scale::Tiny, &[]).unwrap();
@@ -200,6 +210,7 @@ fn malformed_requests_are_rejected_without_killing_the_accept_loop() {
             workload: "fw".into(),
             variant: Variant::FeedForward { depth: 1 },
             scale: Scale::Tiny,
+            device: None,
         },
     )
     .expect("daemon must survive wire abuse");
@@ -222,6 +233,7 @@ fn mid_stream_disconnect_does_not_abandon_the_claim() {
         workload: "fw".into(),
         variant: Variant::FeedForward { depth: 1 },
         scale: Scale::Tiny,
+        device: None,
     };
     let body = service::encode_request(&req).to_compact();
     {
@@ -271,6 +283,7 @@ fn store_records_roundtrip_between_daemon_and_client() {
         workload: "fw".into(),
         variant: Variant::FeedForward { depth: 1 },
         scale: Scale::Tiny,
+        device: None,
     };
     net::request(&addr, &req).unwrap();
 

@@ -130,6 +130,8 @@ fn tune_report_json_is_well_formed() {
     assert_eq!(doc.get("schema").unwrap().as_str(), Some("pipefwd-tune-v1"));
     assert_eq!(doc.get("policy").unwrap().as_str(), Some("golden"));
     assert_eq!(doc.get("budget").unwrap().as_usize(), Some(40));
+    // "which depth on which device": the report names its device profile
+    assert_eq!(doc.get("device").unwrap().as_str(), Some("arria10"));
     let workloads = doc.get("workloads").unwrap().as_array().unwrap();
     assert_eq!(workloads.len(), TRIO.len());
     for w in workloads {
