@@ -1,0 +1,326 @@
+//! Launch-dependence analysis: from an execution trace to a launch DAG.
+//!
+//! The execution model's scheduling unit used to be one host launch; this
+//! pass is what lets it become a launch *graph* (the MKPipe observation:
+//! independent pipe-connected kernels from different launches should
+//! overlap). Given a built [`App`] and the [`ExecTrace`] the interpreter
+//! recorded, it derives each launch's buffer read/write sets from the
+//! launch unit's kernel signatures and emits conservative
+//! RAW / WAR / WAW dependence edges between every pair of launches that
+//! share a buffer.
+//!
+//! § Vouches as edge-removal rules. The suite's documented benign-race
+//! vouches ([`crate::workloads::Workload::benign_cross_kernel_races`])
+//! state that whatever value a racing read observes, results and profiles
+//! are identical — e.g. bfs's concurrent `cost` stores all write the
+//! idempotent `level + 1`, and its `updating` mask is a monotonic OR.
+//! Under a vouch, anti- (WAR) and output- (WAW) dependences between
+//! launches stop constraining the schedule: reordering a read before an
+//! overwrite, or two writes against each other, can only expose a racing
+//! value the vouch already declares immaterial. True dataflow (RAW)
+//! edges are **always kept** — a vouch never licenses consuming a value
+//! before it is produced. NW vouches nothing, and its single `m` buffer
+//! is read-write in every launch, so repeated NW launches chain through
+//! RAW (and WAR/WAW) edges no matter what: the DAG provably refuses to
+//! overlap its depth-sensitive recurrence.
+//!
+//! Host-side ping-pong swaps (`MemoryImage::swap_bufs`, pagerank/color)
+//! are invisible at this layer by design: the trace names buffers as the
+//! kernels declare them, so `pr` and `pr_next` stay distinct names and an
+//! iteration's gather never RAW-depends on the next iteration's contrib.
+//! That is exactly the legalization `transform::task_sequence` models —
+//! cross-iteration values flow through inter-iteration pipes instead of a
+//! reread of the swapped buffer — and it is sound precisely when the
+//! workload carries a vouch; see `docs/SCHEDULING.md` for the worked
+//! table.
+
+use crate::ir::Access;
+use crate::workloads::{App, ExecTrace};
+use std::collections::BTreeSet;
+
+/// One launch of the trace, with the buffer sets the dependence test uses.
+#[derive(Debug, Clone)]
+pub struct LaunchNode {
+    /// Index into the trace's launch list (host order).
+    pub index: usize,
+    /// Launch-unit name (`LaunchRecord::unit`).
+    pub unit: String,
+    /// Buffers any kernel of the unit may read (ReadOnly | ReadWrite).
+    pub reads: BTreeSet<String>,
+    /// Buffers any kernel of the unit may write (WriteOnly | ReadWrite).
+    pub writes: BTreeSet<String>,
+}
+
+/// Dependence kind between two launches sharing a buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DepKind {
+    /// True dataflow: an earlier launch writes what a later launch reads.
+    /// Never removable.
+    Raw,
+    /// Anti-dependence: an earlier launch reads what a later launch
+    /// writes. Removed under a benign-race vouch.
+    War,
+    /// Output dependence: two launches write the same buffer. Removed
+    /// under a benign-race vouch.
+    Waw,
+}
+
+impl DepKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            DepKind::Raw => "RAW",
+            DepKind::War => "WAR",
+            DepKind::Waw => "WAW",
+        }
+    }
+}
+
+/// One ordering edge: launch `from` must complete before launch `to`.
+#[derive(Debug, Clone)]
+pub struct DepEdge {
+    pub from: usize,
+    pub to: usize,
+    pub kind: DepKind,
+    /// The shared buffer inducing the edge.
+    pub buf: String,
+}
+
+/// The launch-dependence DAG plus its topological wavefront assignment.
+/// Edges always point forward in host-launch order, so the node index
+/// order is already topological.
+#[derive(Debug, Clone)]
+pub struct LaunchDag {
+    pub nodes: Vec<LaunchNode>,
+    pub edges: Vec<DepEdge>,
+    /// `levels[i]` = longest dependence-edge path ending at launch `i`.
+    /// Launches with equal level are mutually unordered and may be
+    /// co-scheduled (one DES wavefront).
+    pub levels: Vec<usize>,
+}
+
+impl LaunchDag {
+    /// Build the DAG for a recorded trace of `app`. `benign` is the
+    /// workload's cross-kernel benign-race vouch: when set, WAR and WAW
+    /// edges are dropped (see the module docs); RAW edges are kept
+    /// unconditionally.
+    pub fn build(app: &App, trace: &ExecTrace, benign: bool) -> Result<LaunchDag, String> {
+        let mut nodes = Vec::with_capacity(trace.launches.len());
+        for (index, rec) in trace.launches.iter().enumerate() {
+            let Some(unit) = app.units.iter().find(|u| u.name == rec.unit) else {
+                return Err(format!(
+                    "deps: trace launch {index}: no unit `{}` in app {}",
+                    rec.unit, app.name
+                ));
+            };
+            let mut reads = BTreeSet::new();
+            let mut writes = BTreeSet::new();
+            for k in &unit.kernels {
+                for b in &k.bufs {
+                    match b.access {
+                        Access::ReadOnly => {
+                            reads.insert(b.name.clone());
+                        }
+                        Access::WriteOnly => {
+                            writes.insert(b.name.clone());
+                        }
+                        Access::ReadWrite => {
+                            reads.insert(b.name.clone());
+                            writes.insert(b.name.clone());
+                        }
+                    }
+                }
+            }
+            nodes.push(LaunchNode { index, unit: rec.unit.clone(), reads, writes });
+        }
+
+        let mut edges = vec![];
+        for j in 0..nodes.len() {
+            for i in 0..j {
+                for buf in &nodes[i].writes {
+                    if nodes[j].reads.contains(buf) {
+                        edges.push(DepEdge {
+                            from: i,
+                            to: j,
+                            kind: DepKind::Raw,
+                            buf: buf.clone(),
+                        });
+                    }
+                    if !benign && nodes[j].writes.contains(buf) {
+                        edges.push(DepEdge {
+                            from: i,
+                            to: j,
+                            kind: DepKind::Waw,
+                            buf: buf.clone(),
+                        });
+                    }
+                }
+                if !benign {
+                    for buf in &nodes[i].reads {
+                        if nodes[j].writes.contains(buf) {
+                            edges.push(DepEdge {
+                                from: i,
+                                to: j,
+                                kind: DepKind::War,
+                                buf: buf.clone(),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+
+        // Edges always point forward in host-launch order (`from < to`),
+        // so index order is topological and one pass computes the
+        // longest-path level of every node.
+        let mut levels = vec![0usize; nodes.len()];
+        for j in 0..nodes.len() {
+            let mut lvl = 0usize;
+            for e in edges.iter().filter(|e| e.to == j) {
+                lvl = lvl.max(levels[e.from] + 1);
+            }
+            levels[j] = lvl;
+        }
+
+        Ok(LaunchDag { nodes, edges, levels })
+    }
+
+    /// Launch indices grouped by level, ascending — the co-schedulable
+    /// wavefronts in execution order.
+    pub fn wavefronts(&self) -> Vec<Vec<usize>> {
+        let max = self.levels.iter().copied().max().unwrap_or(0);
+        let mut waves = vec![vec![]; if self.nodes.is_empty() { 0 } else { max + 1 }];
+        for (i, &lvl) in self.levels.iter().enumerate() {
+            waves[lvl].push(i);
+        }
+        waves
+    }
+
+    pub fn wavefront_count(&self) -> usize {
+        self.wavefronts().len()
+    }
+
+    /// True when the DAG admits no overlap at all: every launch is its
+    /// own wavefront (a full chain). This is the property the scheduler
+    /// checks before refusing to co-schedule — NW's repeated launches
+    /// are provably a chain.
+    pub fn is_chain(&self) -> bool {
+        self.wavefront_count() == self.nodes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transform::Variant;
+    use crate::workloads::{by_name, LaunchRecord};
+
+    fn synthetic_trace(units: &[&str]) -> ExecTrace {
+        ExecTrace {
+            launches: units
+                .iter()
+                .map(|u| LaunchRecord { unit: (*u).to_string(), profiles: vec![] })
+                .collect(),
+        }
+    }
+
+    /// Repeated NW launches chain fully: `m` is read-write every launch,
+    /// so RAW edges alone force one wavefront per launch — with or
+    /// without a vouch. This is the acceptance-criteria proof that the
+    /// dependence layer refuses to overlap NW's depth-sensitive
+    /// recurrence.
+    #[test]
+    fn nw_repeated_launches_are_never_overlapped() {
+        let w = by_name("nw").unwrap();
+        let app = w.build(Variant::FeedForward { depth: 1 }).unwrap();
+        let trace = synthetic_trace(&["nw_kernel"; 6]);
+        for benign in [false, true] {
+            let dag = LaunchDag::build(&app, &trace, benign).unwrap();
+            assert!(dag.is_chain(), "nw chain must never overlap (benign={benign})");
+            assert_eq!(dag.wavefront_count(), 6);
+            assert_eq!(dag.levels, vec![0, 1, 2, 3, 4, 5]);
+            // the chain is carried by true dataflow on `m`, which no
+            // vouch may remove
+            assert!(dag
+                .edges
+                .iter()
+                .any(|e| e.kind == DepKind::Raw && e.buf == "m"));
+        }
+        // unvouched, the anti/output dependences are reported too
+        let dag = LaunchDag::build(&app, &trace, false).unwrap();
+        assert!(dag.edges.iter().any(|e| e.kind == DepKind::War));
+        assert!(dag.edges.iter().any(|e| e.kind == DepKind::Waw));
+    }
+
+    /// bfs's vouch turns its 3-launch-per-level chain into overlapping
+    /// wavefronts: clears read nothing (level 0 forever), and the RAW
+    /// backbone clear/kernel -> update -> next kernel remains.
+    #[test]
+    fn bfs_vouch_admits_overlap_but_keeps_raw_backbone() {
+        let w = by_name("bfs").unwrap();
+        let app = w.build(Variant::FeedForward { depth: 1 }).unwrap();
+        // two host levels of the convergence loop
+        let trace = synthetic_trace(&[
+            "bfs_clear", "bfs_kernel", "bfs_update",
+            "bfs_clear", "bfs_kernel", "bfs_update",
+        ]);
+        let dag = LaunchDag::build(&app, &trace, true).unwrap();
+        assert!(dag.edges.iter().all(|e| e.kind == DepKind::Raw), "vouch removes WAR/WAW");
+        // clears have no reads at all: always schedulable immediately
+        assert_eq!(dag.levels[0], 0);
+        assert_eq!(dag.levels[3], 0);
+        // updates consume `updating` written by clear+kernel of their level
+        assert!(dag.levels[2] > dag.levels[1]);
+        // next level's kernel reads frontier/visited from the update
+        assert!(dag.levels[4] > dag.levels[2]);
+        assert!(
+            dag.wavefront_count() < dag.nodes.len(),
+            "vouched bfs must overlap: {} wavefronts for {} launches",
+            dag.wavefront_count(),
+            dag.nodes.len()
+        );
+        // without the vouch, WAW on `updating` (clear vs kernel) and WAR
+        // edges restore a denser order
+        let strict = LaunchDag::build(&app, &trace, false).unwrap();
+        assert!(strict.edges.len() > dag.edges.len());
+        assert!(strict.wavefront_count() >= dag.wavefront_count());
+    }
+
+    /// pagerank's ping-pong iteration collapses to two wavefronts under
+    /// the vouch: every contrib is independent (reads `pr`, which no
+    /// launch writes by name — the swap is host-side), every gather only
+    /// RAW-depends on contribs.
+    #[test]
+    fn pagerank_pingpong_collapses_to_two_wavefronts() {
+        let w = by_name("pagerank").unwrap();
+        let app = w.build(Variant::FeedForward { depth: 1 }).unwrap();
+        let trace = synthetic_trace(&[
+            "pagerank_contrib", "pagerank_kernel",
+            "pagerank_contrib", "pagerank_kernel",
+            "pagerank_contrib", "pagerank_kernel",
+        ]);
+        let dag = LaunchDag::build(&app, &trace, true).unwrap();
+        assert_eq!(dag.wavefront_count(), 2, "levels: {:?}", dag.levels);
+        assert_eq!(dag.levels, vec![0, 1, 0, 1, 0, 1]);
+        assert!(!dag.is_chain());
+        // unvouched, WAW on `contrib` chains the contribs
+        let strict = LaunchDag::build(&app, &trace, false).unwrap();
+        assert!(strict.wavefront_count() > 2);
+    }
+
+    #[test]
+    fn unknown_unit_is_a_clean_error() {
+        let w = by_name("nw").unwrap();
+        let app = w.build(Variant::Baseline).unwrap();
+        let trace = synthetic_trace(&["no_such_unit"]);
+        assert!(LaunchDag::build(&app, &trace, false).is_err());
+    }
+
+    #[test]
+    fn empty_trace_has_no_wavefronts() {
+        let w = by_name("nw").unwrap();
+        let app = w.build(Variant::Baseline).unwrap();
+        let dag = LaunchDag::build(&app, &ExecTrace::default(), false).unwrap();
+        assert_eq!(dag.wavefront_count(), 0);
+        assert!(dag.wavefronts().is_empty());
+    }
+}

@@ -9,6 +9,7 @@
 //! [`report::CompilerReport`].
 
 pub mod area;
+pub mod deps;
 pub mod ii;
 pub mod lcd;
 pub mod lsu;
@@ -16,6 +17,7 @@ pub mod pattern;
 pub mod report;
 
 pub use area::{estimate_program_area, AreaEstimate};
+pub use deps::{DepEdge, DepKind, LaunchDag, LaunchNode};
 pub use ii::{loop_iis, LoopII};
 pub use lcd::{analyze_lcd, DlcdInfo, LcdAnalysis, MlcdInfo};
 pub use lsu::{select_lsus, LsuKind, MemSite, MemSiteKind};

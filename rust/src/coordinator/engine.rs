@@ -78,6 +78,23 @@
 //!   units (NW) keep their real depths. Vouches are claims about the
 //!   *interpreter*, not the model — modelled time may (and on HBM-class
 //!   profiles does) depend on depth even for vouched workloads.
+//!
+//! # The launch-graph axis (overlap)
+//!
+//! The scheduling unit used to be one launch; it is now a launch *graph*.
+//! With overlap on ([`Engine::with_overlap`] / `run --overlap`), the
+//! modelling tier replays the recorded launch trace as a dependence DAG
+//! (`analysis::deps`) and co-schedules mutually unordered launches
+//! through the graph DES (`sim::des::simulate_graph`) — MKPipe-style
+//! multi-kernel overlap. Key shape follows the `device=` precedent:
+//! overlap-on measurements get a dedicated trailing `overlap=on`
+//! signature line that is **omitted when off**, so every overlap-off key
+//! is byte for byte the pre-overlap key and existing stores stay warm.
+//! Overlapped rows carry a `+ov` variant-label suffix in the results
+//! sink (sequential and overlapped measurements of one cell must sort
+//! apart in [`experiments::canonical_sort`]), and their `launches` field
+//! reports DAG wavefronts — the scheduling unit under overlap. The trace
+//! tier is untouched: both legs of E9 share one interpreter run.
 
 use super::experiments::{self, Measurement, DEPTHS};
 use super::scale_label;
@@ -90,8 +107,8 @@ use crate::transform::Variant;
 use crate::util::json::Json;
 use crate::workloads::micro::{Micro, MicroSpec};
 use crate::workloads::{
-    by_name, is_validation_error, replay_built_workload, run_built_workload_recorded, suite,
-    unit_depth_invariant, ExecTrace, Scale, Workload,
+    by_name, is_validation_error, replay_built_workload, replay_built_workload_overlapped,
+    run_built_workload_recorded, suite, unit_depth_invariant, ExecTrace, Scale, Workload,
 };
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -103,6 +120,10 @@ pub const SWEEP_TRIO: [&str; 3] = ["fw", "hotspot", "mis"];
 pub const INTEXT_NAMES: [&str; 6] = ["fw", "backprop", "mis", "bfs", "nw", "hotspot"];
 /// Benchmarks of the vector-type case study (E4e).
 pub const VECTOR_NAMES: [&str; 2] = ["fw", "mis"];
+/// Multi-launch graph workloads of the overlap study (E9): each drives a
+/// host loop launching several kernels per iteration, so the launch
+/// dependence DAG has real width for the scheduler to exploit.
+pub const GRAPH_TRIO: [&str; 3] = ["bfs", "color", "pagerank"];
 
 // ---------------------------------------------------------------------------
 // Experiment index
@@ -131,6 +152,12 @@ pub enum ExperimentId {
     /// registry's rows together via [`cross_device_table`]). Its cells
     /// are a subset of E4's, so it adds no new reachable store keys.
     E8,
+    /// Launch-graph overlap study: sequential vs overlapped modelled
+    /// time on the multi-launch graph workloads ([`GRAPH_TRIO`]). Both
+    /// legs are DES-modelled over one shared trace, so the delta
+    /// isolates scheduling — the dependence DAG's width — not estimator
+    /// choice.
+    E9,
 }
 
 impl ExperimentId {
@@ -144,11 +171,12 @@ impl ExperimentId {
             "E6" => Some(ExperimentId::E6),
             "E7" => Some(ExperimentId::E7),
             "E8" => Some(ExperimentId::E8),
+            "E9" => Some(ExperimentId::E9),
             _ => None,
         }
     }
 
-    pub fn all() -> [ExperimentId; 8] {
+    pub fn all() -> [ExperimentId; 9] {
         [
             ExperimentId::E1,
             ExperimentId::E2,
@@ -158,6 +186,7 @@ impl ExperimentId {
             ExperimentId::E6,
             ExperimentId::E7,
             ExperimentId::E8,
+            ExperimentId::E9,
         ]
     }
 
@@ -171,6 +200,7 @@ impl ExperimentId {
             ExperimentId::E6 => "E6",
             ExperimentId::E7 => "E7",
             ExperimentId::E8 => "E8",
+            ExperimentId::E9 => "E9",
         }
     }
 }
@@ -324,6 +354,16 @@ pub fn grid(exp: ExperimentId, scale: Scale) -> Vec<Cell> {
                 }
             }
         }
+        ExperimentId::E9 => {
+            // Both legs of the overlap study replay these cells' shared
+            // traces; the overlapped leg is keyed separately (trailing
+            // `overlap=on` signature line) and measured by the renderer
+            // itself — grid cells can only express (workload, variant,
+            // scale).
+            for name in GRAPH_TRIO {
+                cells.push(Cell::new(name, Variant::FeedForward { depth: 1 }, scale));
+            }
+        }
     }
     cells
 }
@@ -384,6 +424,40 @@ pub fn content_key(
     use_des: bool,
 ) -> u64 {
     fnv1a64(content_signature(workload, app, scale, cfg, use_des).as_bytes())
+}
+
+/// [`content_signature`] extended with the launch-graph axis. Follows the
+/// `device=` precedent exactly: overlap-on signatures carry a dedicated
+/// trailing `overlap=on` line, overlap-off signatures are byte for byte
+/// the 5-argument form — so every record written before the overlap axis
+/// existed stays a warm hit, and the 5-argument [`content_key`] remains
+/// the canonical overlap-off address (`merge`, `gc`, and the store views
+/// keep calling it directly).
+pub fn content_signature_with(
+    workload: &str,
+    app: &crate::workloads::App,
+    scale: Scale,
+    cfg: &DeviceConfig,
+    use_des: bool,
+    overlap: bool,
+) -> String {
+    let mut sig = content_signature(workload, app, scale, cfg, use_des);
+    if overlap {
+        sig.push_str("overlap=on\n");
+    }
+    sig
+}
+
+/// [`content_signature_with`] hashed down to the store's 64-bit key.
+pub fn content_key_with(
+    workload: &str,
+    app: &crate::workloads::App,
+    scale: Scale,
+    cfg: &DeviceConfig,
+    use_des: bool,
+    overlap: bool,
+) -> u64 {
+    fnv1a64(content_signature_with(workload, app, scale, cfg, use_des, overlap).as_bytes())
 }
 
 /// The trace tier's content signature: what the *functional interpreter*
@@ -591,6 +665,11 @@ pub struct Engine {
     /// model (`run --des`). Part of the content address, so both estimates
     /// cache side by side.
     pub use_des: bool,
+    /// Model launch traces as dependence DAGs and co-schedule unordered
+    /// launches through the graph DES (`run --overlap`). Part of the
+    /// content address (trailing `overlap=on` signature line), so
+    /// sequential and overlapped measurements cache side by side.
+    pub overlap: bool,
     cache: ClaimCache<CellResult>,
     /// Trace-tier memo table (depth-invariant keys — see [`trace_key`]):
     /// the in-process layer that lets a cold depth sweep run the
@@ -617,6 +696,7 @@ impl Engine {
             cfg,
             jobs: jobs.max(1),
             use_des: false,
+            overlap: false,
             cache: ClaimCache::new(),
             traces: ClaimCache::new(),
             store: None,
@@ -639,6 +719,16 @@ impl Engine {
     /// Switch the estimator to the discrete-event simulator.
     pub fn with_des(mut self, use_des: bool) -> Engine {
         self.use_des = use_des;
+        self
+    }
+
+    /// Switch the scheduler to launch-graph overlap: measurements model
+    /// the recorded trace as a dependence DAG and co-schedule unordered
+    /// launches in wavefronts (always through the graph DES — overlap is
+    /// a property of the event-driven scheduler, so the analytic model
+    /// cannot express it and `use_des` only keys the cache here).
+    pub fn with_overlap(mut self, overlap: bool) -> Engine {
+        self.overlap = overlap;
         self
     }
 
@@ -742,13 +832,28 @@ impl Engine {
         variant: Variant,
         scale: Scale,
     ) -> Result<Measurement, String> {
+        self.measure_opts(w, variant, scale, self.use_des, self.overlap)
+    }
+
+    /// [`Engine::measure`] under explicit estimator/scheduler options,
+    /// independent of the engine's defaults. The E9 renderer uses this to
+    /// measure both legs of the overlap study through one engine (shared
+    /// memo cache, shared trace tier, one store).
+    pub fn measure_opts(
+        &self,
+        w: &dyn Workload,
+        variant: Variant,
+        scale: Scale,
+        use_des: bool,
+        overlap: bool,
+    ) -> Result<Measurement, String> {
         let app = match w.build(variant) {
             Ok(app) => app,
             // feasibility-class: searches may skip these like validation
             // failures (see workloads::INFEASIBLE_PREFIX)
             Err(e) => return Err(format!("{}{e}", crate::workloads::INFEASIBLE_PREFIX)),
         };
-        let key = content_key(w.name(), &app, scale, &self.cfg, self.use_des);
+        let key = content_key_with(w.name(), &app, scale, &self.cfg, use_des, overlap);
         if let Some(r) = self.cache.get_or_claim(key) {
             return r;
         }
@@ -761,9 +866,9 @@ impl Engine {
             }
         }
         self.simulations.fetch_add(1, Ordering::Relaxed);
-        let result = self.compute_measurement(w, &app, variant, scale);
+        let result = self.compute_measurement(w, &app, variant, scale, use_des, overlap);
         if let Some(store) = &self.store {
-            if let Err(e) = store.put(key, &result, self.use_des) {
+            if let Err(e) = store.put(key, &result, use_des) {
                 self.store_errors.fetch_add(1, Ordering::Relaxed);
                 eprintln!("store: persisting {} failed: {e}", super::store::key_hex(key));
             }
@@ -781,12 +886,15 @@ impl Engine {
         app: &crate::workloads::App,
         variant: Variant,
         scale: Scale,
+        use_des: bool,
+        overlap: bool,
     ) -> CellResult {
         let tkey = trace_key(w.name(), w.benign_cross_kernel_races(), app, scale);
 
         // in-process trace memo (claims the slot on a miss)
         if let Some(tr) = self.traces.get_or_claim(tkey) {
-            if let Some(r) = self.result_from_trace(w, app, variant, scale, &tr) {
+            if let Some(r) = self.result_from_trace(w, app, variant, scale, use_des, overlap, &tr)
+            {
                 // a hit only once the replay actually answered — same
                 // accounting as the store tier below
                 self.trace_hits.fetch_add(1, Ordering::Relaxed);
@@ -794,7 +902,8 @@ impl Engine {
             }
             // corrupt/stale memoized trace (should not happen in-process):
             // re-acquire and overwrite the slot
-            return self.acquire_trace_and_measure(w, app, variant, scale, tkey, None);
+            return self
+                .acquire_trace_and_measure(w, app, variant, scale, use_des, overlap, tkey, None);
         }
         let tguard = self.traces.claim_guard(tkey);
 
@@ -802,7 +911,9 @@ impl Engine {
         if let Some(store) = &self.store {
             if let Some(tr) = store.get_trace(tkey) {
                 let tr = Arc::new(tr);
-                if let Some(r) = self.result_from_trace(w, app, variant, scale, &tr) {
+                if let Some(r) =
+                    self.result_from_trace(w, app, variant, scale, use_des, overlap, &tr)
+                {
                     self.trace_hits.fetch_add(1, Ordering::Relaxed);
                     tguard.fulfil(tr);
                     return r;
@@ -817,24 +928,43 @@ impl Engine {
                 );
             }
         }
-        self.acquire_trace_and_measure(w, app, variant, scale, tkey, Some(tguard))
+        self.acquire_trace_and_measure(w, app, variant, scale, use_des, overlap, tkey, Some(tguard))
     }
 
     /// Replay a cached trace through the modelling tier. `None` = the
-    /// trace does not fit this app (caller re-acquires).
+    /// trace does not fit this app (caller re-acquires). With `overlap`
+    /// the trace replays as a dependence DAG through the graph DES; the
+    /// resulting row carries the `+ov` variant suffix and reports
+    /// wavefronts in place of launches ([`Measurement::overlapped`]).
+    #[allow(clippy::too_many_arguments)]
     fn result_from_trace(
         &self,
         w: &dyn Workload,
         app: &crate::workloads::App,
         variant: Variant,
         scale: Scale,
+        use_des: bool,
+        overlap: bool,
         tr: &TraceResult,
     ) -> Option<CellResult> {
         match tr {
             // the recorded run failed (execution or validation error) —
             // depth-invariant like the trace itself, so it IS the result
             Err(e) => Some(Err(e.clone())),
-            Ok(trace) => match replay_built_workload(app, &self.cfg, self.use_des, trace) {
+            Ok(trace) if overlap => {
+                match replay_built_workload_overlapped(
+                    app,
+                    &self.cfg,
+                    w.benign_cross_kernel_races(),
+                    trace,
+                ) {
+                    Ok((h, waves)) => {
+                        Some(Ok(Measurement::overlapped(w, variant, scale, &h, waves)))
+                    }
+                    Err(_) => None,
+                }
+            }
+            Ok(trace) => match replay_built_workload(app, &self.cfg, use_des, trace) {
                 Ok(h) => Some(Ok(Measurement::from_harness(w, variant, scale, &h))),
                 Err(_) => None,
             },
@@ -844,20 +974,34 @@ impl Engine {
     /// The expensive tier: one recorded interpreter run. Persists the
     /// trace (write-behind; failures only warn — the measurement result
     /// itself is persisted separately) and fulfils the memo slot.
+    #[allow(clippy::too_many_arguments)]
     fn acquire_trace_and_measure(
         &self,
         w: &dyn Workload,
         app: &crate::workloads::App,
         variant: Variant,
         scale: Scale,
+        use_des: bool,
+        overlap: bool,
         tkey: u64,
         guard: Option<ClaimGuard<'_, Arc<TraceResult>>>,
     ) -> CellResult {
         self.trace_runs.fetch_add(1, Ordering::Relaxed);
-        let outcome = run_built_workload_recorded(w, app, scale, &self.cfg, self.use_des);
+        let outcome = run_built_workload_recorded(w, app, scale, &self.cfg, use_des);
         let (tres, result) = match outcome {
             Ok((h, trace)) => {
-                (Ok(trace), Ok(Measurement::from_harness(w, variant, scale, &h)))
+                let r = if overlap {
+                    replay_built_workload_overlapped(
+                        app,
+                        &self.cfg,
+                        w.benign_cross_kernel_races(),
+                        &trace,
+                    )
+                    .map(|(oh, waves)| Measurement::overlapped(w, variant, scale, &oh, waves))
+                } else {
+                    Ok(Measurement::from_harness(w, variant, scale, &h))
+                };
+                (Ok(trace), r)
             }
             Err(e) => (Err(e.clone()), Err(e)),
         };
@@ -969,6 +1113,7 @@ impl Engine {
             ExperimentId::E6 => vec![experiments::table1(scale)],
             ExperimentId::E7 => vec![self.headline_table(scale)],
             ExperimentId::E8 => vec![self.portability(scale)],
+            ExperimentId::E9 => vec![self.overlap_study(scale)],
         }
     }
 
@@ -1324,6 +1469,81 @@ impl Engine {
         }
     }
 
+    /// E9: the launch-graph overlap study. Each graph workload is
+    /// measured twice over the *same* recorded trace: once launch-at-a-
+    /// time (the chain the host issued) and once overlapped into DAG
+    /// wavefronts. Both legs are DES-modelled regardless of the engine's
+    /// `--des` flag, so the win column isolates scheduling — the width
+    /// `analysis::deps` proved safe — rather than estimator choice. The
+    /// launches-vs-wavefronts pair is the dependence layer's output made
+    /// visible: equal numbers mean the DAG is a chain and overlap is
+    /// refused (NW's shape), a wavefront count of 2 on pagerank is the
+    /// ping-pong collapse.
+    pub fn overlap_study(&self, scale: Scale) -> Table {
+        let mut t = Table::new(
+            "E9: launch-graph overlap (sequential vs overlapped, DES-modelled)",
+            &[
+                "Benchmark",
+                "Launches",
+                "Wavefronts",
+                "Sequential (ms)",
+                "Overlapped (ms)",
+                "Overlap win",
+            ],
+        );
+        for name in GRAPH_TRIO {
+            let Some(w) = resolve_workload(name) else {
+                t.row(vec![
+                    name.to_string(),
+                    "unknown".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+                continue;
+            };
+            let v = Variant::FeedForward { depth: 1 };
+            let seq = match self.measure_opts(w.as_ref(), v, scale, true, false) {
+                Ok(m) => m,
+                Err(e) => {
+                    t.row(vec![
+                        name.to_string(),
+                        format!("n/a ({e})"),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                    ]);
+                    continue;
+                }
+            };
+            let ov = match self.measure_opts(w.as_ref(), v, scale, true, true) {
+                Ok(m) => m,
+                Err(e) => {
+                    t.row(vec![
+                        name.to_string(),
+                        seq.launches.to_string(),
+                        format!("n/a ({e})"),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                    ]);
+                    continue;
+                }
+            };
+            t.row(vec![
+                name.to_string(),
+                seq.launches.to_string(),
+                ov.launches.to_string(),
+                ms(seq.seconds),
+                ms(ov.seconds),
+                fx(seq.seconds / ov.seconds),
+            ]);
+        }
+        t
+    }
+
     // -- structured results sink --------------------------------------------
 
     /// Every successful measurement in canonical order (workload, variant,
@@ -1453,7 +1673,7 @@ mod tests {
             assert_eq!(ExperimentId::parse(exp.label()), Some(exp));
             assert_eq!(ExperimentId::parse(&exp.label().to_lowercase()), Some(exp));
         }
-        assert_eq!(ExperimentId::parse("E9"), None);
+        assert_eq!(ExperimentId::parse("E10"), None);
     }
 
     #[test]
@@ -1773,6 +1993,77 @@ mod tests {
         assert!(d(&hbm, 1000) < d(&hbm, 1), "HBM fill latency must reward deep channels");
         assert_eq!(a10.best_ff(w.as_ref(), Scale::Tiny).unwrap().variant, "ff(d1)");
         assert_eq!(hbm.best_ff(w.as_ref(), Scale::Tiny).unwrap().variant, "ff(d1000)");
+    }
+
+    /// The store-compat contract for the overlap axis, mirroring the
+    /// `device=` line: overlap-off signatures are byte for byte the
+    /// pre-overlap signatures (no `overlap` substring anywhere), so
+    /// every record written before the launch-graph axis existed stays
+    /// a warm hit; overlap-on gets a dedicated trailing line and a
+    /// distinct key.
+    #[test]
+    fn overlap_off_signature_keeps_pre_overlap_bytes() {
+        let w = by_name("bfs").unwrap();
+        let app = w.build(Variant::FeedForward { depth: 1 }).unwrap();
+        let cfg = DeviceConfig::pac_a10();
+        let off = content_signature_with("bfs", &app, Scale::Tiny, &cfg, false, false);
+        assert_eq!(off, content_signature("bfs", &app, Scale::Tiny, &cfg, false));
+        assert!(!off.contains("overlap"), "overlap-off keys must not mention the axis");
+        let on = content_signature_with("bfs", &app, Scale::Tiny, &cfg, false, true);
+        assert!(on.ends_with("overlap=on\n"));
+        assert_ne!(
+            content_key_with("bfs", &app, Scale::Tiny, &cfg, false, true),
+            content_key("bfs", &app, Scale::Tiny, &cfg, false),
+            "sequential and overlapped measurements must cache side by side"
+        );
+    }
+
+    /// The E9 acceptance criterion: overlapped modelled time is strictly
+    /// lower than the sequential chain on bfs and pagerank (the DAG has
+    /// real width there), ties the chain *exactly* on single-launch NW
+    /// (a one-node graph runs through the identical heap loop), and both
+    /// legs of every workload share one interpreter run.
+    #[test]
+    fn overlap_strictly_wins_on_graph_workloads_and_ties_single_launch() {
+        let e = Engine::serial(DeviceConfig::pac_a10());
+        let v = Variant::FeedForward { depth: 1 };
+        for name in ["bfs", "pagerank"] {
+            let w = by_name(name).unwrap();
+            let seq = e.measure_opts(w.as_ref(), v, Scale::Tiny, true, false).unwrap();
+            let ov = e.measure_opts(w.as_ref(), v, Scale::Tiny, true, true).unwrap();
+            assert!(
+                ov.seconds < seq.seconds,
+                "{name}: overlap must strictly win ({} vs {})",
+                ov.seconds,
+                seq.seconds
+            );
+            assert!(ov.launches < seq.launches, "{name}: fewer wavefronts than launches");
+            assert_eq!(ov.variant, "ff(d1)+ov", "{name}: overlapped rows must sort apart");
+            assert_eq!(seq.variant, "ff(d1)");
+        }
+        let nw = by_name("nw").unwrap();
+        let seq = e.measure_opts(nw.as_ref(), v, Scale::Tiny, true, false).unwrap();
+        let ov = e.measure_opts(nw.as_ref(), v, Scale::Tiny, true, true).unwrap();
+        assert_eq!(ov.cycles, seq.cycles, "one launch: graph DES must be bit-identical");
+        assert_eq!(ov.launches, 1, "one launch is one wavefront");
+        // the trace tier never saw the overlap axis: one interpreter run
+        // per workload, the second leg replays
+        assert_eq!(e.trace_runs(), 3);
+        assert_eq!(e.trace_hits(), 3);
+    }
+
+    /// `with_overlap` routes the plain `measure` path: an overlap engine
+    /// and an explicit `measure_opts(.., true)` call agree exactly.
+    #[test]
+    fn overlap_engine_defaults_match_explicit_opts() {
+        let v = Variant::FeedForward { depth: 1 };
+        let w = by_name("pagerank").unwrap();
+        let ove = Engine::serial(DeviceConfig::pac_a10()).with_des(true).with_overlap(true);
+        let a = ove.measure(w.as_ref(), v, Scale::Tiny).unwrap();
+        let b = Engine::serial(DeviceConfig::pac_a10())
+            .measure_opts(w.as_ref(), v, Scale::Tiny, true, true)
+            .unwrap();
+        assert_eq!(a, b);
     }
 
     /// `--device all` output shape: benchmark-major rows, one per

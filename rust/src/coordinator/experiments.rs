@@ -60,6 +60,27 @@ impl Measurement {
         }
     }
 
+    /// Measurement of an overlapped (launch-graph) replay. Two deliberate
+    /// deviations from [`Measurement::from_harness`]: the variant label
+    /// carries a `+ov` suffix so sequential and overlapped rows of one
+    /// cell sort apart under [`canonical_sort`] (ties there would make
+    /// sink bytes depend on cache iteration order), and `launches`
+    /// reports DAG wavefronts — the scheduling unit under overlap —
+    /// which also lets a warm-store E9 print the wavefront column
+    /// without re-deriving the dependence graph.
+    pub fn overlapped(
+        w: &dyn Workload,
+        variant: Variant,
+        scale: Scale,
+        h: &Harness,
+        wavefronts: usize,
+    ) -> Measurement {
+        let mut m = Measurement::from_harness(w, variant, scale, h);
+        m.variant.push_str("+ov");
+        m.launches = wavefronts as u64;
+        m
+    }
+
     /// Serialize for the BENCH_PR1.json results sink (field order fixed —
     /// the determinism test compares bytes).
     pub fn to_json(&self) -> Json {

@@ -9,10 +9,10 @@
 //! same way `merge` validates shard coverage — by replaying the grid
 //! construction (IR transforms only, zero simulation):
 //!
-//! * **Experiment grids** — every cell of `grid_for(E1..E7)` contributes
-//!   its measurement key (analytic *and* DES — both estimator flags are
-//!   one `--des` away) and its depth-invariant trace key, at every
-//!   dataset scale.
+//! * **Experiment grids** — every cell of `grid_for(E1..E9)` contributes
+//!   its measurement keys (analytic *and* DES, sequential *and* overlap —
+//!   each is one `--des` / `--overlap` away) and its depth-invariant
+//!   trace key, at every dataset scale.
 //! * **Tuner ladders** — `pipefwd tune` probes the
 //!   [`DEPTH_LADDER`] × [`PART_LADDER`] product space for any registered
 //!   workload (suite + microbenchmarks) at the target scale and the
@@ -34,7 +34,9 @@
 //! in play — the same sharing that makes a `--device all` sweep pay the
 //! interpreter once.
 
-use super::engine::{content_key, grid_for, resolve_workload, trace_key, ExperimentId};
+use super::engine::{
+    content_key, content_key_with, grid_for, resolve_workload, trace_key, ExperimentId,
+};
 use super::tune::{TuneConfig, DEPTH_LADDER, PART_LADDER};
 use crate::sim::device::{DeviceConfig, DeviceRegistry};
 use crate::workloads::micro::MicroSpec;
@@ -54,12 +56,16 @@ pub struct Reachable {
 
 impl Reachable {
     /// Add every key one built app can be asked under at one scale:
-    /// measurement keys for both estimators on every device in `cfgs`,
-    /// plus the single device-free trace key.
+    /// measurement keys for both estimators **and both scheduling modes**
+    /// (sequential and `--overlap` — the overlap-on keys carry the
+    /// trailing `overlap=on` signature line) on every device in `cfgs`,
+    /// plus the single device- and overlap-free trace key.
     fn add(&mut self, workload: &str, benign: bool, app: &App, scale: Scale, cfgs: &[DeviceConfig]) {
         for cfg in cfgs {
-            self.entries.insert(content_key(workload, app, scale, cfg, false));
-            self.entries.insert(content_key(workload, app, scale, cfg, true));
+            for des in [false, true] {
+                self.entries.insert(content_key(workload, app, scale, cfg, des));
+                self.entries.insert(content_key_with(workload, app, scale, cfg, des, true));
+            }
         }
         self.traces.insert(trace_key(workload, benign, app, scale));
     }
@@ -138,7 +144,7 @@ mod tests {
     use crate::coordinator::grid;
     use crate::transform::Variant;
 
-    /// Every key the E1–E7 grids and the tuner ladder can request must be
+    /// Every key the E1–E9 grids and the tuner ladder can request must be
     /// in the reachable set — spot-checked across tiers, estimators,
     /// scales, and both probe families.
     #[test]
@@ -165,6 +171,14 @@ mod tests {
         let w = resolve_workload("fw").unwrap();
         let app = w.build(Variant::FeedForward { depth: 512 }).unwrap();
         assert!(r.entries.contains(&content_key("fw", &app, Scale::Small, &cfg, false)));
+
+        // the overlap-keyed twin of an E9 cell survives gc too
+        let bfs = resolve_workload("bfs").unwrap();
+        let bapp = bfs.build(Variant::FeedForward { depth: 1 }).unwrap();
+        for des in [false, true] {
+            let k = content_key_with("bfs", &bapp, Scale::Tiny, &cfg, des, true);
+            assert!(r.entries.contains(&k), "overlap key missing (des={des})");
+        }
 
         // an off-ladder key is NOT reachable (custom sweep probes die)
         let odd = w.build(Variant::FeedForward { depth: 7 }).unwrap();

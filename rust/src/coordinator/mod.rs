@@ -32,6 +32,16 @@
 //! command (per-device measurement keys, device-free trace keys), the E8
 //! cross-device portability grid, and [`cross_device_table`] to stitch a
 //! `--device all` run's per-engine slices into one comparison table.
+//! PR 8 moves the scheduling unit from a launch to a launch *graph*:
+//! [`crate::analysis::deps`] derives a dependence DAG from the recorded
+//! trace, [`crate::transform::task_sequence`] rewrites the launch chain
+//! into co-schedulable wavefronts, and the engine's `--overlap` axis
+//! (store schema v6: a trailing `overlap=on` key line, off-keys
+//! unchanged) replays them through the graph DES — the E9 study
+//! ([`engine::Engine::overlap_study`]) measures both schedules through
+//! one engine. The daemon gained HTTP/1.1 keep-alive (the
+//! `connections_reused` counter) and `run --device all` fans one worker
+//! per registry profile.
 
 pub mod engine;
 pub mod experiments;

@@ -23,6 +23,17 @@
 //! document; the response body is newline-delimited compact JSON ending
 //! in a `done` terminator (see [`super::service`]). `GET /stats`
 //! returns the live counters + store footprint as one pretty document.
+//!
+//! Connections are **kept alive** (HTTP/1.1 default): a worker serves
+//! requests off one connection until the client sends
+//! `Connection: close`, the peer disconnects, framing breaks (the only
+//! safe answer to a truncated or unread body is to close), or
+//! [`MAX_REQUESTS_PER_CONN`] is reached — a fairness bound so one
+//! chatty client cannot pin a pool slot forever. Idle kept-alive
+//! connections die at [`IO_TIMEOUT`]. Each request served beyond a
+//! connection's first bumps the `connections_reused` counter; a sweep
+//! that drives many requests through one [`Client`] shows its saved
+//! handshakes there.
 
 use super::service::{self, Service, ServiceRequest};
 use crate::util::json::{self, Json};
@@ -45,6 +56,11 @@ pub const MAX_HEAD_BYTES: u64 = 16 * 1024;
 /// *compute* between the two is unbounded by design — paper-scale
 /// grids take as long as they take.
 pub const IO_TIMEOUT: Duration = Duration::from_secs(30);
+/// Requests one keep-alive connection may carry before the daemon
+/// answers `Connection: close` and frees the worker for the queue — a
+/// fairness bound, not a correctness one (clients reconnect
+/// transparently).
+pub const MAX_REQUESTS_PER_CONN: usize = 100;
 
 #[derive(Debug, Clone, Copy)]
 pub struct ServerConfig {
@@ -194,7 +210,7 @@ fn accept_loop(
                 // backpressure: answer, don't buffer
                 let line =
                     service::request_error_line("busy: request queue is full — retry later");
-                let _ = write_http(&mut stream, 503, "Service Unavailable", &[line]);
+                let _ = write_http(&mut stream, 503, "Service Unavailable", &[line], false);
             }
         }
     }
@@ -215,27 +231,54 @@ fn handle_connection(stream: TcpStream, service: &Service) {
     let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
     let Ok(read_half) = stream.try_clone() else { return };
     let mut out = stream;
-    let mut reader = BufReader::new(read_half).take(MAX_HEAD_BYTES);
+    let mut reader = BufReader::new(read_half);
+    // keep-alive loop: serve until the client closes or asks to, the
+    // framing breaks, or the per-connection request cap is reached
+    for served in 0..MAX_REQUESTS_PER_CONN {
+        let last = served + 1 == MAX_REQUESTS_PER_CONN;
+        if !handle_one_request(&mut reader, &mut out, service, served > 0, last) {
+            return;
+        }
+    }
+}
 
+/// Serve one request off an open connection. Returns `true` iff the
+/// connection stays open for another request — only after a response
+/// whose head advertised `keep-alive` and whose request body was fully
+/// consumed (the stream is aligned on the next request boundary).
+fn handle_one_request(
+    reader: &mut BufReader<TcpStream>,
+    out: &mut TcpStream,
+    service: &Service,
+    reused: bool,
+    last: bool,
+) -> bool {
+    // the head cap applies per request; the Take wrapper borrows the
+    // reader so the body read below sees any bytes it buffered
+    let mut head = reader.by_ref().take(MAX_HEAD_BYTES);
     let mut request_line = String::new();
-    if reader.read_line(&mut request_line).unwrap_or(0) == 0 {
-        return; // closed (or stalled) before a request arrived
+    if head.read_line(&mut request_line).unwrap_or(0) == 0 {
+        return false; // peer closed (or stalled) between requests
+    }
+    if reused {
+        service.note_connection_reused();
     }
     let mut parts = request_line.split_whitespace();
     let method = parts.next().unwrap_or("").to_string();
     let path = parts.next().unwrap_or("").to_string();
 
     let mut content_length: Option<usize> = None;
+    let mut close_requested = false;
     loop {
         let mut line = String::new();
-        match reader.read_line(&mut line) {
+        match head.read_line(&mut line) {
             // EOF before the blank separator: truncated or oversized head
             Ok(0) => {
-                respond_error(&mut out, 400, "Bad Request", "request: truncated head");
-                return;
+                respond_error(out, 400, "Bad Request", "request: truncated head", false);
+                return false;
             }
             Ok(_) => {}
-            Err(_) => return,
+            Err(_) => return false,
         }
         let line = line.trim_end();
         if line.is_empty() {
@@ -245,48 +288,66 @@ fn handle_connection(stream: TcpStream, service: &Service) {
             if k.eq_ignore_ascii_case("content-length") {
                 content_length = v.trim().parse::<usize>().ok();
             }
+            if k.eq_ignore_ascii_case("connection") && v.trim().eq_ignore_ascii_case("close") {
+                close_requested = true;
+            }
         }
     }
+    drop(head);
+    let keep = !close_requested && !last;
 
     match (method.as_str(), path.as_str()) {
         ("GET", "/stats") => {
-            let _ = write_http_raw(&mut out, 200, "OK", &service.stats_doc().to_pretty());
+            // a GET carrying a body would desync the framing — close then
+            let keep = keep && content_length.unwrap_or(0) == 0;
+            let _ = write_http_raw(out, 200, "OK", &service.stats_doc().to_pretty(), keep);
+            keep
         }
         ("POST", "/api/v1") => {
             let Some(len) = content_length else {
-                respond_error(&mut out, 411, "Length Required", "request: missing Content-Length");
-                return;
+                respond_error(
+                    out,
+                    411,
+                    "Length Required",
+                    "request: missing Content-Length",
+                    false,
+                );
+                return false;
             };
             if len > MAX_BODY_BYTES {
                 respond_error(
-                    &mut out,
+                    out,
                     413,
                     "Payload Too Large",
                     &format!("request: body of {len} bytes exceeds the {MAX_BODY_BYTES}-byte cap"),
+                    false,
                 );
-                return;
+                return false;
             }
             let mut body = vec![0u8; len];
-            if reader.into_inner().read_exact(&mut body).is_err() {
-                respond_error(&mut out, 400, "Bad Request", "request: truncated body");
-                return;
+            if reader.read_exact(&mut body).is_err() {
+                respond_error(out, 400, "Bad Request", "request: truncated body", false);
+                return false;
             }
+            // from here the body is fully consumed: even an invalid
+            // request leaves the stream request-aligned, so keep-alive
+            // survives validation failures
             let Ok(text) = String::from_utf8(body) else {
-                respond_error(&mut out, 400, "Bad Request", "request: body is not UTF-8");
-                return;
+                respond_error(out, 400, "Bad Request", "request: body is not UTF-8", keep);
+                return keep;
             };
             let doc = match json::parse(&text) {
                 Ok(d) => d,
                 Err(e) => {
-                    respond_error(&mut out, 400, "Bad Request", &format!("request: {e}"));
-                    return;
+                    respond_error(out, 400, "Bad Request", &format!("request: {e}"), keep);
+                    return keep;
                 }
             };
             let req = match service::decode_request(&doc) {
                 Ok(r) => r,
                 Err(e) => {
-                    respond_error(&mut out, 400, "Bad Request", &e);
-                    return;
+                    respond_error(out, 400, "Bad Request", &e, keep);
+                    return keep;
                 }
             };
             // application-level failures are a 200 with a structured
@@ -296,24 +357,29 @@ fn handle_connection(stream: TcpStream, service: &Service) {
                 Ok(resp) => service::response_lines(&resp),
                 Err(e) => vec![service::error_line(&e)],
             };
-            let _ = write_http(&mut out, 200, "OK", &lines);
+            let _ = write_http(out, 200, "OK", &lines, keep);
+            keep
         }
         (_, p) if method == "GET" || method == "POST" => {
-            respond_error(&mut out, 404, "Not Found", &format!("request: unknown path `{p}`"));
+            // an unknown path may carry an unread body — never reuse
+            respond_error(out, 404, "Not Found", &format!("request: unknown path `{p}`"), false);
+            false
         }
         _ => {
             respond_error(
-                &mut out,
+                out,
                 405,
                 "Method Not Allowed",
                 &format!("request: unsupported method `{method}`"),
+                false,
             );
+            false
         }
     }
 }
 
-fn respond_error(out: &mut TcpStream, status: u16, reason: &str, msg: &str) {
-    let _ = write_http(out, status, reason, &[service::request_error_line(msg)]);
+fn respond_error(out: &mut TcpStream, status: u16, reason: &str, msg: &str, keep: bool) {
+    let _ = write_http(out, status, reason, &[service::request_error_line(msg)], keep);
 }
 
 fn write_http(
@@ -321,10 +387,11 @@ fn write_http(
     status: u16,
     reason: &str,
     lines: &[String],
+    keep: bool,
 ) -> std::io::Result<()> {
     let mut body = lines.join("\n");
     body.push('\n');
-    write_http_raw(out, status, reason, &body)
+    write_http_raw(out, status, reason, &body, keep)
 }
 
 fn write_http_raw(
@@ -332,10 +399,12 @@ fn write_http_raw(
     status: u16,
     reason: &str,
     body: &str,
+    keep: bool,
 ) -> std::io::Result<()> {
+    let connection = if keep { "keep-alive" } else { "close" };
     let head = format!(
         "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n",
+         Content-Length: {}\r\nConnection: {connection}\r\n\r\n",
         body.len()
     );
     out.write_all(head.as_bytes())?;
@@ -347,13 +416,25 @@ fn write_http_raw(
 // Client side (`pipefwd client`, the serve tests/benches)
 // ---------------------------------------------------------------------------
 
-/// Send one request, return the response items (the `done` terminator
-/// verified and stripped). Server-side failures surface as `Err` with
-/// the error's store-form rendering.
+/// Send one request on a fresh `Connection: close` connection, return
+/// the response items (the `done` terminator verified and stripped).
+/// Server-side failures surface as `Err` with the error's store-form
+/// rendering. A caller issuing many requests should hold a [`Client`]
+/// instead and pay the handshake once.
 pub fn request(addr: &str, req: &ServiceRequest) -> Result<Vec<Json>, String> {
     let body = service::encode_request(req).to_compact();
     let (status, text) = http(addr, "POST", "/api/v1", Some(&body))?;
-    let lines = parse_ndjson(&text)?;
+    decode_api_response(status, &text)
+}
+
+/// `GET /stats` as one parsed document (fresh connection per call).
+pub fn get_stats(addr: &str) -> Result<Json, String> {
+    let (status, text) = http(addr, "GET", "/stats", None)?;
+    decode_stats_response(status, &text)
+}
+
+fn decode_api_response(status: u16, text: &str) -> Result<Vec<Json>, String> {
+    let lines = parse_ndjson(text)?;
     match service::decode_response_lines(&lines) {
         Ok(items) if status == 200 => Ok(items),
         Ok(_) => Err(format!("server returned HTTP {status}")),
@@ -361,40 +442,63 @@ pub fn request(addr: &str, req: &ServiceRequest) -> Result<Vec<Json>, String> {
     }
 }
 
-/// `GET /stats` as one parsed document.
-pub fn get_stats(addr: &str) -> Result<Json, String> {
-    let (status, text) = http(addr, "GET", "/stats", None)?;
+fn decode_stats_response(status: u16, text: &str) -> Result<Json, String> {
     if status != 200 {
-        let lines = parse_ndjson(&text).unwrap_or_default();
+        let lines = parse_ndjson(text).unwrap_or_default();
         return Err(service::decode_response_lines(&lines)
             .err()
             .unwrap_or_else(|| format!("server returned HTTP {status}")));
     }
-    json::parse(&text)
+    json::parse(text)
 }
 
-/// Minimal HTTP/1.1 exchange: write the request, read status + headers,
-/// then the body to EOF (the server always answers `Connection: close`).
-/// No read timeout — a paper-scale grid legitimately computes for a
-/// long time before the first response byte.
+/// One-shot HTTP/1.1 exchange on a fresh connection, declaring
+/// `Connection: close`.
 fn http(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String), String> {
     let mut stream =
         TcpStream::connect(addr).map_err(|e| format!("connecting to {addr}: {e}"))?;
-    let content = body.unwrap_or("");
+    send_head(&mut stream, addr, method, path, body.unwrap_or(""), true)?;
+    let mut reader = BufReader::new(stream);
+    let (status, text, _) = read_response(&mut reader, addr)?;
+    Ok((status, text))
+}
+
+fn send_head(
+    stream: &mut TcpStream,
+    addr: &str,
+    method: &str,
+    path: &str,
+    content: &str,
+    close: bool,
+) -> Result<(), String> {
+    let connection = if close { "close" } else { "keep-alive" };
     let head = format!(
         "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n",
+         Content-Length: {}\r\nConnection: {connection}\r\n\r\n",
         content.len()
     );
     stream
         .write_all(head.as_bytes())
         .and_then(|()| stream.write_all(content.as_bytes()))
-        .map_err(|e| format!("sending request to {addr}: {e}"))?;
-    let mut reader = BufReader::new(stream);
+        .and_then(|()| stream.flush())
+        .map_err(|e| format!("sending request to {addr}: {e}"))
+}
+
+/// Read one HTTP response, framed by `Content-Length` — mandatory for
+/// keep-alive, where read-to-EOF would block forever on the open
+/// socket. A response without the header falls back to read-to-EOF and
+/// implies close. Returns `(status, body, server_says_close)`. No read
+/// timeout — a paper-scale grid legitimately computes for a long time
+/// before the first response byte.
+fn read_response(
+    reader: &mut BufReader<TcpStream>,
+    addr: &str,
+) -> Result<(u16, String, bool), String> {
+    let fail = |e| format!("reading response from {addr}: {e}");
     let mut status_line = String::new();
-    reader
-        .read_line(&mut status_line)
-        .map_err(|e| format!("reading response from {addr}: {e}"))?;
+    if reader.read_line(&mut status_line).map_err(fail)? == 0 {
+        return Err(format!("connection to {addr} closed before a response arrived"));
+    }
     let status: u16 = status_line
         .split_whitespace()
         .nth(1)
@@ -402,20 +506,120 @@ fn http(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<(u16
         .ok_or_else(|| {
             format!("malformed HTTP status line from {addr}: `{}`", status_line.trim_end())
         })?;
+    let mut content_length: Option<usize> = None;
+    let mut server_close = false;
     loop {
         let mut line = String::new();
-        let n = reader
-            .read_line(&mut line)
-            .map_err(|e| format!("reading response from {addr}: {e}"))?;
+        let n = reader.read_line(&mut line).map_err(fail)?;
         if n == 0 || line.trim_end().is_empty() {
             break;
         }
+        if let Some((k, v)) = line.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse::<usize>().ok();
+            }
+            if k.eq_ignore_ascii_case("connection") && v.trim().eq_ignore_ascii_case("close") {
+                server_close = true;
+            }
+        }
     }
-    let mut text = String::new();
-    reader
-        .read_to_string(&mut text)
-        .map_err(|e| format!("reading response from {addr}: {e}"))?;
-    Ok((status, text))
+    let text = match content_length {
+        Some(len) => {
+            let mut buf = vec![0u8; len];
+            reader.read_exact(&mut buf).map_err(fail)?;
+            String::from_utf8(buf)
+                .map_err(|_| format!("response body from {addr} is not UTF-8"))?
+        }
+        None => {
+            let mut t = String::new();
+            reader.read_to_string(&mut t).map_err(fail)?;
+            server_close = true;
+            t
+        }
+    };
+    Ok((status, text, server_close))
+}
+
+/// A persistent daemon connection: every call reuses one keep-alive
+/// HTTP/1.1 socket, reconnecting transparently when the server closes
+/// it (per-connection request cap, idle timeout, daemon restart). The
+/// free [`request`]/[`get_stats`] helpers remain the
+/// connection-per-request path; anything issuing more than a couple of
+/// requests should hold a `Client` — the daemon's `connections_reused`
+/// counter shows the handshakes saved.
+pub struct Client {
+    addr: String,
+    conn: Option<(TcpStream, BufReader<TcpStream>)>,
+}
+
+impl Client {
+    /// Lazy: no connection is made until the first call.
+    pub fn new(addr: &str) -> Client {
+        Client { addr: addr.to_string(), conn: None }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Send one API request over the persistent connection.
+    pub fn request(&mut self, req: &ServiceRequest) -> Result<Vec<Json>, String> {
+        let body = service::encode_request(req).to_compact();
+        let (status, text) = self.exchange("POST", "/api/v1", Some(&body))?;
+        decode_api_response(status, &text)
+    }
+
+    /// `GET /stats` over the persistent connection.
+    pub fn get_stats(&mut self) -> Result<Json, String> {
+        let (status, text) = self.exchange("GET", "/stats", None)?;
+        decode_stats_response(status, &text)
+    }
+
+    fn connect(&mut self) -> Result<(), String> {
+        let err = |e| format!("connecting to {}: {e}", self.addr);
+        let stream = TcpStream::connect(&self.addr).map_err(err)?;
+        let read_half = stream.try_clone().map_err(err)?;
+        self.conn = Some((stream, BufReader::new(read_half)));
+        Ok(())
+    }
+
+    fn exchange(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<(u16, String), String> {
+        let content = body.unwrap_or("");
+        let addr = self.addr.clone();
+        let attempt = |conn: &mut (TcpStream, BufReader<TcpStream>)| {
+            send_head(&mut conn.0, &addr, method, path, content, false)?;
+            read_response(&mut conn.1, &addr)
+        };
+        let fresh = self.conn.is_none();
+        if fresh {
+            self.connect()?;
+        }
+        let mut r = attempt(self.conn.as_mut().unwrap());
+        if r.is_err() && !fresh {
+            // the kept socket went stale between calls (request cap,
+            // idle timeout, restart): retry once on a fresh connection
+            self.conn = None;
+            self.connect()?;
+            r = attempt(self.conn.as_mut().unwrap());
+        }
+        match r {
+            Ok((status, text, server_close)) => {
+                if server_close {
+                    self.conn = None;
+                }
+                Ok((status, text))
+            }
+            Err(e) => {
+                self.conn = None;
+                Err(e)
+            }
+        }
+    }
 }
 
 /// Parse a newline-delimited JSON body (blank lines ignored).
@@ -461,5 +665,79 @@ mod tests {
         let docs = parse_ndjson("{\"a\": 1}\n\n{\"b\": 2}\n").unwrap();
         assert_eq!(docs.len(), 2);
         assert!(parse_ndjson("{\"a\": 1}\nnot json\n").is_err());
+    }
+
+    /// A persistent [`Client`] reuses one connection across requests
+    /// (the daemon counts every request after a connection's first as a
+    /// reuse); the one-shot helper still opens a fresh connection and
+    /// sends `Connection: close`, which the server honors.
+    #[test]
+    fn keep_alive_reuses_connections_and_close_is_honored() {
+        use crate::coordinator::engine::Engine;
+        use crate::sim::device::DeviceConfig;
+        let svc = Arc::new(Service::daemon(Engine::new(DeviceConfig::pac_a10(), 1)));
+        let server = Server::spawn(
+            Arc::clone(&svc),
+            "127.0.0.1:0",
+            ServerConfig { workers: 1, queue_cap: 4 },
+        )
+        .unwrap();
+        let addr = server.addr().to_string();
+
+        // three requests over one client socket = one connection, two
+        // reuses; mixing POST and GET keeps the framing request-aligned
+        let mut client = Client::new(&addr);
+        assert!(client.request(&ServiceRequest::Stats).is_ok());
+        assert!(client.request(&ServiceRequest::Stats).is_ok());
+        assert!(client.get_stats().is_ok());
+        assert_eq!(svc.clients_served(), 1);
+        assert_eq!(svc.connections_reused(), 2);
+
+        // a validation failure is answered but leaves the connection
+        // usable (the body was fully read)
+        let bad = ServiceRequest::Measure {
+            workload: "fw".into(),
+            variant: crate::transform::Variant::Baseline,
+            scale: crate::workloads::Scale::Tiny,
+            device: Some("stratix10-hbm".into()), // not this engine's device
+        };
+        assert!(client.request(&bad).unwrap_err().contains("device mismatch"));
+        assert!(client.request(&ServiceRequest::Stats).is_ok());
+        assert_eq!(svc.clients_served(), 1);
+
+        // drop the client so the single worker is freed for the
+        // one-shot helper, which closes per request: a new connection
+        // and no further reuse
+        drop(client);
+        assert!(request(&addr, &ServiceRequest::Stats).is_ok());
+        assert_eq!(svc.clients_served(), 2);
+        assert_eq!(svc.connections_reused(), 4);
+
+        server.shutdown();
+    }
+
+    /// The per-connection request cap recycles the socket; the client
+    /// reconnects transparently and every request still succeeds.
+    #[test]
+    fn request_cap_recycles_the_connection_transparently() {
+        use crate::coordinator::engine::Engine;
+        use crate::sim::device::DeviceConfig;
+        let svc = Arc::new(Service::daemon(Engine::new(DeviceConfig::pac_a10(), 1)));
+        let server = Server::spawn(
+            Arc::clone(&svc),
+            "127.0.0.1:0",
+            ServerConfig { workers: 1, queue_cap: 4 },
+        )
+        .unwrap();
+        let mut client = Client::new(&server.addr().to_string());
+        for _ in 0..MAX_REQUESTS_PER_CONN + 1 {
+            assert!(client.get_stats().is_ok());
+        }
+        // request MAX_REQUESTS_PER_CONN came back `Connection: close`,
+        // so the final request opened a second connection
+        assert_eq!(svc.clients_served(), 2);
+        assert_eq!(svc.connections_reused(), (MAX_REQUESTS_PER_CONN - 1) as u64);
+        drop(client);
+        server.shutdown();
     }
 }

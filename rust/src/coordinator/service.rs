@@ -39,7 +39,10 @@ use std::time::Instant;
 /// Wire-protocol version: requests carry it, daemons reject mismatches.
 pub const API_SCHEMA: &str = "pipefwd-api-v1";
 /// `--counters` document schema (v2 adds the daemon counters
-/// `queue_depth_max` / `clients_served` / `requests_deduped`).
+/// `queue_depth_max` / `clients_served` / `requests_deduped`;
+/// `connections_reused` joined later *without* a bump — fields are
+/// additive and diffs render missing ones as absent, so old v2
+/// artifacts stay comparable).
 pub const COUNTERS_SCHEMA: &str = "pipefwd-counters-v2";
 /// The pre-daemon counters schema — still accepted by `report --diff`
 /// and the CI bench gates (old artifacts remain comparable).
@@ -57,6 +60,7 @@ pub const COUNTER_FIELDS: &[&str] = &[
     "queue_depth_max",
     "clients_served",
     "requests_deduped",
+    "connections_reused",
     "wall_ms",
 ];
 
@@ -137,6 +141,7 @@ pub struct Service {
     started: Instant,
     clients_served: AtomicU64,
     queue_depth_max: AtomicU64,
+    connections_reused: AtomicU64,
 }
 
 impl Service {
@@ -147,6 +152,7 @@ impl Service {
             started: Instant::now(),
             clients_served: AtomicU64::new(0),
             queue_depth_max: AtomicU64::new(0),
+            connections_reused: AtomicU64::new(0),
         }
     }
 
@@ -185,6 +191,17 @@ impl Service {
         self.queue_depth_max.load(Ordering::Relaxed)
     }
 
+    /// Record one HTTP request served over an already-used connection
+    /// (the daemon calls this for every request after a connection's
+    /// first — keep-alive effectiveness visibility).
+    pub fn note_connection_reused(&self) {
+        self.connections_reused.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn connections_reused(&self) -> u64 {
+        self.connections_reused.load(Ordering::Relaxed)
+    }
+
     /// Requests answered from the claim/fulfil memo instead of computed
     /// again. Only meaningful under concurrent clients, so CLI mode
     /// pins it to zero (a serial run's cache hits are table re-reads,
@@ -213,6 +230,7 @@ impl Service {
             ("queue_depth_max", Json::Num(self.queue_depth_max() as f64)),
             ("clients_served", Json::Num(self.clients_served() as f64)),
             ("requests_deduped", Json::Num(self.requests_deduped() as f64)),
+            ("connections_reused", Json::Num(self.connections_reused() as f64)),
             ("wall_ms", Json::Num(wall_ms)),
         ])
     }
@@ -431,7 +449,7 @@ pub fn policy_from(s: &str) -> Result<Policy, String> {
 
 pub fn experiment_from(s: &str) -> Result<ExperimentId, String> {
     ExperimentId::parse(s.trim())
-        .ok_or_else(|| format!("unknown experiment `{s}` (E1..E8 or all)"))
+        .ok_or_else(|| format!("unknown experiment `{s}` (E1..E9 or all)"))
 }
 
 /// A device-zoo profile name. `all` is deliberately rejected here: fanning
@@ -1081,7 +1099,7 @@ mod tests {
         assert!(e.contains("unknown benchmark `nope`"), "{e}");
 
         let doc = crate::util::json::parse(
-            r#"{"schema": "pipefwd-api-v1", "type": "run", "experiments": ["E9"],
+            r#"{"schema": "pipefwd-api-v1", "type": "run", "experiments": ["E10"],
                 "scale": "tiny"}"#,
         )
         .unwrap();
@@ -1123,7 +1141,7 @@ mod tests {
         let svc = Service::cli(Engine::new(DeviceConfig::pac_a10(), 1));
         let doc = svc.counters_doc("run", "tiny", 12.0);
         assert_eq!(doc.get("schema").unwrap().as_str(), Some(COUNTERS_SCHEMA));
-        for k in ["queue_depth_max", "clients_served", "requests_deduped"] {
+        for k in ["queue_depth_max", "clients_served", "requests_deduped", "connections_reused"] {
             assert_eq!(doc.get(k).unwrap().as_f64(), Some(0.0), "{k}");
         }
         let fields = counters_fields(&doc).unwrap();

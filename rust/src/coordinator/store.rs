@@ -86,16 +86,31 @@ use std::path::{Path, PathBuf};
 /// every profile *except* `arria10` (whose keys are byte-identical to
 /// v4's, by the frozen-`Debug` contract in `sim::device`), so the key
 /// *space* grew without moving any existing key. Uniquely among bumps,
-/// v5 therefore accepts [`STORE_SCHEMA_COMPAT`] (v4) records on read:
-/// every v4 record is an `arria10` record by construction and its key,
-/// format, and meaning are unchanged. New writes always carry v5.
-pub const STORE_SCHEMA: &str = "pipefwd-store-v5";
+/// v5 therefore accepted v4 records on read: every v4 record is an
+/// `arria10` record by construction and its key, format, and meaning are
+/// unchanged. New writes always carry the current version. v6: the
+/// launch-graph overlap axis — the content signature can now carry a
+/// trailing `overlap=on` line for overlap-keyed measurements
+/// (`engine::content_key_with`). Exactly like the v5 device bump, the
+/// key space grew without moving any existing key: overlap-off keys are
+/// byte-identical to v5's, and trace keys never see the axis at all. v6
+/// therefore reads [`STORE_SCHEMA_COMPAT`] (v5) and
+/// [`STORE_SCHEMA_COMPAT_V4`] (v4) records as warm hits — both are
+/// overlap-off by construction with unchanged format and meaning — while
+/// overlap-keyed lookups against an old store simply miss (their keys
+/// never existed there).
+pub const STORE_SCHEMA: &str = "pipefwd-store-v6";
 
-/// The one prior schema version v5 still reads (see the v5 note on
-/// [`STORE_SCHEMA`]): v4 records are `arria10`-only and key-compatible,
+/// The immediately prior schema version v6 still reads (see the v6 note
+/// on [`STORE_SCHEMA`]): v5 records are overlap-off and key-compatible,
 /// so orphaning them would force a full pointless re-simulation of every
-/// pre-device-zoo store. Earlier versions (v1–v3) remain misses.
-pub const STORE_SCHEMA_COMPAT: &str = "pipefwd-store-v4";
+/// pre-overlap store.
+pub const STORE_SCHEMA_COMPAT: &str = "pipefwd-store-v5";
+
+/// The oldest schema version still read (the v5→v4 compat window carried
+/// forward: v4 records are `arria10`-only, overlap-off, and
+/// key-compatible). Earlier versions (v1–v3) remain misses.
+pub const STORE_SCHEMA_COMPAT_V4: &str = "pipefwd-store-v4";
 
 /// Default results directory (overridable via `--cache-dir` /
 /// `PIPEFWD_CACHE_DIR`).
@@ -812,9 +827,11 @@ fn encode_entry(key: u64, result: &CellResult, des: bool) -> Json {
 
 fn decode_entry(doc: &Json, key: u64) -> Option<CellResult> {
     let schema = doc.get("schema")?.as_str()?;
-    // v4 read-compat: pre-device-zoo records are arria10 records with
-    // unchanged keys and format (see STORE_SCHEMA_COMPAT).
-    if schema != STORE_SCHEMA && schema != STORE_SCHEMA_COMPAT {
+    // v5/v4 read-compat: pre-overlap (and pre-device-zoo) records are
+    // overlap-off records with unchanged keys and format (see
+    // STORE_SCHEMA_COMPAT / STORE_SCHEMA_COMPAT_V4).
+    if schema != STORE_SCHEMA && schema != STORE_SCHEMA_COMPAT && schema != STORE_SCHEMA_COMPAT_V4
+    {
         return None;
     }
     if doc.get("key")?.as_str()? != key_hex(key) {
@@ -878,9 +895,10 @@ fn trace_doc_refs(doc: &Json, key: u64) -> Option<Vec<u64>> {
 /// refs-only walk. `None` = stale or misfiled document (a miss).
 fn check_trace_header(doc: &Json, key: u64) -> Option<()> {
     let schema = doc.get("schema")?.as_str()?;
-    // v4 read-compat, as for measurement entries: trace keys are
-    // device-free and the v4 record format is unchanged under v5.
-    if schema != STORE_SCHEMA && schema != STORE_SCHEMA_COMPAT {
+    // v5/v4 read-compat, as for measurement entries: trace keys are
+    // device- and overlap-free and the record format is unchanged.
+    if schema != STORE_SCHEMA && schema != STORE_SCHEMA_COMPAT && schema != STORE_SCHEMA_COMPAT_V4
+    {
         return None;
     }
     if doc.get("kind")?.as_str()? != "trace" {
@@ -980,27 +998,38 @@ mod tests {
         let _ = std::fs::remove_dir_all(s.root());
     }
 
-    /// The v5 read-compat window: a record whose schema field says v4 —
-    /// i.e. every record written before the device zoo — must be a warm
-    /// *hit*, for both tiers. v4 stores are arria10-only by construction
-    /// and the arria10 signature kept its pre-zoo bytes, so orphaning
-    /// them would re-simulate every pre-existing store for nothing.
+    /// The read-compat window: records whose schema field says v5 (every
+    /// record written before the overlap axis) or v4 (before the device
+    /// zoo) must be warm *hits*, for both tiers — their keys, format,
+    /// and meaning are unchanged under v6, so orphaning them would
+    /// re-simulate every pre-existing store for nothing. Anything older
+    /// stays a miss.
     #[test]
-    fn v4_schema_records_read_as_hits_under_v5() {
-        let s = tmp_store("v4-compat");
+    fn v5_and_v4_schema_records_read_as_hits_under_v6() {
+        let s = tmp_store("compat-window");
         let m = sample_measurement();
         s.put(7, &Ok(m.clone()), false).unwrap();
         let epath = s.root().join("entries").join(format!("{}.json", key_hex(7)));
         let full = std::fs::read_to_string(&epath).unwrap();
-        assert!(full.contains(STORE_SCHEMA), "new writes carry v5");
-        std::fs::write(&epath, full.replace(STORE_SCHEMA, STORE_SCHEMA_COMPAT)).unwrap();
-        assert_eq!(s.get(7), Some(Ok(m)), "v4 entry must stay a warm hit");
+        assert!(full.contains(STORE_SCHEMA), "new writes carry v6");
+        for old in [STORE_SCHEMA_COMPAT, STORE_SCHEMA_COMPAT_V4] {
+            std::fs::write(&epath, full.replace(STORE_SCHEMA, old)).unwrap();
+            assert_eq!(s.get(7), Some(Ok(m.clone())), "{old} entry must stay a warm hit");
+        }
+        std::fs::write(&epath, full.replace(STORE_SCHEMA, "pipefwd-store-v3")).unwrap();
+        assert_eq!(s.get(7), None, "v3 entry must stay a miss");
 
         s.put_trace(9, &Ok(sample_trace())).unwrap();
         let tpath = s.root().join("traces").join(format!("{}.json", key_hex(9)));
         let tfull = std::fs::read_to_string(&tpath).unwrap();
-        std::fs::write(&tpath, tfull.replace(STORE_SCHEMA, STORE_SCHEMA_COMPAT)).unwrap();
-        assert_eq!(s.get_trace(9), Some(Ok(sample_trace())), "v4 trace must stay a warm hit");
+        for old in [STORE_SCHEMA_COMPAT, STORE_SCHEMA_COMPAT_V4] {
+            std::fs::write(&tpath, tfull.replace(STORE_SCHEMA, old)).unwrap();
+            assert_eq!(
+                s.get_trace(9),
+                Some(Ok(sample_trace())),
+                "{old} trace must stay a warm hit"
+            );
+        }
         let _ = std::fs::remove_dir_all(s.root());
     }
 

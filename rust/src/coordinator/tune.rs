@@ -12,7 +12,13 @@
 //!   [`DEPTH_LADDER`], exploiting the (empirically) unimodal
 //!   time-vs-depth curve; with replication enabled it finishes with a
 //!   coordinate-descent pass over the replication factors at the chosen
-//!   depth.
+//!   depth. The bracket is **seeded per device** (PR-8 satellite): a
+//!   profile charging nonzero `channel_fill_cycles` amortizes that cost
+//!   with depth, so its optimum sits deep in the ladder — the search
+//!   starts its bracket at the first rung covering the fill cost
+//!   (plus one shallow anchor probe), spending strictly fewer probes
+//!   than the full ladder. Zero-fill devices (arria10, cpu-like) search
+//!   the full ladder, bit-for-bit the unseeded behaviour.
 //! * [`SuccessiveHalving`] — successive halving over the full
 //!   depth×replication product space, using cheaper dataset scales as the
 //!   low-fidelity rungs (arms are ranked at `tiny` before the survivors
@@ -304,6 +310,24 @@ fn golden_search(n: usize, f: &mut dyn FnMut(usize) -> Option<f64>) {
     }
 }
 
+/// Ladder index where a device-seeded golden bracket starts: the first
+/// rung whose depth covers the device's `channel_fill_cycles` (a pipe
+/// shallower than its fill cost stalls on every activation, so the
+/// optimum cannot sit left of it by more than the anchor probe checks).
+/// Zero fill cost — or a ladder too short to narrow usefully — seeds
+/// nothing (`0`, the full ladder); the clamp keeps at least a 3-point
+/// window searchable.
+pub fn device_seed_lo(fill_cycles: f64, depths: &[usize]) -> usize {
+    if fill_cycles <= 0.0 || depths.len() < 6 {
+        return 0;
+    }
+    depths
+        .iter()
+        .position(|&d| d as f64 >= fill_cycles)
+        .unwrap_or(depths.len() - 1)
+        .min(depths.len() - 3)
+}
+
 /// Golden-section over log-depth (the [`DEPTH_LADDER`] index). Depth
 /// curves are unimodal in the model — deeper pipes only add BRAM/area —
 /// so the bracket converges on the minimum with O(log n) probes. When the
@@ -322,9 +346,18 @@ impl SearchPolicy for GoldenSection {
         }
         let depths = &space.depths;
         let target = probe.target_scale();
-        golden_search(depths.len(), &mut |i| {
+        // per-device seed: on a fill-cost device, bracket the deep end
+        // of the ladder and spend one probe anchoring the shallow end
+        // (if the optimum really is shallow, the anchor catches it and
+        // `Probe::best` keeps it)
+        let lo = device_seed_lo(probe.engine.cfg.channel_fill_cycles, depths);
+        if lo > 0 {
+            probe.try_at(TuneConfig { depth: depths[0], parts: 1 }, target);
+        }
+        let window = &depths[lo..];
+        golden_search(window.len(), &mut |i| {
             probe
-                .try_at(TuneConfig { depth: depths[i], parts: 1 }, target)
+                .try_at(TuneConfig { depth: window[i], parts: 1 }, target)
                 .map(|v| v.unwrap_or(f64::INFINITY))
         });
         if space.parts.len() > 1 {
@@ -747,6 +780,30 @@ mod tests {
             }
         });
         assert_eq!(calls, 3, "search must stop at the first exhausted probe");
+    }
+
+    /// The device seed maps fill cost to a ladder start index: zero
+    /// fill cost leaves the full ladder (bit-for-bit the unseeded
+    /// search), and deeper fill costs start deeper, monotonically.
+    #[test]
+    fn device_seed_starts_deeper_with_fill_cost() {
+        let d = &DEPTH_LADDER;
+        assert_eq!(device_seed_lo(0.0, d), 0, "zero fill cost must not seed");
+        assert_eq!(device_seed_lo(-1.0, d), 0);
+        // gpu-like (6 cycles) starts at the first rung >= 6 (depth 8)
+        assert_eq!(device_seed_lo(6.0, d), 3);
+        // stratix10-hbm (24 cycles) starts at depth 32
+        assert_eq!(device_seed_lo(24.0, d), 5);
+        // absurd fill costs still leave a 3-point window
+        assert_eq!(device_seed_lo(1e12, d), d.len() - 3);
+        let mut prev = 0;
+        for f in [0.0, 1.0, 6.0, 24.0, 100.0, 1e6] {
+            let lo = device_seed_lo(f, d);
+            assert!(lo >= prev, "seed must be monotone in fill cost");
+            prev = lo;
+        }
+        // short ladders are never narrowed
+        assert_eq!(device_seed_lo(24.0, &d[..5]), 0);
     }
 
     #[test]

@@ -26,11 +26,12 @@ pipefwd — feed-forward design model for OpenCL kernels via pipes
 USAGE: pipefwd <command> [--scale tiny|small|paper] [--csv] [--jobs N]
 
 ENGINE COMMANDS (parallel, cache-aware, persistent):
-  run --experiment E1..E8|all   run experiments through the engine and
+  run --experiment E1..E9|all   run experiments through the engine and
       [--shard I/N] [--des]     write the BENCH_PR1.json results sink;
       [--device NAME|all]       --shard computes one disjoint grid slice;
-                                --device all fans out across the device
-                                registry (one sink per device) and
+      [--overlap]               --device all fans out across the device
+                                registry in parallel (one worker per
+                                profile, one sink per device) and
                                 stitches the E8 cross-device table
   sweep [--depths 1,100,1000]   channel-depth sweep over arbitrary depths
         [--benches fw,hotspot,mis]
@@ -51,7 +52,7 @@ ENGINE COMMANDS (parallel, cache-aware, persistent):
         [--format table|json]   traces / pooled profiles, counts + bytes)
                                 and the profile pool's dedup ratio
   store gc [--dry-run]          delete every store record unreachable
-                                from the current E1-E8 grids (all scales,
+                                from the current E1-E9 grids (all scales,
                                 all registry devices, both estimators)
                                 and the tuner's
                                 depth x replication ladders, plus pooled
@@ -93,7 +94,7 @@ OPTIONS:
   --jobs N         engine worker threads (default: all cores)
   --out PATH       results-sink path for `run`/`sweep`/`merge`
                    (default: BENCH_PR1.json)
-  --experiment E   comma-separated experiment ids (E1..E8 or all)
+  --experiment E   comma-separated experiment ids (E1..E9 or all)
   --device D       device profile to model: arria10 (default),
                    stratix10-hbm, gpu-like, cpu-like (see docs/DEVICES.md
                    for the calibrations); `run` also accepts `all` to
@@ -131,6 +132,13 @@ OPTIONS:
   --no-cache       do not read or write the persistent store
   --des            estimate with the discrete-event simulator instead of
                    the analytic model (cached under a distinct key)
+  --overlap        schedule launch *graphs* instead of launch chains:
+                   analysis::deps builds the launch-dependence DAG,
+                   transform::task_sequence folds it into wavefronts, and
+                   the graph DES co-schedules each wavefront over shared
+                   memory (MKPipe-style multi-kernel overlap). Cached
+                   under keys carrying a trailing `overlap=on` line, so
+                   overlap-off artifacts stay byte-identical
   --counters PATH  after `run`/`sweep`/`tune`, write the engine counters
                    to a pipefwd-counters-v2 document: the engine tiers
                    (trace_hits/trace_runs/store_hits/simulations/
@@ -231,6 +239,7 @@ const ARG_SPECS: &[ArgSpec] = &[
     ArgSpec { name: "--cache-dir", arity: 1, validate: None },
     ArgSpec { name: "--no-cache", arity: 0, validate: None },
     ArgSpec { name: "--des", arity: 0, validate: None },
+    ArgSpec { name: "--overlap", arity: 0, validate: None },
     ArgSpec { name: "--counters", arity: 1, validate: None },
     ArgSpec { name: "--diff", arity: 2, validate: None },
     ArgSpec { name: "--threshold", arity: 1, validate: Some(v_threshold) },
@@ -358,6 +367,7 @@ fn main() {
     let cache_dir = args.value("--cache-dir").map(String::from);
     let no_cache = args.flag("--no-cache");
     let use_des = args.flag("--des");
+    let overlap = args.flag("--overlap");
     let counters_path = args.value("--counters").map(String::from);
     let threshold = args
         .value("--threshold")
@@ -411,7 +421,7 @@ fn main() {
     // serves — the CLI is just a local client of it. The caller names the
     // device so `run --device all` can build one service per profile.
     let mk_service = |dev: DeviceConfig, jobs: usize, mode: Mode| -> Service {
-        let mut e = Engine::new(dev, jobs).with_des(use_des);
+        let mut e = Engine::new(dev, jobs).with_des(use_des).with_overlap(overlap);
         if let Some(s) = open_store() {
             e = e.with_store(s);
         }
@@ -467,24 +477,48 @@ fn main() {
                           time, then merge");
                 }
                 // One engine per registry profile, all sharing the same
-                // store directory: measurement keys are per-device but the
-                // trace tier is device-free, so the first engine pays the
-                // interpreter and every later device replays its traces.
-                let svcs: Vec<Service> = DeviceRegistry::all()
-                    .into_iter()
-                    .map(|dev| {
-                        let name = dev.name;
-                        let svc = mk_service(dev, jobs, Mode::Cli);
-                        svc.handle(&ServiceRequest::Run {
-                            experiments: exps.clone(),
-                            scale,
-                            shard: None,
-                            device: Some(name.to_string()),
+                // store directory: measurement keys are per-device but
+                // the trace tier is device-free, so at most one engine
+                // pays the interpreter per trace (concurrent writers are
+                // harmless — atomic writes of identical bytes). The
+                // profiles are independent, so they measure in parallel:
+                // one worker thread per device, each engine sized to its
+                // share of --jobs. Workers never exit the process — any
+                // failure is carried out of the scope (joined in registry
+                // order) and reported once, so output stays deterministic.
+                let devices = DeviceRegistry::all();
+                let dev_jobs = (jobs / devices.len()).max(1);
+                let svcs: Vec<Service> = std::thread::scope(|s| {
+                    let handles: Vec<_> = devices
+                        .iter()
+                        .map(|dev| {
+                            let exps = exps.clone();
+                            let mk = &mk_service;
+                            s.spawn(move || -> Result<Service, String> {
+                                let svc = mk(dev.clone(), dev_jobs, Mode::Cli);
+                                svc.handle(&ServiceRequest::Run {
+                                    experiments: exps,
+                                    scale,
+                                    shard: None,
+                                    device: Some(dev.name.to_string()),
+                                })
+                                .map_err(|e| {
+                                    format!("run --device {}: {}", dev.name, e.render())
+                                })?;
+                                Ok(svc)
+                            })
                         })
-                        .unwrap_or_else(|e| fail(&e.render()));
-                        svc
-                    })
-                    .collect();
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| {
+                            h.join().unwrap_or_else(|_| {
+                                Err("run --device all: a device worker panicked".into())
+                            })
+                        })
+                        .collect::<Result<Vec<_>, String>>()
+                })
+                .unwrap_or_else(|e| fail(&e));
                 for svc in &svcs {
                     let engine = svc.engine();
                     let dev = engine.cfg.name;

@@ -689,11 +689,19 @@ pub struct ExecOptions {
     /// `unit_depth_invariant` / the workload's benign-races vouch; it
     /// defaults to false (chunked) for race-free standalone use.
     pub exact_pipes: bool,
+    /// Launch-graph overlap mode: the coordinator models the workload's
+    /// launch *graph* (wavefronts of DAG-unordered launches co-scheduled
+    /// through `sim::des::simulate_graph`) instead of summing launches
+    /// one at a time. Functional interpretation is unaffected — launches
+    /// still execute in host order; only the *modelled* time changes.
+    /// Part of the engine's content address (`overlap=on` key line); off
+    /// by default so every historical key and cycle count is untouched.
+    pub overlap: bool,
 }
 
 impl Default for ExecOptions {
     fn default() -> Self {
-        ExecOptions { profile: true, exact_pipes: false }
+        ExecOptions { profile: true, exact_pipes: false, overlap: false }
     }
 }
 

@@ -34,6 +34,17 @@
 //! pays `channel_fill_cycles / depth` on top of the handshake overhead
 //! (deep pipes hide memory latency). All three are exact identities on
 //! the default `arria10` profile — see `sim::device`.
+//!
+//! The model is **schedule-independent**: [`PerfModel::estimate`] prices
+//! one launch in isolation, and its `per_kernel` pipeline bounds and
+//! [`PerfModel::access_cost`] are exactly what the graph DES
+//! (`sim::des::simulate_graph`) reuses when launch-graph overlap merges
+//! several launches into one wavefront. The merge leans on one invariant
+//! of the memory model: `MemModel::bank_parallel_efficiency` is monotone
+//! nondecreasing in the requester count and capped at 1.0, so pooling
+//! launches' requesters can only *grow* the shared DRAM capacity per
+//! cycle — overlapped schedules can never model slower than the chain
+//! (asserted below and in `sim::des`).
 
 use super::device::DeviceConfig;
 use super::profile::KernelProfile;
@@ -456,5 +467,33 @@ mod tests {
         let t_covered = PerfModel::new(&prog, &covered).estimate(&run.profiles);
         assert!(t_starved.dram_cycles > 2.0 * t_covered.dram_cycles);
         assert!(t_starved.cycles > t_covered.cycles);
+    }
+
+    /// The invariant launch-graph overlap rests on (see the module docs):
+    /// on every registry device, bank-parallel efficiency is monotone
+    /// nondecreasing in the requester count and never exceeds 1.0 — so
+    /// merging two launches' requesters into one wavefront can only grow
+    /// the shared DRAM capacity, never shrink it.
+    #[test]
+    fn bank_parallel_efficiency_is_monotone_and_capped() {
+        for cfg in crate::sim::device::DeviceRegistry::all() {
+            let mut prev = 0.0f64;
+            for requesters in 0..=64usize {
+                let eff = cfg.mem.bank_parallel_efficiency(requesters);
+                assert!(
+                    eff >= prev,
+                    "{}: efficiency dropped at {requesters} requesters ({eff} < {prev})",
+                    cfg.name
+                );
+                assert!(eff <= 1.0, "{}: efficiency above 1.0 at {requesters}", cfg.name);
+                prev = eff;
+            }
+            assert_eq!(
+                cfg.mem.bank_parallel_efficiency(0),
+                cfg.mem.bank_parallel_efficiency(1),
+                "{}: the zero-requester clamp must match a lone requester",
+                cfg.name
+            );
+        }
     }
 }

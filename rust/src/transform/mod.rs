@@ -12,6 +12,11 @@
 //!
 //! Step 14 (host-side enqueue of all kernels on separate queues) is the
 //! execution engine's launch-group mechanism (`sim::exec`).
+//!
+//! One pass lives above the kernel level: [`task_sequence::task_sequence`]
+//! rewrites the *host's launch schedule* (a convergence workload's
+//! re-launch chain) into dependence-respecting persistent stages — the
+//! launch-graph overlap transform consumed by `run --overlap`.
 
 pub mod dce;
 pub mod examples;
@@ -22,6 +27,7 @@ pub mod normalize;
 pub mod privatize;
 pub mod replicate;
 pub mod simplify;
+pub mod task_sequence;
 pub mod vectorize;
 
 pub use dce::dce_kernel;
@@ -32,6 +38,7 @@ pub use normalize::name_loads;
 pub use privatize::privatize;
 pub use replicate::{replicate, replicate_1p};
 pub use simplify::simplify_kernel;
+pub use task_sequence::{task_sequence, TaskSchedule};
 pub use vectorize::vectorize;
 
 use crate::ir::{Kernel, Program};

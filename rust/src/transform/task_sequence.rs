@@ -1,0 +1,124 @@
+//! The task-sequence transform: rewrite a convergence workload's
+//! re-launch chain into persistent co-scheduled stages (MKPipe's move,
+//! and the shape of oneAPI's `task_sequence` idiom).
+//!
+//! Every other pass in this module rewrites *kernel IR*. This one
+//! rewrites the **host's launch schedule**: the kernels themselves keep
+//! the pipes `feedforward` placed, but the sequential chain the host
+//! issued (`clear; kernel; update; clear; kernel; update; …`) becomes a
+//! sequence of *stages*, each stage a set of launches the dependence DAG
+//! ([`crate::analysis::LaunchDag`]) proves mutually unordered. Launches
+//! sharing a stage run as one merged proc group in the graph DES
+//! (`sim::des::simulate_graph`), arbitrating a single shared DRAM
+//! ledger — the modelled equivalent of persistent kernels fed by
+//! inter-iteration pipes.
+//!
+//! Legality is entirely the dependence layer's: RAW edges always
+//! serialize; WAR/WAW edges serialize unless the workload's benign-race
+//! vouch lifts them (`analysis::deps` documents the vouch-to-edge
+//! mapping). Where the DAG is a chain — NW's read-modify-write over one
+//! buffer — the transform returns a schedule identical to the host
+//! order and the graph DES degenerates to launch-at-a-time modelling,
+//! bit-identical to the sequential path.
+
+use crate::analysis::LaunchDag;
+use crate::workloads::{App, ExecTrace};
+
+/// The legalized launch schedule: the re-launch chain regrouped into
+/// dependence-respecting stages.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TaskSchedule {
+    /// One persistent stage per wavefront, in dependence order; each
+    /// stage lists the launch indices (into the trace) co-resident in it,
+    /// ascending.
+    pub stages: Vec<Vec<usize>>,
+    /// Launch index → stage index — the `levels` vector
+    /// `sim::des::simulate_graph` consumes directly.
+    pub stage_of: Vec<usize>,
+}
+
+impl TaskSchedule {
+    /// Widest stage (1 = no overlap anywhere).
+    pub fn width(&self) -> usize {
+        self.stages.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// True when the schedule is the host's chain unchanged: one launch
+    /// per stage. This is the transform *refusing* to overlap — the
+    /// legal outcome for depth-sensitive chains like NW.
+    pub fn is_chain(&self) -> bool {
+        self.stages.len() == self.stage_of.len()
+    }
+}
+
+/// Rewrite `trace`'s launch chain into the widest schedule the
+/// dependence DAG admits. `benign` is the workload's
+/// `benign_cross_kernel_races` vouch (lifts WAR/WAW edges only — see
+/// `analysis::deps`). Errors if the trace names a unit `app` does not
+/// carry.
+pub fn task_sequence(app: &App, trace: &ExecTrace, benign: bool) -> Result<TaskSchedule, String> {
+    let dag = LaunchDag::build(app, trace, benign)?;
+    Ok(TaskSchedule { stages: dag.wavefronts(), stage_of: dag.levels.clone() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transform::Variant;
+    use crate::workloads::{by_name, ExecTrace, LaunchRecord};
+
+    fn synthetic_trace(units: &[&str]) -> ExecTrace {
+        let mut trace = ExecTrace::default();
+        for u in units {
+            trace.launches.push(LaunchRecord { unit: u.to_string(), profiles: vec![] });
+        }
+        trace
+    }
+
+    /// NW's shape: every launch read-modify-writes one buffer, so the
+    /// transform must hand back the chain untouched — overlap refused.
+    #[test]
+    fn rmw_chain_is_returned_unchanged() {
+        let w = by_name("nw").unwrap();
+        let app = w.build(Variant::FeedForward { depth: 1 }).unwrap();
+        let names: Vec<&str> = app.units.iter().map(|u| u.name.as_str()).collect();
+        let trace = synthetic_trace(&[names[0], names[0], names[0]]);
+        for benign in [false, true] {
+            let s = task_sequence(&app, &trace, benign).unwrap();
+            assert!(s.is_chain(), "RMW chain must never overlap (benign={benign})");
+            assert_eq!(s.width(), 1);
+            assert_eq!(s.stage_of, vec![0, 1, 2]);
+        }
+    }
+
+    /// Pagerank's shape under its vouch: the ping-pong chain collapses
+    /// to two persistent stages (all contribs, then all gathers).
+    #[test]
+    fn vouched_pingpong_collapses_to_two_stages() {
+        let w = by_name("pagerank").unwrap();
+        let app = w.build(Variant::FeedForward { depth: 1 }).unwrap();
+        let contrib = app.units.iter().find(|u| u.name.contains("contrib")).unwrap();
+        let gather = app.units.iter().find(|u| !u.name.contains("contrib")).unwrap();
+        let trace = synthetic_trace(&[
+            &contrib.name,
+            &gather.name,
+            &contrib.name,
+            &gather.name,
+        ]);
+        let s = task_sequence(&app, &trace, true).unwrap();
+        assert_eq!(s.stages.len(), 2, "ping-pong must collapse to contrib|gather stages");
+        assert_eq!(s.width(), 2);
+        assert!(!s.is_chain());
+        // without the vouch the WAR/WAW edges keep more order
+        let strict = task_sequence(&app, &trace, false).unwrap();
+        assert!(strict.stages.len() > s.stages.len());
+    }
+
+    #[test]
+    fn unknown_unit_is_a_clean_error() {
+        let w = by_name("nw").unwrap();
+        let app = w.build(Variant::FeedForward { depth: 1 }).unwrap();
+        let err = task_sequence(&app, &synthetic_trace(&["nope"]), true).unwrap_err();
+        assert!(err.contains("nope"), "{err}");
+    }
+}

@@ -623,6 +623,54 @@ pub fn replay_built_workload(
     Ok(h)
 }
 
+/// Overlap-mode replay: the launch *graph* is the scheduling unit.
+///
+/// Replays `trace` through the normal per-launch path first (validating
+/// it and accumulating area / fmax / II / payload exactly as
+/// [`replay_built_workload`] does), then re-models the app-level time by
+/// legalizing the launch chain into persistent stages
+/// ([`crate::transform::task_sequence`], which builds the launch
+/// dependence DAG with `benign` as the workload's vouch-driven WAR/WAW
+/// edge-removal rule) and co-scheduling the stages through
+/// [`crate::sim::des::simulate_graph`]. The harness's aggregate
+/// `cycles`/`seconds`/`bw_bytes_per_s` are replaced by the overlapped
+/// schedule; per-unit bandwidths and every other field keep their
+/// sequential per-launch meaning. Overlap always models through the
+/// graph DES — a fully chained DAG (e.g. NW) reproduces the sequential
+/// DES total exactly, wavefront by wavefront.
+///
+/// Returns the harness plus the DAG's wavefront count (the E9 report
+/// column).
+pub fn replay_built_workload_overlapped(
+    app: &App,
+    cfg: &DeviceConfig,
+    benign: bool,
+    trace: &ExecTrace,
+) -> Result<(Harness, usize), String> {
+    let mut h = replay_built_workload(app, cfg, false, trace)?;
+    let sched = crate::transform::task_sequence(app, trace, benign)?;
+    let g = {
+        let launches: Vec<crate::sim::des::GraphLaunch> = trace
+            .launches
+            .iter()
+            .map(|rec| {
+                let unit = app.unit(&rec.unit);
+                crate::sim::des::GraphLaunch {
+                    unit,
+                    model: h.model(&unit.name),
+                    profiles: &rec.profiles,
+                }
+            })
+            .collect();
+        crate::sim::des::simulate_graph(&launches, &sched.stage_of, cfg, 64)
+    };
+    h.metrics.cycles = g.cycles;
+    h.metrics.seconds = g.seconds;
+    h.metrics.bw_bytes_per_s =
+        if g.seconds > 0.0 { h.metrics.payload_bytes / g.seconds } else { 0.0 };
+    Ok((h, sched.stages.len()))
+}
+
 /// The registered benchmark suite (Table 1 order).
 pub fn suite() -> Vec<Box<dyn Workload>> {
     vec![
@@ -754,6 +802,55 @@ mod tests {
             "depth-100 replay from the depth-1 trace diverged from a live depth-100 run"
         );
         assert_eq!(rd.metrics.cycles, hd.metrics.cycles);
+    }
+
+    /// The overlap replay's contract against the sequential DES replay:
+    /// strictly lower where the DAG admits overlap (pagerank's ping-pong
+    /// collapses to two wavefronts), exactly equal where it refuses
+    /// (NW's single launch is a one-wave graph, bit-identical to the
+    /// per-launch DES).
+    #[test]
+    fn overlapped_replay_beats_sequential_where_dag_allows() {
+        let cfg = DeviceConfig::pac_a10();
+        let pr = by_name("pagerank").unwrap();
+        let app = pr.build(Variant::FeedForward { depth: 1 }).unwrap();
+        let (_, trace) =
+            run_built_workload_recorded(pr.as_ref(), &app, Scale::Tiny, &cfg, false).unwrap();
+        let seq = replay_built_workload(&app, &cfg, true, &trace).unwrap();
+        let (ov, waves) = replay_built_workload_overlapped(
+            &app,
+            &cfg,
+            pr.benign_cross_kernel_races(),
+            &trace,
+        )
+        .unwrap();
+        assert_eq!(waves, 2, "pagerank ping-pong must collapse to two wavefronts");
+        assert!(
+            ov.metrics.cycles < seq.metrics.cycles,
+            "overlap must model strictly lower time: {} vs {}",
+            ov.metrics.cycles,
+            seq.metrics.cycles
+        );
+        assert_eq!(ov.launches, seq.launches);
+        assert_eq!(ov.max_ii, seq.max_ii);
+
+        let nw = by_name("nw").unwrap();
+        let napp = nw.build(Variant::FeedForward { depth: 1 }).unwrap();
+        let (_, ntrace) =
+            run_built_workload_recorded(nw.as_ref(), &napp, Scale::Tiny, &cfg, false).unwrap();
+        let nseq = replay_built_workload(&napp, &cfg, true, &ntrace).unwrap();
+        let (nov, nwaves) = replay_built_workload_overlapped(
+            &napp,
+            &cfg,
+            nw.benign_cross_kernel_races(),
+            &ntrace,
+        )
+        .unwrap();
+        assert_eq!(nwaves, ntrace.launches.len(), "nw's graph is a chain");
+        assert_eq!(
+            nov.metrics.cycles, nseq.metrics.cycles,
+            "a chained graph must reproduce the sequential DES exactly"
+        );
     }
 
     /// Stale or corrupt traces are a clean `Err` (the engine re-acquires),

@@ -1,0 +1,128 @@
+//! PR-8 launch-graph overlap integration: (1) the `--overlap` axis is
+//! additive — overlap-off signatures, keys and measurements are byte
+//! for byte the pre-refactor path; (2) the E9 study is deterministic
+//! under a parallel engine; (3) overlap strictly wins on the graph
+//! benchmarks whose splits actually admit wavefronts, and (4) NW's
+//! depth-sensitive chain is provably *never* overlapped — the graph
+//! scheduler collapses to the sequential DES bit for bit.
+
+use pipefwd::coordinator::engine::{
+    content_key, content_key_with, content_signature, content_signature_with, GRAPH_TRIO,
+};
+use pipefwd::coordinator::{Engine, ExperimentId};
+use pipefwd::sim::device::DeviceConfig;
+use pipefwd::transform::Variant;
+use pipefwd::workloads::{by_name, Scale};
+
+const FF1: Variant = Variant::FeedForward { depth: 1 };
+
+/// The store-compatibility half of the acceptance criteria: with
+/// `overlap = false` the 6-argument signature/key forms are byte for
+/// byte the 5-argument ones (every pre-PR-8 store record stays a warm
+/// hit), and no overlap marker leaks into off signatures. Overlap-on
+/// keys are distinct addresses.
+#[test]
+fn overlap_off_signatures_and_keys_are_the_pre_refactor_bytes() {
+    for name in GRAPH_TRIO.iter().chain(["nw"].iter()) {
+        let w = by_name(name).unwrap();
+        let app = w.build(FF1).unwrap();
+        for use_des in [false, true] {
+            let cfg = DeviceConfig::pac_a10();
+            let plain = content_signature(name, &app, Scale::Tiny, &cfg, use_des);
+            let off = content_signature_with(name, &app, Scale::Tiny, &cfg, use_des, false);
+            assert_eq!(plain, off, "{name}: overlap-off signature drifted");
+            assert!(!off.contains("overlap"), "{name}: overlap marker in an off signature");
+            assert_eq!(
+                content_key(name, &app, Scale::Tiny, &cfg, use_des),
+                content_key_with(name, &app, Scale::Tiny, &cfg, use_des, false),
+                "{name}: overlap-off key drifted"
+            );
+            let on = content_signature_with(name, &app, Scale::Tiny, &cfg, use_des, true);
+            assert!(on.ends_with("overlap=on\n"), "{name}: on signature missing marker");
+            assert_ne!(
+                content_key_with(name, &app, Scale::Tiny, &cfg, use_des, false),
+                content_key_with(name, &app, Scale::Tiny, &cfg, use_des, true),
+                "{name}: overlap must be a distinct store address"
+            );
+        }
+    }
+}
+
+/// An overlap-on engine answering with `overlap = false` through
+/// `measure_opts` returns exactly what a default (pre-refactor) engine
+/// returns — the off leg rides the identical code path.
+#[test]
+fn overlap_off_measurements_match_the_default_engine() {
+    let default_engine = Engine::new(DeviceConfig::pac_a10(), 2).with_des(true);
+    let overlap_engine = Engine::new(DeviceConfig::pac_a10(), 2).with_des(true).with_overlap(true);
+    for name in GRAPH_TRIO {
+        let w = by_name(name).unwrap();
+        let base = default_engine.measure(w.as_ref(), FF1, Scale::Tiny).unwrap();
+        let off = overlap_engine.measure_opts(w.as_ref(), FF1, Scale::Tiny, true, false).unwrap();
+        assert_eq!(base, off, "{name}: overlap-off leg diverged from the default engine");
+        assert!(!off.variant.ends_with("+ov"), "{name}: off leg must not carry the +ov suffix");
+    }
+}
+
+/// The paper's claim, as an invariant: on the graph benchmarks whose
+/// kernel splits admit concurrent wavefronts, the overlapped schedule
+/// models strictly less time than the sequential chain, reports fewer
+/// wavefronts than launches, and tags the variant `+ov`.
+#[test]
+fn overlap_strictly_wins_on_bfs_and_pagerank() {
+    let engine = Engine::new(DeviceConfig::pac_a10(), 2);
+    for name in ["bfs", "pagerank"] {
+        let w = by_name(name).unwrap();
+        let seq = engine.measure_opts(w.as_ref(), FF1, Scale::Tiny, true, false).unwrap();
+        let ov = engine.measure_opts(w.as_ref(), FF1, Scale::Tiny, true, true).unwrap();
+        assert!(
+            ov.seconds < seq.seconds,
+            "{name}: overlapped {} not strictly below sequential {}",
+            ov.seconds,
+            seq.seconds
+        );
+        assert!(
+            ov.launches < seq.launches,
+            "{name}: {} wavefronts vs {} launches — no overlap happened",
+            ov.launches,
+            seq.launches
+        );
+        assert!(ov.variant.ends_with("+ov"), "{name}: overlapped variant is {}", ov.variant);
+    }
+}
+
+/// NW's RMW chain must never be overlapped: the dependence pass keeps
+/// the chain, so the overlapped measurement has as many wavefronts as
+/// launches and the graph DES reproduces the sequential cycle count
+/// bit for bit.
+#[test]
+fn nw_chain_is_never_overlapped() {
+    let engine = Engine::new(DeviceConfig::pac_a10(), 2);
+    let nw = by_name("nw").unwrap();
+    let seq = engine.measure_opts(nw.as_ref(), FF1, Scale::Tiny, true, false).unwrap();
+    let ov = engine.measure_opts(nw.as_ref(), FF1, Scale::Tiny, true, true).unwrap();
+    assert_eq!(
+        ov.launches, seq.launches,
+        "nw: wavefront count must equal launch count (chain preserved)"
+    );
+    assert_eq!(ov.cycles, seq.cycles, "nw: graph DES over a chain must be bit-identical");
+}
+
+/// E9 under a serial and an 8-way engine renders byte-identically —
+/// the graph scheduler introduces no nondeterminism into the results
+/// sink.
+#[test]
+fn e9_is_deterministic_under_parallel_engines() {
+    let render = |jobs: usize| {
+        let e = Engine::new(DeviceConfig::pac_a10(), jobs).with_overlap(true);
+        let tables = e.run_experiment(ExperimentId::E9, Scale::Tiny);
+        let mut out = String::new();
+        for t in &tables {
+            out.push_str(&t.to_markdown());
+            out.push('\n');
+        }
+        out.push_str(&e.bench_json(Scale::Tiny, &[ExperimentId::E9]));
+        out
+    };
+    assert_eq!(render(1), render(8), "E9 must not depend on engine parallelism");
+}

@@ -119,6 +119,35 @@ fn successive_halving_searches_the_product_space_within_budget() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// PR-8 satellite: the golden bracket is seeded per device. The arria10
+/// runs above exercise the zero-fill path (full ladder, unchanged); on
+/// stratix10-hbm, whose channel fill cost pushes the optimum deep, the
+/// seeded bracket spends strictly fewer probes than the ladder has
+/// rungs while still landing within 5% of the exhaustive best.
+#[test]
+fn hbm_golden_bracket_is_seeded_and_spends_fewer_probes() {
+    use pipefwd::coordinator::tune::DEPTH_LADDER;
+    let engine = Engine::new(DeviceConfig::stratix10_hbm(), 4);
+    let report = run_tune(&engine, &trio_request(Policy::Golden)).unwrap();
+    assert_eq!(report.device, "stratix10-hbm");
+    for o in &report.outcomes {
+        let (_, chosen_s) = o.chosen.expect("seeded search must still find a config");
+        assert!(
+            o.probes < DEPTH_LADDER.len(),
+            "{}: seeded bracket spent {} probes, the full ladder is {}",
+            o.workload,
+            o.probes,
+            DEPTH_LADDER.len()
+        );
+        let (_, exh_s) = o.exhaustive.expect("reference requested");
+        assert!(
+            chosen_s <= exh_s * 1.05,
+            "{}: seeded choice {chosen_s} not within 5% of exhaustive best {exh_s}",
+            o.workload
+        );
+    }
+}
+
 /// The TUNE.json document carries the fields CI consumes, and its
 /// counters parse back as integers.
 #[test]
