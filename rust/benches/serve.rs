@@ -34,7 +34,7 @@ fn main() {
     let server = net::Server::spawn(
         Arc::clone(&svc),
         "127.0.0.1:0",
-        net::ServerConfig { workers: CLIENTS, queue_cap: 64 },
+        net::ServerConfig { workers: CLIENTS, queue_cap: 64, ..Default::default() },
     )
     .expect("binding a loopback port");
     let addr = server.addr().to_string();

@@ -537,6 +537,13 @@ pub struct EngineCounters {
     pub simulations: u64,
     pub trace_hits: u64,
     pub trace_runs: u64,
+    /// Interrupted store operations healed when the attached store
+    /// opened (counters v3; 0 with no store attached).
+    pub journal_replays: u64,
+    /// Store writes skipped because the cache dir turned unwritable —
+    /// the store degraded to read-only and the engine kept computing
+    /// (counters v3; 0 with no store attached).
+    pub store_degraded: u64,
 }
 
 enum Slot<V> {
@@ -815,6 +822,8 @@ impl Engine {
             simulations: self.simulations(),
             trace_hits: self.trace_hits(),
             trace_runs: self.trace_runs(),
+            journal_replays: self.store.as_ref().map(|s| s.journal_replays()).unwrap_or(0),
+            store_degraded: self.store.as_ref().map(|s| s.degraded_count()).unwrap_or(0),
         }
     }
 
@@ -866,6 +875,12 @@ impl Engine {
             }
         }
         self.simulations.fetch_add(1, Ordering::Relaxed);
+        // `engine.panic` injection site: a worker dies *holding the
+        // claim*. The claim guard's unwind path releases the slot so a
+        // concurrent (or retried) request recomputes instead of
+        // deadlocking; the daemon's worker pool catches the unwind and
+        // answers 500, which the client's retry policy recovers.
+        crate::util::fault::maybe_panic("engine.panic");
         let result = self.compute_measurement(w, &app, variant, scale, use_des, overlap);
         if let Some(store) = &self.store {
             if let Err(e) = store.put(key, &result, use_des) {

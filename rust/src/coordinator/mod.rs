@@ -41,7 +41,19 @@
 //! ([`engine::Engine::overlap_study`]) measures both schedules through
 //! one engine. The daemon gained HTTP/1.1 keep-alive (the
 //! `connections_reused` counter) and `run --device all` fans one worker
-//! per registry profile.
+//! per registry profile. PR 9 is the robustness layer: a seeded
+//! fault-injection harness ([`crate::util::fault`], armed by
+//! `--fault-plan`) fires deterministic failures through the IO/network
+//! seams — store reads/writes, the daemon's accept/read/write paths, an
+//! engine worker panicking under claim — and the recovery machinery
+//! makes every one of them invisible in the sink: the [`net`] client
+//! retries transients under a capped-backoff `RetryPolicy` (honoring
+//! `Retry-After`), the [`store`] rolls a crash-time `journal/` intent
+//! log forward or discards it at open and degrades to read-only when
+//! its directory is unwritable, and the daemon serves `GET /healthz` /
+//! `GET /readyz` probes, drains gracefully on `POST /shutdown`, and
+//! guards non-loopback peers with a constant-time shared-secret token
+//! (counters schema v3: `retries`, `journal_replays`, `store_degraded`).
 
 pub mod engine;
 pub mod experiments;

@@ -36,7 +36,9 @@
 //! handshakes there.
 
 use super::service::{self, Service, ServiceRequest};
+use crate::util::fault;
 use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -44,7 +46,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Request-body cap: a `store_push` of a large store fits comfortably;
 /// anything bigger is rejected with `413` before allocation.
@@ -62,17 +64,32 @@ pub const IO_TIMEOUT: Duration = Duration::from_secs(30);
 /// transparently).
 pub const MAX_REQUESTS_PER_CONN: usize = 100;
 
-#[derive(Debug, Clone, Copy)]
+/// Seconds advertised in `Retry-After` on every `503` — the server's
+/// hint for the client's backoff policy (which caps it at its own
+/// `max_delay`).
+pub const RETRY_AFTER_SECS: u64 = 1;
+
+#[derive(Debug, Clone)]
 pub struct ServerConfig {
     /// Connection-handling worker threads.
     pub workers: usize,
     /// Bounded queue capacity: accepted-but-unhandled connections.
     pub queue_cap: usize,
+    /// Shared-secret auth token (`--token` / `PIPEFWD_TOKEN`). When
+    /// set, requests from non-loopback peers must carry
+    /// `Authorization: Bearer <token>` (constant-time compared) or are
+    /// answered `401`. Loopback peers are exempt by default; the
+    /// `/healthz` and `/readyz` probe endpoints are always exempt.
+    pub token: Option<String>,
+    /// Enforce the token for loopback peers too. Off by default — the
+    /// local operator already owns the process; tests flip it on to
+    /// exercise the 401 path without a second network interface.
+    pub token_all: bool,
 }
 
 impl Default for ServerConfig {
     fn default() -> ServerConfig {
-        ServerConfig { workers: 4, queue_cap: 64 }
+        ServerConfig { workers: 4, queue_cap: 64, token: None, token_all: false }
     }
 }
 
@@ -106,6 +123,12 @@ impl Queue {
         Ok(depth)
     }
 
+    /// Accepted-but-unhandled connections right now (`/readyz`'s
+    /// headroom check).
+    fn depth(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
     /// Blocking pop; `None` once closed *and* drained, so in-flight
     /// work finishes before workers exit.
     fn pop(&self) -> Option<TcpStream> {
@@ -127,14 +150,38 @@ impl Queue {
     }
 }
 
-/// A running daemon. [`Server::join`] blocks forever (the CLI `serve`
-/// arm); [`Server::shutdown`] (or drop) stops the accept loop, drains
+/// Everything a worker needs to answer a request: the shared service
+/// plus the queue/config/stop-flag state the probe and drain endpoints
+/// report on.
+struct ServerCtx {
+    service: Arc<Service>,
+    queue: Arc<Queue>,
+    cfg: ServerConfig,
+    stop: Arc<AtomicBool>,
+    addr: SocketAddr,
+}
+
+impl ServerCtx {
+    /// Graceful drain — the SIGTERM-equivalent shutdown path (std has
+    /// no signal handling, so `POST /shutdown` and [`Server::shutdown`]
+    /// both funnel here): stop accepting, let the workers finish every
+    /// queued and in-flight request, then the joined `serve` arm
+    /// flushes its counters and exits.
+    fn begin_drain(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.queue.close();
+        // unblock the accept loop so it observes the stop flag
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// A running daemon. [`Server::join`] blocks until the daemon drains
+/// (`POST /shutdown`) or the process dies — the CLI `serve` arm;
+/// [`Server::shutdown`] (or drop) stops the accept loop, drains
 /// in-flight work, and joins every thread — what the in-process tests
 /// and benches use.
 pub struct Server {
-    addr: SocketAddr,
-    queue: Arc<Queue>,
-    stop: Arc<AtomicBool>,
+    ctx: Arc<ServerCtx>,
     handles: Vec<JoinHandle<()>>,
 }
 
@@ -144,30 +191,32 @@ impl Server {
     pub fn spawn(service: Arc<Service>, addr: &str, cfg: ServerConfig) -> std::io::Result<Server> {
         let listener = TcpListener::bind(addr)?;
         let addr = listener.local_addr()?;
-        let queue = Arc::new(Queue::new());
-        let stop = Arc::new(AtomicBool::new(false));
+        let ctx = Arc::new(ServerCtx {
+            service,
+            queue: Arc::new(Queue::new()),
+            cfg,
+            stop: Arc::new(AtomicBool::new(false)),
+            addr,
+        });
         let mut handles = vec![];
-        for _ in 0..cfg.workers.max(1) {
-            let q = Arc::clone(&queue);
-            let svc = Arc::clone(&service);
-            handles.push(std::thread::spawn(move || worker_loop(&q, &svc)));
+        for _ in 0..ctx.cfg.workers.max(1) {
+            let ctx = Arc::clone(&ctx);
+            handles.push(std::thread::spawn(move || worker_loop(&ctx)));
         }
         {
-            let q = Arc::clone(&queue);
-            let svc = Arc::clone(&service);
-            let stop = Arc::clone(&stop);
-            let cap = cfg.queue_cap.max(1);
-            handles.push(std::thread::spawn(move || accept_loop(&listener, &q, &svc, &stop, cap)));
+            let ctx = Arc::clone(&ctx);
+            handles.push(std::thread::spawn(move || accept_loop(&listener, &ctx)));
         }
-        Ok(Server { addr, queue, stop, handles })
+        Ok(Server { ctx, handles })
     }
 
     /// The bound address (resolves port 0 to the actual port).
     pub fn addr(&self) -> SocketAddr {
-        self.addr
+        self.ctx.addr
     }
 
-    /// Serve until the process dies (the CLI foreground mode).
+    /// Serve until drained (`POST /shutdown`) or the process dies (the
+    /// CLI foreground mode).
     pub fn join(mut self) {
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -182,51 +231,57 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        self.queue.close();
-        // unblock the accept loop so it observes the stop flag
-        let _ = TcpStream::connect(self.addr);
+        self.ctx.begin_drain();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
 }
 
-fn accept_loop(
-    listener: &TcpListener,
-    queue: &Queue,
-    service: &Service,
-    stop: &AtomicBool,
-    cap: usize,
-) {
+fn accept_loop(listener: &TcpListener, ctx: &ServerCtx) {
+    let cap = ctx.cfg.queue_cap.max(1);
     for conn in listener.incoming() {
-        if stop.load(Ordering::SeqCst) {
+        if ctx.stop.load(Ordering::SeqCst) {
             break;
         }
         let Ok(stream) = conn else { continue };
-        match queue.push(stream, cap) {
-            Ok(depth) => service.note_queue_depth(depth),
+        // `net.accept` injection site: the peer's connection resets
+        // before a byte is exchanged (half-open drop, conntrack flush)
+        if fault::fire("net.accept") {
+            drop(stream);
+            continue;
+        }
+        match ctx.queue.push(stream, cap) {
+            Ok(depth) => ctx.service.note_queue_depth(depth),
             Err(mut stream) => {
-                // backpressure: answer, don't buffer
+                // backpressure: answer, don't buffer — and tell the
+                // client's retry policy how long to hold off
                 let line =
                     service::request_error_line("busy: request queue is full — retry later");
-                let _ = write_http(&mut stream, 503, "Service Unavailable", &[line], false);
+                let _ = write_http_ex(
+                    &mut stream,
+                    503,
+                    "Service Unavailable",
+                    &format!("{line}\n"),
+                    false,
+                    &[("Retry-After", &RETRY_AFTER_SECS.to_string())],
+                );
             }
         }
     }
-    queue.close();
+    ctx.queue.close();
 }
 
-fn worker_loop(queue: &Queue, service: &Service) {
-    while let Some(stream) = queue.pop() {
-        service.note_client_served();
+fn worker_loop(ctx: &ServerCtx) {
+    while let Some(stream) = ctx.queue.pop() {
+        ctx.service.note_client_served();
         // one malformed or panicking request must never take the worker
         // (and with it the daemon's capacity) down
-        let _ = catch_unwind(AssertUnwindSafe(|| handle_connection(stream, service)));
+        let _ = catch_unwind(AssertUnwindSafe(|| handle_connection(stream, ctx)));
     }
 }
 
-fn handle_connection(stream: TcpStream, service: &Service) {
+fn handle_connection(stream: TcpStream, ctx: &ServerCtx) {
     let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
     let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
     let Ok(read_half) = stream.try_clone() else { return };
@@ -236,7 +291,7 @@ fn handle_connection(stream: TcpStream, service: &Service) {
     // framing breaks, or the per-connection request cap is reached
     for served in 0..MAX_REQUESTS_PER_CONN {
         let last = served + 1 == MAX_REQUESTS_PER_CONN;
-        if !handle_one_request(&mut reader, &mut out, service, served > 0, last) {
+        if !handle_one_request(&mut reader, &mut out, ctx, served > 0, last) {
             return;
         }
     }
@@ -249,10 +304,11 @@ fn handle_connection(stream: TcpStream, service: &Service) {
 fn handle_one_request(
     reader: &mut BufReader<TcpStream>,
     out: &mut TcpStream,
-    service: &Service,
+    ctx: &ServerCtx,
     reused: bool,
     last: bool,
 ) -> bool {
+    let service = &*ctx.service;
     // the head cap applies per request; the Take wrapper borrows the
     // reader so the body read below sees any bytes it buffered
     let mut head = reader.by_ref().take(MAX_HEAD_BYTES);
@@ -263,12 +319,20 @@ fn handle_one_request(
     if reused {
         service.note_connection_reused();
     }
+    // `net.read` injection site: the daemon stalls briefly, then the
+    // connection dies mid-request (peer reset, conntrack timeout) —
+    // no response is written, so the client's retry policy kicks in
+    if fault::fire("net.read") {
+        std::thread::sleep(Duration::from_millis(25));
+        return false;
+    }
     let mut parts = request_line.split_whitespace();
     let method = parts.next().unwrap_or("").to_string();
     let path = parts.next().unwrap_or("").to_string();
 
     let mut content_length: Option<usize> = None;
     let mut close_requested = false;
+    let mut auth: Option<String> = None;
     loop {
         let mut line = String::new();
         match head.read_line(&mut line) {
@@ -291,12 +355,68 @@ fn handle_one_request(
             if k.eq_ignore_ascii_case("connection") && v.trim().eq_ignore_ascii_case("close") {
                 close_requested = true;
             }
+            if k.eq_ignore_ascii_case("authorization") {
+                auth = Some(v.trim().to_string());
+            }
         }
     }
     drop(head);
     let keep = !close_requested && !last;
 
+    // probe endpoints answer before auth — an orchestrator's health
+    // checker does not hold credentials
     match (method.as_str(), path.as_str()) {
+        ("GET", "/healthz") => {
+            // liveness: the process is up and a worker answered
+            let keep = keep && content_length.unwrap_or(0) == 0;
+            let _ = write_http_raw(out, 200, "OK", "{\"ok\": true}\n", keep);
+            return keep;
+        }
+        ("GET", "/readyz") => {
+            // readiness: accepting work (not draining), queue headroom,
+            // and the store still writable
+            let keep = keep && content_length.unwrap_or(0) == 0;
+            let draining = ctx.stop.load(Ordering::SeqCst);
+            let depth = ctx.queue.depth();
+            let cap = ctx.cfg.queue_cap.max(1);
+            let degraded = service.store_degraded();
+            let ready = !draining && depth < cap && !degraded;
+            let body = format!(
+                "{{\"ready\": {ready}, \"draining\": {draining}, \"queue_depth\": {depth}, \
+                 \"queue_cap\": {cap}, \"store_degraded\": {degraded}}}\n"
+            );
+            let _ = if ready {
+                write_http_raw(out, 200, "OK", &body, keep)
+            } else {
+                write_http_ex(
+                    out,
+                    503,
+                    "Service Unavailable",
+                    &body,
+                    keep,
+                    &[("Retry-After", &RETRY_AFTER_SECS.to_string())],
+                )
+            };
+            return keep;
+        }
+        _ => {}
+    }
+
+    if !authorized(ctx, out, auth.as_deref()) {
+        // the request body (if any) is unread — never reuse the stream
+        respond_error(out, 401, "Unauthorized", "request: missing or invalid token", false);
+        return false;
+    }
+
+    match (method.as_str(), path.as_str()) {
+        ("POST", "/shutdown") => {
+            // graceful drain (the SIGTERM equivalent): acknowledge,
+            // then stop accepting; queued + in-flight requests finish
+            // and the `serve` arm flushes counters after join
+            let _ = write_http_raw(out, 200, "OK", "{\"draining\": true}\n", false);
+            ctx.begin_drain();
+            false
+        }
         ("GET", "/stats") => {
             // a GET carrying a body would desync the framing — close then
             let keep = keep && content_length.unwrap_or(0) == 0;
@@ -378,6 +498,39 @@ fn handle_one_request(
     }
 }
 
+/// Gate for authenticated endpoints. Open when no token is configured;
+/// otherwise the request must carry `Authorization: Bearer <token>` —
+/// except from loopback peers, who are exempt unless `token_all` is on
+/// (the local operator already owns the process).
+fn authorized(ctx: &ServerCtx, out: &TcpStream, auth: Option<&str>) -> bool {
+    let Some(token) = ctx.cfg.token.as_deref() else { return true };
+    let loopback = out.peer_addr().map(|a| a.ip().is_loopback()).unwrap_or(false);
+    if loopback && !ctx.cfg.token_all {
+        return true;
+    }
+    let presented = auth
+        .and_then(|v| {
+            let (scheme, rest) = v.split_once(' ')?;
+            scheme.eq_ignore_ascii_case("bearer").then(|| rest.trim())
+        })
+        .unwrap_or("");
+    constant_time_eq(presented.as_bytes(), token.as_bytes())
+}
+
+/// Length-safe constant-time comparison: the work done is a function of
+/// the *presented* value's length only, never of how many leading bytes
+/// happen to match the secret — no early exit for a timing oracle to
+/// measure.
+fn constant_time_eq(a: &[u8], b: &[u8]) -> bool {
+    let mut diff = a.len() ^ b.len();
+    for i in 0..a.len().max(b.len()) {
+        let x = a.get(i).copied().unwrap_or(0);
+        let y = b.get(i).copied().unwrap_or(0);
+        diff |= usize::from(x ^ y);
+    }
+    diff == 0
+}
+
 fn respond_error(out: &mut TcpStream, status: u16, reason: &str, msg: &str, keep: bool) {
     let _ = write_http(out, status, reason, &[service::request_error_line(msg)], keep);
 }
@@ -401,12 +554,41 @@ fn write_http_raw(
     body: &str,
     keep: bool,
 ) -> std::io::Result<()> {
+    write_http_ex(out, status, reason, body, keep, &[])
+}
+
+fn write_http_ex(
+    out: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    body: &str,
+    keep: bool,
+    extra_headers: &[(&str, &str)],
+) -> std::io::Result<()> {
     let connection = if keep { "keep-alive" } else { "close" };
-    let head = format!(
+    let mut head = format!(
         "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: {connection}\r\n\r\n",
+         Content-Length: {}\r\nConnection: {connection}\r\n",
         body.len()
     );
+    for (k, v) in extra_headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("\r\n");
+    // `net.write` injection site: the full head goes out advertising
+    // the real Content-Length, then the connection dies half-way
+    // through the body — the client sees a short read (truncated
+    // NDJSON, no `done` line) and must retry
+    if fault::fire("net.write") {
+        out.write_all(head.as_bytes())?;
+        out.write_all(&body.as_bytes()[..body.len() / 2])?;
+        let _ = out.flush();
+        let _ = out.shutdown(std::net::Shutdown::Both);
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::Other,
+            "fault: injected truncated response at `net.write`",
+        ));
+    }
     out.write_all(head.as_bytes())?;
     out.write_all(body.as_bytes())?;
     out.flush()
@@ -419,48 +601,95 @@ fn write_http_raw(
 /// Send one request on a fresh `Connection: close` connection, return
 /// the response items (the `done` terminator verified and stripped).
 /// Server-side failures surface as `Err` with the error's store-form
-/// rendering. A caller issuing many requests should hold a [`Client`]
-/// instead and pay the handshake once.
+/// rendering — no retries (hold a [`Client`] for those). A caller
+/// issuing many requests should hold a [`Client`] anyway and pay the
+/// handshake once.
 pub fn request(addr: &str, req: &ServiceRequest) -> Result<Vec<Json>, String> {
     let body = service::encode_request(req).to_compact();
-    let (status, text) = http(addr, "POST", "/api/v1", Some(&body))?;
-    decode_api_response(status, &text)
+    let raw = http(addr, "POST", "/api/v1", Some(&body))?;
+    decode_api_response(&raw).map_err(AttemptError::into_message)
 }
 
 /// `GET /stats` as one parsed document (fresh connection per call).
 pub fn get_stats(addr: &str) -> Result<Json, String> {
-    let (status, text) = http(addr, "GET", "/stats", None)?;
-    decode_stats_response(status, &text)
+    let raw = http(addr, "GET", "/stats", None)?;
+    decode_stats_response(&raw).map_err(AttemptError::into_message)
 }
 
-fn decode_api_response(status: u16, text: &str) -> Result<Vec<Json>, String> {
-    let lines = parse_ndjson(text)?;
+/// Why an attempt failed, from the retry policy's point of view:
+/// transient failures (connect/IO errors, 5xx, truncated streams) are
+/// retried with backoff, permanent ones (4xx, application errors)
+/// surface immediately.
+enum AttemptError {
+    Transient { msg: String, retry_after: Option<u64> },
+    Permanent(String),
+}
+
+impl AttemptError {
+    fn transient(msg: String) -> AttemptError {
+        AttemptError::Transient { msg, retry_after: None }
+    }
+
+    fn into_message(self) -> String {
+        match self {
+            AttemptError::Transient { msg, .. } | AttemptError::Permanent(msg) => msg,
+        }
+    }
+}
+
+fn decode_api_response(raw: &RawResponse) -> Result<Vec<Json>, AttemptError> {
+    if raw.status >= 500 {
+        // 503 from the accept loop's backpressure path (carrying
+        // Retry-After) or any other server-side failure: retryable
+        let msg = parse_ndjson(&raw.body)
+            .ok()
+            .and_then(|lines| service::decode_response_lines(&lines).err())
+            .unwrap_or_else(|| format!("server returned HTTP {}", raw.status));
+        return Err(AttemptError::Transient { msg, retry_after: raw.retry_after });
+    }
+    // garbage on the wire after a 200 head usually means the stream was
+    // cut mid-line — retryable, same as an unterminated response
+    let lines = parse_ndjson(&raw.body).map_err(|e| {
+        if raw.status == 200 { AttemptError::transient(e) } else { AttemptError::Permanent(e) }
+    })?;
     match service::decode_response_lines(&lines) {
-        Ok(items) if status == 200 => Ok(items),
-        Ok(_) => Err(format!("server returned HTTP {status}")),
-        Err(e) => Err(e),
+        Ok(items) if raw.status == 200 => Ok(items),
+        Ok(_) => Err(AttemptError::Permanent(format!("server returned HTTP {}", raw.status))),
+        Err(e) if raw.status == 200 && service::is_truncated_response(&e) => {
+            Err(AttemptError::transient(e))
+        }
+        Err(e) => Err(AttemptError::Permanent(e)),
     }
 }
 
-fn decode_stats_response(status: u16, text: &str) -> Result<Json, String> {
-    if status != 200 {
-        let lines = parse_ndjson(text).unwrap_or_default();
-        return Err(service::decode_response_lines(&lines)
-            .err()
-            .unwrap_or_else(|| format!("server returned HTTP {status}")));
+fn decode_stats_response(raw: &RawResponse) -> Result<Json, AttemptError> {
+    if raw.status >= 500 {
+        let msg = parse_ndjson(&raw.body)
+            .ok()
+            .and_then(|lines| service::decode_response_lines(&lines).err())
+            .unwrap_or_else(|| format!("server returned HTTP {}", raw.status));
+        return Err(AttemptError::Transient { msg, retry_after: raw.retry_after });
     }
-    json::parse(text)
+    if raw.status != 200 {
+        let lines = parse_ndjson(&raw.body).unwrap_or_default();
+        return Err(AttemptError::Permanent(
+            service::decode_response_lines(&lines)
+                .err()
+                .unwrap_or_else(|| format!("server returned HTTP {}", raw.status)),
+        ));
+    }
+    // a half-written stats document fails to parse: retryable
+    json::parse(&raw.body).map_err(AttemptError::transient)
 }
 
 /// One-shot HTTP/1.1 exchange on a fresh connection, declaring
 /// `Connection: close`.
-fn http(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String), String> {
+fn http(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<RawResponse, String> {
     let mut stream =
         TcpStream::connect(addr).map_err(|e| format!("connecting to {addr}: {e}"))?;
-    send_head(&mut stream, addr, method, path, body.unwrap_or(""), true)?;
+    send_head(&mut stream, addr, method, path, body.unwrap_or(""), true, None)?;
     let mut reader = BufReader::new(stream);
-    let (status, text, _) = read_response(&mut reader, addr)?;
-    Ok((status, text))
+    read_response(&mut reader, addr)
 }
 
 fn send_head(
@@ -470,11 +699,16 @@ fn send_head(
     path: &str,
     content: &str,
     close: bool,
+    token: Option<&str>,
 ) -> Result<(), String> {
     let connection = if close { "close" } else { "keep-alive" };
+    let auth = match token {
+        Some(t) => format!("Authorization: Bearer {t}\r\n"),
+        None => String::new(),
+    };
     let head = format!(
         "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: {connection}\r\n\r\n",
+         Content-Length: {}\r\nConnection: {connection}\r\n{auth}\r\n",
         content.len()
     );
     stream
@@ -484,16 +718,27 @@ fn send_head(
         .map_err(|e| format!("sending request to {addr}: {e}"))
 }
 
+/// One parsed HTTP response, plus the headers the retry policy cares
+/// about.
+struct RawResponse {
+    status: u16,
+    body: String,
+    /// The server said `Connection: close` (or implied it) — the socket
+    /// must not be reused.
+    server_close: bool,
+    /// `Retry-After` seconds from a `503`, if the server sent one.
+    retry_after: Option<u64>,
+}
+
 /// Read one HTTP response, framed by `Content-Length` — mandatory for
 /// keep-alive, where read-to-EOF would block forever on the open
 /// socket. A response without the header falls back to read-to-EOF and
-/// implies close. Returns `(status, body, server_says_close)`. No read
-/// timeout — a paper-scale grid legitimately computes for a long time
-/// before the first response byte.
+/// implies close. No read timeout — a paper-scale grid legitimately
+/// computes for a long time before the first response byte.
 fn read_response(
     reader: &mut BufReader<TcpStream>,
     addr: &str,
-) -> Result<(u16, String, bool), String> {
+) -> Result<RawResponse, String> {
     let fail = |e| format!("reading response from {addr}: {e}");
     let mut status_line = String::new();
     if reader.read_line(&mut status_line).map_err(fail)? == 0 {
@@ -508,6 +753,7 @@ fn read_response(
         })?;
     let mut content_length: Option<usize> = None;
     let mut server_close = false;
+    let mut retry_after: Option<u64> = None;
     loop {
         let mut line = String::new();
         let n = reader.read_line(&mut line).map_err(fail)?;
@@ -521,9 +767,12 @@ fn read_response(
             if k.eq_ignore_ascii_case("connection") && v.trim().eq_ignore_ascii_case("close") {
                 server_close = true;
             }
+            if k.eq_ignore_ascii_case("retry-after") {
+                retry_after = v.trim().parse::<u64>().ok();
+            }
         }
     }
-    let text = match content_length {
+    let body = match content_length {
         Some(len) => {
             let mut buf = vec![0u8; len];
             reader.read_exact(&mut buf).map_err(fail)?;
@@ -537,42 +786,115 @@ fn read_response(
             t
         }
     };
-    Ok((status, text, server_close))
+    Ok(RawResponse { status, body, server_close, retry_after })
+}
+
+/// Capped-exponential-backoff retry with deterministic jitter — what a
+/// [`Client`] does with transient failures.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Attempts per call, counting the first (1 = no retries).
+    pub max_attempts: u32,
+    /// Delay before the first retry; doubles per retry up to
+    /// `max_delay`.
+    pub base_delay: Duration,
+    /// Cap on any single delay — also caps an honored `Retry-After`.
+    pub max_delay: Duration,
+    /// Wall-clock budget per call: no retry *starts* past this.
+    pub deadline: Duration,
+    /// Seed for the jitter stream, so two runs with the same seed sleep
+    /// the same schedule (the fault soak depends on this).
+    pub jitter_seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 6,
+            base_delay: Duration::from_millis(50),
+            max_delay: Duration::from_secs(2),
+            deadline: Duration::from_secs(120),
+            jitter_seed: 0x70697065, // "pipe"
+        }
+    }
+}
+
+/// The delay before retry number `retry` (0-based). An honored
+/// `Retry-After` overrides the exponential schedule (capped at
+/// `max_delay`); otherwise the delay is drawn deterministically from
+/// `[cap/2, cap]` where `cap = min(base · 2^retry, max_delay)` — full
+/// determinism, half the herd alignment.
+fn backoff_delay(policy: &RetryPolicy, retry: u32, rng: &mut Rng, retry_after: Option<u64>) -> Duration {
+    if let Some(secs) = retry_after {
+        return Duration::from_secs(secs).min(policy.max_delay);
+    }
+    let cap = policy
+        .base_delay
+        .saturating_mul(1u32 << retry.min(16))
+        .min(policy.max_delay);
+    let ms = cap.as_millis() as u64;
+    Duration::from_millis(ms / 2 + rng.below(ms / 2 + 1))
 }
 
 /// A persistent daemon connection: every call reuses one keep-alive
 /// HTTP/1.1 socket, reconnecting transparently when the server closes
-/// it (per-connection request cap, idle timeout, daemon restart). The
-/// free [`request`]/[`get_stats`] helpers remain the
-/// connection-per-request path; anything issuing more than a couple of
-/// requests should hold a `Client` — the daemon's `connections_reused`
-/// counter shows the handshakes saved.
+/// it (per-connection request cap, idle timeout, daemon restart), and
+/// retrying transient failures under a [`RetryPolicy`]. A stale kept
+/// socket (the server closed it between calls) gets one immediate
+/// free reconnect before the backoff schedule engages — reconnection
+/// after the request cap stays instant. The free
+/// [`request`]/[`get_stats`] helpers remain the
+/// connection-per-request, no-retry path.
 pub struct Client {
     addr: String,
     conn: Option<(TcpStream, BufReader<TcpStream>)>,
+    policy: RetryPolicy,
+    rng: Rng,
+    retries: u64,
+    token: Option<String>,
 }
 
 impl Client {
     /// Lazy: no connection is made until the first call.
     pub fn new(addr: &str) -> Client {
-        Client { addr: addr.to_string(), conn: None }
+        let policy = RetryPolicy::default();
+        let rng = Rng::new(policy.jitter_seed);
+        Client { addr: addr.to_string(), conn: None, policy, rng, retries: 0, token: None }
+    }
+
+    /// Replace the retry policy (builder-style).
+    pub fn with_retry(mut self, policy: RetryPolicy) -> Client {
+        self.rng = Rng::new(policy.jitter_seed);
+        self.policy = policy;
+        self
+    }
+
+    /// Attach a shared-secret token, sent as `Authorization: Bearer`
+    /// on every request (builder-style).
+    pub fn with_token(mut self, token: Option<String>) -> Client {
+        self.token = token;
+        self
     }
 
     pub fn addr(&self) -> &str {
         &self.addr
     }
 
+    /// Retries performed over this client's lifetime (stale-socket
+    /// reconnects included; first attempts are not retries).
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
     /// Send one API request over the persistent connection.
     pub fn request(&mut self, req: &ServiceRequest) -> Result<Vec<Json>, String> {
         let body = service::encode_request(req).to_compact();
-        let (status, text) = self.exchange("POST", "/api/v1", Some(&body))?;
-        decode_api_response(status, &text)
+        self.call("POST", "/api/v1", &body, decode_api_response)
     }
 
     /// `GET /stats` over the persistent connection.
     pub fn get_stats(&mut self) -> Result<Json, String> {
-        let (status, text) = self.exchange("GET", "/stats", None)?;
-        decode_stats_response(status, &text)
+        self.call("GET", "/stats", "", decode_stats_response)
     }
 
     fn connect(&mut self) -> Result<(), String> {
@@ -583,42 +905,80 @@ impl Client {
         Ok(())
     }
 
-    fn exchange(
+    /// The retry loop: run attempts until one succeeds, fails
+    /// permanently, exhausts `max_attempts`, or would sleep past the
+    /// deadline.
+    fn call<T>(
         &mut self,
         method: &str,
         path: &str,
-        body: Option<&str>,
-    ) -> Result<(u16, String), String> {
-        let content = body.unwrap_or("");
-        let addr = self.addr.clone();
-        let attempt = |conn: &mut (TcpStream, BufReader<TcpStream>)| {
-            send_head(&mut conn.0, &addr, method, path, content, false)?;
-            read_response(&mut conn.1, &addr)
-        };
-        let fresh = self.conn.is_none();
-        if fresh {
-            self.connect()?;
-        }
-        let mut r = attempt(self.conn.as_mut().unwrap());
-        if r.is_err() && !fresh {
-            // the kept socket went stale between calls (request cap,
-            // idle timeout, restart): retry once on a fresh connection
+        content: &str,
+        decode: fn(&RawResponse) -> Result<T, AttemptError>,
+    ) -> Result<T, String> {
+        let start = Instant::now();
+        let mut free_retry_used = false;
+        let mut retry: u32 = 0;
+        loop {
+            let reused = self.conn.is_some();
+            let (msg, retry_after) = match self.attempt_once(method, path, content, decode) {
+                Ok(v) => return Ok(v),
+                Err(AttemptError::Permanent(e)) => return Err(e),
+                Err(AttemptError::Transient { msg, retry_after }) => (msg, retry_after),
+            };
+            // never reuse a connection an attempt just failed on
             self.conn = None;
-            self.connect()?;
-            r = attempt(self.conn.as_mut().unwrap());
-        }
-        match r {
-            Ok((status, text, server_close)) => {
-                if server_close {
-                    self.conn = None;
-                }
-                Ok((status, text))
+            if reused && !free_retry_used {
+                // the kept socket went stale between calls (request
+                // cap, idle timeout, restart): retry immediately
+                free_retry_used = true;
+                self.retries += 1;
+                continue;
             }
+            if retry + 1 >= self.policy.max_attempts {
+                return Err(format!(
+                    "giving up on {method} {path} after {} attempts: {msg}",
+                    self.policy.max_attempts
+                ));
+            }
+            let delay = backoff_delay(&self.policy, retry, &mut self.rng, retry_after);
+            if start.elapsed() + delay > self.policy.deadline {
+                return Err(format!(
+                    "deadline of {:?} exceeded retrying {method} {path}: {msg}",
+                    self.policy.deadline
+                ));
+            }
+            std::thread::sleep(delay);
+            retry += 1;
+            self.retries += 1;
+        }
+    }
+
+    fn attempt_once<T>(
+        &mut self,
+        method: &str,
+        path: &str,
+        content: &str,
+        decode: fn(&RawResponse) -> Result<T, AttemptError>,
+    ) -> Result<T, AttemptError> {
+        let addr = self.addr.clone();
+        let token = self.token.clone();
+        if self.conn.is_none() {
+            self.connect().map_err(AttemptError::transient)?;
+        }
+        let conn = self.conn.as_mut().unwrap();
+        let io = send_head(&mut conn.0, &addr, method, path, content, false, token.as_deref())
+            .and_then(|()| read_response(&mut conn.1, &addr));
+        let raw = match io {
+            Ok(raw) => raw,
             Err(e) => {
                 self.conn = None;
-                Err(e)
+                return Err(AttemptError::transient(e));
             }
+        };
+        if raw.server_close {
+            self.conn = None;
         }
+        decode(&raw)
     }
 }
 
@@ -679,7 +1039,7 @@ mod tests {
         let server = Server::spawn(
             Arc::clone(&svc),
             "127.0.0.1:0",
-            ServerConfig { workers: 1, queue_cap: 4 },
+            ServerConfig { workers: 1, queue_cap: 4, ..Default::default() },
         )
         .unwrap();
         let addr = server.addr().to_string();
@@ -726,7 +1086,7 @@ mod tests {
         let server = Server::spawn(
             Arc::clone(&svc),
             "127.0.0.1:0",
-            ServerConfig { workers: 1, queue_cap: 4 },
+            ServerConfig { workers: 1, queue_cap: 4, ..Default::default() },
         )
         .unwrap();
         let mut client = Client::new(&server.addr().to_string());
@@ -734,10 +1094,226 @@ mod tests {
             assert!(client.get_stats().is_ok());
         }
         // request MAX_REQUESTS_PER_CONN came back `Connection: close`,
-        // so the final request opened a second connection
+        // so the final request opened a second connection — and because
+        // the server *announced* the close, no request ever failed and
+        // the retry machinery never engaged
         assert_eq!(svc.clients_served(), 2);
         assert_eq!(svc.connections_reused(), (MAX_REQUESTS_PER_CONN - 1) as u64);
+        assert_eq!(client.retries(), 0);
         drop(client);
         server.shutdown();
+    }
+
+    fn test_server(cfg: ServerConfig) -> (Arc<Service>, Server) {
+        use crate::coordinator::engine::Engine;
+        use crate::sim::device::DeviceConfig;
+        let svc = Arc::new(Service::daemon(Engine::new(DeviceConfig::pac_a10(), 1)));
+        let server = Server::spawn(Arc::clone(&svc), "127.0.0.1:0", cfg).unwrap();
+        (svc, server)
+    }
+
+    /// Raw one-shot exchange, for cases the [`Client`] cannot express
+    /// (custom headers, mid-burst `Connection: close`).
+    fn raw_http(addr: &str, head_and_body: &str) -> (u16, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(head_and_body.as_bytes()).unwrap();
+        s.flush().unwrap();
+        let mut reader = BufReader::new(s);
+        let raw = read_response(&mut reader, addr).unwrap();
+        (raw.status, raw.body)
+    }
+
+    /// A request landing exactly *at* the per-connection cap is served
+    /// normally with `Connection: close` — not rejected, not off by
+    /// one.
+    #[test]
+    fn request_exactly_at_cap_is_served_then_closed() {
+        let (svc, server) =
+            test_server(ServerConfig { workers: 1, queue_cap: 4, ..Default::default() });
+        let addr = server.addr().to_string();
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let read_half = s.try_clone().unwrap();
+        let mut reader = BufReader::new(read_half);
+        for i in 1..=MAX_REQUESTS_PER_CONN {
+            send_head(&mut s, &addr, "GET", "/stats", "", false, None).unwrap();
+            let raw = read_response(&mut reader, &addr).unwrap();
+            assert_eq!(raw.status, 200, "request {i} should succeed");
+            // the cap-th response must advertise close; earlier ones must not
+            assert_eq!(raw.server_close, i == MAX_REQUESTS_PER_CONN, "request {i}");
+        }
+        // the server hung up: the next read sees EOF
+        let mut probe = String::new();
+        assert_eq!(reader.read_line(&mut probe).unwrap_or(0), 0);
+        assert_eq!(svc.clients_served(), 1);
+        assert_eq!(svc.connections_reused(), (MAX_REQUESTS_PER_CONN - 1) as u64);
+        drop((s, reader));
+        server.shutdown();
+    }
+
+    /// `Connection: close` sent mid-burst is honored immediately: the
+    /// response says close, the socket dies, and a fresh connection
+    /// carries the rest of the burst.
+    #[test]
+    fn connection_close_mid_burst_is_honored() {
+        let (svc, server) =
+            test_server(ServerConfig { workers: 1, queue_cap: 4, ..Default::default() });
+        let addr = server.addr().to_string();
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut reader = BufReader::new(s.try_clone().unwrap());
+        send_head(&mut s, &addr, "GET", "/stats", "", false, None).unwrap();
+        assert!(!read_response(&mut reader, &addr).unwrap().server_close);
+        // second request of the burst asks to close
+        send_head(&mut s, &addr, "GET", "/stats", "", true, None).unwrap();
+        let raw = read_response(&mut reader, &addr).unwrap();
+        assert_eq!(raw.status, 200);
+        assert!(raw.server_close, "the server must echo the requested close");
+        let mut probe = String::new();
+        assert_eq!(reader.read_line(&mut probe).unwrap_or(0), 0, "socket should be closed");
+        drop((s, reader));
+        // the burst finishes on a new connection
+        assert!(request(&addr, &ServiceRequest::Stats).is_ok());
+        assert_eq!(svc.clients_served(), 2);
+        server.shutdown();
+    }
+
+    /// Backpressure end to end: with the queue full, the accept thread
+    /// answers `503` + `Retry-After`, and a [`Client`] rides it out by
+    /// backing off until capacity frees up.
+    #[test]
+    fn full_queue_answers_503_with_retry_after_and_client_recovers() {
+        let (_svc, server) =
+            test_server(ServerConfig { workers: 1, queue_cap: 1, ..Default::default() });
+        let addr = server.addr().to_string();
+
+        // occupy the single worker with a connection that never sends a
+        // request, and fill the one queue slot with another
+        let worker_pin = TcpStream::connect(&addr).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        let queue_pin = TcpStream::connect(&addr).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+
+        // a third connection is answered straight from the accept loop
+        let mut s = TcpStream::connect(&addr).unwrap();
+        send_head(&mut s, &addr, "GET", "/stats", "", true, None).unwrap();
+        let mut reader = BufReader::new(s);
+        let raw = read_response(&mut reader, &addr).unwrap();
+        assert_eq!(raw.status, 503);
+        assert_eq!(raw.retry_after, Some(RETRY_AFTER_SECS));
+        assert!(raw.body.contains("queue is full"));
+        drop(reader);
+
+        // free capacity from another thread while a retrying client is
+        // mid-backoff — it must succeed without surfacing the 503s
+        let unpin = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(300));
+            drop(worker_pin);
+            drop(queue_pin);
+        });
+        let mut client = Client::new(&addr).with_retry(RetryPolicy {
+            base_delay: Duration::from_millis(100),
+            max_delay: Duration::from_millis(200),
+            ..Default::default()
+        });
+        assert!(client.get_stats().is_ok());
+        assert!(client.retries() > 0, "the 503s should have been retried");
+        unpin.join().unwrap();
+        server.shutdown();
+    }
+
+    /// `/healthz` always answers; `/readyz` flips to 503 once the
+    /// daemon starts draining.
+    #[test]
+    fn health_and_ready_probes_report_drain() {
+        let (_svc, server) =
+            test_server(ServerConfig { workers: 2, queue_cap: 4, ..Default::default() });
+        let addr = server.addr().to_string();
+        let head = |path: &str| {
+            format!("GET {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: 0\r\nConnection: close\r\n\r\n")
+        };
+        let (status, body) = raw_http(&addr, &head("/healthz"));
+        assert_eq!(status, 200);
+        assert!(body.contains("\"ok\": true"));
+        let (status, body) = raw_http(&addr, &head("/readyz"));
+        assert_eq!(status, 200);
+        assert!(body.contains("\"ready\": true"), "unexpected readyz body: {body}");
+
+        // POST /shutdown drains gracefully: the probe flips before the
+        // workers finish, and join() returns without process death
+        let (status, body) = raw_http(
+            &addr,
+            &format!("POST /shutdown HTTP/1.1\r\nHost: {addr}\r\nContent-Length: 0\r\nConnection: close\r\n\r\n"),
+        );
+        assert_eq!(status, 200);
+        assert!(body.contains("\"draining\": true"));
+        server.join(); // must return: drain stops the accept loop and closes the queue
+    }
+
+    /// With a token and `token_all`, an unauthenticated request gets a
+    /// 401, the right token opens the door, and the probe endpoints
+    /// stay exempt.
+    #[test]
+    fn token_auth_rejects_and_admits() {
+        let (_svc, server) = test_server(ServerConfig {
+            workers: 1,
+            queue_cap: 4,
+            token: Some("s3cret".into()),
+            token_all: true,
+        });
+        let addr = server.addr().to_string();
+
+        let mut no_token = Client::new(&addr)
+            .with_retry(RetryPolicy { max_attempts: 1, ..Default::default() });
+        let err = no_token.get_stats().unwrap_err();
+        assert!(err.contains("invalid token"), "unexpected error: {err}");
+
+        let mut wrong = Client::new(&addr)
+            .with_retry(RetryPolicy { max_attempts: 1, ..Default::default() })
+            .with_token(Some("nope".into()));
+        assert!(wrong.get_stats().is_err());
+
+        let mut right = Client::new(&addr).with_token(Some("s3cret".into()));
+        assert!(right.get_stats().is_ok());
+        assert!(right.request(&ServiceRequest::Stats).is_ok());
+
+        // probes never require credentials — health checkers hold none
+        let (status, _) = raw_http(
+            &addr,
+            &format!("GET /healthz HTTP/1.1\r\nHost: {addr}\r\nContent-Length: 0\r\nConnection: close\r\n\r\n"),
+        );
+        assert_eq!(status, 200);
+        server.shutdown();
+    }
+
+    #[test]
+    fn constant_time_eq_compares_correctly() {
+        assert!(constant_time_eq(b"abc", b"abc"));
+        assert!(!constant_time_eq(b"abc", b"abd"));
+        assert!(!constant_time_eq(b"abc", b"abcd"));
+        assert!(!constant_time_eq(b"", b"a"));
+        assert!(constant_time_eq(b"", b""));
+    }
+
+    /// The backoff schedule: deterministic for a seed, exponential up
+    /// to the cap, jittered within [cap/2, cap], `Retry-After` honored
+    /// but clamped.
+    #[test]
+    fn backoff_schedule_is_capped_jittered_and_deterministic() {
+        let policy = RetryPolicy::default();
+        let schedule = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            (0..8).map(|i| backoff_delay(&policy, i, &mut rng, None)).collect::<Vec<_>>()
+        };
+        let a = schedule(7);
+        assert_eq!(a, schedule(7), "same seed, same schedule");
+        for (i, d) in a.iter().enumerate() {
+            let cap = policy.base_delay.saturating_mul(1 << i).min(policy.max_delay);
+            assert!(*d >= cap / 2 && *d <= cap, "retry {i}: {d:?} outside [{:?}, {cap:?}]", cap / 2);
+        }
+        // far retries sit at the cap's window, not 2^n
+        assert!(a[7] <= policy.max_delay);
+        // Retry-After wins, but never past max_delay
+        let mut rng = Rng::new(7);
+        assert_eq!(backoff_delay(&policy, 0, &mut rng, Some(1)), Duration::from_secs(1));
+        assert_eq!(backoff_delay(&policy, 0, &mut rng, Some(3600)), policy.max_delay);
     }
 }

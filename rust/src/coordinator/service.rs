@@ -38,19 +38,24 @@ use std::time::Instant;
 
 /// Wire-protocol version: requests carry it, daemons reject mismatches.
 pub const API_SCHEMA: &str = "pipefwd-api-v1";
-/// `--counters` document schema (v2 adds the daemon counters
-/// `queue_depth_max` / `clients_served` / `requests_deduped`;
-/// `connections_reused` joined later *without* a bump — fields are
-/// additive and diffs render missing ones as absent, so old v2
-/// artifacts stay comparable).
-pub const COUNTERS_SCHEMA: &str = "pipefwd-counters-v2";
+/// `--counters` document schema (v3 adds the reliability counters
+/// `retries` / `journal_replays` / `store_degraded` from the
+/// fault-injection PR; v2 added the daemon counters `queue_depth_max` /
+/// `clients_served` / `requests_deduped`, with `connections_reused`
+/// joining later *without* a bump — fields are additive and diffs
+/// render missing ones as absent, so old artifacts stay comparable).
+pub const COUNTERS_SCHEMA: &str = "pipefwd-counters-v3";
+/// The daemon-era counters schema — still accepted by `report --diff`
+/// and the CI bench gates (old artifacts remain comparable).
+pub const COUNTERS_SCHEMA_V2: &str = "pipefwd-counters-v2";
 /// The pre-daemon counters schema — still accepted by `report --diff`
 /// and the CI bench gates (old artifacts remain comparable).
 pub const COUNTERS_SCHEMA_V1: &str = "pipefwd-counters-v1";
 
 /// Counter fields a counters document may carry, in canonical order.
-/// v1 documents stop at `trace_runs` + `wall_ms`; missing fields render
-/// as absent in diffs rather than failing them.
+/// v1 documents stop at `trace_runs` + `wall_ms`, v2 at
+/// `connections_reused`; missing fields render as absent in diffs
+/// rather than failing them.
 pub const COUNTER_FIELDS: &[&str] = &[
     "cache_hits",
     "store_hits",
@@ -61,6 +66,9 @@ pub const COUNTER_FIELDS: &[&str] = &[
     "clients_served",
     "requests_deduped",
     "connections_reused",
+    "retries",
+    "journal_replays",
+    "store_degraded",
     "wall_ms",
 ];
 
@@ -142,6 +150,7 @@ pub struct Service {
     clients_served: AtomicU64,
     queue_depth_max: AtomicU64,
     connections_reused: AtomicU64,
+    net_retries: AtomicU64,
 }
 
 impl Service {
@@ -153,6 +162,7 @@ impl Service {
             clients_served: AtomicU64::new(0),
             queue_depth_max: AtomicU64::new(0),
             connections_reused: AtomicU64::new(0),
+            net_retries: AtomicU64::new(0),
         }
     }
 
@@ -202,6 +212,24 @@ impl Service {
         self.connections_reused.load(Ordering::Relaxed)
     }
 
+    /// Record network retries performed against a remote daemon (the
+    /// CLI `client` arm folds in [`super::net::Client::retries`] so the
+    /// counters document shows how rough the network was).
+    pub fn note_retries(&self, n: u64) {
+        self.net_retries.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn retries(&self) -> u64 {
+        self.net_retries.load(Ordering::Relaxed)
+    }
+
+    /// Whether the attached store has dropped to read-only degraded
+    /// mode (cache dir unwritable) — the `/readyz` probe's store check.
+    /// No store attached means nothing can degrade.
+    pub fn store_degraded(&self) -> bool {
+        self.engine.store().map(|s| s.is_degraded()).unwrap_or(false)
+    }
+
     /// Requests answered from the claim/fulfil memo instead of computed
     /// again. Only meaningful under concurrent clients, so CLI mode
     /// pins it to zero (a serial run's cache hits are table re-reads,
@@ -231,6 +259,9 @@ impl Service {
             ("clients_served", Json::Num(self.clients_served() as f64)),
             ("requests_deduped", Json::Num(self.requests_deduped() as f64)),
             ("connections_reused", Json::Num(self.connections_reused() as f64)),
+            ("retries", Json::Num(self.retries() as f64)),
+            ("journal_replays", Json::Num(c.journal_replays as f64)),
+            ("store_degraded", Json::Num(c.store_degraded as f64)),
             ("wall_ms", Json::Num(wall_ms)),
         ])
     }
@@ -914,6 +945,13 @@ pub fn request_error_line(msg: &str) -> String {
     error_line(&MeasureError::parse(msg))
 }
 
+/// Whether a [`decode_response_lines`] error means the stream was cut
+/// short rather than the request being wrong — the client retry
+/// policy's transient/permanent split for application-level failures.
+pub fn is_truncated_response(err: &str) -> bool {
+    err.starts_with("truncated response") || err.starts_with("empty response")
+}
+
 /// Client-side stream check: surfaces the server's error line, verifies
 /// the `done` terminator + item count, and strips the terminator.
 pub fn decode_response_lines(lines: &[Json]) -> Result<Vec<Json>, String> {
@@ -974,11 +1012,11 @@ pub fn cells_to_bench(
 }
 
 /// The counter fields present in a counters document, in canonical
-/// order — `None` if the document is not a counters doc (v1 or v2).
-/// `report --diff` uses this to compare mixed-version artifacts.
+/// order — `None` if the document is not a counters doc (v1, v2, or
+/// v3). `report --diff` uses this to compare mixed-version artifacts.
 pub fn counters_fields(doc: &Json) -> Option<Vec<(&'static str, f64)>> {
     let schema = doc.get("schema")?.as_str()?;
-    if schema != COUNTERS_SCHEMA && schema != COUNTERS_SCHEMA_V1 {
+    if schema != COUNTERS_SCHEMA && schema != COUNTERS_SCHEMA_V2 && schema != COUNTERS_SCHEMA_V1 {
         return None;
     }
     let mut out = vec![];
@@ -1137,15 +1175,35 @@ mod tests {
     }
 
     #[test]
-    fn counters_doc_is_v2_with_zero_daemon_counters_in_cli_mode() {
+    fn counters_doc_is_v3_with_zero_daemon_counters_in_cli_mode() {
         let svc = Service::cli(Engine::new(DeviceConfig::pac_a10(), 1));
         let doc = svc.counters_doc("run", "tiny", 12.0);
         assert_eq!(doc.get("schema").unwrap().as_str(), Some(COUNTERS_SCHEMA));
-        for k in ["queue_depth_max", "clients_served", "requests_deduped", "connections_reused"] {
+        for k in [
+            "queue_depth_max",
+            "clients_served",
+            "requests_deduped",
+            "connections_reused",
+            "retries",
+            "journal_replays",
+            "store_degraded",
+        ] {
             assert_eq!(doc.get(k).unwrap().as_f64(), Some(0.0), "{k}");
         }
         let fields = counters_fields(&doc).unwrap();
         assert_eq!(fields.len(), COUNTER_FIELDS.len());
+
+        // a v2 document (no reliability fields) still yields its own
+        // fields — mixed-version diffs keep working
+        let v2 = Json::obj(vec![
+            ("schema", Json::Str(COUNTERS_SCHEMA_V2.into())),
+            ("cache_hits", Json::Num(3.0)),
+            ("connections_reused", Json::Num(4.0)),
+            ("wall_ms", Json::Num(10.0)),
+        ]);
+        let fields = counters_fields(&v2).unwrap();
+        assert_eq!(fields.len(), 3);
+        assert_eq!(fields[1], ("connections_reused", 4.0));
 
         // a v1 document yields only its own fields, in the same order
         let v1 = Json::obj(vec![
@@ -1193,8 +1251,12 @@ mod tests {
         let bench = cells_to_bench(&items, Scale::Tiny, &[]).unwrap();
         assert_eq!(bench, svc.engine().bench_json(Scale::Tiny, &[]));
 
-        // dropping the terminator reads as truncation, not success
-        assert!(decode_response_lines(&docs[..2]).is_err());
+        // dropping the terminator reads as truncation, not success —
+        // and the client retry policy classifies it as transient
+        let e = decode_response_lines(&docs[..2]).unwrap_err();
+        assert!(is_truncated_response(&e), "{e}");
+        assert!(is_truncated_response(&decode_response_lines(&[]).unwrap_err()));
+        assert!(!is_truncated_response("validation: boom"));
         // an error line surfaces as the rendered store-form string
         let err_docs = vec![crate::util::json::parse(&request_error_line(
             "validation: boom",

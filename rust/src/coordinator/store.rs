@@ -62,6 +62,7 @@ use crate::workloads::{ExecTrace, LaunchRecord};
 use std::collections::{HashMap, HashSet};
 use std::io;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
 /// Store layout/keying version. Bumping this orphans every existing entry
 /// (old files parse but fail the schema check and read as misses), which is
@@ -116,6 +117,14 @@ pub const STORE_SCHEMA_COMPAT_V4: &str = "pipefwd-store-v4";
 /// `PIPEFWD_CACHE_DIR`).
 pub const DEFAULT_DIR: &str = ".pipefwd-cache";
 
+/// Schema tag of `journal/` intent records (see [`Store::open`]'s
+/// healing pass). An intent is written *before* a multi-file operation
+/// (`put_trace`, `gc`) and removed after it completes, so an intent on
+/// disk at open time marks an interrupted operation to roll forward or
+/// discard. Single-file writes need no intent — temp-file + rename is
+/// already atomic.
+pub const JOURNAL_SCHEMA: &str = "pipefwd-journal-v1";
+
 /// FNV-1a 64-bit: tiny, dependency-free, and — unlike `DefaultHasher` —
 /// specified, so persisted keys stay valid across toolchains.
 pub fn fnv1a64(bytes: &[u8]) -> u64 {
@@ -135,16 +144,41 @@ pub fn key_hex(key: u64) -> String {
 /// Durable measurement store rooted at one directory.
 pub struct Store {
     root: PathBuf,
+    /// Read-only fallback: set when the cache directory turns
+    /// unwritable (real ENOSPC, vanished mount, permissions). Reads
+    /// keep serving warm hits; writes are silently skipped and counted
+    /// in `degraded_writes` — the engine keeps computing.
+    degraded: AtomicBool,
+    degraded_writes: AtomicU64,
+    /// Interrupted `put_trace`/`gc` operations rolled forward or
+    /// discarded by [`Store::open`]'s healing pass.
+    journal_replays: AtomicU64,
 }
 
 impl Store {
-    /// Open (creating if needed) a store rooted at `root`.
+    fn at(root: PathBuf) -> Store {
+        Store {
+            root,
+            degraded: AtomicBool::new(false),
+            degraded_writes: AtomicU64::new(0),
+            journal_replays: AtomicU64::new(0),
+        }
+    }
+
+    /// Open (creating if needed) a store rooted at `root`, then heal:
+    /// stale temp droppings from crashed writers are swept and every
+    /// `journal/` intent left by an interrupted multi-file operation is
+    /// rolled forward or discarded (see [`Store::heal`]).
     pub fn open(root: impl Into<PathBuf>) -> io::Result<Store> {
         let root = root.into();
         std::fs::create_dir_all(root.join("entries"))?;
         std::fs::create_dir_all(root.join("traces"))?;
         std::fs::create_dir_all(root.join("profiles"))?;
-        Ok(Store { root })
+        std::fs::create_dir_all(root.join("journal"))?;
+        let store = Store::at(root);
+        let replays = store.heal();
+        store.journal_replays.store(replays, Ordering::Relaxed);
+        Ok(store)
     }
 
     /// Open an existing store, erroring if `root` is not one — the
@@ -163,7 +197,7 @@ impl Store {
                 format!("{} is not a measurement store (no entries/ directory)", root.display()),
             ));
         }
-        Ok(Store { root })
+        Ok(Store::at(root))
     }
 
     /// The store directory configured for this process: `--cache-dir` wins,
@@ -193,6 +227,172 @@ impl Store {
         self.root.join("profiles").join(format!("{}.json", key_hex(fnv)))
     }
 
+    fn journal_dir(&self) -> PathBuf {
+        self.root.join("journal")
+    }
+
+    fn journal_path(&self, op: &str, key: u64) -> PathBuf {
+        self.journal_dir().join(format!("{op}-{}.json", key_hex(key)))
+    }
+
+    /// Intents currently on disk (0 after every cleanly completed
+    /// operation — the chaos-smoke CI gate asserts exactly this).
+    pub fn journal_len(&self) -> usize {
+        match std::fs::read_dir(self.journal_dir()) {
+            Ok(rd) => rd
+                .filter_map(|e| e.ok())
+                .filter(|e| e.path().extension().is_some_and(|x| x == "json"))
+                .count(),
+            Err(_) => 0,
+        }
+    }
+
+    /// Intents healed by [`Store::open`] (counters-v3 `journal_replays`).
+    pub fn journal_replays(&self) -> u64 {
+        self.journal_replays.load(Ordering::Relaxed)
+    }
+
+    /// Is the store in read-only degraded mode?
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.load(Ordering::Relaxed)
+    }
+
+    /// Writes skipped or lost to an unwritable cache directory
+    /// (counters-v3 `store_degraded`). Nonzero means warm reruns will
+    /// recompute whatever failed to persist — results are unaffected.
+    pub fn degraded_count(&self) -> u64 {
+        self.degraded_writes.load(Ordering::Relaxed)
+    }
+
+    /// After a write failure, decide whether the directory itself has
+    /// turned unwritable (degrade) or the failure was one bad write
+    /// (stay up — healing and reruns cover it). The probe bypasses
+    /// `util::json`, so injected `store.write` faults never degrade.
+    fn note_write_failure(&self, failed: &Path) {
+        if self.is_degraded() {
+            return;
+        }
+        let dir = failed.parent().unwrap_or(&self.root);
+        let probe = dir.join(format!(".probe-{}", std::process::id()));
+        let writable = std::fs::write(&probe, b"probe").is_ok();
+        let _ = std::fs::remove_file(&probe);
+        if !writable {
+            self.degraded.store(true, Ordering::Relaxed);
+            eprintln!(
+                "store: {} is unwritable — degrading to read-only (results unaffected; \
+                 further writes are skipped and counted)",
+                dir.display()
+            );
+        }
+    }
+
+    /// Count a write suppressed by degraded mode. Returns `true` when
+    /// degraded (caller skips the write and reports success — the
+    /// engine keeps computing).
+    fn skip_if_degraded(&self) -> bool {
+        if self.is_degraded() {
+            self.degraded_writes.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        false
+    }
+
+    /// Write a `journal/` intent naming every file the operation will
+    /// touch (paths relative to the store root), before touching any.
+    fn write_intent(&self, op: &str, key: u64, files: &[PathBuf]) -> io::Result<PathBuf> {
+        std::fs::create_dir_all(self.journal_dir())?;
+        let rels: Vec<Json> = files
+            .iter()
+            .map(|p| {
+                let rel = p.strip_prefix(&self.root).unwrap_or(p);
+                Json::Str(rel.to_string_lossy().replace('\\', "/"))
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("schema", Json::Str(JOURNAL_SCHEMA.into())),
+            ("op", Json::Str(op.into())),
+            ("key", Json::Str(key_hex(key))),
+            ("files", Json::Arr(rels)),
+        ]);
+        let path = self.journal_path(op, key);
+        json::write_file_atomic_compact(&path, &doc)?;
+        Ok(path)
+    }
+
+    /// Crash-consistency healing, run by [`Store::open`]: sweep stale
+    /// `.tmp-` droppings (a torn write never renamed over its
+    /// destination), then resolve every pending intent —
+    ///
+    /// * `put_trace`: if the trace document resolves (doc + every pool
+    ///   ref valid) the operation in fact completed — roll forward by
+    ///   dropping the intent. Otherwise discard: remove the partial
+    ///   trace document (orphaned-but-valid pool files are harmless —
+    ///   content-addressed, reclaimed by the next `gc`).
+    /// * `gc`: deletion is idempotent — roll forward by re-deleting
+    ///   every listed file and rewriting the manifest.
+    ///
+    /// Unreadable intents are themselves crash debris and are dropped.
+    /// Returns the number of intents resolved.
+    fn heal(&self) -> u64 {
+        for dir in ["entries", "traces", "profiles", "journal"] {
+            if let Ok(rd) = std::fs::read_dir(self.root.join(dir)) {
+                for e in rd.filter_map(|e| e.ok()) {
+                    if e.file_name().to_string_lossy().contains(".tmp-") {
+                        let _ = std::fs::remove_file(e.path());
+                    }
+                }
+            }
+        }
+        let mut replays = 0u64;
+        let Ok(rd) = std::fs::read_dir(self.journal_dir()) else { return 0 };
+        let mut memo = HashMap::new();
+        for e in rd.filter_map(|e| e.ok()) {
+            let path = e.path();
+            if !path.extension().is_some_and(|x| x == "json") {
+                continue;
+            }
+            replays += 1;
+            if let Ok(doc) = json::read_file(&path) {
+                self.replay_intent(&doc, &mut memo);
+            }
+            let _ = std::fs::remove_file(&path);
+        }
+        replays
+    }
+
+    fn replay_intent(&self, doc: &Json, memo: &mut HashMap<u64, KernelProfile>) {
+        let valid = doc.get("schema").and_then(Json::as_str) == Some(JOURNAL_SCHEMA);
+        let op = doc.get("op").and_then(Json::as_str).unwrap_or("");
+        let key = doc
+            .get("key")
+            .and_then(Json::as_str)
+            .and_then(|h| u64::from_str_radix(h, 16).ok());
+        match (valid, op, key) {
+            (true, "put_trace", Some(key)) => {
+                let tpath = self.trace_path(key);
+                let complete = json::read_file(&tpath)
+                    .is_ok_and(|tdoc| self.trace_resolves(&tdoc, key, memo));
+                if !complete {
+                    let _ = std::fs::remove_file(&tpath);
+                    eprintln!(
+                        "store: discarded interrupted trace write {} (will re-interpret)",
+                        key_hex(key)
+                    );
+                }
+            }
+            (true, "gc", _) => {
+                if let Some(files) = doc.get("files").and_then(Json::as_array) {
+                    for f in files.iter().filter_map(Json::as_str) {
+                        let _ = std::fs::remove_file(self.root.join(f));
+                    }
+                }
+                let _ = self.write_manifest();
+                eprintln!("store: rolled forward an interrupted gc");
+            }
+            _ => {} // unreadable/foreign intent: dropped by the caller
+        }
+    }
+
     /// Look an entry up. Any defect — missing file, truncated or garbled
     /// JSON, schema-version mismatch, key mismatch, malformed record — is a
     /// miss, not an error: the caller re-simulates and overwrites.
@@ -206,7 +406,12 @@ impl Store {
     /// metadata for filtered rendering; the content key already separates
     /// DES from analytic entries.
     pub fn put(&self, key: u64, result: &CellResult, des: bool) -> io::Result<()> {
-        json::write_file_atomic(&self.entry_path(key), &encode_entry(key, result, des))
+        if self.skip_if_degraded() {
+            return Ok(());
+        }
+        let path = self.entry_path(key);
+        json::write_file_atomic(&path, &encode_entry(key, result, des))
+            .inspect_err(|_| self.note_write_failure(&path))
     }
 
     /// Look a trace up (the measurement pipeline's first tier). Same
@@ -232,7 +437,12 @@ impl Store {
     /// across iterations (pagerank/bfs/mis) collapse to a handful of pool
     /// files regardless of launch count.
     pub fn put_trace(&self, key: u64, result: &TraceResult) -> io::Result<()> {
-        let doc = match result {
+        if self.skip_if_degraded() {
+            return Ok(());
+        }
+        // Serialize everything first (pure), so the journal intent can
+        // name every file *before* any of them is touched.
+        let (doc, pool) = match result {
             Ok(trace) => {
                 // one pool write per *distinct* profile in this trace —
                 // convergence loops repeat launches byte-identically, so
@@ -243,6 +453,7 @@ impl Store {
                 // writers land identical canonical bytes via the atomic
                 // rename.
                 let mut written: HashSet<u64> = HashSet::new();
+                let mut pool: Vec<(u64, String)> = vec![];
                 let mut launches = vec![];
                 for rec in &trace.launches {
                     let mut refs = vec![];
@@ -250,7 +461,7 @@ impl Store {
                         let text = prof.canonical_compact();
                         let fnv = fnv1a64(text.as_bytes());
                         if written.insert(fnv) {
-                            json::write_text_atomic(&self.profile_path(fnv), &text)?;
+                            pool.push((fnv, text));
                         }
                         refs.push(Json::Str(key_hex(fnv)));
                     }
@@ -259,11 +470,31 @@ impl Store {
                         ("kernels".into(), Json::Arr(refs)),
                     ]));
                 }
-                encode_trace_doc(key, Ok(Json::Arr(launches)))
+                (encode_trace_doc(key, Ok(Json::Arr(launches))), pool)
             }
-            Err(e) => encode_trace_doc(key, Err(e)),
+            Err(e) => (encode_trace_doc(key, Err(e)), vec![]),
         };
-        json::write_file_atomic_compact(&self.trace_path(key), &doc)
+        // Multi-file sequence under a journal intent: if any write (or
+        // the process) dies mid-way, `Store::open`'s healing pass rolls
+        // the operation forward or discards the partial trace.
+        let mut files: Vec<PathBuf> = pool.iter().map(|(fnv, _)| self.profile_path(*fnv)).collect();
+        files.push(self.trace_path(key));
+        let intent = self.write_intent("put_trace", key, &files)?;
+        let write_all = || -> io::Result<()> {
+            for (fnv, text) in &pool {
+                let path = self.profile_path(*fnv);
+                json::write_text_atomic(&path, text)
+                    .inspect_err(|_| self.note_write_failure(&path))?;
+            }
+            let tpath = self.trace_path(key);
+            json::write_file_atomic_compact(&tpath, &doc)
+                .inspect_err(|_| self.note_write_failure(&tpath))
+        };
+        // the intent stays on disk when a write fails — the next open
+        // heals the partial state exactly like a crash
+        write_all()?;
+        let _ = std::fs::remove_file(intent);
+        Ok(())
     }
 
     /// Resolve one pooled profile. `memo` collapses repeated refs within
@@ -507,14 +738,15 @@ impl Store {
         dry_run: bool,
     ) -> io::Result<GcReport> {
         let mut report = GcReport { dry_run, ..GcReport::default() };
+        // plan the full removal set first, deleting nothing: the journal
+        // intent below must name every doomed file before any dies
+        let mut doomed: Vec<PathBuf> = vec![];
         for key in self.keys() {
             if reachable_entries.contains(&key) {
                 report.kept_entries += 1;
             } else {
                 report.removed_entries += 1;
-                if !dry_run {
-                    std::fs::remove_file(self.entry_path(key))?;
-                }
+                doomed.push(self.entry_path(key));
             }
         }
         let mut live_profiles: HashSet<u64> = HashSet::new();
@@ -526,9 +758,7 @@ impl Store {
                 }
             } else {
                 report.removed_traces += 1;
-                if !dry_run {
-                    std::fs::remove_file(self.trace_path(key))?;
-                }
+                doomed.push(self.trace_path(key));
             }
         }
         for fnv in self.profile_keys() {
@@ -536,13 +766,23 @@ impl Store {
                 report.kept_profiles += 1;
             } else {
                 report.removed_profiles += 1;
-                if !dry_run {
-                    std::fs::remove_file(self.profile_path(fnv))?;
-                }
+                doomed.push(self.profile_path(fnv));
             }
         }
         if !dry_run {
+            // deletion is idempotent, so an interrupted gc is always
+            // rolled *forward* by the healing pass (finish the deletes,
+            // rewrite the manifest)
+            let intent = self.write_intent("gc", 0, &doomed)?;
+            for path in &doomed {
+                match std::fs::remove_file(path) {
+                    Ok(()) => {}
+                    Err(e) if e.kind() == io::ErrorKind::NotFound => {}
+                    Err(e) => return Err(e),
+                }
+            }
             self.write_manifest()?;
+            let _ = std::fs::remove_file(intent);
         }
         Ok(report)
     }
@@ -1412,6 +1652,134 @@ mod tests {
             }
         }
         assert_eq!(s.len(), 8 + 8 * 8);
+        let _ = std::fs::remove_dir_all(s.root());
+    }
+
+    /// Fabricate the on-disk state of a crash: an intent in `journal/`
+    /// (exactly as `put_trace` writes it) plus whatever partial files
+    /// the test wants. Reopening must resolve it.
+    fn fake_intent(s: &Store, op: &str, key: u64, files: Vec<&str>) {
+        let doc = Json::obj(vec![
+            ("schema", Json::Str(JOURNAL_SCHEMA.into())),
+            ("op", Json::Str(op.into())),
+            ("key", Json::Str(key_hex(key))),
+            ("files", Json::Arr(files.into_iter().map(|f| Json::Str(f.into())).collect())),
+        ]);
+        let path = s.root().join("journal").join(format!("{op}-{}.json", key_hex(key)));
+        json::write_file_atomic_compact(&path, &doc).unwrap();
+    }
+
+    /// Completed multi-file operations leave no intent behind; an
+    /// intent whose trace is torn is *discarded* on open (partial doc
+    /// removed, re-interpreted later); an intent whose trace resolves
+    /// is *rolled forward* (the write in fact completed — keep it).
+    #[test]
+    fn open_heals_interrupted_put_trace() {
+        let s = tmp_store("journal-put");
+        s.put_trace(11, &Ok(sample_trace())).unwrap();
+        assert_eq!(s.journal_len(), 0, "completed put_trace must clear its intent");
+        assert_eq!(s.journal_replays(), 0);
+
+        // crash A: intent present, trace document torn mid-write
+        let tpath = s.root().join("traces").join(format!("{}.json", key_hex(11)));
+        let full = std::fs::read_to_string(&tpath).unwrap();
+        std::fs::write(&tpath, &full[..full.len() / 2]).unwrap();
+        fake_intent(&s, "put_trace", 11, vec![]);
+        let root = s.root().to_path_buf();
+        let s = Store::open(&root).unwrap();
+        assert_eq!(s.journal_replays(), 1, "one intent resolved at open");
+        assert_eq!(s.journal_len(), 0, "no leaked intents after healing");
+        assert!(!tpath.exists(), "partial trace document must be discarded");
+        assert_eq!(s.get_trace(11), None);
+
+        // crash B: intent present but every write landed (died between
+        // the last rename and the intent removal) — rolled forward
+        s.put_trace(11, &Ok(sample_trace())).unwrap();
+        fake_intent(&s, "put_trace", 11, vec![]);
+        let s = Store::open(&root).unwrap();
+        assert_eq!(s.journal_replays(), 1);
+        assert_eq!(s.get_trace(11), Some(Ok(sample_trace())), "completed write must survive");
+        let _ = std::fs::remove_dir_all(s.root());
+    }
+
+    /// An interrupted gc rolls *forward*: the healing pass finishes the
+    /// recorded deletions and rewrites the manifest. Stale `.tmp-`
+    /// droppings (torn atomic writes) are swept too.
+    #[test]
+    fn open_rolls_forward_interrupted_gc_and_sweeps_droppings() {
+        let s = tmp_store("journal-gc");
+        let m = sample_measurement();
+        s.put(1, &Ok(m.clone()), false).unwrap();
+        s.put(2, &Ok(m), false).unwrap();
+        // a gc that "died" after deleting nothing: both doomed files listed
+        let doomed = format!("entries/{}.json", key_hex(2));
+        fake_intent(&s, "gc", 0, vec![&doomed]);
+        // plus a torn temp file a crashed writer left behind
+        let dropping = s.root().join("entries").join(".dead.json.tmp-999-0");
+        std::fs::write(&dropping, "{ torn").unwrap();
+        let root = s.root().to_path_buf();
+        let s = Store::open(&root).unwrap();
+        assert_eq!(s.journal_replays(), 1);
+        assert_eq!(s.keys(), vec![1], "gc deletions must be completed");
+        assert_eq!(s.load_manifest(), Some(vec![1]), "manifest rewritten by roll-forward");
+        assert!(!dropping.exists(), "torn temp files must be swept");
+        assert_eq!(s.journal_len(), 0);
+        let _ = std::fs::remove_dir_all(s.root());
+    }
+
+    /// A cleanly-completed gc leaves no intent behind, and corrupt
+    /// intents are dropped (counted, never fatal).
+    #[test]
+    fn gc_clears_its_intent_and_corrupt_intents_are_dropped() {
+        let s = tmp_store("journal-clean");
+        s.put(1, &Ok(sample_measurement()), false).unwrap();
+        let reach: HashSet<u64> = HashSet::new();
+        s.gc(&reach, &reach, false).unwrap();
+        assert_eq!(s.journal_len(), 0, "completed gc must clear its intent");
+        std::fs::write(s.root().join("journal").join("garbage.json"), "not json").unwrap();
+        let root = s.root().to_path_buf();
+        let s = Store::open(&root).unwrap();
+        assert_eq!(s.journal_replays(), 1, "corrupt intent still counts as resolved");
+        assert_eq!(s.journal_len(), 0);
+        let _ = std::fs::remove_dir_all(s.root());
+    }
+
+    /// When the cache directory itself turns unwritable the store
+    /// degrades to read-only: writes are skipped and counted, reads
+    /// keep serving, and nothing errors — the engine keeps computing.
+    #[test]
+    fn unwritable_dir_degrades_to_read_only() {
+        let s = tmp_store("degraded");
+        let m = sample_measurement();
+        s.put(1, &Ok(m.clone()), false).unwrap();
+        assert!(!s.is_degraded());
+        // make the entries tier unwritable in a way that defeats even
+        // root (permission bits don't): replace the directory by a file
+        std::fs::remove_dir_all(s.root().join("entries")).unwrap();
+        std::fs::write(s.root().join("entries"), "not a directory").unwrap();
+        assert!(s.put(2, &Ok(m.clone()), false).is_err(), "the failing write surfaces once");
+        assert!(s.is_degraded(), "an unwritable dir must flip degraded mode");
+        // subsequent writes are skipped silently and counted
+        assert!(s.put(3, &Ok(m.clone()), false).is_ok());
+        assert!(s.put_trace(4, &Ok(sample_trace())).is_ok());
+        assert_eq!(s.degraded_count(), 2);
+        assert_eq!(s.journal_len(), 0, "skipped writes must not journal");
+        let _ = std::fs::remove_dir_all(s.root());
+    }
+
+    /// A transient single-write failure (injected torn write, flaky
+    /// NFS) must NOT degrade the store while the directory stays
+    /// writable — the next write goes through.
+    #[test]
+    fn transient_write_failure_does_not_degrade() {
+        let s = tmp_store("transient");
+        // simulate: a write failed but the dir is fine — note_write_failure
+        // probes and finds it writable
+        s.note_write_failure(&s.entry_path(9));
+        assert!(!s.is_degraded());
+        s.put(9, &Ok(sample_measurement()), false).unwrap();
+        assert!(s.get(9).is_some());
+        assert_eq!(s.degraded_count(), 0);
         let _ = std::fs::remove_dir_all(s.root());
     }
 }

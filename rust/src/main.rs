@@ -64,13 +64,20 @@ DAEMON COMMANDS (measurement as a service, schema pipefwd-api-v1):
   serve --addr HOST:PORT        serve measure/sweep/tune/store requests
         [--workers N]           to many concurrent clients over TCP/HTTP;
         [--queue N]             shared cells dedup through one engine's
-                                claim/fulfil memo; bounded request queue
-                                answers 503 when full; GET /stats for
-                                live counters + store footprint
+        [--token T]             claim/fulfil memo; bounded request queue
+                                answers 503 + Retry-After when full;
+                                GET /stats for live counters + store
+                                footprint, GET /healthz and /readyz for
+                                probes, POST /shutdown for graceful
+                                drain; --token requires Authorization:
+                                Bearer from non-loopback peers
   client <action>               drive a daemon from the same binary:
         [--addr HOST:PORT]      run | sweep | tune | stats | store-pull
-                                — sinks are reassembled byte-identical
-                                to the serial CLI path
+        [--token T]             — sinks are reassembled byte-identical
+                                to the serial CLI path; transient
+                                failures (503, resets, truncated
+                                streams) retry with capped exponential
+                                backoff (see docs/RELIABILITY.md)
 
 TABLE COMMANDS:
   table1               benchmark characterisation (paper Table 1)
@@ -123,7 +130,7 @@ OPTIONS:
   --format F       `report` output: table (default) or json
   --in PATH        `report` input file (default: BENCH_PR1.json)
   --diff OLD NEW   `report` diff mode: two results sinks (or counters
-                   documents, v1/v2) to compare
+                   documents, v1/v2/v3) to compare
   --threshold PCT  regression threshold for `report --diff` (default: 5)
   --shard I/N      compute only shard I of N (1-based) of the unique
                    experiment grid; merge the stores afterwards
@@ -139,18 +146,30 @@ OPTIONS:
                    memory (MKPipe-style multi-kernel overlap). Cached
                    under keys carrying a trailing `overlap=on` line, so
                    overlap-off artifacts stay byte-identical
-  --counters PATH  after `run`/`sweep`/`tune`, write the engine counters
-                   to a pipefwd-counters-v2 document: the engine tiers
-                   (trace_hits/trace_runs/store_hits/simulations/
+  --counters PATH  after `run`/`sweep`/`tune`/`serve`, write the engine
+                   counters to a pipefwd-counters-v3 document: the engine
+                   tiers (trace_hits/trace_runs/store_hits/simulations/
                    cache_hits) plus the daemon counters (queue_depth_max/
                    clients_served/requests_deduped, zero in CLI mode)
-                   and wall-clock — CI gates on a warm rerun reporting
-                   zero trace runs
+                   and the reliability counters (retries/journal_replays/
+                   store_degraded) and wall-clock — CI gates on a warm
+                   rerun reporting zero trace runs
   --addr H:P       daemon address for `serve`/`client`
                    (default: 127.0.0.1:7341)
   --workers N      `serve`: connection-handling worker threads (default 4)
   --queue N        `serve`: bounded request-queue capacity — when full
                    the daemon answers 503 instead of buffering (default 64)
+  --token T        shared-secret auth for `serve`/`client` (or
+                   $PIPEFWD_TOKEN): a serving daemon answers 401 unless
+                   non-loopback requests carry Authorization: Bearer T
+                   (constant-time compared; loopback peers are exempt
+                   unless --token-all; /healthz + /readyz never require it)
+  --token-all      `serve`: require the token from loopback peers too
+  --fault-plan S   deterministic fault injection for robustness testing
+                   (or $PIPEFWD_FAULT_PLAN): a seeded schedule like
+                   `seed=42;store.write=0.25x4;net.read=0.1` over the
+                   named IO/network sites — see docs/RELIABILITY.md.
+                   Empty/absent = zero overhead, byte-identical behavior
 ";
 
 fn fail(msg: &str) -> ! {
@@ -217,6 +236,9 @@ fn v_format(v: &str) -> Result<(), String> {
         Err(format!("unknown format `{v}` (table|json)"))
     }
 }
+fn v_fault_plan(v: &str) -> Result<(), String> {
+    pipefwd::util::fault::FaultPlan::parse(v).map(|_| ())
+}
 
 const ARG_SPECS: &[ArgSpec] = &[
     ArgSpec { name: "--scale", arity: 1, validate: Some(v_scale) },
@@ -246,6 +268,9 @@ const ARG_SPECS: &[ArgSpec] = &[
     ArgSpec { name: "--addr", arity: 1, validate: Some(v_addr) },
     ArgSpec { name: "--workers", arity: 1, validate: Some(v_posint) },
     ArgSpec { name: "--queue", arity: 1, validate: Some(v_posint) },
+    ArgSpec { name: "--token", arity: 1, validate: None },
+    ArgSpec { name: "--token-all", arity: 0, validate: None },
+    ArgSpec { name: "--fault-plan", arity: 1, validate: Some(v_fault_plan) },
 ];
 
 struct Args {
@@ -324,6 +349,14 @@ fn main() {
     let cmd = raw[0].as_str();
     let args = Args::parse(&raw[1..]);
 
+    // Arm fault injection (--fault-plan or $PIPEFWD_FAULT_PLAN) before
+    // any store/engine/daemon construction, so open-time healing and
+    // every IO seam run under the schedule. Absent plan = disarmed fast
+    // path, byte-identical behavior.
+    if let Err(e) = pipefwd::util::fault::install_from(args.value("--fault-plan")) {
+        fail(&format!("--fault-plan: {e}"));
+    }
+
     let scale = args
         .value("--scale")
         .map(|v| req("--scale", service::scale_from(v)))
@@ -385,6 +418,11 @@ fn main() {
         .value("--queue")
         .map(|v| req("--queue", service::posint_from(v)))
         .unwrap_or(64);
+    let token = args
+        .value("--token")
+        .map(String::from)
+        .or_else(|| std::env::var("PIPEFWD_TOKEN").ok().filter(|t| !t.is_empty()));
+    let token_all = args.flag("--token-all");
     let positional = &args.positional;
 
     if device_all && cmd != "run" {
@@ -709,20 +747,32 @@ fn main() {
                 .store()
                 .map(|s| s.root().display().to_string())
                 .unwrap_or_else(|| "none".to_string());
+            let auth_desc = match (&token, token_all) {
+                (Some(_), true) => "token (all peers)",
+                (Some(_), false) => "token (non-loopback)",
+                (None, _) => "none",
+            };
             let server = net::Server::spawn(
                 Arc::clone(&svc),
                 &addr,
-                net::ServerConfig { workers, queue_cap },
+                net::ServerConfig { workers, queue_cap, token: token.clone(), token_all },
             )
             .unwrap_or_else(|e| fail(&format!("serve: binding {addr}: {e}")));
             eprintln!(
                 "pipefwd serve: listening on {} (device {}, {jobs} engine jobs, \
-                 {workers} workers, queue {queue_cap}, store: {store_desc}, schema {})",
+                 {workers} workers, queue {queue_cap}, auth: {auth_desc}, \
+                 store: {store_desc}, schema {})",
                 server.addr(),
                 cfg.name,
                 coordinator::API_SCHEMA,
             );
+            // join() returns on graceful drain (POST /shutdown): every
+            // in-flight request has finished, so flush the counters and
+            // the store manifest before exiting
             server.join();
+            write_counters(svc.as_ref(), "serve");
+            finish_engine(svc.engine());
+            eprintln!("pipefwd serve: drained and stopped");
         }
         "client" => {
             let action = positional
@@ -731,19 +781,21 @@ fn main() {
                 .unwrap_or_else(|| {
                     fail("client <run|sweep|tune|stats|store-pull> (see `pipefwd` usage)")
                 });
+            // one persistent, retrying connection for the whole action:
+            // transient failures (503 backpressure, resets, truncated
+            // streams) back off and retry; permanent errors still fail
+            let mut cli = net::Client::new(&addr).with_token(token.clone());
             match action {
                 "run" => {
                     let exps = req("--experiment", service::experiments_from(&experiment));
-                    let items = net::request(
-                        &addr,
-                        &ServiceRequest::Run {
+                    let items = cli
+                        .request(&ServiceRequest::Run {
                             experiments: exps.clone(),
                             scale,
                             shard,
                             device: device_flag.clone(),
-                        },
-                    )
-                    .unwrap_or_else(|e| fail(&e));
+                        })
+                        .unwrap_or_else(|e| fail(&e));
                     // mirror the CLI shard rule: a slice writes a sink
                     // only to an explicit --out
                     if shard.is_none() || out_set {
@@ -761,16 +813,14 @@ fn main() {
                     }
                 }
                 "sweep" => {
-                    let items = net::request(
-                        &addr,
-                        &ServiceRequest::Sweep {
+                    let items = cli
+                        .request(&ServiceRequest::Sweep {
                             benches: benches.clone(),
                             depths: depths.clone(),
                             scale,
                             device: device_flag.clone(),
-                        },
-                    )
-                    .unwrap_or_else(|e| fail(&e));
+                        })
+                        .unwrap_or_else(|e| fail(&e));
                     let bench =
                         service::cells_to_bench(&items, scale, &[]).unwrap_or_else(|e| fail(&e));
                     match std::fs::write(&out_path, &bench) {
@@ -779,9 +829,8 @@ fn main() {
                     }
                 }
                 "tune" => {
-                    let items = net::request(
-                        &addr,
-                        &ServiceRequest::Tune {
+                    let items = cli
+                        .request(&ServiceRequest::Tune {
                             benches: benches.clone(),
                             policy,
                             budget,
@@ -789,9 +838,8 @@ fn main() {
                             scale,
                             reference: !no_ref,
                             device: device_flag.clone(),
-                        },
-                    )
-                    .unwrap_or_else(|e| fail(&e));
+                        })
+                        .unwrap_or_else(|e| fail(&e));
                     let report_doc = items
                         .first()
                         .and_then(|l| l.get("report"))
@@ -805,12 +853,12 @@ fn main() {
                     }
                 }
                 "stats" => {
-                    let doc = net::get_stats(&addr).unwrap_or_else(|e| fail(&e));
+                    let doc = cli.get_stats().unwrap_or_else(|e| fail(&e));
                     print!("{}", doc.to_pretty());
                 }
                 "store-pull" => {
-                    let items = net::request(&addr, &ServiceRequest::StorePull)
-                        .unwrap_or_else(|e| fail(&e));
+                    let items =
+                        cli.request(&ServiceRequest::StorePull).unwrap_or_else(|e| fail(&e));
                     let records = items
                         .iter()
                         .map(service::decode_record)
@@ -834,6 +882,13 @@ fn main() {
                 other => {
                     fail(&format!("unknown client action `{other}` (run|sweep|tune|stats|store-pull)"))
                 }
+            }
+            if cli.retries() > 0 {
+                eprintln!(
+                    "(recovered from transient failures: {} retr{})",
+                    cli.retries(),
+                    if cli.retries() == 1 { "y" } else { "ies" }
+                );
             }
         }
         "report" => {

@@ -168,10 +168,10 @@ fn load_measurements(path: &str) -> Result<Vec<Measurement>, String> {
 /// Two results sinks are compared configuration by configuration: gate
 /// failures are modelled-performance regressions above `threshold`
 /// percent plus configurations that vanished (silent loss of coverage).
-/// Two counters documents — any mix of `pipefwd-counters-v1` and `-v2`
-/// — diff field by field informationally (never a gate failure; fields
-/// absent from a v1 document render as `-`). Mixing the two kinds is an
-/// error: the comparison would be meaningless.
+/// Two counters documents — any mix of `pipefwd-counters-v1`, `-v2`,
+/// and `-v3` — diff field by field informationally (never a gate
+/// failure; fields absent from an older document render as `-`). Mixing
+/// the two kinds is an error: the comparison would be meaningless.
 pub fn sink_diff(
     old_path: &str,
     new_path: &str,
@@ -189,7 +189,7 @@ pub fn sink_diff(
     }
 }
 
-/// Field-by-field counters comparison (v1 and v2 interchangeably).
+/// Field-by-field counters comparison (v1, v2, and v3 interchangeably).
 fn counters_diff(
     old_path: &str,
     new_path: &str,
@@ -391,6 +391,21 @@ mod tests {
         assert_eq!(failures, 0);
         assert!(rendered.contains("clients_served"), "{rendered}");
         assert!(rendered.contains('-'), "v1-absent fields render as -");
+
+        // a v3 document (reliability counters) diffs against a v2 one
+        // the same way — still informational, never a gate
+        let v3 = tmp(
+            "counters-v3.json",
+            r#"{"schema": "pipefwd-counters-v3", "command": "run", "scale": "tiny",
+                "cache_hits": 4, "store_hits": 0, "simulations": 0, "trace_hits": 2,
+                "trace_runs": 0, "queue_depth_max": 3, "clients_served": 7,
+                "requests_deduped": 9, "connections_reused": 5, "retries": 2,
+                "journal_replays": 1, "store_degraded": 0, "wall_ms": 14}"#,
+        );
+        let (rendered, failures) = sink_diff(&v2, &v3, 5.0).unwrap();
+        assert_eq!(failures, 0);
+        assert!(rendered.contains("journal_replays"), "{rendered}");
+        assert!(rendered.contains("retries"), "{rendered}");
 
         // mixing a counters doc with a results sink is refused
         let s = tmp("diff-sink.json", &sink(&[("baseline", 1.0)]));

@@ -1,0 +1,316 @@
+//! Deterministic fault injection for the robustness harness.
+//!
+//! A [`FaultPlan`] is a seeded schedule of failures at *named injection
+//! sites* threaded through the codebase's IO/network seams (see
+//! [`SITES`]). The plan is configured once per process — from
+//! `--fault-plan SPEC`, the `PIPEFWD_FAULT_PLAN` environment variable,
+//! or programmatically in tests via [`install`] — and every decision it
+//! makes is a pure function of the plan seed and the per-site call
+//! index, driven by [`crate::util::rng::Rng`] (xorshift64*). Two runs of
+//! the same binary with the same plan observe the same Nth-call verdict
+//! at every site, regardless of wall clock.
+//!
+//! # Spec grammar
+//!
+//! ```text
+//! SPEC   := CLAUSE ( ';' CLAUSE )*
+//! CLAUSE := 'seed=' u64            -- plan seed (default 1)
+//!         | SITE '=' RATE LIMIT?   -- arm a site
+//! SITE   := one of `SITES` (e.g. store.write, net.read, engine.panic)
+//! RATE   := probability in [0,1] (e.g. 0.25), or 'always'
+//! LIMIT  := 'x' u64                -- fire at most this many times
+//! ```
+//!
+//! Example: `seed=42;store.write=0.25x4;net.read=0.1;engine.panic=1x1`
+//! — with seed 42, fail up to four store writes at 25 % each, reset 10 %
+//! of daemon reads, and panic exactly one engine worker.
+//!
+//! # Cost when disarmed
+//!
+//! [`fire`] is the only call on hot paths. With no plan installed it is
+//! a single relaxed atomic load and an immediate `false` — the branch is
+//! trivially predictable and the slow path is `#[cold]`, so release
+//! binaries pay effectively nothing. An *empty* plan (no spec anywhere)
+//! therefore leaves every byte of engine/store/daemon behavior
+//! identical to a build without this module.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::rng::Rng;
+
+/// Catalog of named injection sites. Each is documented at its hook:
+///
+/// | site           | seam                                                  |
+/// |----------------|-------------------------------------------------------|
+/// | `store.read`   | `util::json::read_file` — read returns garbage        |
+/// | `store.write`  | `util::json` atomic writes — torn temp file + ENOSPC  |
+/// | `net.accept`   | daemon accept loop — connection reset after accept    |
+/// | `net.read`     | daemon request read — drop mid-request                |
+/// | `net.write`    | daemon response write — truncate the NDJSON stream    |
+/// | `engine.panic` | engine measurement under claim — worker panics        |
+pub const SITES: &[&str] = &[
+    "store.read",
+    "store.write",
+    "net.accept",
+    "net.read",
+    "net.write",
+    "engine.panic",
+];
+
+/// One armed site: fire with probability `rate` on each call, at most
+/// `max` times total (`None` = unbounded).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Rule {
+    pub site: String,
+    pub rate: f64,
+    pub max: Option<u64>,
+}
+
+/// A parsed, seeded fault schedule. Inert until [`install`]ed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub rules: Vec<Rule>,
+}
+
+impl FaultPlan {
+    /// Parse the spec grammar (module docs). `Err` carries a message
+    /// naming the offending clause.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan { seed: 1, rules: vec![] };
+        for clause in spec.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+            let (key, val) = clause
+                .split_once('=')
+                .ok_or_else(|| format!("fault plan clause `{clause}` is not key=value"))?;
+            let (key, val) = (key.trim(), val.trim());
+            if key == "seed" {
+                plan.seed = val
+                    .parse::<u64>()
+                    .map_err(|_| format!("fault plan seed `{val}` is not a u64"))?;
+                continue;
+            }
+            if !SITES.contains(&key) {
+                return Err(format!(
+                    "unknown fault site `{key}` (known: {})",
+                    SITES.join(", ")
+                ));
+            }
+            let (rate_s, max) = match val.split_once('x') {
+                Some((r, m)) => {
+                    let m = m.trim();
+                    let m = m
+                        .parse::<u64>()
+                        .map_err(|_| format!("fault limit `{m}` for `{key}` is not a u64"))?;
+                    (r.trim(), Some(m))
+                }
+                None => (val, None),
+            };
+            let rate = if rate_s == "always" {
+                1.0
+            } else {
+                let r: f64 = rate_s
+                    .parse()
+                    .map_err(|_| format!("fault rate `{rate_s}` for `{key}` is not a number"))?;
+                if !(0.0..=1.0).contains(&r) {
+                    return Err(format!("fault rate {r} for `{key}` is outside [0, 1]"));
+                }
+                r
+            };
+            plan.rules.push(Rule { site: key.to_string(), rate, max });
+        }
+        Ok(plan)
+    }
+
+    fn is_armed(&self) -> bool {
+        self.rules.iter().any(|r| r.rate > 0.0 && r.max != Some(0))
+    }
+}
+
+/// Live per-site state: its own deterministic RNG stream (seeded from
+/// the plan seed and the site name, so arming one site never perturbs
+/// another's schedule) plus the fired count against `max`.
+struct SiteState {
+    rule: Rule,
+    rng: Rng,
+    fired: u64,
+}
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static FIRED_TOTAL: AtomicU64 = AtomicU64::new(0);
+static STATE: Mutex<Vec<SiteState>> = Mutex::new(Vec::new());
+
+fn site_seed(plan_seed: u64, site: &str) -> u64 {
+    // FNV-1a over the site name folded into the plan seed: distinct,
+    // stable streams per site.
+    let mut h: u64 = 0xcbf29ce484222325 ^ plan_seed;
+    for b in site.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Arm a plan process-wide, replacing any previous one and resetting
+/// all counters. Installing a plan with no effective rules disarms the
+/// fast path entirely (equivalent to [`clear`]).
+pub fn install(plan: FaultPlan) {
+    let mut state = STATE.lock().unwrap();
+    state.clear();
+    for rule in &plan.rules {
+        state.push(SiteState {
+            rule: rule.clone(),
+            rng: Rng::new(site_seed(plan.seed, &rule.site)),
+            fired: 0,
+        });
+    }
+    FIRED_TOTAL.store(0, Ordering::Relaxed);
+    ACTIVE.store(plan.is_armed(), Ordering::SeqCst);
+}
+
+/// Disarm fault injection (the default state).
+pub fn clear() {
+    let mut state = STATE.lock().unwrap();
+    state.clear();
+    ACTIVE.store(false, Ordering::SeqCst);
+}
+
+/// Install from an explicit spec (`--fault-plan`) or, failing that, the
+/// `PIPEFWD_FAULT_PLAN` environment variable. No-op when neither is set.
+pub fn install_from(spec: Option<&str>) -> Result<(), String> {
+    let env = std::env::var("PIPEFWD_FAULT_PLAN").ok();
+    let spec = spec.map(str::to_string).or(env);
+    match spec {
+        Some(s) if !s.trim().is_empty() => {
+            install(FaultPlan::parse(&s)?);
+            Ok(())
+        }
+        _ => Ok(()),
+    }
+}
+
+/// Whether any site is armed. One relaxed load — safe on hot paths.
+#[inline]
+pub fn active() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Total faults fired since the plan was installed (all sites).
+pub fn fired_total() -> u64 {
+    FIRED_TOTAL.load(Ordering::Relaxed)
+}
+
+/// Deterministic verdict for one call at `site`. The Nth call at a
+/// given site always gets the same verdict for the same plan; which
+/// *operation* is the Nth call depends on thread interleaving, which is
+/// why recovery — not the schedule — must make outcomes reproducible.
+#[inline]
+pub fn fire(site: &str) -> bool {
+    if !active() {
+        return false;
+    }
+    fire_slow(site)
+}
+
+#[cold]
+fn fire_slow(site: &str) -> bool {
+    let mut state = STATE.lock().unwrap();
+    let Some(s) = state.iter_mut().find(|s| s.rule.site == site) else {
+        return false;
+    };
+    if let Some(max) = s.rule.max {
+        if s.fired >= max {
+            return false;
+        }
+    }
+    if !s.rng.chance(s.rule.rate) {
+        return false;
+    }
+    s.fired += 1;
+    FIRED_TOTAL.fetch_add(1, Ordering::Relaxed);
+    true
+}
+
+/// Panic with a recognizable payload if `site` fires — the
+/// `engine.panic` hook. Callers sit under `catch_unwind` (the daemon's
+/// worker pool) or a claim guard that releases on unwind, so an
+/// injected panic is recoverable by retrying the request.
+#[inline]
+pub fn maybe_panic(site: &str) {
+    if fire(site) {
+        panic!("fault: injected panic at `{site}`");
+    }
+}
+
+/// An injected IO error if `site` fires — the store/net error hook.
+#[inline]
+pub fn maybe_io_error(site: &str) -> std::io::Result<()> {
+    if fire(site) {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::Other,
+            format!("fault: injected io error at `{site}` (simulated ENOSPC)"),
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Fault state is process-global and the library's unit tests run
+    // concurrently: a test here that *arms* a plan would inject faults
+    // into unrelated store/net tests mid-flight. Only tests that leave
+    // the fast path disarmed belong in this module — everything that
+    // actually fires lives in `tests/integration_faults.rs`, a separate
+    // process that serializes its own cases.
+
+    #[test]
+    fn parse_full_grammar() {
+        let p = FaultPlan::parse("seed=42; store.write=0.25x4 ;net.read=0.1;engine.panic=always x1")
+            .unwrap_or_else(|e| panic!("{e}"));
+        assert_eq!(p.seed, 42);
+        assert_eq!(p.rules.len(), 3);
+        assert_eq!(p.rules[0], Rule { site: "store.write".into(), rate: 0.25, max: Some(4) });
+        assert_eq!(p.rules[1], Rule { site: "net.read".into(), rate: 0.1, max: None });
+        assert_eq!(p.rules[2], Rule { site: "engine.panic".into(), rate: 1.0, max: Some(1) });
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        for bad in [
+            "store.write",          // no value
+            "nope.site=0.5",        // unknown site
+            "store.write=1.5",      // rate out of range
+            "store.write=0.5xzz",   // bad limit
+            "seed=minus-one",       // bad seed
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn disarmed_is_inert_and_free() {
+        assert!(!active());
+        assert!(!fire("store.write"));
+        assert_eq!(maybe_io_error("store.write").map_err(|e| e.to_string()), Ok(()));
+        maybe_panic("engine.panic"); // must not panic
+    }
+
+    #[test]
+    fn empty_plan_never_arms() {
+        install(FaultPlan::parse("seed=7").unwrap());
+        assert!(!active(), "a plan with no rules must stay disarmed");
+        install(FaultPlan::parse("seed=7;store.write=0x5;net.read=0.5x0").unwrap());
+        assert!(!active(), "zero-rate / zero-limit rules must stay disarmed");
+        clear();
+    }
+
+    #[test]
+    fn install_from_rejects_bad_and_tolerates_absent_specs() {
+        install_from(None).unwrap(); // env unset in tests → stays clear
+        assert!(!active());
+        assert!(install_from(Some("bogus")).is_err());
+        assert!(!active());
+    }
+}

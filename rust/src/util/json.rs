@@ -186,6 +186,12 @@ fn write_escaped(out: &mut String, s: &str) {
 /// "not a valid document" (the persistent measurement store treats that as
 /// a cache miss).
 pub fn read_file(path: &std::path::Path) -> Result<Json, String> {
+    // `store.read` injection site: a read that returns garbage is
+    // indistinguishable from on-disk corruption, which every caller
+    // already treats as "no such document".
+    if super::fault::fire("store.read") {
+        return Err(format!("fault: injected read corruption at {}", path.display()));
+    }
     let text = std::fs::read_to_string(path)
         .map_err(|e| format!("reading {}: {e}", path.display()))?;
     parse(&text).map_err(|e| format!("parsing {}: {e}", path.display()))
@@ -232,6 +238,17 @@ fn write_bytes_atomic(path: &std::path::Path, bytes: String) -> std::io::Result<
         Some(d) => d.join(&tmp_name),
         None => std::path::PathBuf::from(&tmp_name),
     };
+    // `store.write` injection site: model a crash/ENOSPC mid-write —
+    // half the bytes reach the temp file, the rename never happens.
+    // Readers never see the torn file (wrong name); the dropping is
+    // swept by `Store::open`'s healing pass like real crash debris.
+    if super::fault::fire("store.write") {
+        let _ = std::fs::write(&tmp, &bytes.as_bytes()[..bytes.len() / 2]);
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::Other,
+            format!("fault: injected torn write at {} (simulated ENOSPC)", path.display()),
+        ));
+    }
     std::fs::write(&tmp, bytes)?;
     std::fs::rename(&tmp, path).inspect_err(|_| {
         let _ = std::fs::remove_file(&tmp);

@@ -3,6 +3,7 @@
 //! error handling (`anyhow` stand-in), JSON (`serde_json` stand-in).
 pub mod bench;
 pub mod error;
+pub mod fault;
 pub mod json;
 pub mod rng;
 pub mod testing;

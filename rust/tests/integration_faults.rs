@@ -1,0 +1,284 @@
+//! PR-9 robustness: the deterministic fault-injection harness and the
+//! recovery machinery it exists to prove. Fault state is process-global
+//! (`util::fault`), so every test here serializes on one mutex and
+//! disarms on exit — this binary is its own process, so arming a plan
+//! here never leaks into the library's unit tests or the other
+//! integration binaries.
+//!
+//! The centerpiece is the seeded soak: the full E4 grid driven through
+//! `pipefwd serve` and the retrying `net::Client` while a bounded fault
+//! schedule fires at every site — connections dropped at accept,
+//! requests dropped mid-read, responses truncated mid-stream, an engine
+//! worker panicking under claim, store reads garbled and store writes
+//! torn — plus a daemon kill-and-restart on the same address and store
+//! directory mid-grid. The acceptance bar: the reassembled sink is
+//! byte-identical to a fault-free serial run, with nonzero `retries`
+//! and `journal_replays` proving the failures actually happened and
+//! were recovered, and zero `journal/` intents left on disk.
+
+use pipefwd::coordinator::{grid_for, net, service, Engine, ExperimentId, Service, ServiceRequest, Store};
+use pipefwd::sim::device::DeviceConfig;
+use pipefwd::util::fault::{self, FaultPlan};
+use pipefwd::workloads::Scale;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// One plan at a time: `util::fault` is process-global state.
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+/// Holds the serialization lock and disarms the plan on drop, so a
+/// failing test cannot leave a live schedule behind for the next one
+/// (the lock recovers from poison for the same reason).
+struct Armed(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+impl Drop for Armed {
+    fn drop(&mut self) {
+        fault::clear();
+    }
+}
+
+fn arm(spec: &str) -> Armed {
+    let guard = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    fault::install(FaultPlan::parse(spec).unwrap_or_else(|e| panic!("{e}")));
+    Armed(guard)
+}
+
+/// The same plan replays the same verdict at every call index, and a
+/// limited rule never fires past its cap — the property every soak
+/// assertion leans on.
+#[test]
+fn same_plan_replays_the_same_schedule_and_respects_caps() {
+    let spec = "seed=11;store.write=0.5x6";
+    let _armed = arm(spec);
+    let first: Vec<bool> = (0..64).map(|_| fault::fire("store.write")).collect();
+    let fired = first.iter().filter(|b| **b).count();
+    assert!(fired > 0, "a 50% rule over 64 calls must fire at least once");
+    assert!(fired <= 6, "the x6 cap bounds total fires, got {fired}");
+    assert_eq!(fault::fired_total(), fired as u64);
+
+    // reinstall resets the stream: the verdict sequence is identical
+    fault::install(FaultPlan::parse(spec).unwrap());
+    let second: Vec<bool> = (0..64).map(|_| fault::fire("store.write")).collect();
+    assert_eq!(first, second, "same plan, same schedule");
+
+    // a different seed draws a different schedule
+    fault::install(FaultPlan::parse("seed=12;store.write=0.5x6").unwrap());
+    let third: Vec<bool> = (0..64).map(|_| fault::fire("store.write")).collect();
+    assert_ne!(first, third, "the seed must select the schedule");
+}
+
+/// Each site draws from its own stream: interleaving calls at another
+/// site must not perturb this site's verdict sequence. (Arming one
+/// fault never changes which calls another fault hits.)
+#[test]
+fn sites_draw_from_independent_streams() {
+    let spec = "seed=9;store.read=0.5;net.write=0.5";
+    let _armed = arm(spec);
+    let solo: Vec<bool> = (0..32).map(|_| fault::fire("store.read")).collect();
+
+    fault::install(FaultPlan::parse(spec).unwrap());
+    let interleaved: Vec<bool> = (0..32)
+        .map(|_| {
+            let v = fault::fire("store.read");
+            let _ = fault::fire("net.write"); // burns net.write's stream only
+            v
+        })
+        .collect();
+    assert_eq!(solo, interleaved, "store.read's stream must ignore net.write draws");
+}
+
+/// `install_from` with an explicit spec (the `--fault-plan` path) arms
+/// the process and honors the cap.
+#[test]
+fn install_from_explicit_spec_arms_and_caps() {
+    let guard = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    fault::install_from(Some("seed=3;engine.panic=always x2")).unwrap();
+    let _armed = Armed(guard);
+    assert!(fault::active());
+    assert!(fault::fire("engine.panic"));
+    assert!(fault::fire("engine.panic"));
+    assert!(!fault::fire("engine.panic"), "the x2 cap must exhaust");
+    assert!(!fault::fire("store.write"), "unarmed sites never fire");
+    assert_eq!(fault::fired_total(), 2);
+}
+
+/// An installed-but-empty plan is byte-for-byte free: same sink, same
+/// counters, zero fires — the "effectively free when disabled" half of
+/// the harness contract.
+#[test]
+fn empty_plan_leaves_sink_and_counters_identical() {
+    let guard = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    fault::clear();
+    let _armed = Armed(guard);
+
+    let exps = vec![ExperimentId::E2];
+    let cells = grid_for(&exps, Scale::Tiny);
+
+    let plain = Engine::new(DeviceConfig::pac_a10(), 1);
+    let _ = plain.run_cells(&cells);
+
+    fault::install(FaultPlan::parse("seed=99").unwrap()); // no rules
+    assert!(!fault::active(), "a rule-free plan must stay disarmed");
+    let under_plan = Engine::new(DeviceConfig::pac_a10(), 1);
+    let _ = under_plan.run_cells(&cells);
+
+    assert_eq!(
+        plain.bench_json(Scale::Tiny, &exps),
+        under_plan.bench_json(Scale::Tiny, &exps),
+        "an empty plan must not move a byte of the sink"
+    );
+    assert_eq!(plain.simulations(), under_plan.simulations());
+    assert_eq!(fault::fired_total(), 0);
+}
+
+fn soak_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pipefwd-faults-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Reconstruct the exact on-disk state a daemon killed mid-`put_trace`
+/// leaves behind: the `journal/` intent plus a torn trace document.
+/// (An in-process test cannot genuinely die between two writes, so the
+/// soak reproduces the crash artifact through the documented journal
+/// format — `docs/RELIABILITY.md` — and lets the restarted store heal
+/// it for real.)
+fn leave_interrupted_put_trace(store_dir: &std::path::Path) {
+    let key = "00000000000000aa";
+    let intent = format!(
+        "{{\"schema\": \"pipefwd-journal-v1\", \"op\": \"put_trace\", \
+         \"key\": \"{key}\", \"files\": [\"traces/{key}.json\"]}}"
+    );
+    std::fs::write(
+        store_dir.join("journal").join(format!("put_trace-{key}.json")),
+        intent,
+    )
+    .unwrap();
+    // a trace file cut mid-write: parses as nothing, must be discarded
+    std::fs::write(
+        store_dir.join("traces").join(format!("{key}.json")),
+        b"{\"schema\": \"pipefwd-store-v6\", \"kind\": \"trace\"",
+    )
+    .unwrap();
+}
+
+/// The PR-9 acceptance soak. Every injection site fires under a seeded,
+/// bounded schedule while the E4 grid flows through serve + Client,
+/// with a daemon kill-and-restart (same port, same store) mid-grid:
+///
+/// 1. fault-free serial reference run → the expected sink bytes;
+/// 2. daemon A, schedule armed: a sweep request survives a dropped
+///    accept, a dropped read, two truncated responses, and a worker
+///    panic — the client's retry policy eats all of them;
+/// 3. daemon A is killed; the store is left holding an interrupted
+///    `put_trace` (intent + torn trace), the crash the journal exists
+///    for;
+/// 4. daemon B binds the *same* address over the *same* store — open
+///    heals the journal — and serves the full E4 grid.
+///
+/// The sink must be byte-identical to the reference, with
+/// `retries > 0`, `journal_replays > 0`, and an empty journal at exit.
+#[test]
+fn seeded_soak_is_byte_identical_through_faults_and_restart() {
+    let guard = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    fault::clear();
+    let _armed = Armed(guard);
+
+    let base = soak_dir("soak");
+    let store_dir = base.join("store");
+
+    // 1. the fault-free truth, before any plan is armed
+    let exps = vec![ExperimentId::E4];
+    let cells = grid_for(&exps, Scale::Tiny);
+    let reference = Engine::new(DeviceConfig::pac_a10(), 1);
+    let _ = reference.run_cells(&cells);
+    let expect = reference.bench_json(Scale::Tiny, &exps);
+
+    // bounded `always` rules: exact fire counts, all burned early, so
+    // the run is deterministic and guaranteed to finish armed-then-clean
+    fault::install(
+        FaultPlan::parse(
+            "seed=2026;net.accept=always x1;net.read=always x1;net.write=always x2;\
+             engine.panic=always x1;store.read=always x2;store.write=always x2",
+        )
+        .unwrap(),
+    );
+
+    // fast, deterministic backoff so the soak spends its time computing,
+    // not sleeping; generous attempt budget for the 5-failure burst
+    let policy = net::RetryPolicy {
+        max_attempts: 10,
+        base_delay: Duration::from_millis(5),
+        max_delay: Duration::from_millis(40),
+        ..Default::default()
+    };
+    let spawn = |addr: &str| -> (Arc<Service>, net::Server) {
+        let engine =
+            Engine::new(DeviceConfig::pac_a10(), 2).with_store(Store::open(&store_dir).unwrap());
+        let svc = Arc::new(Service::daemon(engine));
+        let server = net::Server::spawn(
+            Arc::clone(&svc),
+            addr,
+            net::ServerConfig { workers: 2, queue_cap: 16, ..Default::default() },
+        )
+        .expect("binding the daemon");
+        (svc, server)
+    };
+
+    // 2. daemon A takes the sweep half of the grid under fire
+    let (_svc_a, server_a) = spawn("127.0.0.1:0");
+    let addr = server_a.addr().to_string();
+    let mut client = net::Client::new(&addr).with_retry(policy.clone());
+    let sweep = client
+        .request(&ServiceRequest::Sweep {
+            benches: vec!["fw".to_string(), "hotspot".to_string()],
+            depths: vec![1, 100],
+            scale: Scale::Tiny,
+            device: None,
+        })
+        .expect("the retry policy must ride out every injected fault");
+    assert!(sweep.len() > 1, "head line + cells");
+    let retries_a = client.retries();
+    assert!(
+        retries_a > 0,
+        "dropped accept/read and truncated responses must have forced retries"
+    );
+
+    // 3. kill daemon A mid-grid; the store keeps an interrupted write
+    server_a.shutdown();
+    leave_interrupted_put_trace(&store_dir);
+
+    // 4. daemon B: same address, same store — open heals the journal
+    let (svc_b, server_b) = spawn(&addr);
+    let mut client = net::Client::new(&addr).with_retry(policy);
+    let items = client
+        .request(&ServiceRequest::Run {
+            experiments: exps.clone(),
+            scale: Scale::Tiny,
+            shard: None,
+            device: None,
+        })
+        .expect("the restarted daemon must serve the full grid");
+    let sink = service::cells_to_bench(&items, Scale::Tiny, &exps).unwrap();
+    assert_eq!(
+        sink, expect,
+        "the faulted, killed-and-restarted grid must be byte-identical to the fault-free run"
+    );
+
+    let store = svc_b.engine().store().expect("daemon B is store-backed");
+    assert!(
+        store.journal_replays() > 0,
+        "open must have healed the interrupted put_trace"
+    );
+    assert_eq!(store.journal_len(), 0, "no intent may leak past a clean run");
+    assert!(!store.is_degraded(), "injected write faults must never degrade the store");
+    assert!(
+        retries_a + client.retries() > 0,
+        "the soak is meaningless if nothing was retried"
+    );
+    assert!(fault::fired_total() > 0, "the plan must actually have fired");
+
+    server_b.shutdown();
+    let _ = std::fs::remove_dir_all(&base);
+}

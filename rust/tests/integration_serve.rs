@@ -24,7 +24,7 @@ fn spawn_daemon(engine: Engine, workers: usize) -> (Arc<Service>, net::Server) {
     let server = net::Server::spawn(
         Arc::clone(&svc),
         "127.0.0.1:0",
-        net::ServerConfig { workers, queue_cap: 16 },
+        net::ServerConfig { workers, queue_cap: 16, ..Default::default() },
     )
     .expect("binding a loopback port");
     (svc, server)
@@ -107,7 +107,7 @@ fn three_concurrent_clients_cost_one_cold_grid() {
     let counters = stats.get("counters").expect("stats counters");
     assert_eq!(
         counters.get("schema").and_then(|s| s.as_str()),
-        Some("pipefwd-counters-v2")
+        Some("pipefwd-counters-v3")
     );
     assert_eq!(
         counters.get("simulations").and_then(|v| v.as_f64()),
