@@ -544,6 +544,12 @@ pub struct EngineCounters {
     /// the store degraded to read-only and the engine kept computing
     /// (counters v3; 0 with no store attached).
     pub store_degraded: u64,
+    /// Records removed by `--max-bytes` budget eviction (0 with no
+    /// store attached or no budget armed).
+    pub store_evictions: u64,
+    /// Writes skipped by the over-tight-budget write-through-skip mode
+    /// (0 with no store attached or no budget armed).
+    pub store_budget_skips: u64,
 }
 
 enum Slot<V> {
@@ -595,6 +601,22 @@ impl<V: Clone> ClaimCache<V> {
         let mut slots = self.slots.lock().unwrap();
         slots.insert(key, Slot::Done(value));
         self.ready.notify_all();
+    }
+
+    /// Fulfil `key` only if a claim is currently in flight — an
+    /// *external* result (a `store_push` landing the record a worker is
+    /// computing) may unblock waiters early, but must never overwrite a
+    /// completed slot or fabricate one nobody asked for. Returns whether
+    /// it fulfilled. The claiming worker's own later fulfil just
+    /// rewrites the identical (content-addressed) value.
+    fn fulfil_if_claimed(&self, key: u64, value: V) -> bool {
+        let mut slots = self.slots.lock().unwrap();
+        if matches!(slots.get(&key), Some(Slot::InFlight)) {
+            slots.insert(key, Slot::Done(value));
+            self.ready.notify_all();
+            return true;
+        }
+        false
     }
 
     /// Release an in-flight claim without a result (the computation
@@ -824,7 +846,21 @@ impl Engine {
             trace_runs: self.trace_runs(),
             journal_replays: self.store.as_ref().map(|s| s.journal_replays()).unwrap_or(0),
             store_degraded: self.store.as_ref().map(|s| s.degraded_count()).unwrap_or(0),
+            store_evictions: self.store.as_ref().map(|s| s.evictions()).unwrap_or(0),
+            store_budget_skips: self.store.as_ref().map(|s| s.budget_skips()).unwrap_or(0),
         }
+    }
+
+    /// Fulfil an outstanding in-flight measurement claim with an
+    /// externally supplied result — the daemon's `store_push` handler
+    /// calls this after validating a pushed entry, so a worker (or
+    /// waiting client) computing the same key is answered by the push
+    /// instead of finishing the simulation alone. Never overwrites a
+    /// completed slot and never inserts a slot nobody claimed (keys are
+    /// content-addressed, so a racing worker's own fulfil writes the
+    /// identical value). Returns whether a claim was fulfilled.
+    pub fn fulfil_external(&self, key: u64, result: &CellResult) -> bool {
+        self.cache.fulfil_if_claimed(key, result.clone())
     }
 
     /// Run one (workload, variant, scale) through the memo table and the
@@ -867,6 +903,11 @@ impl Engine {
             return r;
         }
         let guard = self.cache.claim_guard(key);
+        // Pin the key against budget eviction for the whole claim span
+        // (read + compute + persist): eviction must never delete the
+        // record a worker is serving or has just written but not yet
+        // fulfilled. Released on drop, including the panic unwind.
+        let _pin = self.store.as_ref().map(|s| s.pin_guard(key));
         if let Some(store) = &self.store {
             if let Some(r) = store.get(key) {
                 self.store_hits.fetch_add(1, Ordering::Relaxed);
@@ -1002,6 +1043,9 @@ impl Engine {
         guard: Option<ClaimGuard<'_, Arc<TraceResult>>>,
     ) -> CellResult {
         self.trace_runs.fetch_add(1, Ordering::Relaxed);
+        // pin the trace key like measure_opts pins the entry key: the
+        // freshly persisted trace must survive until the claim fulfils
+        let _pin = self.store.as_ref().map(|s| s.pin_guard(tkey));
         let outcome = run_built_workload_recorded(w, app, scale, &self.cfg, use_des);
         let (tres, result) = match outcome {
             Ok((h, trace)) => {

@@ -54,6 +54,17 @@
 //! `GET /readyz` probes, drains gracefully on `POST /shutdown`, and
 //! guards non-loopback peers with a constant-time shared-secret token
 //! (counters schema v3: `retries`, `journal_replays`, `store_degraded`).
+//! PR 10 is the resource-governance layer: the store takes a byte
+//! budget (`--max-bytes`) enforced by access-stamped, coldest-first,
+//! journal-intent eviction batches (pinned claims and pool liveness
+//! respected; over-tight budgets degrade to write-through-skip), the
+//! daemon sheds work it cannot serve usefully (`deadline_ms`
+//! shed-before-work, a per-client fair-share cap, store pressure on
+//! `/readyz`), and `store_push` became a verified write-back path —
+//! pushed records are re-hashed and re-validated server-side, admitted
+//! through the budget, and can fulfil a worker's in-flight claim. The
+//! governance counters (`store_evictions`, `store_budget_skips`,
+//! `deadline_sheds`) ride the v3 schema additively.
 
 pub mod engine;
 pub mod experiments;
@@ -70,7 +81,7 @@ pub use engine::{
 };
 pub use gc::{reachable_keys, run_gc, Reachable};
 pub use service::{Mode, Service, ServiceRequest, ServiceResponse, API_SCHEMA};
-pub use store::{ExportRecord, GcReport, Store, StoreStats, Tier};
+pub use store::{ExportRecord, GcReport, ImportReport, Store, StoreStats, Tier};
 pub use experiments::{
     best_ff, depth_sweep, figure4, headline, hotspot_m2c2_bw, intext, measure, micro_family,
     pc_sweep, table1, table2, table2_rows, table3, vector_study, Measurement,

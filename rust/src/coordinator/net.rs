@@ -24,6 +24,16 @@
 //! in a `done` terminator (see [`super::service`]). `GET /stats`
 //! returns the live counters + store footprint as one pretty document.
 //!
+//! Admission control (PR-10): the queue stamps every accepted
+//! connection, and a request that declares a `deadline_ms` on its
+//! document is shed with `503` + `Retry-After` *before* any engine work
+//! when its queue wait already exceeds the deadline — the client's
+//! retry budget is spent on attempts that can still succeed, not on
+//! answers it has stopped waiting for. A per-client fair-share cap
+//! (keyed by presented token, else non-loopback peer IP) bounds how
+//! many workers one client can hold at once; `GET /readyz` reports
+//! queue and store-budget pressure so orchestrators can steer load.
+//!
 //! Connections are **kept alive** (HTTP/1.1 default): a worker serves
 //! requests off one connection until the client sends
 //! `Connection: close`, the peer disconnects, framing breaks (the only
@@ -39,7 +49,7 @@ use super::service::{self, Service, ServiceRequest};
 use crate::util::fault;
 use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -85,11 +95,23 @@ pub struct ServerConfig {
     /// local operator already owns the process; tests flip it on to
     /// exercise the 401 path without a second network interface.
     pub token_all: bool,
+    /// Fair-share cap: the most requests one client may have in flight
+    /// at once, keyed by presented token (else non-loopback peer IP);
+    /// an anonymous loopback peer is exempt. `0` = auto:
+    /// `max(1, workers - 1)`, so a single client can never monopolise
+    /// the whole pool while others queue.
+    pub per_client_cap: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> ServerConfig {
-        ServerConfig { workers: 4, queue_cap: 64, token: None, token_all: false }
+        ServerConfig {
+            workers: 4,
+            queue_cap: 64,
+            token: None,
+            token_all: false,
+            per_client_cap: 0,
+        }
     }
 }
 
@@ -100,7 +122,9 @@ struct Queue {
 }
 
 struct QueueState {
-    items: VecDeque<TcpStream>,
+    /// Each connection carries its enqueue instant, so a worker can
+    /// tell a deadline-carrying request how long it already waited.
+    items: VecDeque<(TcpStream, Instant)>,
     open: bool,
 }
 
@@ -117,7 +141,7 @@ impl Queue {
         if !st.open || st.items.len() >= cap {
             return Err(stream);
         }
-        st.items.push_back(stream);
+        st.items.push_back((stream, Instant::now()));
         let depth = st.items.len();
         self.ready.notify_one();
         Ok(depth)
@@ -131,7 +155,7 @@ impl Queue {
 
     /// Blocking pop; `None` once closed *and* drained, so in-flight
     /// work finishes before workers exit.
-    fn pop(&self) -> Option<TcpStream> {
+    fn pop(&self) -> Option<(TcpStream, Instant)> {
         let mut st = self.inner.lock().unwrap();
         loop {
             if let Some(s) = st.items.pop_front() {
@@ -159,6 +183,8 @@ struct ServerCtx {
     cfg: ServerConfig,
     stop: Arc<AtomicBool>,
     addr: SocketAddr,
+    /// In-flight request count per client key — the fair-share ledger.
+    active: Mutex<HashMap<String, usize>>,
 }
 
 impl ServerCtx {
@@ -197,6 +223,7 @@ impl Server {
             cfg,
             stop: Arc::new(AtomicBool::new(false)),
             addr,
+            active: Mutex::new(HashMap::new()),
         });
         let mut handles = vec![];
         for _ in 0..ctx.cfg.workers.max(1) {
@@ -273,25 +300,28 @@ fn accept_loop(listener: &TcpListener, ctx: &ServerCtx) {
 }
 
 fn worker_loop(ctx: &ServerCtx) {
-    while let Some(stream) = ctx.queue.pop() {
+    while let Some((stream, queued_at)) = ctx.queue.pop() {
         ctx.service.note_client_served();
         // one malformed or panicking request must never take the worker
         // (and with it the daemon's capacity) down
-        let _ = catch_unwind(AssertUnwindSafe(|| handle_connection(stream, ctx)));
+        let _ = catch_unwind(AssertUnwindSafe(|| handle_connection(stream, queued_at, ctx)));
     }
 }
 
-fn handle_connection(stream: TcpStream, ctx: &ServerCtx) {
+fn handle_connection(stream: TcpStream, queued_at: Instant, ctx: &ServerCtx) {
     let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
     let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
     let Ok(read_half) = stream.try_clone() else { return };
     let mut out = stream;
     let mut reader = BufReader::new(read_half);
     // keep-alive loop: serve until the client closes or asks to, the
-    // framing breaks, or the per-connection request cap is reached
+    // framing breaks, or the per-connection request cap is reached.
+    // Only a connection's first request spent time in the accept queue;
+    // later requests on the kept socket carry no queue wait.
     for served in 0..MAX_REQUESTS_PER_CONN {
         let last = served + 1 == MAX_REQUESTS_PER_CONN;
-        if !handle_one_request(&mut reader, &mut out, ctx, served > 0, last) {
+        let waited = (served == 0).then_some(queued_at);
+        if !handle_one_request(&mut reader, &mut out, ctx, served > 0, last, waited) {
             return;
         }
     }
@@ -307,6 +337,7 @@ fn handle_one_request(
     ctx: &ServerCtx,
     reused: bool,
     last: bool,
+    queued_at: Option<Instant>,
 ) -> bool {
     let service = &*ctx.service;
     // the head cap applies per request; the Take wrapper borrows the
@@ -374,16 +405,23 @@ fn handle_one_request(
         }
         ("GET", "/readyz") => {
             // readiness: accepting work (not draining), queue headroom,
-            // and the store still writable
+            // and the store still writable — plus the budget and shed
+            // pressure gauges an orchestrator steers load by
             let keep = keep && content_length.unwrap_or(0) == 0;
             let draining = ctx.stop.load(Ordering::SeqCst);
             let depth = ctx.queue.depth();
             let cap = ctx.cfg.queue_cap.max(1);
             let degraded = service.store_degraded();
             let ready = !draining && depth < cap && !degraded;
+            let (store_bytes, store_max) = service.store_pressure();
             let body = format!(
                 "{{\"ready\": {ready}, \"draining\": {draining}, \"queue_depth\": {depth}, \
-                 \"queue_cap\": {cap}, \"store_degraded\": {degraded}}}\n"
+                 \"queue_cap\": {cap}, \"store_degraded\": {degraded}, \
+                 \"store_bytes\": {store_bytes}, \"store_max_bytes\": {}, \
+                 \"deadline_sheds\": {}, \"fair_sheds\": {}}}\n",
+                store_max.map(|m| m.to_string()).unwrap_or_else(|| "null".into()),
+                service.deadline_sheds(),
+                service.fair_sheds(),
             );
             let _ = if ready {
                 write_http_raw(out, 200, "OK", &body, keep)
@@ -463,6 +501,45 @@ fn handle_one_request(
                     return keep;
                 }
             };
+            // admission, step 1 — deadline shed: a request that rode on
+            // its document an optional `deadline_ms` (absent = today's
+            // behavior, old clients interoperate) and already waited in
+            // the accept queue past it is answered 503 *before* a
+            // worker burns compute on an answer the client gave up on
+            if let (Some(deadline), Some(at)) =
+                (doc.get("deadline_ms").and_then(|v| v.as_u64()), queued_at)
+            {
+                let waited = at.elapsed().as_millis() as u64;
+                if waited > deadline {
+                    service.note_deadline_shed();
+                    respond_busy(
+                        out,
+                        &format!(
+                            "busy: queued {waited} ms, past the {deadline} ms deadline — \
+                             retry later"
+                        ),
+                        keep,
+                    );
+                    return keep;
+                }
+            }
+            // admission, step 2 — fair share: one client may not hold
+            // more than its share of the worker pool at once
+            let _share = match try_acquire_share(ctx, client_share_key(out, auth.as_deref())) {
+                Ok(guard) => guard,
+                Err(cap) => {
+                    service.note_fair_shed();
+                    respond_busy(
+                        out,
+                        &format!(
+                            "busy: client already holds {cap} in-flight request(s) — \
+                             retry later"
+                        ),
+                        keep,
+                    );
+                    return keep;
+                }
+            };
             let req = match service::decode_request(&doc) {
                 Ok(r) => r,
                 Err(e) => {
@@ -529,6 +606,81 @@ fn constant_time_eq(a: &[u8], b: &[u8]) -> bool {
         diff |= usize::from(x ^ y);
     }
     diff == 0
+}
+
+/// The identity a request's fair share is charged to: the presented
+/// bearer token when there is one (shared fleets authenticate), else
+/// the non-loopback peer IP. An anonymous loopback peer gets no key —
+/// the local operator already owns the process, and local shard
+/// pipelines must not shed themselves.
+fn client_share_key(out: &TcpStream, auth: Option<&str>) -> Option<String> {
+    if let Some(v) = auth {
+        if let Some((scheme, rest)) = v.split_once(' ') {
+            if scheme.eq_ignore_ascii_case("bearer") {
+                return Some(format!("token:{}", rest.trim()));
+            }
+        }
+    }
+    match out.peer_addr() {
+        Ok(a) if !a.ip().is_loopback() => Some(format!("ip:{}", a.ip())),
+        _ => None,
+    }
+}
+
+/// A held fair-share slot. Dropping it releases the client's in-flight
+/// count — RAII, so a handler that panics under `engine.panic` can
+/// never leak its slot and starve the client out permanently.
+struct ShareGuard<'a> {
+    active: &'a Mutex<HashMap<String, usize>>,
+    key: String,
+}
+
+impl Drop for ShareGuard<'_> {
+    fn drop(&mut self) {
+        let mut map = self.active.lock().unwrap();
+        if let Some(n) = map.get_mut(&self.key) {
+            *n -= 1;
+            if *n == 0 {
+                map.remove(&self.key);
+            }
+        }
+    }
+}
+
+/// Charge one in-flight request to `key`'s share, or report the cap it
+/// would exceed. `Ok(None)` means the client is exempt (no key).
+fn try_acquire_share<'a>(
+    ctx: &'a ServerCtx,
+    key: Option<String>,
+) -> Result<Option<ShareGuard<'a>>, usize> {
+    let Some(key) = key else { return Ok(None) };
+    let cap = match ctx.cfg.per_client_cap {
+        0 => ctx.cfg.workers.max(2) - 1, // auto: max(1, workers - 1)
+        n => n,
+    };
+    let mut map = ctx.active.lock().unwrap();
+    let n = map.entry(key.clone()).or_insert(0);
+    if *n >= cap {
+        return Err(cap);
+    }
+    *n += 1;
+    drop(map);
+    Ok(Some(ShareGuard { active: &ctx.active, key }))
+}
+
+/// The admission-control `503`: same shape as the accept loop's
+/// backpressure answer, so the client retry policy treats every shed
+/// identically (transient, honor `Retry-After`).
+fn respond_busy(out: &mut TcpStream, msg: &str, keep: bool) {
+    let line = service::request_error_line(msg);
+    let _ = write_http_ex(
+        out,
+        503,
+        "Service Unavailable",
+        &format!("{line}\n"),
+        keep,
+        &[("Retry-After", &RETRY_AFTER_SECS.to_string())],
+    );
 }
 
 fn respond_error(out: &mut TcpStream, status: u16, reason: &str, msg: &str, keep: bool) {
@@ -852,6 +1004,7 @@ pub struct Client {
     rng: Rng,
     retries: u64,
     token: Option<String>,
+    deadline_ms: Option<u64>,
 }
 
 impl Client {
@@ -859,7 +1012,15 @@ impl Client {
     pub fn new(addr: &str) -> Client {
         let policy = RetryPolicy::default();
         let rng = Rng::new(policy.jitter_seed);
-        Client { addr: addr.to_string(), conn: None, policy, rng, retries: 0, token: None }
+        Client {
+            addr: addr.to_string(),
+            conn: None,
+            policy,
+            rng,
+            retries: 0,
+            token: None,
+            deadline_ms: None,
+        }
     }
 
     /// Replace the retry policy (builder-style).
@@ -876,6 +1037,17 @@ impl Client {
         self
     }
 
+    /// Declare a freshness deadline, carried as `deadline_ms` on every
+    /// API request document (builder-style). The daemon sheds the
+    /// request with `503` before doing any work if it already sat in
+    /// the accept queue longer than this; `None` (the default) keeps
+    /// today's wire documents byte-identical, so old daemons
+    /// interoperate.
+    pub fn with_deadline(mut self, deadline_ms: Option<u64>) -> Client {
+        self.deadline_ms = deadline_ms;
+        self
+    }
+
     pub fn addr(&self) -> &str {
         &self.addr
     }
@@ -888,7 +1060,11 @@ impl Client {
 
     /// Send one API request over the persistent connection.
     pub fn request(&mut self, req: &ServiceRequest) -> Result<Vec<Json>, String> {
-        let body = service::encode_request(req).to_compact();
+        let mut doc = service::encode_request(req);
+        if let (Some(d), Json::Obj(pairs)) = (self.deadline_ms, &mut doc) {
+            pairs.push(("deadline_ms".to_string(), Json::Num(d as f64)));
+        }
+        let body = doc.to_compact();
         self.call("POST", "/api/v1", &body, decode_api_response)
     }
 
@@ -1217,6 +1393,85 @@ mod tests {
         assert!(client.get_stats().is_ok());
         assert!(client.retries() > 0, "the 503s should have been retried");
         unpin.join().unwrap();
+        server.shutdown();
+    }
+
+    /// A queued request carrying `deadline_ms` that waited past its
+    /// deadline is shed with a 503 before any engine work: the
+    /// simulation counter never moves, and the identical request
+    /// without a deadline still computes (old-client interop).
+    #[test]
+    fn expired_deadline_sheds_before_work() {
+        let (svc, server) =
+            test_server(ServerConfig { workers: 1, queue_cap: 4, ..Default::default() });
+        let addr = server.addr().to_string();
+
+        // pin the single worker with a connection that never sends, so
+        // the next connection sits in the accept queue
+        let worker_pin = TcpStream::connect(&addr).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+
+        // queue a measure request whose deadline is shorter than the pin
+        let req = ServiceRequest::Measure {
+            workload: "fw".into(),
+            variant: crate::transform::Variant::Baseline,
+            scale: crate::workloads::Scale::Tiny,
+            device: None,
+        };
+        let mut doc = service::encode_request(&req);
+        if let Json::Obj(pairs) = &mut doc {
+            pairs.push(("deadline_ms".to_string(), Json::Num(50.0)));
+        }
+        let body = doc.to_compact();
+        let mut s = TcpStream::connect(&addr).unwrap();
+        send_head(&mut s, &addr, "POST", "/api/v1", &body, true, None).unwrap();
+        let mut reader = BufReader::new(s);
+
+        // hold the worker well past the deadline, then free it
+        std::thread::sleep(Duration::from_millis(200));
+        drop(worker_pin);
+
+        let raw = read_response(&mut reader, &addr).unwrap();
+        assert_eq!(raw.status, 503);
+        assert_eq!(raw.retry_after, Some(RETRY_AFTER_SECS));
+        assert!(raw.body.contains("deadline"), "unexpected body: {}", raw.body);
+        assert_eq!(svc.engine().simulations(), 0, "shed must happen before any work");
+        assert_eq!(svc.deadline_sheds(), 1);
+        drop(reader);
+
+        // the same request without a deadline computes normally
+        let items = request(&addr, &req).unwrap();
+        assert_eq!(items.len(), 2); // head + 1 cell
+        assert!(svc.engine().simulations() > 0);
+        server.shutdown();
+    }
+
+    /// The fair-share ledger: a client at its cap is rejected until a
+    /// slot releases; other clients and anonymous loopback peers are
+    /// unaffected; dropping the guard frees the slot.
+    #[test]
+    fn fair_share_counts_cap_and_release() {
+        let (_svc, server) = test_server(ServerConfig {
+            workers: 2,
+            queue_cap: 4,
+            per_client_cap: 1,
+            ..Default::default()
+        });
+        let ctx = &server.ctx;
+        let g1 = try_acquire_share(ctx, Some("token:a".into())).unwrap();
+        assert!(g1.is_some());
+        // same client, cap 1: rejected while g1 is held
+        assert_eq!(try_acquire_share(ctx, Some("token:a".into())).err(), Some(1));
+        // a different client has its own share
+        let g2 = try_acquire_share(ctx, Some("token:b".into())).unwrap();
+        assert!(g2.is_some());
+        // anonymous loopback is exempt: no key, no accounting
+        assert!(try_acquire_share(ctx, None).unwrap().is_none());
+        drop(g1);
+        // released: the slot is free again
+        let g3 = try_acquire_share(ctx, Some("token:a".into())).unwrap();
+        assert!(g3.is_some());
+        drop((g2, g3));
         server.shutdown();
     }
 

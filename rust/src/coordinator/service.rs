@@ -55,7 +55,10 @@ pub const COUNTERS_SCHEMA_V1: &str = "pipefwd-counters-v1";
 /// Counter fields a counters document may carry, in canonical order.
 /// v1 documents stop at `trace_runs` + `wall_ms`, v2 at
 /// `connections_reused`; missing fields render as absent in diffs
-/// rather than failing them.
+/// rather than failing them. The resource-governance counters
+/// (`store_evictions` / `store_budget_skips` / `deadline_sheds`)
+/// joined v3 without a bump, by the same additive-field precedent as
+/// `connections_reused`.
 pub const COUNTER_FIELDS: &[&str] = &[
     "cache_hits",
     "store_hits",
@@ -69,6 +72,9 @@ pub const COUNTER_FIELDS: &[&str] = &[
     "retries",
     "journal_replays",
     "store_degraded",
+    "store_evictions",
+    "store_budget_skips",
+    "deadline_sheds",
     "wall_ms",
 ];
 
@@ -136,7 +142,10 @@ pub enum ServiceResponse {
     StoreStats { stats: StoreStats },
     Gc { report: GcReport },
     Records { records: Vec<ExportRecord> },
-    Imported { count: usize },
+    /// `store_push` outcome: records written, records rejected by
+    /// validation (each skipped without poisoning the batch), and
+    /// outstanding in-memory claims the pushed entries fulfilled.
+    Imported { count: usize, rejected: usize, fulfilled: usize },
     Stats { doc: Json },
 }
 
@@ -151,6 +160,8 @@ pub struct Service {
     queue_depth_max: AtomicU64,
     connections_reused: AtomicU64,
     net_retries: AtomicU64,
+    deadline_sheds: AtomicU64,
+    fair_sheds: AtomicU64,
 }
 
 impl Service {
@@ -163,6 +174,8 @@ impl Service {
             queue_depth_max: AtomicU64::new(0),
             connections_reused: AtomicU64::new(0),
             net_retries: AtomicU64::new(0),
+            deadline_sheds: AtomicU64::new(0),
+            fair_sheds: AtomicU64::new(0),
         }
     }
 
@@ -223,6 +236,36 @@ impl Service {
         self.net_retries.load(Ordering::Relaxed)
     }
 
+    /// Record a request shed because its queue wait already exceeded
+    /// the client's `deadline_ms` — answered 503 *before* any engine
+    /// work ran (admission control).
+    pub fn note_deadline_shed(&self) {
+        self.deadline_sheds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn deadline_sheds(&self) -> u64 {
+        self.deadline_sheds.load(Ordering::Relaxed)
+    }
+
+    /// Record a request shed by the per-client fair-share concurrency
+    /// cap (one tenant may not monopolize the worker pool).
+    pub fn note_fair_shed(&self) {
+        self.fair_sheds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn fair_sheds(&self) -> u64 {
+        self.fair_sheds.load(Ordering::Relaxed)
+    }
+
+    /// Store budget pressure for `GET /readyz`: (governed bytes, armed
+    /// budget). `(0, None)` with no store attached.
+    pub fn store_pressure(&self) -> (u64, Option<u64>) {
+        match self.engine.store() {
+            Some(s) => (s.governed_bytes(), s.max_bytes()),
+            None => (0, None),
+        }
+    }
+
     /// Whether the attached store has dropped to read-only degraded
     /// mode (cache dir unwritable) — the `/readyz` probe's store check.
     /// No store attached means nothing can degrade.
@@ -262,6 +305,9 @@ impl Service {
             ("retries", Json::Num(self.retries() as f64)),
             ("journal_replays", Json::Num(c.journal_replays as f64)),
             ("store_degraded", Json::Num(c.store_degraded as f64)),
+            ("store_evictions", Json::Num(c.store_evictions as f64)),
+            ("store_budget_skips", Json::Num(c.store_budget_skips as f64)),
+            ("deadline_sheds", Json::Num(self.deadline_sheds() as f64)),
             ("wall_ms", Json::Num(wall_ms)),
         ])
     }
@@ -444,13 +490,34 @@ impl Service {
             }
             ServiceRequest::StorePush { records } => {
                 let s = self.store_or_err("store push")?;
-                let count = s.import_records(records).map_err(|e| {
+                // import_records re-verifies everything the wire could
+                // corrupt — pool files re-hashed against their names,
+                // traces resolved against the unioned pool, entries
+                // decoded under the current schema — rejecting bad
+                // records without poisoning the batch, then admits the
+                // writes through the byte budget
+                let report = s.import_records(records).map_err(|e| {
                     MeasureError::parse(&format!("store push: {e}"))
                 })?;
                 if let Err(e) = s.write_manifest() {
                     eprintln!("warning: writing store manifest: {e}");
                 }
-                Ok(ServiceResponse::Imported { count })
+                // a pushed entry may be exactly the cell a worker is
+                // mid-simulating for another client: fulfil the open
+                // claim so its waiters answer from the push
+                let mut fulfilled = 0;
+                for r in records.iter().filter(|r| r.tier == super::store::Tier::Entries) {
+                    if let Some(result) = super::store::decode_entry(&r.doc, r.key) {
+                        if self.engine.fulfil_external(r.key, &result) {
+                            fulfilled += 1;
+                        }
+                    }
+                }
+                Ok(ServiceResponse::Imported {
+                    count: report.imported,
+                    rejected: report.rejected,
+                    fulfilled,
+                })
             }
             ServiceRequest::Stats => Ok(ServiceResponse::Stats { doc: self.stats_doc() }),
         }
@@ -924,8 +991,15 @@ pub fn response_lines(resp: &ServiceResponse) -> Vec<String> {
                 ));
             }
         }
-        ServiceResponse::Imported { count } => {
-            out.push(line("imported", vec![("count", Json::Num(*count as f64))]));
+        ServiceResponse::Imported { count, rejected, fulfilled } => {
+            out.push(line(
+                "imported",
+                vec![
+                    ("count", Json::Num(*count as f64)),
+                    ("rejected", Json::Num(*rejected as f64)),
+                    ("fulfilled", Json::Num(*fulfilled as f64)),
+                ],
+            ));
         }
         ServiceResponse::Stats { doc } => out.push(doc.to_compact()),
     }
@@ -1187,6 +1261,9 @@ mod tests {
             "retries",
             "journal_replays",
             "store_degraded",
+            "store_evictions",
+            "store_budget_skips",
+            "deadline_sheds",
         ] {
             assert_eq!(doc.get(k).unwrap().as_f64(), Some(0.0), "{k}");
         }

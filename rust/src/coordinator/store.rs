@@ -53,6 +53,22 @@
 //!   replays the grid) and every pooled profile no surviving trace
 //!   references, then rewrites the manifest. [`Store::stats`] reports
 //!   per-tier counts/bytes and the pool's dedup ratio.
+//! * **Byte budget / LRU tier** — [`Store::with_max_bytes`] arms a hard
+//!   byte budget (`--max-bytes` / `PIPEFWD_MAX_BYTES`) over the three
+//!   governed tiers (entries + traces + profiles; `journal/` intents and
+//!   `.tmp-` droppings are bookkeeping, not cache). Reads and writes
+//!   refresh a batched, crash-tolerant last-access stamp
+//!   (`STAMPS.json`; a lost stamp only *ages* a record, never corrupts
+//!   it), and every put/push that lands over budget plans a
+//!   coldest-first eviction batch: records under an open engine claim
+//!   ([`Store::pin_guard`]) are never evicted, pooled profiles survive
+//!   exactly as long as one surviving trace references them, and the
+//!   whole batch is a journal intent (`op: "evict"`) healed
+//!   idempotently at [`Store::open`] like an interrupted gc. A budget
+//!   too tight to hold even the newest record degrades to
+//!   write-through-skip (the result is still returned, just not
+//!   persisted) counted in `store_budget_skips`, instead of thrashing
+//!   the disk; evicted records count in `store_evictions`.
 
 use super::engine::{CellResult, TraceResult};
 use super::experiments::Measurement;
@@ -119,11 +135,25 @@ pub const DEFAULT_DIR: &str = ".pipefwd-cache";
 
 /// Schema tag of `journal/` intent records (see [`Store::open`]'s
 /// healing pass). An intent is written *before* a multi-file operation
-/// (`put_trace`, `gc`) and removed after it completes, so an intent on
-/// disk at open time marks an interrupted operation to roll forward or
-/// discard. Single-file writes need no intent — temp-file + rename is
-/// already atomic.
+/// (`put_trace`, `gc`, `evict`) and removed after it completes, so an
+/// intent on disk at open time marks an interrupted operation to roll
+/// forward or discard. Single-file writes need no intent — temp-file +
+/// rename is already atomic.
 pub const JOURNAL_SCHEMA: &str = "pipefwd-journal-v1";
+
+/// Last-access stamp file at the store root (beside `MANIFEST.json`).
+/// Purely advisory LRU metadata: a missing or torn stamp file only makes
+/// records look *older* (stampless records evict first), so it is loaded
+/// leniently and flushed in batches without a journal intent.
+pub const STAMPS_FILE: &str = "STAMPS.json";
+
+/// Schema tag of [`STAMPS_FILE`].
+pub const STAMPS_SCHEMA: &str = "pipefwd-stamps-v1";
+
+/// Dirty stamp updates buffered before a batched flush. Batching keeps
+/// hot read paths from rewriting a file per hit; anything buffered at
+/// crash time is lost, which only ages the touched records.
+const STAMP_FLUSH_EVERY: u64 = 16;
 
 /// FNV-1a 64-bit: tiny, dependency-free, and — unlike `DefaultHasher` —
 /// specified, so persisted keys stay valid across toolchains.
@@ -141,6 +171,39 @@ pub fn key_hex(key: u64) -> String {
     format!("{key:016x}")
 }
 
+/// Parse a byte-budget string: plain bytes, or binary `k`/`m`/`g`
+/// suffixes (case-insensitive). Zero is rejected — a zero budget can
+/// hold nothing and is always a mistyped flag, not an intent.
+pub fn parse_byte_budget(s: &str) -> Result<u64, String> {
+    let t = s.trim().to_ascii_lowercase();
+    let (digits, mult) = match t.as_bytes().last() {
+        Some(b'k') => (&t[..t.len() - 1], 1u64 << 10),
+        Some(b'm') => (&t[..t.len() - 1], 1u64 << 20),
+        Some(b'g') => (&t[..t.len() - 1], 1u64 << 30),
+        _ => (t.as_str(), 1),
+    };
+    digits
+        .trim()
+        .parse::<u64>()
+        .ok()
+        .filter(|n| *n > 0)
+        .and_then(|n| n.checked_mul(mult))
+        .ok_or_else(|| format!("invalid byte budget {s:?} (want e.g. 65536, 64k, 8m, 1g)"))
+}
+
+/// In-memory view of [`STAMPS_FILE`]: a logical access clock (monotonic
+/// per store handle, persisted so it survives reopens) and the last
+/// clock tick each entry/trace key was read or written at. Wall time is
+/// deliberately not used — logical ticks keep eviction order a pure
+/// function of the access sequence, so seeded runs evict identically.
+#[derive(Default)]
+struct Stamps {
+    clock: u64,
+    entries: HashMap<u64, u64>,
+    traces: HashMap<u64, u64>,
+    dirty: u64,
+}
+
 /// Durable measurement store rooted at one directory.
 pub struct Store {
     root: PathBuf,
@@ -150,9 +213,29 @@ pub struct Store {
     /// in `degraded_writes` — the engine keeps computing.
     degraded: AtomicBool,
     degraded_writes: AtomicU64,
-    /// Interrupted `put_trace`/`gc` operations rolled forward or
-    /// discarded by [`Store::open`]'s healing pass.
+    /// Interrupted `put_trace`/`gc`/`evict` operations rolled forward
+    /// or discarded by [`Store::open`]'s healing pass.
     journal_replays: AtomicU64,
+    /// Byte budget over the governed tiers (entries + traces +
+    /// profiles); `None` = unbounded, today's behavior.
+    max_bytes: Option<u64>,
+    /// Records removed by budget eviction (counters `store_evictions`).
+    evictions: AtomicU64,
+    /// Writes skipped because even a full eviction pass could not fit
+    /// the new record (counters `store_budget_skips`).
+    budget_skips: AtomicU64,
+    /// Set when the budget proved too tight for the newest record:
+    /// subsequent writes short-circuit to write-through-skip until
+    /// room for a record of the size that failed (`tight_floor`)
+    /// exists again (hysteresis — without it every put would write +
+    /// evict-self, thrashing the disk).
+    tight: AtomicBool,
+    /// Size of the record that could not fit when `tight` latched.
+    tight_floor: AtomicU64,
+    stamps: std::sync::Mutex<Stamps>,
+    /// Keys under an open engine claim, refcounted: eviction never
+    /// removes a pinned entry/trace (see [`Store::pin_guard`]).
+    pins: std::sync::Mutex<HashMap<u64, usize>>,
 }
 
 impl Store {
@@ -162,6 +245,13 @@ impl Store {
             degraded: AtomicBool::new(false),
             degraded_writes: AtomicU64::new(0),
             journal_replays: AtomicU64::new(0),
+            max_bytes: None,
+            evictions: AtomicU64::new(0),
+            budget_skips: AtomicU64::new(0),
+            tight: AtomicBool::new(false),
+            tight_floor: AtomicU64::new(0),
+            stamps: std::sync::Mutex::new(Stamps::default()),
+            pins: std::sync::Mutex::new(HashMap::new()),
         }
     }
 
@@ -178,6 +268,7 @@ impl Store {
         let store = Store::at(root);
         let replays = store.heal();
         store.journal_replays.store(replays, Ordering::Relaxed);
+        store.load_stamps();
         Ok(store)
     }
 
@@ -209,6 +300,49 @@ impl Store {
                 .map(PathBuf::from)
                 .unwrap_or_else(|_| PathBuf::from(DEFAULT_DIR)),
         }
+    }
+
+    /// The store byte budget configured for this process: `--max-bytes`
+    /// wins, then `PIPEFWD_MAX_BYTES`, then unbounded. Accepts plain
+    /// bytes or a `k`/`m`/`g` suffix (binary units); zero and garbage
+    /// are errors, not silent unboundedness.
+    pub fn resolve_max_bytes(flag: Option<&str>) -> Result<Option<u64>, String> {
+        let src = match flag {
+            Some(s) => Some(s.to_string()),
+            None => std::env::var("PIPEFWD_MAX_BYTES").ok(),
+        };
+        match src {
+            None => Ok(None),
+            Some(s) => parse_byte_budget(&s).map(Some),
+        }
+    }
+
+    /// Arm (or disarm, with `None`) the byte budget, then run one
+    /// enforcement pass so a store opened over budget starts within it.
+    /// Builder-style: call between [`Store::open`] and first use.
+    pub fn with_max_bytes(mut self, max: Option<u64>) -> Store {
+        self.max_bytes = max;
+        if max.is_some() {
+            if let Err(e) = self.enforce_budget(None) {
+                eprintln!("store: initial budget enforcement failed: {e} (healed at next open)");
+            }
+        }
+        self
+    }
+
+    /// The armed byte budget, if any.
+    pub fn max_bytes(&self) -> Option<u64> {
+        self.max_bytes
+    }
+
+    /// Records removed by budget eviction so far.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Writes skipped by the over-tight-budget degraded mode so far.
+    pub fn budget_skips(&self) -> u64 {
+        self.budget_skips.load(Ordering::Relaxed)
     }
 
     pub fn root(&self) -> &Path {
@@ -297,6 +431,319 @@ impl Store {
         false
     }
 
+    /// Count a write suppressed by the over-tight-budget mode. Returns
+    /// `true` when the budget has proved too small for even one fresh
+    /// record and room for a record of that size (`tight_floor`) still
+    /// does not exist — the hysteresis that turns per-put thrash into
+    /// one cheap probe per put. An external shrink — gc, manual
+    /// deletion — that frees enough room is noticed here and re-enables
+    /// writes.
+    fn skip_if_budget_tight(&self) -> bool {
+        let Some(max) = self.max_bytes else { return false };
+        if !self.tight.load(Ordering::Relaxed) {
+            return false;
+        }
+        let floor = self.tight_floor.load(Ordering::Relaxed);
+        if self.governed_bytes().saturating_add(floor) <= max {
+            self.tight.store(false, Ordering::Relaxed);
+            return false;
+        }
+        self.budget_skips.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Pin `key` (both tiers — entry and trace keys share the space but
+    /// never collide in practice) against budget eviction. Refcounted:
+    /// concurrent claims on the same key stack.
+    pub fn pin(&self, key: u64) {
+        *self.pins.lock().unwrap().entry(key).or_insert(0) += 1;
+    }
+
+    /// Release one pin on `key`.
+    pub fn unpin(&self, key: u64) {
+        let mut pins = self.pins.lock().unwrap();
+        if let Some(n) = pins.get_mut(&key) {
+            *n -= 1;
+            if *n == 0 {
+                pins.remove(&key);
+            }
+        }
+    }
+
+    /// RAII pin: the engine holds one over a key for the whole span of
+    /// an open claim (compute + persist), so eviction can never delete
+    /// the record a worker is about to write or has just written but
+    /// not yet fulfilled. Unpins on drop, including unwind — a worker
+    /// panicking under claim releases its pin like it abandons its
+    /// claim.
+    pub fn pin_guard(&self, key: u64) -> PinGuard<'_> {
+        self.pin(key);
+        PinGuard { store: self, key }
+    }
+
+    fn is_pinned(&self, key: u64) -> bool {
+        self.pins.lock().unwrap().contains_key(&key)
+    }
+
+    /// Record an access to an entry (`b'e'`) or trace (`b't'`) key.
+    /// No-op without a budget — an unbudgeted store stays byte-for-byte
+    /// identical on disk to every prior release. Flushes are batched
+    /// ([`STAMP_FLUSH_EVERY`]) and failures ignored: stamps are
+    /// advisory (see [`STAMPS_FILE`]).
+    fn touch(&self, tier: u8, key: u64) {
+        if self.max_bytes.is_none() || self.is_degraded() {
+            return;
+        }
+        let mut st = self.stamps.lock().unwrap();
+        st.clock += 1;
+        let now = st.clock;
+        match tier {
+            b'e' => st.entries.insert(key, now),
+            _ => st.traces.insert(key, now),
+        };
+        st.dirty += 1;
+        if st.dirty >= STAMP_FLUSH_EVERY {
+            self.flush_stamps_locked(&mut st);
+        }
+    }
+
+    /// Write the stamp file (best-effort, no intent — see
+    /// [`STAMPS_FILE`]). Caller holds the stamps lock.
+    fn flush_stamps_locked(&self, st: &mut Stamps) {
+        st.dirty = 0;
+        let map = |m: &HashMap<u64, u64>| {
+            let mut pairs: Vec<(u64, u64)> = m.iter().map(|(k, v)| (*k, *v)).collect();
+            pairs.sort_unstable();
+            Json::Obj(
+                pairs.into_iter().map(|(k, v)| (key_hex(k), Json::Num(v as f64))).collect(),
+            )
+        };
+        let doc = Json::obj(vec![
+            ("schema", Json::Str(STAMPS_SCHEMA.into())),
+            ("clock", Json::Num(st.clock as f64)),
+            ("entries", map(&st.entries)),
+            ("traces", map(&st.traces)),
+        ]);
+        let _ = json::write_file_atomic_compact(&self.root.join(STAMPS_FILE), &doc);
+    }
+
+    /// Load [`STAMPS_FILE`] leniently: a missing, torn, or
+    /// foreign-schema file reads as "no stamps" (everything equally
+    /// cold) — never an error.
+    fn load_stamps(&self) {
+        let Ok(doc) = json::read_file(&self.root.join(STAMPS_FILE)) else { return };
+        if doc.get("schema").and_then(Json::as_str) != Some(STAMPS_SCHEMA) {
+            return;
+        }
+        let read_map = |field: &str| -> HashMap<u64, u64> {
+            let mut out = HashMap::new();
+            if let Some(Json::Obj(pairs)) = doc.get(field) {
+                for (hex, v) in pairs {
+                    if let (Ok(k), Some(n)) = (u64::from_str_radix(hex, 16), v.as_u64()) {
+                        out.insert(k, n);
+                    }
+                }
+            }
+            out
+        };
+        let mut st = self.stamps.lock().unwrap();
+        st.clock = doc.get("clock").and_then(Json::as_u64).unwrap_or(0);
+        st.entries = read_map("entries");
+        st.traces = read_map("traces");
+    }
+
+    /// Bytes currently under budget governance: the entries, traces,
+    /// and profiles tiers. `journal/` intents, `.tmp-` droppings,
+    /// `MANIFEST.json`, and [`STAMPS_FILE`] are bookkeeping, not cache,
+    /// and are deliberately outside the governed total (and outside
+    /// eviction's reach). Fresh directory scan — the same source of
+    /// truth [`Store::stats`] uses.
+    pub fn governed_bytes(&self) -> u64 {
+        let mut total = 0u64;
+        for dir in ["entries", "traces", "profiles"] {
+            if let Ok(rd) = std::fs::read_dir(self.root.join(dir)) {
+                for e in rd.filter_map(|e| e.ok()) {
+                    if e.path().extension().is_some_and(|x| x == "json") {
+                        total += e.metadata().map(|m| m.len()).unwrap_or(0);
+                    }
+                }
+            }
+        }
+        total
+    }
+
+    /// Bring governed bytes back under the budget, evicting
+    /// coldest-first. `protect` names the record whose write triggered
+    /// this pass — it is evicted only as a last resort (see below).
+    ///
+    /// The plan walks entry + trace candidates ordered by (stamp, tier,
+    /// key) — stampless records first, then logical access order; the
+    /// trailing key makes the order total and deterministic. Pinned
+    /// keys (open engine claims) and the protected key are skipped.
+    /// Evicting a trace frees the pooled profiles only *surviving*
+    /// traces no longer reference, exactly like gc. The whole batch —
+    /// deletes + freed profiles — is one `evict` journal intent written
+    /// before the first delete, so a crash (or an injected
+    /// `store.evict` fault) anywhere in the sequence is healed
+    /// idempotently at the next open.
+    ///
+    /// If evicting every eligible candidate still cannot fit the
+    /// protected record, the budget is simply too small for the
+    /// workload's newest record: the protected record itself is
+    /// evicted, `store_budget_skips` counts it, and the `tight` latch
+    /// flips writes to write-through-skip until pressure halves — the
+    /// invariant `governed_bytes ≤ max_bytes` holds either way.
+    fn enforce_budget(&self, protect: Option<(u8, u64)>) -> io::Result<()> {
+        let Some(max) = self.max_bytes else { return Ok(()) };
+        // cheap size-only scan first: the common under-budget put must
+        // not pay the trace-document ref walk below
+        if self.governed_bytes() <= max {
+            return Ok(());
+        }
+        let fsize = |p: &Path| std::fs::metadata(p).map(|m| m.len()).unwrap_or(0);
+        // Snapshot the governed tiers: sizes, live pool refcounts.
+        let entry_keys = self.keys();
+        let trace_keys = self.trace_keys();
+        let mut trace_refs: HashMap<u64, Vec<u64>> = HashMap::new();
+        let mut ref_count: HashMap<u64, usize> = HashMap::new();
+        for &k in &trace_keys {
+            let refs: Vec<u64> = self
+                .trace_profile_refs(k)
+                .unwrap_or_default()
+                .into_iter()
+                .collect::<HashSet<u64>>() // distinct per trace
+                .into_iter()
+                .collect();
+            for &f in &refs {
+                *ref_count.entry(f).or_insert(0) += 1;
+            }
+            trace_refs.insert(k, refs);
+        }
+        let profile_size: HashMap<u64, u64> =
+            self.profile_keys().into_iter().map(|f| (f, fsize(&self.profile_path(f)))).collect();
+        let mut bytes = entry_keys.iter().map(|&k| fsize(&self.entry_path(k))).sum::<u64>()
+            + trace_keys.iter().map(|&k| fsize(&self.trace_path(k))).sum::<u64>()
+            + profile_size.values().sum::<u64>();
+        if bytes <= max {
+            return Ok(());
+        }
+        // Coldest-first candidate order. Missing stamp = 0 = coldest.
+        let (stamp_e, stamp_t) = {
+            let st = self.stamps.lock().unwrap();
+            (st.entries.clone(), st.traces.clone())
+        };
+        let mut cands: Vec<(u64, u8, u64)> = vec![]; // (stamp, tier, key)
+        for &k in &entry_keys {
+            if !self.is_pinned(k) && protect != Some((b'e', k)) {
+                cands.push((stamp_e.get(&k).copied().unwrap_or(0), b'e', k));
+            }
+        }
+        for &k in &trace_keys {
+            if !self.is_pinned(k) && protect != Some((b't', k)) {
+                cands.push((stamp_t.get(&k).copied().unwrap_or(0), b't', k));
+            }
+        }
+        cands.sort_unstable();
+        let mut doomed: Vec<PathBuf> = vec![];
+        let mut doomed_keys: Vec<(u8, u64)> = vec![];
+        // evict a trace → drop its refs → profiles at refcount 0 die too
+        let mut free_profiles = |refs: &[u64], doomed: &mut Vec<PathBuf>, bytes: &mut u64| {
+            for f in refs {
+                let n = ref_count.entry(*f).or_insert(0);
+                if *n > 0 {
+                    *n -= 1;
+                    if *n == 0 {
+                        *bytes = bytes.saturating_sub(profile_size.get(f).copied().unwrap_or(0));
+                        doomed.push(self.profile_path(*f));
+                    }
+                }
+            }
+        };
+        for (_, tier, key) in cands {
+            if bytes <= max {
+                break;
+            }
+            match tier {
+                b'e' => {
+                    bytes = bytes.saturating_sub(fsize(&self.entry_path(key)));
+                    doomed.push(self.entry_path(key));
+                }
+                _ => {
+                    bytes = bytes.saturating_sub(fsize(&self.trace_path(key)));
+                    doomed.push(self.trace_path(key));
+                    if let Some(refs) = trace_refs.get(&key) {
+                        free_profiles(refs, &mut doomed, &mut bytes);
+                    }
+                }
+            }
+            doomed_keys.push((tier, key));
+        }
+        let mut skipped_protect = false;
+        if bytes > max {
+            // Every eligible record is gone and we are still over: the
+            // newest record itself cannot fit. Take it too (unless it
+            // is only pinned bulk keeping us over, in which case there
+            // is nothing legal left to delete). Its size becomes the
+            // `tight` floor: writes stay skipped until that much room
+            // exists, so an over-tight budget costs one probe per put,
+            // not a write + self-evict churn.
+            if let Some((tier, key)) = protect {
+                skipped_protect = true;
+                let path = match tier {
+                    b'e' => self.entry_path(key),
+                    _ => self.trace_path(key),
+                };
+                self.tight_floor.store(fsize(&path), Ordering::Relaxed);
+                doomed.push(path);
+                if tier == b't' {
+                    if let Some(refs) = trace_refs.get(&key) {
+                        free_profiles(refs, &mut doomed, &mut bytes);
+                    }
+                }
+                doomed_keys.push((tier, key));
+            }
+        }
+        if doomed.is_empty() {
+            return Ok(());
+        }
+        // Journaled batch, gc-style: intent first, idempotent deletes,
+        // manifest, intent removal. An injected `store.evict` fault (or
+        // a crash) leaves the intent for the next open's healing pass.
+        let batch = fnv1a64(
+            doomed.iter().map(|p| p.to_string_lossy()).collect::<Vec<_>>().join("\n").as_bytes(),
+        );
+        let intent = self.write_intent("evict", batch, &doomed)?;
+        for path in &doomed {
+            crate::util::fault::maybe_io_error("store.evict")?;
+            match std::fs::remove_file(path) {
+                Ok(()) => {}
+                Err(e) if e.kind() == io::ErrorKind::NotFound => {}
+                Err(e) => return Err(e),
+            }
+        }
+        self.write_manifest()?;
+        let _ = std::fs::remove_file(intent);
+        let evicted = doomed_keys.len() as u64 - u64::from(skipped_protect);
+        self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        if skipped_protect {
+            self.budget_skips.fetch_add(1, Ordering::Relaxed);
+        }
+        self.tight.store(skipped_protect, Ordering::Relaxed);
+        {
+            // drop stamps for dead keys and persist the survivors, so a
+            // reopened store does not order live records by ghosts
+            let mut st = self.stamps.lock().unwrap();
+            for (tier, key) in &doomed_keys {
+                match tier {
+                    b'e' => st.entries.remove(key),
+                    _ => st.traces.remove(key),
+                };
+            }
+            self.flush_stamps_locked(&mut st);
+        }
+        Ok(())
+    }
+
     /// Write a `journal/` intent naming every file the operation will
     /// touch (paths relative to the store root), before touching any.
     fn write_intent(&self, op: &str, key: u64, files: &[PathBuf]) -> io::Result<PathBuf> {
@@ -328,8 +775,10 @@ impl Store {
     ///   dropping the intent. Otherwise discard: remove the partial
     ///   trace document (orphaned-but-valid pool files are harmless —
     ///   content-addressed, reclaimed by the next `gc`).
-    /// * `gc`: deletion is idempotent — roll forward by re-deleting
-    ///   every listed file and rewriting the manifest.
+    /// * `gc` / `evict`: deletion is idempotent — roll forward by
+    ///   re-deleting every listed file and rewriting the manifest. An
+    ///   eviction batch lists every freed pool file alongside its
+    ///   traces, so replaying it can never leave a dangling pool ref.
     ///
     /// Unreadable intents are themselves crash debris and are dropped.
     /// Returns the number of intents resolved.
@@ -380,14 +829,14 @@ impl Store {
                     );
                 }
             }
-            (true, "gc", _) => {
+            (true, op @ ("gc" | "evict"), _) => {
                 if let Some(files) = doc.get("files").and_then(Json::as_array) {
                     for f in files.iter().filter_map(Json::as_str) {
                         let _ = std::fs::remove_file(self.root.join(f));
                     }
                 }
                 let _ = self.write_manifest();
-                eprintln!("store: rolled forward an interrupted gc");
+                eprintln!("store: rolled forward an interrupted {op}");
             }
             _ => {} // unreadable/foreign intent: dropped by the caller
         }
@@ -398,7 +847,9 @@ impl Store {
     /// miss, not an error: the caller re-simulates and overwrites.
     pub fn get(&self, key: u64) -> Option<CellResult> {
         let doc = json::read_file(&self.entry_path(key)).ok()?;
-        decode_entry(&doc, key)
+        let r = decode_entry(&doc, key)?;
+        self.touch(b'e', key);
+        Some(r)
     }
 
     /// Persist an entry (atomic temp-file + rename; see `util::json`).
@@ -406,12 +857,20 @@ impl Store {
     /// metadata for filtered rendering; the content key already separates
     /// DES from analytic entries.
     pub fn put(&self, key: u64, result: &CellResult, des: bool) -> io::Result<()> {
-        if self.skip_if_degraded() {
+        if self.skip_if_degraded() || self.skip_if_budget_tight() {
             return Ok(());
         }
         let path = self.entry_path(key);
         json::write_file_atomic(&path, &encode_entry(key, result, des))
-            .inspect_err(|_| self.note_write_failure(&path))
+            .inspect_err(|_| self.note_write_failure(&path))?;
+        self.touch(b'e', key);
+        // The record is durable; a failed eviction pass (injected
+        // `store.evict` fault, crash) leaves its intent for the next
+        // open to heal, so it must not fail the put.
+        if let Err(e) = self.enforce_budget(Some((b'e', key))) {
+            eprintln!("store: budget enforcement failed: {e} (healed at next open)");
+        }
+        Ok(())
     }
 
     /// Look a trace up (the measurement pipeline's first tier). Same
@@ -424,7 +883,9 @@ impl Store {
     /// trace resolves independently.
     pub fn get_trace(&self, key: u64) -> Option<TraceResult> {
         let doc = json::read_file(&self.trace_path(key)).ok()?;
-        self.decode_trace_doc(&doc, key)
+        let r = self.decode_trace_doc(&doc, key)?;
+        self.touch(b't', key);
+        Some(r)
     }
 
     /// Persist a trace-tier entry (atomic temp-file + rename;
@@ -437,7 +898,7 @@ impl Store {
     /// across iterations (pagerank/bfs/mis) collapse to a handful of pool
     /// files regardless of launch count.
     pub fn put_trace(&self, key: u64, result: &TraceResult) -> io::Result<()> {
-        if self.skip_if_degraded() {
+        if self.skip_if_degraded() || self.skip_if_budget_tight() {
             return Ok(());
         }
         // Serialize everything first (pure), so the journal intent can
@@ -494,6 +955,10 @@ impl Store {
         // heals the partial state exactly like a crash
         write_all()?;
         let _ = std::fs::remove_file(intent);
+        self.touch(b't', key);
+        if let Err(e) = self.enforce_budget(Some((b't', key))) {
+            eprintln!("store: budget enforcement failed: {e} (healed at next open)");
+        }
         Ok(())
     }
 
@@ -837,25 +1302,42 @@ impl Store {
     /// [`Store::merge_from`] over a wire-record list instead of a sibling
     /// directory — the receiving half of a store exchange (`store_push`
     /// on the daemon, `client store-pull` locally). Same validation and
-    /// precedence: pooled profiles are re-hashed and written canonically,
-    /// traces must resolve every ref against the (just-unioned) local
-    /// pool, and existing valid local records win. Returns how many
-    /// records were written.
-    pub fn import_records(&self, records: &[ExportRecord]) -> io::Result<usize> {
-        let mut imported = 0;
+    /// precedence: pooled profiles are re-hashed against their own name
+    /// and written canonically, traces must resolve every ref against
+    /// the (just-unioned) local pool, entries must decode under the
+    /// current schema, and existing valid local records win. A record
+    /// failing validation is **rejected** — counted, skipped, and unable
+    /// to poison the rest of the batch; a record the store already holds
+    /// is neither imported nor rejected. The batch is admitted through
+    /// the byte budget: one enforcement pass runs after the writes, and
+    /// its failure (injected `store.evict` fault) is the caller's to
+    /// retry — unlike `put`, a push reply must not claim a budget it
+    /// did not enforce.
+    pub fn import_records(&self, records: &[ExportRecord]) -> io::Result<ImportReport> {
+        let mut report = ImportReport::default();
+        if self.skip_if_budget_tight() {
+            // write-through-skip applies to pushes like any other
+            // write: the records are validated nowhere cheaper than at
+            // the (still-responding) client, so just decline the batch
+            return Ok(report);
+        }
         let mut local_pool: HashMap<u64, KernelProfile> = HashMap::new();
         for r in records.iter().filter(|r| r.tier == Tier::Profiles) {
             if self.pool_get(r.key, &mut local_pool).is_some() {
                 continue;
             }
-            let Some(prof) = KernelProfile::from_json(&r.doc) else { continue };
+            let Some(prof) = KernelProfile::from_json(&r.doc) else {
+                report.rejected += 1;
+                continue;
+            };
             let canonical = prof.canonical_compact();
             if fnv1a64(canonical.as_bytes()) != r.key {
-                continue; // corrupt in transit or at the source: skip
+                report.rejected += 1; // mis-hashed in transit or at source
+                continue;
             }
             json::write_text_atomic(&self.profile_path(r.key), &canonical)?;
             local_pool.insert(r.key, prof);
-            imported += 1;
+            report.imported += 1;
         }
         for r in records.iter().filter(|r| r.tier == Tier::Traces) {
             if let Ok(local) = json::read_file(&self.trace_path(r.key)) {
@@ -863,29 +1345,40 @@ impl Store {
                     continue;
                 }
             }
+            // a ref whose pushed profile was rejected above fails to
+            // resolve here, so the trace is rejected with it
             if !self.trace_resolves(&r.doc, r.key, &mut local_pool) {
+                report.rejected += 1;
                 continue;
             }
             json::write_file_atomic_compact(&self.trace_path(r.key), &r.doc)?;
-            imported += 1;
+            self.touch(b't', r.key);
+            report.imported += 1;
         }
         for r in records.iter().filter(|r| r.tier == Tier::Entries) {
             if self.get(r.key).is_some() {
                 continue;
             }
             if decode_entry(&r.doc, r.key).is_none() {
+                report.rejected += 1;
                 continue;
             }
             json::write_file_atomic(&self.entry_path(r.key), &r.doc)?;
-            imported += 1;
+            self.touch(b'e', r.key);
+            report.imported += 1;
         }
-        Ok(imported)
+        self.enforce_budget(None)?;
+        Ok(report)
     }
 
     /// Per-tier counts and on-disk bytes, plus the profile pool's dedup
     /// leverage: `profile_refs` counts every ref every valid trace
     /// document holds (what an inline-profile store would have written),
-    /// against `profiles.count` distinct pooled files.
+    /// against `profiles.count` distinct pooled files. The `journal`
+    /// tier is bookkeeping overhead — `journal/` intents plus any
+    /// `.tmp-` droppings torn writers left in *any* tier directory —
+    /// reported separately and excluded from the budget-governed total
+    /// ([`StoreStats::governed_bytes`]).
     pub fn stats(&self) -> StoreStats {
         let tier = |dir: &str| {
             let mut t = TierStats::default();
@@ -899,6 +1392,19 @@ impl Store {
             }
             t
         };
+        let mut journal = TierStats::default();
+        for dir in ["entries", "traces", "profiles", "journal"] {
+            if let Ok(rd) = std::fs::read_dir(self.root.join(dir)) {
+                for e in rd.filter_map(|e| e.ok()) {
+                    let name = e.file_name().to_string_lossy().to_string();
+                    let is_intent = dir == "journal" && name.ends_with(".json");
+                    if is_intent || name.contains(".tmp-") {
+                        journal.count += 1;
+                        journal.bytes += e.metadata().map(|m| m.len()).unwrap_or(0);
+                    }
+                }
+            }
+        }
         let mut refs = 0u64;
         for key in self.trace_keys() {
             if let Some(r) = self.trace_profile_refs(key) {
@@ -909,8 +1415,23 @@ impl Store {
             entries: tier("entries"),
             traces: tier("traces"),
             profiles: tier("profiles"),
+            journal,
             profile_refs: refs,
+            max_bytes: self.max_bytes,
         }
+    }
+}
+
+/// RAII handle from [`Store::pin_guard`]: holds one eviction pin on a
+/// key for the span of an engine claim.
+pub struct PinGuard<'a> {
+    store: &'a Store,
+    key: u64,
+}
+
+impl Drop for PinGuard<'_> {
+    fn drop(&mut self) {
+        self.store.unpin(self.key);
     }
 }
 
@@ -1005,15 +1526,31 @@ pub struct TierStats {
     pub bytes: u64,
 }
 
+/// What [`Store::import_records`] did with a pushed batch: `imported`
+/// records written locally, `rejected` records that failed validation
+/// (mis-hashed pool file, unresolvable trace, undecodable entry).
+/// Records the store already held validly count as neither.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ImportReport {
+    pub imported: usize,
+    pub rejected: usize,
+}
+
 /// Per-tier footprint + pool dedup ratio (`pipefwd store stats`).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct StoreStats {
     pub entries: TierStats,
     pub traces: TierStats,
     pub profiles: TierStats,
+    /// Bookkeeping overhead: `journal/` intents + `.tmp-` droppings
+    /// across every tier directory. Zero after any cleanly completed
+    /// run; excluded from [`StoreStats::governed_bytes`].
+    pub journal: TierStats,
     /// Profile refs across all valid trace documents — the number of
     /// profile records an inline (pre-v4) trace tier would store.
     pub profile_refs: u64,
+    /// The byte budget the reporting store had armed, if any.
+    pub max_bytes: Option<u64>,
 }
 
 impl StoreStats {
@@ -1026,7 +1563,16 @@ impl StoreStats {
         self.profile_refs as f64 / self.profiles.count as f64
     }
 
-    /// The `store stats --format json` document.
+    /// Bytes the `--max-bytes` budget governs: the three cache tiers,
+    /// never the journal/droppings overhead.
+    pub fn governed_bytes(&self) -> u64 {
+        self.entries.bytes + self.traces.bytes + self.profiles.bytes
+    }
+
+    /// The `store stats --format json` document. The `journal`,
+    /// `governed_bytes`, and `max_bytes` keys are additive over the
+    /// original v1 shape — existing consumers (the CI store-growth
+    /// report) read the keys they know.
     pub fn to_json(&self) -> Json {
         let tier = |t: &TierStats| {
             Json::Obj(vec![
@@ -1040,8 +1586,17 @@ impl StoreStats {
             ("entries".into(), tier(&self.entries)),
             ("traces".into(), tier(&self.traces)),
             ("profiles".into(), tier(&self.profiles)),
+            ("journal".into(), tier(&self.journal)),
             ("profile_refs".into(), Json::Num(self.profile_refs as f64)),
             ("dedup_ratio".into(), Json::Num(self.dedup_ratio())),
+            ("governed_bytes".into(), Json::Num(self.governed_bytes() as f64)),
+            (
+                "max_bytes".into(),
+                match self.max_bytes {
+                    Some(m) => Json::Num(m as f64),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 }
@@ -1065,7 +1620,9 @@ fn encode_entry(key: u64, result: &CellResult, des: bool) -> Json {
     Json::Obj(fields)
 }
 
-fn decode_entry(doc: &Json, key: u64) -> Option<CellResult> {
+/// Crate-visible so the daemon's `store_push` handler can decode a
+/// pushed entry once more to fulfil an outstanding in-memory claim.
+pub(crate) fn decode_entry(doc: &Json, key: u64) -> Option<CellResult> {
     let schema = doc.get("schema")?.as_str()?;
     // v5/v4 read-compat: pre-overlap (and pre-device-zoo) records are
     // overlap-off records with unchanged keys and format (see
@@ -1564,11 +2121,18 @@ mod tests {
             vec![Tier::Profiles, Tier::Traces, Tier::Entries, Tier::Entries],
             "pool must precede the traces that reference it"
         );
-        assert_eq!(b.import_records(&records).unwrap(), 4);
+        assert_eq!(
+            b.import_records(&records).unwrap(),
+            ImportReport { imported: 4, rejected: 0 }
+        );
         assert_eq!(b.get_trace(61), Some(Ok(sample_trace())));
         assert_eq!(b.get(62), Some(Ok(sample_measurement())));
         assert_eq!(b.get(63), Some(Err("validation: nw: m[9] = 1, want 2".into())));
-        assert_eq!(b.import_records(&records).unwrap(), 0, "exchange is idempotent");
+        assert_eq!(
+            b.import_records(&records).unwrap(),
+            ImportReport::default(),
+            "exchange is idempotent: already-held records are neither imported nor rejected"
+        );
         let _ = std::fs::remove_dir_all(a.root());
         let _ = std::fs::remove_dir_all(b.root());
     }
@@ -1587,7 +2151,11 @@ mod tests {
         let no_pool: Vec<ExportRecord> =
             records.iter().filter(|r| r.tier != Tier::Profiles).cloned().collect();
         let dst = tmp_store("import-nopool");
-        assert_eq!(dst.import_records(&no_pool).unwrap(), 1, "only the entry lands");
+        assert_eq!(
+            dst.import_records(&no_pool).unwrap(),
+            ImportReport { imported: 1, rejected: 1 },
+            "only the entry lands; the unresolvable trace is rejected"
+        );
         assert_eq!(dst.get_trace(71), None);
         assert!(dst.get(72).is_some());
 
@@ -1599,7 +2167,11 @@ mod tests {
             }
         }
         let dst2 = tmp_store("import-badpool");
-        assert_eq!(dst2.import_records(&bad).unwrap(), 1, "only the entry lands");
+        assert_eq!(
+            dst2.import_records(&bad).unwrap(),
+            ImportReport { imported: 1, rejected: 2 },
+            "only the entry lands; the mis-hashed profile and its trace are rejected"
+        );
         assert_eq!(dst2.get_trace(71), None);
         let _ = std::fs::remove_dir_all(src.root());
         let _ = std::fs::remove_dir_all(dst.root());
@@ -1781,5 +2353,212 @@ mod tests {
         assert!(s.get(9).is_some());
         assert_eq!(s.degraded_count(), 0);
         let _ = std::fs::remove_dir_all(s.root());
+    }
+
+    #[test]
+    fn parse_byte_budget_accepts_units_and_rejects_garbage() {
+        assert_eq!(parse_byte_budget("65536"), Ok(65536));
+        assert_eq!(parse_byte_budget("64k"), Ok(64 << 10));
+        assert_eq!(parse_byte_budget("8M"), Ok(8 << 20));
+        assert_eq!(parse_byte_budget(" 1g "), Ok(1 << 30));
+        assert!(parse_byte_budget("0").is_err(), "a zero budget is a mistyped flag");
+        assert!(parse_byte_budget("").is_err());
+        assert!(parse_byte_budget("lots").is_err());
+        assert!(parse_byte_budget("-4k").is_err());
+    }
+
+    /// The LRU contract: when a put lands over budget, the coldest
+    /// record dies first — stampless before stamped, logical access
+    /// order among stamped — never the freshly written (protected)
+    /// record, and the `governed_bytes ≤ max_bytes` invariant holds
+    /// after the put. The eviction batch journals like a gc, so no
+    /// intent survives a clean pass.
+    #[test]
+    fn budget_evicts_coldest_first_and_keeps_invariant() {
+        let s = tmp_store("budget-lru");
+        let m = sample_measurement();
+        for k in 1..=4u64 {
+            s.put(k, &Ok(m.clone()), false).unwrap();
+        }
+        let esize = s.governed_bytes() / 4;
+        assert!(esize > 0);
+        let root = s.root().to_path_buf();
+        // room for four records and change — the fifth put must evict one
+        let s = Store::open(&root).unwrap().with_max_bytes(Some(esize * 4 + esize / 2));
+        assert_eq!(s.evictions(), 0, "opening under budget evicts nothing");
+        // warm key 1: without stamps it would die first (lowest key)
+        assert!(s.get(1).is_some());
+        s.put(5, &Ok(m.clone()), false).unwrap();
+        assert!(s.governed_bytes() <= s.max_bytes().unwrap(), "invariant after the put");
+        assert_eq!(s.evictions(), 1);
+        assert_eq!(s.budget_skips(), 0);
+        assert!(s.get(1).is_some(), "warm record survives");
+        assert!(s.get(2).is_none(), "coldest (stampless, lowest key) record evicted");
+        assert!(s.get(5).is_some(), "the record that triggered eviction is protected");
+        assert_eq!(s.journal_len(), 0, "a clean eviction batch clears its intent");
+        assert!(root.join(STAMPS_FILE).exists(), "eviction flushes the stamp file");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    /// Evicting a trace frees its pooled profiles only when no
+    /// *surviving* trace still references them — the gc liveness rule,
+    /// applied incrementally.
+    #[test]
+    fn eviction_keeps_pool_files_shared_with_surviving_traces() {
+        let s = tmp_store("budget-pool");
+        s.put_trace(21, &Ok(sample_trace())).unwrap();
+        s.put_trace(22, &Ok(sample_trace())).unwrap();
+        let st = s.stats();
+        assert_eq!(st.profiles.count, 1, "both traces share one pooled profile");
+        let (tsize, psize) = (st.traces.bytes / 2, st.profiles.bytes);
+        let root = s.root().to_path_buf();
+        // room for one trace + the pool: opening must evict exactly one
+        let s = Store::open(&root).unwrap().with_max_bytes(Some(tsize + psize + tsize / 2));
+        assert_eq!(s.evictions(), 1);
+        assert_eq!(s.trace_keys(), vec![22], "lower key (equally cold) evicted first");
+        assert_eq!(
+            s.get_trace(22),
+            Some(Ok(sample_trace())),
+            "surviving trace still resolves — its shared pool file must not die with 21"
+        );
+        // now nothing fits: the second trace goes, and the orphaned pool file with it
+        let s = Store::open(&root).unwrap().with_max_bytes(Some(psize.max(64)));
+        assert!(s.trace_keys().is_empty());
+        assert!(s.profile_keys().is_empty(), "orphaned pool file evicted with its last trace");
+        assert!(s.governed_bytes() <= s.max_bytes().unwrap());
+        assert_eq!(s.journal_len(), 0);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    /// A pinned key (open engine claim) is never evicted, whatever its
+    /// stamp; the pin is refcounted and released by the guard.
+    #[test]
+    fn pinned_keys_survive_eviction() {
+        let s = tmp_store("budget-pin");
+        let m = sample_measurement();
+        for k in 1..=4u64 {
+            s.put(k, &Ok(m.clone()), false).unwrap();
+        }
+        let esize = s.governed_bytes() / 4;
+        let root = s.root().to_path_buf();
+        let s = Store::open(&root).unwrap().with_max_bytes(Some(esize * 4 + esize / 2));
+        {
+            let _pin = s.pin_guard(1); // coldest key, would die first
+            s.put(5, &Ok(m.clone()), false).unwrap();
+            assert!(s.get(1).is_some(), "pinned key survives");
+            assert!(s.get(2).is_none(), "eviction moved to the next-coldest");
+        }
+        assert!(!s.is_pinned(1), "guard releases its pin on drop");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    /// A budget smaller than a single record degrades to
+    /// write-through-skip: the first put latches `tight` (one write +
+    /// self-evict, counted), subsequent puts skip the write entirely —
+    /// no thrash, invariant intact, results unaffected.
+    #[test]
+    fn over_tight_budget_degrades_to_write_through_skip() {
+        let s = tmp_store("budget-tight");
+        let m = sample_measurement();
+        s.put(1, &Ok(m.clone()), false).unwrap();
+        let esize = s.governed_bytes();
+        let root = s.root().to_path_buf();
+        let s = Store::open(&root).unwrap().with_max_bytes(Some(esize / 2));
+        assert!(s.keys().is_empty(), "opening over an un-fittable budget clears the store");
+        s.put(2, &Ok(m.clone()), false).unwrap();
+        let skips_after_first = s.budget_skips();
+        assert!(skips_after_first >= 1, "the un-fittable record counts a budget skip");
+        s.put(3, &Ok(m.clone()), false).unwrap();
+        assert!(s.budget_skips() > skips_after_first, "later puts skip without writing");
+        assert!(s.keys().is_empty());
+        assert!(s.governed_bytes() <= s.max_bytes().unwrap());
+        assert_eq!(s.journal_len(), 0);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    /// The satellite heal test: an eviction batch killed between its
+    /// deletes and the manifest rewrite rolls *forward* at open —
+    /// every listed file re-deleted idempotently, manifest rewritten,
+    /// no dangling pool refs, no leaked intent.
+    #[test]
+    fn open_rolls_forward_interrupted_eviction() {
+        let s = tmp_store("journal-evict");
+        let m = sample_measurement();
+        s.put(1, &Ok(m.clone()), false).unwrap();
+        s.put(2, &Ok(m), false).unwrap();
+        s.put_trace(31, &Ok(sample_trace())).unwrap();
+        let pool = s.profile_keys();
+        assert_eq!(pool.len(), 1);
+        // the batch doomed entry 2, trace 31, and its (now orphaned)
+        // pool file; "death" struck after deleting only the entry
+        let doomed_entry = format!("entries/{}.json", key_hex(2));
+        let doomed_trace = format!("traces/{}.json", key_hex(31));
+        let doomed_prof = format!("profiles/{}.json", key_hex(pool[0]));
+        std::fs::remove_file(s.root().join(&doomed_entry)).unwrap();
+        fake_intent(&s, "evict", 9, vec![&doomed_entry, &doomed_trace, &doomed_prof]);
+        let root = s.root().to_path_buf();
+        let s = Store::open(&root).unwrap();
+        assert_eq!(s.journal_replays(), 1);
+        assert_eq!(s.journal_len(), 0, "no leaked intent after healing");
+        assert_eq!(s.keys(), vec![1], "interrupted deletes completed (idempotently)");
+        assert!(s.trace_keys().is_empty());
+        assert!(s.profile_keys().is_empty(), "no dangling pool files");
+        assert_eq!(s.load_manifest(), Some(vec![1]), "manifest rewritten by roll-forward");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    /// The stats satellite: journal intents and `.tmp-` droppings are a
+    /// visible tier of their own, excluded from the governed total.
+    #[test]
+    fn stats_reports_journal_overhead_outside_the_governed_total() {
+        let s = tmp_store("stats-journal");
+        s.put(1, &Ok(sample_measurement()), false).unwrap();
+        let clean = s.stats();
+        assert_eq!(clean.journal, TierStats::default());
+        fake_intent(&s, "gc", 0, vec![]);
+        std::fs::write(s.root().join("entries").join(".dead.json.tmp-999-0"), "{ torn").unwrap();
+        let st = s.stats();
+        assert_eq!(st.journal.count, 2, "one intent + one dropping");
+        assert!(st.journal.bytes > 0);
+        assert_eq!(
+            st.governed_bytes(),
+            clean.governed_bytes(),
+            "bookkeeping overhead must not move the budget-governed total"
+        );
+        assert_eq!(st.entries, clean.entries, "droppings are not entries");
+        let doc = st.to_json();
+        assert!(doc.get("journal").is_some());
+        assert_eq!(doc.get("governed_bytes").and_then(Json::as_u64), Some(st.governed_bytes()));
+        let _ = std::fs::remove_dir_all(s.root());
+    }
+
+    /// Access stamps survive a reopen (STAMPS.json), so LRU order
+    /// reflects history across daemon restarts; a torn stamp file only
+    /// makes records equally cold, never errors.
+    #[test]
+    fn stamps_persist_across_reopen_and_tolerate_corruption() {
+        let s = tmp_store("stamps");
+        let m = sample_measurement();
+        for k in 1..=4u64 {
+            s.put(k, &Ok(m.clone()), false).unwrap();
+        }
+        let esize = s.governed_bytes() / 4;
+        let root = s.root().to_path_buf();
+        let budget = esize * 4 + esize / 2;
+        let s = Store::open(&root).unwrap().with_max_bytes(Some(budget));
+        // warm key 1 enough times to force a batched flush
+        for _ in 0..STAMP_FLUSH_EVERY {
+            assert!(s.get(1).is_some());
+        }
+        drop(s);
+        let s = Store::open(&root).unwrap().with_max_bytes(Some(budget));
+        s.put(5, &Ok(m.clone()), false).unwrap();
+        assert!(s.get(1).is_some(), "stamp from the previous process protects the warm key");
+        assert!(s.get(2).is_none());
+        // a torn stamp file is "no stamps", never an error
+        std::fs::write(root.join(STAMPS_FILE), "{ torn").unwrap();
+        let s = Store::open(&root).unwrap().with_max_bytes(Some(budget));
+        assert!(s.get(5).is_some(), "store opens and serves despite the torn stamp file");
+        let _ = std::fs::remove_dir_all(&root);
     }
 }

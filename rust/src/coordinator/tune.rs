@@ -350,7 +350,7 @@ impl SearchPolicy for GoldenSection {
         // of the ladder and spend one probe anchoring the shallow end
         // (if the optimum really is shallow, the anchor catches it and
         // `Probe::best` keeps it)
-        let lo = device_seed_lo(probe.engine.cfg.channel_fill_cycles, depths);
+        let lo = device_seed_lo(probe.engine.cfg.mem.channel_fill_cycles, depths);
         if lo > 0 {
             probe.try_at(TuneConfig { depth: depths[0], parts: 1 }, target);
         }

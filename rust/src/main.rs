@@ -49,8 +49,10 @@ ENGINE COMMANDS (parallel, cache-aware, persistent):
          [--threshold PCT]      modelled regressions > PCT %) or two
                                 counters documents (informational)
   store stats                   per-tier store footprint (entries /
-        [--format table|json]   traces / pooled profiles, counts + bytes)
-                                and the profile pool's dedup ratio
+        [--format table|json]   traces / pooled profiles, plus the
+                                journal/droppings overhead tier), the
+                                profile pool's dedup ratio, and the
+                                budget-governed byte total
   store gc [--dry-run]          delete every store record unreachable
                                 from the current E1-E9 grids (all scales,
                                 all registry devices, both estimators)
@@ -73,11 +75,13 @@ DAEMON COMMANDS (measurement as a service, schema pipefwd-api-v1):
                                 Bearer from non-loopback peers
   client <action>               drive a daemon from the same binary:
         [--addr HOST:PORT]      run | sweep | tune | stats | store-pull
-        [--token T]             — sinks are reassembled byte-identical
-                                to the serial CLI path; transient
-                                failures (503, resets, truncated
-                                streams) retry with capped exponential
-                                backoff (see docs/RELIABILITY.md)
+        [--token T]             | store-push — sinks are reassembled
+        [--deadline-ms N]       byte-identical to the serial CLI path;
+                                transient failures (503, resets,
+                                truncated streams) retry with capped
+                                exponential backoff; store-push uploads
+                                the local store's records for server-side
+                                verification (see docs/RELIABILITY.md)
 
 TABLE COMMANDS:
   table1               benchmark characterisation (paper Table 1)
@@ -116,9 +120,12 @@ OPTIONS:
                    (validated against the workload registry at parse time)
   --policy P       search policy for `tune`/`--tuned`: golden
                    (golden-section over log-depth) or sh (successive
-                   halving over depth x replication, cheap scales first)
-  --budget N       max distinct probes a search may spend (default 40) —
-                   on a cold store, the max simulations
+                   halving over depth x replication, cheap scales first);
+                   default: the device profile's declared policy
+                   (arria10: golden)
+  --budget N       max distinct probes a search may spend — on a cold
+                   store, the max simulations; default: the device
+                   profile's declared budget (arria10: 40)
   --replication    include replication factors m2c2..m4c4 in the tuned
                    configuration space
   --no-ref         skip the TuneReport's exhaustive-reference column
@@ -137,6 +144,13 @@ OPTIONS:
   --cache-dir DIR  persistent measurement store directory
                    (default: $PIPEFWD_CACHE_DIR or .pipefwd-cache)
   --no-cache       do not read or write the persistent store
+  --max-bytes B    byte budget for the persistent store (or
+                   $PIPEFWD_MAX_BYTES; k/m/g suffixes accepted): puts
+                   past the budget evict coldest-first under a journaled
+                   batch — pinned in-flight keys and pool files live
+                   traces reference survive; a budget too tight for even
+                   one record degrades to write-through-skip (counted in
+                   store_budget_skips) instead of thrashing
   --des            estimate with the discrete-event simulator instead of
                    the analytic model (cached under a distinct key)
   --overlap        schedule launch *graphs* instead of launch chains:
@@ -165,6 +179,15 @@ OPTIONS:
                    (constant-time compared; loopback peers are exempt
                    unless --token-all; /healthz + /readyz never require it)
   --token-all      `serve`: require the token from loopback peers too
+  --client-cap N   `serve`: fair-share cap — the most requests one
+                   client (keyed by token, else non-loopback peer IP)
+                   may have in flight at once; default: workers - 1
+                   (anonymous loopback peers are exempt)
+  --deadline-ms N  `client`: declare a freshness deadline on every
+                   request; the daemon sheds the request with 503 +
+                   Retry-After before doing any work if it waited in
+                   the accept queue longer than this (absent = wait
+                   indefinitely, the pre-PR-10 behavior)
   --fault-plan S   deterministic fault injection for robustness testing
                    (or $PIPEFWD_FAULT_PLAN): a seeded schedule like
                    `seed=42;store.write=0.25x4;net.read=0.1` over the
@@ -239,6 +262,9 @@ fn v_format(v: &str) -> Result<(), String> {
 fn v_fault_plan(v: &str) -> Result<(), String> {
     pipefwd::util::fault::FaultPlan::parse(v).map(|_| ())
 }
+fn v_max_bytes(v: &str) -> Result<(), String> {
+    pipefwd::coordinator::store::parse_byte_budget(v).map(|_| ())
+}
 
 const ARG_SPECS: &[ArgSpec] = &[
     ArgSpec { name: "--scale", arity: 1, validate: Some(v_scale) },
@@ -271,6 +297,9 @@ const ARG_SPECS: &[ArgSpec] = &[
     ArgSpec { name: "--token", arity: 1, validate: None },
     ArgSpec { name: "--token-all", arity: 0, validate: None },
     ArgSpec { name: "--fault-plan", arity: 1, validate: Some(v_fault_plan) },
+    ArgSpec { name: "--max-bytes", arity: 1, validate: Some(v_max_bytes) },
+    ArgSpec { name: "--client-cap", arity: 1, validate: Some(v_posint) },
+    ArgSpec { name: "--deadline-ms", arity: 1, validate: Some(v_posint) },
 ];
 
 struct Args {
@@ -375,14 +404,8 @@ fn main() {
         .value("--benches")
         .map(|v| req("--benches", service::benches_from(v)))
         .unwrap_or_else(|| vec!["fw".into(), "hotspot".into(), "mis".into()]);
-    let policy = args
-        .value("--policy")
-        .map(|v| req("--policy", service::policy_from(v)))
-        .unwrap_or(coordinator::Policy::Golden);
-    let budget = args
-        .value("--budget")
-        .map(|v| req("--budget", service::posint_from(v)))
-        .unwrap_or(40);
+    let policy_flag = args.value("--policy").map(|v| req("--policy", service::policy_from(v)));
+    let budget_flag = args.value("--budget").map(|v| req("--budget", service::posint_from(v)));
     let replication = args.flag("--replication");
     let dry_run = args.flag("--dry-run");
     let no_ref = args.flag("--no-ref");
@@ -423,6 +446,15 @@ fn main() {
         .map(String::from)
         .or_else(|| std::env::var("PIPEFWD_TOKEN").ok().filter(|t| !t.is_empty()));
     let token_all = args.flag("--token-all");
+    let client_cap = args
+        .value("--client-cap")
+        .map(|v| req("--client-cap", service::posint_from(v)))
+        .unwrap_or(0); // 0 = auto: max(1, workers - 1)
+    let deadline_ms = args
+        .value("--deadline-ms")
+        .map(|v| req("--deadline-ms", service::posint_from(v)) as u64);
+    let max_bytes = Store::resolve_max_bytes(args.value("--max-bytes"))
+        .unwrap_or_else(|e| fail(&format!("--max-bytes: {e}")));
     let positional = &args.positional;
 
     if device_all && cmd != "run" {
@@ -439,6 +471,13 @@ fn main() {
         pipefwd::sim::device::by_name(name)
             .unwrap_or_else(|| fail(&format!("--device: unknown device `{name}`")))
     };
+    // Tuner defaults (the PR-8 follow-up): when --policy/--budget are
+    // absent, the resolved device profile's declared defaults apply.
+    // arria10 declares golden/40 — the historical hardcoded CLI
+    // defaults — so existing invocations are bit-identical.
+    let policy = policy_flag
+        .unwrap_or_else(|| req("--policy", service::policy_from(cfg.tune_policy)));
+    let budget = budget_flag.unwrap_or(cfg.tune_budget);
 
     // The persistent store every engine command reads through / writes
     // behind (tentpole of PR 2); `--no-cache` restores PR-1 behavior.
@@ -448,7 +487,10 @@ fn main() {
         }
         let dir = Store::resolve_dir(cache_dir.as_deref());
         match Store::open(&dir) {
-            Ok(s) => Some(s),
+            // arming the budget runs one eviction pass, so a store
+            // opened over budget (or under a newly lowered budget) is
+            // trimmed before any new work lands
+            Ok(s) => Some(s.with_max_bytes(max_bytes)),
             Err(e) => {
                 eprintln!("warning: cannot open store {}: {e} (running uncached)", dir.display());
                 None
@@ -752,16 +794,26 @@ fn main() {
                 (Some(_), false) => "token (non-loopback)",
                 (None, _) => "none",
             };
+            let budget_desc = match max_bytes {
+                Some(b) => format!("{b} bytes"),
+                None => "unbounded".to_string(),
+            };
             let server = net::Server::spawn(
                 Arc::clone(&svc),
                 &addr,
-                net::ServerConfig { workers, queue_cap, token: token.clone(), token_all },
+                net::ServerConfig {
+                    workers,
+                    queue_cap,
+                    token: token.clone(),
+                    token_all,
+                    per_client_cap: client_cap,
+                },
             )
             .unwrap_or_else(|e| fail(&format!("serve: binding {addr}: {e}")));
             eprintln!(
                 "pipefwd serve: listening on {} (device {}, {jobs} engine jobs, \
                  {workers} workers, queue {queue_cap}, auth: {auth_desc}, \
-                 store: {store_desc}, schema {})",
+                 store: {store_desc}, budget: {budget_desc}, schema {})",
                 server.addr(),
                 cfg.name,
                 coordinator::API_SCHEMA,
@@ -779,12 +831,16 @@ fn main() {
                 .first()
                 .map(String::as_str)
                 .unwrap_or_else(|| {
-                    fail("client <run|sweep|tune|stats|store-pull> (see `pipefwd` usage)")
+                    fail("client <run|sweep|tune|stats|store-pull|store-push> \
+                          (see `pipefwd` usage)")
                 });
             // one persistent, retrying connection for the whole action:
-            // transient failures (503 backpressure, resets, truncated
-            // streams) back off and retry; permanent errors still fail
-            let mut cli = net::Client::new(&addr).with_token(token.clone());
+            // transient failures (503 backpressure, admission sheds,
+            // resets, truncated streams) back off and retry; permanent
+            // errors still fail
+            let mut cli = net::Client::new(&addr)
+                .with_token(token.clone())
+                .with_deadline(deadline_ms);
             match action {
                 "run" => {
                     let exps = req("--experiment", service::experiments_from(&experiment));
@@ -867,20 +923,58 @@ fn main() {
                     let dir = Store::resolve_dir(cache_dir.as_deref());
                     let store = Store::open(&dir)
                         .unwrap_or_else(|e| fail(&format!("opening store {}: {e}", dir.display())));
-                    let count = store
+                    let report = store
                         .import_records(&records)
                         .unwrap_or_else(|e| fail(&format!("importing records: {e}")));
                     if let Err(e) = store.write_manifest() {
                         eprintln!("warning: writing store manifest: {e}");
                     }
                     eprintln!(
-                        "pulled {} record(s) from {addr}, imported {count} new into {}",
+                        "pulled {} record(s) from {addr}, imported {} new into {} \
+                         ({} rejected)",
                         records.len(),
-                        dir.display()
+                        report.imported,
+                        dir.display(),
+                        report.rejected,
+                    );
+                }
+                "store-push" => {
+                    // upload this machine's store for server-side
+                    // verification: the daemon re-hashes every pool
+                    // file, re-validates every document, and admits
+                    // through its own byte budget
+                    let dir = Store::resolve_dir(cache_dir.as_deref());
+                    let store = Store::open_existing(&dir).unwrap_or_else(|e| {
+                        fail(&format!("opening store {}: {e}", dir.display()))
+                    });
+                    let records = store.export_records();
+                    if records.is_empty() {
+                        fail(&format!("store {} has no records to push", dir.display()));
+                    }
+                    let n = records.len();
+                    let items = cli
+                        .request(&ServiceRequest::StorePush { records })
+                        .unwrap_or_else(|e| fail(&e));
+                    let field = |k: &str| {
+                        items
+                            .first()
+                            .and_then(|l| l.get(k))
+                            .and_then(|v| v.as_u64())
+                            .unwrap_or(0)
+                    };
+                    eprintln!(
+                        "pushed {n} record(s) to {addr}: {} imported, {} rejected, \
+                         {} claim(s) fulfilled",
+                        field("count"),
+                        field("rejected"),
+                        field("fulfilled"),
                     );
                 }
                 other => {
-                    fail(&format!("unknown client action `{other}` (run|sweep|tune|stats|store-pull)"))
+                    fail(&format!(
+                        "unknown client action `{other}` \
+                         (run|sweep|tune|stats|store-pull|store-push)"
+                    ))
                 }
             }
             if cli.retries() > 0 {
@@ -1015,6 +1109,7 @@ fn main() {
                                 ("entries", stats.entries),
                                 ("traces", stats.traces),
                                 ("profiles (pool)", stats.profiles),
+                                ("journal (overhead)", stats.journal),
                             ] {
                                 t.row(vec![
                                     name.into(),
@@ -1030,6 +1125,18 @@ fn main() {
                                 stats.profiles.count,
                                 stats.dedup_ratio(),
                             );
+                            // journal/droppings overhead is bookkeeping,
+                            // never charged against the byte budget
+                            match stats.max_bytes.or(max_bytes) {
+                                Some(max) => println!(
+                                    "governed bytes: {} of {max} budget",
+                                    stats.governed_bytes(),
+                                ),
+                                None => println!(
+                                    "governed bytes: {} (no budget)",
+                                    stats.governed_bytes(),
+                                ),
+                            }
                         }
                     }
                 }

@@ -48,6 +48,18 @@ pub struct DeviceConfig {
     /// in the content address, not by value — see `sim::mem`.
     pub mem: MemModel,
 
+    // ---- tuner defaults ---------------------------------------------------
+    /// Default `tune` search policy when `--policy` is absent: `"golden"`
+    /// or `"sh"` (parsed by `service::policy_from` at the use site —
+    /// `sim` stays independent of `coordinator`). Like `name` and `mem`,
+    /// deliberately excluded from the frozen `Debug`/store keys.
+    pub tune_policy: &'static str,
+    /// Default `tune` probe budget when `--budget` is absent. Devices
+    /// with cheaper probes (deep memory-level parallelism, no area
+    /// pressure) declare smaller budgets — the search converges in fewer
+    /// probes on their smoother cost surfaces.
+    pub tune_budget: usize,
+
     // ---- clocks -----------------------------------------------------------
     /// Nominal kernel clock (Hz). The paper reports no consistent fmax
     /// trend; we derate it slightly with design size (see `fmax_for_area`).
@@ -148,6 +160,10 @@ impl DeviceConfig {
         DeviceConfig {
             name: "arria10",
             mem: MemModel::identity(2, 1024, 8),
+            // the historical hardcoded CLI defaults, so `tune` with no
+            // flags stays bit-identical to every pre-PR-10 invocation
+            tune_policy: "golden",
+            tune_budget: 40,
 
             fmax_hz: 240e6,
             fmax_derate_knee: 0.20,
@@ -214,6 +230,10 @@ impl DeviceConfig {
                 strided_scale: 1.25,
                 irregular_scale: 1.1,
             },
+            // deeper pipes but a smoother cost surface: golden-section
+            // converges faster, so fewer probes are declared
+            tune_policy: "golden",
+            tune_budget: 32,
 
             fmax_hz: 350e6,
             fmax_derate_knee: 0.25,
@@ -281,6 +301,10 @@ impl DeviceConfig {
                 strided_scale: 2.5,
                 irregular_scale: 1.3,
             },
+            // pipe depth barely matters off the coalescing cliff — a
+            // small golden-section budget finds the plateau
+            tune_policy: "golden",
+            tune_budget: 32,
 
             fmax_hz: 1.2e9,
             fmax_derate_knee: 1.0,
@@ -347,6 +371,10 @@ impl DeviceConfig {
                 strided_scale: 1.15,
                 irregular_scale: 0.3,
             },
+            // software queues make replication interactions noisier:
+            // keep the full historical budget for the search
+            tune_policy: "golden",
+            tune_budget: 40,
 
             fmax_hz: 3.2e9,
             fmax_derate_knee: 1.0,
@@ -547,6 +575,25 @@ mod tests {
         );
         assert!(!s.contains("name"), "registry name must stay out of Debug/store keys");
         assert!(!s.contains("mem"), "mem model must stay out of Debug/store keys");
+        assert!(!s.contains("tune_"), "tuner defaults must stay out of Debug/store keys");
+    }
+
+    /// Every profile declares a parseable tune policy and a positive
+    /// budget, and `arria10` declares exactly the historical CLI
+    /// defaults — `tune` with no flags stays bit-identical.
+    #[test]
+    fn tuner_defaults_are_declared_and_arria10_matches_history() {
+        for d in DeviceRegistry::all() {
+            assert!(
+                matches!(d.tune_policy, "golden" | "sh"),
+                "{}: unparseable tune_policy `{}`",
+                d.name,
+                d.tune_policy
+            );
+            assert!(d.tune_budget > 0, "{}: zero tune_budget", d.name);
+        }
+        let a10 = DeviceConfig::pac_a10();
+        assert_eq!((a10.tune_policy, a10.tune_budget), ("golden", 40));
     }
 
     #[test]

@@ -45,6 +45,7 @@ use super::rng::Rng;
 /// |----------------|-------------------------------------------------------|
 /// | `store.read`   | `util::json::read_file` — read returns garbage        |
 /// | `store.write`  | `util::json` atomic writes — torn temp file + ENOSPC  |
+/// | `store.evict`  | budget eviction delete loop — batch dies mid-delete   |
 /// | `net.accept`   | daemon accept loop — connection reset after accept    |
 /// | `net.read`     | daemon request read — drop mid-request                |
 /// | `net.write`    | daemon response write — truncate the NDJSON stream    |
@@ -52,6 +53,7 @@ use super::rng::Rng;
 pub const SITES: &[&str] = &[
     "store.read",
     "store.write",
+    "store.evict",
     "net.accept",
     "net.read",
     "net.write",

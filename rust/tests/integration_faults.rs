@@ -15,6 +15,13 @@
 //! byte-identical to a fault-free serial run, with nonzero `retries`
 //! and `journal_replays` proving the failures actually happened and
 //! were recovered, and zero `journal/` intents left on disk.
+//!
+//! PR-10 grows the soak a fleet leg: three shard engines push their
+//! stores through `store_push` into a central daemon whose byte budget
+//! is half the cold-store footprint, under an all-sites plan that now
+//! includes `store.evict` — the exchange must evict, heal an
+//! interrupted eviction across a restart, hold the budget invariant
+//! after every push, and still merge byte-identical.
 
 use pipefwd::coordinator::{grid_for, net, service, Engine, ExperimentId, Service, ServiceRequest, Store};
 use pipefwd::sim::device::DeviceConfig;
@@ -280,5 +287,191 @@ fn seeded_soak_is_byte_identical_through_faults_and_restart() {
     assert!(fault::fired_total() > 0, "the plan must actually have fired");
 
     server_b.shutdown();
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// The eviction twin of [`leave_interrupted_put_trace`]: a daemon died
+/// between writing the `evict` intent and deleting the doomed files.
+/// Healing must finish the batch — re-delete every listed file — and
+/// leave the journal empty.
+fn leave_interrupted_evict(store_dir: &std::path::Path) {
+    let key = "00000000000000bb";
+    let intent = format!(
+        "{{\"schema\": \"pipefwd-journal-v1\", \"op\": \"evict\", \
+         \"key\": \"{key}\", \"files\": [\"entries/{key}.json\"]}}"
+    );
+    std::fs::write(store_dir.join("journal").join(format!("evict-{key}.json")), intent).unwrap();
+    // the doomed entry is still on disk: the crash landed before its
+    // remove_file, and the restarted open must carry it out
+    std::fs::write(
+        store_dir.join("entries").join(format!("{key}.json")),
+        b"{\"schema\": \"pipefwd-store-v6\"}",
+    )
+    .unwrap();
+}
+
+/// Push everything a shard store holds to the daemon at `addr`. A
+/// failed batch is retried whole: an injected `store.evict` fault
+/// surfaces as an application-level error (a push reply must not claim
+/// a budget it did not enforce), and re-importing is idempotent.
+fn push_shard(addr: &str, policy: &net::RetryPolicy, shard_dir: &std::path::Path) {
+    let records = Store::open_existing(shard_dir).unwrap().export_records();
+    assert!(!records.is_empty(), "a shard run must leave records to push");
+    let mut last_err = String::new();
+    for _ in 0..6 {
+        let mut client = net::Client::new(addr).with_retry(policy.clone());
+        match client.request(&ServiceRequest::StorePush { records: records.clone() }) {
+            Ok(items) => {
+                assert!(!items.is_empty(), "a push reply carries its import report");
+                return;
+            }
+            Err(e) => last_err = e,
+        }
+    }
+    panic!("push never survived its injected faults: {last_err}");
+}
+
+/// The PR-10 fleet soak: resource governance under fire. Three shard
+/// engines compute disjoint slices of the E4 grid on their own
+/// unbudgeted stores, then push everything through `store_push` into a
+/// central daemon whose budget is half the cold-store footprint — the
+/// central store *must* evict to absorb the fleet — while the
+/// all-sites schedule (now including `store.evict`) fires through the
+/// exchange and the daemon is killed and restarted over the same store
+/// mid-sequence with an interrupted eviction left on disk:
+///
+/// 1. fault-free reference run → expected sink bytes + cold footprint;
+/// 2. three shard engines fill their own stores, fault-free;
+/// 3. daemon A (budget = cold/2) absorbs shard 0 under fire —
+///    `governed_bytes ≤ max_bytes` checked after the push;
+/// 4. daemon A is killed holding an interrupted `evict` (intent on
+///    disk, doomed entry not yet deleted);
+/// 5. daemon B reopens the same store — open finishes the eviction —
+///    and absorbs the remaining shards; half the cold bytes cannot
+///    hold the whole fleet, so eviction fires for real, rides out its
+///    injected fault, and the budget invariant holds after every push;
+/// 6. the three *shard* stores — the fleet's durable truth, immune to
+///    what the central store evicted — merge into a fresh store that
+///    replays the grid byte-identical without one fresh simulation.
+#[test]
+fn fleet_soak_budgeted_push_evicts_heals_and_merges_byte_identical() {
+    let guard = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    fault::clear();
+    let _armed = Armed(guard);
+
+    let base = soak_dir("fleet");
+
+    // 1. the fault-free truth, and the cold footprint the budget halves
+    let exps = vec![ExperimentId::E4];
+    let cells = grid_for(&exps, Scale::Tiny);
+    assert!(cells.len() >= 3, "the fleet split needs at least one cell per shard");
+    let reference =
+        Engine::new(DeviceConfig::pac_a10(), 1).with_store(Store::open(base.join("cold")).unwrap());
+    let _ = reference.run_cells(&cells);
+    let expect = reference.bench_json(Scale::Tiny, &exps);
+    let cold_bytes = reference.store().unwrap().governed_bytes();
+    let budget = cold_bytes / 2;
+    assert!(budget > 0, "the reference run must populate its store");
+
+    // 2. three shard engines on their own unbudgeted stores
+    let shard_dirs: Vec<PathBuf> = (0..3).map(|i| base.join(format!("shard{i}"))).collect();
+    let fleet = shard_dirs.len();
+    let mut slices: Vec<Vec<_>> = vec![vec![]; fleet];
+    for (i, cell) in cells.iter().enumerate() {
+        slices[i % fleet].push(cell.clone());
+    }
+    for (dir, slice) in shard_dirs.iter().zip(&slices) {
+        let shard = Engine::new(DeviceConfig::pac_a10(), 1).with_store(Store::open(dir).unwrap());
+        let _ = shard.run_cells(slice);
+    }
+
+    // every site armed, bounded: the network sites chew on the
+    // exchange, the store faults burn on its early reads and writes
+    // (a garbled read is a skipped export record or a miss, a torn
+    // write or a faulted eviction fails one push attempt — which is
+    // why push_shard retries whole batches), and everything must
+    // converge through all of it
+    fault::install(
+        FaultPlan::parse(
+            "seed=4242;net.accept=always x1;net.read=always x1;net.write=always x1;\
+             engine.panic=always x1;store.read=always x1;store.write=always x1;\
+             store.evict=always x1",
+        )
+        .unwrap(),
+    );
+
+    let policy = net::RetryPolicy {
+        max_attempts: 10,
+        base_delay: Duration::from_millis(5),
+        max_delay: Duration::from_millis(40),
+        ..Default::default()
+    };
+    let central_dir = base.join("central");
+    let spawn = |addr: &str| -> (Arc<Service>, net::Server) {
+        let store = Store::open(&central_dir).unwrap().with_max_bytes(Some(budget));
+        let engine = Engine::new(DeviceConfig::pac_a10(), 2).with_store(store);
+        let svc = Arc::new(Service::daemon(engine));
+        let server = net::Server::spawn(
+            Arc::clone(&svc),
+            addr,
+            net::ServerConfig { workers: 2, queue_cap: 16, ..Default::default() },
+        )
+        .expect("binding the daemon");
+        (svc, server)
+    };
+
+    // 3. daemon A absorbs the first shard under fire
+    let (svc_a, server_a) = spawn("127.0.0.1:0");
+    let addr = server_a.addr().to_string();
+    push_shard(&addr, &policy, &shard_dirs[0]);
+    let store_a = svc_a.engine().store().expect("daemon A is store-backed");
+    assert!(
+        store_a.governed_bytes() <= budget,
+        "budget invariant after push 1: {} > {budget}",
+        store_a.governed_bytes()
+    );
+
+    // 4. kill daemon A mid-eviction (intent written, files not deleted)
+    server_a.shutdown();
+    leave_interrupted_evict(&central_dir);
+
+    // 5. daemon B: same address, same store — open finishes the batch
+    let (svc_b, server_b) = spawn(&addr);
+    let store_b = svc_b.engine().store().expect("daemon B is store-backed");
+    assert!(store_b.journal_replays() > 0, "open must heal the interrupted eviction");
+    for dir in &shard_dirs[1..] {
+        push_shard(&addr, &policy, dir);
+        assert!(
+            store_b.governed_bytes() <= budget,
+            "budget invariant after every push: {} > {budget}",
+            store_b.governed_bytes()
+        );
+    }
+    assert!(
+        store_b.evictions() > 0,
+        "half the cold footprint cannot absorb the fleet without evicting"
+    );
+    assert_eq!(store_b.journal_len(), 0, "no intent may leak past a clean exchange");
+    assert!(!store_b.is_degraded(), "budget pressure must never degrade the store");
+    assert!(fault::fired_total() > 0, "the plan must actually have fired");
+    server_b.shutdown();
+
+    // 6. merge the shard stores and replay the grid warm
+    fault::clear();
+    let merged = Store::open(base.join("merge")).unwrap();
+    for dir in &shard_dirs {
+        let records = Store::open_existing(dir).unwrap().export_records();
+        let report = merged.import_records(&records).unwrap();
+        assert_eq!(report.rejected, 0, "shard records are valid once the plan is gone");
+    }
+    let replay = Engine::new(DeviceConfig::pac_a10(), 1).with_store(merged);
+    let _ = replay.run_cells(&cells);
+    assert_eq!(replay.simulations(), 0, "the shard stores must answer the whole grid");
+    assert_eq!(
+        replay.bench_json(Scale::Tiny, &exps),
+        expect,
+        "the budgeted, faulted, restarted fleet must merge byte-identical"
+    );
+
     let _ = std::fs::remove_dir_all(&base);
 }

@@ -295,8 +295,9 @@ fn store_records_roundtrip_between_daemon_and_client() {
         .map(|l| service::decode_record(l).unwrap())
         .collect();
     let local = Store::open(&client_dir).unwrap();
-    let imported = local.import_records(&records).unwrap();
-    assert_eq!(imported, records.len());
+    let report = local.import_records(&records).unwrap();
+    assert_eq!(report.imported, records.len());
+    assert_eq!(report.rejected, 0);
     // a warm engine over the pulled store answers without simulating
     let warm = Engine::new(DeviceConfig::pac_a10(), 1)
         .with_store(Store::open_existing(&client_dir).unwrap());
@@ -309,6 +310,10 @@ fn store_records_roundtrip_between_daemon_and_client() {
     let before = svc.engine().store().unwrap().export_records().len();
     let items = net::request(&addr, &ServiceRequest::StorePush { records }).unwrap();
     assert_eq!(items[0].get("count").and_then(|v| v.as_usize()), Some(0));
+    assert_eq!(items[0].get("rejected").and_then(|v| v.as_usize()), Some(0));
+    // the daemon already answered this cell itself, so no claim was
+    // outstanding for the pushed result to fulfil
+    assert_eq!(items[0].get("fulfilled").and_then(|v| v.as_usize()), Some(0));
     assert_eq!(svc.engine().store().unwrap().export_records().len(), before);
 
     server.shutdown();
